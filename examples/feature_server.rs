@@ -1,0 +1,136 @@
+//! Feature-server demo: boots the L3 coordinator (PJRT runtime + dynamic
+//! batcher + TCP JSON-lines server), fires concurrent client traffic at
+//! it — truncated, anisotropic, custom-word and windowed requests — and
+//! reports latency/throughput and batching efficiency.
+//!
+//! ```bash
+//! cargo run --release --example feature_server
+//! ```
+
+use pathsig::coordinator::{serve, BatcherConfig, ServerConfig, SigService};
+use pathsig::coordinator::server::Client;
+use pathsig::runtime::Runtime;
+use pathsig::util::json::Json;
+use pathsig::util::rng::Rng;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn main() {
+    // Boot with the PJRT runtime if artifacts exist.
+    let runtime = Runtime::new(std::path::Path::new("artifacts"))
+        .map(Arc::new)
+        .ok();
+    match &runtime {
+        Some(rt) => println!(
+            "PJRT runtime: {} ({} artifacts)",
+            rt.platform(),
+            rt.manifest.entries.len()
+        ),
+        None => println!("no artifacts — native engine only"),
+    }
+    let service = Arc::new(SigService::new(runtime));
+    let handle = serve(
+        Arc::clone(&service),
+        ServerConfig {
+            addr: "127.0.0.1:0".to_string(),
+            batcher: BatcherConfig {
+                max_batch: 32,
+                max_wait: std::time::Duration::from_millis(2),
+            },
+        },
+    )
+    .expect("bind");
+    let addr = handle.addr.to_string();
+    println!("server on {addr}\n");
+
+    // --- concurrent clients ------------------------------------------------
+    let n_clients = 8;
+    let reqs_per_client = 50;
+    let t0 = Instant::now();
+    let mut joins = Vec::new();
+    for c in 0..n_clients {
+        let addr = addr.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(1000 + c as u64);
+            let mut client = Client::connect(&addr).expect("connect");
+            let mut lat_us = Vec::new();
+            for r in 0..reqs_per_client {
+                let path = rng.brownian_path(64, 4, 0.1);
+                let path_json: Vec<String> =
+                    path.iter().map(|x| format!("{x:.6}")).collect();
+                let req = match r % 4 {
+                    // same-config truncated requests — these batch together
+                    0 | 1 => format!(
+                        r#"{{"op":"signature","dim":4,"depth":4,"path":[{}]}}"#,
+                        path_json.join(",")
+                    ),
+                    // NB: requests must be single-line (JSON-lines protocol).
+                    2 => format!(
+                        r#"{{"op":"signature","dim":4,"depth":3,"projection":{{"type":"anisotropic","gamma":[1,1,2,2],"cutoff":3}},"path":[{}]}}"#,
+                        path_json.join(",")
+                    ),
+                    _ => format!(
+                        r#"{{"op":"windowed","dim":4,"depth":2,"windows":[[0,16],[16,32],[32,48],[48,64]],"path":[{}]}}"#,
+                        path_json.join(",")
+                    ),
+                };
+                let t = Instant::now();
+                let resp = client.call(&req).expect("call");
+                lat_us.push(t.elapsed().as_micros() as f64);
+                assert_eq!(resp.get("ok").as_bool(), Some(true), "{resp:?}");
+            }
+            lat_us
+        }));
+    }
+    let mut all_lat: Vec<f64> = Vec::new();
+    for j in joins {
+        all_lat.extend(j.join().unwrap());
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let total = n_clients * reqs_per_client;
+
+    all_lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p = |q: f64| pathsig::util::stats::percentile_sorted(&all_lat, q);
+    println!("{total} requests from {n_clients} concurrent clients in {wall:.2}s");
+    println!("throughput: {:.0} req/s", total as f64 / wall);
+    println!(
+        "latency µs: p50 {:.0}  p90 {:.0}  p99 {:.0}",
+        p(0.5),
+        p(0.9),
+        p(0.99)
+    );
+
+    // --- metrics snapshot ----------------------------------------------------
+    let mut client = Client::connect(&addr).unwrap();
+    let m = client.call(r#"{"op":"metrics"}"#).unwrap();
+    let body = m.get("body");
+    println!("\nserver metrics:");
+    for key in [
+        "requests_total",
+        "batches_total",
+        "mean_batch_size",
+        "native_executions",
+        "pjrt_executions",
+    ] {
+        println!("  {key}: {}", body.get(key).as_f64().unwrap_or(0.0));
+    }
+    let mean_batch = body.get("mean_batch_size").as_f64().unwrap_or(0.0);
+    assert!(
+        mean_batch > 1.2,
+        "dynamic batching ineffective (mean batch {mean_batch})"
+    );
+    println!("\ndynamic batching active (mean batch size {mean_batch:.2}) ✓");
+
+    // keep the metrics JSON for EXPERIMENTS.md
+    let _ = std::fs::write(
+        "target/feature_server_metrics.json",
+        Json::obj(vec![
+            ("throughput_rps", Json::Num(total as f64 / wall)),
+            ("p50_us", Json::Num(p(0.5))),
+            ("p99_us", Json::Num(p(0.99))),
+            ("mean_batch", Json::Num(mean_batch)),
+        ])
+        .to_pretty(),
+    );
+    handle.shutdown();
+}

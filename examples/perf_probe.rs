@@ -1,0 +1,25 @@
+//! §Perf micro-probe: isolates single-path forward/backward cost on
+//! the heaviest Table-1 row. Used to drive the EXPERIMENTS.md §Perf
+//! optimisation log.
+use pathsig::sig::{sig_backward, signature, SigEngine};
+use pathsig::util::rng::Rng;
+use pathsig::words::{truncated_words, WordTable};
+use std::time::Instant;
+fn main() {
+    let (m, d, n) = (100, 6, 5);
+    let eng = SigEngine::sequential(WordTable::build(d, &truncated_words(d, n)));
+    let mut rng = Rng::new(1);
+    let path = rng.brownian_path(m, d, 0.2);
+    let g: Vec<f64> = (0..eng.out_dim()).map(|_| rng.gaussian()).collect();
+    for _ in 0..2 { signature(&eng, &path); }
+    let t0 = Instant::now();
+    let reps = 10;
+    for _ in 0..reps { std::hint::black_box(signature(&eng, &path)); }
+    let fwd = t0.elapsed().as_secs_f64() / reps as f64;
+    for _ in 0..1 { sig_backward(&eng, &path, &g); }
+    let t0 = Instant::now();
+    let reps = 5;
+    for _ in 0..reps { std::hint::black_box(sig_backward(&eng, &path, &g)); }
+    let bwd = t0.elapsed().as_secs_f64() / reps as f64;
+    println!("fwd {:.3} ms   bwd {:.3} ms   ratio {:.2}", fwd*1e3, bwd*1e3, bwd/fwd);
+}

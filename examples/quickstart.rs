@@ -1,0 +1,90 @@
+//! Quickstart: compute truncated, projected, anisotropic and
+//! log-signatures of a path with the native engine, and (if `make
+//! artifacts` has run) the same signature through an AOT-compiled PJRT
+//! executable.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use pathsig::logsig::LogSigEngine;
+use pathsig::sig::{signature, SigEngine};
+use pathsig::util::rng::Rng;
+use pathsig::words::{anisotropic_words, dag_words, truncated_words, Word, WordTable};
+
+fn main() {
+    let mut rng = Rng::new(7);
+    let d = 3;
+    let steps = 50;
+    // A Brownian-ish sample path, (steps+1, d) row-major.
+    let path = rng.brownian_path(steps, d, (1.0f64 / steps as f64).sqrt());
+
+    // --- 1. Truncated signature at depth 4 -------------------------------
+    let eng = SigEngine::new(WordTable::build(d, &truncated_words(d, 4)));
+    let sig = signature(&eng, &path);
+    println!("truncated signature: {} coefficients (d={d}, N=4)", sig.len());
+    for (w, v) in eng.table.requested.iter().zip(&sig).take(6) {
+        println!("  S({:<10}) = {v:+.6}", w.pretty());
+    }
+
+    // --- 2. Projection onto a hand-picked word set (§7.1) ----------------
+    let words = vec![Word(vec![0]), Word(vec![1, 2]), Word(vec![0, 1, 2, 0])];
+    let proj = SigEngine::new(WordTable::build(d, &words));
+    let psig = signature(&proj, &path);
+    println!(
+        "\nword projection ({} coords, closure size {}):",
+        psig.len(),
+        proj.state_len()
+    );
+    for (w, v) in words.iter().zip(&psig) {
+        println!("  S({:<10}) = {v:+.6}", w.pretty());
+    }
+
+    // --- 3. Anisotropic truncation (§7.2) ---------------------------------
+    let aniso = anisotropic_words(d, &[1.0, 1.0, 2.0], 4.0);
+    println!(
+        "\nanisotropic W^γ_≤4 with γ=(1,1,2): {} words (vs {} truncated)",
+        aniso.len(),
+        truncated_words(d, 4).len()
+    );
+
+    // --- 4. DAG-induced words (§7.1) --------------------------------------
+    let edges = vec![vec![1u16], vec![2u16], vec![0u16]]; // 0→1→2→0 cycle
+    let dag = dag_words(d, 4, &edges);
+    println!("cyclic-graph word set: {} words", dag.len());
+
+    // --- 5. Log-signature in the Lyndon basis (§3.3) ----------------------
+    let logeng = LogSigEngine::new(d, 4);
+    let logsig = logeng.logsig(&path);
+    println!(
+        "\nlog-signature: {} Lyndon coordinates (vs {} signature coords)",
+        logsig.len(),
+        sig.len()
+    );
+
+    // --- 6. Same numbers through the AOT/PJRT path ------------------------
+    match pathsig::runtime::Runtime::new(std::path::Path::new("artifacts")) {
+        Ok(rt) => {
+            // Use the (8, 33, 3, 3) artifact: trim our path to 33 points.
+            let name = "sig_fwd_b8_p33_d3_n3";
+            if rt.manifest.find(name).is_some() {
+                let mut batch = vec![0f32; 8 * 33 * d];
+                let trimmed: Vec<f32> = path[..33 * d].iter().map(|&x| x as f32).collect();
+                batch[..33 * d].copy_from_slice(&trimmed);
+                let out = rt.run_f32(name, &[&batch]).expect("pjrt run");
+                let native_eng = SigEngine::new(WordTable::build(d, &truncated_words(d, 3)));
+                let native = signature(&native_eng, &path[..33 * d]);
+                let max_diff = out[0][..native.len()]
+                    .iter()
+                    .zip(&native)
+                    .map(|(a, b)| (*a as f64 - b).abs())
+                    .fold(0.0f64, f64::max);
+                println!(
+                    "\nPJRT artifact '{name}' agrees with native engine: max |diff| = {max_diff:.2e}"
+                );
+                assert!(max_diff < 1e-3);
+            }
+        }
+        Err(_) => println!("\n(no artifacts/ — run `make artifacts` to see the PJRT path)"),
+    }
+}

@@ -1,0 +1,63 @@
+//! Windowed signature features on a synthetic regime-switching series
+//! (§5): sliding-window signatures pick up the volatility regime change
+//! that a global signature smears out.
+//!
+//! ```bash
+//! cargo run --release --example windowed_features
+//! ```
+
+use pathsig::sig::{sliding_windows, windowed_signatures, SigEngine};
+use pathsig::util::rng::Rng;
+use pathsig::words::{truncated_words, WordTable};
+
+fn main() {
+    let mut rng = Rng::new(42);
+    let steps = 512;
+    let d = 2;
+    // Regime switch halfway: volatility jumps 4×.
+    let mut path = vec![0.0; (steps + 1) * d];
+    for j in 1..=steps {
+        let vol = if j <= steps / 2 { 0.02 } else { 0.08 };
+        for i in 0..d {
+            path[j * d + i] = path[(j - 1) * d + i] + vol * rng.gaussian();
+        }
+    }
+
+    let eng = SigEngine::new(WordTable::build(d, &truncated_words(d, 3)));
+    let wins = sliding_windows(steps + 1, 64, 32);
+    let t0 = std::time::Instant::now();
+    let feats = windowed_signatures(&eng, &path, &wins);
+    let elapsed = t0.elapsed();
+    let odim = eng.out_dim();
+    println!(
+        "{} windows × {} features in {:.2?} (one call, shared fixed overhead — §5)",
+        wins.len(),
+        odim,
+        elapsed
+    );
+
+    // The quadratic-variation proxy: level-2 diagonal words (i,i):
+    // S((i,i)) = (ΔX^{(i)}_{window})²/2 per Chen, while the sum of
+    // squared per-step increments shows up in the window-to-window
+    // variation of the level-1 terms; the cleanest QV proxy at this
+    // depth is 2·S((i,i)) of each *short* window.
+    println!("\n window      2·S((1,1))      ‖level1‖");
+    let mut early = 0.0;
+    let mut late = 0.0;
+    for (k, w) in wins.iter().enumerate() {
+        let row = &feats[k * odim..(k + 1) * odim];
+        // order: (0),(1),(00),(01),(10),(11)
+        let s11 = 2.0 * row[2];
+        let l1 = (row[0] * row[0] + row[1] * row[1]).sqrt();
+        println!("[{:>3},{:>3})  {s11:>12.6}  {l1:>10.4}", w.l, w.r);
+        if w.r <= steps / 2 {
+            early += s11.abs();
+        } else if w.l >= steps / 2 {
+            late += s11.abs();
+        }
+    }
+    let ratio = late / early.max(1e-12);
+    println!("\nlate/early window feature ratio ≈ {ratio:.1} (vol² ratio = 16)");
+    assert!(ratio > 3.0, "regime switch not detected");
+    println!("regime switch detected ✓");
+}

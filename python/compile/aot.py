@@ -1,0 +1,253 @@
+"""AOT lowering: JAX/Pallas → HLO text artifacts + manifest.json.
+
+Run via ``make artifacts`` (or ``python -m compile.aot --out-dir
+../artifacts``). Python's last involvement — the Rust binary loads these
+through PJRT (``rust/src/runtime``) and never imports Python again.
+
+HLO **text** is the interchange format: the image's xla_extension 0.5.1
+rejects jax ≥ 0.5 serialized protos (64-bit instruction ids), while the
+text parser reassigns ids (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .kernels.sig_kernel import sig_bwd, sig_fwd
+from .model import DeepSigHurst, lead_lag, windowed_signature
+from .words import build_word_table, sig_dim, truncated_words
+
+
+def to_hlo_text(fn, *specs) -> str:
+    """Lower a jax function to HLO text with tuple outputs."""
+    lowered = jax.jit(fn).lower(*specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is load-bearing: the default printer
+    # elides big constants as `{...}`, which the xla_extension-0.5.1
+    # text parser silently turns into zeros — the word tables baked into
+    # the kernels would vanish. (Found the hard way; see DESIGN.md.)
+    text = comp.as_hlo_text(print_large_constants=True)
+    assert "{...}" not in text, "elided constants survived the dump"
+    return text
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+class ArtifactWriter:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.entries = []
+        os.makedirs(out_dir, exist_ok=True)
+
+    def emit(self, name, kind, fn, specs, outputs, meta):
+        text = to_hlo_text(fn, *specs)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        self.entries.append(
+            {
+                "name": name,
+                "file": fname,
+                "kind": kind,
+                "meta": meta,
+                "inputs": [
+                    {"shape": list(s.shape), "dtype": "f32"} for s in specs
+                ],
+                "outputs": [
+                    {"shape": list(shape), "dtype": "f32"} for shape in outputs
+                ],
+            }
+        )
+        print(f"  wrote {fname} ({len(text)} chars)")
+
+    def finish(self):
+        manifest = {"version": 1, "entries": self.entries}
+        with open(os.path.join(self.out_dir, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=2, sort_keys=True)
+        print(f"manifest: {len(self.entries)} entries")
+
+
+def emit_sig_artifacts(w: ArtifactWriter, configs):
+    """Truncated-signature forward (+ one vjp) artifacts."""
+    for batch, points, d, depth in configs:
+        table = build_word_table(d, truncated_words(d, depth))
+        name = f"sig_fwd_b{batch}_p{points}_d{d}_n{depth}"
+        w.emit(
+            name,
+            "sig_fwd",
+            lambda paths, table=table: (sig_fwd(paths, table),),
+            [f32(batch, points, d)],
+            [(batch, table.out_dim)],
+            {
+                "batch": batch,
+                "points": points,
+                "dim": d,
+                "depth": depth,
+                "wordset": f"trunc:{depth}",
+                "out_dim": table.out_dim,
+            },
+        )
+
+
+def emit_sig_vjp(w: ArtifactWriter, batch, points, d, depth):
+    table = build_word_table(d, truncated_words(d, depth))
+    name = f"sig_vjp_b{batch}_p{points}_d{d}_n{depth}"
+    w.emit(
+        name,
+        "sig_vjp",
+        lambda paths, g, table=table: (sig_bwd(paths, g, table),),
+        [f32(batch, points, d), f32(batch, table.out_dim)],
+        [(batch, points, d)],
+        {
+            "batch": batch,
+            "points": points,
+            "dim": d,
+            "depth": depth,
+            "out_dim": table.out_dim,
+        },
+    )
+
+
+def emit_windowed(w: ArtifactWriter, batch, points, d, depth, n_windows, win_len):
+    table = build_word_table(d, truncated_words(d, depth))
+    name = f"windowed_b{batch}_p{points}_d{d}_n{depth}_k{n_windows}_l{win_len}"
+
+    def fn(paths, starts_f32, table=table):
+        starts = starts_f32.astype(jnp.int32)
+        return (windowed_signature(paths, starts, win_len, table),)
+
+    w.emit(
+        name,
+        "windowed",
+        fn,
+        [f32(batch, points, d), f32(n_windows)],
+        [(batch, n_windows, table.out_dim)],
+        {
+            "batch": batch,
+            "points": points,
+            "dim": d,
+            "depth": depth,
+            "windows": n_windows,
+            "win_len": win_len,
+            "out_dim": table.out_dim,
+        },
+    )
+
+
+def emit_hurst(w: ArtifactWriter, variant, batch, points, dim, depth, hidden):
+    model = DeepSigHurst(dim, depth, variant, hidden)
+    pshapes = model.param_shapes()
+    name = f"hurst_{variant}_b{batch}_p{points}_d{dim}_n{depth}"
+    train_specs = (
+        [f32(*s) for s in pshapes]
+        + [f32(*s) for s in pshapes]
+        + [f32(batch, points, dim), f32(batch), f32()]
+    )
+    train_outputs = [tuple(s) for s in pshapes] * 2 + [()]
+    w.emit(
+        name + "_train",
+        "train_step",
+        model.flat_train_step,
+        train_specs,
+        train_outputs,
+        {
+            "variant": variant,
+            "batch": batch,
+            "points": points,
+            "dim": dim,
+            "depth": depth,
+            "hidden": hidden,
+            "feat_dim": model.feat_dim,
+            "param_shapes": [list(s) for s in pshapes],
+        },
+    )
+    w.emit(
+        name + "_predict",
+        "predict",
+        model.flat_predict,
+        [f32(*s) for s in pshapes] + [f32(batch, points, dim)],
+        [(batch,)],
+        {
+            "variant": variant,
+            "batch": batch,
+            "points": points,
+            "dim": dim,
+            "depth": depth,
+            "hidden": hidden,
+            "feat_dim": model.feat_dim,
+        },
+    )
+
+
+def emit_leadlag_demo(w: ArtifactWriter, batch, points, d):
+    """Standalone lead–lag transform (useful for runtime smoke tests)."""
+    name = f"leadlag_b{batch}_p{points}_d{d}"
+    w.emit(
+        name,
+        "leadlag",
+        lambda p: (lead_lag(p),),
+        [f32(batch, points, d)],
+        [(batch, 2 * (points - 1) + 1, 2 * d)],
+        {"batch": batch, "points": points, "dim": d},
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--full",
+        action="store_true",
+        help="also emit the larger benchmark-scale artifacts",
+    )
+    args = ap.parse_args()
+    w = ArtifactWriter(args.out_dir)
+
+    print("[aot] signature forward artifacts…")
+    configs = [
+        (2, 5, 2, 2),  # tiny — integration-test shape
+        (8, 33, 3, 3),
+        (32, 65, 4, 4),
+    ]
+    if args.full:
+        configs += [(32, 101, 6, 5)]
+    emit_sig_artifacts(w, configs)
+
+    print("[aot] signature vjp artifact…")
+    emit_sig_vjp(w, 4, 17, 3, 3)
+
+    print("[aot] windowed artifact…")
+    emit_windowed(w, 4, 65, 2, 3, 8, 16)
+
+    print("[aot] lead-lag demo artifact…")
+    emit_leadlag_demo(w, 2, 9, 2)
+
+    print("[aot] Hurst train/predict artifacts (both Fig-4 variants)…")
+    emit_hurst(w, "sparse", 32, 65, 5, 3, 64)
+    emit_hurst(w, "trunc", 32, 65, 5, 3, 64)
+
+    w.finish()
+    # Sanity print: dimension reduction §8 quotes.
+    trunc = sig_dim(10, 3)
+    sparse = DeepSigHurst(5, 3, "sparse").feat_dim
+    print(f"[aot] Fig-4 feature dims: trunc {trunc}, sparse {sparse} "
+          f"({trunc / sparse:.2f}x reduction)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,262 @@
+"""L1 Pallas kernels: word-basis signature forward + backward.
+
+The paper's CUDA mapping (one thread per prefix-closed word chain, §3.2)
+becomes a Pallas grid over the **batch** axis with the word axis
+vectorised inside the kernel: the signature state is a `(state_len,)`
+VMEM-resident vector updated in place across the time loop; each level's
+Horner/Chen update (Algorithm 1) is two flat gathers (prefix values +
+per-word letters) and an FMA over the level's contiguous row range —
+the lane-per-word layout described in DESIGN.md §Hardware-Adaptation.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so kernels lower to plain HLO (see /opt/xla-example
+README). Real-TPU performance is estimated from the BlockSpec/VMEM
+analysis in DESIGN.md; correctness is pinned by `python/tests/` against
+the dense tensor-algebra oracle in ``ref.py``.
+
+Time is *sequential* inside the kernel (a `fori_loop`), exactly like the
+paper's kernels — pathsig does not parallelise over sequence length
+(§6.1), it parallelises over (batch × words × windows).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from ..words import WordTable
+
+
+def _horner_chen_update(state, dx, table: WordTable, letters, prefix_idx, negate: bool):
+    """One in-place Chen update S ← S ⊗ exp(±dx) on the closure state.
+
+    Levels are processed top-down so a level-n word reads only
+    strictly-shorter prefixes still holding their step-(j-1) values —
+    the same in-place trick as the CUDA kernel / Rust engine.
+    """
+    if negate:
+        dx = -dx
+    n_max = table.max_level
+    # Every level's increment reads only strictly-shorter prefixes, i.e.
+    # only *old* state values — so all levels are computed from the old
+    # state and the new state is assembled by concatenation. (This also
+    # sidesteps an XLA-0.5.1 CPU miscompile of aliased
+    # dynamic-update-slice + gather inside `while` bodies; see DESIGN.md
+    # §AOT-notes. On current XLA both forms are equivalent.)
+    segments = [state[0:1]]  # ε
+    for n in range(1, n_max + 1):
+        lo, hi = table.level_range(n)
+        if lo == hi:
+            continue
+        # acc = S(ε) = 1 for every word in the level.
+        acc = jnp.ones((hi - lo,), dtype=state.dtype)
+        for k in range(1, n):
+            letter = letters[lo:hi, k - 1]
+            acc = acc * jnp.take(dx, letter, mode="clip") * (1.0 / (n - k + 1)) + jnp.take(
+                state, prefix_idx[lo:hi, k], mode="clip"
+            )
+        last = letters[lo:hi, n - 1]
+        segments.append(state[lo:hi] + acc * jnp.take(dx, last, mode="clip"))
+    return jnp.concatenate(segments)
+
+
+def make_sig_fwd_kernel(table: WordTable, points: int):
+    """Forward kernel for one path: (points, d) → (out_dim,).
+
+    The word tables (letters, prefix indices, output gather map) arrive
+    as int32 kernel inputs broadcast across the grid — Pallas does not
+    allow captured array constants inside the kernel body."""
+    d = table.d
+    steps = points - 1
+
+    def kernel(path_ref, letters_ref, prefix_ref, outmap_ref, out_ref):
+        path = path_ref[...].reshape(points, d)
+        letters = letters_ref[...]
+        prefix_idx = prefix_ref[...]
+        dxs = path[1:] - path[:-1]
+        state0 = jnp.zeros((table.state_len,), dtype=path.dtype).at[0].set(1.0)
+
+        def body(j, state):
+            dx = jax.lax.dynamic_index_in_dim(dxs, j, 0, keepdims=False)
+            return _horner_chen_update(state, dx, table, letters, prefix_idx, False)
+
+        state = jax.lax.fori_loop(0, steps, body, state0)
+        out_ref[...] = jnp.take(state, outmap_ref[...], mode="clip").reshape(out_ref.shape)
+
+    return kernel
+
+
+def _table_inputs(table: WordTable):
+    stride = table.stride
+    specs = [
+        pl.BlockSpec((table.state_len, stride), lambda i: (0, 0)),
+        pl.BlockSpec((table.state_len, stride), lambda i: (0, 0)),
+        pl.BlockSpec((table.out_dim,), lambda i: (0,)),
+    ]
+    arrays = (
+        jnp.asarray(table.letters, jnp.int32),
+        jnp.asarray(table.prefix_idx, jnp.int32),
+        jnp.asarray(table.output_map, jnp.int32),
+    )
+    return specs, arrays
+
+
+def sig_fwd(paths: jnp.ndarray, table: WordTable) -> jnp.ndarray:
+    """Batched projected signature via the Pallas kernel.
+
+    paths: (B, points, d) → (B, out_dim). Grid = (B,): one program per
+    path, mirroring thread-block-per-path on the GPU.
+    """
+    b, points, d = paths.shape
+    assert d == table.d
+    kernel = make_sig_fwd_kernel(table, points)
+    tspecs, tarrays = _table_inputs(table)
+    return pl.pallas_call(
+        kernel,
+        grid=(b,),
+        in_specs=[pl.BlockSpec((1, points, d), lambda i: (i, 0, 0))] + tspecs,
+        out_specs=pl.BlockSpec((1, table.out_dim), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, table.out_dim), paths.dtype),
+        interpret=True,
+    )(paths, *tarrays)
+
+
+def make_sig_bwd_kernel(table: WordTable, points: int):
+    """Backward kernel for one path (§4, memory-minimal).
+
+    Inputs: path (points, d), grad_out (out_dim,).
+    Output: grad_path (points, d).
+
+    Reruns the forward recursion to the terminal state, then walks
+    backward in time reconstructing S_{0,t_{j-1}} with the group inverse
+    (Prop 4.6) while propagating the cotangent state λ through the exact
+    transpose of the forward update and accumulating ∂L/∂ΔX_j in O(|w|)
+    per word (prefix-Horner A·R sweep — DESIGN.md).
+    """
+    d = table.d
+    steps = points - 1
+    n_max = table.max_level
+    inv_fact = np.ones(n_max + 2)
+    for k in range(1, n_max + 2):
+        inv_fact[k] = inv_fact[k - 1] / k
+
+    def kernel(path_ref, gout_ref, letters_ref, prefix_ref, outmap_ref, gpath_ref):
+        path = path_ref[...].reshape(points, d)
+        gout = gout_ref[...].reshape(-1)
+        letters = letters_ref[...]
+        prefix_idx = prefix_ref[...]
+        output_map = outmap_ref[...]
+        dxs = path[1:] - path[:-1]
+
+        # Forward to the terminal state (the only stored signature).
+        state0 = jnp.zeros((table.state_len,), dtype=path.dtype).at[0].set(1.0)
+
+        def fwd_body(j, state):
+            dx = jax.lax.dynamic_index_in_dim(dxs, j, 0, keepdims=False)
+            return _horner_chen_update(state, dx, table, letters, prefix_idx, False)
+
+        state = jax.lax.fori_loop(0, steps, fwd_body, state0)
+
+        lam0 = jnp.zeros((table.state_len,), dtype=path.dtype)
+        lam0 = lam0.at[output_map].add(gout)
+        gdx0 = jnp.zeros((steps, d), dtype=path.dtype)
+
+        def bwd_body(t, carry):
+            state, lam, gdx = carry
+            j = steps - 1 - t
+            dx = jax.lax.dynamic_index_in_dim(dxs, j, 0, keepdims=False)
+            # Reconstruct S_{0,t_{j-1}} = S_{0,t_j} ⊗ exp(-ΔX_j).
+            state = _horner_chen_update(state, dx, table, letters, prefix_idx, True)
+
+            # λ contributions accumulate into a fresh buffer (no
+            # aliasing with the λ gathers — same XLA-0.5.1 caveat as in
+            # the forward update).
+            lam_delta = jnp.zeros_like(lam)
+            gdx_j = jnp.zeros((d,), dtype=path.dtype)
+            for n in range(1, n_max + 1):
+                lo, hi = table.level_range(n)
+                if lo == hi:
+                    continue
+                lam_n = lam[lo:hi]
+                # Right suffix products R_p = Π_{q=p+1..n} dx_{i_q}.
+                rights = [jnp.ones((hi - lo,), dtype=path.dtype)]  # R_n
+                for p in range(n - 1, 0, -1):
+                    letter = letters[lo:hi, p]  # i_{p+1}
+                    rights.append(rights[-1] * jnp.take(dx, letter, mode="clip"))
+                rights.reverse()  # rights[p-1] = R_p for p = 1..n
+
+                # Left Horner A_p and ΔX-gradient scatter.
+                a = jnp.full((hi - lo,), inv_fact[n], dtype=path.dtype)
+                for p in range(1, n + 1):
+                    letter = letters[lo:hi, p - 1]  # i_p
+                    gdx_j = gdx_j.at[letter].add(lam_n * a * rights[p - 1])
+                    if p < n:
+                        s_pref = jnp.take(state, prefix_idx[lo:hi, p], mode="clip")
+                        a = a * jnp.take(dx, letter, mode="clip") + s_pref * inv_fact[n - p]
+
+                # λ transpose: λ_{j-1}(w_[k]) += λ_j(w)·exp(ΔX, suffix_k).
+                for k in range(n):
+                    letter = letters[lo:hi, k]  # i_{k+1}
+                    r_next = rights[k] if k < n else None  # R_{k+1}
+                    e_k = jnp.take(dx, letter, mode="clip") * rights[k] * inv_fact[n - k]
+                    lam_delta = lam_delta.at[prefix_idx[lo:hi, k]].add(lam_n * e_k)
+                    del r_next
+
+            gdx = jax.lax.dynamic_update_index_in_dim(gdx, gdx_j, j, 0)
+            return state, lam + lam_delta, gdx
+
+        _, _, gdx = jax.lax.fori_loop(0, steps, bwd_body, (state, lam0, gdx0))
+
+        # Increments → points: g_X0 = -g_1, g_Xj = g_j - g_{j+1}, g_XM = g_M.
+        gpath = jnp.zeros((points, d), dtype=path.dtype)
+        gpath = gpath.at[0].set(-gdx[0])
+        gpath = gpath.at[points - 1].set(gdx[steps - 1])
+        if steps > 1:
+            gpath = gpath.at[1 : points - 1].set(gdx[: steps - 1] - gdx[1:])
+        gpath_ref[...] = gpath.reshape(gpath_ref.shape)
+
+    return kernel
+
+
+def sig_bwd(paths: jnp.ndarray, grad_out: jnp.ndarray, table: WordTable) -> jnp.ndarray:
+    """Batched backward: (B, points, d), (B, out_dim) → (B, points, d)."""
+    b, points, d = paths.shape
+    kernel = make_sig_bwd_kernel(table, points)
+    tspecs, tarrays = _table_inputs(table)
+    return pl.pallas_call(
+        kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, points, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, table.out_dim), lambda i: (i, 0)),
+        ] + tspecs,
+        out_specs=pl.BlockSpec((1, points, d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, points, d), paths.dtype),
+        interpret=True,
+    )(paths, grad_out, *tarrays)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1,))
+def signature(paths: jnp.ndarray, table: WordTable) -> jnp.ndarray:
+    """Differentiable projected signature (B, points, d) → (B, out_dim).
+
+    Forward and backward are both Pallas kernels; only the input path is
+    retained between passes (the §4 memory-minimal scheme — no per-step
+    intermediates are stored, matching the paper's O(B·D_sig) claim).
+    """
+    return sig_fwd(paths, table)
+
+
+def _signature_fwd(paths, table):
+    return sig_fwd(paths, table), paths
+
+
+def _signature_bwd(table, paths, g):
+    return (sig_bwd(paths, g, table),)
+
+
+signature.defvjp(_signature_fwd, _signature_bwd)

@@ -1,0 +1,169 @@
+"""L2: JAX models over the Pallas signature kernels (build-time only).
+
+Contents:
+
+* ``lead_lag``      — Definition 8.1 as a jnp transform (channel layout
+  ``(lag_1..lag_d, lead_1..lead_d)``, matching the Rust mirror).
+* ``windowed_signature`` — §5: gather fixed-length window slices into the
+  batch axis, one kernel launch for the whole collection.
+* ``DeepSigHurst``  — the §8 model: pointwise linear φ_θ → lead–lag →
+  projected signature (Pallas, custom-vjp) → dense head; with pure
+  functional ``init`` / ``predict`` / ``loss`` / ``train_step`` suitable
+  for AOT lowering (SGD with momentum — parameters and optimizer state
+  are explicit inputs/outputs so the Rust driver owns the loop).
+
+Everything here is lowered once by ``aot.py`` to HLO text; nothing is
+imported at serving time.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.sig_kernel import signature
+from .words import (
+    WordTable,
+    build_word_table,
+    concat_generated_words,
+    sparse_leadlag_generators,
+    truncated_words,
+)
+
+
+def lead_lag(paths: jnp.ndarray) -> jnp.ndarray:
+    """(B, M+1, d) → (B, 2M+1, 2d) lead–lag transform (Definition 8.1)."""
+    b, m1, d = paths.shape
+    m = m1 - 1
+    lag_even = paths[:, :-1, :]  # X_k at rows 2k
+    lead_even = paths[:, :-1, :]
+    lag_odd = paths[:, :-1, :]  # X_k at rows 2k+1
+    lead_odd = paths[:, 1:, :]  # X_{k+1}
+    even = jnp.concatenate([lag_even, lead_even], axis=-1)  # (B, M, 2d)
+    odd = jnp.concatenate([lag_odd, lead_odd], axis=-1)  # (B, M, 2d)
+    inter = jnp.stack([even, odd], axis=2).reshape(b, 2 * m, 2 * d)
+    last = jnp.concatenate([paths[:, -1:, :], paths[:, -1:, :]], axis=-1)
+    return jnp.concatenate([inter, last], axis=1)
+
+
+def windowed_signature(
+    paths: jnp.ndarray, starts: jnp.ndarray, win_len: int, table: WordTable
+) -> jnp.ndarray:
+    """§5 windowed signatures with static window length.
+
+    paths: (B, M+1, d); starts: (K,) int32 window start indices; windows
+    are ``[l, l+win_len]``. Returns (B, K, out_dim). Window slices are
+    gathered into the batch axis so a single kernel launch covers the
+    whole (B × K) collection — the extra parallelism axis of §5.
+    """
+    b, _, d = paths.shape
+    k = starts.shape[0]
+
+    def slice_one(path, l):
+        return jax.lax.dynamic_slice(path, (l, 0), (win_len + 1, d))
+
+    # (B, K, win_len+1, d)
+    slices = jax.vmap(lambda p: jax.vmap(lambda l: slice_one(p, l))(starts))(paths)
+    flat = slices.reshape(b * k, win_len + 1, d)
+    sigs = signature(flat, table)
+    return sigs.reshape(b, k, table.out_dim)
+
+
+# ----------------------------------------------------------------------
+# §8 deep-signature Hurst model
+# ----------------------------------------------------------------------
+
+
+def hurst_word_table(dim: int, depth: int, variant: str) -> WordTable:
+    """Word table over the 2·dim lead–lag alphabet for a Fig-4 variant."""
+    d2 = 2 * dim
+    if variant == "trunc":
+        words = truncated_words(d2, depth)
+    elif variant == "sparse":
+        words = concat_generated_words(d2, depth, sparse_leadlag_generators(dim))
+    else:
+        raise ValueError(f"unknown variant {variant!r}")
+    return build_word_table(d2, words)
+
+
+class DeepSigHurst:
+    """Functional model container (parameters are explicit pytrees)."""
+
+    def __init__(self, dim: int, depth: int, variant: str, hidden: int = 64):
+        self.dim = dim
+        self.depth = depth
+        self.variant = variant
+        self.hidden = hidden
+        self.table = hurst_word_table(dim, depth, variant)
+        self.feat_dim = self.table.out_dim
+
+    def init(self, key) -> dict:
+        k1, k2, k3 = jax.random.split(key, 3)
+        f, h = self.feat_dim, self.hidden
+        lim1 = (6.0 / f) ** 0.5
+        lim2 = (6.0 / h) ** 0.5
+        return {
+            # φ_θ near identity (see the Rust mirror).
+            "phi_w": jnp.eye(self.dim, dtype=jnp.float32)
+            + 0.05 * jax.random.normal(k1, (self.dim, self.dim), jnp.float32),
+            "phi_b": jnp.zeros((self.dim,), jnp.float32),
+            "w1": jax.random.uniform(k2, (f, h), jnp.float32, -lim1, lim1),
+            "b1": jnp.zeros((h,), jnp.float32),
+            "w2": jax.random.uniform(k3, (h, 1), jnp.float32, -lim2, lim2),
+            "b2": jnp.zeros((1,), jnp.float32),
+        }
+
+    def features(self, params: dict, paths: jnp.ndarray) -> jnp.ndarray:
+        mapped = paths @ params["phi_w"].T + params["phi_b"]
+        ll = lead_lag(mapped)
+        return signature(ll, self.table)
+
+    def predict(self, params: dict, paths: jnp.ndarray) -> jnp.ndarray:
+        feats = self.features(params, paths)
+        h = jax.nn.relu(feats @ params["w1"] + params["b1"])
+        return (h @ params["w2"] + params["b2"])[:, 0]
+
+    def loss(self, params: dict, paths: jnp.ndarray, targets: jnp.ndarray) -> jnp.ndarray:
+        pred = self.predict(params, paths)
+        return jnp.mean((pred - targets) ** 2)
+
+    @partial(jax.jit, static_argnums=0)
+    def train_step(
+        self,
+        params: dict,
+        momentum: dict,
+        paths: jnp.ndarray,
+        targets: jnp.ndarray,
+        lr: jnp.ndarray,
+    ):
+        """One SGD-with-momentum step (μ = 0.9). Returns
+        (new_params, new_momentum, loss). All state explicit, so the
+        compiled step is a pure function the Rust runtime can iterate."""
+        loss, grads = jax.value_and_grad(self.loss)(params, paths, targets)
+        new_m = jax.tree.map(lambda m, g: 0.9 * m + g, momentum, grads)
+        new_p = jax.tree.map(lambda p, m: p - lr * m, params, new_m)
+        return new_p, new_m, loss
+
+    # --- flat-argument wrappers for AOT (stable input ordering) ---
+
+    PARAM_ORDER = ("phi_w", "phi_b", "w1", "b1", "w2", "b2")
+
+    def flat_train_step(self, *args):
+        """args = params(6) + momentum(6) + (paths, targets, lr) →
+        tuple(params'(6) + momentum'(6) + (loss,))."""
+        names = self.PARAM_ORDER
+        params = dict(zip(names, args[:6]))
+        momentum = dict(zip(names, args[6:12]))
+        paths, targets, lr = args[12:15]
+        p, m, loss = self.train_step(params, momentum, paths, targets, lr)
+        return tuple(p[n] for n in names) + tuple(m[n] for n in names) + (loss,)
+
+    def flat_predict(self, *args):
+        params = dict(zip(self.PARAM_ORDER, args[:6]))
+        return (self.predict(params, args[6]),)
+
+    def param_shapes(self) -> list[tuple[int, ...]]:
+        f, h, d = self.feat_dim, self.hidden, self.dim
+        return [(d, d), (d,), (f, h), (h,), (h, 1), (1,)]

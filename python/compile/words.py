@@ -1,0 +1,197 @@
+"""Word tables for the Pallas signature kernels — the Python mirror of
+``rust/src/words/table.rs``.
+
+Given a requested word set I over the 0-based alphabet {0, …, d-1}, this
+builds the prefix closure C(I) (paper Definition 3.3) as flat numpy
+arrays consumed by the L1 kernels:
+
+* ``letters[i, t]``     — letter i_{t+1} of closure word i (0-padded),
+* ``prefix_idx[i, k]``  — state index of the length-k prefix ``w_[k]``,
+* ``level_start``       — level n occupies rows level_start[n]:level_start[n+1],
+* ``output_map``        — state indices of the requested words, request order.
+
+State index 0 is the empty word ε. Layout identities are cross-checked
+against the Rust implementation through a committed golden file
+(``python/tests/golden/word_table_*.json`` ↔ ``rust/tests/golden_words.rs``).
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass(eq=False)  # identity hash — used as a static kernel argument
+class WordTable:
+    d: int
+    max_level: int
+    state_len: int
+    words: list[tuple[int, ...]]
+    level_start: list[int]
+    letters: np.ndarray  # (state_len, stride) int32
+    prefix_idx: np.ndarray  # (state_len, stride) int32
+    output_map: np.ndarray  # (out_dim,) int32
+    requested: list[tuple[int, ...]] = field(default_factory=list)
+
+    @property
+    def stride(self) -> int:
+        return max(self.max_level, 1)
+
+    @property
+    def out_dim(self) -> int:
+        return int(self.output_map.shape[0])
+
+    def level_range(self, n: int) -> tuple[int, int]:
+        return self.level_start[n], self.level_start[n + 1]
+
+    def to_json(self) -> dict:
+        """Canonical JSON form — matches WordTable::to_json in Rust."""
+        return {
+            "d": self.d,
+            "max_level": self.max_level,
+            "state_len": self.state_len,
+            "letters": self.letters.reshape(-1).tolist(),
+            "prefix_idx": self.prefix_idx.reshape(-1).tolist(),
+            "level_start": list(self.level_start),
+            "output_map": self.output_map.tolist(),
+        }
+
+
+def word_code(word: tuple[int, ...], d: int) -> int:
+    """Appendix A base-d integer encoding."""
+    code = 0
+    for letter in word:
+        assert 0 <= letter < d
+        code = code * d + letter
+    return code
+
+
+def build_word_table(d: int, request: list[tuple[int, ...]]) -> WordTable:
+    """Build the prefix-closed computation table for a requested word set."""
+    assert d >= 1
+    request = [tuple(w) for w in request]
+    for w in request:
+        assert len(w) >= 1, "ε is not a valid output coordinate"
+        assert all(0 <= letter < d for letter in w), f"letter out of range in {w}"
+
+    closure: dict[tuple[int, int], tuple[int, ...]] = {(0, 0): ()}
+    for w in request:
+        for k in range(1, len(w) + 1):
+            p = w[:k]
+            closure.setdefault((k, word_code(p, d)), p)
+
+    entries = sorted(closure.items(), key=lambda kv: kv[0])
+    max_level = entries[-1][0][0] if entries else 0
+    stride = max(max_level, 1)
+    state_len = len(entries)
+
+    index_of = {key: i for i, (key, _) in enumerate(entries)}
+    words = [w for _, w in entries]
+    level_start = [0] * (max_level + 2)
+    for i, ((lvl, _), _) in enumerate(entries):
+        level_start[lvl + 1] = i + 1
+    for n in range(1, len(level_start)):
+        level_start[n] = max(level_start[n], level_start[n - 1])
+
+    letters = np.zeros((state_len, stride), dtype=np.int32)
+    prefix_idx = np.zeros((state_len, stride), dtype=np.int32)
+    for i, w in enumerate(words):
+        for t, letter in enumerate(w):
+            letters[i, t] = letter
+        for k in range(len(w)):
+            prefix_idx[i, k] = index_of[(k, word_code(w[:k], d))]
+
+    output_map = np.array(
+        [index_of[(len(w), word_code(w, d))] for w in request], dtype=np.int32
+    )
+    return WordTable(
+        d=d,
+        max_level=max_level,
+        state_len=state_len,
+        words=words,
+        level_start=level_start,
+        letters=letters,
+        prefix_idx=prefix_idx,
+        output_map=output_map,
+        requested=request,
+    )
+
+
+def truncated_words(d: int, depth: int) -> list[tuple[int, ...]]:
+    """W_{≤N} \\ {ε}, level-major then lexicographic."""
+    out: list[tuple[int, ...]] = []
+    level: list[tuple[int, ...]] = [()]
+    for _ in range(depth):
+        nxt = [w + (a,) for w in level for a in range(d)]
+        out.extend(nxt)
+        level = nxt
+    return out
+
+
+def sig_dim(d: int, depth: int) -> int:
+    return sum(d**n for n in range(1, depth + 1))
+
+
+def lyndon_words(d: int, max_len: int) -> list[tuple[int, ...]]:
+    """Duval's algorithm; lexicographic order, lengths 1..=max_len."""
+    out: list[tuple[int, ...]] = []
+    if max_len == 0:
+        return out
+    w = [0]
+    while True:
+        if len(w) <= max_len:
+            out.append(tuple(w))
+        base = list(w)
+        while len(w) < max_len:
+            w.append(base[len(w) % len(base)])
+        while w and w[-1] == d - 1:
+            w.pop()
+        if not w:
+            break
+        w[-1] += 1
+    return out
+
+
+def sparse_leadlag_generators(dim: int) -> list[tuple[int, ...]]:
+    """§8 generator set over the 2·dim lead–lag alphabet (lag=i, lead=dim+i)."""
+    gens: list[tuple[int, ...]] = []
+    for i in range(dim):
+        lag, lead = i, dim + i
+        gens.append((lead,))
+        gens.append((lag, lead))
+        gens.append((lead, lag))
+    return gens
+
+
+def concat_generated_words(
+    d: int, depth: int, generators: list[tuple[int, ...]]
+) -> list[tuple[int, ...]]:
+    """All concatenations of generators with total length ≤ depth (§8)."""
+    gens = [tuple(g) for g in generators if len(g) > 0]
+    for g in gens:
+        assert all(0 <= letter < d for letter in g)
+    seen: set[tuple[int, ...]] = set()
+    frontier: list[tuple[int, ...]] = [()]
+    out: list[tuple[int, ...]] = []
+    while frontier:
+        nxt = []
+        for w in frontier:
+            for g in gens:
+                if len(w) + len(g) <= depth:
+                    cat = w + g
+                    if cat not in seen:
+                        seen.add(cat)
+                        nxt.append(cat)
+        out.extend(nxt)
+        frontier = nxt
+    out.sort(key=lambda w: (len(w), w))
+    return out
+
+
+def dump_golden(path: str, d: int, depth: int) -> None:
+    """Write the canonical golden file for cross-language table checks."""
+    table = build_word_table(d, truncated_words(d, depth))
+    with open(path, "w") as f:
+        json.dump(table.to_json(), f, sort_keys=True)

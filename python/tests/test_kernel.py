@@ -1,0 +1,219 @@
+"""L1 correctness: Pallas signature kernels vs the dense tensor-algebra
+oracle, swept over shapes/depths/projections with hypothesis."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.sig_kernel import sig_bwd, sig_fwd, signature
+from compile.words import (
+    build_word_table,
+    lyndon_words,
+    sig_dim,
+    truncated_words,
+)
+
+RNG = np.random.default_rng(12345)
+
+
+def random_paths(b, points, d, scale=0.5):
+    incs = RNG.normal(0, scale, size=(b, points - 1, d)).astype(np.float32)
+    paths = np.concatenate(
+        [np.zeros((b, 1, d), np.float32), np.cumsum(incs, axis=1)], axis=1
+    )
+    return jnp.asarray(paths)
+
+
+def trunc_table(d, depth):
+    return build_word_table(d, truncated_words(d, depth))
+
+
+class TestForwardVsOracle:
+    @pytest.mark.parametrize(
+        "b,points,d,depth",
+        [
+            (1, 2, 2, 1),
+            (2, 5, 2, 3),
+            (3, 9, 3, 3),
+            (2, 17, 2, 5),
+            (1, 33, 4, 2),
+            (4, 8, 2, 4),
+        ],
+    )
+    def test_truncated_matches_oracle(self, b, points, d, depth):
+        paths = random_paths(b, points, d)
+        table = trunc_table(d, depth)
+        got = sig_fwd(paths, table)
+        want = ref.oracle_signature_batch(paths, depth)
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=1e-5)
+
+    def test_single_segment_is_tensor_exp(self):
+        # Proposition 3.1 closed form.
+        d, depth = 3, 4
+        dx = np.array([0.5, -1.0, 0.25], np.float32)
+        paths = jnp.asarray(np.stack([np.zeros(3, np.float32), dx])[None])
+        table = trunc_table(d, depth)
+        got = np.asarray(sig_fwd(paths, table))[0]
+        # exp coefficients: word w → Π dx_i / |w|!.
+        import math
+
+        for pos, w in enumerate(table.requested):
+            want = np.prod([dx[i] for i in w]) / math.factorial(len(w))
+            assert abs(got[pos] - want) < 1e-6, f"word {w}"
+
+    def test_projection_gathers_truncated_coords(self):
+        d, depth = 3, 4
+        words = [(2, 0, 1, 1), (0,), (1, 1), (2, 2, 2)]
+        paths = random_paths(2, 7, d)
+        table = build_word_table(d, words)
+        got = sig_fwd(paths, table)
+        positions = [ref.flat_position(w, d) for w in words]
+        want = ref.oracle_projected(paths, depth, positions)
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=1e-5)
+
+    def test_constant_path_trivial(self):
+        table = trunc_table(2, 3)
+        paths = jnp.ones((2, 6, 2), jnp.float32)
+        out = np.asarray(sig_fwd(paths, table))
+        assert np.all(out == 0.0)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        b=st.integers(1, 3),
+        points=st.integers(2, 12),
+        d=st.integers(2, 4),
+        depth=st.integers(1, 4),
+    )
+    def test_hypothesis_sweep_forward(self, b, points, d, depth):
+        paths = random_paths(b, points, d)
+        table = trunc_table(d, depth)
+        got = sig_fwd(paths, table)
+        want = ref.oracle_signature_batch(paths, depth)
+        np.testing.assert_allclose(got, want, rtol=5e-4, atol=2e-5)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        d=st.integers(2, 4),
+        depth=st.integers(2, 4),
+        n_words=st.integers(1, 6),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_sweep_projections(self, d, depth, n_words, seed):
+        rng = np.random.default_rng(seed)
+        words = [
+            tuple(rng.integers(0, d, size=rng.integers(1, depth + 1)).tolist())
+            for _ in range(n_words)
+        ]
+        # dedupe, keep order
+        words = list(dict.fromkeys(words))
+        paths = random_paths(2, 6, d)
+        table = build_word_table(d, words)
+        got = sig_fwd(paths, table)
+        positions = [ref.flat_position(w, d) for w in words]
+        want = ref.oracle_projected(paths, depth, positions)
+        np.testing.assert_allclose(got, want, rtol=5e-4, atol=2e-5)
+
+
+class TestBackwardVsOracle:
+    @pytest.mark.parametrize(
+        "b,points,d,depth",
+        [(1, 3, 2, 2), (2, 5, 2, 3), (1, 7, 3, 3), (2, 4, 2, 4)],
+    )
+    def test_vjp_matches_jax_grad_of_oracle(self, b, points, d, depth):
+        paths = random_paths(b, points, d)
+        table = trunc_table(d, depth)
+        g = jnp.asarray(
+            RNG.normal(size=(b, table.out_dim)).astype(np.float32)
+        )
+        got = sig_bwd(paths, g, table)
+        want = ref.oracle_vjp(paths, depth, g)
+        np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-4)
+
+    def test_custom_vjp_wires_into_jax_grad(self):
+        d, depth = 2, 3
+        table = trunc_table(d, depth)
+        paths = random_paths(2, 5, d)
+
+        def loss(p):
+            return jnp.sum(signature(p, table) ** 2)
+
+        got = jax.grad(loss)(paths)
+
+        def oracle_loss(p):
+            return jnp.sum(ref.oracle_signature_batch(p, depth) ** 2)
+
+        want = jax.grad(oracle_loss)(paths)
+        np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-4)
+
+    def test_projection_vjp(self):
+        d, depth = 3, 3
+        words = [(0, 1, 2), (2,), (1, 1)]
+        table = build_word_table(d, words)
+        paths = random_paths(1, 6, d)
+        g = jnp.asarray(RNG.normal(size=(1, 3)).astype(np.float32))
+        got = sig_bwd(paths, g, table)
+        positions = [ref.flat_position(w, d) for w in words]
+
+        def oracle_loss(p):
+            return jnp.vdot(ref.oracle_projected(p, depth, positions), g)
+
+        want = jax.grad(oracle_loss)(paths)
+        np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-4)
+
+    @settings(max_examples=8, deadline=None)
+    @given(
+        points=st.integers(2, 8),
+        d=st.integers(2, 3),
+        depth=st.integers(1, 3),
+    )
+    def test_hypothesis_sweep_backward(self, points, d, depth):
+        paths = random_paths(1, points, d)
+        table = trunc_table(d, depth)
+        g = jnp.asarray(RNG.normal(size=(1, table.out_dim)).astype(np.float32))
+        got = sig_bwd(paths, g, table)
+        want = ref.oracle_vjp(paths, depth, g)
+        np.testing.assert_allclose(got, want, rtol=5e-3, atol=5e-4)
+
+
+class TestWordTables:
+    def test_truncated_table_shapes(self):
+        t = trunc_table(3, 3)
+        assert t.state_len == 1 + sig_dim(3, 3)
+        assert t.out_dim == sig_dim(3, 3)
+        assert t.letters.shape == (t.state_len, 3)
+        # ε at index 0, prefix pointers valid.
+        assert t.words[0] == ()
+        for i, w in enumerate(t.words):
+            for k in range(len(w)):
+                assert t.words[t.prefix_idx[i, k]] == w[:k]
+
+    def test_prefix_closure_minimal(self):
+        t = build_word_table(3, [(2, 0, 1, 1)])
+        assert t.state_len == 5
+        assert t.out_dim == 1
+
+    def test_lyndon_counts(self):
+        # Witt numbers for d=2: 2,1,2,3,6,9.
+        ws = lyndon_words(2, 6)
+        by_len = {}
+        for w in ws:
+            by_len[len(w)] = by_len.get(len(w), 0) + 1
+        assert [by_len[n] for n in range(1, 7)] == [2, 1, 2, 3, 6, 9]
+
+    def test_dtype_float64_forward(self):
+        # x64 path: oracle and kernel agree at tighter tolerance under
+        # jax.enable_x64 (exercises dtype polymorphism of the kernel).
+        with jax.experimental.enable_x64():
+            d, depth = 2, 3
+            incs = RNG.normal(0, 0.5, size=(1, 4, d))
+            paths = jnp.asarray(
+                np.concatenate([np.zeros((1, 1, d)), np.cumsum(incs, axis=1)], axis=1)
+            )
+            assert paths.dtype == jnp.float64
+            table = trunc_table(d, depth)
+            got = sig_fwd(paths, table)
+            want = ref.oracle_signature_batch(paths, depth)
+            np.testing.assert_allclose(got, want, rtol=1e-10, atol=1e-12)

@@ -1,0 +1,143 @@
+"""L2 correctness: lead–lag, windowed signatures and the Hurst model."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+from compile.model import DeepSigHurst, hurst_word_table, lead_lag, windowed_signature
+from compile.words import build_word_table, sig_dim, truncated_words
+
+RNG = np.random.default_rng(777)
+
+
+def random_paths(b, points, d, scale=0.5):
+    incs = RNG.normal(0, scale, size=(b, points - 1, d)).astype(np.float32)
+    return jnp.asarray(
+        np.concatenate([np.zeros((b, 1, d), np.float32), np.cumsum(incs, axis=1)], axis=1)
+    )
+
+
+class TestLeadLag:
+    def test_structure_1d(self):
+        # Path 0, 1, 3 → lead–lag rows (lag, lead).
+        p = jnp.asarray(np.array([[[0.0], [1.0], [3.0]]], np.float32))
+        ll = np.asarray(lead_lag(p))[0]
+        want = np.array(
+            [[0, 0], [0, 1], [1, 1], [1, 3], [3, 3]], np.float32
+        )
+        np.testing.assert_array_equal(ll, want)
+
+    def test_shapes(self):
+        p = random_paths(3, 11, 4)
+        ll = lead_lag(p)
+        assert ll.shape == (3, 21, 8)
+
+    def test_area_is_negative_quadratic_variation(self):
+        # S(lag,lead) − S(lead,lag) = −Σ(ΔX)² (lead moves first).
+        p = random_paths(1, 16, 1, scale=1.0)
+        ll = lead_lag(p)
+        table = build_word_table(2, [(0, 1), (1, 0)])
+        from compile.kernels.sig_kernel import sig_fwd
+
+        sig = np.asarray(sig_fwd(ll, table))[0]
+        dx = np.asarray(p)[0, 1:, 0] - np.asarray(p)[0, :-1, 0]
+        qv = float(np.sum(dx * dx))
+        assert abs((sig[0] - sig[1]) + qv) < 1e-4
+
+
+class TestWindowed:
+    def test_windows_match_slice_signatures(self):
+        d, depth, win_len = 2, 3, 6
+        paths = random_paths(2, 21, d)
+        table = build_word_table(d, truncated_words(d, depth))
+        starts = jnp.asarray(np.array([0, 5, 14], np.int32))
+        out = windowed_signature(paths, starts, win_len, table)
+        assert out.shape == (2, 3, sig_dim(d, depth))
+        for b in range(2):
+            for k, l in enumerate([0, 5, 14]):
+                sub = paths[b : b + 1, l : l + win_len + 1, :]
+                want = ref.oracle_signature_batch(sub, depth)[0]
+                np.testing.assert_allclose(
+                    out[b, k], want, rtol=3e-4, atol=2e-5
+                )
+
+
+class TestHurstModel:
+    def test_feature_dims_and_reduction(self):
+        trunc = DeepSigHurst(5, 3, "trunc")
+        sparse = DeepSigHurst(5, 3, "sparse")
+        assert trunc.feat_dim == sig_dim(10, 3) == 1110
+        # 5 + 35 + 220 distinct sparse words at depth 3.
+        assert sparse.feat_dim == 260
+        assert trunc.feat_dim / sparse.feat_dim > 4.0
+
+    def test_predict_shapes(self):
+        model = DeepSigHurst(2, 2, "sparse", hidden=8)
+        params = model.init(jax.random.PRNGKey(0))
+        paths = random_paths(4, 9, 2)
+        pred = model.predict(params, paths)
+        assert pred.shape == (4,)
+        assert np.all(np.isfinite(np.asarray(pred)))
+
+    def test_train_step_reduces_loss(self):
+        model = DeepSigHurst(2, 2, "sparse", hidden=16)
+        params = model.init(jax.random.PRNGKey(1))
+        momentum = jax.tree.map(jnp.zeros_like, params)
+        paths = random_paths(16, 9, 2)
+        targets = jnp.asarray(RNG.uniform(0.25, 0.75, 16).astype(np.float32))
+        lr = jnp.float32(1e-2)
+        first = None
+        loss = None
+        for _ in range(25):
+            params, momentum, loss = model.train_step(
+                params, momentum, paths, targets, lr
+            )
+            if first is None:
+                first = float(loss)
+        assert float(loss) < first, f"{first} → {float(loss)}"
+
+    def test_flat_wrappers_roundtrip(self):
+        model = DeepSigHurst(2, 2, "trunc", hidden=4)
+        params = model.init(jax.random.PRNGKey(2))
+        momentum = jax.tree.map(jnp.zeros_like, params)
+        paths = random_paths(3, 5, 2)
+        targets = jnp.asarray(np.array([0.3, 0.5, 0.7], np.float32))
+        names = model.PARAM_ORDER
+        flat_in = (
+            tuple(params[n] for n in names)
+            + tuple(momentum[n] for n in names)
+            + (paths, targets, jnp.float32(1e-2))
+        )
+        out = model.flat_train_step(*flat_in)
+        assert len(out) == 13
+        p2, m2, loss2 = model.train_step(
+            params, momentum, paths, targets, jnp.float32(1e-2)
+        )
+        for k, n in enumerate(names):
+            np.testing.assert_allclose(out[k], p2[n], rtol=1e-6)
+        np.testing.assert_allclose(out[12], loss2, rtol=1e-6)
+        pred = model.flat_predict(*(tuple(params[n] for n in names) + (paths,)))
+        assert pred[0].shape == (3,)
+
+    def test_gradients_flow_through_signature(self):
+        model = DeepSigHurst(2, 2, "sparse", hidden=4)
+        params = model.init(jax.random.PRNGKey(3))
+        paths = random_paths(2, 6, 2)
+        targets = jnp.asarray(np.array([0.4, 0.6], np.float32))
+        grads = jax.grad(model.loss)(params, paths, targets)
+        g_phi = np.asarray(grads["phi_w"])
+        assert np.any(g_phi != 0.0), "no gradient reached φ through the signature"
+
+
+class TestWordTableVariants:
+    @pytest.mark.parametrize("variant,dim,depth", [("trunc", 2, 3), ("sparse", 3, 3)])
+    def test_tables_build(self, variant, dim, depth):
+        t = hurst_word_table(dim, depth, variant)
+        assert t.d == 2 * dim
+        assert t.out_dim > 0
+        # Prefix-closure invariant.
+        for i, w in enumerate(t.words):
+            for k in range(len(w)):
+                assert t.words[t.prefix_idx[i, k]] == w[:k]

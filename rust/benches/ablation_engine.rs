@@ -1,0 +1,159 @@
+//! Ablations of the design choices DESIGN.md calls out:
+//!
+//! 1. **Thread scaling** — the paper's §3.2 granularity discussion:
+//!    our computational unit is (path × window); how does throughput
+//!    scale with worker count?
+//! 2. **Projection closure overhead** — computing a k-word projection
+//!    costs only its prefix closure, not the full truncated set (§7.1).
+//! 3. **Horner vs materialised exponentials** — Algorithm 1's Horner
+//!    evaluation vs the exp-then-multiply formulation (chen_full) on a
+//!    single path, isolating the §3.1 claim that Horner avoids the
+//!    intermediate exp coefficients.
+//! 4. **Anisotropic truncation** (§7.2) — cost tracks the reduced word
+//!    count, not the ambient truncated dimension.
+
+mod common;
+use common::{dump, full};
+use pathsig::baselines::chen_full_signature;
+use pathsig::bench::{time_auto, Timing};
+use pathsig::sig::{signature, signature_batch, SigEngine};
+use pathsig::util::json::Json;
+use pathsig::util::rng::Rng;
+use pathsig::words::{anisotropic_words, truncated_words, Word, WordTable};
+
+fn main() {
+    let full = full();
+    let mut rng = Rng::new(0xAB1A);
+    let budget = if full { 0.8 } else { 0.3 };
+    let mut report = Vec::new();
+
+    // ---------------- 1. thread scaling ----------------
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!("# Ablation 1 — thread scaling (B=64, M=200, d=4, N=4) on {cores} core(s)");
+    if cores == 1 {
+        println!("#   (single-core host: this measures threading *overhead*, which must stay ≈1.00x)");
+    }
+    let (b, m, d, n) = (64, 200, 4, 4);
+    let mut paths = Vec::new();
+    for _ in 0..b {
+        paths.extend(rng.brownian_path(m, d, 0.2));
+    }
+    let mut base_t = 0.0;
+    for threads in [1, 2, 4, 8, 16] {
+        let eng = SigEngine::with_threads(WordTable::build(d, &truncated_words(d, n)), threads);
+        let t = time_auto(&format!("{threads} threads"), budget, || {
+            std::hint::black_box(signature_batch(&eng, &paths, b));
+        });
+        if threads == 1 {
+            base_t = t.median_s;
+        }
+        println!(
+            "  {threads:>2} threads: {:>10}  speedup {:.2}x",
+            Timing::fmt_secs(t.median_s),
+            base_t / t.median_s
+        );
+        report.push(Json::obj(vec![
+            ("ablation", Json::str("threads")),
+            ("threads", Json::Num(threads as f64)),
+            ("time_s", Json::Num(t.median_s)),
+            ("scaling", Json::Num(base_t / t.median_s)),
+        ]));
+    }
+
+    // ---------------- 2. projection closure ----------------
+    println!("\n# Ablation 2 — projected vs full truncation (d=6, N=4, M=200)");
+    let (d, n, m) = (6, 4, 200);
+    let path = rng.brownian_path(m, d, 0.2);
+    let full_eng = SigEngine::sequential(WordTable::build(d, &truncated_words(d, n)));
+    let t_full = time_auto("full", budget, || {
+        std::hint::black_box(signature(&full_eng, &path));
+    });
+    for k_words in [1, 8, 64] {
+        let words: Vec<Word> = (0..k_words)
+            .map(|_| {
+                let len = rng.range(1, n);
+                Word((0..len).map(|_| rng.below(d) as u16).collect())
+            })
+            .collect();
+        let proj = SigEngine::sequential(WordTable::build(d, &words));
+        let t = time_auto(&format!("{k_words} words"), budget, || {
+            std::hint::black_box(signature(&proj, &path));
+        });
+        println!(
+            "  {k_words:>3} random words (closure {:>4}): {:>10} vs full ({} coords) {:>10} — {:.1}x cheaper",
+            proj.state_len(),
+            Timing::fmt_secs(t.median_s),
+            full_eng.out_dim(),
+            Timing::fmt_secs(t_full.median_s),
+            t_full.median_s / t.median_s
+        );
+        report.push(Json::obj(vec![
+            ("ablation", Json::str("projection")),
+            ("words", Json::Num(k_words as f64)),
+            ("closure", Json::Num(proj.state_len() as f64)),
+            ("time_s", Json::Num(t.median_s)),
+            ("full_time_s", Json::Num(t_full.median_s)),
+        ]));
+    }
+
+    // ---------------- 3. Horner vs materialised exp ----------------
+    println!("\n# Ablation 3 — Algorithm-1 Horner vs exp-then-multiply (single path, M=200)");
+    for (d, n) in [(3, 4), (4, 4), (6, 3), (10, 2)] {
+        let path = rng.brownian_path(200, d, 0.2);
+        let eng = SigEngine::sequential(WordTable::build(d, &truncated_words(d, n)));
+        let horner = time_auto("horner", budget, || {
+            std::hint::black_box(signature(&eng, &path));
+        });
+        let expmul = time_auto("expmul", budget, || {
+            std::hint::black_box(chen_full_signature(d, n, &path));
+        });
+        println!(
+            "  d={d} N={n}: horner {:>10}  exp-multiply {:>10}  ({:.2}x)",
+            Timing::fmt_secs(horner.median_s),
+            Timing::fmt_secs(expmul.median_s),
+            expmul.median_s / horner.median_s
+        );
+        report.push(Json::obj(vec![
+            ("ablation", Json::str("horner_vs_expmul")),
+            ("dim", Json::Num(d as f64)),
+            ("depth", Json::Num(n as f64)),
+            ("horner_s", Json::Num(horner.median_s)),
+            ("expmul_s", Json::Num(expmul.median_s)),
+        ]));
+    }
+
+    // ---------------- 4. anisotropic truncation ----------------
+    println!("\n# Ablation 4 — anisotropic truncation (d=4, γ=(1,1,2,2), M=200)");
+    let d = 4;
+    let path = rng.brownian_path(200, d, 0.2);
+    for cutoff in [3.0, 4.0, 5.0] {
+        let aniso = anisotropic_words(d, &[1.0, 1.0, 2.0, 2.0], cutoff);
+        let trunc = truncated_words(d, cutoff as usize);
+        let a_eng = SigEngine::sequential(WordTable::build(d, &aniso));
+        let t_eng = SigEngine::sequential(WordTable::build(d, &trunc));
+        let ta = time_auto("aniso", budget, || {
+            std::hint::black_box(signature(&a_eng, &path));
+        });
+        let tt = time_auto("trunc", budget, || {
+            std::hint::black_box(signature(&t_eng, &path));
+        });
+        println!(
+            "  r={cutoff}: {} vs {} words — {:>10} vs {:>10} ({:.2}x cheaper)",
+            aniso.len(),
+            trunc.len(),
+            Timing::fmt_secs(ta.median_s),
+            Timing::fmt_secs(tt.median_s),
+            tt.median_s / ta.median_s
+        );
+        report.push(Json::obj(vec![
+            ("ablation", Json::str("anisotropic")),
+            ("cutoff", Json::Num(cutoff)),
+            ("aniso_words", Json::Num(aniso.len() as f64)),
+            ("trunc_words", Json::Num(trunc.len() as f64)),
+            ("aniso_s", Json::Num(ta.median_s)),
+            ("trunc_s", Json::Num(tt.median_s)),
+        ]));
+    }
+
+    dump("ablation_engine", Json::Arr(report));
+}

@@ -1,0 +1,25 @@
+//! Shared helpers for the paper-table benches.
+
+use pathsig::util::json::Json;
+
+pub fn geomean(xs: &[f64]) -> f64 {
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+pub fn median(xs: impl Iterator<Item = f64>) -> f64 {
+    let mut v: Vec<f64> = xs.collect();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    pathsig::util::stats::percentile_sorted(&v, 0.5)
+}
+
+/// Write a bench result JSON under `target/bench_results/`.
+pub fn dump(name: &str, j: Json) {
+    std::fs::create_dir_all("target/bench_results").ok();
+    std::fs::write(format!("target/bench_results/{name}.json"), j.to_pretty()).ok();
+    println!("(results → target/bench_results/{name}.json)");
+}
+
+/// `PATHSIG_BENCH_FULL=1` switches to the wider grid.
+pub fn full() -> bool {
+    std::env::var("PATHSIG_BENCH_FULL").is_ok()
+}

@@ -1,0 +1,110 @@
+//! Figure 1: forward-signature speedup of pathsig relative to
+//! keras_sig-style (`matmul_style`) and pySigLib-style (`chen_full`)
+//! baselines, averaged over signature configurations per (batch,
+//! seq-len) cell.
+//!
+//! Paper grid: B ∈ {1..256} × M ∈ {50..1000}, 27 configs per cell, H200.
+//! Default here: a laptop-scale sub-grid (B ∈ {1,16,64}, M ∈ {50, 200,
+//! 500}, 8 configs) that preserves the qualitative shape: pathsig wins
+//! everywhere, speedups grow with signature size and shrink as M grows
+//! (pathsig does not parallelise over time; keras_sig does — §6.1).
+//! `PATHSIG_BENCH_FULL=1` widens the grid.
+
+mod common;
+use common::{dump, full, geomean, median};
+use pathsig::baselines::{chen_full_signature_batch, matmul_style_signature_batch};
+use pathsig::bench::{time_auto, Timing};
+use pathsig::sig::{signature_batch, SigEngine};
+use pathsig::util::json::Json;
+use pathsig::util::rng::Rng;
+use pathsig::words::{truncated_words, WordTable};
+
+fn main() {
+    let full = full();
+    let batches: &[usize] = if full { &[1, 16, 64, 128] } else { &[1, 16, 64] };
+    let seqs: &[usize] = if full { &[50, 100, 200, 500, 1000] } else { &[50, 200, 500] };
+    // (d, N) signature configurations averaged per cell (paper: 27).
+    let configs: &[(usize, usize)] = if full {
+        &[(2, 3), (2, 5), (3, 3), (3, 4), (4, 3), (4, 4), (6, 3), (6, 4), (8, 3), (10, 3)]
+    } else {
+        &[(2, 3), (2, 5), (3, 3), (3, 4), (4, 3), (4, 4), (6, 3), (10, 2)]
+    };
+    let budget = if full { 0.8 } else { 0.3 };
+
+    println!("# Figure 1 — forward speedup of pathsig vs keras_sig-style and pySigLib-style");
+    println!("# averaged over {} configs: {:?}", configs.len(), configs);
+    println!(
+        "{:>6} {:>6} | {:>14} {:>14} | {:>12}",
+        "B", "M", "vs keras-style", "vs pysig-style", "pathsig-mean"
+    );
+
+    let mut rng = Rng::new(0xF161);
+    let mut cells = Vec::new();
+    for &b in batches {
+        for &m in seqs {
+            let mut su_keras = Vec::new();
+            let mut su_pysig = Vec::new();
+            let mut t_ours_acc = 0.0;
+            for &(d, n) in configs {
+                let mut paths = Vec::with_capacity(b * (m + 1) * d);
+                for _ in 0..b {
+                    paths.extend(rng.brownian_path(m, d, 0.3));
+                }
+                let eng = SigEngine::new(WordTable::build(d, &truncated_words(d, n)));
+
+                let ours = time_auto("pathsig", budget, || {
+                    std::hint::black_box(signature_batch(&eng, &paths, b));
+                });
+                let keras = time_auto("keras", budget, || {
+                    std::hint::black_box(matmul_style_signature_batch(
+                        d,
+                        n,
+                        &paths,
+                        b,
+                        eng.threads,
+                    ));
+                });
+                let pysig = time_auto("pysig", budget, || {
+                    // pySigLib: CPU, shared-memory parallelism that
+                    // saturates at modest thread counts (Remark 6.1) —
+                    // grant it 4 threads.
+                    std::hint::black_box(chen_full_signature_batch(d, n, &paths, b, 4));
+                });
+                su_keras.push(keras.median_s / ours.median_s);
+                su_pysig.push(pysig.median_s / ours.median_s);
+                t_ours_acc += ours.median_s;
+            }
+            let gk = geomean(&su_keras);
+            let gp = geomean(&su_pysig);
+            println!(
+                "{:>6} {:>6} | {:>13.2}x {:>13.2}x | {:>12}",
+                b,
+                m,
+                gk,
+                gp,
+                Timing::fmt_secs(t_ours_acc / configs.len() as f64),
+            );
+            cells.push(Json::obj(vec![
+                ("batch", Json::Num(b as f64)),
+                ("seq_len", Json::Num(m as f64)),
+                ("speedup_vs_keras_style", Json::Num(gk)),
+                ("speedup_vs_pysig_style", Json::Num(gp)),
+            ]));
+        }
+    }
+    let med_k = median(
+        cells
+            .iter()
+            .map(|c| c.get("speedup_vs_keras_style").as_f64().unwrap()),
+    );
+    let med_p = median(
+        cells
+            .iter()
+            .map(|c| c.get("speedup_vs_pysig_style").as_f64().unwrap()),
+    );
+    println!(
+        "\nmedian speedups: {med_k:.2}x vs keras-style (paper fwd median 12.4x), \
+         {med_p:.2}x vs pysig-style (paper 40.1x)"
+    );
+    dump("fig1_truncated", Json::Arr(cells));
+}

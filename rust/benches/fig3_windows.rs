@@ -1,0 +1,119 @@
+//! Figure 3: windowed-signature scaling with the number of windows.
+//!
+//! pathsig evaluates the whole window collection in one call (windows
+//! are an extra parallel axis, §5); the pySigLib-style baseline pays a
+//! separate full evaluation per window. A Signatory-style
+//! Chen-combination baseline (expanding states + group inverse) is also
+//! measured — fast per window but `O(M·D_sig)` memory and numerically
+//! fragile (see `baselines::chen_windows` tests).
+
+mod common;
+use common::{dump, full, median};
+use pathsig::baselines::{chen_full_signature, chen_windowed_signatures};
+use pathsig::bench::{time_auto, Timing};
+use pathsig::sig::{windowed_signatures_batch, SigEngine, Window};
+use pathsig::util::json::Json;
+use pathsig::util::rng::Rng;
+use pathsig::util::threadpool::parallel_map;
+use pathsig::words::{truncated_words, WordTable};
+
+fn main() {
+    let full = full();
+    let batches: &[usize] = if full { &[1, 16, 32] } else { &[1, 16] };
+    let n_windows: &[usize] = if full {
+        &[2, 8, 32, 128, 512, 1024]
+    } else {
+        &[2, 8, 32, 128, 512]
+    };
+    let win_len = 32;
+    let (d, depth) = (3, 3);
+    let budget = if full { 0.8 } else { 0.3 };
+
+    println!("# Figure 3 — windowed signatures: time vs number of windows (len {win_len}, d={d}, N={depth})");
+    println!(
+        "{:>4} {:>6} | {:>11} {:>11} {:>11} | {:>10} {:>9}",
+        "B", "K", "per-window", "chen-comb", "pathsig", "vs per-win", "vs chen"
+    );
+
+    let mut rng = Rng::new(0xF163);
+    let mut out_rows = Vec::new();
+    for &b in batches {
+        for &k in n_windows {
+            // Path long enough to host K overlapping windows.
+            let m = (win_len + k).max(256);
+            let mut paths = Vec::with_capacity(b * (m + 1) * d);
+            for _ in 0..b {
+                paths.extend(rng.brownian_path(m, d, 0.2));
+            }
+            let per = (m + 1) * d;
+            let windows: Vec<Window> = (0..k)
+                .map(|i| {
+                    let l = (i * (m - win_len)) / k.max(1);
+                    Window::new(l, l + win_len)
+                })
+                .collect();
+            let eng = SigEngine::new(WordTable::build(d, &truncated_words(d, depth)));
+
+            let ours = time_auto("pathsig", budget, || {
+                std::hint::black_box(windowed_signatures_batch(&eng, &paths, b, &windows));
+            });
+            // pySigLib-style: separate evaluation per window (its
+            // windowed API shape), 4 threads.
+            let per_win = time_auto("per-window", budget, || {
+                let outs = parallel_map(b * k, 4, |u| {
+                    let (bi, wi) = (u / k, u % k);
+                    let w = windows[wi];
+                    let slice =
+                        &paths[bi * per + w.l * d..bi * per + (w.r + 1) * d];
+                    chen_full_signature(d, depth, slice)
+                });
+                std::hint::black_box(outs);
+            });
+            // Signatory-style Chen combination.
+            let chen = time_auto("chen-comb", budget, || {
+                let outs = parallel_map(b, eng.threads, |bi| {
+                    chen_windowed_signatures(
+                        d,
+                        depth,
+                        &paths[bi * per..(bi + 1) * per],
+                        &windows,
+                    )
+                });
+                std::hint::black_box(outs);
+            });
+
+            let s_pw = per_win.median_s / ours.median_s;
+            let s_ch = chen.median_s / ours.median_s;
+            println!(
+                "{:>4} {:>6} | {:>11} {:>11} {:>11} | {:>9.2}x {:>8.2}x",
+                b,
+                k,
+                Timing::fmt_secs(per_win.median_s),
+                Timing::fmt_secs(chen.median_s),
+                Timing::fmt_secs(ours.median_s),
+                s_pw,
+                s_ch
+            );
+            out_rows.push(Json::obj(vec![
+                ("batch", Json::Num(b as f64)),
+                ("windows", Json::Num(k as f64)),
+                ("win_len", Json::Num(win_len as f64)),
+                ("pathsig_s", Json::Num(ours.median_s)),
+                ("per_window_s", Json::Num(per_win.median_s)),
+                ("chen_comb_s", Json::Num(chen.median_s)),
+                ("speedup_vs_per_window", Json::Num(s_pw)),
+                ("speedup_vs_chen", Json::Num(s_ch)),
+            ]));
+        }
+    }
+    let med = median(
+        out_rows
+            .iter()
+            .map(|r| r.get("speedup_vs_per_window").as_f64().unwrap()),
+    );
+    println!(
+        "\nmedian speedup vs per-window evaluation: {med:.1}x \
+         (paper: median 153x across 2700 configs on H200; speedup must grow with K then saturate)"
+    );
+    dump("fig3_windows", Json::Arr(out_rows));
+}

@@ -1,0 +1,84 @@
+//! Signatory-style windowed-signature baseline (§5).
+//!
+//! Precompute expanding-window signatures `S_{0,t_j}` for every `j`
+//! (memory `O(M · D_sig)`), then recover each requested window as
+//! `S_{t_l,t_r} = S_{0,t_l}^{-1} ⊗ S_{0,t_r}` via the group inverse
+//! (Lemma 4.5). The paper notes this "can be numerically unstable and
+//! memory-intensive for long sequences" — both effects are measured in
+//! `benches/fig3_windows.rs`.
+
+use crate::sig::Window;
+use crate::tensor::TruncTensor;
+
+/// Windowed signatures via precomputed expanding states + Chen
+/// combination. Returns row-major `(K, D_sig)`.
+pub fn chen_windowed_signatures(
+    d: usize,
+    depth: usize,
+    path: &[f64],
+    windows: &[Window],
+) -> Vec<f64> {
+    let m1 = path.len() / d;
+    // Expanding states S_{0,t_j} for all j — the O(M·D_sig) table.
+    let mut states: Vec<TruncTensor> = Vec::with_capacity(m1);
+    states.push(TruncTensor::one(d, depth));
+    let mut dx = vec![0.0; d];
+    let mut scratch = Vec::new();
+    for j in 1..m1 {
+        for i in 0..d {
+            dx[i] = path[j * d + i] - path[(j - 1) * d + i];
+        }
+        let mut next = states[j - 1].clone();
+        next.mul_assign(&TruncTensor::exp_level1(&dx, depth), &mut scratch);
+        states.push(next);
+    }
+    let mut out = Vec::new();
+    for w in windows {
+        let combined = states[w.l].group_inverse().mul(&states[w.r]);
+        out.extend(combined.flatten_nonscalar());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sig::{windowed_signatures, SigEngine};
+    use crate::util::proptest::assert_allclose;
+    use crate::util::rng::Rng;
+    use crate::words::{truncated_words, WordTable};
+
+    #[test]
+    fn agrees_with_direct_windows() {
+        let mut rng = Rng::new(520);
+        let (d, n) = (2, 3);
+        let eng = SigEngine::new(WordTable::build(d, &truncated_words(d, n)));
+        let path = rng.brownian_path(25, d, 0.6);
+        let wins = vec![Window::new(0, 10), Window::new(5, 20), Window::new(24, 25)];
+        let base = chen_windowed_signatures(d, n, &path, &wins);
+        let ours = windowed_signatures(&eng, &path, &wins);
+        assert_allclose(&base, &ours, 1e-9, 1e-8, "windowed");
+    }
+
+    #[test]
+    fn instability_grows_with_path_magnitude() {
+        // The inverse-combine approach loses accuracy when |S_{0,l}| is
+        // large (big increments, long prefix); the direct method does
+        // not. This documents the §5 remark quantitatively.
+        let mut rng = Rng::new(521);
+        let (d, n) = (2, 4);
+        let eng = SigEngine::new(WordTable::build(d, &truncated_words(d, n)));
+        let path = rng.brownian_path(200, d, 2.0); // large increments
+        let wins = vec![Window::new(190, 200)];
+        let base = chen_windowed_signatures(d, n, &path, &wins);
+        let ours = windowed_signatures(&eng, &path, &wins);
+        let err = crate::util::proptest::max_abs_diff(&base, &ours);
+        // Not asserting a huge error (it varies) — just that the direct
+        // window matches an independently computed sub-path signature
+        // to machine precision while the combined one drifts.
+        let sub = crate::sig::signature(&eng, &path[190 * d..]);
+        let direct_err = crate::util::proptest::max_abs_diff(&ours, &sub);
+        assert!(direct_err < 1e-10, "direct drifted: {direct_err}");
+        assert!(err >= direct_err, "combine err {err} < direct err {direct_err}");
+    }
+}

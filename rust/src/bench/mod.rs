@@ -1,0 +1,198 @@
+//! Benchmark harness + counting allocator.
+//!
+//! Mirrors the paper's §6 protocol: "3–10 warm-up runs, followed by
+//! averaged measurements over 10–50 runs", reporting mean/median. Peak
+//! memory (Table 2) is measured with [`CountingAllocator`], a
+//! `#[global_allocator]` wrapper that tracks live bytes and a
+//! resettable high-water mark — the host-side analogue of
+//! `torch.cuda.max_memory_allocated()`.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Instant;
+
+/// Timing result for one benchmark case.
+#[derive(Clone, Debug)]
+pub struct Timing {
+    pub name: String,
+    pub warmups: usize,
+    pub runs: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl Timing {
+    /// Human-friendly duration (µs/ms/s).
+    pub fn fmt_secs(s: f64) -> String {
+        if s < 1e-3 {
+            format!("{:.2} µs", s * 1e6)
+        } else if s < 1.0 {
+            format!("{:.2} ms", s * 1e3)
+        } else {
+            format!("{:.2} s", s)
+        }
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} mean {:>10}  median {:>10}  (n={})",
+            self.name,
+            Self::fmt_secs(self.mean_s),
+            Self::fmt_secs(self.median_s),
+            self.runs
+        )
+    }
+}
+
+/// Run `f` with `warmups` discarded runs then `runs` timed runs.
+pub fn time_fn<F: FnMut()>(name: &str, warmups: usize, runs: usize, mut f: F) -> Timing {
+    for _ in 0..warmups {
+        f();
+    }
+    let mut samples = Vec::with_capacity(runs);
+    for _ in 0..runs {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let mut sorted = samples.clone();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Timing {
+        name: name.to_string(),
+        warmups,
+        runs,
+        mean_s: samples.iter().sum::<f64>() / runs as f64,
+        median_s: crate::util::stats::percentile_sorted(&sorted, 0.5),
+        min_s: sorted[0],
+        max_s: sorted[runs - 1],
+    }
+}
+
+/// Adaptive variant: choose the run count so the total measurement takes
+/// roughly `budget_s` seconds (bounded to [paper's 10, 50] runs), after
+/// a first calibration call.
+pub fn time_auto<F: FnMut()>(name: &str, budget_s: f64, mut f: F) -> Timing {
+    let t0 = Instant::now();
+    f(); // calibration + first warmup
+    let one = t0.elapsed().as_secs_f64().max(1e-9);
+    let runs = ((budget_s / one) as usize).clamp(3, 50);
+    let warmups = (runs / 3).clamp(1, 10);
+    time_fn(name, warmups, runs, f)
+}
+
+// ------------------------------------------------------------------
+// Counting allocator
+// ------------------------------------------------------------------
+
+static LIVE: AtomicUsize = AtomicUsize::new(0);
+static PEAK: AtomicUsize = AtomicUsize::new(0);
+
+/// Global-allocator wrapper tracking live bytes and a peak watermark.
+/// Install in a bench binary with:
+/// ```ignore
+/// #[global_allocator]
+/// static ALLOC: pathsig::bench::CountingAllocator = pathsig::bench::CountingAllocator;
+/// ```
+pub struct CountingAllocator;
+
+unsafe impl GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let p = System.alloc(layout);
+        if !p.is_null() {
+            let live = LIVE.fetch_add(layout.size(), Ordering::Relaxed) + layout.size();
+            PEAK.fetch_max(live, Ordering::Relaxed);
+        }
+        p
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout);
+        LIVE.fetch_sub(layout.size(), Ordering::Relaxed);
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let p = System.realloc(ptr, layout, new_size);
+        if !p.is_null() {
+            if new_size >= layout.size() {
+                let live =
+                    LIVE.fetch_add(new_size - layout.size(), Ordering::Relaxed) + new_size
+                        - layout.size();
+                PEAK.fetch_max(live, Ordering::Relaxed);
+            } else {
+                LIVE.fetch_sub(layout.size() - new_size, Ordering::Relaxed);
+            }
+        }
+        p
+    }
+}
+
+/// Live heap bytes right now (as seen by the counting allocator).
+pub fn live_bytes() -> usize {
+    LIVE.load(Ordering::Relaxed)
+}
+
+/// Reset the peak watermark to the current live size.
+pub fn reset_peak() {
+    PEAK.store(LIVE.load(Ordering::Relaxed), Ordering::Relaxed);
+}
+
+/// Peak live bytes since the last [`reset_peak`].
+pub fn peak_bytes() -> usize {
+    PEAK.load(Ordering::Relaxed)
+}
+
+/// Measure the incremental peak heap usage of `f` (peak minus the live
+/// bytes at entry). Only meaningful when the [`CountingAllocator`] is
+/// installed as the global allocator.
+pub fn measure_peak<T, F: FnOnce() -> T>(f: F) -> (T, usize) {
+    let base = live_bytes();
+    reset_peak();
+    let out = f();
+    let peak = peak_bytes().saturating_sub(base);
+    (out, peak)
+}
+
+/// Pretty bytes.
+pub fn fmt_bytes(b: usize) -> String {
+    if b < 1024 {
+        format!("{b} B")
+    } else if b < 1024 * 1024 {
+        format!("{:.1} KB", b as f64 / 1024.0)
+    } else if b < 1024 * 1024 * 1024 {
+        format!("{:.1} MB", b as f64 / (1024.0 * 1024.0))
+    } else {
+        format!("{:.2} GB", b as f64 / (1024.0 * 1024.0 * 1024.0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_fn_counts_runs() {
+        let mut calls = 0;
+        let t = time_fn("noop", 2, 5, || {
+            calls += 1;
+        });
+        assert_eq!(calls, 7);
+        assert_eq!(t.runs, 5);
+        assert!(t.mean_s >= 0.0);
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert!(Timing::fmt_secs(5e-6).contains("µs"));
+        assert!(Timing::fmt_secs(5e-2).contains("ms"));
+        assert!(fmt_bytes(2048).contains("KB"));
+        assert!(fmt_bytes(3 * 1024 * 1024).contains("MB"));
+    }
+
+    #[test]
+    fn timing_report_contains_name() {
+        let t = time_fn("my_bench", 0, 3, || {});
+        assert!(t.report().contains("my_bench"));
+    }
+}

@@ -1,0 +1,108 @@
+//! Server metrics: lock-free counters + log-bucket latency histograms.
+
+use crate::util::json::Json;
+use crate::util::stats::LatencyHistogram;
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+
+/// Metrics registry shared across server threads.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests_total: AtomicU64,
+    pub requests_failed: AtomicU64,
+    pub batches_total: AtomicU64,
+    pub batched_requests_total: AtomicU64,
+    pub pjrt_executions: AtomicU64,
+    pub native_executions: AtomicU64,
+    pub request_latency: LatencyHistogram,
+    pub batch_latency: LatencyHistogram,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn record_request(&self, d: std::time::Duration, ok: bool) {
+        self.requests_total.fetch_add(1, Relaxed);
+        if !ok {
+            self.requests_failed.fetch_add(1, Relaxed);
+        }
+        self.request_latency.record(d);
+    }
+
+    pub fn record_batch(&self, size: usize, d: std::time::Duration) {
+        self.batches_total.fetch_add(1, Relaxed);
+        self.batched_requests_total.fetch_add(size as u64, Relaxed);
+        self.batch_latency.record(d);
+    }
+
+    /// Mean requests per executed batch (batching efficiency).
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches_total.load(Relaxed);
+        if b == 0 {
+            0.0
+        } else {
+            self.batched_requests_total.load(Relaxed) as f64 / b as f64
+        }
+    }
+
+    /// JSON snapshot (served for `{"op": "metrics"}`).
+    pub fn snapshot(&self) -> Json {
+        Json::obj(vec![
+            (
+                "requests_total",
+                Json::Num(self.requests_total.load(Relaxed) as f64),
+            ),
+            (
+                "requests_failed",
+                Json::Num(self.requests_failed.load(Relaxed) as f64),
+            ),
+            (
+                "batches_total",
+                Json::Num(self.batches_total.load(Relaxed) as f64),
+            ),
+            ("mean_batch_size", Json::Num(self.mean_batch_size())),
+            (
+                "pjrt_executions",
+                Json::Num(self.pjrt_executions.load(Relaxed) as f64),
+            ),
+            (
+                "native_executions",
+                Json::Num(self.native_executions.load(Relaxed) as f64),
+            ),
+            (
+                "request_latency_p50_us",
+                Json::Num(self.request_latency.quantile_ns(0.5) as f64 / 1e3),
+            ),
+            (
+                "request_latency_p99_us",
+                Json::Num(self.request_latency.quantile_ns(0.99) as f64 / 1e3),
+            ),
+            (
+                "request_latency_mean_us",
+                Json::Num(self.request_latency.mean_ns() / 1e3),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.record_request(Duration::from_micros(100), true);
+        m.record_request(Duration::from_micros(200), false);
+        m.record_batch(8, Duration::from_micros(500));
+        m.record_batch(4, Duration::from_micros(500));
+        assert_eq!(m.requests_total.load(Relaxed), 2);
+        assert_eq!(m.requests_failed.load(Relaxed), 1);
+        assert!((m.mean_batch_size() - 6.0).abs() < 1e-12);
+        let snap = m.snapshot();
+        assert_eq!(snap.get("requests_total").as_usize(), Some(2));
+        assert!(snap.get("request_latency_p50_us").as_f64().unwrap() > 0.0);
+    }
+}

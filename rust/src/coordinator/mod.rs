@@ -1,0 +1,28 @@
+//! L3 coordinator — the serving layer around the pathsig engines.
+//!
+//! The paper ships pathsig as a PyTorch library; its §6 benchmarks imply
+//! the deployment shape this module provides: a **signature feature
+//! server** that accepts path-valued requests over TCP (JSON-lines),
+//! routes them to a compiled PJRT artifact (when one matches the request
+//! shape) or the native Rust engine (any shape), and **dynamically
+//! batches** concurrent requests for the same configuration — the
+//! batch axis being exactly the parallelism the paper's CUDA kernels
+//! exploit (§3.2, §5).
+//!
+//! * [`protocol`] — wire types (requests, responses, projections).
+//! * [`service`]  — engine cache + request execution (native / PJRT).
+//! * [`batcher`]  — dynamic batching with size/latency policy.
+//! * [`server`]   — TCP JSON-lines front end.
+//! * [`metrics`]  — counters and latency histograms.
+
+pub mod batcher;
+pub mod metrics;
+pub mod protocol;
+pub mod server;
+pub mod service;
+
+pub use batcher::{Batcher, BatcherConfig};
+pub use metrics::Metrics;
+pub use protocol::{parse_request, Request, RequestOp, Response};
+pub use server::{serve, ServerConfig};
+pub use service::{ConfigKey, SigService};

@@ -1,0 +1,375 @@
+//! Wire protocol of the feature server: one JSON object per line.
+//!
+//! Request:
+//! ```json
+//! {"op": "signature", "dim": 3, "depth": 4,
+//!  "projection": {"type": "truncated"},
+//!  "path": [/* (M+1)·dim floats, row-major */],
+//!  "id": "client-chosen", "backend": "auto"}
+//! ```
+//!
+//! Projection variants (§7):
+//! * `{"type": "truncated"}` — full `W_{≤N}`;
+//! * `{"type": "anisotropic", "gamma": [...], "cutoff": r}`;
+//! * `{"type": "dag", "edges": [[..], ..]}`;
+//! * `{"type": "lyndon"}` — log-signature output basis;
+//! * `{"type": "words", "words": [[0,2,1], ...]}` — explicit word list;
+//! * `{"type": "sparse_leadlag", "base_dim": d}` — §8 generator set
+//!   (alphabet must be 2·base_dim).
+//!
+//! Extra ops: `"logsig"`, `"windowed"` (+ `"windows": [[l, r], …]`),
+//! `"metrics"`, `"ping"`.
+//!
+//! Response: `{"id": …, "ok": true, "result": [...], "shape": [...],
+//! "backend": "native"|"pjrt", "latency_us": ...}` or
+//! `{"ok": false, "error": "..."}`.
+
+use crate::util::json::Json;
+use crate::words::{generate::sparse_leadlag_generators, Word, WordSpec};
+
+/// Operation requested by the client.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RequestOp {
+    Signature,
+    LogSig,
+    Windowed,
+    Metrics,
+    Ping,
+}
+
+/// Backend preference.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    Auto,
+    Native,
+    Pjrt,
+}
+
+/// A parsed client request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: String,
+    pub op: RequestOp,
+    pub dim: usize,
+    pub depth: usize,
+    pub spec: WordSpec,
+    pub backend: Backend,
+    /// Row-major `(M+1, dim)` path samples.
+    pub path: Vec<f64>,
+    /// For `Windowed`: index pairs.
+    pub windows: Vec<(usize, usize)>,
+}
+
+/// Parse a JSON-line request.
+pub fn parse_request(line: &str) -> Result<Request, String> {
+    let j = Json::parse(line).map_err(|e| format!("bad json: {e}"))?;
+    let id = j.get("id").as_str().unwrap_or("").to_string();
+    let op = match j.get("op").as_str().unwrap_or("signature") {
+        "signature" => RequestOp::Signature,
+        "logsig" => RequestOp::LogSig,
+        "windowed" => RequestOp::Windowed,
+        "metrics" => RequestOp::Metrics,
+        "ping" => RequestOp::Ping,
+        other => return Err(format!("unknown op '{other}'")),
+    };
+    if matches!(op, RequestOp::Metrics | RequestOp::Ping) {
+        return Ok(Request {
+            id,
+            op,
+            dim: 0,
+            depth: 0,
+            spec: WordSpec::Truncated { depth: 0 },
+            backend: Backend::Auto,
+            path: Vec::new(),
+            windows: Vec::new(),
+        });
+    }
+    let dim = j
+        .get("dim")
+        .as_usize()
+        .ok_or_else(|| "missing 'dim'".to_string())?;
+    let depth = j.get("depth").as_usize().unwrap_or(2);
+    if dim == 0 {
+        return Err("dim must be ≥ 1".into());
+    }
+    let spec = parse_projection(j.get("projection"), depth, dim)?;
+    let backend = match j.get("backend").as_str().unwrap_or("auto") {
+        "auto" => Backend::Auto,
+        "native" => Backend::Native,
+        "pjrt" => Backend::Pjrt,
+        other => return Err(format!("unknown backend '{other}'")),
+    };
+    let path = j.f64_vec("path");
+    if path.is_empty() || path.len() % dim != 0 {
+        return Err(format!(
+            "path must be a non-empty flat (M+1)·dim array (got {} floats, dim {})",
+            path.len(),
+            dim
+        ));
+    }
+    let mut windows = Vec::new();
+    if op == RequestOp::Windowed {
+        for wj in j.get("windows").as_arr().unwrap_or(&[]) {
+            let pair = wj.as_arr().unwrap_or(&[]);
+            if pair.len() != 2 {
+                return Err("each window must be [l, r]".into());
+            }
+            let (l, r) = (
+                pair[0].as_usize().ok_or("bad window index")?,
+                pair[1].as_usize().ok_or("bad window index")?,
+            );
+            if l >= r {
+                return Err(format!("window [{l}, {r}] must satisfy l < r"));
+            }
+            windows.push((l, r));
+        }
+        if windows.is_empty() {
+            return Err("windowed op needs a non-empty 'windows' list".into());
+        }
+        let m = path.len() / dim - 1;
+        if let Some(&(_, rmax)) = windows.iter().max_by_key(|w| w.1) {
+            if rmax > m {
+                return Err(format!("window right edge {rmax} exceeds M={m}"));
+            }
+        }
+    }
+    Ok(Request {
+        id,
+        op,
+        dim,
+        depth,
+        spec,
+        backend,
+        path,
+        windows,
+    })
+}
+
+fn parse_projection(j: &Json, depth: usize, dim: usize) -> Result<WordSpec, String> {
+    let ty = j.get("type").as_str().unwrap_or("truncated");
+    match ty {
+        "truncated" => Ok(WordSpec::Truncated { depth }),
+        "lyndon" => Ok(WordSpec::Lyndon { depth }),
+        "anisotropic" => {
+            let gamma = j.f64_vec("gamma");
+            if gamma.len() != dim {
+                return Err(format!(
+                    "anisotropic projection needs {dim} weights, got {}",
+                    gamma.len()
+                ));
+            }
+            if gamma.iter().any(|&g| g <= 0.0) {
+                return Err("anisotropic weights must be positive".into());
+            }
+            let cutoff = j.get("cutoff").as_f64().unwrap_or(depth as f64);
+            Ok(WordSpec::Anisotropic { gamma, cutoff })
+        }
+        "dag" => {
+            let mut edges = Vec::new();
+            for row in j.get("edges").as_arr().unwrap_or(&[]) {
+                let r: Vec<u16> = row
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(|v| v.as_usize().map(|u| u as u16))
+                    .collect();
+                if r.iter().any(|&l| l as usize >= dim) {
+                    return Err("dag edge letter out of range".into());
+                }
+                edges.push(r);
+            }
+            if edges.len() != dim {
+                return Err(format!("dag needs {dim} adjacency rows"));
+            }
+            Ok(WordSpec::Dag { depth, edges })
+        }
+        "words" => {
+            let mut words = Vec::new();
+            for row in j.get("words").as_arr().unwrap_or(&[]) {
+                let w: Vec<u16> = row
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(|v| v.as_usize().map(|u| u as u16))
+                    .collect();
+                if w.is_empty() {
+                    return Err("empty word in projection".into());
+                }
+                if w.iter().any(|&l| l as usize >= dim) {
+                    return Err("word letter out of range".into());
+                }
+                words.push(Word(w));
+            }
+            if words.is_empty() {
+                return Err("words projection needs a non-empty list".into());
+            }
+            Ok(WordSpec::Custom { words })
+        }
+        "sparse_leadlag" => {
+            let base = j
+                .get("base_dim")
+                .as_usize()
+                .ok_or("sparse_leadlag needs base_dim")?;
+            if 2 * base != dim {
+                return Err(format!(
+                    "sparse_leadlag: dim must be 2·base_dim (dim={dim}, base={base})"
+                ));
+            }
+            Ok(WordSpec::ConcatGenerated {
+                depth,
+                generators: sparse_leadlag_generators(base),
+            })
+        }
+        other => Err(format!("unknown projection type '{other}'")),
+    }
+}
+
+/// A server response.
+#[derive(Clone, Debug)]
+pub enum Response {
+    Ok {
+        id: String,
+        result: Vec<f64>,
+        shape: Vec<usize>,
+        backend: &'static str,
+        latency_us: u64,
+    },
+    Json {
+        id: String,
+        body: Json,
+    },
+    Err {
+        id: String,
+        error: String,
+    },
+}
+
+impl Response {
+    pub fn to_line(&self) -> String {
+        match self {
+            Response::Ok {
+                id,
+                result,
+                shape,
+                backend,
+                latency_us,
+            } => Json::obj(vec![
+                ("id", Json::str(id)),
+                ("ok", Json::Bool(true)),
+                ("result", Json::arr_f64(result)),
+                ("shape", Json::arr_usize(shape)),
+                ("backend", Json::str(backend)),
+                ("latency_us", Json::Num(*latency_us as f64)),
+            ])
+            .to_string(),
+            Response::Json { id, body } => Json::obj(vec![
+                ("id", Json::str(id)),
+                ("ok", Json::Bool(true)),
+                ("body", body.clone()),
+            ])
+            .to_string(),
+            Response::Err { id, error } => Json::obj(vec![
+                ("id", Json::str(id)),
+                ("ok", Json::Bool(false)),
+                ("error", Json::str(error)),
+            ])
+            .to_string(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_minimal_signature_request() {
+        let r = parse_request(
+            r#"{"op":"signature","dim":2,"depth":3,"path":[0,0,1,1,2,0]}"#,
+        )
+        .unwrap();
+        assert_eq!(r.op, RequestOp::Signature);
+        assert_eq!(r.dim, 2);
+        assert_eq!(r.depth, 3);
+        assert_eq!(r.spec, WordSpec::Truncated { depth: 3 });
+        assert_eq!(r.path.len(), 6);
+    }
+
+    #[test]
+    fn parse_projection_variants() {
+        let r = parse_request(
+            r#"{"op":"signature","dim":2,"depth":4,
+                "projection":{"type":"anisotropic","gamma":[1.0,2.0],"cutoff":3.5},
+                "path":[0,0,1,1]}"#,
+        )
+        .unwrap();
+        match r.spec {
+            WordSpec::Anisotropic { gamma, cutoff } => {
+                assert_eq!(gamma, vec![1.0, 2.0]);
+                assert_eq!(cutoff, 3.5);
+            }
+            other => panic!("wrong spec {other:?}"),
+        }
+        let r = parse_request(
+            r#"{"op":"signature","dim":2,"depth":2,
+                "projection":{"type":"words","words":[[0,1],[1]]},
+                "path":[0,0,1,1]}"#,
+        )
+        .unwrap();
+        match r.spec {
+            WordSpec::Custom { words } => assert_eq!(words.len(), 2),
+            other => panic!("wrong spec {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_windowed() {
+        let r = parse_request(
+            r#"{"op":"windowed","dim":1,"depth":2,"windows":[[0,2],[1,3]],
+                "path":[0,1,2,3]}"#,
+        )
+        .unwrap();
+        assert_eq!(r.windows, vec![(0, 2), (1, 3)]);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse_request("not json").is_err());
+        assert!(parse_request(r#"{"op":"nope"}"#).is_err());
+        assert!(parse_request(r#"{"op":"signature","dim":2,"path":[1,2,3]}"#).is_err()); // 3 % 2 != 0
+        assert!(
+            parse_request(r#"{"op":"windowed","dim":1,"depth":2,"windows":[[2,2]],"path":[0,1,2]}"#)
+                .is_err()
+        );
+        assert!(
+            parse_request(r#"{"op":"windowed","dim":1,"depth":2,"windows":[[0,9]],"path":[0,1,2]}"#)
+                .is_err()
+        );
+        assert!(parse_request(
+            r#"{"op":"signature","dim":2,"depth":2,
+               "projection":{"type":"words","words":[[7]]},"path":[0,0,1,1]}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn response_roundtrips_as_json() {
+        let resp = Response::Ok {
+            id: "r1".into(),
+            result: vec![1.0, 2.5],
+            shape: vec![2],
+            backend: "native",
+            latency_us: 42,
+        };
+        let j = Json::parse(&resp.to_line()).unwrap();
+        assert_eq!(j.get("ok").as_bool(), Some(true));
+        assert_eq!(j.f64_vec("result"), vec![1.0, 2.5]);
+        let err = Response::Err {
+            id: "r2".into(),
+            error: "boom".into(),
+        };
+        let j = Json::parse(&err.to_line()).unwrap();
+        assert_eq!(j.get("ok").as_bool(), Some(false));
+        assert_eq!(j.get("error").as_str(), Some("boom"));
+    }
+}

@@ -1,0 +1,279 @@
+//! TCP JSON-lines front end.
+//!
+//! One connection = one client; each line is an independent request and
+//! receives exactly one response line (requests on a connection are
+//! handled sequentially per connection, batched *across* connections by
+//! the [`super::Batcher`]). `{"op": "ping"}` health-checks;
+//! `{"op": "metrics"}` returns the metrics snapshot.
+
+use super::batcher::{Batcher, BatcherConfig};
+use super::protocol::{parse_request, RequestOp, Response};
+use super::service::SigService;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Server configuration.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    pub addr: String,
+    pub batcher: BatcherConfig,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            addr: "127.0.0.1:7717".to_string(),
+            batcher: BatcherConfig::default(),
+        }
+    }
+}
+
+/// A running server handle (owned listener thread + shutdown flag).
+pub struct ServerHandle {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// Request shutdown and join the accept loop.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Poke the accept loop with a dummy connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Start the feature server; returns once the listener is bound.
+pub fn serve(service: Arc<SigService>, config: ServerConfig) -> std::io::Result<ServerHandle> {
+    let listener = TcpListener::bind(&config.addr)?;
+    let addr = listener.local_addr()?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let batcher = Arc::new(Batcher::new(Arc::clone(&service), config.batcher));
+    let accept_thread = {
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            for conn in listener.incoming() {
+                if stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                match conn {
+                    Ok(stream) => {
+                        let svc = Arc::clone(&service);
+                        let bat = Arc::clone(&batcher);
+                        std::thread::spawn(move || handle_connection(stream, svc, bat));
+                    }
+                    Err(_) => continue,
+                }
+            }
+        })
+    };
+    Ok(ServerHandle {
+        addr,
+        stop,
+        accept_thread: Some(accept_thread),
+    })
+}
+
+fn handle_connection(stream: TcpStream, service: Arc<SigService>, batcher: Arc<Batcher>) {
+    let peer = stream.peer_addr().ok();
+    let reader = BufReader::new(match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    });
+    let mut writer = stream;
+    for line in reader.lines() {
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => break,
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let t0 = Instant::now();
+        let resp = handle_line(&line, &service, &batcher);
+        let ok = !matches!(resp, Response::Err { .. });
+        service.metrics.record_request(t0.elapsed(), ok);
+        let mut out = resp.to_line();
+        out.push('\n');
+        if writer.write_all(out.as_bytes()).is_err() {
+            break;
+        }
+    }
+    let _ = peer;
+}
+
+fn handle_line(line: &str, service: &Arc<SigService>, batcher: &Arc<Batcher>) -> Response {
+    let req = match parse_request(line) {
+        Ok(r) => r,
+        Err(e) => {
+            return Response::Err {
+                id: String::new(),
+                error: e,
+            }
+        }
+    };
+    let id = req.id.clone();
+    match req.op {
+        RequestOp::Ping => Response::Json {
+            id,
+            body: crate::util::json::Json::obj(vec![(
+                "pong",
+                crate::util::json::Json::Bool(true),
+            )]),
+        },
+        RequestOp::Metrics => Response::Json {
+            id,
+            body: service.metrics.snapshot(),
+        },
+        _ => {
+            let t0 = Instant::now();
+            match batcher.submit(req) {
+                Ok((result, shape, backend)) => Response::Ok {
+                    id,
+                    result,
+                    shape,
+                    backend,
+                    latency_us: t0.elapsed().as_micros() as u64,
+                },
+                Err(error) => Response::Err { id, error },
+            }
+        }
+    }
+}
+
+/// Minimal blocking client (used by tests, examples and the CLI).
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> std::io::Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Client {
+            reader,
+            writer: stream,
+        })
+    }
+
+    /// Send one JSON line, read one JSON line back.
+    pub fn call(&mut self, request: &str) -> std::io::Result<crate::util::json::Json> {
+        self.writer.write_all(request.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        crate::util::json::Json::parse(&line).map_err(|e| {
+            std::io::Error::new(std::io::ErrorKind::InvalidData, format!("bad response: {e}"))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn start_test_server() -> (ServerHandle, String) {
+        let service = Arc::new(SigService::new(None));
+        let handle = serve(
+            service,
+            ServerConfig {
+                addr: "127.0.0.1:0".to_string(),
+                batcher: BatcherConfig {
+                    max_batch: 8,
+                    max_wait: std::time::Duration::from_millis(1),
+                },
+            },
+        )
+        .unwrap();
+        let addr = handle.addr.to_string();
+        (handle, addr)
+    }
+
+    #[test]
+    fn ping_and_signature_roundtrip() {
+        let (handle, addr) = start_test_server();
+        let mut client = Client::connect(&addr).unwrap();
+        let pong = client.call(r#"{"op":"ping","id":"p1"}"#).unwrap();
+        assert_eq!(pong.get("ok").as_bool(), Some(true));
+        assert_eq!(pong.get("id").as_str(), Some("p1"));
+
+        let resp = client
+            .call(r#"{"op":"signature","id":"s1","dim":2,"depth":2,"path":[0,0,1,0,1,1]}"#)
+            .unwrap();
+        assert_eq!(resp.get("ok").as_bool(), Some(true));
+        let result = resp.f64_vec("result");
+        assert_eq!(result.len(), 6);
+        assert!((result[0] - 1.0).abs() < 1e-9);
+        handle.shutdown();
+    }
+
+    #[test]
+    fn error_responses_are_json() {
+        let (handle, addr) = start_test_server();
+        let mut client = Client::connect(&addr).unwrap();
+        let resp = client.call(r#"{"op":"signature","dim":0}"#).unwrap();
+        assert_eq!(resp.get("ok").as_bool(), Some(false));
+        assert!(resp.get("error").as_str().is_some());
+        // Connection still usable afterwards.
+        let pong = client.call(r#"{"op":"ping"}"#).unwrap();
+        assert_eq!(pong.get("ok").as_bool(), Some(true));
+        handle.shutdown();
+    }
+
+    #[test]
+    fn metrics_reflect_traffic() {
+        let (handle, addr) = start_test_server();
+        let mut client = Client::connect(&addr).unwrap();
+        for _ in 0..3 {
+            client
+                .call(r#"{"op":"signature","dim":2,"depth":2,"path":[0,0,1,0,1,1]}"#)
+                .unwrap();
+        }
+        let m = client.call(r#"{"op":"metrics"}"#).unwrap();
+        let body = m.get("body");
+        assert!(body.get("requests_total").as_usize().unwrap() >= 3);
+        assert!(body.get("batches_total").as_usize().unwrap() >= 1);
+        handle.shutdown();
+    }
+
+    #[test]
+    fn concurrent_clients_get_correct_results() {
+        let (handle, addr) = start_test_server();
+        let mut joins = Vec::new();
+        for k in 1..=6u32 {
+            let addr = addr.clone();
+            joins.push(std::thread::spawn(move || {
+                let mut c = Client::connect(&addr).unwrap();
+                let s = k as f64;
+                let req = format!(
+                    r#"{{"op":"signature","dim":1,"depth":2,"path":[0,{s}]}}"#
+                );
+                let resp = c.call(&req).unwrap();
+                let out = resp.f64_vec("result");
+                assert!((out[0] - s).abs() < 1e-9, "client {k}: {out:?}");
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        handle.shutdown();
+    }
+}

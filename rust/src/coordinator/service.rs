@@ -1,0 +1,335 @@
+//! The compute service: resolves a request configuration to an engine
+//! (building and caching word tables on first use), and executes either
+//! natively or through a matching PJRT artifact.
+//!
+//! Routing policy (`backend: "auto"`):
+//! * a request is PJRT-eligible if the manifest has a `sig_fwd` entry
+//!   with the same `(dim, depth, steps)` and truncated projection —
+//!   artifacts have static shapes, so anything else falls back;
+//! * otherwise the native word-basis engine handles it (any shape, any
+//!   projection).
+
+use super::protocol::{Backend, Request, RequestOp};
+use crate::logsig::LogSigEngine;
+use crate::sig::{signature, signature_batch, windowed_signatures, SigEngine, Window};
+use crate::runtime::Runtime;
+use crate::words::{WordSpec, WordTable};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, RwLock};
+
+/// Cache key for an engine: alphabet size + projection description +
+/// depth. (`WordSpec::describe()` is injective enough for our spec set
+/// once combined with the explicit fields; custom word lists hash their
+/// full contents.)
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct ConfigKey {
+    pub dim: usize,
+    pub depth: usize,
+    pub spec_id: String,
+    pub op: &'static str,
+    /// Path points (M+1); part of the key so batches stack cleanly and
+    /// PJRT artifacts (static shapes) can be matched.
+    pub points: usize,
+}
+
+impl ConfigKey {
+    pub fn of(req: &Request) -> ConfigKey {
+        ConfigKey {
+            dim: req.dim,
+            depth: req.depth,
+            spec_id: spec_identity(&req.spec),
+            op: match req.op {
+                RequestOp::Signature => "sig",
+                RequestOp::LogSig => "logsig",
+                RequestOp::Windowed => "windowed",
+                RequestOp::Metrics => "metrics",
+                RequestOp::Ping => "ping",
+            },
+            points: if req.dim == 0 { 0 } else { req.path.len() / req.dim },
+        }
+    }
+}
+
+/// Full identity string of a word spec (cache-key safe).
+fn spec_identity(spec: &WordSpec) -> String {
+    match spec {
+        WordSpec::Truncated { depth } => format!("trunc:{depth}"),
+        WordSpec::Lyndon { depth } => format!("lyndon:{depth}"),
+        WordSpec::Anisotropic { gamma, cutoff } => {
+            format!("aniso:{cutoff}:{gamma:?}")
+        }
+        WordSpec::Dag { depth, edges } => format!("dag:{depth}:{edges:?}"),
+        WordSpec::ConcatGenerated { depth, generators } => {
+            format!("gen:{depth}:{generators:?}")
+        }
+        WordSpec::Custom { words } => format!("custom:{words:?}"),
+    }
+}
+
+/// Engine cache + optional PJRT runtime.
+pub struct SigService {
+    engines: RwLock<HashMap<String, Arc<SigEngine>>>,
+    logsig_engines: Mutex<HashMap<(usize, usize), Arc<LogSigEngine>>>,
+    pub runtime: Option<Arc<Runtime>>,
+    pub metrics: Arc<super::Metrics>,
+}
+
+impl SigService {
+    pub fn new(runtime: Option<Arc<Runtime>>) -> SigService {
+        SigService {
+            engines: RwLock::new(HashMap::new()),
+            logsig_engines: Mutex::new(HashMap::new()),
+            runtime,
+            metrics: Arc::new(super::Metrics::new()),
+        }
+    }
+
+    /// Get (or build) the native engine for a (dim, spec) pair.
+    pub fn engine(&self, dim: usize, spec: &WordSpec) -> Arc<SigEngine> {
+        let key = format!("{dim}:{}", spec_identity(spec));
+        if let Some(e) = self.engines.read().unwrap().get(&key) {
+            return e.clone();
+        }
+        let words = spec.words(dim);
+        let engine = Arc::new(SigEngine::new(WordTable::build(dim, &words)));
+        self.engines
+            .write()
+            .unwrap()
+            .insert(key, engine.clone());
+        engine
+    }
+
+    pub fn logsig_engine(&self, dim: usize, depth: usize) -> Arc<LogSigEngine> {
+        let mut cache = self.logsig_engines.lock().unwrap();
+        cache
+            .entry((dim, depth))
+            .or_insert_with(|| Arc::new(LogSigEngine::new(dim, depth)))
+            .clone()
+    }
+
+    /// Name of a PJRT artifact able to serve `key` (batch size `b`), if
+    /// any: kind `sig_fwd`, matching dim/depth/points, batch ≥ b,
+    /// truncated projection only.
+    pub fn pjrt_artifact_for(&self, key: &ConfigKey, b: usize) -> Option<String> {
+        let rt = self.runtime.as_ref()?;
+        if key.op != "sig" || !key.spec_id.starts_with("trunc:") {
+            return None;
+        }
+        rt.manifest
+            .by_kind("sig_fwd")
+            .into_iter()
+            .filter(|e| {
+                e.meta.get("dim").as_usize() == Some(key.dim)
+                    && e.meta.get("depth").as_usize() == Some(key.depth)
+                    && e.meta.get("points").as_usize() == Some(key.points)
+                    && e.meta.get("batch").as_usize().unwrap_or(0) >= b
+            })
+            .min_by_key(|e| e.meta.get("batch").as_usize().unwrap_or(usize::MAX))
+            .map(|e| e.name.clone())
+    }
+
+    /// Execute one request (no batching). Returns (flat result, shape,
+    /// backend label).
+    pub fn execute(&self, req: &Request) -> Result<(Vec<f64>, Vec<usize>, &'static str), String> {
+        match req.op {
+            RequestOp::Signature => {
+                let key = ConfigKey::of(req);
+                if req.backend != Backend::Native {
+                    if let Some(name) = self.pjrt_artifact_for(&key, 1) {
+                        if let Ok(out) = self.execute_pjrt_batch(&name, &[req.path.clone()]) {
+                            let dim = out[0].len();
+                            self.metrics
+                                .pjrt_executions
+                                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                            return Ok((out.into_iter().next().unwrap(), vec![dim], "pjrt"));
+                        }
+                    }
+                    if req.backend == Backend::Pjrt {
+                        return Err("no matching PJRT artifact for request shape".into());
+                    }
+                }
+                let eng = self.engine(req.dim, &req.spec);
+                let out = signature(&eng, &req.path);
+                self.metrics
+                    .native_executions
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                let n = out.len();
+                Ok((out, vec![n], "native"))
+            }
+            RequestOp::LogSig => {
+                let eng = self.logsig_engine(req.dim, req.depth);
+                let out = eng.logsig(&req.path);
+                self.metrics
+                    .native_executions
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                let n = out.len();
+                Ok((out, vec![n], "native"))
+            }
+            RequestOp::Windowed => {
+                let eng = self.engine(req.dim, &req.spec);
+                let wins: Vec<Window> = req
+                    .windows
+                    .iter()
+                    .map(|&(l, r)| Window::new(l, r))
+                    .collect();
+                let out = windowed_signatures(&eng, &req.path, &wins);
+                self.metrics
+                    .native_executions
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                let odim = eng.out_dim();
+                Ok((out, vec![wins.len(), odim], "native"))
+            }
+            RequestOp::Metrics | RequestOp::Ping => {
+                Err("control ops are handled by the server, not the service".into())
+            }
+        }
+    }
+
+    /// Execute a stacked batch of same-config signature requests
+    /// natively. `paths` must all have equal length.
+    pub fn execute_native_batch(
+        &self,
+        dim: usize,
+        spec: &WordSpec,
+        paths: &[Vec<f64>],
+    ) -> Vec<Vec<f64>> {
+        let eng = self.engine(dim, spec);
+        let flat: Vec<f64> = paths.iter().flatten().copied().collect();
+        let out = signature_batch(&eng, &flat, paths.len());
+        let odim = eng.out_dim();
+        self.metrics
+            .native_executions
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        out.chunks(odim).map(|c| c.to_vec()).collect()
+    }
+
+    /// Execute a stacked batch through a PJRT artifact, padding the
+    /// batch axis up to the artifact's static batch size.
+    pub fn execute_pjrt_batch(
+        &self,
+        artifact: &str,
+        paths: &[Vec<f64>],
+    ) -> Result<Vec<Vec<f64>>, String> {
+        let rt = self.runtime.as_ref().ok_or("no runtime configured")?;
+        let entry = rt
+            .manifest
+            .find(artifact)
+            .ok_or_else(|| format!("artifact '{artifact}' vanished"))?;
+        let art_batch = entry.meta.get("batch").as_usize().unwrap_or(paths.len());
+        let per_path = entry.inputs[0].numel() / art_batch;
+        if paths.len() > art_batch {
+            return Err(format!(
+                "batch {} exceeds artifact batch {art_batch}",
+                paths.len()
+            ));
+        }
+        let mut input = vec![0f32; entry.inputs[0].numel()];
+        for (b, p) in paths.iter().enumerate() {
+            if p.len() != per_path {
+                return Err(format!(
+                    "path length {} does not match artifact slot {per_path}",
+                    p.len()
+                ));
+            }
+            for (k, &v) in p.iter().enumerate() {
+                input[b * per_path + k] = v as f32;
+            }
+        }
+        let outs = rt
+            .run_f32(artifact, &[&input])
+            .map_err(|e| format!("pjrt execution failed: {e}"))?;
+        let flat = &outs[0];
+        let odim = entry.outputs[0].numel() / art_batch;
+        Ok(paths
+            .iter()
+            .enumerate()
+            .map(|(b, _)| flat[b * odim..(b + 1) * odim].iter().map(|&x| x as f64).collect())
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::protocol::parse_request;
+
+    fn svc() -> SigService {
+        SigService::new(None)
+    }
+
+    #[test]
+    fn engine_cache_reuses() {
+        let s = svc();
+        let a = s.engine(2, &WordSpec::Truncated { depth: 3 });
+        let b = s.engine(2, &WordSpec::Truncated { depth: 3 });
+        assert!(Arc::ptr_eq(&a, &b));
+        let c = s.engine(2, &WordSpec::Truncated { depth: 4 });
+        assert!(!Arc::ptr_eq(&a, &c));
+    }
+
+    #[test]
+    fn execute_signature_request() {
+        let s = svc();
+        let req = parse_request(
+            r#"{"op":"signature","dim":2,"depth":2,"path":[0,0,1,0,1,1]}"#,
+        )
+        .unwrap();
+        let (out, shape, backend) = s.execute(&req).unwrap();
+        assert_eq!(shape, vec![6]);
+        assert_eq!(backend, "native");
+        // Level 1 = total displacement (1,1).
+        assert!((out[0] - 1.0).abs() < 1e-12);
+        assert!((out[1] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn execute_windowed_request() {
+        let s = svc();
+        let req = parse_request(
+            r#"{"op":"windowed","dim":1,"depth":2,"windows":[[0,1],[0,2]],
+                "path":[0,1,3]}"#,
+        )
+        .unwrap();
+        let (out, shape, _) = s.execute(&req).unwrap();
+        assert_eq!(shape, vec![2, 2]);
+        assert!((out[0] - 1.0).abs() < 1e-12); // S_(0,1) level 1
+        assert!((out[2] - 3.0).abs() < 1e-12); // S_(0,2) level 1
+    }
+
+    #[test]
+    fn execute_logsig_request() {
+        let s = svc();
+        let req = parse_request(
+            r#"{"op":"logsig","dim":2,"depth":2,"path":[0,0,1,0,1,1]}"#,
+        )
+        .unwrap();
+        let (out, shape, _) = s.execute(&req).unwrap();
+        // Lyndon dim for d=2, N=2: 2 + 1 = 3.
+        assert_eq!(shape, vec![3]);
+        assert_eq!(out.len(), 3);
+    }
+
+    #[test]
+    fn native_batch_matches_singles() {
+        let s = svc();
+        let spec = WordSpec::Truncated { depth: 3 };
+        let mut rng = crate::util::rng::Rng::new(900);
+        let paths: Vec<Vec<f64>> = (0..5).map(|_| rng.brownian_path(7, 2, 1.0)).collect();
+        let batch = s.execute_native_batch(2, &spec, &paths);
+        let eng = s.engine(2, &spec);
+        for (b, p) in paths.iter().enumerate() {
+            let single = crate::sig::signature(&eng, p);
+            assert_eq!(batch[b], single);
+        }
+    }
+
+    #[test]
+    fn pjrt_preference_without_runtime_errors() {
+        let s = svc();
+        let req = parse_request(
+            r#"{"op":"signature","dim":2,"depth":2,"backend":"pjrt","path":[0,0,1,1]}"#,
+        )
+        .unwrap();
+        assert!(s.execute(&req).is_err());
+    }
+}

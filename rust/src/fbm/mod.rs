@@ -1,0 +1,322 @@
+//! Fractional Brownian motion generators — the §8 workload substrate.
+//!
+//! The paper's illustrative experiment estimates the Hurst parameter of a
+//! multivariate fBM with independent components from simulated paths
+//! (`H ~ U(0.25, 0.75)`, 250 steps). We implement two exact samplers:
+//!
+//! * [`davies_harte`] — circulant embedding of the fractional Gaussian
+//!   noise covariance, `O(M log M)` via the from-scratch FFT
+//!   ([`crate::util::fft`]). Used for dataset generation.
+//! * [`cholesky_fbm`] — `O(M³)` Cholesky factorisation of the exact
+//!   covariance, used as the correctness oracle for Davies–Harte.
+//!
+//! Both return *fGn increments* at unit spacing scaled to a path on
+//! `[0, 1]`, i.e. `X_{k/M} = (1/M)^H · Σ_{j≤k} ξ_j`.
+
+use crate::util::fft::{fft, C64};
+use crate::util::rng::Rng;
+
+/// Autocovariance of unit-spacing fractional Gaussian noise:
+/// `γ(k) = ½(|k+1|^{2H} − 2|k|^{2H} + |k−1|^{2H})`.
+pub fn fgn_autocov(k: usize, hurst: f64) -> f64 {
+    let h2 = 2.0 * hurst;
+    let kf = k as f64;
+    0.5 * ((kf + 1.0).powf(h2) - 2.0 * kf.powf(h2) + (kf - 1.0).abs().powf(h2))
+}
+
+/// Sample `m` fGn increments (unit variance at lag 0) via Davies–Harte.
+///
+/// Internally embeds into a circulant of length `2·next_pow2(m)` so the
+/// radix-2 FFT applies. Panics if the embedding is not nonnegative
+/// definite (does not occur for `H ∈ (0,1)` with this embedding size).
+pub fn davies_harte_fgn(rng: &mut Rng, m: usize, hurst: f64) -> Vec<f64> {
+    assert!(m >= 1);
+    assert!(hurst > 0.0 && hurst < 1.0, "H must be in (0,1)");
+    if (hurst - 0.5).abs() < 1e-12 {
+        // Plain white noise — skip the FFT machinery.
+        let mut out = vec![0.0; m];
+        rng.fill_gaussian(&mut out);
+        return out;
+    }
+    let mp = m.next_power_of_two();
+    let n2 = 2 * mp;
+    // First row of the circulant: γ(0..mp), then mirrored tail.
+    let mut row = vec![C64::default(); n2];
+    for k in 0..=mp {
+        row[k] = C64::new(fgn_autocov(k, hurst), 0.0);
+    }
+    for k in 1..mp {
+        row[n2 - k] = C64::new(fgn_autocov(k, hurst), 0.0);
+    }
+    fft(&mut row, false);
+    // Eigenvalues of the circulant = FFT of the first row (real).
+    let mut lambda = vec![0.0; n2];
+    for (i, c) in row.iter().enumerate() {
+        let l = c.re;
+        assert!(
+            l > -1e-8,
+            "circulant embedding not nonneg-definite (λ[{i}]={l}, H={hurst})"
+        );
+        lambda[i] = l.max(0.0);
+    }
+    // Synthesize the spectral sample.
+    let mut y = vec![C64::default(); n2];
+    y[0] = C64::new((lambda[0] * n2 as f64).sqrt() * rng.gaussian(), 0.0);
+    y[mp] = C64::new((lambda[mp] * n2 as f64).sqrt() * rng.gaussian(), 0.0);
+    for k in 1..mp {
+        let scale = (lambda[k] * n2 as f64 / 2.0).sqrt();
+        let (u, v) = (rng.gaussian(), rng.gaussian());
+        y[k] = C64::new(scale * u, scale * v);
+        y[n2 - k] = C64::new(scale * u, -scale * v);
+    }
+    fft(&mut y, true); // inverse FFT includes 1/n2
+    y[..m].iter().map(|c| c.re).collect()
+}
+
+/// Exact fGn via Cholesky factorisation (oracle; `O(m³)`).
+pub fn cholesky_fgn(rng: &mut Rng, m: usize, hurst: f64) -> Vec<f64> {
+    // Covariance matrix Σ_{ij} = γ(|i-j|).
+    let mut l = vec![0.0; m * m];
+    for i in 0..m {
+        for j in 0..=i {
+            l[i * m + j] = fgn_autocov(i - j, hurst);
+        }
+    }
+    // In-place lower Cholesky.
+    for i in 0..m {
+        for j in 0..=i {
+            let mut s = l[i * m + j];
+            for k in 0..j {
+                s -= l[i * m + k] * l[j * m + k];
+            }
+            if i == j {
+                assert!(s > 0.0, "covariance not PD at {i}");
+                l[i * m + i] = s.sqrt();
+            } else {
+                l[i * m + j] = s / l[j * m + j];
+            }
+        }
+    }
+    let mut z = vec![0.0; m];
+    rng.fill_gaussian(&mut z);
+    (0..m)
+        .map(|i| (0..=i).map(|k| l[i * m + k] * z[k]).sum())
+        .collect()
+}
+
+/// Which sampler to use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FbmMethod {
+    DaviesHarte,
+    Cholesky,
+}
+
+/// A `dim`-component fBM path on `[0,1]` with `steps` increments and
+/// independent components sharing a single Hurst exponent (the §8
+/// setup). Returns row-major `(steps+1, dim)` starting at 0.
+pub fn fbm_path(rng: &mut Rng, steps: usize, dim: usize, hurst: f64, method: FbmMethod) -> Vec<f64> {
+    let scale = (1.0 / steps as f64).powf(hurst);
+    let mut path = vec![0.0; (steps + 1) * dim];
+    for i in 0..dim {
+        let fgn = match method {
+            FbmMethod::DaviesHarte => davies_harte_fgn(rng, steps, hurst),
+            FbmMethod::Cholesky => cholesky_fgn(rng, steps, hurst),
+        };
+        let mut acc = 0.0;
+        for (j, xi) in fgn.iter().enumerate() {
+            acc += xi * scale;
+            path[(j + 1) * dim + i] = acc;
+        }
+    }
+    path
+}
+
+/// A labelled dataset of fBM paths for Hurst regression: returns
+/// `(paths (B, steps+1, dim), hurst (B))` with `H_b ~ U(h_lo, h_hi)`
+/// i.i.d. per path (the paper's `H ~ U(0.25, 0.75)`).
+pub fn fbm_dataset(
+    rng: &mut Rng,
+    batch: usize,
+    steps: usize,
+    dim: usize,
+    h_lo: f64,
+    h_hi: f64,
+) -> (Vec<f64>, Vec<f64>) {
+    let mut paths = Vec::with_capacity(batch * (steps + 1) * dim);
+    let mut hs = Vec::with_capacity(batch);
+    for _ in 0..batch {
+        let h = rng.uniform_in(h_lo, h_hi);
+        hs.push(h);
+        paths.extend(fbm_path(rng, steps, dim, h, FbmMethod::DaviesHarte));
+    }
+    (paths, hs)
+}
+
+/// The lead–lag transform (Definition 8.1): `(M+1, d)` → `(2M+1, 2d)`,
+/// channel layout `(lag_1..lag_d, lead_1..lead_d)` matching
+/// [`crate::words::generate::sparse_leadlag_generators`].
+pub fn lead_lag(path: &[f64], d: usize) -> Vec<f64> {
+    let m1 = path.len() / d;
+    let m = m1 - 1;
+    let d2 = 2 * d;
+    let mut out = vec![0.0; (2 * m + 1) * d2];
+    let pt = |j: usize| &path[j * d..(j + 1) * d];
+    for k in 0..m {
+        // X̂_{2k} = (X_k, X_k)
+        out[(2 * k) * d2..(2 * k) * d2 + d].copy_from_slice(pt(k));
+        out[(2 * k) * d2 + d..(2 * k + 1) * d2].copy_from_slice(pt(k));
+        // X̂_{2k+1} = (X_k, X_{k+1})  (lag stays, lead advances)
+        out[(2 * k + 1) * d2..(2 * k + 1) * d2 + d].copy_from_slice(pt(k));
+        out[(2 * k + 1) * d2 + d..(2 * k + 2) * d2].copy_from_slice(pt(k + 1));
+    }
+    // X̂_{2M} = (X_M, X_M)
+    out[(2 * m) * d2..(2 * m) * d2 + d].copy_from_slice(pt(m));
+    out[(2 * m) * d2 + d..(2 * m + 1) * d2].copy_from_slice(pt(m));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn autocov_h_half_is_white() {
+        assert!((fgn_autocov(0, 0.5) - 1.0).abs() < 1e-12);
+        for k in 1..10 {
+            assert!(fgn_autocov(k, 0.5).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn autocov_signs_by_regime() {
+        // H > 1/2 ⇒ positive correlation; H < 1/2 ⇒ negative at lag 1.
+        assert!(fgn_autocov(1, 0.7) > 0.0);
+        assert!(fgn_autocov(1, 0.3) < 0.0);
+    }
+
+    #[test]
+    fn davies_harte_matches_theoretical_covariance() {
+        // Estimate lag-0/1/2 covariances over many samples.
+        let mut rng = Rng::new(600);
+        let h = 0.7;
+        let m = 64;
+        let reps = 4000;
+        let mut acc = [0.0; 3];
+        for _ in 0..reps {
+            let x = davies_harte_fgn(&mut rng, m, h);
+            for lag in 0..3 {
+                let mut c = 0.0;
+                for i in 0..m - lag {
+                    c += x[i] * x[i + lag];
+                }
+                acc[lag] += c / (m - lag) as f64;
+            }
+        }
+        for (lag, a) in acc.iter().enumerate() {
+            let got = a / reps as f64;
+            let want = fgn_autocov(lag, h);
+            assert!(
+                (got - want).abs() < 0.02,
+                "lag {lag}: got {got}, want {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn cholesky_matches_theoretical_covariance() {
+        let mut rng = Rng::new(601);
+        let h = 0.3;
+        let m = 32;
+        let reps = 4000;
+        let mut lag1 = 0.0;
+        for _ in 0..reps {
+            let x = cholesky_fgn(&mut rng, m, h);
+            let mut c = 0.0;
+            for i in 0..m - 1 {
+                c += x[i] * x[i + 1];
+            }
+            lag1 += c / (m - 1) as f64;
+        }
+        let got = lag1 / reps as f64;
+        let want = fgn_autocov(1, h);
+        assert!((got - want).abs() < 0.02, "got {got}, want {want}");
+    }
+
+    #[test]
+    fn fbm_path_shape_and_start() {
+        let mut rng = Rng::new(602);
+        let p = fbm_path(&mut rng, 50, 3, 0.4, FbmMethod::DaviesHarte);
+        assert_eq!(p.len(), 51 * 3);
+        assert_eq!(&p[..3], &[0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn fbm_selfsimilarity_variance() {
+        // Var[X_1] should be ≈ 1 for the scaled path (T=1).
+        let mut rng = Rng::new(603);
+        for &h in &[0.3, 0.6] {
+            let reps = 3000;
+            let mut v = 0.0;
+            for _ in 0..reps {
+                let p = fbm_path(&mut rng, 32, 1, h, FbmMethod::DaviesHarte);
+                let x1 = p[32];
+                v += x1 * x1;
+            }
+            v /= reps as f64;
+            assert!((v - 1.0).abs() < 0.1, "H={h}: Var[X_1]={v}");
+        }
+    }
+
+    #[test]
+    fn dataset_shapes_and_label_range() {
+        let mut rng = Rng::new(604);
+        let (paths, hs) = fbm_dataset(&mut rng, 10, 20, 2, 0.25, 0.75);
+        assert_eq!(paths.len(), 10 * 21 * 2);
+        assert_eq!(hs.len(), 10);
+        assert!(hs.iter().all(|&h| (0.25..0.75).contains(&h)));
+    }
+
+    #[test]
+    fn lead_lag_structure() {
+        // Simple 1-d path 0,1,3.
+        let path = [0.0, 1.0, 3.0];
+        let ll = lead_lag(&path, 1);
+        // (2M+1, 2) = (5, 2): rows (lag, lead):
+        // (0,0), (0,1), (1,1), (1,3), (3,3)
+        assert_eq!(ll, vec![0.0, 0.0, 0.0, 1.0, 1.0, 1.0, 1.0, 3.0, 3.0, 3.0]);
+    }
+
+    #[test]
+    fn lead_lag_level2_area_is_half_quadratic_variation() {
+        // For the lead-lag path, S((lag,lead)) - S((lead,lag)) equals the
+        // discrete quadratic variation Σ (ΔX)² … the antisymmetric part
+        // is the signed area = ½·Σ(ΔX_j)² each orientation; check the
+        // known identity area(lead,lag) = ½ Σ ΔX².
+        use crate::sig::{signature, SigEngine};
+        use crate::words::{Word, WordTable};
+        let mut rng = Rng::new(605);
+        let path: Vec<f64> = rng.brownian_path(20, 1, 1.0);
+        let ll = lead_lag(&path, 1);
+        // channels: 0 = lag, 1 = lead.
+        let eng = SigEngine::new(WordTable::build(
+            2,
+            &[Word(vec![0, 1]), Word(vec![1, 0])],
+        ));
+        let sig = signature(&eng, &ll);
+        let qv: f64 = (0..20)
+            .map(|j| {
+                let dx = path[j + 1] - path[j];
+                dx * dx
+            })
+            .sum();
+        // Per step the lead channel moves first, then the lag catches
+        // up, so S(lead,lag) collects ΔX² while S(lag,lead) collects 0:
+        // the antisymmetric part S(lag,lead) − S(lead,lag) = −[X, X].
+        let area = sig[0] - sig[1];
+        assert!(
+            (area + qv).abs() < 1e-10,
+            "lead-lag area {area} vs -QV {}",
+            -qv
+        );
+    }
+}

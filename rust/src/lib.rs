@@ -1,0 +1,54 @@
+//! # pathsig
+//!
+//! A Rust + JAX/Pallas reproduction of *"pathsig: A GPU-Accelerated Library
+//! for Truncated and Projected Path Signatures"* (Nygaard, 2026).
+//!
+//! The crate computes truncated, projected, anisotropic, windowed and
+//! log-signatures of discretely sampled paths **directly in the word basis**
+//! of the tensor algebra, exactly as the paper's CUDA kernels do: Chen's
+//! relation evaluated with Horner's method over prefix-closed word sets
+//! (Algorithm 1), with a memory-minimal backward pass that reconstructs
+//! intermediate signatures backward in time (§4).
+//!
+//! ## Architecture
+//!
+//! * [`words`] — word encodings (base-`d` integers, Appendix A), word-set
+//!   generators (truncation, anisotropic §7.2, DAG-induced §7.1, Lyndon,
+//!   concatenation-generated §8) and the flat [`words::WordTable`] consumed
+//!   by every engine.
+//! * [`tensor`] — dense truncated tensor-algebra substrate (⊗, exp, log,
+//!   inverse) used by the baselines and the log-signature.
+//! * [`sig`] — the core engine: batched forward/backward signature
+//!   computation over arbitrary prefix-closed word tables, windowed
+//!   signatures (§5).
+//! * [`logsig`] — log-signatures in the Lyndon basis with the §3.3
+//!   truncated-materialisation optimisation.
+//! * [`baselines`] — faithful re-implementations of the comparator
+//!   libraries' algorithms: `chen_full` (pySigLib-style direct recursion)
+//!   and `matmul_style` (keras_sig-style parallel tensor products).
+//! * [`fbm`] — fractional Brownian motion generators (Davies–Harte /
+//!   Cholesky) for the §8 Hurst experiment.
+//! * [`nn`] — minimal dense networks + optimizers (native mirror of the §8
+//!   deep-signature model).
+//! * [`runtime`] — PJRT executable cache loading the AOT artifacts emitted
+//!   by `python/compile/aot.py` (HLO text, see DESIGN.md).
+//! * [`coordinator`] — the L3 serving layer: TCP JSON-lines feature server,
+//!   dynamic batcher, router, metrics.
+//! * [`util`] — from-scratch substrates: JSON, PRNG, FFT, thread pool,
+//!   stats, CLI parsing, property-testing mini-framework.
+//! * [`bench`] — timing harness + counting allocator used by `cargo bench`.
+
+pub mod util;
+pub mod words;
+pub mod tensor;
+pub mod sig;
+pub mod logsig;
+pub mod baselines;
+pub mod fbm;
+pub mod nn;
+pub mod runtime;
+pub mod coordinator;
+pub mod bench;
+
+/// Crate version string (mirrors `Cargo.toml`).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

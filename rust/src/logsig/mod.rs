@@ -1,0 +1,426 @@
+//! Log-signatures in the Lyndon basis (paper §3.3).
+//!
+//! `pathsig` computes the log-signature as the tensor logarithm of the
+//! signature, read off at Lyndon-word coordinates (Signatory's
+//! "computationally efficient Lie basis"). The §3.3 optimisation is the
+//! headline here: since only Lyndon coordinates of the **top** level are
+//! needed, the signature itself is computed over the reduced word set
+//!
+//! ```text
+//!   C = W_{≤N-1} ∪ Lyndon_N
+//! ```
+//!
+//! (every factor of a Lyndon word of length `N` lies in `W_{≤N-1}`, so
+//! the truncated log at those coordinates is exactly computable). The
+//! level-`N` slab dominates both work and memory (`d^N` of `D_sig`
+//! coefficients), so skipping its non-Lyndon part is where the paper's
+//! "log-signature 2–3× faster than signature" observation comes from.
+
+use crate::sig::{sig_forward_state, sig_backward, SigEngine};
+use crate::tensor::{mul_adjoint, TruncTensor};
+use crate::util::threadpool::parallel_map;
+use crate::words::{lyndon_words, truncated_words, Word, WordTable};
+
+/// Engine for Lyndon-basis log-signatures at depth `N`.
+#[derive(Clone, Debug)]
+pub struct LogSigEngine {
+    pub d: usize,
+    pub depth: usize,
+    /// Signature engine over the reduced set `W_{≤N-1} ∪ Lyndon_N`.
+    pub sig: SigEngine,
+    /// Output words: all Lyndon words of length `1..=N`, lex-ordered
+    /// within each level, level-major.
+    pub lyndon: Vec<Word>,
+    /// Positions (state indices) of the level-`N` Lyndon words in the
+    /// signature engine's state vector.
+    top_state_idx: Vec<usize>,
+    /// Positions of output Lyndon words with level `< N` inside the
+    /// dense `T_{≤N-1}` flat layout, as (level, code).
+    low_positions: Vec<(usize, usize)>,
+    /// log-series coefficients c_m = (-1)^{m+1}/m.
+    coef: Vec<f64>,
+}
+
+impl LogSigEngine {
+    pub fn new(d: usize, depth: usize) -> LogSigEngine {
+        assert!(depth >= 1);
+        // Request: dense words up to N-1 (state order) + Lyndon at N.
+        let mut request = truncated_words(d, depth - 1);
+        let top: Vec<Word> = lyndon_words(d, depth)
+            .into_iter()
+            .filter(|w| w.len() == depth)
+            .collect();
+        request.extend(top.iter().cloned());
+        let table = WordTable::build(d, &request);
+        let sig = SigEngine::new(table);
+
+        let lyndon: Vec<Word> = {
+            let mut v = lyndon_words(d, depth);
+            v.sort_by_key(|w| (w.len(), w.0.clone()));
+            v
+        };
+        let top_state_idx: Vec<usize> = top
+            .iter()
+            .map(|w| {
+                let pos = sig
+                    .table
+                    .requested
+                    .iter()
+                    .position(|r| r == w)
+                    .unwrap();
+                sig.table.output_map[pos] as usize
+            })
+            .collect();
+        let low_positions = lyndon
+            .iter()
+            .filter(|w| w.len() < depth)
+            .map(|w| {
+                (
+                    w.len(),
+                    crate::words::encode::word_code(&w.0, d) as usize,
+                )
+            })
+            .collect();
+        let coef = (0..=depth)
+            .map(|m| {
+                if m == 0 {
+                    0.0
+                } else if m % 2 == 1 {
+                    1.0 / m as f64
+                } else {
+                    -1.0 / m as f64
+                }
+            })
+            .collect();
+        LogSigEngine {
+            d,
+            depth,
+            sig,
+            lyndon,
+            top_state_idx,
+            low_positions,
+            coef,
+        }
+    }
+
+    /// Output dimension = number of Lyndon words ≤ depth (Witt sum).
+    pub fn out_dim(&self) -> usize {
+        self.lyndon.len()
+    }
+
+    /// Forward intermediates retained for the backward pass.
+    fn forward_internal(&self, path: &[f64]) -> LogSigForward {
+        let state = sig_forward_state(&self.sig, path);
+        // Dense y = S - 1 at depth N-1 (scalar part zeroed).
+        let mut y = TruncTensor::zero(self.d, self.depth - 1);
+        {
+            // Dense words occupy state indices 1..=D_{N-1} in state
+            // order (level-major, lex) — exactly the flat layout.
+            let mut k = 1;
+            for n in 1..self.depth {
+                for c in 0..self.d.pow(n as u32) {
+                    y.levels[n][c] = state[k];
+                    k += 1;
+                }
+            }
+        }
+        // Dense powers P_m = y^{⊗m}, m = 1..N-1 (depth N-1).
+        let mut powers = vec![y.clone()];
+        for _ in 2..self.depth {
+            let next = powers.last().unwrap().mul(&y);
+            powers.push(next);
+        }
+        LogSigForward { state, y, powers }
+    }
+
+    /// The log-signature in the Lyndon basis: coefficients of
+    /// `log(S_{0,T}(X))` at Lyndon words, level-major then lex.
+    pub fn logsig(&self, path: &[f64]) -> Vec<f64> {
+        let fwd = self.forward_internal(path);
+        self.outputs_from(&fwd)
+    }
+
+    fn outputs_from(&self, fwd: &LogSigForward) -> Vec<f64> {
+        let n = self.depth;
+        // Dense log at depth N-1: Σ c_m P_m.
+        let mut dense_log = TruncTensor::zero(self.d, n - 1);
+        for (m, p) in fwd.powers.iter().enumerate() {
+            let c = self.coef[m + 1];
+            for lvl in 1..n {
+                for (o, v) in dense_log.levels[lvl].iter_mut().zip(&p.levels[lvl]) {
+                    *o += c * v;
+                }
+            }
+        }
+        let mut out = Vec::with_capacity(self.out_dim());
+        for &(lvl, code) in &self.low_positions {
+            out.push(dense_log.levels[lvl][code]);
+        }
+        // Top level: log_N(w) = c_1·S_N(w) + Σ_{m=2}^{N} c_m·(y^m)_N(w),
+        // (y^m)_N(w) = Σ_{k} (y^{m-1})_k(w_[k]) · y_{N-k}(suffix_k).
+        let top_words = self.top_words();
+        let tops: Vec<f64> = parallel_map(top_words.len(), self.sig.threads, |wi| {
+            let w = &top_words[wi];
+            let s_top = fwd.state[self.top_state_idx[wi]];
+            let mut acc = self.coef[1] * s_top;
+            for m in 2..=n {
+                acc += self.coef[m] * self.power_top_coeff(&fwd.powers, &fwd.y, w, m);
+            }
+            acc
+        });
+        out.extend(tops);
+        out
+    }
+
+    /// Level-`N` Lyndon words (the top slab of the output).
+    fn top_words(&self) -> &[Word] {
+        let first_top = self
+            .lyndon
+            .iter()
+            .position(|w| w.len() == self.depth)
+            .unwrap_or(self.lyndon.len());
+        &self.lyndon[first_top..]
+    }
+
+    /// `(y^m)_N(w)` via prefix/suffix contraction of dense lower levels.
+    fn power_top_coeff(&self, powers: &[TruncTensor], y: &TruncTensor, w: &Word, m: usize) -> f64 {
+        let n = self.depth;
+        debug_assert!(m >= 2 && m <= n);
+        let mut acc = 0.0;
+        // prefix length k carries y^{m-1} (needs k ≥ m-1), suffix
+        // length n-k carries y (needs n-k ≥ 1 ⇒ k ≤ n-1).
+        for k in (m - 1).max(1)..n {
+            let pk = crate::words::encode::word_code(&w.0[..k], self.d) as usize;
+            let sk = crate::words::encode::word_code(&w.0[k..], self.d) as usize;
+            let a = powers[m - 2].levels[k][pk];
+            let b = y.levels[n - k][sk];
+            acc += a * b;
+        }
+        acc
+    }
+
+    /// Batched log-signatures: `(B, M+1, d)` → `(B, out_dim)`.
+    pub fn logsig_batch(&self, paths: &[f64], batch: usize) -> Vec<f64> {
+        let per = paths.len() / batch;
+        let rows = parallel_map(batch, self.sig.threads, |b| {
+            self.logsig(&paths[b * per..(b + 1) * per])
+        });
+        let mut out = Vec::with_capacity(batch * self.out_dim());
+        for r in rows {
+            out.extend(r);
+        }
+        out
+    }
+
+    /// Backward pass: cotangents on the Lyndon outputs → path gradient
+    /// `(M+1, d)`. Reverse-mode through the truncated log series, then
+    /// through the signature engine (§4).
+    pub fn logsig_backward(&self, path: &[f64], grad_out: &[f64]) -> Vec<f64> {
+        assert_eq!(grad_out.len(), self.out_dim());
+        let n = self.depth;
+        let fwd = self.forward_internal(path);
+
+        // --- adjoint accumulators ---
+        let mut g_y = TruncTensor::zero(self.d, n - 1);
+        let mut g_powers: Vec<TruncTensor> = (0..n - 1)
+            .map(|_| TruncTensor::zero(self.d, n - 1))
+            .collect();
+        // Gradient wrt signature state (closure layout).
+        let mut g_state = vec![0.0; fwd.state.len()];
+
+        // (1) dense Lyndon outputs: dense_log = Σ c_m P_m.
+        let n_low = self.low_positions.len();
+        for (oi, &(lvl, code)) in self.low_positions.iter().enumerate() {
+            let g = grad_out[oi];
+            for (m, gp) in g_powers.iter_mut().enumerate() {
+                gp.levels[lvl][code] += self.coef[m + 1] * g;
+            }
+        }
+        // (2) top-level outputs.
+        let top_words: Vec<Word> = self.top_words().to_vec();
+        for (wi, w) in top_words.iter().enumerate() {
+            let g = grad_out[n_low + wi];
+            if g == 0.0 {
+                continue;
+            }
+            g_state[self.top_state_idx[wi]] += self.coef[1] * g;
+            for m in 2..=n {
+                let c = self.coef[m] * g;
+                for k in (m - 1).max(1)..n {
+                    let pk = crate::words::encode::word_code(&w.0[..k], self.d) as usize;
+                    let sk = crate::words::encode::word_code(&w.0[k..], self.d) as usize;
+                    let a = fwd.powers[m - 2].levels[k][pk];
+                    let b = fwd.y.levels[n - k][sk];
+                    g_powers[m - 2].levels[k][pk] += c * b;
+                    g_y.levels[n - k][sk] += c * a;
+                }
+            }
+        }
+        // (3) reverse the power chain P_m = P_{m-1} ⊗ y.
+        for m in (2..n).rev() {
+            // C = A ⊗ B adjoint: Â(u) += Ĉ(u∘v)·B(v), B̂(v) += A(u)·Ĉ(u∘v).
+            let (head, tail) = g_powers.split_at_mut(m - 1);
+            let gc = &tail[0]; // grad of P_m (index m-1)
+            let ga = &mut head[m - 2]; // grad of P_{m-1}
+            mul_adjoint(&fwd.powers[m - 2], &fwd.y, gc, ga, &mut g_y);
+        }
+        // grad of P_1 = y flows straight into g_y.
+        if n > 1 {
+            for lvl in 1..n {
+                for (gy, gp) in g_y.levels[lvl].iter_mut().zip(&g_powers[0].levels[lvl]) {
+                    *gy += gp;
+                }
+            }
+        }
+        // (4) y = (dense part of state) - 1 ⇒ identity on levels ≥ 1.
+        {
+            let mut k = 1;
+            for lvl in 1..n {
+                for c in 0..self.d.pow(lvl as u32) {
+                    g_state[k] += g_y.levels[lvl][c];
+                    k += 1;
+                }
+            }
+        }
+        // (5) signature backward. g_state is in closure-state layout;
+        // requested order = dense words then top Lyndon words, and
+        // state indices 1.. match that order exactly.
+        let g_request: Vec<f64> = self
+            .sig
+            .table
+            .output_map
+            .iter()
+            .map(|&i| g_state[i as usize])
+            .collect();
+        sig_backward(&self.sig, path, &g_request)
+    }
+}
+
+struct LogSigForward {
+    state: Vec<f64>,
+    y: TruncTensor,
+    powers: Vec<TruncTensor>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sig::signature;
+    use crate::tensor::tensor_log_series;
+    use crate::util::proptest::assert_allclose;
+    use crate::util::rng::Rng;
+    use crate::words::lyndon::logsig_dim;
+
+    /// Oracle: full dense signature at depth N → dense tensor log →
+    /// read Lyndon coordinates.
+    fn oracle_logsig(d: usize, depth: usize, path: &[f64]) -> Vec<f64> {
+        let eng = SigEngine::new(WordTable::build(d, &truncated_words(d, depth)));
+        let flat = signature(&eng, path);
+        let mut s = TruncTensor::one(d, depth);
+        let mut k = 0;
+        for n in 1..=depth {
+            for c in 0..d.pow(n as u32) {
+                s.levels[n][c] = flat[k];
+                k += 1;
+            }
+        }
+        let log = tensor_log_series(&s);
+        let mut ly = lyndon_words(d, depth);
+        ly.sort_by_key(|w| (w.len(), w.0.clone()));
+        ly.iter().map(|w| log.coeff(&w.0)).collect()
+    }
+
+    #[test]
+    fn matches_dense_oracle() {
+        let mut rng = Rng::new(400);
+        for &(d, n, m) in &[(2, 3, 6), (3, 3, 5), (2, 5, 8), (4, 2, 10), (3, 4, 4)] {
+            let eng = LogSigEngine::new(d, n);
+            let path = rng.brownian_path(m, d, 0.5);
+            let got = eng.logsig(&path);
+            let want = oracle_logsig(d, n, &path);
+            assert_allclose(&got, &want, 1e-11, 1e-9, &format!("logsig d={d} n={n}"));
+        }
+    }
+
+    #[test]
+    fn dimension_is_witt_sum() {
+        for &(d, n) in &[(2, 4), (3, 3), (6, 3), (4, 6)] {
+            let eng = LogSigEngine::new(d, n);
+            assert_eq!(eng.out_dim(), logsig_dim(d, n), "d={d} n={n}");
+        }
+    }
+
+    #[test]
+    fn single_segment_logsig_is_increment() {
+        // log(exp(Δx)) = Δx: only level-1 Lyndon coordinates non-zero.
+        let d = 3;
+        let eng = LogSigEngine::new(d, 4);
+        let path = [0.0, 0.0, 0.0, 1.5, -0.5, 0.25];
+        let out = eng.logsig(&path);
+        assert_allclose(&out[..3], &[1.5, -0.5, 0.25], 1e-13, 1e-12, "level1");
+        assert!(out[3..].iter().all(|&x| x.abs() < 1e-12), "higher levels vanish");
+    }
+
+    #[test]
+    fn reduced_state_is_smaller_than_full() {
+        // §3.3: the engine must NOT materialise the non-Lyndon top level.
+        let d = 4;
+        let n = 5;
+        let eng = LogSigEngine::new(d, n);
+        let full_state = 1 + crate::words::generate::sig_dim(d, n);
+        assert!(eng.sig.table.state_len < full_state / 2,
+            "reduced {} vs full {}", eng.sig.table.state_len, full_state);
+    }
+
+    #[test]
+    fn gradcheck_logsig() {
+        let mut rng = Rng::new(401);
+        for &(d, n, m) in &[(2, 3, 4), (3, 2, 5), (2, 4, 3)] {
+            let eng = LogSigEngine::new(d, n);
+            let path = rng.brownian_path(m, d, 0.6);
+            let g: Vec<f64> = (0..eng.out_dim()).map(|_| rng.gaussian()).collect();
+            let got = eng.logsig_backward(&path, &g);
+            // Finite differences.
+            let mut p = path.clone();
+            let eps = 1e-5;
+            for k in 0..path.len() {
+                p[k] = path[k] + eps;
+                let up: f64 = eng.logsig(&p).iter().zip(&g).map(|(a, b)| a * b).sum();
+                p[k] = path[k] - eps;
+                let dn: f64 = eng.logsig(&p).iter().zip(&g).map(|(a, b)| a * b).sum();
+                p[k] = path[k];
+                let fd = (up - dn) / (2.0 * eps);
+                assert!(
+                    (got[k] - fd).abs() < 1e-5 * (1.0 + fd.abs()),
+                    "d={d} n={n} coord {k}: got {} fd {}",
+                    got[k],
+                    fd
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn batch_matches_single() {
+        let mut rng = Rng::new(402);
+        let eng = LogSigEngine::new(2, 3);
+        let m = 7;
+        let b = 3;
+        let mut paths = Vec::new();
+        for _ in 0..b {
+            paths.extend(rng.brownian_path(m, 2, 1.0));
+        }
+        let all = eng.logsig_batch(&paths, b);
+        let per = (m + 1) * 2;
+        for k in 0..b {
+            let single = eng.logsig(&paths[k * per..(k + 1) * per]);
+            assert_allclose(
+                &all[k * eng.out_dim()..(k + 1) * eng.out_dim()],
+                &single,
+                0.0,
+                0.0,
+                "row",
+            );
+        }
+    }
+}

@@ -1,0 +1,271 @@
+//! pathsig CLI — L3 entrypoint.
+//!
+//! ```text
+//! pathsig serve        [--addr 127.0.0.1:7717] [--artifacts artifacts/]
+//!                      [--max-batch 32] [--max-wait-ms 2]
+//! pathsig compute      --dim D --depth N [--steps M] [--seed S]
+//!                      [--projection trunc|lyndon] [--json]
+//! pathsig logsig       --dim D --depth N [--steps M] [--seed S]
+//! pathsig windows      --dim D --depth N --steps M --win-len L --stride S
+//! pathsig gen-fbm      --dim D --steps M --hurst H [--seed S] [--out f.json]
+//! pathsig train-hurst  [--epochs E] [--train N] [--val N] [--variant trunc|sparse|fnn]
+//! pathsig info         [--artifacts artifacts/]
+//! ```
+
+use pathsig::coordinator::{serve, BatcherConfig, ServerConfig, SigService};
+use pathsig::fbm::{fbm_dataset, FbmMethod};
+use pathsig::logsig::LogSigEngine;
+use pathsig::runtime::Runtime;
+use pathsig::sig::{signature, sliding_windows, SigEngine};
+use pathsig::util::cli::Args;
+use pathsig::util::json::Json;
+use pathsig::util::rng::Rng;
+use pathsig::words::{lyndon_words, truncated_words, WordTable};
+use std::path::Path;
+use std::sync::Arc;
+
+fn main() {
+    let args = Args::from_env();
+    let code = match args.command.as_deref() {
+        Some("serve") => cmd_serve(&args),
+        Some("compute") => cmd_compute(&args),
+        Some("logsig") => cmd_logsig(&args),
+        Some("windows") => cmd_windows(&args),
+        Some("gen-fbm") => cmd_gen_fbm(&args),
+        Some("train-hurst") => cmd_train_hurst(&args),
+        Some("info") => cmd_info(&args),
+        _ => {
+            eprintln!("pathsig {} — path signatures, word-basis engine + PJRT runtime", pathsig::VERSION);
+            eprintln!("commands: serve | compute | logsig | windows | gen-fbm | train-hurst | info");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn load_runtime(args: &Args) -> Option<Arc<Runtime>> {
+    let dir = args.str_or("artifacts", "artifacts");
+    match Runtime::new(Path::new(dir)) {
+        Ok(rt) => {
+            eprintln!(
+                "[pathsig] PJRT runtime up ({}, {} artifacts)",
+                rt.platform(),
+                rt.manifest.entries.len()
+            );
+            Some(Arc::new(rt))
+        }
+        Err(e) => {
+            eprintln!("[pathsig] no PJRT artifacts ({e}); native engine only");
+            None
+        }
+    }
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    let runtime = load_runtime(args);
+    let service = Arc::new(SigService::new(runtime));
+    let config = ServerConfig {
+        addr: args.str_or("addr", "127.0.0.1:7717").to_string(),
+        batcher: BatcherConfig {
+            max_batch: args.usize("max-batch", 32),
+            max_wait: std::time::Duration::from_millis(args.u64("max-wait-ms", 2)),
+        },
+    };
+    match serve(service, config) {
+        Ok(handle) => {
+            println!("pathsig feature server listening on {}", handle.addr);
+            // Keep running until killed.
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(3600));
+            }
+        }
+        Err(e) => {
+            eprintln!("failed to bind: {e}");
+            1
+        }
+    }
+}
+
+fn demo_path(args: &Args, d: usize) -> Vec<f64> {
+    let steps = args.usize("steps", 64);
+    let mut rng = Rng::new(args.u64("seed", 42));
+    rng.brownian_path(steps, d, 1.0 / (steps as f64).sqrt())
+}
+
+fn cmd_compute(args: &Args) -> i32 {
+    let d = args.usize("dim", 2);
+    let n = args.usize("depth", 3);
+    let path = demo_path(args, d);
+    let words = match args.str_or("projection", "trunc") {
+        "lyndon" => lyndon_words(d, n),
+        _ => truncated_words(d, n),
+    };
+    let eng = SigEngine::new(WordTable::build(d, &words));
+    let sig = signature(&eng, &path);
+    if args.flag("json") {
+        println!(
+            "{}",
+            Json::obj(vec![
+                ("dim", Json::Num(d as f64)),
+                ("depth", Json::Num(n as f64)),
+                ("signature", Json::arr_f64(&sig)),
+            ])
+            .to_string()
+        );
+    } else {
+        println!("signature of a random path (d={d}, N={n}, {} coords):", sig.len());
+        for (w, v) in eng.table.requested.iter().zip(&sig).take(args.usize("show", 12)) {
+            println!("  S({:<12}) = {v:+.6}", w.pretty());
+        }
+        if sig.len() > args.usize("show", 12) {
+            println!("  … ({} more)", sig.len() - args.usize("show", 12));
+        }
+    }
+    0
+}
+
+fn cmd_logsig(args: &Args) -> i32 {
+    let d = args.usize("dim", 2);
+    let n = args.usize("depth", 3);
+    let path = demo_path(args, d);
+    let eng = LogSigEngine::new(d, n);
+    let out = eng.logsig(&path);
+    println!("log-signature (Lyndon basis, d={d}, N={n}, {} coords):", out.len());
+    for (w, v) in eng.lyndon.iter().zip(&out).take(args.usize("show", 12)) {
+        println!("  logS({:<12}) = {v:+.6}", w.pretty());
+    }
+    0
+}
+
+fn cmd_windows(args: &Args) -> i32 {
+    let d = args.usize("dim", 2);
+    let n = args.usize("depth", 2);
+    let path = demo_path(args, d);
+    let m1 = path.len() / d;
+    let wins = sliding_windows(m1, args.usize("win-len", 16), args.usize("stride", 8));
+    let eng = SigEngine::new(WordTable::build(d, &truncated_words(d, n)));
+    let out = pathsig::sig::windowed_signatures(&eng, &path, &wins);
+    println!(
+        "{} sliding windows (len {}, stride {}), {} features each",
+        wins.len(),
+        args.usize("win-len", 16),
+        args.usize("stride", 8),
+        eng.out_dim()
+    );
+    for (k, w) in wins.iter().enumerate().take(args.usize("show", 6)) {
+        let row = &out[k * eng.out_dim()..(k + 1) * eng.out_dim()];
+        println!("  [{:>3}, {:>3})  ‖S‖₁ = {:.4}", w.l, w.r, row.iter().map(|x| x.abs()).sum::<f64>());
+    }
+    0
+}
+
+fn cmd_gen_fbm(args: &Args) -> i32 {
+    let d = args.usize("dim", 1);
+    let steps = args.usize("steps", 250);
+    let h = args.f64("hurst", 0.5);
+    let mut rng = Rng::new(args.u64("seed", 1));
+    let path = pathsig::fbm::fbm_path(&mut rng, steps, d, h, FbmMethod::DaviesHarte);
+    let j = Json::obj(vec![
+        ("dim", Json::Num(d as f64)),
+        ("steps", Json::Num(steps as f64)),
+        ("hurst", Json::Num(h)),
+        ("path", Json::arr_f64(&path)),
+    ]);
+    match args.get("out") {
+        Some(f) => {
+            if let Err(e) = std::fs::write(f, j.to_string()) {
+                eprintln!("write failed: {e}");
+                return 1;
+            }
+            println!("wrote {} points to {f}", steps + 1);
+        }
+        None => println!("{}", j.to_string()),
+    }
+    0
+}
+
+fn cmd_train_hurst(args: &Args) -> i32 {
+    use pathsig::nn::{DeepSigModel, DeepSigSpec, Mlp};
+    use pathsig::words::generate::{concat_generated_words, sparse_leadlag_generators};
+    let dim = args.usize("dim", 5);
+    let steps = args.usize("steps", 64);
+    let depth = args.usize("depth", 3);
+    let n_train = args.usize("train", 512);
+    let n_val = args.usize("val", 128);
+    let epochs = args.usize("epochs", 10);
+    let batch = args.usize("batch", 32);
+    let lr = args.f64("lr", 1e-3);
+    let variant = args.str_or("variant", "sparse").to_string();
+    let mut rng = Rng::new(args.u64("seed", 7));
+
+    eprintln!("[train-hurst] generating {n_train}+{n_val} fBM paths (dim {dim}, {steps} steps)…");
+    let (train_x, train_y) = fbm_dataset(&mut rng, n_train, steps, dim, 0.25, 0.75);
+    let (val_x, val_y) = fbm_dataset(&mut rng, n_val, steps, dim, 0.25, 0.75);
+    let per = (steps + 1) * dim;
+
+    if variant == "fnn" {
+        let mut mlp = Mlp::new(&mut rng, &[per, 128, 64, 1]);
+        let mut t = 0;
+        for epoch in 1..=epochs {
+            let mut loss_acc = 0.0;
+            let nb = n_train / batch;
+            for bi in 0..nb {
+                t += 1;
+                let xs = &train_x[bi * batch * per..(bi + 1) * batch * per];
+                let ys = &train_y[bi * batch..(bi + 1) * batch];
+                loss_acc += mlp.train_step(xs, ys, batch, lr, t);
+            }
+            let val_pred = mlp.forward(&val_x, n_val);
+            let val_mse = pathsig::nn::mse_loss(&val_pred, &val_y).0;
+            println!("epoch {epoch:>3}  train {:.5}  val {val_mse:.5}", loss_acc / nb as f64);
+        }
+        return 0;
+    }
+
+    let words = if variant == "sparse" {
+        concat_generated_words(2 * dim, depth, &sparse_leadlag_generators(dim))
+    } else {
+        truncated_words(2 * dim, depth)
+    };
+    eprintln!(
+        "[train-hurst] variant {variant}: {} signature features (depth {depth})",
+        words.len()
+    );
+    let spec = DeepSigSpec {
+        dim,
+        words,
+        hidden: vec![64],
+        lr,
+    };
+    let mut model = DeepSigModel::new(&mut rng, spec);
+    for epoch in 1..=epochs {
+        let mut loss_acc = 0.0;
+        let nb = n_train / batch;
+        for bi in 0..nb {
+            let xs = &train_x[bi * batch * per..(bi + 1) * batch * per];
+            let ys = &train_y[bi * batch..(bi + 1) * batch];
+            loss_acc += model.train_step(xs, ys, batch);
+        }
+        let val_mse = model.mse(&val_x, &val_y, n_val);
+        println!("epoch {epoch:>3}  train {:.5}  val {val_mse:.5}", loss_acc / nb as f64);
+    }
+    0
+}
+
+fn cmd_info(args: &Args) -> i32 {
+    println!("pathsig {}", pathsig::VERSION);
+    println!("threads available: {:?}", std::thread::available_parallelism());
+    if let Some(rt) = load_runtime(args) {
+        println!("PJRT platform: {}", rt.platform());
+        for e in &rt.manifest.entries {
+            println!(
+                "  artifact {:<36} kind {:<12} in {:?} out {:?}",
+                e.name,
+                e.kind,
+                e.inputs.iter().map(|s| s.shape.clone()).collect::<Vec<_>>(),
+                e.outputs.iter().map(|s| s.shape.clone()).collect::<Vec<_>>()
+            );
+        }
+    }
+    0
+}

@@ -1,0 +1,330 @@
+//! Minimal dense neural-network substrate — the native mirror of the §8
+//! deep-signature model.
+//!
+//! Provides exactly what the Hurst experiment needs: dense layers with
+//! bias, ReLU/Tanh, MSE loss, SGD and Adam, and a `DeepSigModel` that
+//! composes a learnable per-timestep channel map `φ_θ`, the signature
+//! layer (with the §4 backward), and a dense head:
+//!
+//! ```text
+//!   X (B,M+1,d) → φ_θ pointwise → lead–lag'd path → π_I(S(·)) → MLP → Ĥ
+//! ```
+//!
+//! (The AOT/JAX twin of this model lives in `python/compile/model.py`
+//! and is executed from Rust via [`crate::runtime`]; this native version
+//! powers `benches/fig4_hurst.rs` and server-side inference.)
+
+pub mod deepsig;
+
+pub use deepsig::{DeepSigModel, DeepSigSpec};
+
+use crate::util::rng::Rng;
+
+/// A dense layer `y = W x + b` with row-major `W (out, in)`.
+#[derive(Clone, Debug)]
+pub struct Linear {
+    pub w: Vec<f64>,
+    pub b: Vec<f64>,
+    pub n_in: usize,
+    pub n_out: usize,
+    // Adam state.
+    mw: Vec<f64>,
+    vw: Vec<f64>,
+    mb: Vec<f64>,
+    vb: Vec<f64>,
+}
+
+impl Linear {
+    /// He-uniform initialisation.
+    pub fn new(rng: &mut Rng, n_in: usize, n_out: usize) -> Linear {
+        let bound = (6.0 / n_in as f64).sqrt();
+        let w = (0..n_in * n_out)
+            .map(|_| rng.uniform_in(-bound, bound))
+            .collect();
+        Linear {
+            w,
+            b: vec![0.0; n_out],
+            n_in,
+            n_out,
+            mw: vec![0.0; n_in * n_out],
+            vw: vec![0.0; n_in * n_out],
+            mb: vec![0.0; n_out],
+            vb: vec![0.0; n_out],
+        }
+    }
+
+    /// Forward for a batch: `x (B, n_in)` → `y (B, n_out)`.
+    pub fn forward(&self, x: &[f64], batch: usize) -> Vec<f64> {
+        let mut y = vec![0.0; batch * self.n_out];
+        for b in 0..batch {
+            let xr = &x[b * self.n_in..(b + 1) * self.n_in];
+            let yr = &mut y[b * self.n_out..(b + 1) * self.n_out];
+            for o in 0..self.n_out {
+                let row = &self.w[o * self.n_in..(o + 1) * self.n_in];
+                let mut acc = self.b[o];
+                for (wi, xi) in row.iter().zip(xr) {
+                    acc += wi * xi;
+                }
+                yr[o] = acc;
+            }
+        }
+        y
+    }
+
+    /// Backward: given `gy (B, n_out)` and the stored input `x`,
+    /// accumulate weight grads and return `gx (B, n_in)`.
+    pub fn backward(
+        &self,
+        x: &[f64],
+        gy: &[f64],
+        batch: usize,
+        gw: &mut [f64],
+        gb: &mut [f64],
+    ) -> Vec<f64> {
+        let mut gx = vec![0.0; batch * self.n_in];
+        for b in 0..batch {
+            let xr = &x[b * self.n_in..(b + 1) * self.n_in];
+            let gyr = &gy[b * self.n_out..(b + 1) * self.n_out];
+            let gxr = &mut gx[b * self.n_in..(b + 1) * self.n_in];
+            for o in 0..self.n_out {
+                let g = gyr[o];
+                if g == 0.0 {
+                    continue;
+                }
+                gb[o] += g;
+                let row = &self.w[o * self.n_in..(o + 1) * self.n_in];
+                let grow = &mut gw[o * self.n_in..(o + 1) * self.n_in];
+                for i in 0..self.n_in {
+                    grow[i] += g * xr[i];
+                    gxr[i] += g * row[i];
+                }
+            }
+        }
+        gx
+    }
+
+    /// Adam update (β1=0.9, β2=0.999, eps=1e-8), step count `t ≥ 1`.
+    pub fn adam_step(&mut self, gw: &[f64], gb: &[f64], lr: f64, t: usize) {
+        adam_update(&mut self.w, &mut self.mw, &mut self.vw, gw, lr, t);
+        adam_update(&mut self.b, &mut self.mb, &mut self.vb, gb, lr, t);
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.w.len() + self.b.len()
+    }
+}
+
+pub(crate) fn adam_update(
+    p: &mut [f64],
+    m: &mut [f64],
+    v: &mut [f64],
+    g: &[f64],
+    lr: f64,
+    t: usize,
+) {
+    let (b1, b2, eps): (f64, f64, f64) = (0.9, 0.999, 1e-8);
+    let bc1 = 1.0 - b1.powi(t as i32);
+    let bc2 = 1.0 - b2.powi(t as i32);
+    for i in 0..p.len() {
+        m[i] = b1 * m[i] + (1.0 - b1) * g[i];
+        v[i] = b2 * v[i] + (1.0 - b2) * g[i] * g[i];
+        p[i] -= lr * (m[i] / bc1) / ((v[i] / bc2).sqrt() + eps);
+    }
+}
+
+/// ReLU forward (in place) returning a mask for the backward pass.
+pub fn relu(x: &mut [f64]) -> Vec<bool> {
+    x.iter_mut()
+        .map(|v| {
+            if *v > 0.0 {
+                true
+            } else {
+                *v = 0.0;
+                false
+            }
+        })
+        .collect()
+}
+
+/// ReLU backward: zero the gradient where the mask is false.
+pub fn relu_backward(g: &mut [f64], mask: &[bool]) {
+    for (gv, &m) in g.iter_mut().zip(mask) {
+        if !m {
+            *gv = 0.0;
+        }
+    }
+}
+
+/// Mean-squared error and its gradient wrt predictions:
+/// `L = mean((pred - target)²)`, `∂L/∂pred = 2(pred - target)/B`.
+pub fn mse_loss(pred: &[f64], target: &[f64]) -> (f64, Vec<f64>) {
+    assert_eq!(pred.len(), target.len());
+    let n = pred.len() as f64;
+    let mut loss = 0.0;
+    let grad = pred
+        .iter()
+        .zip(target)
+        .map(|(p, t)| {
+            let e = p - t;
+            loss += e * e;
+            2.0 * e / n
+        })
+        .collect();
+    (loss / n, grad)
+}
+
+/// A plain MLP with ReLU hidden activations (the §8 FNN baseline).
+#[derive(Clone, Debug)]
+pub struct Mlp {
+    pub layers: Vec<Linear>,
+}
+
+impl Mlp {
+    pub fn new(rng: &mut Rng, sizes: &[usize]) -> Mlp {
+        assert!(sizes.len() >= 2);
+        let layers = sizes
+            .windows(2)
+            .map(|p| Linear::new(rng, p[0], p[1]))
+            .collect();
+        Mlp { layers }
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.layers.iter().map(|l| l.n_params()).sum()
+    }
+
+    pub fn forward(&self, x: &[f64], batch: usize) -> Vec<f64> {
+        let (y, _) = self.forward_cached(x, batch);
+        y
+    }
+
+    /// Forward keeping activations for backward.
+    pub fn forward_cached(&self, x: &[f64], batch: usize) -> (Vec<f64>, MlpCache) {
+        let mut cache = MlpCache::default();
+        let mut cur = x.to_vec();
+        for (li, layer) in self.layers.iter().enumerate() {
+            cache.inputs.push(cur.clone());
+            let mut y = layer.forward(&cur, batch);
+            if li + 1 < self.layers.len() {
+                cache.masks.push(relu(&mut y));
+            }
+            cur = y;
+        }
+        (cur, cache)
+    }
+
+    /// One Adam training step on (x, target); returns the loss.
+    pub fn train_step(&mut self, x: &[f64], target: &[f64], batch: usize, lr: f64, t: usize) -> f64 {
+        let (pred, cache) = self.forward_cached(x, batch);
+        let (loss, gpred) = mse_loss(&pred, target);
+        let mut g = gpred;
+        let mut grads: Vec<(Vec<f64>, Vec<f64>)> = self
+            .layers
+            .iter()
+            .map(|l| (vec![0.0; l.w.len()], vec![0.0; l.b.len()]))
+            .collect();
+        for li in (0..self.layers.len()).rev() {
+            if li + 1 < self.layers.len() {
+                relu_backward(&mut g, &cache.masks[li]);
+            }
+            let (gw, gb) = &mut grads[li];
+            g = self.layers[li].backward(&cache.inputs[li], &g, batch, gw, gb);
+        }
+        for (li, (gw, gb)) in grads.iter().enumerate() {
+            self.layers[li].adam_step(gw, gb, lr, t);
+        }
+        loss
+    }
+}
+
+#[derive(Default)]
+pub struct MlpCache {
+    inputs: Vec<Vec<f64>>,
+    masks: Vec<Vec<bool>>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_forward_shape() {
+        let mut rng = Rng::new(700);
+        let l = Linear::new(&mut rng, 3, 2);
+        let y = l.forward(&[1.0, 0.0, -1.0, 0.5, 0.5, 0.5], 2);
+        assert_eq!(y.len(), 4);
+    }
+
+    #[test]
+    fn linear_gradcheck() {
+        let mut rng = Rng::new(701);
+        let l = Linear::new(&mut rng, 4, 3);
+        let x: Vec<f64> = (0..8).map(|_| rng.gaussian()).collect();
+        let gy: Vec<f64> = (0..6).map(|_| rng.gaussian()).collect();
+        let mut gw = vec![0.0; 12];
+        let mut gb = vec![0.0; 3];
+        let gx = l.backward(&x, &gy, 2, &mut gw, &mut gb);
+        // FD check on a few weight coords.
+        let f = |l: &Linear| -> f64 {
+            l.forward(&x, 2).iter().zip(&gy).map(|(a, b)| a * b).sum()
+        };
+        let eps = 1e-6;
+        for &k in &[0usize, 5, 11] {
+            let mut lp = l.clone();
+            lp.w[k] += eps;
+            let mut lm = l.clone();
+            lm.w[k] -= eps;
+            let fd = (f(&lp) - f(&lm)) / (2.0 * eps);
+            assert!((gw[k] - fd).abs() < 1e-6, "gw[{k}]: {} vs {fd}", gw[k]);
+        }
+        // FD on an input coord.
+        let mut xp = x.clone();
+        xp[2] += eps;
+        let mut xm = x.clone();
+        xm[2] -= eps;
+        let fp: f64 = l.forward(&xp, 2).iter().zip(&gy).map(|(a, b)| a * b).sum();
+        let fm: f64 = l.forward(&xm, 2).iter().zip(&gy).map(|(a, b)| a * b).sum();
+        let fd = (fp - fm) / (2.0 * eps);
+        assert!((gx[2] - fd).abs() < 1e-6);
+    }
+
+    #[test]
+    fn mse_basics() {
+        let (loss, grad) = mse_loss(&[1.0, 2.0], &[0.0, 2.0]);
+        assert!((loss - 0.5).abs() < 1e-12);
+        assert!((grad[0] - 1.0).abs() < 1e-12);
+        assert_eq!(grad[1], 0.0);
+    }
+
+    #[test]
+    fn mlp_learns_linear_function() {
+        let mut rng = Rng::new(702);
+        let mut mlp = Mlp::new(&mut rng, &[2, 16, 1]);
+        // Fit y = 3x0 - x1.
+        let mut losses = Vec::new();
+        for t in 1..=400 {
+            let batch = 32;
+            let mut x = Vec::new();
+            let mut y = Vec::new();
+            for _ in 0..batch {
+                let (a, b) = (rng.gaussian(), rng.gaussian());
+                x.extend([a, b]);
+                y.push(3.0 * a - b);
+            }
+            losses.push(mlp.train_step(&x, &y, batch, 3e-3, t));
+        }
+        let early: f64 = losses[..20].iter().sum::<f64>() / 20.0;
+        let late: f64 = losses[380..].iter().sum::<f64>() / 20.0;
+        assert!(late < early * 0.1, "early {early}, late {late}");
+    }
+
+    #[test]
+    fn relu_mask_roundtrip() {
+        let mut x = vec![1.0, -2.0, 0.5];
+        let mask = relu(&mut x);
+        assert_eq!(x, vec![1.0, 0.0, 0.5]);
+        let mut g = vec![1.0, 1.0, 1.0];
+        relu_backward(&mut g, &mask);
+        assert_eq!(g, vec![1.0, 0.0, 1.0]);
+    }
+}

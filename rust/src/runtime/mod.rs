@@ -1,0 +1,387 @@
+//! PJRT runtime — loads and executes the AOT artifacts emitted by
+//! `python/compile/aot.py`.
+//!
+//! The interchange format is **HLO text** (`artifacts/*.hlo.txt`): the
+//! image's xla_extension 0.5.1 rejects jax ≥ 0.5 serialized
+//! `HloModuleProto`s (64-bit instruction ids), while the text parser
+//! reassigns ids and round-trips cleanly (see `/opt/xla-example` and
+//! DESIGN.md). Each artifact is described by `artifacts/manifest.json`;
+//! executables are compiled once on first use and cached.
+//!
+//! Python never runs on this path — the Rust binary is self-contained
+//! once `make artifacts` has produced the files.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// Shape + dtype of one artifact input/output.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        Ok(TensorSpec {
+            shape: j.usize_vec("shape"),
+            dtype: j.get("dtype").as_str().unwrap_or("f32").to_string(),
+        })
+    }
+}
+
+/// One manifest entry (a compiled computation).
+#[derive(Clone, Debug)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub file: String,
+    /// Kind tag, e.g. `sig_fwd`, `sig_vjp`, `logsig_fwd`, `train_step`,
+    /// `predict`, `windowed`.
+    pub kind: String,
+    /// Free-form metadata (batch/steps/dim/depth/wordset…).
+    pub meta: Json,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Parsed `manifest.json`.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub entries: Vec<ManifestEntry>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("parsing manifest: {e}"))?;
+        let mut entries = Vec::new();
+        for e in j.get("entries").as_arr().unwrap_or(&[]) {
+            let inputs = e
+                .get("inputs")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = e
+                .get("outputs")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            entries.push(ManifestEntry {
+                name: e
+                    .get("name")
+                    .as_str()
+                    .ok_or_else(|| anyhow!("entry missing name"))?
+                    .to_string(),
+                file: e
+                    .get("file")
+                    .as_str()
+                    .ok_or_else(|| anyhow!("entry missing file"))?
+                    .to_string(),
+                kind: e.get("kind").as_str().unwrap_or("").to_string(),
+                meta: e.get("meta").clone(),
+                inputs,
+                outputs,
+            });
+        }
+        Ok(Manifest {
+            entries,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ManifestEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// Entries of a given kind.
+    pub fn by_kind(&self, kind: &str) -> Vec<&ManifestEntry> {
+        self.entries.iter().filter(|e| e.kind == kind).collect()
+    }
+}
+
+/// PJRT client + compiled-executable cache. **Not `Send`** — the `xla`
+/// crate's wrappers are `Rc`-based — so the shared-server entry point is
+/// [`Runtime`] (a channel handle to a dedicated executor thread); this
+/// inner type is what that thread owns. Single-threaded binaries
+/// (examples, benches) may use it directly.
+pub struct RuntimeInner {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl RuntimeInner {
+    /// Create a CPU-PJRT runtime over an artifact directory.
+    pub fn new(artifacts_dir: &Path) -> Result<RuntimeInner> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(RuntimeInner {
+            manifest,
+            client,
+            cache: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (and cache) an artifact by manifest name.
+    pub fn ensure_compiled(&mut self, name: &str) -> Result<()> {
+        if self.cache.contains_key(name) {
+            return Ok(());
+        }
+        let entry = self
+            .manifest
+            .find(name)
+            .ok_or_else(|| anyhow!("no artifact named '{name}' in manifest"))?
+            .clone();
+        let path = self.manifest.dir.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("loading {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        self.cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact on `f32` inputs. Inputs are validated against
+    /// the manifest specs; outputs come back as flat `f32` vectors in
+    /// manifest order (the AOT path lowers with `return_tuple=True`).
+    pub fn run_f32(&mut self, name: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        let entry = self
+            .manifest
+            .find(name)
+            .ok_or_else(|| anyhow!("no artifact named '{name}'"))?
+            .clone();
+        if inputs.len() != entry.inputs.len() {
+            bail!(
+                "{name}: expected {} inputs, got {}",
+                entry.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (k, (data, spec)) in inputs.iter().zip(&entry.inputs).enumerate() {
+            if data.len() != spec.numel() {
+                bail!(
+                    "{name} input {k}: expected {} elements (shape {:?}), got {}",
+                    spec.numel(),
+                    spec.shape,
+                    data.len()
+                );
+            }
+            let dims: Vec<i64> = spec.shape.iter().map(|&s| s as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims)
+                .map_err(|e| anyhow!("reshape input {k}: {e:?}"))?;
+            literals.push(lit);
+        }
+        self.ensure_compiled(name)?;
+        let exe = self.cache.get(name).unwrap();
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result: {e:?}"))?;
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| anyhow!("untupling result: {e:?}"))?;
+        if parts.len() != entry.outputs.len() {
+            bail!(
+                "{name}: manifest promises {} outputs, executable returned {}",
+                entry.outputs.len(),
+                parts.len()
+            );
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (k, (p, spec)) in parts.iter().zip(&entry.outputs).enumerate() {
+            let v = p
+                .to_vec::<f32>()
+                .map_err(|e| anyhow!("output {k} to_vec: {e:?}"))?;
+            if v.len() != spec.numel() {
+                bail!(
+                    "{name} output {k}: expected {} elements, got {}",
+                    spec.numel(),
+                    v.len()
+                );
+            }
+            out.push(v);
+        }
+        Ok(out)
+    }
+}
+
+// ------------------------------------------------------------------
+// Thread-confined runtime handle
+// ------------------------------------------------------------------
+
+enum RtMsg {
+    Run {
+        name: String,
+        inputs: Vec<Vec<f32>>,
+        reply: std::sync::mpsc::Sender<Result<Vec<Vec<f32>>>>,
+    },
+    Warm {
+        name: String,
+        reply: std::sync::mpsc::Sender<Result<()>>,
+    },
+    Shutdown,
+}
+
+/// `Send + Sync` handle to a PJRT runtime living on its own executor
+/// thread. All PJRT calls are serialized through a channel — the CPU
+/// client runs its own intra-op thread pool, so one dispatcher thread is
+/// not a throughput bottleneck; it just provides the `Send` boundary the
+/// `Rc`-based wrappers need.
+pub struct Runtime {
+    pub manifest: Manifest,
+    platform: String,
+    tx: Mutex<std::sync::mpsc::Sender<RtMsg>>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Runtime {
+    /// Spawn the executor thread over an artifact directory.
+    pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
+        let dir = artifacts_dir.to_path_buf();
+        let (tx, rx) = std::sync::mpsc::channel::<RtMsg>();
+        let (init_tx, init_rx) = std::sync::mpsc::channel::<Result<(Manifest, String)>>();
+        let thread = std::thread::spawn(move || {
+            let mut inner = match RuntimeInner::new(&dir) {
+                Ok(i) => {
+                    let _ = init_tx.send(Ok((i.manifest.clone(), i.platform())));
+                    i
+                }
+                Err(e) => {
+                    let _ = init_tx.send(Err(e));
+                    return;
+                }
+            };
+            while let Ok(msg) = rx.recv() {
+                match msg {
+                    RtMsg::Run {
+                        name,
+                        inputs,
+                        reply,
+                    } => {
+                        let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+                        let _ = reply.send(inner.run_f32(&name, &refs));
+                    }
+                    RtMsg::Warm { name, reply } => {
+                        let _ = reply.send(inner.ensure_compiled(&name));
+                    }
+                    RtMsg::Shutdown => break,
+                }
+            }
+        });
+        let (manifest, platform) = init_rx
+            .recv()
+            .map_err(|_| anyhow!("runtime thread died during init"))??;
+        Ok(Runtime {
+            manifest,
+            platform,
+            tx: Mutex::new(tx),
+            thread: Some(thread),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.platform.clone()
+    }
+
+    /// Pre-compile an artifact (e.g. at server start).
+    pub fn warm(&self, name: &str) -> Result<()> {
+        let (reply, rx) = std::sync::mpsc::channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(RtMsg::Warm {
+                name: name.to_string(),
+                reply,
+            })
+            .map_err(|_| anyhow!("runtime thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("runtime thread gone"))?
+    }
+
+    /// Execute an artifact (see [`RuntimeInner::run_f32`]).
+    pub fn run_f32(&self, name: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        let (reply, rx) = std::sync::mpsc::channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(RtMsg::Run {
+                name: name.to_string(),
+                inputs: inputs.iter().map(|s| s.to_vec()).collect(),
+                reply,
+            })
+            .map_err(|_| anyhow!("runtime thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("runtime thread gone"))?
+    }
+}
+
+impl Drop for Runtime {
+    fn drop(&mut self) {
+        let _ = self.tx.lock().unwrap().send(RtMsg::Shutdown);
+        if let Some(h) = self.thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses() {
+        let dir = std::env::temp_dir().join(format!("pathsig_manifest_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"version": 1, "entries": [
+                {"name": "sig_fwd_a", "file": "a.hlo.txt", "kind": "sig_fwd",
+                 "meta": {"depth": 3, "dim": 2},
+                 "inputs": [{"shape": [4, 17, 2], "dtype": "f32"}],
+                 "outputs": [{"shape": [4, 14], "dtype": "f32"}]}
+            ]}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.entries.len(), 1);
+        let e = m.find("sig_fwd_a").unwrap();
+        assert_eq!(e.kind, "sig_fwd");
+        assert_eq!(e.inputs[0].numel(), 4 * 17 * 2);
+        assert_eq!(e.meta.get("depth").as_usize(), Some(3));
+        assert!(m.find("nope").is_none());
+        assert_eq!(m.by_kind("sig_fwd").len(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_errors() {
+        let dir = std::env::temp_dir().join("pathsig_definitely_missing_dir_xyz");
+        assert!(Manifest::load(&dir).is_err());
+    }
+}

@@ -1,0 +1,333 @@
+//! Backward pass — §4 of the paper, memory-minimal form.
+//!
+//! Given output cotangents `∂L/∂S_{0,T}(X,w)` for `w ∈ I`, produce
+//! `∂L/∂X_j^{(i)}` while storing **only the terminal signature** from the
+//! forward pass. Intermediate signatures are reconstructed backward in
+//! time with the group inverse (Prop 4.6: `S_{0,t_{j-1}} = S_{0,t_j} ⊗
+//! exp(-ΔX_j)`), and the cotangent state `λ` is propagated by the exact
+//! transpose of the forward Chen update.
+//!
+//! Derivation used here (equivalent to Prop 4.1/4.2; see DESIGN.md):
+//! the forward step `S_j(w) = Σ_{w=p∘s} S_{j-1}(p)·exp(ΔX_j, s)` is
+//! *linear* in `S_{j-1}`, so reverse-mode gives
+//!
+//! ```text
+//! λ_{j-1}(p)      = Σ_{w=p∘s ∈ C} λ_j(w)·exp(ΔX_j, s)        (transpose)
+//! ∂L/∂ΔX_j^{(i)}  = Σ_w λ_j(w) Σ_{w=p∘s} S_{j-1}(p)·∂exp(ΔX_j, s)/∂ΔX^{(i)}
+//! ```
+//!
+//! Both sums run over prefix decompositions of words in the closure `C`,
+//! so the prefix tables of [`crate::words::WordTable`] suffice — no
+//! suffix indices are needed. Per word of length `n`, the ΔX-gradient is
+//! accumulated in `O(n)` via a left-to-right Horner sweep (`A_p`) against
+//! precomputed right suffix products (`R_p`):
+//! `∂/∂ΔX^{(i_p)} += λ(w)·A_p·R_p` with
+//! `A_{p+1} = A_p·ΔX^{(i_p)} + S_{j-1}(w_[p])/(n-p)!`.
+
+use super::{chen_update, sig_forward_state, SigEngine};
+use crate::util::threadpool::parallel_map;
+
+/// Reusable buffers for a single-path backward pass.
+#[derive(Debug, Default)]
+pub struct BackwardWorkspace {
+    state: Vec<f64>,
+    lambda: Vec<f64>,
+    lambda_next: Vec<f64>,
+    dx: Vec<f64>,
+    neg_dx: Vec<f64>,
+    right_prod: Vec<f64>,
+    grad_dx: Vec<f64>,
+}
+
+/// Gradient of `L` with respect to the path points, for a single path.
+///
+/// * `path` — row-major `(M+1, d)`.
+/// * `grad_out` — `∂L/∂(projected signature)`, length `|I|`.
+///
+/// Returns `∂L/∂X` as row-major `(M+1, d)`. Memory: `O(|C|)` plus the
+/// path itself — the paper's `O(B·D_sig)` claim (Table 2) with `B = 1`.
+pub fn sig_backward(eng: &SigEngine, path: &[f64], grad_out: &[f64]) -> Vec<f64> {
+    let mut ws = BackwardWorkspace::default();
+    sig_backward_ws(eng, path, grad_out, &mut ws)
+}
+
+/// [`sig_backward`] with caller-provided workspace (hot path).
+pub fn sig_backward_ws(
+    eng: &SigEngine,
+    path: &[f64],
+    grad_out: &[f64],
+    ws: &mut BackwardWorkspace,
+) -> Vec<f64> {
+    let t = &eng.table;
+    let d = t.d;
+    let stride = t.stride();
+    assert_eq!(path.len() % d, 0);
+    let m1 = path.len() / d;
+    let steps = m1 - 1;
+    assert_eq!(grad_out.len(), t.out_dim());
+
+    // Forward pass to the terminal signature (the only stored state).
+    ws.state.clear();
+    ws.state.extend_from_slice(&sig_forward_state(eng, path));
+
+    // Seed λ_M: scatter the output cotangents onto the closure.
+    ws.lambda.clear();
+    ws.lambda.resize(t.state_len, 0.0);
+    t.scatter_grad(grad_out, &mut ws.lambda);
+    ws.lambda_next.clear();
+    ws.lambda_next.resize(t.state_len, 0.0);
+
+    ws.dx.resize(d, 0.0);
+    ws.neg_dx.resize(d, 0.0);
+    ws.right_prod.resize(t.max_level + 1, 0.0);
+    ws.grad_dx.clear();
+    ws.grad_dx.resize(steps * d, 0.0);
+
+    for j in (1..=steps).rev() {
+        for i in 0..d {
+            ws.dx[i] = path[j * d + i] - path[(j - 1) * d + i];
+            ws.neg_dx[i] = -ws.dx[i];
+        }
+        // Reconstruct S_{j-1} (Prop 4.6): S ← S ⊗ exp(-ΔX_j).
+        chen_update(eng, &mut ws.state, &ws.neg_dx);
+
+        // λ transpose + ΔX gradient, one in-place sweep over the
+        // closure. The transpose sends contributions strictly from a
+        // word to its *shorter* prefixes, so processing levels in
+        // ASCENDING order reads every λ(w) before any contribution to
+        // it lands — no double buffer needed (mirror of the forward's
+        // descending in-place trick; the s = ε split is the identity
+        // term λ(w) += λ(w)·1, a no-op in place).
+        let gdx = &mut ws.grad_dx[(j - 1) * d..j * d];
+        let lambda = ws.lambda.as_mut_slice();
+        let state = ws.state.as_slice();
+        let right_prod = ws.right_prod.as_mut_slice();
+        let dx = ws.dx.as_slice();
+        for n in 1..=t.max_level {
+            let inv_fact_n = eng.inv_fact[n];
+            for w in t.level_range(n) {
+                // SAFETY: all indices below come from the validated
+                // WordTable (letters < d, prefix_idx < state_len,
+                // level ranges within bounds) — checked by
+                // `WordTable::check_invariants` in tests.
+                unsafe {
+                    let lam = *lambda.get_unchecked(w);
+                    if lam == 0.0 {
+                        continue;
+                    }
+                    let letters = t.letters.get_unchecked(w * stride..w * stride + n);
+                    let prefixes = t.prefix_idx.get_unchecked(w * stride..w * stride + n);
+                    // Right suffix products R_p = Π_{q=p+1..n} dx_{i_q}.
+                    *right_prod.get_unchecked_mut(n) = 1.0;
+                    for p in (1..n).rev() {
+                        let letter = *letters.get_unchecked(p) as usize; // i_{p+1}
+                        *right_prod.get_unchecked_mut(p) =
+                            right_prod.get_unchecked(p + 1) * dx.get_unchecked(letter);
+                    }
+                    // Fused sweep over positions p = 1..=n:
+                    //   gdx[i_p]    += λ·A_p·R_p       (A_1 = 1/n!)
+                    //   λ(w_[p-1])  += λ·e_{p-1}, e_k = dx_{i_{k+1}}·R_{k+1}/(n-k)!
+                    //   A_{p+1}      = A_p·dx_{i_p} + S(w_[p])/(n-p)!
+                    let mut a = inv_fact_n;
+                    for p in 1..=n {
+                        let letter = *letters.get_unchecked(p - 1) as usize; // i_p
+                        let dxl = *dx.get_unchecked(letter);
+                        let rp = *right_prod.get_unchecked(p);
+                        *gdx.get_unchecked_mut(letter) += lam * a * rp;
+                        let e_k = dxl * rp * eng.inv_fact.get_unchecked(n - p + 1);
+                        *lambda.get_unchecked_mut(*prefixes.get_unchecked(p - 1) as usize) +=
+                            lam * e_k;
+                        if p < n {
+                            let s_pref =
+                                *state.get_unchecked(*prefixes.get_unchecked(p) as usize);
+                            a = a * dxl + s_pref * eng.inv_fact.get_unchecked(n - p);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    // Chain rule from increments to points:
+    // ∂L/∂X_0 = -g_1, ∂L/∂X_j = g_j - g_{j+1}, ∂L/∂X_M = g_M.
+    let mut grad_path = vec![0.0; m1 * d];
+    for i in 0..d {
+        if steps > 0 {
+            grad_path[i] = -ws.grad_dx[i];
+            grad_path[steps * d + i] = ws.grad_dx[(steps - 1) * d + i];
+        }
+    }
+    for j in 1..steps {
+        for i in 0..d {
+            grad_path[j * d + i] = ws.grad_dx[(j - 1) * d + i] - ws.grad_dx[j * d + i];
+        }
+    }
+    grad_path
+}
+
+/// Batched backward: `paths` `(B, M+1, d)`, `grads_out` `(B, |I|)` →
+/// `(B, M+1, d)`. Parallel over paths.
+pub fn sig_backward_batch(
+    eng: &SigEngine,
+    paths: &[f64],
+    grads_out: &[f64],
+    batch: usize,
+) -> Vec<f64> {
+    assert!(batch > 0);
+    let per_path = paths.len() / batch;
+    let odim = eng.out_dim();
+    assert_eq!(grads_out.len(), batch * odim);
+    let rows = parallel_map(batch, eng.threads, |b| {
+        sig_backward(
+            eng,
+            &paths[b * per_path..(b + 1) * per_path],
+            &grads_out[b * odim..(b + 1) * odim],
+        )
+    });
+    let mut out = Vec::with_capacity(paths.len());
+    for r in rows {
+        out.extend(r);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sig::signature;
+    use crate::util::proptest::assert_allclose;
+    use crate::util::rng::Rng;
+    use crate::words::{truncated_words, Word, WordTable};
+
+    fn trunc_engine(d: usize, n: usize) -> SigEngine {
+        SigEngine::new(WordTable::build(d, &truncated_words(d, n)))
+    }
+
+    /// Central finite-difference gradient of L(X) = <g, sig(X)>.
+    fn fd_grad(eng: &SigEngine, path: &[f64], g: &[f64], eps: f64) -> Vec<f64> {
+        let mut out = vec![0.0; path.len()];
+        let mut p = path.to_vec();
+        for k in 0..path.len() {
+            p[k] = path[k] + eps;
+            let up: f64 = signature(eng, &p).iter().zip(g).map(|(a, b)| a * b).sum();
+            p[k] = path[k] - eps;
+            let dn: f64 = signature(eng, &p).iter().zip(g).map(|(a, b)| a * b).sum();
+            p[k] = path[k];
+            out[k] = (up - dn) / (2.0 * eps);
+        }
+        out
+    }
+
+    #[test]
+    fn gradcheck_truncated() {
+        let mut rng = Rng::new(200);
+        for &(d, n, m) in &[(2, 3, 4), (3, 2, 6), (2, 5, 3), (4, 3, 5)] {
+            let eng = trunc_engine(d, n);
+            let path = rng.brownian_path(m, d, 0.6);
+            let g: Vec<f64> = (0..eng.out_dim()).map(|_| rng.gaussian()).collect();
+            let got = sig_backward(&eng, &path, &g);
+            let want = fd_grad(&eng, &path, &g, 1e-5);
+            assert_allclose(&got, &want, 1e-6, 1e-5, &format!("gradcheck d={d} n={n} m={m}"));
+        }
+    }
+
+    #[test]
+    fn gradcheck_projection() {
+        let mut rng = Rng::new(201);
+        let d = 3;
+        let request = vec![
+            Word(vec![0, 1, 2]),
+            Word(vec![2]),
+            Word(vec![1, 1, 0, 2]),
+            Word(vec![0, 0]),
+        ];
+        let eng = SigEngine::new(WordTable::build(d, &request));
+        let path = rng.brownian_path(7, d, 0.5);
+        let g: Vec<f64> = (0..4).map(|_| rng.gaussian()).collect();
+        let got = sig_backward(&eng, &path, &g);
+        let want = fd_grad(&eng, &path, &g, 1e-5);
+        assert_allclose(&got, &want, 1e-6, 1e-5, "projection gradcheck");
+    }
+
+    #[test]
+    fn gradcheck_single_word() {
+        // Sparsity fast-path: one deep word only.
+        let mut rng = Rng::new(202);
+        let d = 2;
+        let eng = SigEngine::new(WordTable::build(d, &[Word(vec![0, 1, 0, 1])]));
+        let path = rng.brownian_path(6, d, 0.8);
+        let got = sig_backward(&eng, &path, &[1.0]);
+        let want = fd_grad(&eng, &path, &[1.0], 1e-5);
+        assert_allclose(&got, &want, 1e-6, 1e-5, "single word");
+    }
+
+    #[test]
+    fn grad_level1_is_endpoint_indicator() {
+        // L = S((i)) = X_M^{(i)} - X_0^{(i)} ⇒ grad is -1 at start, +1 at
+        // end, 0 inside.
+        let d = 2;
+        let eng = SigEngine::new(WordTable::build(d, &[Word(vec![1])]));
+        let mut rng = Rng::new(203);
+        let path = rng.brownian_path(5, d, 1.0);
+        let grad = sig_backward(&eng, &path, &[1.0]);
+        let mut want = vec![0.0; path.len()];
+        want[1] = -1.0;
+        want[5 * d + 1] = 1.0;
+        assert_allclose(&grad, &want, 1e-12, 0.0, "level-1 grad");
+    }
+
+    #[test]
+    fn batch_backward_matches_single() {
+        let mut rng = Rng::new(204);
+        let d = 2;
+        let eng = trunc_engine(d, 3);
+        let b = 4;
+        let m = 6;
+        let mut paths = Vec::new();
+        let mut grads = Vec::new();
+        for _ in 0..b {
+            paths.extend(rng.brownian_path(m, d, 1.0));
+            grads.extend((0..eng.out_dim()).map(|_| rng.gaussian()));
+        }
+        let all = sig_backward_batch(&eng, &paths, &grads, b);
+        let per = (m + 1) * d;
+        for k in 0..b {
+            let single = sig_backward(
+                &eng,
+                &paths[k * per..(k + 1) * per],
+                &grads[k * eng.out_dim()..(k + 1) * eng.out_dim()],
+            );
+            assert_allclose(&all[k * per..(k + 1) * per], &single, 1e-15, 0.0, "row");
+        }
+    }
+
+    #[test]
+    fn backward_long_path_stable() {
+        // The backward reconstruction must stay accurate over hundreds of
+        // steps (the paper relies on it for M up to 1600).
+        let mut rng = Rng::new(205);
+        let d = 2;
+        let eng = trunc_engine(d, 3);
+        let path = rng.brownian_path(400, d, 0.1);
+        let g: Vec<f64> = (0..eng.out_dim()).map(|_| rng.gaussian()).collect();
+        let got = sig_backward(&eng, &path, &g);
+        // Spot-check 10 random coordinates against finite differences.
+        let mut p = path.clone();
+        for _ in 0..10 {
+            let k = rng.below(path.len());
+            let eps = 1e-5;
+            p[k] = path[k] + eps;
+            let up: f64 = signature(&eng, &p).iter().zip(&g).map(|(a, b)| a * b).sum();
+            p[k] = path[k] - eps;
+            let dn: f64 = signature(&eng, &p).iter().zip(&g).map(|(a, b)| a * b).sum();
+            p[k] = path[k];
+            let fd = (up - dn) / (2.0 * eps);
+            assert!(
+                (got[k] - fd).abs() < 1e-4 * (1.0 + fd.abs()),
+                "coord {k}: got {}, fd {}",
+                got[k],
+                fd
+            );
+        }
+    }
+}

@@ -1,0 +1,315 @@
+//! Forward signature computation — Algorithm 1 of the paper.
+//!
+//! One Chen update per time step: for every word `w = (i_1,…,i_n)` in the
+//! prefix-closed state set,
+//!
+//! ```text
+//! S_j(w) = S_{j-1}(w) + ΔX^{(i_n)}·( S_{j-1}(w_[n-1])
+//!        + ΔX^{(i_{n-1})}/2·( S_{j-1}(w_[n-2]) + … + ΔX^{(i_1)}/n·S_{j-1}(ε) ))
+//! ```
+//!
+//! evaluated with Horner's method — equivalent to the prefix–suffix sum
+//! of Chen's relation (3) but without materialising `exp(ΔX_j)`.
+
+use super::SigEngine;
+use crate::util::threadpool::parallel_map;
+
+/// Apply one Chen/Horner update `S ← S ⊗ exp(dx)` in place.
+///
+/// `state` is a closure-state vector (`state[0] == 1`), `dx` the step
+/// increment (`d` entries). Levels are processed top-down so in-place
+/// updates read only step-`j-1` prefix values (see module docs of
+/// [`crate::sig`]).
+#[inline]
+pub fn chen_update(eng: &SigEngine, state: &mut [f64], dx: &[f64]) {
+    let t = &eng.table;
+    let stride = t.stride();
+    debug_assert_eq!(state.len(), t.state_len);
+    debug_assert_eq!(dx.len(), t.d);
+    for n in (1..=t.max_level).rev() {
+        let range = t.level_range(n);
+        for i in range {
+            let base = i * stride;
+            // Horner inner loop over the prefix chain.
+            // SAFETY: indices come from the validated WordTable
+            // (letters < d, prefix_idx < state_len; see
+            // `WordTable::check_invariants`).
+            unsafe {
+                let letters = t.letters.get_unchecked(base..base + n);
+                let prefixes = t.prefix_idx.get_unchecked(base..base + n);
+                let mut acc = 1.0; // S(ε) — state[0] is pinned to 1.
+                for k in 1..n {
+                    let letter = *letters.get_unchecked(k - 1) as usize;
+                    acc = acc * dx.get_unchecked(letter) * eng.recip.get_unchecked(n - k + 1)
+                        + state.get_unchecked(*prefixes.get_unchecked(k) as usize);
+                }
+                let last = *letters.get_unchecked(n - 1) as usize;
+                *state.get_unchecked_mut(i) += acc * dx.get_unchecked(last);
+            }
+        }
+    }
+}
+
+/// Forward pass over a full path, returning the closure **state** vector
+/// (index 0 = ε = 1.0). `path` is row-major `(M+1, d)`.
+pub fn sig_forward_state(eng: &SigEngine, path: &[f64]) -> Vec<f64> {
+    let d = eng.table.d;
+    assert!(path.len() % d == 0, "path length not divisible by d");
+    let m1 = path.len() / d;
+    assert!(m1 >= 1, "path needs at least one point");
+    let mut state = vec![0.0; eng.table.state_len];
+    state[0] = 1.0;
+    let mut dx = vec![0.0; d];
+    for j in 1..m1 {
+        for i in 0..d {
+            dx[i] = path[j * d + i] - path[(j - 1) * d + i];
+        }
+        chen_update(eng, &mut state, &dx);
+    }
+    state
+}
+
+/// The projected signature `π_I(S_{0,T}(X))` of a single path
+/// (row-major `(M+1, d)`), in the engine's requested-word order.
+pub fn signature(eng: &SigEngine, path: &[f64]) -> Vec<f64> {
+    let state = sig_forward_state(eng, path);
+    let mut out = vec![0.0; eng.out_dim()];
+    eng.table.project(&state, &mut out);
+    out
+}
+
+/// Batched signatures: `paths` is `(B, M+1, d)` row-major, result is
+/// `(B, |I|)` row-major. Parallel over paths (the paper's
+/// batch-parallelism axis).
+pub fn signature_batch(eng: &SigEngine, paths: &[f64], batch: usize) -> Vec<f64> {
+    assert!(batch > 0);
+    assert_eq!(paths.len() % batch, 0);
+    let per_path = paths.len() / batch;
+    let out_dim = eng.out_dim();
+    let rows = parallel_map(batch, eng.threads, |b| {
+        let path = &paths[b * per_path..(b + 1) * per_path];
+        let state = sig_forward_state(eng, path);
+        let mut row = vec![0.0; out_dim];
+        eng.table.project(&state, &mut row);
+        row
+    });
+    let mut out = Vec::with_capacity(batch * out_dim);
+    for row in rows {
+        out.extend(row);
+    }
+    out
+}
+
+/// Expanding-window stream `j ↦ π_I(S_{0,t_j}(X))` for `j = 0..=M`
+/// (§5's "signatures as stochastic processes" view). Returns row-major
+/// `(M+1, |I|)`. Costs one forward pass — each step's projection is
+/// emitted as the recursion passes through it.
+pub fn signature_stream(eng: &SigEngine, path: &[f64]) -> Vec<f64> {
+    let d = eng.table.d;
+    let m1 = path.len() / d;
+    let out_dim = eng.out_dim();
+    let mut out = vec![0.0; m1 * out_dim];
+    let mut state = vec![0.0; eng.table.state_len];
+    state[0] = 1.0;
+    eng.table.project(&state, &mut out[0..out_dim]);
+    let mut dx = vec![0.0; d];
+    for j in 1..m1 {
+        for i in 0..d {
+            dx[i] = path[j * d + i] - path[(j - 1) * d + i];
+        }
+        chen_update(eng, &mut state, &dx);
+        eng.table.project(&state, &mut out[j * out_dim..(j + 1) * out_dim]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sig::SigEngine;
+    use crate::tensor::TruncTensor;
+    use crate::util::proptest::assert_allclose;
+    use crate::util::rng::Rng;
+    use crate::words::{truncated_words, Word, WordTable};
+
+    fn trunc_engine(d: usize, n: usize) -> SigEngine {
+        SigEngine::new(WordTable::build(d, &truncated_words(d, n)))
+    }
+
+    /// Oracle: signature via dense tensor-algebra recursion.
+    fn oracle_signature(d: usize, depth: usize, path: &[f64]) -> Vec<f64> {
+        let m1 = path.len() / d;
+        let mut s = TruncTensor::one(d, depth);
+        let mut scratch = Vec::new();
+        for j in 1..m1 {
+            let dx: Vec<f64> = (0..d)
+                .map(|i| path[j * d + i] - path[(j - 1) * d + i])
+                .collect();
+            s.mul_assign(&TruncTensor::exp_level1(&dx, depth), &mut scratch);
+        }
+        s.flatten_nonscalar()
+    }
+
+    #[test]
+    fn single_segment_is_tensor_exponential() {
+        // Proposition 3.1: one linear segment ⇒ S = exp(ΔX).
+        let eng = trunc_engine(3, 4);
+        let path = [0.0, 0.0, 0.0, 0.5, -1.0, 2.0];
+        let got = signature(&eng, &path);
+        let want = TruncTensor::exp_level1(&[0.5, -1.0, 2.0], 4).flatten_nonscalar();
+        assert_allclose(&got, &want, 1e-14, 1e-12, "exp closed form");
+    }
+
+    #[test]
+    fn matches_tensor_algebra_oracle() {
+        let mut rng = Rng::new(100);
+        for &(d, n, m) in &[(2, 3, 5), (3, 4, 8), (4, 2, 20), (2, 6, 10)] {
+            let eng = trunc_engine(d, n);
+            let path = rng.brownian_path(m, d, 0.5);
+            let got = signature(&eng, &path);
+            let want = oracle_signature(d, n, &path);
+            assert_allclose(&got, &want, 1e-11, 1e-9, &format!("d={d} n={n} m={m}"));
+        }
+    }
+
+    #[test]
+    fn level1_is_total_increment() {
+        let mut rng = Rng::new(101);
+        let d = 3;
+        let eng = trunc_engine(d, 2);
+        let path = rng.brownian_path(12, d, 1.0);
+        let sig = signature(&eng, &path);
+        let m = path.len() / d - 1;
+        for i in 0..d {
+            let total = path[m * d + i] - path[i];
+            assert!((sig[i] - total).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn level2_antisymmetric_part_is_levy_area() {
+        // For the unit square loop (0,0)→(1,0)→(1,1)→(0,1)→(0,0),
+        // S((0,1)) - S((1,0)) = 2 · (signed area) = 2·1 = … the loop
+        // encloses area 1, sign depends on orientation (ccw = +).
+        let eng = trunc_engine(2, 2);
+        let path = [
+            0.0, 0.0, //
+            1.0, 0.0, //
+            1.0, 1.0, //
+            0.0, 1.0, //
+            0.0, 0.0,
+        ];
+        let sig = signature(&eng, &path);
+        // order: (0),(1),(00),(01),(10),(11)
+        let area2 = sig[3] - sig[4];
+        assert!((area2 - 2.0).abs() < 1e-12, "2·area = {area2}");
+        // Level 1 of a loop vanishes.
+        assert!(sig[0].abs() < 1e-14 && sig[1].abs() < 1e-14);
+    }
+
+    #[test]
+    fn projection_matches_truncated_subset() {
+        // A projected engine must agree with the truncated engine on the
+        // requested coordinates.
+        let mut rng = Rng::new(102);
+        let d = 3;
+        let full = trunc_engine(d, 4);
+        let request = vec![
+            Word(vec![2, 0, 1, 1]),
+            Word(vec![0]),
+            Word(vec![1, 1]),
+            Word(vec![2, 2, 2]),
+        ];
+        let proj = SigEngine::new(WordTable::build(d, &request));
+        let path = rng.brownian_path(15, d, 0.7);
+        let full_sig = signature(&full, &path);
+        let proj_sig = signature(&proj, &path);
+        let all_words = truncated_words(d, 4);
+        for (k, w) in request.iter().enumerate() {
+            let pos = all_words.iter().position(|x| x == w).unwrap();
+            assert!(
+                (proj_sig[k] - full_sig[pos]).abs() < 1e-12,
+                "word {} mismatch",
+                w.pretty()
+            );
+        }
+    }
+
+    #[test]
+    fn batch_matches_single() {
+        let mut rng = Rng::new(103);
+        let d = 2;
+        let eng = trunc_engine(d, 3);
+        let b = 7;
+        let m = 9;
+        let mut paths = Vec::new();
+        for _ in 0..b {
+            paths.extend(rng.brownian_path(m, d, 1.0));
+        }
+        let batch_out = signature_batch(&eng, &paths, b);
+        for k in 0..b {
+            let single = signature(&eng, &paths[k * (m + 1) * d..(k + 1) * (m + 1) * d]);
+            assert_allclose(
+                &batch_out[k * eng.out_dim()..(k + 1) * eng.out_dim()],
+                &single,
+                1e-15,
+                0.0,
+                "batch row",
+            );
+        }
+    }
+
+    #[test]
+    fn stream_last_row_is_full_signature() {
+        let mut rng = Rng::new(104);
+        let d = 3;
+        let eng = trunc_engine(d, 3);
+        let path = rng.brownian_path(11, d, 0.5);
+        let stream = signature_stream(&eng, &path);
+        let full = signature(&eng, &path);
+        let odim = eng.out_dim();
+        assert_allclose(&stream[11 * odim..], &full, 1e-14, 1e-12, "stream end");
+        // Row 0 is the trivial signature (all zero beyond ε).
+        assert!(stream[..odim].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn constant_path_has_trivial_signature() {
+        let eng = trunc_engine(2, 4);
+        let path = [3.0, -1.0].repeat(10);
+        let sig = signature(&eng, &path);
+        assert!(sig.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn reparametrisation_invariance() {
+        // Inserting duplicated points (zero increments) and re-spacing
+        // must not change the signature.
+        let mut rng = Rng::new(105);
+        let d = 2;
+        let eng = trunc_engine(d, 4);
+        let path = rng.brownian_path(8, d, 1.0);
+        let base = signature(&eng, &path);
+        // Duplicate every point.
+        let mut dup = Vec::new();
+        for j in 0..9 {
+            dup.extend_from_slice(&path[j * d..(j + 1) * d]);
+            dup.extend_from_slice(&path[j * d..(j + 1) * d]);
+        }
+        let dup_sig = signature(&eng, &dup);
+        assert_allclose(&dup_sig, &base, 1e-13, 1e-12, "duplicated points");
+        // Split every segment in half (finer linear interpolation).
+        let mut fine = Vec::new();
+        for j in 0..8 {
+            let p0 = &path[j * d..(j + 1) * d];
+            let p1 = &path[(j + 1) * d..(j + 2) * d];
+            fine.extend_from_slice(p0);
+            for i in 0..d {
+                fine.push(0.5 * (p0[i] + p1[i]));
+            }
+        }
+        fine.extend_from_slice(&path[8 * d..]);
+        let fine_sig = signature(&eng, &fine);
+        assert_allclose(&fine_sig, &base, 1e-12, 1e-11, "refined partition");
+    }
+}

@@ -1,0 +1,121 @@
+//! The pathsig core engine: batched forward/backward signature
+//! computation in the word basis (paper §3–§4) and windowed signatures
+//! (§5).
+//!
+//! The engine operates on a *state vector* indexed by the prefix closure
+//! of the requested word set (state index 0 = ε, always 1.0), applying
+//! Chen's relation once per time step with Horner's method
+//! (Algorithm 1). Levels are processed **top-down** within a step so the
+//! update is in-place: a level-`n` word reads only strictly shorter
+//! prefixes, which still hold their step-`j-1` values.
+//!
+//! Parallelism mirrors the paper's CUDA mapping (§3.2): independent
+//! computational units are (path × window) pairs; within a unit the word
+//! table is swept sequentially with perfect locality. See
+//! [`crate::util::threadpool`].
+
+mod backward;
+mod forward;
+mod windows;
+
+pub use backward::{sig_backward, sig_backward_batch, BackwardWorkspace};
+pub use forward::{chen_update, sig_forward_state, signature, signature_batch, signature_stream};
+pub use windows::{
+    expanding_windows, sliding_windows, window_signature, windowed_signatures,
+    windowed_signatures_batch, Window,
+};
+
+use crate::words::WordTable;
+
+/// A word table bundled with the small precomputed constant tables the
+/// kernels need (`1/k` and `1/k!`). Build once, reuse across calls.
+#[derive(Clone, Debug)]
+pub struct SigEngine {
+    pub table: WordTable,
+    /// `recip[k] = 1/k` for `k = 0..=N` (`recip[0]` unused).
+    pub recip: Vec<f64>,
+    /// `inv_fact[k] = 1/k!` for `k = 0..=N`.
+    pub inv_fact: Vec<f64>,
+    /// Worker threads for batch entry points (1 = sequential).
+    pub threads: usize,
+}
+
+impl SigEngine {
+    pub fn new(table: WordTable) -> SigEngine {
+        let n = table.max_level;
+        let recip: Vec<f64> = (0..=n + 1).map(|k| if k == 0 { 0.0 } else { 1.0 / k as f64 }).collect();
+        let mut inv_fact = vec![1.0; n + 2];
+        for k in 1..inv_fact.len() {
+            inv_fact[k] = inv_fact[k - 1] / k as f64;
+        }
+        let threads = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+            .min(16);
+        SigEngine {
+            table,
+            recip,
+            inv_fact,
+            threads,
+        }
+    }
+
+    /// Sequential engine (used by benches to isolate single-core cost).
+    pub fn sequential(table: WordTable) -> SigEngine {
+        let mut e = SigEngine::new(table);
+        e.threads = 1;
+        e
+    }
+
+    pub fn with_threads(table: WordTable, threads: usize) -> SigEngine {
+        let mut e = SigEngine::new(table);
+        e.threads = threads.max(1);
+        e
+    }
+
+    /// Output dimension `|I|`.
+    pub fn out_dim(&self) -> usize {
+        self.table.out_dim()
+    }
+
+    /// Closure state length (including ε).
+    pub fn state_len(&self) -> usize {
+        self.table.state_len
+    }
+}
+
+/// Compute per-step increments of a row-major `(M+1, d)` path into `out`
+/// (`(M, d)`).
+pub fn increments(path: &[f64], d: usize, out: &mut [f64]) {
+    let m1 = path.len() / d;
+    debug_assert_eq!(path.len(), m1 * d);
+    debug_assert_eq!(out.len(), (m1 - 1) * d);
+    for j in 1..m1 {
+        for i in 0..d {
+            out[(j - 1) * d + i] = path[j * d + i] - path[(j - 1) * d + i];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::words::{truncated_words, WordTable};
+
+    #[test]
+    fn engine_constant_tables() {
+        let e = SigEngine::new(WordTable::build(2, &truncated_words(2, 4)));
+        assert!((e.recip[2] - 0.5).abs() < 1e-15);
+        assert!((e.inv_fact[3] - 1.0 / 6.0).abs() < 1e-15);
+        assert_eq!(e.out_dim(), 2 + 4 + 8 + 16);
+        assert_eq!(e.state_len(), 1 + 30);
+    }
+
+    #[test]
+    fn increments_of_linear_path() {
+        let path = [0.0, 0.0, 1.0, 2.0, 2.0, 4.0]; // (3,2)
+        let mut dx = [0.0; 4];
+        increments(&path, 2, &mut dx);
+        assert_eq!(dx, [1.0, 2.0, 1.0, 2.0]);
+    }
+}

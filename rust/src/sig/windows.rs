@@ -1,0 +1,244 @@
+//! Windowed signatures — §5 of the paper.
+//!
+//! Given index pairs `(l_i, r_i)` with `l_i < r_i`, compute the
+//! collection `(S_{t_{l_i}, t_{r_i}}(X))_i` in one call. Each window is an
+//! independent forward recursion over its own increment range — windows
+//! are the extra parallelism axis the paper uses to saturate the device,
+//! and they parallelise across the thread pool here the same way
+//! (units = batch × windows).
+//!
+//! A Chen-combination alternative (`S_{0,l}^{-1} ⊗ S_{0,r}` from
+//! expanding-window states, as Signatory does) is implemented in
+//! [`crate::baselines::chen_windows`] for the Fig-3 comparison; the paper
+//! notes it is numerically unstable and memory-hungry for long sequences.
+
+use super::{chen_update, SigEngine};
+use crate::util::threadpool::parallel_map;
+
+/// A half-open index window `[l, r)` over path points — the signature is
+/// computed over segment increments `l→l+1, …, r-1→r`, i.e. the paper's
+/// `S_{t_l, t_r}(X)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Window {
+    pub l: usize,
+    pub r: usize,
+}
+
+impl Window {
+    pub fn new(l: usize, r: usize) -> Window {
+        assert!(l < r, "window must satisfy l < r (got {l}, {r})");
+        Window { l, r }
+    }
+}
+
+/// Windowed signatures of a single path: returns row-major
+/// `(K, |I|)` for `K = windows.len()`. `path` is `(M+1, d)`.
+pub fn windowed_signatures(eng: &SigEngine, path: &[f64], windows: &[Window]) -> Vec<f64> {
+    let d = eng.table.d;
+    let m1 = path.len() / d;
+    for w in windows {
+        assert!(w.r < m1, "window right edge {} out of range (M={})", w.r, m1 - 1);
+    }
+    let odim = eng.out_dim();
+    let rows = parallel_map(windows.len(), eng.threads, |k| {
+        window_signature(eng, path, windows[k])
+    });
+    let mut out = Vec::with_capacity(windows.len() * odim);
+    for r in rows {
+        out.extend(r);
+    }
+    out
+}
+
+/// One window's projected signature (sequential inner kernel).
+pub fn window_signature(eng: &SigEngine, path: &[f64], w: Window) -> Vec<f64> {
+    let d = eng.table.d;
+    let mut state = vec![0.0; eng.table.state_len];
+    state[0] = 1.0;
+    let mut dx = vec![0.0; d];
+    for j in (w.l + 1)..=w.r {
+        for i in 0..d {
+            dx[i] = path[j * d + i] - path[(j - 1) * d + i];
+        }
+        chen_update(eng, &mut state, &dx);
+    }
+    let mut out = vec![0.0; eng.out_dim()];
+    eng.table.project(&state, &mut out);
+    out
+}
+
+/// Batched windowed signatures: `paths` `(B, M+1, d)`, same window list
+/// for every path (the paper's API takes one `K×2` index tensor).
+/// Returns row-major `(B, K, |I|)`. Parallel over `B × K` units.
+pub fn windowed_signatures_batch(
+    eng: &SigEngine,
+    paths: &[f64],
+    batch: usize,
+    windows: &[Window],
+) -> Vec<f64> {
+    let per_path = paths.len() / batch;
+    let odim = eng.out_dim();
+    let k = windows.len();
+    let rows = parallel_map(batch * k, eng.threads, |u| {
+        let (b, wi) = (u / k, u % k);
+        window_signature(eng, &paths[b * per_path..(b + 1) * per_path], windows[wi])
+    });
+    let mut out = Vec::with_capacity(batch * k * odim);
+    for r in rows {
+        out.extend(r);
+    }
+    out
+}
+
+/// Sliding windows of fixed `len` and `stride` over a path with `m1`
+/// points (§5's `t ↦ S_{t-h,t}` viewpoint).
+pub fn sliding_windows(m1: usize, len: usize, stride: usize) -> Vec<Window> {
+    assert!(len >= 1 && stride >= 1);
+    let mut out = Vec::new();
+    let mut l = 0;
+    while l + len < m1 {
+        out.push(Window::new(l, l + len));
+        l += stride;
+    }
+    out
+}
+
+/// Expanding windows `[0, r)` for `r = 1..m1` (§5's `t ↦ S_{0,t}`).
+pub fn expanding_windows(m1: usize) -> Vec<Window> {
+    (1..m1).map(|r| Window::new(0, r)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sig::{signature, SigEngine};
+    use crate::util::proptest::assert_allclose;
+    use crate::util::rng::Rng;
+    use crate::words::{truncated_words, WordTable};
+
+    fn eng(d: usize, n: usize) -> SigEngine {
+        SigEngine::new(WordTable::build(d, &truncated_words(d, n)))
+    }
+
+    #[test]
+    fn full_window_equals_global_signature() {
+        let mut rng = Rng::new(300);
+        let e = eng(2, 3);
+        let path = rng.brownian_path(10, 2, 1.0);
+        let out = windowed_signatures(&e, &path, &[Window::new(0, 10)]);
+        let full = signature(&e, &path);
+        assert_allclose(&out, &full, 1e-14, 1e-13, "full window");
+    }
+
+    #[test]
+    fn window_equals_subpath_signature() {
+        let mut rng = Rng::new(301);
+        let d = 3;
+        let e = eng(d, 3);
+        let path = rng.brownian_path(20, d, 0.7);
+        let w = Window::new(4, 13);
+        let out = windowed_signatures(&e, &path, &[w]);
+        let sub = signature(&e, &path[4 * d..=(13 * d + d - 1)]);
+        assert_allclose(&out, &sub, 1e-14, 1e-13, "subpath");
+    }
+
+    #[test]
+    fn chens_relation_across_adjacent_windows() {
+        // S_{0,u} ⊗ S_{u,T} = S_{0,T} (Theorem 3.2) — verified through
+        // the window API + dense tensor multiply.
+        use crate::tensor::TruncTensor;
+        let mut rng = Rng::new(302);
+        let d = 2;
+        let n = 4;
+        let e = eng(d, n);
+        let path = rng.brownian_path(12, d, 0.8);
+        let parts = windowed_signatures(&e, &path, &[Window::new(0, 5), Window::new(5, 12)]);
+        let odim = e.out_dim();
+        let to_tensor = |flat: &[f64]| {
+            let mut t = TruncTensor::one(d, n);
+            let mut k = 0;
+            for lvl in 1..=n {
+                for c in 0..d.pow(lvl as u32) {
+                    t.levels[lvl][c] = flat[k];
+                    k += 1;
+                }
+            }
+            t
+        };
+        let left = to_tensor(&parts[..odim]);
+        let right = to_tensor(&parts[odim..]);
+        let combined = left.mul(&right).flatten_nonscalar();
+        let full = signature(&e, &path);
+        assert_allclose(&combined, &full, 1e-12, 1e-11, "chen");
+    }
+
+    #[test]
+    fn many_windows_match_individual_calls() {
+        let mut rng = Rng::new(303);
+        let d = 2;
+        let e = eng(d, 2);
+        let path = rng.brownian_path(30, d, 1.0);
+        let wins: Vec<Window> = vec![
+            Window::new(0, 3),
+            Window::new(2, 17),
+            Window::new(10, 30),
+            Window::new(29, 30),
+        ];
+        let all = windowed_signatures(&e, &path, &wins);
+        let odim = e.out_dim();
+        for (k, w) in wins.iter().enumerate() {
+            let single = window_signature(&e, &path, *w);
+            assert_allclose(&all[k * odim..(k + 1) * odim], &single, 0.0, 0.0, "row");
+        }
+    }
+
+    #[test]
+    fn batch_windows_shape_and_content() {
+        let mut rng = Rng::new(304);
+        let d = 2;
+        let e = eng(d, 2);
+        let b = 3;
+        let m = 8;
+        let mut paths = Vec::new();
+        for _ in 0..b {
+            paths.extend(rng.brownian_path(m, d, 1.0));
+        }
+        let wins = vec![Window::new(0, 4), Window::new(4, 8)];
+        let out = windowed_signatures_batch(&e, &paths, b, &wins);
+        let odim = e.out_dim();
+        assert_eq!(out.len(), b * 2 * odim);
+        let per = (m + 1) * d;
+        for bi in 0..b {
+            let single = windowed_signatures(&e, &paths[bi * per..(bi + 1) * per], &wins);
+            assert_allclose(
+                &out[bi * 2 * odim..(bi + 1) * 2 * odim],
+                &single,
+                0.0,
+                0.0,
+                "batch block",
+            );
+        }
+    }
+
+    #[test]
+    fn sliding_and_expanding_generators() {
+        let s = sliding_windows(10, 4, 2);
+        assert_eq!(s, vec![Window::new(0, 4), Window::new(2, 6), Window::new(4, 8)]);
+        let e = expanding_windows(4);
+        assert_eq!(e, vec![Window::new(0, 1), Window::new(0, 2), Window::new(0, 3)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "window must satisfy l < r")]
+    fn degenerate_window_rejected() {
+        Window::new(3, 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn window_beyond_path_rejected() {
+        let e = eng(2, 2);
+        let path = vec![0.0; 10]; // 5 points
+        windowed_signatures(&e, &path, &[Window::new(0, 5)]);
+    }
+}

@@ -1,0 +1,302 @@
+//! Dense truncated tensor algebra `T_{≤N}(R^d)` (paper §2.1).
+//!
+//! This is the substrate the *comparator libraries* organise around
+//! (§3.1: "existing methods organise around operations in the tensor
+//! algebra on the graded sequence of tensors") — and therefore what our
+//! [`crate::baselines`] are built on. The pathsig engines themselves work
+//! in the word basis ([`crate::sig`]) and only use this module for the
+//! tensor logarithm and cross-validation.
+//!
+//! A [`TruncTensor`] stores one dense coefficient vector per level,
+//! `levels[n].len() == d^n`, index = the Appendix-A base-`d` word code.
+
+mod ops;
+
+pub use ops::{mul_adjoint, tensor_exp_series, tensor_log_series};
+
+/// Element of the truncated tensor algebra `T_{≤N}(R^d)`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TruncTensor {
+    pub d: usize,
+    pub depth: usize,
+    /// `levels[n][code]` = coefficient of the word with base-`d`
+    /// encoding `code` at level `n`; `levels[0]` is the scalar part.
+    pub levels: Vec<Vec<f64>>,
+}
+
+impl TruncTensor {
+    /// The multiplicative unit `1 ∈ T_{≤N}(R^d)`.
+    pub fn one(d: usize, depth: usize) -> TruncTensor {
+        let mut t = TruncTensor::zero(d, depth);
+        t.levels[0][0] = 1.0;
+        t
+    }
+
+    /// The zero element.
+    pub fn zero(d: usize, depth: usize) -> TruncTensor {
+        let levels = (0..=depth).map(|n| vec![0.0; d.pow(n as u32)]).collect();
+        TruncTensor { d, depth, levels }
+    }
+
+    /// Embed a vector `x ∈ R^d` at level 1.
+    pub fn from_level1(x: &[f64], depth: usize) -> TruncTensor {
+        let mut t = TruncTensor::zero(x.len(), depth);
+        t.levels[1].copy_from_slice(x);
+        t
+    }
+
+    /// Total number of coefficients `Σ_{n=0}^N d^n`.
+    pub fn len(&self) -> usize {
+        self.levels.iter().map(|l| l.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    /// Flatten levels `1..=N` into one vector (canonical signature
+    /// layout, level-major then lexicographic — matches
+    /// [`crate::words::truncated_words`] order).
+    pub fn flatten_nonscalar(&self) -> Vec<f64> {
+        let mut out = Vec::with_capacity(self.len() - 1);
+        for n in 1..=self.depth {
+            out.extend_from_slice(&self.levels[n]);
+        }
+        out
+    }
+
+    /// Read a coefficient by word (letters, 0-based).
+    pub fn coeff(&self, word: &[u16]) -> f64 {
+        let n = word.len();
+        assert!(n <= self.depth);
+        let code = crate::words::encode::word_code(word, self.d) as usize;
+        self.levels[n][code]
+    }
+
+    /// `self + other`.
+    pub fn add(&self, other: &TruncTensor) -> TruncTensor {
+        self.zip(other, |a, b| a + b)
+    }
+
+    /// `self - other`.
+    pub fn sub(&self, other: &TruncTensor) -> TruncTensor {
+        self.zip(other, |a, b| a - b)
+    }
+
+    /// Scalar multiple.
+    pub fn scale(&self, s: f64) -> TruncTensor {
+        let mut out = self.clone();
+        for lvl in &mut out.levels {
+            for x in lvl {
+                *x *= s;
+            }
+        }
+        out
+    }
+
+    fn zip(&self, other: &TruncTensor, f: impl Fn(f64, f64) -> f64) -> TruncTensor {
+        assert_eq!(self.d, other.d);
+        assert_eq!(self.depth, other.depth);
+        let levels = self
+            .levels
+            .iter()
+            .zip(&other.levels)
+            .map(|(a, b)| a.iter().zip(b).map(|(x, y)| f(*x, *y)).collect())
+            .collect();
+        TruncTensor {
+            d: self.d,
+            depth: self.depth,
+            levels,
+        }
+    }
+
+    /// Truncated tensor product `self ⊗ other` (Cauchy product, §2.1):
+    /// `c_n = Σ_{k=0}^n a_k ⊗ b_{n-k}`, with
+    /// `(a_k ⊗ b_m)[u∘v] = a_k[u]·b_m[v]` — an outer product in the flat
+    /// base-`d` indexing (Proposition A.3 makes the index math a
+    /// multiply-add).
+    pub fn mul(&self, other: &TruncTensor) -> TruncTensor {
+        assert_eq!(self.d, other.d);
+        assert_eq!(self.depth, other.depth);
+        let d = self.d;
+        let mut out = TruncTensor::zero(d, self.depth);
+        for n in 0..=self.depth {
+            let cn = &mut out.levels[n];
+            for k in 0..=n {
+                let a = &self.levels[k];
+                let b = &other.levels[n - k];
+                if a.iter().all(|&x| x == 0.0) {
+                    continue;
+                }
+                let bl = b.len();
+                for (i, &ai) in a.iter().enumerate() {
+                    if ai == 0.0 {
+                        continue;
+                    }
+                    let base = i * bl;
+                    for (j, &bj) in b.iter().enumerate() {
+                        cn[base + j] += ai * bj;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// In-place `self ← self ⊗ other` reusing a scratch buffer the size of
+    /// the largest level (hot path of the baselines).
+    pub fn mul_assign(&mut self, other: &TruncTensor, scratch: &mut Vec<f64>) {
+        assert_eq!(self.d, other.d);
+        assert_eq!(self.depth, other.depth);
+        // Process levels top-down so lower levels of self (still "old")
+        // feed higher outputs.
+        for n in (0..=self.depth).rev() {
+            scratch.clear();
+            scratch.resize(self.levels[n].len(), 0.0);
+            for k in 0..=n {
+                let a = &self.levels[k];
+                let b = &other.levels[n - k];
+                let bl = b.len();
+                for (i, &ai) in a.iter().enumerate() {
+                    if ai == 0.0 {
+                        continue;
+                    }
+                    let base = i * bl;
+                    for (j, &bj) in b.iter().enumerate() {
+                        scratch[base + j] += ai * bj;
+                    }
+                }
+            }
+            std::mem::swap(&mut self.levels[n], scratch);
+        }
+    }
+
+    /// Tensor exponential of a level-1 element (Proposition 3.1):
+    /// `exp(x) = Σ x^{⊗n}/n!` — the per-interval signature of a linear
+    /// path with increment `x`.
+    pub fn exp_level1(x: &[f64], depth: usize) -> TruncTensor {
+        let d = x.len();
+        let mut t = TruncTensor::one(d, depth);
+        for n in 1..=depth {
+            // levels[n] = levels[n-1] ⊗ x / n.
+            let prev = t.levels[n - 1].clone();
+            let inv_n = 1.0 / n as f64;
+            let ln = &mut t.levels[n];
+            for (i, &p) in prev.iter().enumerate() {
+                for (j, &xj) in x.iter().enumerate() {
+                    ln[i * d + j] = p * xj * inv_n;
+                }
+            }
+        }
+        t
+    }
+
+    /// Group inverse of a group-like element (`a_0 = 1`):
+    /// `a^{-1} = Σ_m (-1)^m y^{⊗m}` with `y = a - 1` (used by the §5
+    /// Chen-based windowing baseline and tests of Lemma 4.5).
+    pub fn group_inverse(&self) -> TruncTensor {
+        assert!(
+            (self.levels[0][0] - 1.0).abs() < 1e-9,
+            "group inverse needs scalar part 1"
+        );
+        let mut y = self.clone();
+        y.levels[0][0] = 0.0;
+        // Horner: inv = 1 - y(1 - y(1 - …)).
+        let mut acc = TruncTensor::one(self.d, self.depth);
+        for _ in 0..self.depth {
+            acc = TruncTensor::one(self.d, self.depth).sub(&y.mul(&acc));
+        }
+        acc
+    }
+
+    /// Maximum absolute coefficient difference (diagnostics in tests).
+    pub fn max_abs_diff(&self, other: &TruncTensor) -> f64 {
+        self.levels
+            .iter()
+            .zip(&other.levels)
+            .flat_map(|(a, b)| a.iter().zip(b).map(|(x, y)| (x - y).abs()))
+            .fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn one_is_identity() {
+        let x = TruncTensor::exp_level1(&[0.3, -0.7], 3);
+        let one = TruncTensor::one(2, 3);
+        assert!(x.mul(&one).max_abs_diff(&x) < 1e-15);
+        assert!(one.mul(&x).max_abs_diff(&x) < 1e-15);
+    }
+
+    #[test]
+    fn mul_associative() {
+        let mut rng = crate::util::rng::Rng::new(7);
+        for _ in 0..10 {
+            let a = TruncTensor::exp_level1(&[rng.gaussian(), rng.gaussian()], 4);
+            let b = TruncTensor::exp_level1(&[rng.gaussian(), rng.gaussian()], 4);
+            let c = TruncTensor::exp_level1(&[rng.gaussian(), rng.gaussian()], 4);
+            let lhs = a.mul(&b).mul(&c);
+            let rhs = a.mul(&b.mul(&c));
+            assert!(lhs.max_abs_diff(&rhs) < 1e-12);
+        }
+    }
+
+    #[test]
+    fn mul_assign_matches_mul() {
+        let mut rng = crate::util::rng::Rng::new(8);
+        let a = TruncTensor::exp_level1(&[rng.gaussian(), rng.gaussian(), rng.gaussian()], 3);
+        let b = TruncTensor::exp_level1(&[rng.gaussian(), rng.gaussian(), rng.gaussian()], 3);
+        let want = a.mul(&b);
+        let mut got = a.clone();
+        let mut scratch = Vec::new();
+        got.mul_assign(&b, &mut scratch);
+        assert!(got.max_abs_diff(&want) < 1e-14);
+    }
+
+    #[test]
+    fn exp_level1_coefficients() {
+        // exp(x) at word (i1,…,in) = Π x_i / n!.
+        let x = [2.0, -1.0];
+        let e = TruncTensor::exp_level1(&x, 3);
+        assert_eq!(e.levels[0][0], 1.0);
+        assert_eq!(e.coeff(&[0]), 2.0);
+        assert_eq!(e.coeff(&[1]), -1.0);
+        assert!((e.coeff(&[0, 1]) - (2.0 * -1.0) / 2.0).abs() < 1e-15);
+        assert!((e.coeff(&[0, 0, 1]) - (4.0 * -1.0) / 6.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn exp_is_group_homomorphism_on_parallel_increments() {
+        // exp(x) ⊗ exp(y) = exp(x+y) iff x ∥ y (same direction ⇒ the
+        // BCH correction vanishes).
+        let x = [0.4, 0.8];
+        let y = [0.2, 0.4];
+        let lhs = TruncTensor::exp_level1(&x, 4).mul(&TruncTensor::exp_level1(&y, 4));
+        let rhs = TruncTensor::exp_level1(&[0.6, 1.2], 4);
+        assert!(lhs.max_abs_diff(&rhs) < 1e-12);
+    }
+
+    #[test]
+    fn group_inverse_inverts() {
+        let mut rng = crate::util::rng::Rng::new(9);
+        let a = TruncTensor::exp_level1(&[rng.gaussian(), rng.gaussian()], 4)
+            .mul(&TruncTensor::exp_level1(&[rng.gaussian(), rng.gaussian()], 4));
+        let inv = a.group_inverse();
+        let prod = a.mul(&inv);
+        assert!(prod.max_abs_diff(&TruncTensor::one(2, 4)) < 1e-12);
+    }
+
+    #[test]
+    fn flatten_matches_word_order() {
+        let e = TruncTensor::exp_level1(&[1.0, 2.0], 2);
+        let flat = e.flatten_nonscalar();
+        // Order: (0), (1), (0,0), (0,1), (1,0), (1,1).
+        assert_eq!(flat.len(), 6);
+        assert_eq!(flat[0], 1.0);
+        assert_eq!(flat[1], 2.0);
+        assert!((flat[3] - 1.0).abs() < 1e-15); // (0,1): 1·2/2
+    }
+}

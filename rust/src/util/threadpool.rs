@@ -1,0 +1,287 @@
+//! Fixed-size work-stealing-free thread pool with scoped parallel-for.
+//!
+//! This is the "GPU" of the reproduction: the paper assigns one CUDA
+//! thread per prefix-closed word set (Definition 3.4); here each pool
+//! worker processes a contiguous block of (batch × word) units. The pool
+//! is deliberately simple — a shared injector queue of boxed jobs — since
+//! signature workloads are coarse-grained (one job per batch-block per
+//! step loop, not per step).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Msg {
+    Run(Job),
+    Shutdown,
+}
+
+/// A fixed pool of worker threads.
+pub struct ThreadPool {
+    tx: Sender<Msg>,
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    size: usize,
+}
+
+struct Shared {
+    rx: Mutex<Receiver<Msg>>,
+    pending: AtomicUsize,
+    done: Condvar,
+    done_lock: Mutex<()>,
+}
+
+impl ThreadPool {
+    /// Create a pool with `size` workers (min 1).
+    pub fn new(size: usize) -> Self {
+        let size = size.max(1);
+        let (tx, rx) = channel::<Msg>();
+        let shared = Arc::new(Shared {
+            rx: Mutex::new(rx),
+            pending: AtomicUsize::new(0),
+            done: Condvar::new(),
+            done_lock: Mutex::new(()),
+        });
+        let workers = (0..size)
+            .map(|_| {
+                let sh = Arc::clone(&shared);
+                std::thread::spawn(move || loop {
+                    let msg = { sh.rx.lock().unwrap().recv() };
+                    match msg {
+                        Ok(Msg::Run(job)) => {
+                            job();
+                            if sh.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
+                                let _g = sh.done_lock.lock().unwrap();
+                                sh.done.notify_all();
+                            }
+                        }
+                        Ok(Msg::Shutdown) | Err(_) => break,
+                    }
+                })
+            })
+            .collect();
+        ThreadPool {
+            tx,
+            shared,
+            workers,
+            size,
+        }
+    }
+
+    /// Pool sized to the machine (`available_parallelism`, capped at 16 —
+    /// the paper's workloads saturate well before that on CPU).
+    pub fn default_pool() -> Self {
+        let n = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+            .min(16);
+        ThreadPool::new(n)
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Submit a job. Prefer [`ThreadPool::scope_chunks`] for data
+    /// parallelism.
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.shared.pending.fetch_add(1, Ordering::AcqRel);
+        self.tx.send(Msg::Run(Box::new(f))).expect("pool closed");
+    }
+
+    /// Block until every submitted job has finished.
+    pub fn wait(&self) {
+        let mut guard = self.shared.done_lock.lock().unwrap();
+        while self.shared.pending.load(Ordering::Acquire) != 0 {
+            guard = self.shared.done.wait(guard).unwrap();
+        }
+    }
+
+    /// Parallel-for over disjoint mutable chunks of `data`: splits `data`
+    /// into `chunk` -sized pieces and runs `f(chunk_index, chunk)` across
+    /// the pool, blocking until all complete.
+    ///
+    /// Safety note: chunks are disjoint `&mut` slices obtained via
+    /// `chunks_mut`, moved into jobs with lifetimes erased by scoped
+    /// threads underneath — implemented with `std::thread::scope` so no
+    /// unsafe is needed.
+    pub fn scope_chunks<T: Send, F>(&self, data: &mut [T], chunk: usize, f: F)
+    where
+        F: Fn(usize, &mut [T]) + Send + Sync,
+    {
+        let chunk = chunk.max(1);
+        let n_jobs = data.len().div_ceil(chunk);
+        if n_jobs <= 1 {
+            if !data.is_empty() {
+                f(0, data);
+            }
+            return;
+        }
+        // Scoped threads sidestep 'static bounds; reuse pool size as the
+        // concurrency cap by batching chunks into `size` stripes.
+        let stripes = self.size.min(n_jobs);
+        std::thread::scope(|s| {
+            let f = &f;
+            for (stripe, piece) in data.chunks_mut(chunk * n_jobs.div_ceil(stripes)).enumerate() {
+                let base = stripe * n_jobs.div_ceil(stripes);
+                s.spawn(move || {
+                    for (k, sub) in piece.chunks_mut(chunk).enumerate() {
+                        f(base + k, sub);
+                    }
+                });
+            }
+        });
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        for _ in 0..self.workers.len() {
+            let _ = self.tx.send(Msg::Shutdown);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Run `f(i)` for `i in 0..n` across `threads` scoped threads, collecting
+/// results in order. The workhorse for batch-parallel signature kernels.
+pub fn parallel_map<T: Send, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    F: Fn(usize) -> T + Send + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        let f = &f;
+        let next = &next;
+        // Hand each worker an interleaved view via raw splitting on index.
+        let out_ptr = SendPtr(out.as_mut_ptr());
+        for _ in 0..threads {
+            s.spawn(move || {
+                // Capture the wrapper by value (edition-2021 disjoint
+                // capture would otherwise grab the raw field and lose
+                // the Send impl).
+                let slot = out_ptr;
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let v = f(i);
+                    // SAFETY: each index i is claimed exactly once via
+                    // the atomic counter, so writes are disjoint; the
+                    // scope guarantees `out` outlives the workers.
+                    unsafe {
+                        *slot.0.add(i) = Some(v);
+                    }
+                }
+            });
+        }
+    });
+    out.into_iter().map(|x| x.unwrap()).collect()
+}
+
+/// Run `f(i)` for `i in 0..n` for side effects only, across `threads`.
+pub fn parallel_for<F>(n: usize, threads: usize, f: F)
+where
+    F: Fn(usize) + Send + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 || n <= 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        let f = &f;
+        let next = &next;
+        for _ in 0..threads {
+            s.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                f(i);
+            });
+        }
+    });
+}
+
+struct SendPtr<T>(*mut T);
+// Manual Clone/Copy: the derive would add a spurious `T: Copy` bound.
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        SendPtr(self.0)
+    }
+}
+impl<T> Copy for SendPtr<T> {}
+// SAFETY: only used with disjoint index writes inside a scope.
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.wait();
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn scope_chunks_touches_every_element() {
+        let pool = ThreadPool::new(3);
+        let mut data = vec![0u64; 1000];
+        pool.scope_chunks(&mut data, 37, |_, chunk| {
+            for x in chunk {
+                *x += 1;
+            }
+        });
+        assert!(data.iter().all(|&x| x == 1));
+    }
+
+    #[test]
+    fn parallel_map_ordered() {
+        let out = parallel_map(257, 8, |i| i * i);
+        assert_eq!(out.len(), 257);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn parallel_for_counts() {
+        let counter = AtomicU64::new(0);
+        parallel_for(1234, 7, |_| {
+            counter.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 1234);
+    }
+
+    #[test]
+    fn parallel_map_single_thread_fallback() {
+        let out = parallel_map(5, 1, |i| i + 1);
+        assert_eq!(out, vec![1, 2, 3, 4, 5]);
+    }
+}

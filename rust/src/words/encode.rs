@@ -1,0 +1,222 @@
+//! Appendix A: representation of words as base-`d` integers.
+//!
+//! A word `w = (i_1, …, i_n)` over the 0-based alphabet `{0, …, d-1}`
+//! encodes as `φ_n(w) = Σ_j i_j d^{n-j}` (Definition A.1). The encoding is
+//! level-wise bijective and order-preserving (Proposition A.2), and word
+//! operations become integer arithmetic:
+//!
+//! * concatenation: `φ(u∘v) = φ(u)·d^{|v|} + φ(v)` (Proposition A.3),
+//! * prefix extraction: `φ(u) = ⌊φ(w)/d^{|v|}⌋` (Corollary A.4),
+//! * suffix extraction: `φ(v) = φ(w) mod d^{|v|}` (Corollary A.5).
+//!
+//! §A.2's packed-letters trick (decode once, then extract letters with
+//! shifts/masks) is implemented in [`packed_letters`] / [`unpack_letter`].
+
+use super::Word;
+
+/// A word encoded as (level, base-d code). The pair is needed because
+/// `φ_n` is only bijective per level (e.g. `(0)` and `(0,0)` both encode
+/// to 0).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Encoded {
+    pub level: u8,
+    pub code: u64,
+}
+
+/// `φ_n(w)` — base-`d` integer encoding of a word (Definition A.1).
+///
+/// Panics in debug mode if a letter is out of range or the code would
+/// overflow `u64` (requires `|w|·log2(d) < 64`).
+pub fn word_code(word: &[u16], d: usize) -> u64 {
+    let mut code: u64 = 0;
+    for &letter in word {
+        debug_assert!((letter as usize) < d, "letter {letter} out of range for d={d}");
+        code = code
+            .checked_mul(d as u64)
+            .and_then(|c| c.checked_add(letter as u64))
+            .expect("word code overflows u64");
+    }
+    code
+}
+
+/// Decode a (level, code) pair back into letters.
+pub fn decode(enc: Encoded, d: usize) -> Word {
+    let mut letters = vec![0u16; enc.level as usize];
+    let mut c = enc.code;
+    for slot in letters.iter_mut().rev() {
+        *slot = (c % d as u64) as u16;
+        c /= d as u64;
+    }
+    debug_assert_eq!(c, 0, "code too large for level");
+    Word(letters)
+}
+
+/// Proposition A.3: `φ(u∘v) = φ(u)·d^m + φ(v)` for `|v| = m`.
+pub fn concat_code(u_code: u64, v_code: u64, v_len: usize, d: usize) -> u64 {
+    u_code * (d as u64).pow(v_len as u32) + v_code
+}
+
+/// Corollary A.4: the code of the length-`k` prefix of a length-`n` word.
+pub fn prefix_code(w_code: u64, n: usize, k: usize, d: usize) -> u64 {
+    debug_assert!(k <= n);
+    w_code / (d as u64).pow((n - k) as u32)
+}
+
+/// Corollary A.5: the code of the suffix of length `m`.
+pub fn suffix_code(w_code: u64, m: usize, d: usize) -> u64 {
+    w_code % (d as u64).pow(m as u32)
+}
+
+/// §A.2: pack the letters of a word into a single `u64`,
+/// `Σ_j i_j · 2^{b(j-1)}` with `b = max(⌈log2 d⌉, 1)` bits per letter.
+/// Returns `(packed, bits_per_letter)`. Panics if the word does not fit
+/// (`b·n > 64`).
+pub fn packed_letters(word: &[u16], d: usize) -> (u64, u32) {
+    let b = bits_per_letter(d);
+    assert!(
+        b as usize * word.len() <= 64,
+        "word of length {} does not fit at {} bits/letter",
+        word.len(),
+        b
+    );
+    let mut packed: u64 = 0;
+    for (j, &letter) in word.iter().enumerate() {
+        packed |= (letter as u64) << (b * j as u32);
+    }
+    (packed, b)
+}
+
+/// Extract letter `j` (0-based) from a packed representation.
+#[inline]
+pub fn unpack_letter(packed: u64, b: u32, j: usize) -> u16 {
+    ((packed >> (b * j as u32)) & ((1u64 << b) - 1)) as u16
+}
+
+/// Bits needed per letter: `max(⌈log2 d⌉, 1)`.
+pub fn bits_per_letter(d: usize) -> u32 {
+    usize::BITS - (d - 1).max(1).leading_zeros()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_word(rng: &mut Rng, d: usize, n: usize) -> Vec<u16> {
+        (0..n).map(|_| rng.below(d) as u16).collect()
+    }
+
+    #[test]
+    fn encoding_bijective_per_level() {
+        // Every word of W_3 over d=3 gets a distinct code in [0, 27).
+        let d = 3;
+        let mut seen = std::collections::HashSet::new();
+        for a in 0..d as u16 {
+            for b in 0..d as u16 {
+                for c in 0..d as u16 {
+                    let code = word_code(&[a, b, c], d);
+                    assert!(code < 27);
+                    assert!(seen.insert(code));
+                }
+            }
+        }
+        assert_eq!(seen.len(), 27);
+    }
+
+    #[test]
+    fn encoding_preserves_lex_order() {
+        let d = 4;
+        let w1 = [0u16, 2, 3];
+        let w2 = [0u16, 3, 0];
+        assert!(word_code(&w1, d) < word_code(&w2, d));
+    }
+
+    #[test]
+    fn decode_roundtrip_random() {
+        let mut rng = Rng::new(41);
+        for _ in 0..200 {
+            let d = rng.range(2, 10);
+            let n = rng.range(0, 8);
+            let w = random_word(&mut rng, d, n);
+            let enc = Encoded {
+                level: n as u8,
+                code: word_code(&w, d),
+            };
+            assert_eq!(decode(enc, d).0, w);
+        }
+    }
+
+    #[test]
+    fn concat_matches_direct_encoding() {
+        let mut rng = Rng::new(42);
+        for _ in 0..200 {
+            let d = rng.range(2, 8);
+            let nu = rng.range(0, 5);
+            let u = random_word(&mut rng, d, nu);
+            let nv = rng.range(0, 5);
+            let v = random_word(&mut rng, d, nv);
+            let mut uv = u.clone();
+            uv.extend_from_slice(&v);
+            assert_eq!(
+                concat_code(word_code(&u, d), word_code(&v, d), v.len(), d),
+                word_code(&uv, d)
+            );
+        }
+    }
+
+    #[test]
+    fn prefix_suffix_extraction() {
+        let mut rng = Rng::new(43);
+        for _ in 0..200 {
+            let d = rng.range(2, 8);
+            let n = rng.range(1, 7);
+            let w = random_word(&mut rng, d, n);
+            let code = word_code(&w, d);
+            for k in 0..=n {
+                assert_eq!(
+                    prefix_code(code, n, k, d),
+                    word_code(&w[..k], d),
+                    "prefix k={k} of {w:?}"
+                );
+                assert_eq!(
+                    suffix_code(code, n - k, d),
+                    word_code(&w[k..], d),
+                    "suffix from {k} of {w:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn packed_letters_roundtrip() {
+        let mut rng = Rng::new(44);
+        for _ in 0..200 {
+            let d = rng.range(2, 40);
+            let b = bits_per_letter(d) as usize;
+            let nmax = (64 / b).min(10);
+            let n = rng.range(1, nmax);
+            let w = random_word(&mut rng, d, n);
+            let (packed, bits) = packed_letters(&w, d);
+            for (j, &want) in w.iter().enumerate() {
+                assert_eq!(unpack_letter(packed, bits, j), want);
+            }
+        }
+    }
+
+    #[test]
+    fn bits_per_letter_values() {
+        assert_eq!(bits_per_letter(2), 1);
+        assert_eq!(bits_per_letter(3), 2);
+        assert_eq!(bits_per_letter(4), 2);
+        assert_eq!(bits_per_letter(5), 3);
+        assert_eq!(bits_per_letter(40), 6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn packed_letters_overflow_panics() {
+        // 40 letters at 2 bits each = 80 bits > 64.
+        let w = vec![1u16; 40];
+        packed_letters(&w, 3);
+    }
+}

@@ -1,0 +1,302 @@
+//! Word-set generators — the projections of §7 plus plain truncation.
+//!
+//! Each generator returns a plain `Vec<Word>` (the *requested* output
+//! coordinates, in a deterministic order). Engines then build a
+//! [`super::WordTable`], which computes the prefix closure needed for
+//! Chen's relation.
+
+use super::{lyndon::lyndon_words, Word};
+
+/// A declarative word-set specification — the coordinator's wire-level
+/// description of a projection (parsed from request JSON).
+#[derive(Clone, Debug, PartialEq)]
+pub enum WordSpec {
+    /// `W_{≤N}`: full truncation at depth N (§2.1).
+    Truncated { depth: usize },
+    /// `W^γ_{≤r}`: anisotropic truncation (Definition 7.1).
+    Anisotropic { gamma: Vec<f64>, cutoff: f64 },
+    /// `W_{≤N}(G)`: words tracing edges of a DAG/digraph on channels
+    /// (§7.1). `edges[i]` lists the letters allowed to follow letter `i`.
+    Dag { depth: usize, edges: Vec<Vec<u16>> },
+    /// Concatenations of a generator set with `|w| ≤ depth` (§8's sparse
+    /// lead–lag construction).
+    ConcatGenerated { depth: usize, generators: Vec<Word> },
+    /// Lyndon words up to `depth` (the log-signature output set).
+    Lyndon { depth: usize },
+    /// An explicit list.
+    Custom { words: Vec<Word> },
+}
+
+impl WordSpec {
+    /// Materialise the word set for alphabet size `d`.
+    pub fn words(&self, d: usize) -> Vec<Word> {
+        match self {
+            WordSpec::Truncated { depth } => truncated_words(d, *depth),
+            WordSpec::Anisotropic { gamma, cutoff } => anisotropic_words(d, gamma, *cutoff),
+            WordSpec::Dag { depth, edges } => dag_words(d, *depth, edges),
+            WordSpec::ConcatGenerated { depth, generators } => {
+                concat_generated_words(d, *depth, generators)
+            }
+            WordSpec::Lyndon { depth } => lyndon_words(d, *depth),
+            WordSpec::Custom { words } => words.clone(),
+        }
+    }
+
+    /// Short description used in artifact names and logs.
+    pub fn describe(&self) -> String {
+        match self {
+            WordSpec::Truncated { depth } => format!("trunc_n{depth}"),
+            WordSpec::Anisotropic { cutoff, .. } => format!("aniso_r{cutoff}"),
+            WordSpec::Dag { depth, .. } => format!("dag_n{depth}"),
+            WordSpec::ConcatGenerated { depth, .. } => format!("gen_n{depth}"),
+            WordSpec::Lyndon { depth } => format!("lyndon_n{depth}"),
+            WordSpec::Custom { words } => format!("custom_{}", words.len()),
+        }
+    }
+}
+
+/// All non-empty words of length `1..=depth`: `W_{≤N} \ {ε}`, ordered by
+/// (level, lexicographic) — the canonical truncated-signature layout.
+/// Size `Σ_{n=1}^{N} d^n` (the paper's `D_sig`).
+pub fn truncated_words(d: usize, depth: usize) -> Vec<Word> {
+    let mut out = Vec::new();
+    let mut level: Vec<Word> = vec![Word::empty()];
+    for _ in 1..=depth {
+        let mut next = Vec::with_capacity(level.len() * d);
+        for w in &level {
+            for letter in 0..d as u16 {
+                let mut v = w.0.clone();
+                v.push(letter);
+                next.push(Word(v));
+            }
+        }
+        out.extend(next.iter().cloned());
+        level = next;
+    }
+    out
+}
+
+/// The truncated signature dimension `D_sig = Σ_{n=1}^N d^n` (paper §6.2).
+pub fn sig_dim(d: usize, depth: usize) -> usize {
+    (1..=depth).map(|n| d.pow(n as u32)).sum()
+}
+
+/// Anisotropic words `W^γ_{≤r} \ {ε}` (Definition 7.1): all words with
+/// weighted degree `Σ γ_{i_j} ≤ r`. Requires all `γ_i > 0` so the set is
+/// finite. Ordered by (level, lex).
+pub fn anisotropic_words(d: usize, gamma: &[f64], cutoff: f64) -> Vec<Word> {
+    assert_eq!(gamma.len(), d, "need one weight per channel");
+    assert!(gamma.iter().all(|&g| g > 0.0), "weights must be positive");
+    let mut out = Vec::new();
+    // BFS by level; a word is extendable only if some extension stays
+    // under the cutoff.
+    let mut frontier: Vec<(Word, f64)> = vec![(Word::empty(), 0.0)];
+    while !frontier.is_empty() {
+        let mut next = Vec::new();
+        for (w, deg) in &frontier {
+            for letter in 0..d as u16 {
+                let nd = deg + gamma[letter as usize];
+                if nd <= cutoff + 1e-12 {
+                    let mut v = w.0.clone();
+                    v.push(letter);
+                    next.push((Word(v), nd));
+                }
+            }
+        }
+        out.extend(next.iter().map(|(w, _)| w.clone()));
+        frontier = next;
+    }
+    out
+}
+
+/// DAG-induced words `W_{≤N}(G) \ {ε}` (§7.1): words whose consecutive
+/// letter pairs trace edges of the digraph. `edges[i]` = letters allowed
+/// after letter `i` (need not be acyclic — any digraph works).
+pub fn dag_words(d: usize, depth: usize, edges: &[Vec<u16>]) -> Vec<Word> {
+    assert_eq!(edges.len(), d, "need an adjacency list per channel");
+    let mut out = Vec::new();
+    let mut frontier: Vec<Word> = (0..d as u16).map(|i| Word(vec![i])).collect();
+    for _ in 0..depth {
+        out.extend(frontier.iter().cloned());
+        let mut next = Vec::new();
+        for w in &frontier {
+            let last = *w.0.last().unwrap() as usize;
+            for &nxt in &edges[last] {
+                let mut v = w.0.clone();
+                v.push(nxt);
+                next.push(Word(v));
+            }
+        }
+        frontier = next;
+        if frontier.is_empty() {
+            break;
+        }
+    }
+    // Frontier words beyond depth are dropped: out currently holds
+    // lengths 1..=depth (loop pushed before extending).
+    out.retain(|w| w.len() <= depth);
+    out.sort_by_key(|w| (w.len(), w.0.clone()));
+    out
+}
+
+/// §8: all concatenations `u_1 ∘ … ∘ u_p` of the generator words with
+/// total length ≤ `depth` (ε excluded). Deduplicated, ordered (level,
+/// lex). This is the paper's sparse lead–lag construction when the
+/// generators are `{(L_i)} ∪ {(ℓ_i, L_i), (L_i, ℓ_i)}`.
+pub fn concat_generated_words(d: usize, depth: usize, generators: &[Word]) -> Vec<Word> {
+    let mut seen = std::collections::HashSet::new();
+    let mut out: Vec<Word> = Vec::new();
+    let gens: Vec<&Word> = generators.iter().filter(|g| !g.is_empty()).collect();
+    for g in &gens {
+        assert!(
+            g.0.iter().all(|&l| (l as usize) < d),
+            "generator letter out of range"
+        );
+    }
+    // BFS over concatenation depth.
+    let mut frontier: Vec<Word> = vec![Word::empty()];
+    while !frontier.is_empty() {
+        let mut next = Vec::new();
+        for w in &frontier {
+            for g in &gens {
+                if w.len() + g.len() <= depth {
+                    let cat = w.concat(g);
+                    if seen.insert(cat.clone()) {
+                        next.push(cat);
+                    }
+                }
+            }
+        }
+        out.extend(next.iter().cloned());
+        frontier = next;
+    }
+    out.sort_by_key(|w| (w.len(), w.0.clone()));
+    out
+}
+
+/// §8's sparse lead–lag generator set for a `dim`-channel base path whose
+/// lead–lag lift has channels `(ℓ_1,…,ℓ_dim, L_1,…,L_dim)`; letter `i` is
+/// the lag channel and `dim + i` the lead channel of coordinate `i`.
+///
+/// `G = {(L_i)} ∪ {(ℓ_i, L_i), (L_i, ℓ_i) : i}` — single lead letters plus
+/// same-coordinate lead/lag area pairs (cross-coordinate pairs are
+/// excluded because independent components have zero quadratic
+/// covariation).
+pub fn sparse_leadlag_generators(dim: usize) -> Vec<Word> {
+    let mut gens = Vec::new();
+    for i in 0..dim as u16 {
+        let lag = i;
+        let lead = dim as u16 + i;
+        gens.push(Word(vec![lead]));
+        gens.push(Word(vec![lag, lead]));
+        gens.push(Word(vec![lead, lag]));
+    }
+    gens
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn truncated_count_is_sig_dim() {
+        for d in 2..=4 {
+            for n in 1..=4 {
+                assert_eq!(truncated_words(d, n).len(), sig_dim(d, n));
+            }
+        }
+        // Paper Table 1 sanity: d=6, N=3 → 258.
+        assert_eq!(sig_dim(6, 3), 258);
+        // d=6, N=6 → 55986 ≈ "56.0K".
+        assert_eq!(sig_dim(6, 6), 55986);
+        // d=8, N=6 → 299592 ≈ "299.6K" (Table 2).
+        assert_eq!(sig_dim(8, 6), 299592);
+        // d=10, N=4 → 11110 ≈ "11.1K" (Table 1).
+        assert_eq!(sig_dim(10, 4), 11110);
+        // d=4, N=6 → 5460 ≈ "5.5K" (Table 1).
+        assert_eq!(sig_dim(4, 6), 5460);
+    }
+
+    #[test]
+    fn truncated_level_lex_order() {
+        let ws = truncated_words(3, 3);
+        for pair in ws.windows(2) {
+            assert!((pair[0].len(), &pair[0].0) < (pair[1].len(), &pair[1].0));
+        }
+    }
+
+    #[test]
+    fn anisotropic_unit_weights_equal_truncation() {
+        let d = 3;
+        let got = anisotropic_words(d, &[1.0; 3], 4.0);
+        let want = truncated_words(d, 4);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn anisotropic_heavy_channel_restricted() {
+        // Channel 1 has weight 2: words using it twice need degree ≥ 4.
+        let ws = anisotropic_words(2, &[1.0, 2.0], 3.0);
+        assert!(ws.contains(&Word(vec![0, 0, 0])));
+        assert!(ws.contains(&Word(vec![1, 0])));
+        assert!(!ws.contains(&Word(vec![1, 1])));
+        // Prefix-closed by construction.
+        for w in &ws {
+            for k in 1..w.len() {
+                assert!(ws.contains(&w.prefix(k)));
+            }
+        }
+    }
+
+    #[test]
+    fn dag_chain_graph() {
+        // 0 → 1 → 2, no other edges.
+        let edges = vec![vec![1u16], vec![2u16], vec![]];
+        let ws = dag_words(3, 3, &edges);
+        assert!(ws.contains(&Word(vec![0, 1, 2])));
+        assert!(ws.contains(&Word(vec![1, 2])));
+        assert!(!ws.iter().any(|w| w.0.windows(2).any(|p| p == [1, 0])));
+        // Levels: 3 singles + 2 pairs + 1 triple.
+        assert_eq!(ws.len(), 6);
+    }
+
+    #[test]
+    fn dag_complete_graph_equals_truncation() {
+        let d = 3;
+        let edges: Vec<Vec<u16>> = (0..d).map(|_| (0..d as u16).collect()).collect();
+        assert_eq!(dag_words(d, 3, &edges), truncated_words(d, 3));
+    }
+
+    #[test]
+    fn concat_generated_counts_match_composition_formula() {
+        // Generators: 5 lead singles + 10 pairs (dim 5 lead–lag, §8).
+        let gens = sparse_leadlag_generators(5);
+        let ws = concat_generated_words(10, 4, &gens);
+        // Naive composition counts are c_1=5, c_2=5²+10=35,
+        // c_3=5³+2·5·10=225, c_4=5⁴+3·25·10+100=1725, but distinct
+        // WORDS are fewer because decompositions collide (e.g.
+        // L_i∘(ℓ_i,L_i) = (L_i,ℓ_i)∘L_i). Golden values verified by
+        // exhaustive enumeration: 5 / 35 / 220 / 1425.
+        let by_len = |n: usize| ws.iter().filter(|w| w.len() == n).count();
+        assert_eq!(by_len(1), 5);
+        assert_eq!(by_len(2), 35);
+        assert_eq!(by_len(3), 220);
+        assert_eq!(by_len(4), 1425);
+        assert_eq!(ws.len(), 1685);
+    }
+
+    #[test]
+    fn concat_generated_dedups() {
+        // Generators (0) and (0,0) produce overlapping concatenations.
+        let gens = vec![Word(vec![0]), Word(vec![0, 0])];
+        let ws = concat_generated_words(1, 3, &gens);
+        assert_eq!(ws.len(), 3); // (0), (0,0), (0,0,0)
+    }
+
+    #[test]
+    fn wordspec_roundtrip_describe() {
+        let spec = WordSpec::Truncated { depth: 4 };
+        assert_eq!(spec.describe(), "trunc_n4");
+        assert_eq!(spec.words(3).len(), sig_dim(3, 4));
+    }
+}

@@ -1,0 +1,172 @@
+//! Lyndon words via Duval's algorithm.
+//!
+//! Lyndon words index the paper's log-signature basis (§3.3): the
+//! coefficients of the tensor logarithm at Lyndon-word indices form the
+//! "computationally efficient Lie basis" of Signatory that `pathsig`
+//! adopts. A word is Lyndon iff it is strictly smaller (lexicographically)
+//! than all of its proper rotations.
+
+use super::Word;
+
+/// All Lyndon words over `{0,…,d-1}` of length `1..=max_len`, in
+/// lexicographic order (which Duval produces naturally).
+pub fn lyndon_words(d: usize, max_len: usize) -> Vec<Word> {
+    assert!(d >= 1);
+    let mut out = Vec::new();
+    if max_len == 0 {
+        return out;
+    }
+    // Duval's generation algorithm.
+    let mut w: Vec<u16> = vec![0];
+    loop {
+        if w.len() <= max_len {
+            out.push(Word(w.clone()));
+        }
+        // Extend periodically up to max_len…
+        let base = w.clone();
+        while w.len() < max_len {
+            let next = base[(w.len()) % base.len()];
+            w.push(next);
+        }
+        // …then increment the last non-maximal letter.
+        while let Some(&last) = w.last() {
+            if last as usize == d - 1 {
+                w.pop();
+            } else {
+                *w.last_mut().unwrap() += 1;
+                break;
+            }
+        }
+        if w.is_empty() {
+            break;
+        }
+    }
+    out
+}
+
+/// Lyndon words of exactly length `n`.
+pub fn lyndon_words_at_level(d: usize, n: usize) -> Vec<Word> {
+    lyndon_words(d, n).into_iter().filter(|w| w.len() == n).collect()
+}
+
+/// Witt's formula: the number of Lyndon words of length `n` over a
+/// `d`-letter alphabet, `(1/n) Σ_{k|n} μ(k) d^{n/k}` — equals the
+/// dimension of the degree-`n` component of the free Lie algebra, hence
+/// the level-`n` log-signature dimension.
+pub fn witt_count(d: usize, n: usize) -> usize {
+    assert!(n >= 1);
+    let mut total: i128 = 0;
+    for k in 1..=n {
+        if n % k == 0 {
+            total += moebius(k) as i128 * (d as i128).pow((n / k) as u32);
+        }
+    }
+    (total / n as i128) as usize
+}
+
+/// Total log-signature dimension up to depth `N` (sum of Witt counts).
+pub fn logsig_dim(d: usize, depth: usize) -> usize {
+    (1..=depth).map(|n| witt_count(d, n)).sum()
+}
+
+/// Möbius function μ(k).
+fn moebius(mut k: usize) -> i64 {
+    let mut primes = 0;
+    let mut p = 2;
+    while p * p <= k {
+        if k % p == 0 {
+            k /= p;
+            if k % p == 0 {
+                return 0; // squared factor
+            }
+            primes += 1;
+        }
+        p += 1;
+    }
+    if k > 1 {
+        primes += 1;
+    }
+    if primes % 2 == 0 {
+        1
+    } else {
+        -1
+    }
+}
+
+/// Check the Lyndon property directly (used in tests; O(n²)).
+pub fn is_lyndon(w: &[u16]) -> bool {
+    if w.is_empty() {
+        return false;
+    }
+    let n = w.len();
+    for r in 1..n {
+        let rotated: Vec<u16> = w[r..].iter().chain(&w[..r]).copied().collect();
+        if rotated.as_slice() <= w {
+            return false;
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_match_witt_formula() {
+        for d in 2..=5 {
+            for n in 1..=6 {
+                let got = lyndon_words_at_level(d, n).len();
+                assert_eq!(got, witt_count(d, n), "d={d} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn known_small_counts() {
+        // d=2: 2, 1, 2, 3, 6, 9 at levels 1..6.
+        let want = [2, 1, 2, 3, 6, 9];
+        for (n, &w) in want.iter().enumerate() {
+            assert_eq!(witt_count(2, n + 1), w);
+        }
+        // Paper Table 3: (d=6, N=3) logsig dim 91 → minus? The paper's 91
+        // at (32,100,6) N=3: 6 + 15 + 70 = 91.
+        assert_eq!(logsig_dim(6, 3), 91);
+        // Table 3: (d=6, N=4): 406 = 91 + 315.
+        assert_eq!(logsig_dim(6, 4), 406);
+        // Table 3: (d=4, N=6): 964.
+        assert_eq!(logsig_dim(4, 6), 964);
+        // Table 3: (d=10, N=4): 2.9K = 10 + 45 + 330 + 2475.
+        assert_eq!(logsig_dim(10, 4), 2860);
+    }
+
+    #[test]
+    fn all_generated_are_lyndon() {
+        for d in 2..=4 {
+            for w in lyndon_words(d, 5) {
+                assert!(is_lyndon(&w.0), "{:?} not lyndon", w);
+            }
+        }
+    }
+
+    #[test]
+    fn lexicographic_order() {
+        let ws = lyndon_words(3, 4);
+        for pair in ws.windows(2) {
+            assert!(pair[0].0 < pair[1].0);
+        }
+    }
+
+    #[test]
+    fn no_duplicates() {
+        let ws = lyndon_words(3, 6);
+        let set: std::collections::HashSet<_> = ws.iter().collect();
+        assert_eq!(set.len(), ws.len());
+    }
+
+    #[test]
+    fn single_letter_alphabet() {
+        let ws = lyndon_words(1, 5);
+        assert_eq!(ws, vec![Word(vec![0])]);
+    }
+}

@@ -1,0 +1,136 @@
+//! Words over the alphabet `{0, …, d-1}` — the index set of the tensor
+//! algebra's canonical basis (paper §2.3 and Appendix A).
+//!
+//! Everything the engines consume is derived here:
+//!
+//! * [`encode`] — the paper's Appendix-A base-`d` integer encoding with
+//!   arithmetic concatenation / prefix / suffix extraction, plus the §A.2
+//!   packed-letters bit layout.
+//! * [`Word`] — an owned word (sequence of 0-based letters).
+//! * [`table::WordTable`] — the flat, prefix-closed computation table
+//!   (letters, prefix indices, level ranges, output projection) used by
+//!   the signature engines and mirrored bit-for-bit by
+//!   `python/compile/words.py` for the Pallas kernels.
+//! * [`generate`] — word-set generators: truncation, anisotropic (§7.2),
+//!   DAG-induced (§7.1), concatenation-generated (§8), custom lists.
+//! * [`lyndon`] — Lyndon words (Duval's algorithm) for the log-signature
+//!   basis (§3.3).
+
+pub mod encode;
+pub mod generate;
+pub mod lyndon;
+pub mod table;
+
+pub use encode::{concat_code, packed_letters, prefix_code, suffix_code, word_code, Encoded};
+pub use generate::{
+    anisotropic_words, concat_generated_words, dag_words, truncated_words, WordSpec,
+};
+pub use lyndon::{lyndon_words, lyndon_words_at_level};
+pub use table::WordTable;
+
+/// A word: a finite sequence of 0-based letters `0..d`. The empty word is
+/// `Word(vec![])`.
+#[derive(Clone, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Word(pub Vec<u16>);
+
+impl Word {
+    pub fn empty() -> Word {
+        Word(Vec::new())
+    }
+
+    pub fn len(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+
+    /// The prefix of length `k` (paper notation `w_[k]`).
+    pub fn prefix(&self, k: usize) -> Word {
+        Word(self.0[..k].to_vec())
+    }
+
+    /// The suffix starting after position `k` (so `w = w_[k] ∘ suffix`).
+    pub fn suffix_from(&self, k: usize) -> Word {
+        Word(self.0[k..].to_vec())
+    }
+
+    /// Concatenation `self ∘ other` (Definition 2.5).
+    pub fn concat(&self, other: &Word) -> Word {
+        let mut v = self.0.clone();
+        v.extend_from_slice(&other.0);
+        Word(v)
+    }
+
+    /// Weighted degree `|w|_γ` (Definition 7.1). Plain length when all
+    /// weights are 1.
+    pub fn weighted_degree(&self, gamma: &[f64]) -> f64 {
+        self.0.iter().map(|&i| gamma[i as usize]).sum()
+    }
+
+    /// All proper and improper prefixes, shortest first (including ε and
+    /// the word itself).
+    pub fn prefixes(&self) -> impl Iterator<Item = Word> + '_ {
+        (0..=self.len()).map(move |k| self.prefix(k))
+    }
+
+    /// Render as e.g. `(1,3,2)` with 1-based letters, matching the
+    /// paper's notation. ε renders as `ε`.
+    pub fn pretty(&self) -> String {
+        if self.is_empty() {
+            return "ε".to_string();
+        }
+        let parts: Vec<String> = self.0.iter().map(|&i| (i + 1).to_string()).collect();
+        format!("({})", parts.join(","))
+    }
+}
+
+impl From<&[u16]> for Word {
+    fn from(s: &[u16]) -> Word {
+        Word(s.to_vec())
+    }
+}
+
+impl<const K: usize> From<[u16; K]> for Word {
+    fn from(s: [u16; K]) -> Word {
+        Word(s.to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prefix_suffix_partition() {
+        let w = Word(vec![0, 2, 1, 3]);
+        for k in 0..=4 {
+            let joined = w.prefix(k).concat(&w.suffix_from(k));
+            assert_eq!(joined, w);
+        }
+    }
+
+    #[test]
+    fn weighted_degree_reduces_to_length() {
+        let w = Word(vec![0, 1, 0]);
+        assert_eq!(w.weighted_degree(&[1.0, 1.0]), 3.0);
+        assert_eq!(w.weighted_degree(&[0.5, 2.0]), 3.0);
+    }
+
+    #[test]
+    fn pretty_is_one_based() {
+        assert_eq!(Word(vec![0, 2]).pretty(), "(1,3)");
+        assert_eq!(Word::empty().pretty(), "ε");
+    }
+
+    #[test]
+    fn prefixes_enumerate_all() {
+        let w = Word(vec![1, 0]);
+        let ps: Vec<Word> = w.prefixes().collect();
+        assert_eq!(
+            ps,
+            vec![Word::empty(), Word(vec![1]), Word(vec![1, 0])]
+        );
+    }
+}

@@ -1,0 +1,311 @@
+//! The flat, prefix-closed computation table consumed by every signature
+//! engine (§3.1–§3.2 of the paper).
+//!
+//! Given a requested word set `I`, the table holds the **prefix closure**
+//! `C(I)` — the smallest prefix-closed superset (Definition 3.3) — sorted
+//! by (level, lexicographic), with the empty word at state index 0. Per
+//! word it stores the letters and the state indices of all proper
+//! prefixes, so Algorithm 1's Horner update is a pair of flat gathers.
+//! The same layout is produced by `python/compile/words.py` for the
+//! Pallas kernel (golden-file cross-checked).
+
+use super::{encode::word_code, Word};
+use std::collections::HashMap;
+
+/// Flat word table over the prefix closure of a requested word set.
+#[derive(Clone, Debug)]
+pub struct WordTable {
+    /// Alphabet size `d`.
+    pub d: usize,
+    /// Maximum word length in the closure (`N`).
+    pub max_level: usize,
+    /// Number of state entries (closure size, including ε at index 0).
+    pub state_len: usize,
+    /// The closure words in state order (index 0 = ε).
+    pub words: Vec<Word>,
+    /// `level_start[n]..level_start[n+1]` is the state-index range of
+    /// level-`n` words; `level_start.len() == max_level + 2`.
+    pub level_start: Vec<usize>,
+    /// Letters, stride `max_level`: `letters[i*stride + t]` = letter
+    /// `i_{t+1}` of word `i` (0 beyond the word's length).
+    pub letters: Vec<u16>,
+    /// Prefix state indices, stride `max_level`:
+    /// `prefix_idx[i*stride + k]` = state index of `w_[k]`
+    /// (so entry `k=0` is always 0 = ε; entries `k ≥ |w|` unused).
+    pub prefix_idx: Vec<u32>,
+    /// State indices of the *requested* words, in request order — the
+    /// output projection `π_I` (§7.1).
+    pub output_map: Vec<u32>,
+    /// The requested words (request order), for introspection.
+    pub requested: Vec<Word>,
+}
+
+impl WordTable {
+    /// Build the table for requested word set `request` over alphabet
+    /// `d`. ε entries in the request are rejected (the signature at ε is
+    /// identically 1). Duplicates in the request are allowed and map to
+    /// the same state index.
+    pub fn build(d: usize, request: &[Word]) -> WordTable {
+        assert!(d >= 1, "alphabet must be non-empty");
+        for w in request {
+            assert!(!w.is_empty(), "ε is not a valid output coordinate");
+            assert!(
+                w.0.iter().all(|&l| (l as usize) < d),
+                "letter out of range in {:?}",
+                w
+            );
+        }
+
+        // Prefix closure, keyed by (level, base-d code).
+        let mut closure: HashMap<(u8, u64), Word> = HashMap::new();
+        closure.insert((0, 0), Word::empty());
+        for w in request {
+            for k in 1..=w.len() {
+                let p = w.prefix(k);
+                let key = (k as u8, word_code(&p.0, d));
+                closure.entry(key).or_insert(p);
+            }
+        }
+
+        // Sort by (level, code) — code order == lex order per level
+        // (Proposition A.2).
+        let mut entries: Vec<((u8, u64), Word)> = closure.into_iter().collect();
+        entries.sort_by_key(|(key, _)| *key);
+
+        let max_level = entries.last().map(|((l, _), _)| *l as usize).unwrap_or(0);
+        let stride = max_level.max(1);
+        let state_len = entries.len();
+
+        let mut index_of: HashMap<(u8, u64), u32> = HashMap::with_capacity(state_len);
+        let mut words = Vec::with_capacity(state_len);
+        let mut level_start = vec![0usize; max_level + 2];
+        for (i, ((lvl, code), w)) in entries.iter().enumerate() {
+            index_of.insert((*lvl, *code), i as u32);
+            words.push(w.clone());
+            level_start[*lvl as usize + 1] = i + 1;
+        }
+        // Forward-fill empty levels (possible only in degenerate cases).
+        for n in 1..level_start.len() {
+            if level_start[n] < level_start[n - 1] {
+                level_start[n] = level_start[n - 1];
+            }
+        }
+
+        let mut letters = vec![0u16; state_len * stride];
+        let mut prefix_idx = vec![0u32; state_len * stride];
+        for (i, w) in words.iter().enumerate() {
+            for (t, &l) in w.0.iter().enumerate() {
+                letters[i * stride + t] = l;
+            }
+            for k in 0..w.len() {
+                let p = &w.0[..k];
+                let key = (k as u8, word_code(p, d));
+                prefix_idx[i * stride + k] = index_of[&key];
+            }
+        }
+
+        let output_map = request
+            .iter()
+            .map(|w| index_of[&(w.len() as u8, word_code(&w.0, d))])
+            .collect();
+
+        WordTable {
+            d,
+            max_level,
+            state_len,
+            words,
+            level_start,
+            letters,
+            prefix_idx,
+            output_map,
+            requested: request.to_vec(),
+        }
+    }
+
+    /// Stride of the `letters` / `prefix_idx` tables.
+    #[inline]
+    pub fn stride(&self) -> usize {
+        self.max_level.max(1)
+    }
+
+    /// State-index range of level-`n` words.
+    #[inline]
+    pub fn level_range(&self, n: usize) -> std::ops::Range<usize> {
+        self.level_start[n]..self.level_start[n + 1]
+    }
+
+    /// Number of output coordinates `|I|`.
+    #[inline]
+    pub fn out_dim(&self) -> usize {
+        self.output_map.len()
+    }
+
+    /// Whether the request was exactly the closure minus ε, in state
+    /// order (true for truncated/anisotropic/DAG sets). Engines can then
+    /// skip the gather in the output projection.
+    pub fn output_is_identity(&self) -> bool {
+        self.output_map.len() == self.state_len - 1
+            && self
+                .output_map
+                .iter()
+                .enumerate()
+                .all(|(k, &i)| i as usize == k + 1)
+    }
+
+    /// Project a closure state vector onto the requested coordinates.
+    pub fn project(&self, state: &[f64], out: &mut [f64]) {
+        debug_assert_eq!(state.len(), self.state_len);
+        debug_assert_eq!(out.len(), self.out_dim());
+        for (o, &idx) in out.iter_mut().zip(&self.output_map) {
+            *o = state[idx as usize];
+        }
+    }
+
+    /// Scatter output-cotangents back onto a closure-sized state vector
+    /// (adjoint of [`WordTable::project`]; accumulates on duplicates).
+    pub fn scatter_grad(&self, grad_out: &[f64], grad_state: &mut [f64]) {
+        debug_assert_eq!(grad_out.len(), self.out_dim());
+        debug_assert_eq!(grad_state.len(), self.state_len);
+        for (g, &idx) in grad_out.iter().zip(&self.output_map) {
+            grad_state[idx as usize] += *g;
+        }
+    }
+
+    /// Verify structural invariants (used by property tests).
+    pub fn check_invariants(&self) {
+        // ε at index 0.
+        assert!(self.words[0].is_empty());
+        let stride = self.stride();
+        for (i, w) in self.words.iter().enumerate() {
+            let n = w.len();
+            // Level ranges consistent.
+            assert!(self.level_range(n).contains(&i), "word {i} not in its level range");
+            // Prefix pointers point at the true prefixes.
+            for k in 0..n {
+                let p = &self.words[self.prefix_idx[i * stride + k] as usize];
+                assert_eq!(p.0, w.0[..k], "prefix table wrong for word {i} k={k}");
+            }
+            // Letters as stored.
+            for (t, &l) in w.0.iter().enumerate() {
+                assert_eq!(self.letters[i * stride + t], l);
+            }
+        }
+        // Sorted by (level, lex) and unique.
+        for pair in self.words.windows(2) {
+            assert!((pair[0].len(), &pair[0].0) < (pair[1].len(), &pair[1].0));
+        }
+        // Output map points at the requested words.
+        for (w, &idx) in self.requested.iter().zip(&self.output_map) {
+            assert_eq!(&self.words[idx as usize], w);
+        }
+    }
+
+    /// Serialize to JSON (artifact-manifest format shared with
+    /// `python/compile/words.py`).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("d", Json::Num(self.d as f64)),
+            ("max_level", Json::Num(self.max_level as f64)),
+            ("state_len", Json::Num(self.state_len as f64)),
+            (
+                "letters",
+                Json::Arr(self.letters.iter().map(|&l| Json::Num(l as f64)).collect()),
+            ),
+            (
+                "prefix_idx",
+                Json::Arr(self.prefix_idx.iter().map(|&p| Json::Num(p as f64)).collect()),
+            ),
+            ("level_start", Json::arr_usize(&self.level_start)),
+            (
+                "output_map",
+                Json::Arr(self.output_map.iter().map(|&o| Json::Num(o as f64)).collect()),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::words::generate::{sig_dim, truncated_words};
+
+    #[test]
+    fn truncated_table_is_dense() {
+        let d = 3;
+        let n = 3;
+        let t = WordTable::build(d, &truncated_words(d, n));
+        assert_eq!(t.state_len, 1 + sig_dim(d, n));
+        assert!(t.output_is_identity());
+        t.check_invariants();
+    }
+
+    #[test]
+    fn projection_closure_is_minimal() {
+        // Request a single deep word: closure = its prefix chain.
+        let w = Word(vec![2, 0, 1, 1]);
+        let t = WordTable::build(3, &[w.clone()]);
+        assert_eq!(t.state_len, 5); // ε + 4 prefixes
+        assert_eq!(t.out_dim(), 1);
+        assert_eq!(t.words[t.output_map[0] as usize], w);
+        assert!(!t.output_is_identity());
+        t.check_invariants();
+    }
+
+    #[test]
+    fn shared_prefixes_deduplicate() {
+        let ws = vec![Word(vec![0, 1, 2]), Word(vec![0, 1, 0])];
+        let t = WordTable::build(3, &ws);
+        // ε, (0), (0,1), (0,1,0), (0,1,2) — shared chain stored once.
+        assert_eq!(t.state_len, 5);
+        t.check_invariants();
+    }
+
+    #[test]
+    fn project_and_scatter_are_adjoint() {
+        let ws = vec![Word(vec![1]), Word(vec![0, 1])];
+        let t = WordTable::build(2, &ws);
+        let state: Vec<f64> = (0..t.state_len).map(|i| i as f64).collect();
+        let mut out = vec![0.0; t.out_dim()];
+        t.project(&state, &mut out);
+        // <project(s), g> == <s, scatter(g)>
+        let g = vec![2.0, -1.5];
+        let lhs: f64 = out.iter().zip(&g).map(|(a, b)| a * b).sum();
+        let mut gs = vec![0.0; t.state_len];
+        t.scatter_grad(&g, &mut gs);
+        let rhs: f64 = state.iter().zip(&gs).map(|(a, b)| a * b).sum();
+        assert!((lhs - rhs).abs() < 1e-12);
+    }
+
+    #[test]
+    fn duplicate_requests_allowed() {
+        let ws = vec![Word(vec![0]), Word(vec![0])];
+        let t = WordTable::build(2, &ws);
+        assert_eq!(t.out_dim(), 2);
+        assert_eq!(t.output_map[0], t.output_map[1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "ε is not a valid output coordinate")]
+    fn empty_word_request_rejected() {
+        WordTable::build(2, &[Word::empty()]);
+    }
+
+    #[test]
+    #[should_panic(expected = "letter out of range")]
+    fn out_of_range_letter_rejected() {
+        WordTable::build(2, &[Word(vec![5])]);
+    }
+
+    #[test]
+    fn json_serialization_contains_tables() {
+        let t = WordTable::build(2, &truncated_words(2, 2));
+        let j = t.to_json();
+        assert_eq!(j.get("d").as_usize(), Some(2));
+        assert_eq!(j.get("state_len").as_usize(), Some(7));
+        assert_eq!(
+            j.get("letters").as_arr().unwrap().len(),
+            t.letters.len()
+        );
+    }
+}

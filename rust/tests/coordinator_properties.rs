@@ -1,0 +1,186 @@
+//! Property tests on coordinator invariants: request parsing totality,
+//! batcher order preservation under concurrency, padding correctness of
+//! the PJRT batch path, and JSON round-trip fuzz.
+
+use pathsig::coordinator::{parse_request, Batcher, BatcherConfig, SigService};
+use pathsig::util::json::Json;
+use pathsig::util::proptest::{property, Gen};
+use std::sync::Arc;
+use std::time::Duration;
+
+#[test]
+fn parser_never_panics_on_fuzzed_lines() {
+    // Parsing arbitrary garbage must return Err, never panic.
+    property("parser totality", 200, |g| {
+        let len = g.sized(0, 64);
+        let line: String = (0..len)
+            .map(|_| {
+                let c = g.usize_in(32, 126) as u8 as char;
+                c
+            })
+            .collect();
+        let _ = parse_request(&line); // must not panic
+    });
+}
+
+#[test]
+fn parser_roundtrips_valid_requests() {
+    property("parser roundtrip", 60, |g| {
+        let d = g.usize_in(1, 6);
+        let n = g.usize_in(1, 4);
+        let m = g.usize_in(1, 20);
+        let path: Vec<f64> = (0..(m + 1) * d).map(|_| g.gaussian()).collect();
+        let path_s: Vec<String> = path.iter().map(|x| format!("{x}")).collect();
+        let line = format!(
+            r#"{{"op":"signature","id":"x","dim":{d},"depth":{n},"path":[{}]}}"#,
+            path_s.join(",")
+        );
+        let req = parse_request(&line).expect("valid request parses");
+        assert_eq!(req.dim, d);
+        assert_eq!(req.depth, n);
+        assert_eq!(req.path.len(), (m + 1) * d);
+    });
+}
+
+#[test]
+fn json_fuzz_roundtrip() {
+    // Random JSON trees serialize + parse to the same value.
+    fn random_json(g: &mut Gen, depth: usize) -> Json {
+        match if depth == 0 { g.usize_in(0, 3) } else { g.usize_in(0, 5) } {
+            0 => Json::Null,
+            1 => Json::Bool(g.usize_in(0, 1) == 1),
+            2 => Json::Num((g.gaussian() * 100.0 * 64.0).round() / 64.0),
+            3 => Json::Str(
+                (0..g.usize_in(0, 10))
+                    .map(|_| g.usize_in(32, 126) as u8 as char)
+                    .collect(),
+            ),
+            4 => Json::Arr((0..g.usize_in(0, 4)).map(|_| random_json(g, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..g.usize_in(0, 4))
+                    .map(|k| (format!("k{k}"), random_json(g, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    property("json roundtrip", 150, |g| {
+        let v = random_json(g, 3);
+        let compact = Json::parse(&v.to_string()).expect("compact parses");
+        assert_eq!(compact, v);
+        let pretty = Json::parse(&v.to_pretty()).expect("pretty parses");
+        assert_eq!(pretty, v);
+    });
+}
+
+#[test]
+fn batcher_preserves_request_response_pairing() {
+    // Many concurrent same-config requests: each must get exactly its
+    // own answer (level-1 coordinates identify the path).
+    let svc = Arc::new(SigService::new(None));
+    let batcher = Arc::new(Batcher::new(
+        Arc::clone(&svc),
+        BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(3),
+        },
+    ));
+    let mut joins = Vec::new();
+    for round in 0..3 {
+        for k in 0..16u32 {
+            let b = Arc::clone(&batcher);
+            joins.push(std::thread::spawn(move || {
+                let mark = (round * 100 + k) as f64 + 1.0;
+                let line = format!(
+                    r#"{{"op":"signature","dim":2,"depth":2,"path":[0,0,{mark},{}]}}"#,
+                    -mark
+                );
+                let req = parse_request(&line).unwrap();
+                let (out, _, _) = b.submit(req).unwrap();
+                assert!(
+                    (out[0] - mark).abs() < 1e-9 && (out[1] + mark).abs() < 1e-9,
+                    "request {mark} got {out:?}"
+                );
+            }));
+        }
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    // All 48 requests served, in ≤ 48 batches.
+    let batches = svc
+        .metrics
+        .batches_total
+        .load(std::sync::atomic::Ordering::Relaxed);
+    assert!(batches <= 48 && batches >= 1);
+}
+
+#[test]
+fn batcher_mixed_configs_never_cross() {
+    // Random dims/depths fired concurrently — results must match a
+    // direct service execution.
+    property("mixed config batching", 4, |g| {
+        let svc = Arc::new(SigService::new(None));
+        let batcher = Arc::new(Batcher::new(
+            Arc::clone(&svc),
+            BatcherConfig {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+            },
+        ));
+        let mut joins = Vec::new();
+        for _ in 0..12 {
+            let d = g.usize_in(1, 3);
+            let n = g.usize_in(1, 3);
+            let m = g.usize_in(1, 6);
+            let path: Vec<f64> = (0..(m + 1) * d).map(|_| g.gaussian()).collect();
+            let path_s: Vec<String> = path.iter().map(|x| format!("{x}")).collect();
+            let line = format!(
+                r#"{{"op":"signature","dim":{d},"depth":{n},"path":[{}]}}"#,
+                path_s.join(",")
+            );
+            let b = Arc::clone(&batcher);
+            let s = Arc::clone(&svc);
+            joins.push(std::thread::spawn(move || {
+                let req = parse_request(&line).unwrap();
+                let want = s.execute(&req).unwrap().0;
+                let (got, _, _) = b.submit(req).unwrap();
+                assert_eq!(got.len(), want.len());
+                for (a, b) in got.iter().zip(&want) {
+                    assert!((a - b).abs() < 1e-12);
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+    });
+}
+
+#[test]
+fn service_word_spec_cache_correctness() {
+    // Anisotropic + DAG + custom specs through the service agree with
+    // directly-built engines.
+    property("service spec correctness", 20, |g| {
+        let svc = SigService::new(None);
+        let d = g.usize_in(2, 4);
+        let m = g.usize_in(2, 10);
+        let path: Vec<f64> = (0..(m + 1) * d).map(|_| g.gaussian()).collect();
+        let path_s: Vec<String> = path.iter().map(|x| format!("{x}")).collect();
+        let gamma: Vec<String> = (0..d).map(|_| format!("{:.2}", g.f64_in(0.5, 2.0))).collect();
+        let line = format!(
+            r#"{{"op":"signature","dim":{d},"depth":3,"projection":{{"type":"anisotropic","gamma":[{}],"cutoff":3.0}},"path":[{}]}}"#,
+            gamma.join(","),
+            path_s.join(",")
+        );
+        let req = parse_request(&line).unwrap();
+        let (out, shape, _) = svc.execute(&req).unwrap();
+        assert_eq!(out.len(), shape[0]);
+        // Engine built directly.
+        let words = req.spec.words(d);
+        let eng = pathsig::sig::SigEngine::new(pathsig::words::WordTable::build(d, &words));
+        let want = pathsig::sig::signature(&eng, &req.path);
+        for (a, b) in out.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    });
+}

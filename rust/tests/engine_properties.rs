@@ -1,0 +1,303 @@
+//! Property tests on the mathematical invariants of the signature
+//! engines — the identities the paper's correctness rests on, checked on
+//! randomized inputs via the crate's property-testing mini-framework
+//! (seeded, replayable with `PATHSIG_PROPTEST_SEED`).
+
+use pathsig::logsig::LogSigEngine;
+use pathsig::sig::{
+    sig_backward, sig_forward_state, signature, signature_stream, window_signature, SigEngine,
+    Window,
+};
+use pathsig::tensor::{tensor_log_series, TruncTensor};
+use pathsig::util::proptest::{assert_allclose, property, Gen};
+use pathsig::words::{truncated_words, Word, WordTable};
+
+fn random_trunc_engine(g: &mut Gen) -> (SigEngine, usize, usize) {
+    let d = g.usize_in(2, 4);
+    let n = g.usize_in(1, 4);
+    (
+        SigEngine::new(WordTable::build(d, &truncated_words(d, n))),
+        d,
+        n,
+    )
+}
+
+fn state_to_tensor(d: usize, n: usize, state: &[f64]) -> TruncTensor {
+    let mut t = TruncTensor::one(d, n);
+    let mut k = 1;
+    for lvl in 1..=n {
+        for c in 0..d.pow(lvl as u32) {
+            t.levels[lvl][c] = state[k];
+            k += 1;
+        }
+    }
+    t
+}
+
+#[test]
+fn chen_identity_concatenation() {
+    // Theorem 3.2: S_{0,T} = S_{0,u} ⊗ S_{u,T} for a random split point.
+    property("chen identity", 40, |g| {
+        let (eng, d, n) = random_trunc_engine(g);
+        let m = g.usize_in(3, 16);
+        let path = g.path(m, d, 0.5);
+        let split = g.usize_in(1, m - 1);
+        let left = sig_forward_state(&eng, &path[..(split + 1) * d]);
+        let right = sig_forward_state(&eng, &path[split * d..]);
+        let full = sig_forward_state(&eng, &path);
+        let combined = state_to_tensor(d, n, &left).mul(&state_to_tensor(d, n, &right));
+        let want = state_to_tensor(d, n, &full);
+        assert!(
+            combined.max_abs_diff(&want) < 1e-10,
+            "chen violated: {}",
+            combined.max_abs_diff(&want)
+        );
+    });
+}
+
+#[test]
+fn time_reversal_gives_group_inverse() {
+    // Lemma 4.5: S(X)^{-1} = S(reversed X).
+    property("time reversal inverse", 40, |g| {
+        let (eng, d, n) = random_trunc_engine(g);
+        let m = g.usize_in(2, 12);
+        let path = g.path(m, d, 0.5);
+        let mut rev = vec![0.0; path.len()];
+        for j in 0..=m {
+            rev[j * d..(j + 1) * d].copy_from_slice(&path[(m - j) * d..(m - j + 1) * d]);
+        }
+        let fwd = state_to_tensor(d, n, &sig_forward_state(&eng, &path));
+        let bwd = state_to_tensor(d, n, &sig_forward_state(&eng, &rev));
+        let prod = fwd.mul(&bwd);
+        assert!(
+            prod.max_abs_diff(&TruncTensor::one(d, n)) < 1e-10,
+            "reversal not inverse"
+        );
+    });
+}
+
+#[test]
+fn shuffle_identity_level2() {
+    // Shuffle product: S(i)·S(j) = S(ij) + S(ji) for single letters.
+    property("shuffle identity", 50, |g| {
+        let d = g.usize_in(2, 4);
+        let eng = SigEngine::new(WordTable::build(d, &truncated_words(d, 2)));
+        let m = g.usize_in(2, 20);
+        let path = g.path(m, d, 0.5);
+        let sig = signature(&eng, &path);
+        for i in 0..d {
+            for j in 0..d {
+                let si = sig[i];
+                let sj = sig[j];
+                let sij = sig[d + i * d + j];
+                let sji = sig[d + j * d + i];
+                assert!(
+                    (si * sj - (sij + sji)).abs() < 1e-9,
+                    "shuffle violated at ({i},{j}): {} vs {}",
+                    si * sj,
+                    sij + sji
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn shuffle_identity_level3() {
+    // S(i)·S(jk) = S(ijk) + S(jik) + S(jki) (shuffles of i into jk).
+    property("shuffle level3", 30, |g| {
+        let d = g.usize_in(2, 3);
+        let eng = SigEngine::new(WordTable::build(d, &truncated_words(d, 3)));
+        let m = g.usize_in(2, 15);
+        let path = g.path(m, d, 0.5);
+        let sig = signature(&eng, &path);
+        let at = |w: &[usize]| -> f64 {
+            let mut off = 0;
+            for lvl in 1..w.len() {
+                off += d.pow(lvl as u32);
+            }
+            let mut code = 0;
+            for &l in w {
+                code = code * d + l;
+            }
+            sig[off + code]
+        };
+        for i in 0..d {
+            for j in 0..d {
+                for k in 0..d {
+                    let lhs = at(&[i]) * at(&[j, k]);
+                    let rhs = at(&[i, j, k]) + at(&[j, i, k]) + at(&[j, k, i]);
+                    assert!(
+                        (lhs - rhs).abs() < 1e-9,
+                        "shuffle3 violated at ({i},{j},{k})"
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn stream_is_consistent_with_windows() {
+    // signature_stream row r == window [0, r) signature.
+    property("stream vs expanding windows", 25, |g| {
+        let (eng, d, _) = random_trunc_engine(g);
+        let m = g.usize_in(3, 10);
+        let path = g.path(m, d, 0.5);
+        let stream = signature_stream(&eng, &path);
+        let odim = eng.out_dim();
+        let r = g.usize_in(1, m);
+        let win = window_signature(&eng, &path, Window::new(0, r));
+        assert_allclose(
+            &stream[r * odim..(r + 1) * odim],
+            &win,
+            1e-12,
+            1e-11,
+            "stream row",
+        );
+    });
+}
+
+#[test]
+fn projection_consistency_random_word_sets() {
+    // A random projection engine agrees with the full truncated engine.
+    property("random projections", 40, |g| {
+        let d = g.usize_in(2, 4);
+        let n = g.usize_in(1, 4);
+        let full_eng = SigEngine::new(WordTable::build(d, &truncated_words(d, n)));
+        let n_words = g.usize_in(1, 8);
+        let words: Vec<Word> = (0..n_words)
+            .map(|_| {
+                let len = g.usize_in(1, n);
+                Word((0..len).map(|_| g.usize_in(0, d - 1) as u16).collect())
+            })
+            .collect();
+        let proj = SigEngine::new(WordTable::build(d, &words));
+        let m = g.usize_in(2, 12);
+        let path = g.path(m, d, 0.5);
+        let full_sig = signature(&full_eng, &path);
+        let proj_sig = signature(&proj, &path);
+        let all = truncated_words(d, n);
+        for (k, w) in words.iter().enumerate() {
+            let pos = all.iter().position(|x| x == w).unwrap();
+            assert!(
+                (proj_sig[k] - full_sig[pos]).abs() < 1e-10,
+                "projection mismatch at {}",
+                w.pretty()
+            );
+        }
+    });
+}
+
+#[test]
+fn gradient_linearity_in_cotangent() {
+    // Backward is linear in grad_out: g(a·u + b·v) = a·g(u) + b·g(v).
+    property("vjp linearity", 25, |g| {
+        let (eng, d, _) = random_trunc_engine(g);
+        let m = g.usize_in(2, 8);
+        let path = g.path(m, d, 0.5);
+        let u = g.gaussian_vec(eng.out_dim());
+        let v = g.gaussian_vec(eng.out_dim());
+        let (a, b) = (g.f64_in(-2.0, 2.0), g.f64_in(-2.0, 2.0));
+        let combo: Vec<f64> = u.iter().zip(&v).map(|(x, y)| a * x + b * y).collect();
+        let gu = sig_backward(&eng, &path, &u);
+        let gv = sig_backward(&eng, &path, &v);
+        let gc = sig_backward(&eng, &path, &combo);
+        let want: Vec<f64> = gu.iter().zip(&gv).map(|(x, y)| a * x + b * y).collect();
+        assert_allclose(&gc, &want, 1e-9, 1e-8, "vjp linearity");
+        let _ = d;
+    });
+}
+
+#[test]
+fn logsig_invariant_under_refinement() {
+    // Reparametrisation invariance carries to the log-signature.
+    property("logsig refinement invariance", 20, |g| {
+        let d = g.usize_in(2, 3);
+        let n = g.usize_in(2, 4);
+        let eng = LogSigEngine::new(d, n);
+        let m = g.usize_in(2, 8);
+        let path = g.path(m, d, 0.5);
+        let base = eng.logsig(&path);
+        // Midpoint refinement.
+        let mut fine = Vec::new();
+        for j in 0..m {
+            let p0 = &path[j * d..(j + 1) * d];
+            let p1 = &path[(j + 1) * d..(j + 2) * d];
+            fine.extend_from_slice(p0);
+            for i in 0..d {
+                fine.push(0.5 * (p0[i] + p1[i]));
+            }
+        }
+        fine.extend_from_slice(&path[m * d..]);
+        let refined = eng.logsig(&fine);
+        assert_allclose(&refined, &base, 1e-10, 1e-9, "logsig refinement");
+    });
+}
+
+#[test]
+fn logsig_matches_dense_tensor_log() {
+    property("logsig vs dense log", 20, |g| {
+        let d = g.usize_in(2, 3);
+        let n = g.usize_in(1, 4);
+        let eng = LogSigEngine::new(d, n);
+        let sig_eng = SigEngine::new(WordTable::build(d, &truncated_words(d, n)));
+        let m = g.usize_in(2, 8);
+        let path = g.path(m, d, 0.5);
+        let got = eng.logsig(&path);
+        let state = sig_forward_state(&sig_eng, &path);
+        let dense = state_to_tensor(d, n, &state);
+        let log = tensor_log_series(&dense);
+        let want: Vec<f64> = eng.lyndon.iter().map(|w| log.coeff(&w.0)).collect();
+        assert_allclose(&got, &want, 1e-10, 1e-9, "logsig oracle");
+    });
+}
+
+#[test]
+fn scaling_homogeneity() {
+    // Scaling the path by c scales level-n coefficients by c^n.
+    property("homogeneity", 30, |g| {
+        let (eng, _, _) = random_trunc_engine(g);
+        let d = eng.table.d;
+        let m = g.usize_in(2, 10);
+        let path = g.path(m, d, 0.5);
+        let c = g.f64_in(0.3, 2.5);
+        let scaled: Vec<f64> = path.iter().map(|x| c * x).collect();
+        let base = signature(&eng, &path);
+        let got = signature(&eng, &scaled);
+        for (k, w) in eng.table.requested.iter().enumerate() {
+            let want = base[k] * c.powi(w.len() as i32);
+            assert!(
+                (got[k] - want).abs() < 1e-9 * (1.0 + want.abs()),
+                "homogeneity violated at {} (c={c})",
+                w.pretty()
+            );
+        }
+    });
+}
+
+#[test]
+fn word_table_invariants_random_sets() {
+    property("word table invariants", 60, |g| {
+        let d = g.usize_in(2, 6);
+        let n_words = g.sized(1, 20);
+        let words: Vec<Word> = (0..n_words)
+            .map(|_| {
+                let len = g.usize_in(1, 5);
+                Word((0..len).map(|_| g.usize_in(0, d - 1) as u16).collect())
+            })
+            .collect();
+        let table = WordTable::build(d, &words);
+        table.check_invariants();
+        // Closure is prefix-closed: every prefix of every closure word
+        // is in the closure.
+        for w in &table.words {
+            for k in 0..w.len() {
+                assert!(
+                    table.words.iter().any(|x| x.0 == w.0[..k]),
+                    "prefix missing"
+                );
+            }
+        }
+    });
+}

@@ -1,0 +1,250 @@
+//! Integration: the three-layer contract. AOT artifacts produced by
+//! `python/compile/aot.py` (L2/L1) are loaded through the PJRT runtime
+//! (L3) and cross-validated against the native Rust engine on the same
+//! inputs — the numbers must agree to f32 tolerance.
+//!
+//! Requires `make artifacts` to have run; tests skip (with a loud
+//! message) if `artifacts/manifest.json` is missing so `cargo test`
+//! stays usable in a fresh checkout.
+
+use pathsig::runtime::Runtime;
+use pathsig::sig::{sig_backward, signature, window_signature, SigEngine, Window};
+use pathsig::util::rng::Rng;
+use pathsig::words::{truncated_words, WordTable};
+use std::path::Path;
+
+fn runtime() -> Option<Runtime> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts/manifest.json — run `make artifacts` first");
+        return None;
+    }
+    Some(Runtime::new(&dir).expect("runtime boots"))
+}
+
+fn random_paths_f32(rng: &mut Rng, batch: usize, points: usize, d: usize) -> Vec<f32> {
+    let mut out = Vec::with_capacity(batch * points * d);
+    for _ in 0..batch {
+        let p = rng.brownian_path(points - 1, d, 0.4);
+        out.extend(p.iter().map(|&x| x as f32));
+    }
+    out
+}
+
+fn assert_close(got: &[f32], want: &[f64], rtol: f32, atol: f32, ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        let w = *w as f32;
+        let tol = atol + rtol * w.abs().max(g.abs());
+        assert!(
+            (g - w).abs() <= tol,
+            "{ctx}[{i}]: pjrt {g} vs native {w}"
+        );
+    }
+}
+
+#[test]
+fn sig_fwd_artifacts_match_native_engine() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(4242);
+    for entry in rt.manifest.by_kind("sig_fwd") {
+        let (b, p, d, n) = (
+            entry.meta.get("batch").as_usize().unwrap(),
+            entry.meta.get("points").as_usize().unwrap(),
+            entry.meta.get("dim").as_usize().unwrap(),
+            entry.meta.get("depth").as_usize().unwrap(),
+        );
+        let paths = random_paths_f32(&mut rng, b, p, d);
+        let outs = rt.run_f32(&entry.name, &[&paths]).expect("pjrt exec");
+        let eng = SigEngine::new(WordTable::build(d, &truncated_words(d, n)));
+        let mut native = Vec::new();
+        for k in 0..b {
+            let path_f64: Vec<f64> = paths[k * p * d..(k + 1) * p * d]
+                .iter()
+                .map(|&x| x as f64)
+                .collect();
+            native.extend(signature(&eng, &path_f64));
+        }
+        assert_close(&outs[0], &native, 2e-4, 2e-5, &entry.name);
+        println!("OK {} ({} coords)", entry.name, native.len());
+    }
+}
+
+#[test]
+fn sig_vjp_artifact_matches_native_backward() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(77);
+    for entry in rt.manifest.by_kind("sig_vjp") {
+        let (b, p, d, n) = (
+            entry.meta.get("batch").as_usize().unwrap(),
+            entry.meta.get("points").as_usize().unwrap(),
+            entry.meta.get("dim").as_usize().unwrap(),
+            entry.meta.get("depth").as_usize().unwrap(),
+        );
+        let odim = entry.meta.get("out_dim").as_usize().unwrap();
+        let paths = random_paths_f32(&mut rng, b, p, d);
+        let grads: Vec<f32> = (0..b * odim).map(|_| rng.gaussian() as f32).collect();
+        let outs = rt.run_f32(&entry.name, &[&paths, &grads]).expect("pjrt exec");
+        let eng = SigEngine::new(WordTable::build(d, &truncated_words(d, n)));
+        let mut native = Vec::new();
+        for k in 0..b {
+            let path_f64: Vec<f64> = paths[k * p * d..(k + 1) * p * d]
+                .iter()
+                .map(|&x| x as f64)
+                .collect();
+            let g_f64: Vec<f64> = grads[k * odim..(k + 1) * odim]
+                .iter()
+                .map(|&x| x as f64)
+                .collect();
+            native.extend(sig_backward(&eng, &path_f64, &g_f64));
+        }
+        assert_close(&outs[0], &native, 2e-3, 2e-4, &entry.name);
+        println!("OK {}", entry.name);
+    }
+}
+
+#[test]
+fn windowed_artifact_matches_native_windows() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(88);
+    for entry in rt.manifest.by_kind("windowed") {
+        let (b, p, d, n) = (
+            entry.meta.get("batch").as_usize().unwrap(),
+            entry.meta.get("points").as_usize().unwrap(),
+            entry.meta.get("dim").as_usize().unwrap(),
+            entry.meta.get("depth").as_usize().unwrap(),
+        );
+        let k = entry.meta.get("windows").as_usize().unwrap();
+        let len = entry.meta.get("win_len").as_usize().unwrap();
+        let paths = random_paths_f32(&mut rng, b, p, d);
+        // Window starts (passed as f32, cast to i32 inside the graph).
+        let starts: Vec<usize> = (0..k).map(|i| (i * (p - len - 1)) / k.max(1)).collect();
+        let starts_f32: Vec<f32> = starts.iter().map(|&s| s as f32).collect();
+        let outs = rt
+            .run_f32(&entry.name, &[&paths, &starts_f32])
+            .expect("pjrt exec");
+        let eng = SigEngine::new(WordTable::build(d, &truncated_words(d, n)));
+        let odim = eng.out_dim();
+        for bi in 0..b {
+            let path_f64: Vec<f64> = paths[bi * p * d..(bi + 1) * p * d]
+                .iter()
+                .map(|&x| x as f64)
+                .collect();
+            for (wi, &l) in starts.iter().enumerate() {
+                let native = window_signature(&eng, &path_f64, Window::new(l, l + len));
+                let got = &outs[0][(bi * k + wi) * odim..(bi * k + wi + 1) * odim];
+                assert_close(got, &native, 3e-4, 2e-5, &format!("{} b{bi} w{wi}", entry.name));
+            }
+        }
+        println!("OK {}", entry.name);
+    }
+}
+
+#[test]
+fn leadlag_artifact_matches_native_transform() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(99);
+    for entry in rt.manifest.by_kind("leadlag") {
+        let (b, p, d) = (
+            entry.meta.get("batch").as_usize().unwrap(),
+            entry.meta.get("points").as_usize().unwrap(),
+            entry.meta.get("dim").as_usize().unwrap(),
+        );
+        let paths = random_paths_f32(&mut rng, b, p, d);
+        let outs = rt.run_f32(&entry.name, &[&paths]).expect("pjrt exec");
+        let per_out = entry.outputs[0].numel() / b;
+        for bi in 0..b {
+            let path_f64: Vec<f64> = paths[bi * p * d..(bi + 1) * p * d]
+                .iter()
+                .map(|&x| x as f64)
+                .collect();
+            let native = pathsig::fbm::lead_lag(&path_f64, d);
+            let got = &outs[0][bi * per_out..(bi + 1) * per_out];
+            assert_close(got, &native, 1e-6, 1e-6, &entry.name);
+        }
+        println!("OK {}", entry.name);
+    }
+}
+
+#[test]
+fn hurst_train_step_decreases_loss_via_pjrt() {
+    // Drives a few AOT train steps end-to-end: proves params round-trip
+    // through PJRT and the loss moves. (The full experiment lives in
+    // examples/hurst_training.rs.)
+    let Some(rt) = runtime() else { return };
+    let Some(entry) = rt
+        .manifest
+        .by_kind("train_step")
+        .into_iter()
+        .find(|e| e.meta.get("variant").as_str() == Some("sparse"))
+        .cloned()
+    else {
+        eprintln!("SKIP: no sparse train_step artifact");
+        return;
+    };
+    let b = entry.meta.get("batch").as_usize().unwrap();
+    let p = entry.meta.get("points").as_usize().unwrap();
+    let dim = entry.meta.get("dim").as_usize().unwrap();
+
+    let mut rng = Rng::new(123);
+    // Init params matching the python init scheme (shapes from manifest).
+    let mut params: Vec<Vec<f32>> = Vec::new();
+    for (k, spec) in entry.inputs[..6].iter().enumerate() {
+        let n = spec.numel();
+        let mut v = vec![0f32; n];
+        match k {
+            0 => {
+                // phi_w ≈ identity.
+                for i in 0..dim {
+                    v[i * dim + i] = 1.0;
+                }
+            }
+            2 | 4 => {
+                let fan_in = spec.shape[0] as f64;
+                let lim = (6.0 / fan_in).sqrt();
+                for x in v.iter_mut() {
+                    *x = rng.uniform_in(-lim, lim) as f32;
+                }
+            }
+            _ => {}
+        }
+        params.push(v);
+    }
+    let mut momentum: Vec<Vec<f32>> = entry.inputs[6..12]
+        .iter()
+        .map(|s| vec![0f32; s.numel()])
+        .collect();
+
+    // fBM batch.
+    let (paths64, hs) = pathsig::fbm::fbm_dataset(&mut rng, b, p - 1, dim, 0.25, 0.75);
+    let paths: Vec<f32> = paths64.iter().map(|&x| x as f32).collect();
+    let targets: Vec<f32> = hs.iter().map(|&x| x as f32).collect();
+    let lr = vec![0.05f32];
+
+    let mut losses = Vec::new();
+    for _ in 0..8 {
+        let mut inputs: Vec<&[f32]> = Vec::new();
+        for p in &params {
+            inputs.push(p);
+        }
+        for m in &momentum {
+            inputs.push(m);
+        }
+        inputs.push(&paths);
+        inputs.push(&targets);
+        inputs.push(&lr);
+        let outs = rt.run_f32(&entry.name, &inputs).expect("train step");
+        assert_eq!(outs.len(), 13);
+        for k in 0..6 {
+            params[k] = outs[k].clone();
+            momentum[k] = outs[6 + k].clone();
+        }
+        losses.push(outs[12][0]);
+    }
+    println!("pjrt train losses: {losses:?}");
+    assert!(
+        losses.last().unwrap() < losses.first().unwrap(),
+        "loss did not decrease: {losses:?}"
+    );
+    assert!(losses.iter().all(|l| l.is_finite()));
+}
