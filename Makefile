@@ -1,0 +1,25 @@
+# pathsig build helpers. The Rust side needs nothing beyond cargo;
+# `artifacts` requires a Python environment with jax installed (see
+# DESIGN.md — the AOT artifacts are optional, the crate runs without them).
+
+.PHONY: build test doc bench artifacts clean
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+doc:
+	cargo doc --no-deps
+
+bench:
+	cargo bench
+
+# Emit the AOT/PJRT artifacts (HLO text + manifest.json) into ./artifacts.
+artifacts:
+	python3 python/compile/aot.py --out-dir artifacts
+
+clean:
+	cargo clean
+	rm -rf artifacts

@@ -21,9 +21,13 @@ fn main() {
         .map(Arc::new)
         .ok();
     match &runtime {
-        Some(rt) => println!(
+        Some(rt) if rt.backend_available() => println!(
             "PJRT runtime: {} ({} artifacts)",
             rt.platform(),
+            rt.manifest.entries.len()
+        ),
+        Some(rt) => println!(
+            "artifact manifest loaded ({} artifacts), no PJRT backend — native engine only",
             rt.manifest.entries.len()
         ),
         None => println!("no artifacts — native engine only"),

@@ -143,6 +143,15 @@ fn main() {
 
     let rt = Runtime::new(std::path::Path::new("artifacts"))
         .expect("run `make artifacts` first — this example drives the AOT train step");
+    if !rt.backend_available() {
+        eprintln!(
+            "artifact manifest loaded, but no PJRT execution backend is attached — \
+             this example exists to drive the AOT train step, so there is nothing to run. \
+             Wire a backend in with Runtime::with_backend (see DESIGN.md), or use \
+             `cargo bench --bench fig4_hurst` for the native-engine version."
+        );
+        return;
+    }
     println!("PJRT platform: {}", rt.platform());
 
     let mut rng = Rng::new(seed);

@@ -64,6 +64,12 @@ fn main() {
 
     // --- 6. Same numbers through the AOT/PJRT path ------------------------
     match pathsig::runtime::Runtime::new(std::path::Path::new("artifacts")) {
+        Ok(rt) if !rt.backend_available() => {
+            println!(
+                "\n(artifact manifest found, but no PJRT backend is attached — \
+                 see DESIGN.md for wiring one in)"
+            );
+        }
         Ok(rt) => {
             // Use the (8, 33, 3, 3) artifact: trim our path to 33 points.
             let name = "sig_fwd_b8_p33_d3_n3";

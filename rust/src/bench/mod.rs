@@ -14,12 +14,19 @@ use std::time::Instant;
 /// Timing result for one benchmark case.
 #[derive(Clone, Debug)]
 pub struct Timing {
+    /// Case label.
     pub name: String,
+    /// Discarded warm-up runs.
     pub warmups: usize,
+    /// Timed runs.
     pub runs: usize,
+    /// Mean seconds per run.
     pub mean_s: f64,
+    /// Median seconds per run.
     pub median_s: f64,
+    /// Fastest run, seconds.
     pub min_s: f64,
+    /// Slowest run, seconds.
     pub max_s: f64,
 }
 
@@ -35,6 +42,7 @@ impl Timing {
         }
     }
 
+    /// One-line human-readable report.
     pub fn report(&self) -> String {
         format!(
             "{:<44} mean {:>10}  median {:>10}  (n={})",

@@ -18,7 +18,9 @@ use std::time::{Duration, Instant};
 /// Batching policy knobs.
 #[derive(Clone, Copy, Debug)]
 pub struct BatcherConfig {
+    /// Flush a queue as soon as it holds this many requests.
     pub max_batch: usize,
+    /// Flush a queue once its oldest request has waited this long.
     pub max_wait: Duration,
 }
 
@@ -49,11 +51,13 @@ struct QueueState {
 pub struct Batcher {
     state: Arc<(Mutex<QueueState>, Condvar)>,
     service: Arc<SigService>,
+    /// The policy this batcher runs with.
     pub config: BatcherConfig,
     flusher: Option<std::thread::JoinHandle<()>>,
 }
 
 impl Batcher {
+    /// Start a batcher (and its flusher thread) over a service.
     pub fn new(service: Arc<SigService>, config: BatcherConfig) -> Batcher {
         let state = Arc::new((Mutex::new(QueueState::default()), Condvar::new()));
         let flusher = {

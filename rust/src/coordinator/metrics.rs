@@ -7,21 +7,31 @@ use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
 /// Metrics registry shared across server threads.
 #[derive(Debug, Default)]
 pub struct Metrics {
+    /// Requests received (all ops).
     pub requests_total: AtomicU64,
+    /// Requests answered with an error.
     pub requests_failed: AtomicU64,
+    /// Engine batches executed.
     pub batches_total: AtomicU64,
+    /// Requests served through batches (Σ batch sizes).
     pub batched_requests_total: AtomicU64,
+    /// Batches executed through a PJRT artifact.
     pub pjrt_executions: AtomicU64,
+    /// Batches / requests executed on the native engine.
     pub native_executions: AtomicU64,
+    /// End-to-end per-request latency.
     pub request_latency: LatencyHistogram,
+    /// Per-batch execution latency.
     pub batch_latency: LatencyHistogram,
 }
 
 impl Metrics {
+    /// Fresh all-zero registry.
     pub fn new() -> Metrics {
         Metrics::default()
     }
 
+    /// Record one finished request and its end-to-end latency.
     pub fn record_request(&self, d: std::time::Duration, ok: bool) {
         self.requests_total.fetch_add(1, Relaxed);
         if !ok {
@@ -30,6 +40,7 @@ impl Metrics {
         self.request_latency.record(d);
     }
 
+    /// Record one executed batch (its size and execution latency).
     pub fn record_batch(&self, size: usize, d: std::time::Duration) {
         self.batches_total.fetch_add(1, Relaxed);
         self.batched_requests_total.fetch_add(size as u64, Relaxed);

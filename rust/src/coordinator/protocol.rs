@@ -30,29 +30,43 @@ use crate::words::{generate::sparse_leadlag_generators, Word, WordSpec};
 /// Operation requested by the client.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum RequestOp {
+    /// Projected signature of one path.
     Signature,
+    /// Log-signature in the Lyndon basis.
     LogSig,
+    /// Windowed signatures (`windows` holds the index pairs).
     Windowed,
+    /// Metrics snapshot (control op, handled by the server).
     Metrics,
+    /// Health check (control op, handled by the server).
     Ping,
 }
 
 /// Backend preference.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Backend {
+    /// PJRT when an artifact matches the request shape, else native.
     Auto,
+    /// Native word-basis engine only.
     Native,
+    /// PJRT only — error if no artifact matches.
     Pjrt,
 }
 
 /// A parsed client request.
 #[derive(Clone, Debug)]
 pub struct Request {
+    /// Client-chosen correlation id, echoed in the response.
     pub id: String,
+    /// Requested operation.
     pub op: RequestOp,
+    /// Path dimension / alphabet size `d`.
     pub dim: usize,
+    /// Truncation depth `N`.
     pub depth: usize,
+    /// Word-set projection (§7).
     pub spec: WordSpec,
+    /// Backend routing preference.
     pub backend: Backend,
     /// Row-major `(M+1, dim)` path samples.
     pub path: Vec<f64>,
@@ -227,24 +241,37 @@ fn parse_projection(j: &Json, depth: usize, dim: usize) -> Result<WordSpec, Stri
 /// A server response.
 #[derive(Clone, Debug)]
 pub enum Response {
+    /// Successful compute result.
     Ok {
+        /// Echoed request id.
         id: String,
+        /// Flat result values.
         result: Vec<f64>,
+        /// Logical result shape (e.g. `[K, |I|]` for windowed).
         shape: Vec<usize>,
+        /// Which backend served the request (`"native"` / `"pjrt"`).
         backend: &'static str,
+        /// Wall time spent computing, microseconds.
         latency_us: u64,
     },
+    /// Successful control result with a free-form JSON body.
     Json {
+        /// Echoed request id.
         id: String,
+        /// Response payload.
         body: Json,
     },
+    /// Failure.
     Err {
+        /// Echoed request id (empty if the request didn't parse).
         id: String,
+        /// Error description.
         error: String,
     },
 }
 
 impl Response {
+    /// Serialize as one JSON line (without trailing newline).
     pub fn to_line(&self) -> String {
         match self {
             Response::Ok {

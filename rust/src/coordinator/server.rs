@@ -18,7 +18,9 @@ use std::time::Instant;
 /// Server configuration.
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
+    /// Bind address, e.g. `"127.0.0.1:7717"` (`:0` for an OS port).
     pub addr: String,
+    /// Dynamic-batching policy.
     pub batcher: BatcherConfig,
 }
 
@@ -33,6 +35,7 @@ impl Default for ServerConfig {
 
 /// A running server handle (owned listener thread + shutdown flag).
 pub struct ServerHandle {
+    /// The address the listener actually bound (resolves `:0`).
     pub addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
@@ -165,6 +168,7 @@ pub struct Client {
 }
 
 impl Client {
+    /// Open a TCP connection to a running feature server.
     pub fn connect(addr: &str) -> std::io::Result<Client> {
         let stream = TcpStream::connect(addr)?;
         let reader = BufReader::new(stream.try_clone()?);

@@ -23,9 +23,13 @@ use std::sync::{Arc, Mutex, RwLock};
 /// full contents.)
 #[derive(Clone, Debug, PartialEq, Eq, Hash)]
 pub struct ConfigKey {
+    /// Path dimension / alphabet size.
     pub dim: usize,
+    /// Truncation depth.
     pub depth: usize,
+    /// Canonical identity string of the word spec.
     pub spec_id: String,
+    /// Operation tag (`"sig"`, `"logsig"`, `"windowed"`, …).
     pub op: &'static str,
     /// Path points (M+1); part of the key so batches stack cleanly and
     /// PJRT artifacts (static shapes) can be matched.
@@ -33,6 +37,7 @@ pub struct ConfigKey {
 }
 
 impl ConfigKey {
+    /// The configuration key of a request.
     pub fn of(req: &Request) -> ConfigKey {
         ConfigKey {
             dim: req.dim,
@@ -70,11 +75,14 @@ fn spec_identity(spec: &WordSpec) -> String {
 pub struct SigService {
     engines: RwLock<HashMap<String, Arc<SigEngine>>>,
     logsig_engines: Mutex<HashMap<(usize, usize), Arc<LogSigEngine>>>,
+    /// PJRT artifact runtime, if one was configured at boot.
     pub runtime: Option<Arc<Runtime>>,
+    /// Shared metrics registry (also read by the server).
     pub metrics: Arc<super::Metrics>,
 }
 
 impl SigService {
+    /// Create a service, optionally wired to a PJRT runtime.
     pub fn new(runtime: Option<Arc<Runtime>>) -> SigService {
         SigService {
             engines: RwLock::new(HashMap::new()),
@@ -99,6 +107,7 @@ impl SigService {
         engine
     }
 
+    /// Get (or build) the log-signature engine for a (dim, depth) pair.
     pub fn logsig_engine(&self, dim: usize, depth: usize) -> Arc<LogSigEngine> {
         let mut cache = self.logsig_engines.lock().unwrap();
         cache
@@ -112,6 +121,12 @@ impl SigService {
     /// truncated projection only.
     pub fn pjrt_artifact_for(&self, key: &ConfigKey, b: usize) -> Option<String> {
         let rt = self.runtime.as_ref()?;
+        if !rt.backend_available() {
+            // Metadata-only runtime: routing to an artifact would burn a
+            // padded input buffer per request just to hit the "no
+            // backend" error and fall back.
+            return None;
+        }
         if key.op != "sig" || !key.spec_id.starts_with("trunc:") {
             return None;
         }
@@ -145,7 +160,15 @@ impl SigService {
                         }
                     }
                     if req.backend == Backend::Pjrt {
-                        return Err("no matching PJRT artifact for request shape".into());
+                        let reason = match &self.runtime {
+                            None => "no PJRT runtime configured",
+                            Some(rt) if !rt.backend_available() => {
+                                "artifact manifest loaded but no PJRT execution \
+                                 backend attached (see DESIGN.md)"
+                            }
+                            Some(_) => "no matching PJRT artifact for request shape",
+                        };
+                        return Err(format!("cannot serve backend=\"pjrt\": {reason}"));
                     }
                 }
                 let eng = self.engine(req.dim, &req.spec);

@@ -4,10 +4,10 @@
 //! multivariate fBM with independent components from simulated paths
 //! (`H ~ U(0.25, 0.75)`, 250 steps). We implement two exact samplers:
 //!
-//! * [`davies_harte`] — circulant embedding of the fractional Gaussian
-//!   noise covariance, `O(M log M)` via the from-scratch FFT
+//! * [`davies_harte_fgn`] — circulant embedding of the fractional
+//!   Gaussian noise covariance, `O(M log M)` via the from-scratch FFT
 //!   ([`crate::util::fft`]). Used for dataset generation.
-//! * [`cholesky_fbm`] — `O(M³)` Cholesky factorisation of the exact
+//! * [`cholesky_fgn`] — `O(M³)` Cholesky factorisation of the exact
 //!   covariance, used as the correctness oracle for Davies–Harte.
 //!
 //! Both return *fGn increments* at unit spacing scaled to a path on
@@ -107,7 +107,9 @@ pub fn cholesky_fgn(rng: &mut Rng, m: usize, hurst: f64) -> Vec<f64> {
 /// Which sampler to use.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum FbmMethod {
+    /// Circulant embedding + FFT, `O(M log M)` (dataset generation).
     DaviesHarte,
+    /// Exact Cholesky factorisation, `O(M³)` (correctness oracle).
     Cholesky,
 }
 

@@ -37,6 +37,12 @@
 //! * [`util`] — from-scratch substrates: JSON, PRNG, FFT, thread pool,
 //!   stats, CLI parsing, property-testing mini-framework.
 //! * [`bench`] — timing harness + counting allocator used by `cargo bench`.
+//!
+//! Build and test with the standard cargo flow (`cargo build --release`,
+//! `cargo test`); see README.md for the quickstart and DESIGN.md for the
+//! AOT/PJRT artifact pipeline and the §4 memory design.
+
+#![warn(missing_docs)]
 
 pub mod util;
 pub mod words;

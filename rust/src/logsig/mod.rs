@@ -24,7 +24,9 @@ use crate::words::{lyndon_words, truncated_words, Word, WordTable};
 /// Engine for Lyndon-basis log-signatures at depth `N`.
 #[derive(Clone, Debug)]
 pub struct LogSigEngine {
+    /// Alphabet size / path dimension `d`.
     pub d: usize,
+    /// Truncation depth `N`.
     pub depth: usize,
     /// Signature engine over the reduced set `W_{≤N-1} ∪ Lyndon_N`.
     pub sig: SigEngine,
@@ -42,6 +44,8 @@ pub struct LogSigEngine {
 }
 
 impl LogSigEngine {
+    /// Build the engine for alphabet size `d` at depth `N ≥ 1`,
+    /// materialising the reduced word set `W_{≤N-1} ∪ Lyndon_N`.
     pub fn new(d: usize, depth: usize) -> LogSigEngine {
         assert!(depth >= 1);
         // Request: dense words up to N-1 (state order) + Lyndon at N.
@@ -135,6 +139,20 @@ impl LogSigEngine {
 
     /// The log-signature in the Lyndon basis: coefficients of
     /// `log(S_{0,T}(X))` at Lyndon words, level-major then lex.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use pathsig::logsig::LogSigEngine;
+    ///
+    /// let eng = LogSigEngine::new(2, 3);
+    /// // One linear segment: log S = ΔX — level 1 only (primitivity).
+    /// let out = eng.logsig(&[0.0, 0.0, 0.5, -0.25]);
+    /// assert_eq!(out.len(), eng.out_dim());
+    /// assert!((out[0] - 0.5).abs() < 1e-12);
+    /// assert!((out[1] + 0.25).abs() < 1e-12);
+    /// assert!(out[2..].iter().all(|x| x.abs() < 1e-12));
+    /// ```
     pub fn logsig(&self, path: &[f64]) -> Vec<f64> {
         let fwd = self.forward_internal(path);
         self.outputs_from(&fwd)

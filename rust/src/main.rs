@@ -47,11 +47,19 @@ fn load_runtime(args: &Args) -> Option<Arc<Runtime>> {
     let dir = args.str_or("artifacts", "artifacts");
     match Runtime::new(Path::new(dir)) {
         Ok(rt) => {
-            eprintln!(
-                "[pathsig] PJRT runtime up ({}, {} artifacts)",
-                rt.platform(),
-                rt.manifest.entries.len()
-            );
+            if rt.backend_available() {
+                eprintln!(
+                    "[pathsig] PJRT runtime up ({}, {} artifacts)",
+                    rt.platform(),
+                    rt.manifest.entries.len()
+                );
+            } else {
+                eprintln!(
+                    "[pathsig] artifact manifest loaded ({} artifacts) but no PJRT \
+                     backend attached — native engine serves all requests",
+                    rt.manifest.entries.len()
+                );
+            }
             Some(Arc::new(rt))
         }
         Err(e) => {

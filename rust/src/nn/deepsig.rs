@@ -34,6 +34,7 @@ pub struct DeepSigSpec {
 
 /// Deep signature model with learnable channel map and dense head.
 pub struct DeepSigModel {
+    /// The hyper-parameters the model was built from.
     pub spec: DeepSigSpec,
     /// Pointwise channel map φ_θ: dim → dim.
     pub phi: Linear,
@@ -45,6 +46,7 @@ pub struct DeepSigModel {
 }
 
 impl DeepSigModel {
+    /// Build the model: φ initialised near identity, head He-uniform.
     pub fn new(rng: &mut Rng, spec: DeepSigSpec) -> DeepSigModel {
         let engine = SigEngine::new(WordTable::build(2 * spec.dim, &spec.words));
         let mut phi = Linear::new(rng, spec.dim, spec.dim);
@@ -73,6 +75,7 @@ impl DeepSigModel {
         self.engine.out_dim()
     }
 
+    /// Total number of trainable parameters (φ + head).
     pub fn n_params(&self) -> usize {
         self.phi.n_params() + self.head.iter().map(|l| l.n_params()).sum::<usize>()
     }

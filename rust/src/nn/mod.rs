@@ -23,9 +23,13 @@ use crate::util::rng::Rng;
 /// A dense layer `y = W x + b` with row-major `W (out, in)`.
 #[derive(Clone, Debug)]
 pub struct Linear {
+    /// Weights, row-major `(n_out, n_in)`.
     pub w: Vec<f64>,
+    /// Bias, length `n_out`.
     pub b: Vec<f64>,
+    /// Input width.
     pub n_in: usize,
+    /// Output width.
     pub n_out: usize,
     // Adam state.
     mw: Vec<f64>,
@@ -109,6 +113,7 @@ impl Linear {
         adam_update(&mut self.b, &mut self.mb, &mut self.vb, gb, lr, t);
     }
 
+    /// Number of trainable parameters (weights + biases).
     pub fn n_params(&self) -> usize {
         self.w.len() + self.b.len()
     }
@@ -176,10 +181,13 @@ pub fn mse_loss(pred: &[f64], target: &[f64]) -> (f64, Vec<f64>) {
 /// A plain MLP with ReLU hidden activations (the §8 FNN baseline).
 #[derive(Clone, Debug)]
 pub struct Mlp {
+    /// Dense layers, input to output order.
     pub layers: Vec<Linear>,
 }
 
 impl Mlp {
+    /// Build an MLP with the given layer sizes (≥ 2 entries:
+    /// `[input, hidden…, output]`), He-uniform initialised.
     pub fn new(rng: &mut Rng, sizes: &[usize]) -> Mlp {
         assert!(sizes.len() >= 2);
         let layers = sizes
@@ -189,10 +197,12 @@ impl Mlp {
         Mlp { layers }
     }
 
+    /// Total number of trainable parameters.
     pub fn n_params(&self) -> usize {
         self.layers.iter().map(|l| l.n_params()).sum()
     }
 
+    /// Forward pass without caching (inference).
     pub fn forward(&self, x: &[f64], batch: usize) -> Vec<f64> {
         let (y, _) = self.forward_cached(x, batch);
         y
@@ -237,6 +247,8 @@ impl Mlp {
     }
 }
 
+/// Per-layer activations retained by [`Mlp::forward_cached`] for the
+/// backward pass.
 #[derive(Default)]
 pub struct MlpCache {
     inputs: Vec<Vec<f64>>,

@@ -1,70 +1,127 @@
-//! PJRT runtime — loads and executes the AOT artifacts emitted by
-//! `python/compile/aot.py`.
+//! PJRT runtime — loads the AOT artifact manifest emitted by
+//! `python/compile/aot.py` and executes artifacts through a pluggable
+//! execution backend.
 //!
-//! The interchange format is **HLO text** (`artifacts/*.hlo.txt`): the
-//! image's xla_extension 0.5.1 rejects jax ≥ 0.5 serialized
-//! `HloModuleProto`s (64-bit instruction ids), while the text parser
-//! reassigns ids and round-trips cleanly (see `/opt/xla-example` and
-//! DESIGN.md). Each artifact is described by `artifacts/manifest.json`;
-//! executables are compiled once on first use and cached.
+//! The interchange format is **HLO text** (`artifacts/*.hlo.txt`):
+//! jax ≥ 0.5 serialized `HloModuleProto`s carry 64-bit instruction ids
+//! that older PJRT plugins reject, while the text parser reassigns ids
+//! and round-trips cleanly (see DESIGN.md). Each artifact is described by
+//! `artifacts/manifest.json`; executables are compiled once on first use
+//! and cached by the backend.
+//!
+//! ## Backend plumbing
+//!
+//! The crate itself has no compiled-in XLA dependency — a concrete
+//! PJRT client (e.g. the vendored `xla` crate's CPU client) is injected
+//! through the [`PjrtBackend`] trait via [`Runtime::with_backend`].
+//! PJRT client wrappers are typically `Rc`-based and not `Send`, so the
+//! backend is **constructed inside a dedicated executor thread** (the
+//! factory closure is `Send`; the backend itself need not be) and all
+//! calls are serialized through a channel. The CPU client runs its own
+//! intra-op thread pool, so one dispatcher thread is not a throughput
+//! bottleneck; it just provides the `Send + Sync` boundary the server
+//! needs.
+//!
+//! [`Runtime::new`] opens a manifest **without** a backend: artifact
+//! metadata is queryable (the coordinator uses it for routing decisions)
+//! but [`Runtime::run_f32`] reports the backend as unavailable and the
+//! caller falls back to the native engine. This keeps the crate building
+//! and testing with no AOT artifacts and no PJRT plugin present.
 //!
 //! Python never runs on this path — the Rust binary is self-contained
 //! once `make artifacts` has produced the files.
 
 use crate::util::json::Json;
-use anyhow::{anyhow, bail, Context, Result};
-use std::collections::HashMap;
+use std::fmt;
 use std::path::{Path, PathBuf};
 use std::sync::Mutex;
+
+/// Error type of the runtime layer (manifest I/O, validation, backend).
+#[derive(Debug, Clone)]
+pub struct RtError {
+    msg: String,
+}
+
+impl RtError {
+    /// Create an error from a message.
+    pub fn new(msg: impl Into<String>) -> RtError {
+        RtError { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for RtError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl std::error::Error for RtError {}
+
+/// Result alias used throughout the runtime layer.
+pub type RtResult<T> = std::result::Result<T, RtError>;
+
+fn err<T>(msg: impl Into<String>) -> RtResult<T> {
+    Err(RtError::new(msg))
+}
 
 /// Shape + dtype of one artifact input/output.
 #[derive(Clone, Debug, PartialEq)]
 pub struct TensorSpec {
+    /// Row-major dimensions.
     pub shape: Vec<usize>,
+    /// Element type tag (currently always `"f32"`).
     pub dtype: String,
 }
 
 impl TensorSpec {
+    /// Total number of elements (product of the shape).
     pub fn numel(&self) -> usize {
         self.shape.iter().product()
     }
 
-    fn from_json(j: &Json) -> Result<TensorSpec> {
-        Ok(TensorSpec {
+    fn from_json(j: &Json) -> TensorSpec {
+        TensorSpec {
             shape: j.usize_vec("shape"),
             dtype: j.get("dtype").as_str().unwrap_or("f32").to_string(),
-        })
+        }
     }
 }
 
 /// One manifest entry (a compiled computation).
 #[derive(Clone, Debug)]
 pub struct ManifestEntry {
+    /// Unique artifact name (manifest key, used in requests and logs).
     pub name: String,
+    /// HLO text file, relative to the manifest directory.
     pub file: String,
     /// Kind tag, e.g. `sig_fwd`, `sig_vjp`, `logsig_fwd`, `train_step`,
     /// `predict`, `windowed`.
     pub kind: String,
     /// Free-form metadata (batch/steps/dim/depth/wordset…).
     pub meta: Json,
+    /// Input tensor specs, positional.
     pub inputs: Vec<TensorSpec>,
+    /// Output tensor specs, positional (the AOT path lowers with
+    /// `return_tuple=True`).
     pub outputs: Vec<TensorSpec>,
 }
 
 /// Parsed `manifest.json`.
 #[derive(Clone, Debug, Default)]
 pub struct Manifest {
+    /// All artifact entries, manifest order.
     pub entries: Vec<ManifestEntry>,
+    /// Directory the manifest (and the HLO files) live in.
     pub dir: PathBuf,
 }
 
 impl Manifest {
     /// Load `<dir>/manifest.json`.
-    pub fn load(dir: &Path) -> Result<Manifest> {
+    pub fn load(dir: &Path) -> RtResult<Manifest> {
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path)
-            .with_context(|| format!("reading {}", path.display()))?;
-        let j = Json::parse(&text).map_err(|e| anyhow!("parsing manifest: {e}"))?;
+            .map_err(|e| RtError::new(format!("reading {}: {e}", path.display())))?;
+        let j = Json::parse(&text).map_err(|e| RtError::new(format!("parsing manifest: {e}")))?;
         let mut entries = Vec::new();
         for e in j.get("entries").as_arr().unwrap_or(&[]) {
             let inputs = e
@@ -73,25 +130,25 @@ impl Manifest {
                 .unwrap_or(&[])
                 .iter()
                 .map(TensorSpec::from_json)
-                .collect::<Result<Vec<_>>>()?;
+                .collect();
             let outputs = e
                 .get("outputs")
                 .as_arr()
                 .unwrap_or(&[])
                 .iter()
                 .map(TensorSpec::from_json)
-                .collect::<Result<Vec<_>>>()?;
+                .collect();
+            let name = match e.get("name").as_str() {
+                Some(n) => n.to_string(),
+                None => return err("manifest entry missing 'name'"),
+            };
+            let file = match e.get("file").as_str() {
+                Some(f) => f.to_string(),
+                None => return err(format!("manifest entry '{name}' missing 'file'")),
+            };
             entries.push(ManifestEntry {
-                name: e
-                    .get("name")
-                    .as_str()
-                    .ok_or_else(|| anyhow!("entry missing name"))?
-                    .to_string(),
-                file: e
-                    .get("file")
-                    .as_str()
-                    .ok_or_else(|| anyhow!("entry missing file"))?
-                    .to_string(),
+                name,
+                file,
                 kind: e.get("kind").as_str().unwrap_or("").to_string(),
                 meta: e.get("meta").clone(),
                 inputs,
@@ -104,6 +161,7 @@ impl Manifest {
         })
     }
 
+    /// Look an artifact up by name.
     pub fn find(&self, name: &str) -> Option<&ManifestEntry> {
         self.entries.iter().find(|e| e.name == name)
     }
@@ -114,165 +172,98 @@ impl Manifest {
     }
 }
 
-/// PJRT client + compiled-executable cache. **Not `Send`** — the `xla`
-/// crate's wrappers are `Rc`-based — so the shared-server entry point is
-/// [`Runtime`] (a channel handle to a dedicated executor thread); this
-/// inner type is what that thread owns. Single-threaded binaries
-/// (examples, benches) may use it directly.
-pub struct RuntimeInner {
-    pub manifest: Manifest,
-    client: xla::PjRtClient,
-    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+/// One validated, shaped input buffer handed to a backend.
+pub struct ArtifactInput<'a> {
+    /// Flat row-major element data.
+    pub data: &'a [f32],
+    /// Row-major dimensions (matches the manifest spec).
+    pub shape: &'a [usize],
 }
 
-impl RuntimeInner {
-    /// Create a CPU-PJRT runtime over an artifact directory.
-    pub fn new(artifacts_dir: &Path) -> Result<RuntimeInner> {
-        let manifest = Manifest::load(artifacts_dir)?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
-        Ok(RuntimeInner {
-            manifest,
-            client,
-            cache: HashMap::new(),
-        })
-    }
+/// A concrete PJRT (or PJRT-like) execution backend.
+///
+/// Implementations own the device client and the compiled-executable
+/// cache. They are constructed *inside* the runtime's executor thread
+/// (see the module docs), so they do not need to be `Send`. Inputs are
+/// pre-validated against the manifest by [`Runtime::run_f32`]; outputs
+/// are re-validated against the manifest after [`PjrtBackend::execute`]
+/// returns.
+pub trait PjrtBackend {
+    /// Device platform name (e.g. `"cpu"`, `"cuda"`).
+    fn platform(&self) -> String;
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
+    /// Compile (and cache) the artifact stored as HLO text at `hlo_path`
+    /// under the key `name`. Idempotent.
+    fn compile(&mut self, name: &str, hlo_path: &Path) -> RtResult<()>;
 
-    /// Compile (and cache) an artifact by manifest name.
-    pub fn ensure_compiled(&mut self, name: &str) -> Result<()> {
-        if self.cache.contains_key(name) {
-            return Ok(());
-        }
-        let entry = self
-            .manifest
-            .find(name)
-            .ok_or_else(|| anyhow!("no artifact named '{name}' in manifest"))?
-            .clone();
-        let path = self.manifest.dir.join(&entry.file);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .map_err(|e| anyhow!("loading {}: {e:?}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
-        self.cache.insert(name.to_string(), exe);
-        Ok(())
-    }
-
-    /// Execute an artifact on `f32` inputs. Inputs are validated against
-    /// the manifest specs; outputs come back as flat `f32` vectors in
-    /// manifest order (the AOT path lowers with `return_tuple=True`).
-    pub fn run_f32(&mut self, name: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
-        let entry = self
-            .manifest
-            .find(name)
-            .ok_or_else(|| anyhow!("no artifact named '{name}'"))?
-            .clone();
-        if inputs.len() != entry.inputs.len() {
-            bail!(
-                "{name}: expected {} inputs, got {}",
-                entry.inputs.len(),
-                inputs.len()
-            );
-        }
-        let mut literals = Vec::with_capacity(inputs.len());
-        for (k, (data, spec)) in inputs.iter().zip(&entry.inputs).enumerate() {
-            if data.len() != spec.numel() {
-                bail!(
-                    "{name} input {k}: expected {} elements (shape {:?}), got {}",
-                    spec.numel(),
-                    spec.shape,
-                    data.len()
-                );
-            }
-            let dims: Vec<i64> = spec.shape.iter().map(|&s| s as i64).collect();
-            let lit = xla::Literal::vec1(data)
-                .reshape(&dims)
-                .map_err(|e| anyhow!("reshape input {k}: {e:?}"))?;
-            literals.push(lit);
-        }
-        self.ensure_compiled(name)?;
-        let exe = self.cache.get(name).unwrap();
-        let result = exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetching result: {e:?}"))?;
-        let parts = lit
-            .to_tuple()
-            .map_err(|e| anyhow!("untupling result: {e:?}"))?;
-        if parts.len() != entry.outputs.len() {
-            bail!(
-                "{name}: manifest promises {} outputs, executable returned {}",
-                entry.outputs.len(),
-                parts.len()
-            );
-        }
-        let mut out = Vec::with_capacity(parts.len());
-        for (k, (p, spec)) in parts.iter().zip(&entry.outputs).enumerate() {
-            let v = p
-                .to_vec::<f32>()
-                .map_err(|e| anyhow!("output {k} to_vec: {e:?}"))?;
-            if v.len() != spec.numel() {
-                bail!(
-                    "{name} output {k}: expected {} elements, got {}",
-                    spec.numel(),
-                    v.len()
-                );
-            }
-            out.push(v);
-        }
-        Ok(out)
-    }
+    /// Execute a previously compiled (or compilable) artifact on `f32`
+    /// inputs, returning one flat `f32` vector per output, in manifest
+    /// order.
+    fn execute(
+        &mut self,
+        name: &str,
+        inputs: &[ArtifactInput<'_>],
+        outputs: &[TensorSpec],
+    ) -> RtResult<Vec<Vec<f32>>>;
 }
 
-// ------------------------------------------------------------------
-// Thread-confined runtime handle
-// ------------------------------------------------------------------
+/// Factory that builds a backend on the executor thread. The factory
+/// must be `Send`; the backend it returns need not be.
+pub type BackendFactory = Box<dyn FnOnce() -> RtResult<Box<dyn PjrtBackend>> + Send>;
 
 enum RtMsg {
     Run {
         name: String,
         inputs: Vec<Vec<f32>>,
-        reply: std::sync::mpsc::Sender<Result<Vec<Vec<f32>>>>,
+        reply: std::sync::mpsc::Sender<RtResult<Vec<Vec<f32>>>>,
     },
     Warm {
         name: String,
-        reply: std::sync::mpsc::Sender<Result<()>>,
+        reply: std::sync::mpsc::Sender<RtResult<()>>,
     },
     Shutdown,
 }
 
-/// `Send + Sync` handle to a PJRT runtime living on its own executor
-/// thread. All PJRT calls are serialized through a channel — the CPU
-/// client runs its own intra-op thread pool, so one dispatcher thread is
-/// not a throughput bottleneck; it just provides the `Send` boundary the
-/// `Rc`-based wrappers need.
-pub struct Runtime {
-    pub manifest: Manifest,
-    platform: String,
+struct Executor {
     tx: Mutex<std::sync::mpsc::Sender<RtMsg>>,
     thread: Option<std::thread::JoinHandle<()>>,
 }
 
+/// `Send + Sync` handle to an artifact manifest plus (optionally) a
+/// backend living on its own executor thread. See the module docs for
+/// the two construction modes.
+pub struct Runtime {
+    /// Parsed artifact manifest (always available).
+    pub manifest: Manifest,
+    platform: String,
+    exec: Option<Executor>,
+}
+
 impl Runtime {
-    /// Spawn the executor thread over an artifact directory.
-    pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
-        let dir = artifacts_dir.to_path_buf();
+    /// Open an artifact directory **without** an execution backend:
+    /// metadata queries work, execution reports the backend as
+    /// unavailable (callers fall back to the native engine).
+    pub fn new(artifacts_dir: &Path) -> RtResult<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        Ok(Runtime {
+            manifest,
+            platform: "none".to_string(),
+            exec: None,
+        })
+    }
+
+    /// Open an artifact directory and spawn an executor thread running
+    /// the backend produced by `factory` (see [`BackendFactory`]).
+    pub fn with_backend(artifacts_dir: &Path, factory: BackendFactory) -> RtResult<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let thread_manifest = manifest.clone();
         let (tx, rx) = std::sync::mpsc::channel::<RtMsg>();
-        let (init_tx, init_rx) = std::sync::mpsc::channel::<Result<(Manifest, String)>>();
+        let (init_tx, init_rx) = std::sync::mpsc::channel::<RtResult<String>>();
         let thread = std::thread::spawn(move || {
-            let mut inner = match RuntimeInner::new(&dir) {
-                Ok(i) => {
-                    let _ = init_tx.send(Ok((i.manifest.clone(), i.platform())));
-                    i
+            let mut backend = match factory() {
+                Ok(b) => {
+                    let _ = init_tx.send(Ok(b.platform()));
+                    b
                 }
                 Err(e) => {
                     let _ = init_tx.send(Err(e));
@@ -286,49 +277,81 @@ impl Runtime {
                         inputs,
                         reply,
                     } => {
-                        let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
-                        let _ = reply.send(inner.run_f32(&name, &refs));
+                        let _ = reply.send(execute_on(
+                            backend.as_mut(),
+                            &thread_manifest,
+                            &name,
+                            &inputs,
+                        ));
                     }
                     RtMsg::Warm { name, reply } => {
-                        let _ = reply.send(inner.ensure_compiled(&name));
+                        let _ = reply.send(warm_on(backend.as_mut(), &thread_manifest, &name));
                     }
                     RtMsg::Shutdown => break,
                 }
             }
         });
-        let (manifest, platform) = init_rx
-            .recv()
-            .map_err(|_| anyhow!("runtime thread died during init"))??;
+        let platform = match init_rx.recv() {
+            Ok(Ok(p)) => p,
+            Ok(Err(e)) => return Err(e),
+            Err(_) => return err("runtime executor thread died during init"),
+        };
         Ok(Runtime {
             manifest,
             platform,
-            tx: Mutex::new(tx),
-            thread: Some(thread),
+            exec: Some(Executor {
+                tx: Mutex::new(tx),
+                thread: Some(thread),
+            }),
         })
     }
 
+    /// Whether an execution backend is attached (false ⇒ metadata only).
+    pub fn backend_available(&self) -> bool {
+        self.exec.is_some()
+    }
+
+    /// Backend platform name; `"none"` when no backend is attached.
     pub fn platform(&self) -> String {
         self.platform.clone()
     }
 
     /// Pre-compile an artifact (e.g. at server start).
-    pub fn warm(&self, name: &str) -> Result<()> {
+    pub fn warm(&self, name: &str) -> RtResult<()> {
+        let exec = match &self.exec {
+            Some(e) => e,
+            None => return err(no_backend_msg(name)),
+        };
         let (reply, rx) = std::sync::mpsc::channel();
-        self.tx
+        exec.tx
             .lock()
             .unwrap()
             .send(RtMsg::Warm {
                 name: name.to_string(),
                 reply,
             })
-            .map_err(|_| anyhow!("runtime thread gone"))?;
-        rx.recv().map_err(|_| anyhow!("runtime thread gone"))?
+            .map_err(|_| RtError::new("runtime executor thread gone"))?;
+        rx.recv()
+            .map_err(|_| RtError::new("runtime executor thread gone"))?
     }
 
-    /// Execute an artifact (see [`RuntimeInner::run_f32`]).
-    pub fn run_f32(&self, name: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+    /// Execute an artifact on `f32` inputs. Inputs are validated against
+    /// the manifest specs; outputs come back as flat `f32` vectors in
+    /// manifest order.
+    pub fn run_f32(&self, name: &str, inputs: &[&[f32]]) -> RtResult<Vec<Vec<f32>>> {
+        // Validate eagerly so shape errors surface on the caller thread
+        // even before touching the backend.
+        let entry = match self.manifest.find(name) {
+            Some(e) => e,
+            None => return err(format!("no artifact named '{name}' in manifest")),
+        };
+        validate_inputs(entry, inputs)?;
+        let exec = match &self.exec {
+            Some(e) => e,
+            None => return err(no_backend_msg(name)),
+        };
         let (reply, rx) = std::sync::mpsc::channel();
-        self.tx
+        exec.tx
             .lock()
             .unwrap()
             .send(RtMsg::Run {
@@ -336,18 +359,101 @@ impl Runtime {
                 inputs: inputs.iter().map(|s| s.to_vec()).collect(),
                 reply,
             })
-            .map_err(|_| anyhow!("runtime thread gone"))?;
-        rx.recv().map_err(|_| anyhow!("runtime thread gone"))?
+            .map_err(|_| RtError::new("runtime executor thread gone"))?;
+        rx.recv()
+            .map_err(|_| RtError::new("runtime executor thread gone"))?
     }
 }
 
 impl Drop for Runtime {
     fn drop(&mut self) {
-        let _ = self.tx.lock().unwrap().send(RtMsg::Shutdown);
-        if let Some(h) = self.thread.take() {
-            let _ = h.join();
+        if let Some(exec) = &mut self.exec {
+            let _ = exec.tx.lock().unwrap().send(RtMsg::Shutdown);
+            if let Some(h) = exec.thread.take() {
+                let _ = h.join();
+            }
         }
     }
+}
+
+fn no_backend_msg(name: &str) -> String {
+    format!(
+        "cannot execute '{name}': no PJRT backend attached — construct the \
+         runtime with Runtime::with_backend (see runtime module docs and \
+         DESIGN.md); the native engine serves every request shape"
+    )
+}
+
+fn validate_inputs(entry: &ManifestEntry, inputs: &[&[f32]]) -> RtResult<()> {
+    if inputs.len() != entry.inputs.len() {
+        return err(format!(
+            "{}: expected {} inputs, got {}",
+            entry.name,
+            entry.inputs.len(),
+            inputs.len()
+        ));
+    }
+    for (k, (data, spec)) in inputs.iter().zip(&entry.inputs).enumerate() {
+        if data.len() != spec.numel() {
+            return err(format!(
+                "{} input {k}: expected {} elements (shape {:?}), got {}",
+                entry.name,
+                spec.numel(),
+                spec.shape,
+                data.len()
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Executor-thread body of one `run_f32` call: re-resolve the entry,
+/// ensure compilation, execute, validate outputs.
+fn execute_on(
+    backend: &mut dyn PjrtBackend,
+    manifest: &Manifest,
+    name: &str,
+    inputs: &[Vec<f32>],
+) -> RtResult<Vec<Vec<f32>>> {
+    let entry = match manifest.find(name) {
+        Some(e) => e,
+        None => return err(format!("no artifact named '{name}' in manifest")),
+    };
+    backend.compile(name, &manifest.dir.join(&entry.file))?;
+    let shaped: Vec<ArtifactInput<'_>> = inputs
+        .iter()
+        .zip(&entry.inputs)
+        .map(|(data, spec)| ArtifactInput {
+            data: data.as_slice(),
+            shape: spec.shape.as_slice(),
+        })
+        .collect();
+    let out = backend.execute(name, &shaped, &entry.outputs)?;
+    if out.len() != entry.outputs.len() {
+        return err(format!(
+            "{name}: manifest promises {} outputs, backend returned {}",
+            entry.outputs.len(),
+            out.len()
+        ));
+    }
+    for (k, (v, spec)) in out.iter().zip(&entry.outputs).enumerate() {
+        if v.len() != spec.numel() {
+            return err(format!(
+                "{name} output {k}: expected {} elements, got {}",
+                spec.numel(),
+                v.len()
+            ));
+        }
+    }
+    Ok(out)
+}
+
+fn warm_on(backend: &mut dyn PjrtBackend, manifest: &Manifest, name: &str) -> RtResult<()> {
+    let entry = match manifest.find(name) {
+        Some(e) => e,
+        None => return err(format!("no artifact named '{name}' in manifest")),
+    };
+    backend.compile(name, &manifest.dir.join(&entry.file))
 }
 
 #[cfg(test)]
@@ -383,5 +489,125 @@ mod tests {
     fn missing_manifest_errors() {
         let dir = std::env::temp_dir().join("pathsig_definitely_missing_dir_xyz");
         assert!(Manifest::load(&dir).is_err());
+    }
+
+    fn write_test_manifest(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "pathsig_runtime_test_{tag}_{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"entries": [
+                {"name": "double", "file": "double.hlo.txt", "kind": "demo",
+                 "meta": {},
+                 "inputs": [{"shape": [2, 3], "dtype": "f32"}],
+                 "outputs": [{"shape": [2, 3], "dtype": "f32"}]}
+            ]}"#,
+        )
+        .unwrap();
+        std::fs::write(dir.join("double.hlo.txt"), "HloModule double\n").unwrap();
+        dir
+    }
+
+    /// Mock backend: "executes" by doubling every input element.
+    struct DoublingBackend {
+        compiled: Vec<String>,
+    }
+
+    impl PjrtBackend for DoublingBackend {
+        fn platform(&self) -> String {
+            "mock".to_string()
+        }
+
+        fn compile(&mut self, name: &str, hlo_path: &Path) -> RtResult<()> {
+            if !hlo_path.exists() {
+                return err(format!("missing HLO file {}", hlo_path.display()));
+            }
+            if !self.compiled.iter().any(|n| n == name) {
+                self.compiled.push(name.to_string());
+            }
+            Ok(())
+        }
+
+        fn execute(
+            &mut self,
+            _name: &str,
+            inputs: &[ArtifactInput<'_>],
+            _outputs: &[TensorSpec],
+        ) -> RtResult<Vec<Vec<f32>>> {
+            Ok(inputs
+                .iter()
+                .map(|i| i.data.iter().map(|x| 2.0 * x).collect())
+                .collect())
+        }
+    }
+
+    #[test]
+    fn backendless_runtime_reads_metadata_but_cannot_execute() {
+        let dir = write_test_manifest("meta");
+        let rt = Runtime::new(&dir).unwrap();
+        assert!(!rt.backend_available());
+        assert_eq!(rt.platform(), "none");
+        assert_eq!(rt.manifest.entries.len(), 1);
+        let e = rt.run_f32("double", &[&[0.0; 6]]).unwrap_err();
+        assert!(e.to_string().contains("no PJRT backend"), "{e}");
+        assert!(rt.warm("double").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn mock_backend_executes_through_the_executor_thread() {
+        let dir = write_test_manifest("exec");
+        let rt = Runtime::with_backend(
+            &dir,
+            Box::new(|| {
+                Ok(Box::new(DoublingBackend {
+                    compiled: Vec::new(),
+                }) as Box<dyn PjrtBackend>)
+            }),
+        )
+        .unwrap();
+        assert!(rt.backend_available());
+        assert_eq!(rt.platform(), "mock");
+        rt.warm("double").unwrap();
+        let input = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let out = rt.run_f32("double", &[&input]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0], vec![2.0, 4.0, 6.0, 8.0, 10.0, 12.0]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn shape_validation_rejects_bad_inputs() {
+        let dir = write_test_manifest("shape");
+        let rt = Runtime::with_backend(
+            &dir,
+            Box::new(|| {
+                Ok(Box::new(DoublingBackend {
+                    compiled: Vec::new(),
+                }) as Box<dyn PjrtBackend>)
+            }),
+        )
+        .unwrap();
+        // Wrong element count.
+        assert!(rt.run_f32("double", &[&[1.0f32; 5]]).is_err());
+        // Wrong input arity.
+        assert!(rt
+            .run_f32("double", &[&[1.0f32; 6], &[1.0f32; 6]])
+            .is_err());
+        // Unknown artifact.
+        assert!(rt.run_f32("nope", &[&[1.0f32; 6]]).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn failing_backend_factory_surfaces_the_error() {
+        let dir = write_test_manifest("fail");
+        let got = Runtime::with_backend(&dir, Box::new(|| err("plugin not found")));
+        assert!(got.is_err());
+        assert!(got.err().unwrap().to_string().contains("plugin not found"));
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -71,6 +71,22 @@ pub fn sig_forward_state(eng: &SigEngine, path: &[f64]) -> Vec<f64> {
 
 /// The projected signature `π_I(S_{0,T}(X))` of a single path
 /// (row-major `(M+1, d)`), in the engine's requested-word order.
+///
+/// # Examples
+///
+/// ```
+/// use pathsig::sig::{signature, SigEngine};
+/// use pathsig::words::{truncated_words, WordTable};
+///
+/// // The axis path (0,0) → (1,0) → (1,1) at depth 2 over d = 2.
+/// let eng = SigEngine::new(WordTable::build(2, &truncated_words(2, 2)));
+/// let sig = signature(&eng, &[0.0, 0.0, 1.0, 0.0, 1.0, 1.0]);
+/// // Coordinate order: (1), (2), (1,1), (1,2), (2,1), (2,2).
+/// assert_eq!(sig.len(), 6);
+/// assert!((sig[0] - 1.0).abs() < 1e-12); // total x-increment
+/// assert!((sig[3] - 1.0).abs() < 1e-12); // S((1,2)): x moved before y
+/// assert!(sig[4].abs() < 1e-12);         // S((2,1)): y never led
+/// ```
 pub fn signature(eng: &SigEngine, path: &[f64]) -> Vec<f64> {
     let state = sig_forward_state(eng, path);
     let mut out = vec![0.0; eng.out_dim()];

@@ -31,6 +31,7 @@ use crate::words::WordTable;
 /// kernels need (`1/k` and `1/k!`). Build once, reuse across calls.
 #[derive(Clone, Debug)]
 pub struct SigEngine {
+    /// The prefix-closed word table driving the recursion.
     pub table: WordTable,
     /// `recip[k] = 1/k` for `k = 0..=N` (`recip[0]` unused).
     pub recip: Vec<f64>,
@@ -41,6 +42,8 @@ pub struct SigEngine {
 }
 
 impl SigEngine {
+    /// Build an engine over a word table, sized to the machine's
+    /// available parallelism (capped at 16 workers).
     pub fn new(table: WordTable) -> SigEngine {
         let n = table.max_level;
         let recip: Vec<f64> = (0..=n + 1).map(|k| if k == 0 { 0.0 } else { 1.0 / k as f64 }).collect();
@@ -67,6 +70,7 @@ impl SigEngine {
         e
     }
 
+    /// Engine with an explicit worker count (min 1).
     pub fn with_threads(table: WordTable, threads: usize) -> SigEngine {
         let mut e = SigEngine::new(table);
         e.threads = threads.max(1);

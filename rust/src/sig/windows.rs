@@ -15,16 +15,20 @@
 use super::{chen_update, SigEngine};
 use crate::util::threadpool::parallel_map;
 
-/// A half-open index window `[l, r)` over path points — the signature is
-/// computed over segment increments `l→l+1, …, r-1→r`, i.e. the paper's
-/// `S_{t_l, t_r}(X)`.
+/// An index window over path points `l..=r` (both endpoints included) —
+/// the signature is computed over the segment increments
+/// `l→l+1, …, r-1→r`, i.e. the paper's `S_{t_l, t_r}(X)`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Window {
+    /// Left edge (index of the window's first path point).
     pub l: usize,
+    /// Right edge (index of the window's last path point, `> l`).
     pub r: usize,
 }
 
 impl Window {
+    /// Construct the window spanning path points `l..=r`; panics unless
+    /// `l < r`.
     pub fn new(l: usize, r: usize) -> Window {
         assert!(l < r, "window must satisfy l < r (got {l}, {r})");
         Window { l, r }
@@ -33,6 +37,23 @@ impl Window {
 
 /// Windowed signatures of a single path: returns row-major
 /// `(K, |I|)` for `K = windows.len()`. `path` is `(M+1, d)`.
+///
+/// # Examples
+///
+/// ```
+/// use pathsig::sig::{windowed_signatures, SigEngine, Window};
+/// use pathsig::words::{truncated_words, WordTable};
+///
+/// let eng = SigEngine::new(WordTable::build(1, &truncated_words(1, 2)));
+/// // 1-D path 0, 1, 3, 6; two windows over it.
+/// let path = [0.0, 1.0, 3.0, 6.0];
+/// let out = windowed_signatures(&eng, &path, &[Window::new(0, 2), Window::new(2, 3)]);
+/// // Each row is [S((1)), S((1,1))] = [ΔX, ΔX²/2] over its window.
+/// assert_eq!(out.len(), 4);
+/// assert!((out[0] - 3.0).abs() < 1e-12); // X_2 - X_0
+/// assert!((out[1] - 4.5).abs() < 1e-12); // 3²/2
+/// assert!((out[2] - 3.0).abs() < 1e-12); // X_3 - X_2
+/// ```
 pub fn windowed_signatures(eng: &SigEngine, path: &[f64], windows: &[Window]) -> Vec<f64> {
     let d = eng.table.d;
     let m1 = path.len() / d;

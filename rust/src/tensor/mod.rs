@@ -17,7 +17,9 @@ pub use ops::{mul_adjoint, tensor_exp_series, tensor_log_series};
 /// Element of the truncated tensor algebra `T_{≤N}(R^d)`.
 #[derive(Clone, Debug, PartialEq)]
 pub struct TruncTensor {
+    /// Alphabet size / path dimension `d`.
     pub d: usize,
+    /// Truncation depth `N`.
     pub depth: usize,
     /// `levels[n][code]` = coefficient of the word with base-`d`
     /// encoding `code` at level `n`; `levels[0]` is the scalar part.
@@ -50,6 +52,8 @@ impl TruncTensor {
         self.levels.iter().map(|l| l.len()).sum()
     }
 
+    /// Never empty — `levels[0]` always holds the scalar slot (paired
+    /// with [`TruncTensor::len`] to satisfy the usual slice-like API).
     pub fn is_empty(&self) -> bool {
         false
     }

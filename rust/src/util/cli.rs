@@ -50,26 +50,32 @@ impl Args {
         Args::parse_from(std::env::args())
     }
 
+    /// Raw option value, if present.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.options.get(key).map(|s| s.as_str())
     }
 
+    /// Whether a boolean flag was passed (`--flag`, `--flag=1`, …).
     pub fn flag(&self, key: &str) -> bool {
         matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
     }
 
+    /// Option parsed as `usize`, with a default for missing/bad values.
     pub fn usize(&self, key: &str, default: usize) -> usize {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// Option parsed as `f64`, with a default for missing/bad values.
     pub fn f64(&self, key: &str, default: f64) -> f64 {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// Option parsed as `u64`, with a default for missing/bad values.
     pub fn u64(&self, key: &str, default: u64) -> u64 {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// Option as a string, with a default when missing.
     pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
         self.get(key).unwrap_or(default)
     }

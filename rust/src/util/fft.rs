@@ -11,16 +11,20 @@ use std::f64::consts::PI;
 /// pulling in a complex-arithmetic dependency.
 #[derive(Clone, Copy, Debug, PartialEq, Default)]
 pub struct C64 {
+    /// Real part.
     pub re: f64,
+    /// Imaginary part.
     pub im: f64,
 }
 
 impl C64 {
+    /// Construct from real and imaginary parts.
     #[inline]
     pub fn new(re: f64, im: f64) -> Self {
         C64 { re, im }
     }
 
+    /// Complex multiplication.
     #[inline]
     pub fn mul(self, o: C64) -> C64 {
         C64::new(
@@ -29,11 +33,13 @@ impl C64 {
         )
     }
 
+    /// Complex addition.
     #[inline]
     pub fn add(self, o: C64) -> C64 {
         C64::new(self.re + o.re, self.im + o.im)
     }
 
+    /// Complex subtraction.
     #[inline]
     pub fn sub(self, o: C64) -> C64 {
         C64::new(self.re - o.re, self.im - o.im)

@@ -12,18 +12,26 @@ use std::fmt;
 /// deterministic (stable golden files).
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any number (JSON does not distinguish integers from floats).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object; keys sorted (BTreeMap) for deterministic output.
     Obj(BTreeMap<String, Json>),
 }
 
 /// Parse error with byte offset for diagnostics.
 #[derive(Debug, Clone, PartialEq)]
 pub struct JsonError {
+    /// Human-readable description of what went wrong.
     pub msg: String,
+    /// Byte offset into the input where parsing failed.
     pub offset: usize,
 }
 
@@ -55,6 +63,7 @@ impl Json {
 
     // ------------------------------------------------------------ accessors
 
+    /// The value as an `f64`, if it is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -62,6 +71,7 @@ impl Json {
         }
     }
 
+    /// The value as a `usize`, if it is a non-negative integer number.
     pub fn as_usize(&self) -> Option<usize> {
         match self {
             Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 => Some(*n as usize),
@@ -69,6 +79,7 @@ impl Json {
         }
     }
 
+    /// The value as an `i64`, if it is an integer number.
     pub fn as_i64(&self) -> Option<i64> {
         match self {
             Json::Num(n) if n.fract() == 0.0 => Some(*n as i64),
@@ -76,6 +87,7 @@ impl Json {
         }
     }
 
+    /// The value as a string slice, if it is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -83,6 +95,7 @@ impl Json {
         }
     }
 
+    /// The value as a bool, if it is a boolean.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -90,6 +103,7 @@ impl Json {
         }
     }
 
+    /// The value as a slice of elements, if it is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -97,6 +111,7 @@ impl Json {
         }
     }
 
+    /// The value as a key → value map, if it is an object.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(o) => Some(o),
@@ -131,22 +146,27 @@ impl Json {
 
     // --------------------------------------------------------- constructors
 
+    /// Build an object from `(key, value)` pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// Build a numeric array from an `f64` slice.
     pub fn arr_f64(xs: &[f64]) -> Json {
         Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
     }
 
+    /// Build a numeric array from an `f32` slice.
     pub fn arr_f32(xs: &[f32]) -> Json {
         Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
     }
 
+    /// Build a numeric array from a `usize` slice.
     pub fn arr_usize(xs: &[usize]) -> Json {
         Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
     }
 
+    /// Build a string value (clones the input).
     pub fn str(s: &str) -> Json {
         Json::Str(s.to_string())
     }

@@ -2,10 +2,11 @@
 //! descriptive statistics, CLI parsing and a property-testing
 //! mini-framework.
 //!
-//! The execution image has no network access and only the `xla`,
-//! `anyhow` and `num-traits` crates vendored, so everything a
+//! The crate is dependency-free by policy (the build environment is
+//! hermetic — no network, no vendored registry), so everything a
 //! production library would normally pull from crates.io
-//! (serde/rayon/rand/criterion/proptest/clap) is implemented here.
+//! (serde/rayon/rand/criterion/proptest/clap/rustfft) is implemented
+//! here.
 
 pub mod rng;
 pub mod json;

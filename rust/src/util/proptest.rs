@@ -20,6 +20,7 @@ use crate::util::rng::Rng;
 /// Case generator handed to each property invocation. Wraps an [`Rng`]
 /// with convenience draws sized for signature workloads.
 pub struct Gen {
+    /// The case's deterministic random stream.
     pub rng: Rng,
     /// Case index (0-based); useful for coverage-directed sizing so early
     /// cases are tiny and later ones grow.

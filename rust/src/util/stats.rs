@@ -8,14 +8,23 @@
 /// Summary statistics over a sample of `f64` observations.
 #[derive(Clone, Debug, Default)]
 pub struct Summary {
+    /// Sample size.
     pub n: usize,
+    /// Arithmetic mean.
     pub mean: f64,
+    /// Population standard deviation.
     pub std: f64,
+    /// Smallest observation.
     pub min: f64,
+    /// 25th percentile (linear interpolation).
     pub p25: f64,
+    /// 50th percentile.
     pub median: f64,
+    /// 75th percentile.
     pub p75: f64,
+    /// 95th percentile.
     pub p95: f64,
+    /// Largest observation.
     pub max: f64,
 }
 
@@ -77,6 +86,7 @@ impl Default for LatencyHistogram {
 }
 
 impl LatencyHistogram {
+    /// Create an empty histogram.
     pub fn new() -> Self {
         LatencyHistogram {
             buckets: (0..64).map(|_| std::sync::atomic::AtomicU64::new(0)).collect(),
@@ -95,10 +105,12 @@ impl LatencyHistogram {
         self.sum_ns.fetch_add(ns, Relaxed);
     }
 
+    /// Total number of recorded observations.
     pub fn count(&self) -> u64 {
         self.count.load(std::sync::atomic::Ordering::Relaxed)
     }
 
+    /// Mean recorded latency in nanoseconds (0 when empty).
     pub fn mean_ns(&self) -> f64 {
         let c = self.count();
         if c == 0 {

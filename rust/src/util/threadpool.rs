@@ -81,6 +81,7 @@ impl ThreadPool {
         ThreadPool::new(n)
     }
 
+    /// Number of worker threads.
     pub fn size(&self) -> usize {
         self.size
     }

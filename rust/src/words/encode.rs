@@ -19,7 +19,9 @@ use super::Word;
 /// to 0).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct Encoded {
+    /// Word length `n` (the level of the tensor algebra).
     pub level: u8,
+    /// Base-`d` integer code `φ_n(w)`.
     pub code: u64,
 }
 

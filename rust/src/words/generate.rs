@@ -12,19 +12,43 @@ use super::{lyndon::lyndon_words, Word};
 #[derive(Clone, Debug, PartialEq)]
 pub enum WordSpec {
     /// `W_{≤N}`: full truncation at depth N (§2.1).
-    Truncated { depth: usize },
+    Truncated {
+        /// Truncation depth `N`.
+        depth: usize,
+    },
     /// `W^γ_{≤r}`: anisotropic truncation (Definition 7.1).
-    Anisotropic { gamma: Vec<f64>, cutoff: f64 },
+    Anisotropic {
+        /// One positive weight per channel.
+        gamma: Vec<f64>,
+        /// Weighted-degree cutoff `r`.
+        cutoff: f64,
+    },
     /// `W_{≤N}(G)`: words tracing edges of a DAG/digraph on channels
     /// (§7.1). `edges[i]` lists the letters allowed to follow letter `i`.
-    Dag { depth: usize, edges: Vec<Vec<u16>> },
+    Dag {
+        /// Maximum word length `N`.
+        depth: usize,
+        /// Adjacency lists, one per channel.
+        edges: Vec<Vec<u16>>,
+    },
     /// Concatenations of a generator set with `|w| ≤ depth` (§8's sparse
     /// lead–lag construction).
-    ConcatGenerated { depth: usize, generators: Vec<Word> },
+    ConcatGenerated {
+        /// Maximum total word length.
+        depth: usize,
+        /// Generator words (ε entries ignored).
+        generators: Vec<Word>,
+    },
     /// Lyndon words up to `depth` (the log-signature output set).
-    Lyndon { depth: usize },
+    Lyndon {
+        /// Maximum word length.
+        depth: usize,
+    },
     /// An explicit list.
-    Custom { words: Vec<Word> },
+    Custom {
+        /// The requested words, output order.
+        words: Vec<Word>,
+    },
 }
 
 impl WordSpec {

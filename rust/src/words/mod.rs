@@ -34,14 +34,17 @@ pub use table::WordTable;
 pub struct Word(pub Vec<u16>);
 
 impl Word {
+    /// The empty word ε.
     pub fn empty() -> Word {
         Word(Vec::new())
     }
 
+    /// Word length `|w|` (number of letters).
     pub fn len(&self) -> usize {
         self.0.len()
     }
 
+    /// Whether this is the empty word ε.
     pub fn is_empty(&self) -> bool {
         self.0.is_empty()
     }

@@ -45,6 +45,19 @@ impl WordTable {
     /// `d`. ε entries in the request are rejected (the signature at ε is
     /// identically 1). Duplicates in the request are allowed and map to
     /// the same state index.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use pathsig::words::{Word, WordTable};
+    ///
+    /// // Requesting a single deep word materialises only its prefix
+    /// // chain — not the full truncated set.
+    /// let table = WordTable::build(3, &[Word(vec![2, 0, 1])]);
+    /// assert_eq!(table.state_len, 4); // ε, (3), (3,1), (3,1,2)
+    /// assert_eq!(table.out_dim(), 1);
+    /// table.check_invariants();
+    /// ```
     pub fn build(d: usize, request: &[Word]) -> WordTable {
         assert!(d >= 1, "alphabet must be non-empty");
         for w in request {

@@ -1,0 +1,111 @@
+//! Golden signature values: the truncated signature of known 2-D paths
+//! at depth 4, checked against hand-computed coefficients and
+//! cross-validated against the dense tensor-algebra baseline
+//! (`baselines::chen_full`), which shares no code with the word-basis
+//! engine beyond the word encoding.
+
+use pathsig::baselines::chen_full_signature;
+use pathsig::sig::{signature, SigEngine};
+use pathsig::util::proptest::assert_allclose;
+use pathsig::words::{truncated_words, WordTable};
+
+fn trunc_engine(d: usize, n: usize) -> SigEngine {
+    SigEngine::new(WordTable::build(d, &truncated_words(d, n)))
+}
+
+/// The "axis path" (0,0) → (1,0) → (1,1): increments ΔX₁ = e₁, ΔX₂ = e₂.
+///
+/// By Chen, S = exp(e₁) ⊗ exp(e₂). exp(e₁) is 1/a! on the words 1^a and
+/// zero elsewhere (letters written 1-based, as in the paper); likewise
+/// exp(e₂) on 2^b. The tensor product therefore puts
+///
+/// ```text
+///   S(1^a ∘ 2^b) = 1/(a!·b!)
+/// ```
+///
+/// on the "sorted" words 1…12…2 and **zero on every other word** — a
+/// complete closed form for the whole depth-4 signature, computable by
+/// hand.
+#[test]
+fn axis_path_matches_hand_computed_closed_form() {
+    let depth = 4;
+    let eng = trunc_engine(2, depth);
+    let path = [0.0, 0.0, 1.0, 0.0, 1.0, 1.0];
+    let sig = signature(&eng, &path);
+
+    let factorial = |k: usize| -> f64 { (1..=k).map(|x| x as f64).product::<f64>().max(1.0) };
+    let words = truncated_words(2, depth);
+    assert_eq!(sig.len(), words.len()); // 2 + 4 + 8 + 16 = 30
+
+    for (w, &got) in words.iter().zip(&sig) {
+        // Letters must be 0…0 then 1…1 (i.e. 1^a 2^b in paper notation).
+        let a = w.0.iter().take_while(|&&l| l == 0).count();
+        let b = w.0.len() - a;
+        let sorted = w.0[a..].iter().all(|&l| l == 1);
+        let want = if sorted {
+            1.0 / (factorial(a) * factorial(b))
+        } else {
+            0.0
+        };
+        assert!(
+            (got - want).abs() < 1e-14,
+            "S({}) = {got}, hand-computed {want}",
+            w.pretty()
+        );
+    }
+
+    // Spot checks straight from the table above.
+    let at = |w: &[u16]| {
+        let pos = words
+            .iter()
+            .position(|x| x.0.as_slice() == w)
+            .expect("word in truncated set");
+        sig[pos]
+    };
+    assert!((at(&[0]) - 1.0).abs() < 1e-14); // S((1)) = 1
+    assert!((at(&[0, 1]) - 1.0).abs() < 1e-14); // S((1,2)) = 1
+    assert!((at(&[1, 0]) - 0.0).abs() < 1e-14); // S((2,1)) = 0
+    assert!((at(&[0, 0]) - 0.5).abs() < 1e-14); // 1/2!
+    assert!((at(&[0, 0, 1]) - 0.5).abs() < 1e-14); // 1/(2!·1!)
+    assert!((at(&[0, 0, 1, 1]) - 0.25).abs() < 1e-14); // 1/(2!·2!)
+    assert!((at(&[0, 0, 0, 0]) - 1.0 / 24.0).abs() < 1e-14); // 1/4!
+}
+
+/// Cross-validation: the word-basis engine and the dense tensor-algebra
+/// recursion must produce identical depth-4 signatures on the same
+/// paths (axis path + the unit square loop).
+#[test]
+fn axis_path_agrees_with_chen_full_baseline() {
+    let depth = 4;
+    let eng = trunc_engine(2, depth);
+    for path in [
+        vec![0.0, 0.0, 1.0, 0.0, 1.0, 1.0],
+        // Unit square loop, counter-clockwise.
+        vec![0.0, 0.0, 1.0, 0.0, 1.0, 1.0, 0.0, 1.0, 0.0, 0.0],
+    ] {
+        let ours = signature(&eng, &path);
+        let dense = chen_full_signature(2, depth, &path);
+        assert_allclose(&ours, &dense, 1e-13, 1e-12, "engine vs chen_full");
+    }
+}
+
+/// The unit square loop: level 1 vanishes (closed path) and the level-2
+/// antisymmetric part is twice the enclosed area — the classic Lévy-area
+/// golden value.
+#[test]
+fn unit_square_loop_levy_area() {
+    let eng = trunc_engine(2, 2);
+    let path = [
+        0.0, 0.0, //
+        1.0, 0.0, //
+        1.0, 1.0, //
+        0.0, 1.0, //
+        0.0, 0.0,
+    ];
+    let sig = signature(&eng, &path);
+    // Order: (1), (2), (1,1), (1,2), (2,1), (2,2).
+    assert!(sig[0].abs() < 1e-14 && sig[1].abs() < 1e-14, "loop level 1");
+    assert!((sig[3] - sig[4] - 2.0).abs() < 1e-13, "2·area = 2");
+    // Diagonal level-2 terms are ΔX²/2 = 0 for a loop.
+    assert!(sig[2].abs() < 1e-14 && sig[5].abs() < 1e-14);
+}

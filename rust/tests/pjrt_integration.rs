@@ -19,7 +19,15 @@ fn runtime() -> Option<Runtime> {
         eprintln!("SKIP: no artifacts/manifest.json — run `make artifacts` first");
         return None;
     }
-    Some(Runtime::new(&dir).expect("runtime boots"))
+    let rt = Runtime::new(&dir).expect("runtime boots");
+    if !rt.backend_available() {
+        // Runtime::new opens the manifest without an execution backend;
+        // wiring a PJRT plugin in via Runtime::with_backend is described
+        // in DESIGN.md. Without one there is nothing to cross-validate.
+        eprintln!("SKIP: artifacts present but no PJRT backend attached (see DESIGN.md)");
+        return None;
+    }
+    Some(rt)
 }
 
 fn random_paths_f32(rng: &mut Rng, batch: usize, points: usize, d: usize) -> Vec<f32> {
