@@ -2,7 +2,7 @@
 # `artifacts` requires a Python environment with jax installed (see
 # DESIGN.md — the AOT artifacts are optional, the crate runs without them).
 
-.PHONY: build test doc bench artifacts clean
+.PHONY: build test doc bench bench-json bench-smoke artifacts clean
 
 build:
 	cargo build --release
@@ -15,6 +15,19 @@ doc:
 
 bench:
 	cargo bench
+
+# Emit the repo-root perf-trajectory artifacts (BENCH_fig1.json,
+# BENCH_table2.json): mean/median/min per case, peak bytes, the
+# lane-major-vs-scalar speedup and the zero-alloc steady-state count.
+bench-json:
+	cargo bench --bench fig1_truncated -- --json
+	cargo bench --bench table2_memory -- --json
+
+# CI-sized variant of bench-json: tiny cases, 1 warmup / 2 runs —
+# exercises the artifact pipeline, not a measurement.
+bench-smoke:
+	cargo bench --bench fig1_truncated -- --json --smoke
+	cargo bench --bench table2_memory -- --json --smoke
 
 # Emit the AOT/PJRT artifacts (HLO text + manifest.json) into ./artifacts.
 artifacts:

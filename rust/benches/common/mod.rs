@@ -1,4 +1,5 @@
 //! Shared helpers for the paper-table benches.
+#![allow(dead_code)] // each bench binary uses a subset of these helpers
 
 use pathsig::util::json::Json;
 
@@ -19,7 +20,29 @@ pub fn dump(name: &str, j: Json) {
     println!("(results → target/bench_results/{name}.json)");
 }
 
+/// Write a bench-artifact JSON at the repo root (the perf-trajectory
+/// files `BENCH_*.json` tracked across PRs). Only called in `--json`
+/// mode.
+pub fn dump_root(file: &str, j: Json) {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(file);
+    std::fs::write(&path, j.to_pretty()).expect("write bench artifact");
+    println!("(artifact → {})", path.display());
+}
+
 /// `PATHSIG_BENCH_FULL=1` switches to the wider grid.
 pub fn full() -> bool {
     std::env::var("PATHSIG_BENCH_FULL").is_ok()
+}
+
+/// `--json` (or `PATHSIG_BENCH_JSON=1`): also write the repo-root
+/// `BENCH_*.json` artifact.
+pub fn json_mode() -> bool {
+    std::env::args().any(|a| a == "--json") || std::env::var("PATHSIG_BENCH_JSON").is_ok()
+}
+
+/// `--smoke` (or `PATHSIG_BENCH_SMOKE=1`): tiny sizes, 1 warmup and 2
+/// timed runs per case — the CI artifact-shape check, not a
+/// measurement.
+pub fn smoke() -> bool {
+    std::env::args().any(|a| a == "--smoke") || std::env::var("PATHSIG_BENCH_SMOKE").is_ok()
 }

@@ -1,7 +1,8 @@
 //! Figure 1: forward-signature speedup of pathsig relative to
 //! keras_sig-style (`matmul_style`) and pySigLib-style (`chen_full`)
 //! baselines, averaged over signature configurations per (batch,
-//! seq-len) cell.
+//! seq-len) cell — plus the lane-major-vs-scalar kernel headline and
+//! the zero-allocation steady-state check.
 //!
 //! Paper grid: B ∈ {1..256} × M ∈ {50..1000}, 27 configs per cell, H200.
 //! Default here: a laptop-scale sub-grid (B ∈ {1,16,64}, M ∈ {50, 200,
@@ -9,22 +10,127 @@
 //! everywhere, speedups grow with signature size and shrink as M grows
 //! (pathsig does not parallelise over time; keras_sig does — §6.1).
 //! `PATHSIG_BENCH_FULL=1` widens the grid.
+//!
+//! Modes: `--json` additionally writes the repo-root `BENCH_fig1.json`
+//! perf-trajectory artifact; `--smoke` shrinks every case to CI size
+//! (1 warmup / 2 runs) so the artifact pipeline can be exercised in
+//! seconds.
 
 mod common;
-use common::{dump, full, geomean, median};
+use common::{dump, dump_root, full, geomean, json_mode, median, smoke};
 use pathsig::baselines::{chen_full_signature_batch, matmul_style_signature_batch};
-use pathsig::bench::{time_auto, Timing};
-use pathsig::sig::{signature_batch, SigEngine};
+use pathsig::bench::{alloc_count, time_auto, time_fn, CountingAllocator, Timing};
+use pathsig::sig::{signature_batch, signature_batch_into, signature_batch_scalar, SigEngine};
 use pathsig::util::json::Json;
 use pathsig::util::rng::Rng;
 use pathsig::words::{truncated_words, WordTable};
 
+#[global_allocator]
+static ALLOC: CountingAllocator = CountingAllocator;
+
+fn timeit<F: FnMut()>(name: &str, smoke: bool, budget: f64, f: F) -> Timing {
+    if smoke {
+        time_fn(name, 1, 2, f)
+    } else {
+        time_auto(name, budget, f)
+    }
+}
+
+/// The lane-major kernel against the pre-lane scalar-per-path batch
+/// path, same engine, same run (the ISSUE-2 acceptance headline).
+fn lane_vs_scalar(smoke: bool, budget: f64) -> Json {
+    let (d, n, b, m) = if smoke { (2, 2, 16, 10) } else { (4, 5, 64, 100) };
+    let eng = SigEngine::new(WordTable::build(d, &truncated_words(d, n)));
+    let mut rng = Rng::new(0x1A5E);
+    let mut paths = Vec::with_capacity(b * (m + 1) * d);
+    for _ in 0..b {
+        paths.extend(rng.brownian_path(m, d, 0.3));
+    }
+    let lane = timeit("lane-major", smoke, budget, || {
+        std::hint::black_box(signature_batch(&eng, &paths, b));
+    });
+    let scalar = timeit("scalar-per-path", smoke, budget, || {
+        std::hint::black_box(signature_batch_scalar(&eng, &paths, b));
+    });
+    let speedup = scalar.median_s / lane.median_s;
+    println!(
+        "\n# lane-major vs scalar-per-path (d={d} N={n} B={b} M={m}, {} threads, L={}):",
+        eng.threads,
+        eng.lanes()
+    );
+    println!("  lane   median {}", Timing::fmt_secs(lane.median_s));
+    println!("  scalar median {}", Timing::fmt_secs(scalar.median_s));
+    println!("  speedup {speedup:.2}x");
+    Json::obj(vec![
+        ("dim", Json::Num(d as f64)),
+        ("depth", Json::Num(n as f64)),
+        ("batch", Json::Num(b as f64)),
+        ("seq_len", Json::Num(m as f64)),
+        ("threads", Json::Num(eng.threads as f64)),
+        ("lane_width", Json::Num(eng.lanes() as f64)),
+        ("lane_mean_s", Json::Num(lane.mean_s)),
+        ("lane_median_s", Json::Num(lane.median_s)),
+        ("lane_min_s", Json::Num(lane.min_s)),
+        ("scalar_mean_s", Json::Num(scalar.mean_s)),
+        ("scalar_median_s", Json::Num(scalar.median_s)),
+        ("scalar_min_s", Json::Num(scalar.min_s)),
+        ("speedup", Json::Num(speedup)),
+    ])
+}
+
+/// Count heap allocations per steady-state `signature_batch_into` call
+/// (sequential engine, pre-sized output, warmed workspace pool),
+/// averaged over 5 calls as an exact fraction so even a single stray
+/// allocation cannot floor to 0. The lane kernel's zero-alloc
+/// contract: this must be 0.
+fn steady_state_allocs(smoke: bool) -> f64 {
+    let (d, n, b, m) = if smoke { (2, 2, 16, 10) } else { (4, 5, 64, 100) };
+    let eng = SigEngine::sequential(WordTable::build(d, &truncated_words(d, n)));
+    let mut rng = Rng::new(0xA110);
+    let mut paths = Vec::with_capacity(b * (m + 1) * d);
+    for _ in 0..b {
+        paths.extend(rng.brownian_path(m, d, 0.3));
+    }
+    let mut out = vec![0.0; b * eng.out_dim()];
+    // Two warm calls: the first fills the workspace pool, the second
+    // proves the pool round-trips.
+    signature_batch_into(&eng, &paths, b, &mut out);
+    signature_batch_into(&eng, &paths, b, &mut out);
+    let calls = 5;
+    let before = alloc_count();
+    for _ in 0..calls {
+        signature_batch_into(&eng, &paths, b, &mut out);
+        std::hint::black_box(&out);
+    }
+    let per_call = (alloc_count() - before) as f64 / calls as f64;
+    println!(
+        "# steady-state allocations per signature_batch_into call \
+         (d={d} N={n} B={b} M={m}, sequential): {per_call}"
+    );
+    per_call
+}
+
 fn main() {
     let full = full();
-    let batches: &[usize] = if full { &[1, 16, 64, 128] } else { &[1, 16, 64] };
-    let seqs: &[usize] = if full { &[50, 100, 200, 500, 1000] } else { &[50, 200, 500] };
+    let smoke = smoke();
+    let batches: &[usize] = if smoke {
+        &[1, 16]
+    } else if full {
+        &[1, 16, 64, 128]
+    } else {
+        &[1, 16, 64]
+    };
+    let seqs: &[usize] = if smoke {
+        &[10]
+    } else if full {
+        &[50, 100, 200, 500, 1000]
+    } else {
+        &[50, 200, 500]
+    };
     // (d, N) signature configurations averaged per cell (paper: 27).
-    let configs: &[(usize, usize)] = if full {
+    let configs: &[(usize, usize)] = if smoke {
+        &[(2, 2), (3, 2)]
+    } else if full {
         &[(2, 3), (2, 5), (3, 3), (3, 4), (4, 3), (4, 4), (6, 3), (6, 4), (8, 3), (10, 3)]
     } else {
         &[(2, 3), (2, 5), (3, 3), (3, 4), (4, 3), (4, 4), (6, 3), (10, 2)]
@@ -44,7 +150,7 @@ fn main() {
         for &m in seqs {
             let mut su_keras = Vec::new();
             let mut su_pysig = Vec::new();
-            let mut t_ours_acc = 0.0;
+            let mut ours_timings: Vec<Timing> = Vec::new();
             for &(d, n) in configs {
                 let mut paths = Vec::with_capacity(b * (m + 1) * d);
                 for _ in 0..b {
@@ -52,10 +158,10 @@ fn main() {
                 }
                 let eng = SigEngine::new(WordTable::build(d, &truncated_words(d, n)));
 
-                let ours = time_auto("pathsig", budget, || {
+                let ours = timeit("pathsig", smoke, budget, || {
                     std::hint::black_box(signature_batch(&eng, &paths, b));
                 });
-                let keras = time_auto("keras", budget, || {
+                let keras = timeit("keras", smoke, budget, || {
                     std::hint::black_box(matmul_style_signature_batch(
                         d,
                         n,
@@ -64,7 +170,7 @@ fn main() {
                         eng.threads,
                     ));
                 });
-                let pysig = time_auto("pysig", budget, || {
+                let pysig = timeit("pysig", smoke, budget, || {
                     // pySigLib: CPU, shared-memory parallelism that
                     // saturates at modest thread counts (Remark 6.1) —
                     // grant it 4 threads.
@@ -72,23 +178,30 @@ fn main() {
                 });
                 su_keras.push(keras.median_s / ours.median_s);
                 su_pysig.push(pysig.median_s / ours.median_s);
-                t_ours_acc += ours.median_s;
+                ours_timings.push(ours);
             }
             let gk = geomean(&su_keras);
             let gp = geomean(&su_pysig);
+            let mean_s =
+                ours_timings.iter().map(|t| t.mean_s).sum::<f64>() / ours_timings.len() as f64;
+            let median_s = median(ours_timings.iter().map(|t| t.median_s));
+            let min_s = ours_timings.iter().map(|t| t.min_s).fold(f64::INFINITY, f64::min);
             println!(
                 "{:>6} {:>6} | {:>13.2}x {:>13.2}x | {:>12}",
                 b,
                 m,
                 gk,
                 gp,
-                Timing::fmt_secs(t_ours_acc / configs.len() as f64),
+                Timing::fmt_secs(mean_s),
             );
             cells.push(Json::obj(vec![
                 ("batch", Json::Num(b as f64)),
                 ("seq_len", Json::Num(m as f64)),
                 ("speedup_vs_keras_style", Json::Num(gk)),
                 ("speedup_vs_pysig_style", Json::Num(gp)),
+                ("pathsig_mean_s", Json::Num(mean_s)),
+                ("pathsig_median_s", Json::Num(median_s)),
+                ("pathsig_min_s", Json::Num(min_s)),
             ]));
         }
     }
@@ -106,5 +219,28 @@ fn main() {
         "\nmedian speedups: {med_k:.2}x vs keras-style (paper fwd median 12.4x), \
          {med_p:.2}x vs pysig-style (paper 40.1x)"
     );
-    dump("fig1_truncated", Json::Arr(cells));
+
+    let lane = lane_vs_scalar(smoke, budget);
+    let allocs = steady_state_allocs(smoke);
+
+    let mode = if smoke {
+        "smoke"
+    } else if full {
+        "full"
+    } else {
+        "default"
+    };
+    let artifact = Json::obj(vec![
+        ("bench", Json::Str("fig1_truncated".into())),
+        ("mode", Json::Str(mode.into())),
+        ("cells", Json::Arr(cells)),
+        ("median_speedup_vs_keras_style", Json::Num(med_k)),
+        ("median_speedup_vs_pysig_style", Json::Num(med_p)),
+        ("lane_vs_scalar", lane),
+        ("steady_state_allocs_per_call", Json::Num(allocs)),
+    ]);
+    dump("fig1_truncated", artifact.clone());
+    if json_mode() {
+        dump_root("BENCH_fig1.json", artifact);
+    }
 }

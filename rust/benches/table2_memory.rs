@@ -8,7 +8,7 @@
 //! `torch.cuda.max_memory_allocated()`.
 
 mod common;
-use common::{dump, full};
+use common::{dump, dump_root, full, json_mode, smoke};
 use pathsig::baselines::matmul_style_train_batch;
 use pathsig::bench::{fmt_bytes, measure_peak, CountingAllocator};
 use pathsig::sig::{sig_backward, signature_batch, SigEngine};
@@ -21,20 +21,28 @@ static ALLOC: CountingAllocator = CountingAllocator;
 
 fn main() {
     let full = full();
+    let smoke = smoke();
     // Paper rows are (32, M, 8) at N=3..6; depth 6 is 299k dims — the
     // matmul-style baseline would need tens of GB exactly as in the
     // paper, so default depth caps at 4 and batch at 8 (the *ratios*
     // are batch-independent, as the paper's batch sweep shows).
+    // `--smoke` shrinks to a CI-sized artifact-shape check.
     let b = if full { 16 } else { 8 };
     let mut rows: Vec<(usize, usize, usize, usize)> = Vec::new();
-    for n in 2..=if full { 5 } else { 4 } {
-        rows.push((b, 50, 8, n)); // depth sweep
-    }
-    for m in [50, 100, 200, 400] {
-        rows.push((b, m, 8, if full { 5 } else { 4 })); // seq-len sweep
-    }
-    for bb in [4, 8, 16] {
-        rows.push((bb, 50, 8, 4)); // batch sweep
+    if smoke {
+        rows.push((4, 20, 3, 2));
+        rows.push((4, 20, 3, 3));
+        rows.push((8, 40, 2, 3));
+    } else {
+        for n in 2..=if full { 5 } else { 4 } {
+            rows.push((b, 50, 8, n)); // depth sweep
+        }
+        for m in [50, 100, 200, 400] {
+            rows.push((b, m, 8, if full { 5 } else { 4 })); // seq-len sweep
+        }
+        for bb in [4, 8, 16] {
+            rows.push((bb, 50, 8, 4)); // batch sweep
+        }
     }
 
     println!("# Table 2 — peak heap during one training step (fwd+bwd)");
@@ -109,5 +117,20 @@ fn main() {
         "\npaper: pathsig ≈2× Mem_out, keras_sig reduction 81–1265× growing with M \
          (and OOM beyond); the same O(1)-vs-O(M) growth must appear above"
     );
-    dump("table2_memory", Json::Arr(out_rows));
+    let mode = if smoke {
+        "smoke"
+    } else if full {
+        "full"
+    } else {
+        "default"
+    };
+    let artifact = Json::obj(vec![
+        ("bench", Json::Str("table2_memory".into())),
+        ("mode", Json::Str(mode.into())),
+        ("rows", Json::Arr(out_rows)),
+    ]);
+    dump("table2_memory", artifact.clone());
+    if json_mode() {
+        dump_root("BENCH_table2.json", artifact);
+    }
 }

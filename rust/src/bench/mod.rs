@@ -96,6 +96,7 @@ pub fn time_auto<F: FnMut()>(name: &str, budget_s: f64, mut f: F) -> Timing {
 
 static LIVE: AtomicUsize = AtomicUsize::new(0);
 static PEAK: AtomicUsize = AtomicUsize::new(0);
+static COUNT: AtomicUsize = AtomicUsize::new(0);
 
 /// Global-allocator wrapper tracking live bytes and a peak watermark.
 /// Install in a bench binary with:
@@ -109,6 +110,7 @@ unsafe impl GlobalAlloc for CountingAllocator {
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         let p = System.alloc(layout);
         if !p.is_null() {
+            COUNT.fetch_add(1, Ordering::Relaxed);
             let live = LIVE.fetch_add(layout.size(), Ordering::Relaxed) + layout.size();
             PEAK.fetch_max(live, Ordering::Relaxed);
         }
@@ -123,6 +125,7 @@ unsafe impl GlobalAlloc for CountingAllocator {
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
         let p = System.realloc(ptr, layout, new_size);
         if !p.is_null() {
+            COUNT.fetch_add(1, Ordering::Relaxed);
             if new_size >= layout.size() {
                 let live =
                     LIVE.fetch_add(new_size - layout.size(), Ordering::Relaxed) + new_size
@@ -149,6 +152,14 @@ pub fn reset_peak() {
 /// Peak live bytes since the last [`reset_peak`].
 pub fn peak_bytes() -> usize {
     PEAK.load(Ordering::Relaxed)
+}
+
+/// Total number of heap allocations (including reallocations) since
+/// process start, as seen by the counting allocator. Diff two readings
+/// around a call to verify a hot path is allocation-free in steady
+/// state.
+pub fn alloc_count() -> usize {
+    COUNT.load(Ordering::Relaxed)
 }
 
 /// Measure the incremental peak heap usage of `f` (peak minus the live

@@ -180,7 +180,9 @@ fn execute_batch(service: &SigService, batch: Vec<Pending>, _config: &BatcherCon
     let dim = batch[0].req.dim;
     let spec = batch[0].req.spec.clone();
     let key = ConfigKey::of(&batch[0].req);
-    let paths: Vec<Vec<f64>> = batch.iter().map(|p| p.req.path.clone()).collect();
+    // Borrow the queued paths — the lane-major batch kernel reads them
+    // in place, so there is no reason to clone every request's payload.
+    let paths: Vec<&[f64]> = batch.iter().map(|p| p.req.path.as_slice()).collect();
     // Route: PJRT artifact if one fits the whole stacked batch,
     // otherwise native.
     let result: Result<(Vec<Vec<f64>>, &'static str), String> =
@@ -197,6 +199,7 @@ fn execute_batch(service: &SigService, batch: Vec<Pending>, _config: &BatcherCon
             },
             None => Ok((service.execute_native_batch(dim, &spec, &paths), "native")),
         };
+    drop(paths); // release the borrows before `batch` is consumed below
     let elapsed = t0.elapsed();
     service.metrics.record_batch(batch.len(), elapsed);
     match result {

@@ -151,7 +151,7 @@ impl SigService {
                 let key = ConfigKey::of(req);
                 if req.backend != Backend::Native {
                     if let Some(name) = self.pjrt_artifact_for(&key, 1) {
-                        if let Ok(out) = self.execute_pjrt_batch(&name, &[req.path.clone()]) {
+                        if let Ok(out) = self.execute_pjrt_batch(&name, &[req.path.as_slice()]) {
                             let dim = out[0].len();
                             self.metrics
                                 .pjrt_executions
@@ -209,15 +209,18 @@ impl SigService {
     }
 
     /// Execute a stacked batch of same-config signature requests
-    /// natively. `paths` must all have equal length.
+    /// natively (lane-major kernel once the batch spans a lane block).
+    /// `paths` must all have equal length; paths are borrowed, not
+    /// cloned, so the only copies are the stacking flatten and the
+    /// per-request response rows the wire protocol needs.
     pub fn execute_native_batch(
         &self,
         dim: usize,
         spec: &WordSpec,
-        paths: &[Vec<f64>],
+        paths: &[&[f64]],
     ) -> Vec<Vec<f64>> {
         let eng = self.engine(dim, spec);
-        let flat: Vec<f64> = paths.iter().flatten().copied().collect();
+        let flat: Vec<f64> = paths.iter().flat_map(|p| p.iter().copied()).collect();
         let out = signature_batch(&eng, &flat, paths.len());
         let odim = eng.out_dim();
         self.metrics
@@ -231,7 +234,7 @@ impl SigService {
     pub fn execute_pjrt_batch(
         &self,
         artifact: &str,
-        paths: &[Vec<f64>],
+        paths: &[&[f64]],
     ) -> Result<Vec<Vec<f64>>, String> {
         let rt = self.runtime.as_ref().ok_or("no runtime configured")?;
         let entry = rt
@@ -338,7 +341,8 @@ mod tests {
         let spec = WordSpec::Truncated { depth: 3 };
         let mut rng = crate::util::rng::Rng::new(900);
         let paths: Vec<Vec<f64>> = (0..5).map(|_| rng.brownian_path(7, 2, 1.0)).collect();
-        let batch = s.execute_native_batch(2, &spec, &paths);
+        let path_refs: Vec<&[f64]> = paths.iter().map(|p| p.as_slice()).collect();
+        let batch = s.execute_native_batch(2, &spec, &path_refs);
         let eng = s.engine(2, &spec);
         for (b, p) in paths.iter().enumerate() {
             let single = crate::sig::signature(&eng, p);

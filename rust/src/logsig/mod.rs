@@ -18,7 +18,7 @@
 
 use crate::sig::{sig_forward_state, sig_backward, SigEngine};
 use crate::tensor::{mul_adjoint, TruncTensor};
-use crate::util::threadpool::parallel_map;
+use crate::util::threadpool::{parallel_fill_rows, parallel_map};
 use crate::words::{lyndon_words, truncated_words, Word, WordTable};
 
 /// Engine for Lyndon-basis log-signatures at depth `N`.
@@ -217,16 +217,15 @@ impl LogSigEngine {
         acc
     }
 
-    /// Batched log-signatures: `(B, M+1, d)` → `(B, out_dim)`.
+    /// Batched log-signatures: `(B, M+1, d)` → `(B, out_dim)`. Rows are
+    /// written straight into the output buffer (no post-join copy).
     pub fn logsig_batch(&self, paths: &[f64], batch: usize) -> Vec<f64> {
         let per = paths.len() / batch;
-        let rows = parallel_map(batch, self.sig.threads, |b| {
-            self.logsig(&paths[b * per..(b + 1) * per])
+        let odim = self.out_dim();
+        let mut out = vec![0.0; batch * odim];
+        parallel_fill_rows(&mut out, odim, self.sig.threads, |b, row| {
+            row.copy_from_slice(&self.logsig(&paths[b * per..(b + 1) * per]));
         });
-        let mut out = Vec::with_capacity(batch * self.out_dim());
-        for r in rows {
-            out.extend(r);
-        }
         out
     }
 

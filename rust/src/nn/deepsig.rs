@@ -16,7 +16,7 @@ use super::{adam_update, mse_loss, relu, relu_backward, Linear};
 use crate::fbm::lead_lag;
 use crate::sig::{sig_backward, signature, SigEngine};
 use crate::util::rng::Rng;
-use crate::util::threadpool::parallel_map;
+use crate::util::threadpool::{parallel_fill_rows, parallel_map};
 use crate::words::{Word, WordTable};
 
 /// Model hyper-parameters.
@@ -81,19 +81,18 @@ impl DeepSigModel {
     }
 
     /// Signature features for a batch of paths (φ + lead–lag + sig).
+    /// Feature rows are written in place (no post-join copy).
     pub fn features(&self, paths: &[f64], batch: usize) -> Vec<f64> {
         let per = paths.len() / batch;
         let m1 = per / self.spec.dim;
-        let rows = parallel_map(batch, self.engine.threads, |b| {
+        let fdim = self.feature_dim();
+        let mut out = vec![0.0; batch * fdim];
+        parallel_fill_rows(&mut out, fdim, self.engine.threads, |b, row| {
             let path = &paths[b * per..(b + 1) * per];
             let mapped = self.phi.forward(path, m1); // pointwise over time
             let ll = lead_lag(&mapped, self.spec.dim);
-            signature(&self.engine, &ll)
+            row.copy_from_slice(&signature(&self.engine, &ll));
         });
-        let mut out = Vec::with_capacity(batch * self.feature_dim());
-        for r in rows {
-            out.extend(r);
-        }
         out
     }
 

@@ -24,8 +24,9 @@
 //! `∂/∂ΔX^{(i_p)} += λ(w)·A_p·R_p` with
 //! `A_{p+1} = A_p·ΔX^{(i_p)} + S_{j-1}(w_[p])/(n-p)!`.
 
-use super::{chen_update, sig_forward_state, SigEngine};
-use crate::util::threadpool::parallel_map;
+use super::forward::forward_sweep_range;
+use super::{chen_update, SigEngine};
+use crate::util::threadpool::parallel_for_into;
 
 /// Reusable buffers for a single-path backward pass.
 #[derive(Debug, Default)]
@@ -51,24 +52,37 @@ pub fn sig_backward(eng: &SigEngine, path: &[f64], grad_out: &[f64]) -> Vec<f64>
     sig_backward_ws(eng, path, grad_out, &mut ws)
 }
 
-/// [`sig_backward`] with caller-provided workspace (hot path).
+/// [`sig_backward`] with caller-provided workspace.
 pub fn sig_backward_ws(
     eng: &SigEngine,
     path: &[f64],
     grad_out: &[f64],
     ws: &mut BackwardWorkspace,
 ) -> Vec<f64> {
+    let mut out = vec![0.0; path.len()];
+    sig_backward_into(eng, path, grad_out, ws, &mut out);
+    out
+}
+
+/// [`sig_backward`] with caller-provided workspace **and** output
+/// buffer (`out.len() == path.len()`) — the zero-allocation hot path.
+pub fn sig_backward_into(
+    eng: &SigEngine,
+    path: &[f64],
+    grad_out: &[f64],
+    ws: &mut BackwardWorkspace,
+    out: &mut [f64],
+) {
     let t = &eng.table;
     let d = t.d;
-    let stride = t.stride();
     assert_eq!(path.len() % d, 0);
     let m1 = path.len() / d;
     let steps = m1 - 1;
     assert_eq!(grad_out.len(), t.out_dim());
+    assert_eq!(out.len(), path.len(), "gradient buffer has wrong size");
 
     // Forward pass to the terminal signature (the only stored state).
-    ws.state.clear();
-    ws.state.extend_from_slice(&sig_forward_state(eng, path));
+    forward_sweep_range(eng, path, 0, steps, &mut ws.state, &mut ws.dx);
 
     // Seed λ_M: scatter the output cotangents onto the closure.
     ws.lambda.clear();
@@ -105,18 +119,21 @@ pub fn sig_backward_ws(
         let dx = ws.dx.as_slice();
         for n in 1..=t.max_level {
             let inv_fact_n = eng.inv_fact[n];
-            for w in t.level_range(n) {
+            let level_base = t.level_csr_base(n);
+            let level = t.level_range(n);
+            for (off, w) in level.enumerate() {
                 // SAFETY: all indices below come from the validated
-                // WordTable (letters < d, prefix_idx < state_len,
-                // level ranges within bounds) — checked by
+                // WordTable (letters < d, prefix indices < state_len,
+                // CSR rows within bounds) — checked by
                 // `WordTable::check_invariants` in tests.
                 unsafe {
                     let lam = *lambda.get_unchecked(w);
                     if lam == 0.0 {
                         continue;
                     }
-                    let letters = t.letters.get_unchecked(w * stride..w * stride + n);
-                    let prefixes = t.prefix_idx.get_unchecked(w * stride..w * stride + n);
+                    let base = level_base + off * n;
+                    let letters = t.csr_letters.get_unchecked(base..base + n);
+                    let prefixes = t.csr_prefix.get_unchecked(base..base + n);
                     // Right suffix products R_p = Π_{q=p+1..n} dx_{i_q}.
                     *right_prod.get_unchecked_mut(n) = 1.0;
                     for p in (1..n).rev() {
@@ -150,19 +167,18 @@ pub fn sig_backward_ws(
 
     // Chain rule from increments to points:
     // ∂L/∂X_0 = -g_1, ∂L/∂X_j = g_j - g_{j+1}, ∂L/∂X_M = g_M.
-    let mut grad_path = vec![0.0; m1 * d];
+    out.fill(0.0);
     for i in 0..d {
         if steps > 0 {
-            grad_path[i] = -ws.grad_dx[i];
-            grad_path[steps * d + i] = ws.grad_dx[(steps - 1) * d + i];
+            out[i] = -ws.grad_dx[i];
+            out[steps * d + i] = ws.grad_dx[(steps - 1) * d + i];
         }
     }
     for j in 1..steps {
         for i in 0..d {
-            grad_path[j * d + i] = ws.grad_dx[(j - 1) * d + i] - ws.grad_dx[j * d + i];
+            out[j * d + i] = ws.grad_dx[(j - 1) * d + i] - ws.grad_dx[j * d + i];
         }
     }
-    grad_path
 }
 
 /// Batched backward: `paths` `(B, M+1, d)`, `grads_out` `(B, |I|)` →
@@ -173,22 +189,39 @@ pub fn sig_backward_batch(
     grads_out: &[f64],
     batch: usize,
 ) -> Vec<f64> {
+    let mut out = vec![0.0; paths.len()];
+    sig_backward_batch_into(eng, paths, grads_out, batch, &mut out);
+    out
+}
+
+/// [`sig_backward_batch`] writing into a caller-provided `(B, M+1, d)`
+/// buffer: each path's gradient row is written in place by a pooled
+/// per-worker workspace — no per-row allocation, no post-join copy.
+pub fn sig_backward_batch_into(
+    eng: &SigEngine,
+    paths: &[f64],
+    grads_out: &[f64],
+    batch: usize,
+    out: &mut [f64],
+) {
     assert!(batch > 0);
+    assert_eq!(paths.len() % batch, 0);
     let per_path = paths.len() / batch;
     let odim = eng.out_dim();
     assert_eq!(grads_out.len(), batch * odim);
-    let rows = parallel_map(batch, eng.threads, |b| {
-        sig_backward(
+    assert_eq!(out.len(), paths.len(), "gradient buffer has wrong size");
+    let nw = eng.threads.min(batch).max(1);
+    let mut workers = eng.bwd_pool.take_at_least(nw);
+    parallel_for_into(out, per_path, &mut workers[..nw], |b, row, ws| {
+        sig_backward_into(
             eng,
             &paths[b * per_path..(b + 1) * per_path],
             &grads_out[b * odim..(b + 1) * odim],
-        )
+            ws,
+            row,
+        );
     });
-    let mut out = Vec::with_capacity(paths.len());
-    for r in rows {
-        out.extend(r);
-    }
-    out
+    eng.bwd_pool.put(workers);
 }
 
 #[cfg(test)]

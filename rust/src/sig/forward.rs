@@ -10,9 +10,15 @@
 //!
 //! evaluated with Horner's method — equivalent to the prefix–suffix sum
 //! of Chen's relation (3) but without materialising `exp(ΔX_j)`.
+//!
+//! Batch entry points route through the lane-major kernel
+//! ([`crate::sig::lanes`]) whenever the batch is at least one lane
+//! block wide; the scalar per-path kernel below remains the `B < L`
+//! fallback and the differential-testing oracle.
 
+use super::lanes::{lane_forward_dispatch, project_block, ForwardWorkspace};
 use super::SigEngine;
-use crate::util::threadpool::parallel_map;
+use crate::util::threadpool::{parallel_for_into, parallel_map};
 
 /// Apply one Chen/Horner update `S ← S ⊗ exp(dx)` in place.
 ///
@@ -23,20 +29,20 @@ use crate::util::threadpool::parallel_map;
 #[inline]
 pub fn chen_update(eng: &SigEngine, state: &mut [f64], dx: &[f64]) {
     let t = &eng.table;
-    let stride = t.stride();
     debug_assert_eq!(state.len(), t.state_len);
     debug_assert_eq!(dx.len(), t.d);
     for n in (1..=t.max_level).rev() {
         let range = t.level_range(n);
-        for i in range {
-            let base = i * stride;
+        let level_base = t.level_csr_base(n);
+        for (off, i) in range.enumerate() {
+            let base = level_base + off * n;
             // Horner inner loop over the prefix chain.
             // SAFETY: indices come from the validated WordTable
-            // (letters < d, prefix_idx < state_len; see
-            // `WordTable::check_invariants`).
+            // (letters < d, prefix indices < state_len, CSR rows in
+            // bounds; see `WordTable::check_invariants`).
             unsafe {
-                let letters = t.letters.get_unchecked(base..base + n);
-                let prefixes = t.prefix_idx.get_unchecked(base..base + n);
+                let letters = t.csr_letters.get_unchecked(base..base + n);
+                let prefixes = t.csr_prefix.get_unchecked(base..base + n);
                 let mut acc = 1.0; // S(ε) — state[0] is pinned to 1.
                 for k in 1..n {
                     let letter = *letters.get_unchecked(k - 1) as usize;
@@ -50,23 +56,52 @@ pub fn chen_update(eng: &SigEngine, state: &mut [f64], dx: &[f64]) {
     }
 }
 
+/// The scalar forward sweep shared by every scalar entry point
+/// (single-path, window, stream prologue and the backward pass's
+/// forward reconstruction): (re)initialise `state`/`dx` for `eng` and
+/// apply one Chen update per step in `jl+1 ..= jr`. Allocation-free in
+/// steady state (`resize` within capacity).
+pub(crate) fn forward_sweep_range(
+    eng: &SigEngine,
+    path: &[f64],
+    jl: usize,
+    jr: usize,
+    state: &mut Vec<f64>,
+    dx: &mut Vec<f64>,
+) {
+    let d = eng.table.d;
+    state.clear();
+    state.resize(eng.table.state_len, 0.0);
+    state[0] = 1.0;
+    dx.clear();
+    dx.resize(d, 0.0);
+    for j in (jl + 1)..=jr {
+        for i in 0..d {
+            dx[i] = path[j * d + i] - path[(j - 1) * d + i];
+        }
+        chen_update(eng, state, dx);
+    }
+}
+
+/// Scalar forward sweep into workspace buffers (`ws.state` ends at the
+/// terminal closure state). Allocation-free in steady state.
+pub(crate) fn forward_into_ws(eng: &SigEngine, path: &[f64], ws: &mut ForwardWorkspace) {
+    let d = eng.table.d;
+    debug_assert_eq!(path.len() % d, 0);
+    let m1 = path.len() / d;
+    debug_assert!(m1 >= 1);
+    forward_sweep_range(eng, path, 0, m1 - 1, &mut ws.state, &mut ws.dx);
+}
+
 /// Forward pass over a full path, returning the closure **state** vector
 /// (index 0 = ε = 1.0). `path` is row-major `(M+1, d)`.
 pub fn sig_forward_state(eng: &SigEngine, path: &[f64]) -> Vec<f64> {
     let d = eng.table.d;
     assert!(path.len() % d == 0, "path length not divisible by d");
-    let m1 = path.len() / d;
-    assert!(m1 >= 1, "path needs at least one point");
-    let mut state = vec![0.0; eng.table.state_len];
-    state[0] = 1.0;
-    let mut dx = vec![0.0; d];
-    for j in 1..m1 {
-        for i in 0..d {
-            dx[i] = path[j * d + i] - path[(j - 1) * d + i];
-        }
-        chen_update(eng, &mut state, &dx);
-    }
-    state
+    assert!(path.len() / d >= 1, "path needs at least one point");
+    let mut ws = ForwardWorkspace::default();
+    forward_into_ws(eng, path, &mut ws);
+    ws.state
 }
 
 /// The projected signature `π_I(S_{0,T}(X))` of a single path
@@ -96,8 +131,66 @@ pub fn signature(eng: &SigEngine, path: &[f64]) -> Vec<f64> {
 
 /// Batched signatures: `paths` is `(B, M+1, d)` row-major, result is
 /// `(B, |I|)` row-major. Parallel over paths (the paper's
-/// batch-parallelism axis).
+/// batch-parallelism axis); blocks of [`SigEngine::lanes`] paths go
+/// through the lane-major SIMD kernel.
 pub fn signature_batch(eng: &SigEngine, paths: &[f64], batch: usize) -> Vec<f64> {
+    let mut out = vec![0.0; batch * eng.out_dim()];
+    signature_batch_into(eng, paths, batch, &mut out);
+    out
+}
+
+/// [`signature_batch`] writing into a caller-provided buffer
+/// (`out.len() == batch · |I|`). With a sequential engine this is the
+/// zero-allocation hot path: workspaces come from the engine's pool and
+/// every row is written in place (no join copy) — verified by the
+/// counting allocator in `benches/fig1_truncated.rs`.
+pub fn signature_batch_into(eng: &SigEngine, paths: &[f64], batch: usize, out: &mut [f64]) {
+    assert!(batch > 0);
+    assert_eq!(paths.len() % batch, 0);
+    let per_path = paths.len() / batch;
+    let odim = eng.out_dim();
+    assert_eq!(out.len(), batch * odim, "output buffer has wrong size");
+    let d = eng.table.d;
+    assert!(per_path % d == 0 && per_path / d >= 1, "bad path shape");
+    let m1 = per_path / d;
+    let lanes = eng.lanes();
+
+    if batch < lanes {
+        // Scalar per-path fallback, rows still written in place (the
+        // scalar kernel sizes its own workspace buffers).
+        let nw = eng.threads.min(batch).max(1);
+        let mut workers = eng.fwd_pool.take_at_least(nw);
+        parallel_for_into(out, odim, &mut workers[..nw], |b, row, ws| {
+            forward_into_ws(eng, &paths[b * per_path..(b + 1) * per_path], ws);
+            eng.table.project(&ws.state, row);
+        });
+        eng.fwd_pool.put(workers);
+        return;
+    }
+
+    // Lane-major path: each unit is a block of `lanes` paths (last
+    // block may be partial — padded lanes carry zero increments).
+    let n_blocks = batch.div_ceil(lanes);
+    let nw = eng.threads.min(n_blocks).max(1);
+    let mut workers = eng.fwd_pool.take_at_least(nw);
+    for w in workers.iter_mut().take(nw) {
+        w.ensure_lanes(eng);
+    }
+    parallel_for_into(out, lanes * odim, &mut workers[..nw], |blk, out_rows, ws| {
+        let b0 = blk * lanes;
+        let nb = (batch - b0).min(lanes);
+        let block = &paths[b0 * per_path..(b0 + nb) * per_path];
+        lane_forward_dispatch(eng, block, nb, per_path, 0, m1 - 1, ws);
+        project_block(eng, &ws.lane_state, lanes, nb, out_rows);
+    });
+    eng.fwd_pool.put(workers);
+}
+
+/// The pre-lane scalar batch path: one allocation-per-row
+/// `parallel_map` over paths. Kept verbatim as (a) the baseline the
+/// Fig-1 bench measures the lane kernel against and (b) the
+/// differential-testing oracle for `signature_batch`.
+pub fn signature_batch_scalar(eng: &SigEngine, paths: &[f64], batch: usize) -> Vec<f64> {
     assert!(batch > 0);
     assert_eq!(paths.len() % batch, 0);
     let per_path = paths.len() / batch;
@@ -121,22 +214,34 @@ pub fn signature_batch(eng: &SigEngine, paths: &[f64], batch: usize) -> Vec<f64>
 /// `(M+1, |I|)`. Costs one forward pass — each step's projection is
 /// emitted as the recursion passes through it.
 pub fn signature_stream(eng: &SigEngine, path: &[f64]) -> Vec<f64> {
+    let m1 = path.len() / eng.table.d;
+    let mut out = vec![0.0; m1 * eng.out_dim()];
+    signature_stream_into(eng, path, &mut out);
+    out
+}
+
+/// [`signature_stream`] writing into a caller-provided `(M+1, |I|)`
+/// buffer, with scratch from the engine's workspace pool — zero
+/// allocations in steady state.
+pub fn signature_stream_into(eng: &SigEngine, path: &[f64], out: &mut [f64]) {
     let d = eng.table.d;
+    assert!(path.len() % d == 0, "path length not divisible by d");
     let m1 = path.len() / d;
-    let out_dim = eng.out_dim();
-    let mut out = vec![0.0; m1 * out_dim];
-    let mut state = vec![0.0; eng.table.state_len];
-    state[0] = 1.0;
-    eng.table.project(&state, &mut out[0..out_dim]);
-    let mut dx = vec![0.0; d];
+    assert!(m1 >= 1, "path needs at least one point");
+    let odim = eng.out_dim();
+    assert_eq!(out.len(), m1 * odim, "output buffer has wrong size");
+    let mut workers = eng.fwd_pool.take_at_least(1);
+    let ws = &mut workers[0];
+    forward_sweep_range(eng, path, 0, 0, &mut ws.state, &mut ws.dx); // init only
+    eng.table.project(&ws.state, &mut out[0..odim]);
     for j in 1..m1 {
         for i in 0..d {
-            dx[i] = path[j * d + i] - path[(j - 1) * d + i];
+            ws.dx[i] = path[j * d + i] - path[(j - 1) * d + i];
         }
-        chen_update(eng, &mut state, &dx);
-        eng.table.project(&state, &mut out[j * out_dim..(j + 1) * out_dim]);
+        chen_update(eng, &mut ws.state, &ws.dx);
+        eng.table.project(&ws.state, &mut out[j * odim..(j + 1) * odim]);
     }
-    out
+    eng.fwd_pool.put(workers);
 }
 
 #[cfg(test)]
@@ -273,6 +378,44 @@ mod tests {
                 "batch row",
             );
         }
+    }
+
+    #[test]
+    fn batch_lane_path_matches_scalar_oracle() {
+        // Batch wide enough to engage the lane kernel, size chosen so
+        // the last block is partial.
+        let mut rng = Rng::new(106);
+        let d = 3;
+        let eng = trunc_engine(d, 3);
+        let b = eng.lanes() * 2 + 3;
+        let m = 6;
+        let mut paths = Vec::new();
+        for _ in 0..b {
+            paths.extend(rng.brownian_path(m, d, 0.8));
+        }
+        let got = signature_batch(&eng, &paths, b);
+        let want = signature_batch_scalar(&eng, &paths, b);
+        assert_allclose(&got, &want, 0.0, 0.0, "lane vs scalar batch");
+    }
+
+    #[test]
+    fn batch_into_reuses_buffer() {
+        let mut rng = Rng::new(107);
+        let d = 2;
+        let eng = trunc_engine(d, 2);
+        let b = 12;
+        let m = 4;
+        let mut paths = Vec::new();
+        for _ in 0..b {
+            paths.extend(rng.brownian_path(m, d, 1.0));
+        }
+        let mut out = vec![f64::NAN; b * eng.out_dim()];
+        signature_batch_into(&eng, &paths, b, &mut out);
+        let want = signature_batch_scalar(&eng, &paths, b);
+        assert_allclose(&out, &want, 0.0, 0.0, "into == scalar");
+        // Second call with the same buffer must fully overwrite it.
+        signature_batch_into(&eng, &paths, b, &mut out);
+        assert_allclose(&out, &want, 0.0, 0.0, "second call");
     }
 
     #[test]

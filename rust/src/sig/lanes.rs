@@ -1,0 +1,290 @@
+//! Lane-major batched Chen kernel — the CPU analogue of the paper's
+//! one-CUDA-thread-per-word mapping (§3.2).
+//!
+//! A block of `L` paths ("lanes", `L ∈ {4, 8, 16, 32}`) is transposed
+//! into a state matrix `lane_state[word][lane]` with the **lane axis
+//! contiguous** (structure-of-arrays). The Chen/Horner recursion then
+//! runs once over the word table per step, and its innermost loop is a
+//! straight-line multiply–add sweep over the `L` lanes of each word —
+//! a fixed-trip-count loop over a contiguous `[f64; L]` that rustc
+//! auto-vectorizes. Two wins over the scalar per-path kernel:
+//!
+//! * the word-table metadata (CSR letters/prefix rows, loop control)
+//!   is read once per `L` paths instead of once per path;
+//! * every load/store in the inner loop is a full contiguous vector,
+//!   so the FLOPs actually issue as SIMD.
+//!
+//! Arithmetic is performed in exactly the same order per lane as the
+//! scalar kernel, so results are bitwise identical to
+//! [`crate::sig::signature`] — the scalar kernel stays as the `B < L`
+//! fallback and as the differential-testing oracle
+//! (`signature_batch_scalar`).
+
+use super::SigEngine;
+
+/// Default lane width: 8 f64 lanes = one AVX-512 register or two
+/// AVX2/NEON registers — wide enough to amortize the table walk,
+/// small enough that `state_len · L` stays cache-resident.
+pub const DEFAULT_LANE_WIDTH: usize = 8;
+
+/// Reusable scratch buffers for forward-pass kernels. One workspace per
+/// worker thread; engines cache them in a [`crate::util::pool::Pool`]
+/// so steady-state batch calls allocate nothing.
+#[derive(Clone, Debug, Default)]
+pub struct ForwardWorkspace {
+    /// Scalar closure state (`state_len`), for the `B < L` fallback and
+    /// single-path entry points.
+    pub(crate) state: Vec<f64>,
+    /// Scalar step increment (`d`).
+    pub(crate) dx: Vec<f64>,
+    /// Lane-major state matrix, `state_len × L` with lanes contiguous.
+    pub(crate) lane_state: Vec<f64>,
+    /// Lane-major step increments, `d × L` with lanes contiguous.
+    pub(crate) dx_lanes: Vec<f64>,
+}
+
+impl ForwardWorkspace {
+    /// Size the lane-major buffers for `eng` (idempotent; steady state
+    /// performs no allocation because `resize` within capacity is
+    /// free). The scalar buffers are sized by the scalar kernels
+    /// themselves, so purely scalar paths never pay for the `×L` lane
+    /// matrix.
+    pub(crate) fn ensure_lanes(&mut self, eng: &SigEngine) {
+        let l = eng.lanes();
+        self.lane_state.clear();
+        self.lane_state.resize(eng.table.state_len * l, 0.0);
+        self.dx_lanes.clear();
+        self.dx_lanes.resize(eng.table.d * l, 0.0);
+    }
+}
+
+/// One lane-major Chen/Horner update `S_l ← S_l ⊗ exp(dx_l)` for all
+/// `L` lanes at once. `lane_state` is `state_len × L` (lane
+/// contiguous, `lane_state[0..L] == 1`), `dx_lanes` is `d × L`.
+/// Levels are processed top-down so the update is in place, exactly as
+/// in the scalar [`crate::sig::chen_update`].
+pub fn chen_update_lanes<const L: usize>(
+    eng: &SigEngine,
+    lane_state: &mut [f64],
+    dx_lanes: &[f64],
+) {
+    let t = &eng.table;
+    // Hard asserts, not debug: the kernel below does unchecked reads
+    // and writes at multiples of L, so these size contracts are what
+    // keeps it a *safe* public function in release builds.
+    assert_eq!(lane_state.len(), t.state_len * L, "lane_state must be state_len × L");
+    assert_eq!(dx_lanes.len(), t.d * L, "dx_lanes must be d × L");
+    let dx_ptr = dx_lanes.as_ptr();
+    for n in (1..=t.max_level).rev() {
+        let range = t.level_range(n);
+        let level_base = t.level_csr_base(n);
+        for (off, i) in range.enumerate() {
+            let base = level_base + off * n;
+            // SAFETY: indices come from the validated WordTable
+            // (letters < d, prefix indices < state_len, CSR rows in
+            // bounds; see `WordTable::check_invariants`), and every
+            // `[f64; L]` view starts at a multiple-of-L offset inside
+            // a buffer of length (state_len|d)·L, so it is in bounds.
+            // The shared view of a prefix row and the mutable view of
+            // row `i` never alias: prefixes are strictly shorter words
+            // (level < n), while `i` is a level-`n` word.
+            unsafe {
+                let letters = t.csr_letters.get_unchecked(base..base + n);
+                let prefixes = t.csr_prefix.get_unchecked(base..base + n);
+                let mut acc = [1.0f64; L]; // S(ε) broadcast across lanes.
+                for k in 1..n {
+                    let letter = *letters.get_unchecked(k - 1) as usize;
+                    let r = *eng.recip.get_unchecked(n - k + 1);
+                    let dxl = &*(dx_ptr.add(letter * L) as *const [f64; L]);
+                    let pref = *prefixes.get_unchecked(k) as usize;
+                    let s = &*(lane_state.as_ptr().add(pref * L) as *const [f64; L]);
+                    for l in 0..L {
+                        acc[l] = acc[l] * dxl[l] * r + s[l];
+                    }
+                }
+                let last = *letters.get_unchecked(n - 1) as usize;
+                let dxl = &*(dx_ptr.add(last * L) as *const [f64; L]);
+                let st = &mut *(lane_state.as_mut_ptr().add(i * L) as *mut [f64; L]);
+                for l in 0..L {
+                    st[l] += acc[l] * dxl[l];
+                }
+            }
+        }
+    }
+}
+
+/// Forward-sweep a block of `nb ≤ L` paths over steps
+/// `jl+1 ..= jr` (the `[jl, jr]` index window; the full path is
+/// `jl = 0, jr = M`), leaving the result in `ws.lane_state`. Inactive
+/// lanes (`nb < L`) carry zero increments and stay at the trivial
+/// signature. `block` holds the `nb` paths back to back, `per_path`
+/// values each, row-major `(M+1, d)`.
+fn lane_forward<const L: usize>(
+    eng: &SigEngine,
+    block: &[f64],
+    nb: usize,
+    per_path: usize,
+    jl: usize,
+    jr: usize,
+    ws: &mut ForwardWorkspace,
+) {
+    let d = eng.table.d;
+    let sl = eng.table.state_len;
+    debug_assert!(nb >= 1 && nb <= L);
+    debug_assert_eq!(block.len(), nb * per_path);
+    debug_assert!(ws.lane_state.len() >= sl * L && ws.dx_lanes.len() >= d * L);
+    let lane_state = &mut ws.lane_state[..sl * L];
+    let dx_lanes = &mut ws.dx_lanes[..d * L];
+    lane_state.fill(0.0);
+    lane_state[..L].fill(1.0); // ε row.
+    dx_lanes.fill(0.0); // inactive lanes keep Δx = 0 throughout.
+    for j in (jl + 1)..=jr {
+        // Transpose this step's increments into lane-major layout.
+        for (l, p) in block.chunks_exact(per_path).enumerate() {
+            for i in 0..d {
+                dx_lanes[i * L + l] = p[j * d + i] - p[(j - 1) * d + i];
+            }
+        }
+        chen_update_lanes::<L>(eng, lane_state, dx_lanes);
+    }
+}
+
+/// Monomorphization dispatch for [`lane_forward`] on the engine's lane
+/// width.
+pub(crate) fn lane_forward_dispatch(
+    eng: &SigEngine,
+    block: &[f64],
+    nb: usize,
+    per_path: usize,
+    jl: usize,
+    jr: usize,
+    ws: &mut ForwardWorkspace,
+) {
+    match eng.lanes() {
+        4 => lane_forward::<4>(eng, block, nb, per_path, jl, jr, ws),
+        16 => lane_forward::<16>(eng, block, nb, per_path, jl, jr, ws),
+        32 => lane_forward::<32>(eng, block, nb, per_path, jl, jr, ws),
+        _ => lane_forward::<DEFAULT_LANE_WIDTH>(eng, block, nb, per_path, jl, jr, ws),
+    }
+}
+
+/// Project lane `l` of a lane-major state matrix onto the requested
+/// coordinates (`row.len() == |I|`). `lw` is the runtime lane width the
+/// matrix was built with.
+pub(crate) fn project_lane(
+    eng: &SigEngine,
+    lane_state: &[f64],
+    lw: usize,
+    l: usize,
+    row: &mut [f64],
+) {
+    debug_assert!(l < lw);
+    for (o, &idx) in row.iter_mut().zip(&eng.table.output_map) {
+        *o = lane_state[idx as usize * lw + l];
+    }
+}
+
+/// Project the first `nb` lanes into `nb` consecutive output rows
+/// (`out.len() == nb · |I|`) — the de-transpose at the end of a block.
+pub(crate) fn project_block(
+    eng: &SigEngine,
+    lane_state: &[f64],
+    lw: usize,
+    nb: usize,
+    out: &mut [f64],
+) {
+    let odim = eng.out_dim();
+    debug_assert_eq!(out.len(), nb * odim);
+    for (l, row) in out.chunks_exact_mut(odim).enumerate() {
+        project_lane(eng, lane_state, lw, l, row);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sig::{signature, SigEngine};
+    use crate::util::proptest::assert_allclose;
+    use crate::util::rng::Rng;
+    use crate::words::{truncated_words, Word, WordTable};
+
+    fn lane_rows(eng: &SigEngine, paths: &[f64], nb: usize, per_path: usize) -> Vec<f64> {
+        let mut ws = ForwardWorkspace::default();
+        ws.ensure_lanes(eng);
+        let m1 = per_path / eng.table.d;
+        lane_forward_dispatch(eng, paths, nb, per_path, 0, m1 - 1, &mut ws);
+        let mut out = vec![0.0; nb * eng.out_dim()];
+        project_block(eng, &ws.lane_state, eng.lanes(), nb, &mut out);
+        out
+    }
+
+    #[test]
+    fn full_block_matches_scalar_bitwise() {
+        let mut rng = Rng::new(900);
+        let eng = SigEngine::sequential(WordTable::build(3, &truncated_words(3, 4)));
+        let lw = eng.lanes();
+        let m = 7;
+        let per = (m + 1) * 3;
+        let mut paths = Vec::new();
+        for _ in 0..lw {
+            paths.extend(rng.brownian_path(m, 3, 0.6));
+        }
+        let rows = lane_rows(&eng, &paths, lw, per);
+        for l in 0..lw {
+            let single = signature(&eng, &paths[l * per..(l + 1) * per]);
+            // Same arithmetic order per lane ⇒ bitwise identical.
+            assert_eq!(&rows[l * eng.out_dim()..(l + 1) * eng.out_dim()], &single[..]);
+        }
+    }
+
+    #[test]
+    fn partial_block_padded_lanes_are_inert() {
+        let mut rng = Rng::new(901);
+        let eng = SigEngine::sequential(WordTable::build(2, &truncated_words(2, 3)));
+        let m = 5;
+        let per = (m + 1) * 2;
+        let nb = 3; // < lane width
+        let mut paths = Vec::new();
+        for _ in 0..nb {
+            paths.extend(rng.brownian_path(m, 2, 1.0));
+        }
+        let rows = lane_rows(&eng, &paths, nb, per);
+        for l in 0..nb {
+            let single = signature(&eng, &paths[l * per..(l + 1) * per]);
+            assert_allclose(
+                &rows[l * eng.out_dim()..(l + 1) * eng.out_dim()],
+                &single,
+                0.0,
+                0.0,
+                "padded block row",
+            );
+        }
+    }
+
+    #[test]
+    fn projected_word_set_lanes() {
+        // Lane kernel over a sparse projected table (uneven word
+        // lengths exercise the CSR level bases).
+        let mut rng = Rng::new(902);
+        let request = vec![Word(vec![1, 0, 2]), Word(vec![2]), Word(vec![0, 0, 1, 1])];
+        let eng = SigEngine::sequential(WordTable::build(3, &request));
+        let m = 9;
+        let per = (m + 1) * 3;
+        let nb = 5;
+        let mut paths = Vec::new();
+        for _ in 0..nb {
+            paths.extend(rng.brownian_path(m, 3, 0.4));
+        }
+        let rows = lane_rows(&eng, &paths, nb, per);
+        for l in 0..nb {
+            let single = signature(&eng, &paths[l * per..(l + 1) * per]);
+            assert_allclose(
+                &rows[l * eng.out_dim()..(l + 1) * eng.out_dim()],
+                &single,
+                0.0,
+                0.0,
+                "projected row",
+            );
+        }
+    }
+}

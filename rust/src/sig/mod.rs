@@ -9,26 +9,40 @@
 //! update is in-place: a level-`n` word reads only strictly shorter
 //! prefixes, which still hold their step-`j-1` values.
 //!
-//! Parallelism mirrors the paper's CUDA mapping (§3.2): independent
-//! computational units are (path × window) pairs; within a unit the word
-//! table is swept sequentially with perfect locality. See
-//! [`crate::util::threadpool`].
+//! Parallelism mirrors the paper's CUDA mapping (§3.2) on two axes:
+//! independent computational units are (path × window) pairs across the
+//! thread pool, and **within** a unit the batch is cut into lane blocks
+//! whose state matrices are lane-major, so the Horner inner loop is a
+//! SIMD sweep over paths (see [`lanes`] and DESIGN.md's "Memory layout
+//! & vectorization"). Batch entry points draw per-worker scratch from
+//! engine-owned pools, making steady-state calls allocation-free.
 
 mod backward;
 mod forward;
+pub mod lanes;
 mod windows;
 
-pub use backward::{sig_backward, sig_backward_batch, BackwardWorkspace};
-pub use forward::{chen_update, sig_forward_state, signature, signature_batch, signature_stream};
+pub use backward::{
+    sig_backward, sig_backward_batch, sig_backward_batch_into, sig_backward_into,
+    sig_backward_ws, BackwardWorkspace,
+};
+pub use forward::{
+    chen_update, sig_forward_state, signature, signature_batch, signature_batch_into,
+    signature_batch_scalar, signature_stream, signature_stream_into,
+};
+pub use lanes::{chen_update_lanes, ForwardWorkspace, DEFAULT_LANE_WIDTH};
 pub use windows::{
     expanding_windows, sliding_windows, window_signature, windowed_signatures,
-    windowed_signatures_batch, Window,
+    windowed_signatures_batch, windowed_signatures_batch_into, windowed_signatures_into, Window,
 };
 
+use crate::util::pool::Pool;
+use crate::util::threadpool::default_threads;
 use crate::words::WordTable;
 
 /// A word table bundled with the small precomputed constant tables the
-/// kernels need (`1/k` and `1/k!`). Build once, reuse across calls.
+/// kernels need (`1/k` and `1/k!`), the parallelism configuration, and
+/// pooled per-worker scratch. Build once, reuse across calls.
 #[derive(Clone, Debug)]
 pub struct SigEngine {
     /// The prefix-closed word table driving the recursion.
@@ -37,13 +51,26 @@ pub struct SigEngine {
     pub recip: Vec<f64>,
     /// `inv_fact[k] = 1/k!` for `k = 0..=N`.
     pub inv_fact: Vec<f64>,
-    /// Worker threads for batch entry points (1 = sequential).
+    /// Worker threads for batch entry points (1 = sequential). Default:
+    /// the `PATHSIG_THREADS` environment variable if set, else
+    /// `available_parallelism` capped at 16.
     pub threads: usize,
+    /// Lane width `L` of the lane-major batch kernel — how many paths
+    /// one SIMD block carries. Valid values are 4, 8, 16 or 32 (other
+    /// values fall back to [`DEFAULT_LANE_WIDTH`]); settable via the
+    /// `PATHSIG_LANES` environment variable. Batches with `B < L` use
+    /// the scalar per-path kernel.
+    pub lane_width: usize,
+    /// Pooled forward workspaces (one per worker, reused across calls).
+    pub(crate) fwd_pool: Pool<ForwardWorkspace>,
+    /// Pooled backward workspaces.
+    pub(crate) bwd_pool: Pool<BackwardWorkspace>,
 }
 
 impl SigEngine {
     /// Build an engine over a word table, sized to the machine's
-    /// available parallelism (capped at 16 workers).
+    /// available parallelism (see [`default_threads`] — override with
+    /// `PATHSIG_THREADS`).
     pub fn new(table: WordTable) -> SigEngine {
         let n = table.max_level;
         let recip: Vec<f64> = (0..=n + 1).map(|k| if k == 0 { 0.0 } else { 1.0 / k as f64 }).collect();
@@ -51,15 +78,19 @@ impl SigEngine {
         for k in 1..inv_fact.len() {
             inv_fact[k] = inv_fact[k - 1] / k as f64;
         }
-        let threads = std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(4)
-            .min(16);
+        let lanes_env = std::env::var("PATHSIG_LANES").ok().and_then(|v| v.parse::<usize>().ok());
+        let lane_width = match lanes_env {
+            Some(l @ (4 | 8 | 16 | 32)) => l,
+            _ => DEFAULT_LANE_WIDTH,
+        };
         SigEngine {
             table,
             recip,
             inv_fact,
-            threads,
+            threads: default_threads(),
+            lane_width,
+            fwd_pool: Pool::default(),
+            bwd_pool: Pool::default(),
         }
     }
 
@@ -75,6 +106,16 @@ impl SigEngine {
         let mut e = SigEngine::new(table);
         e.threads = threads.max(1);
         e
+    }
+
+    /// Effective lane width: [`SigEngine::lane_width`] if valid
+    /// (4/8/16/32), else [`DEFAULT_LANE_WIDTH`].
+    #[inline]
+    pub fn lanes(&self) -> usize {
+        match self.lane_width {
+            4 | 8 | 16 | 32 => self.lane_width,
+            _ => DEFAULT_LANE_WIDTH,
+        }
     }
 
     /// Output dimension `|I|`.
@@ -113,6 +154,46 @@ mod tests {
         assert!((e.inv_fact[3] - 1.0 / 6.0).abs() < 1e-15);
         assert_eq!(e.out_dim(), 2 + 4 + 8 + 16);
         assert_eq!(e.state_len(), 1 + 30);
+    }
+
+    #[test]
+    fn lane_width_normalisation() {
+        let mut e = SigEngine::new(WordTable::build(2, &truncated_words(2, 2)));
+        for valid in [4usize, 8, 16, 32] {
+            e.lane_width = valid;
+            assert_eq!(e.lanes(), valid);
+        }
+        e.lane_width = 7; // invalid → default
+        assert_eq!(e.lanes(), DEFAULT_LANE_WIDTH);
+    }
+
+    #[test]
+    fn thread_count_configuration() {
+        // Engines pick up `default_threads()` (which honours
+        // `PATHSIG_THREADS` — its parsing is unit-tested in
+        // `util::threadpool` without touching the process environment,
+        // since `set_var` races parallel tests) and accept explicit
+        // overrides.
+        let e = SigEngine::new(WordTable::build(2, &truncated_words(2, 2)));
+        assert!(e.threads >= 1);
+        assert_eq!(e.threads, crate::util::threadpool::default_threads());
+        let e5 = SigEngine::with_threads(WordTable::build(2, &truncated_words(2, 2)), 5);
+        assert_eq!(e5.threads, 5);
+        let clamped = SigEngine::with_threads(WordTable::build(2, &truncated_words(2, 2)), 0);
+        assert_eq!(clamped.threads, 1);
+    }
+
+    #[test]
+    fn engine_clone_has_fresh_pools() {
+        let e = SigEngine::sequential(WordTable::build(2, &truncated_words(2, 3)));
+        // Populate the pool via a batch call, then clone.
+        let paths = vec![0.0; 2 * 4 * 2];
+        let _ = signature_batch(&e, &paths, 2);
+        let c = e.clone();
+        assert_eq!(c.threads, e.threads);
+        assert_eq!(c.table.state_len, e.table.state_len);
+        // The clone computes correctly with its own (empty) pools.
+        let _ = signature_batch(&c, &paths, 2);
     }
 
     #[test]

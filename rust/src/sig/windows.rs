@@ -5,15 +5,20 @@
 //! independent forward recursion over its own increment range — windows
 //! are the extra parallelism axis the paper uses to saturate the device,
 //! and they parallelise across the thread pool here the same way
-//! (units = batch × windows).
+//! (units = batch × windows). In the batched entry point the window
+//! list is shared across paths, so each (window, lane-block) unit runs
+//! the lane-major SIMD kernel over a block of paths and scatters its
+//! rows straight into the output tensor.
 //!
 //! A Chen-combination alternative (`S_{0,l}^{-1} ⊗ S_{0,r}` from
 //! expanding-window states, as Signatory does) is implemented in
 //! [`crate::baselines::chen_windows`] for the Fig-3 comparison; the paper
 //! notes it is numerically unstable and memory-hungry for long sequences.
 
-use super::{chen_update, SigEngine};
-use crate::util::threadpool::parallel_map;
+use super::forward::forward_sweep_range;
+use super::lanes::{lane_forward_dispatch, project_lane, ForwardWorkspace};
+use super::SigEngine;
+use crate::util::threadpool::{parallel_for_ctx, parallel_for_into, SendPtr};
 
 /// An index window over path points `l..=r` (both endpoints included) —
 /// the signature is computed over the segment increments
@@ -33,6 +38,11 @@ impl Window {
         assert!(l < r, "window must satisfy l < r (got {l}, {r})");
         Window { l, r }
     }
+}
+
+/// Scalar forward sweep over one window into `ws.state`.
+fn window_forward_ws(eng: &SigEngine, path: &[f64], w: Window, ws: &mut ForwardWorkspace) {
+    forward_sweep_range(eng, path, w.l, w.r, &mut ws.state, &mut ws.dx);
 }
 
 /// Windowed signatures of a single path: returns row-major
@@ -55,60 +65,134 @@ impl Window {
 /// assert!((out[2] - 3.0).abs() < 1e-12); // X_3 - X_2
 /// ```
 pub fn windowed_signatures(eng: &SigEngine, path: &[f64], windows: &[Window]) -> Vec<f64> {
+    let mut out = vec![0.0; windows.len() * eng.out_dim()];
+    windowed_signatures_into(eng, path, windows, &mut out);
+    out
+}
+
+/// [`windowed_signatures`] writing into a caller-provided `(K, |I|)`
+/// buffer: rows are produced in place by pooled per-worker workspaces.
+pub fn windowed_signatures_into(
+    eng: &SigEngine,
+    path: &[f64],
+    windows: &[Window],
+    out: &mut [f64],
+) {
     let d = eng.table.d;
     let m1 = path.len() / d;
     for w in windows {
         assert!(w.r < m1, "window right edge {} out of range (M={})", w.r, m1 - 1);
     }
     let odim = eng.out_dim();
-    let rows = parallel_map(windows.len(), eng.threads, |k| {
-        window_signature(eng, path, windows[k])
+    assert_eq!(out.len(), windows.len() * odim, "output buffer has wrong size");
+    let nw = eng.threads.min(windows.len()).max(1);
+    let mut workers = eng.fwd_pool.take_at_least(nw);
+    parallel_for_into(out, odim, &mut workers[..nw], |k, row, ws| {
+        window_forward_ws(eng, path, windows[k], ws);
+        eng.table.project(&ws.state, row);
     });
-    let mut out = Vec::with_capacity(windows.len() * odim);
-    for r in rows {
-        out.extend(r);
-    }
-    out
+    eng.fwd_pool.put(workers);
 }
 
 /// One window's projected signature (sequential inner kernel).
 pub fn window_signature(eng: &SigEngine, path: &[f64], w: Window) -> Vec<f64> {
     let d = eng.table.d;
-    let mut state = vec![0.0; eng.table.state_len];
-    state[0] = 1.0;
-    let mut dx = vec![0.0; d];
-    for j in (w.l + 1)..=w.r {
-        for i in 0..d {
-            dx[i] = path[j * d + i] - path[(j - 1) * d + i];
-        }
-        chen_update(eng, &mut state, &dx);
-    }
+    let m1 = path.len() / d;
+    assert!(w.r < m1, "window right edge {} out of range (M={})", w.r, m1 - 1);
+    let mut ws = ForwardWorkspace::default();
+    window_forward_ws(eng, path, w, &mut ws);
     let mut out = vec![0.0; eng.out_dim()];
-    eng.table.project(&state, &mut out);
+    eng.table.project(&ws.state, &mut out);
     out
 }
 
 /// Batched windowed signatures: `paths` `(B, M+1, d)`, same window list
 /// for every path (the paper's API takes one `K×2` index tensor).
-/// Returns row-major `(B, K, |I|)`. Parallel over `B × K` units.
+/// Returns row-major `(B, K, |I|)`. Parallel over `B × K` units; the
+/// shared window list makes paths the lane axis, so each (window,
+/// block) unit runs the lane-major kernel over a block of paths.
 pub fn windowed_signatures_batch(
     eng: &SigEngine,
     paths: &[f64],
     batch: usize,
     windows: &[Window],
 ) -> Vec<f64> {
-    let per_path = paths.len() / batch;
-    let odim = eng.out_dim();
-    let k = windows.len();
-    let rows = parallel_map(batch * k, eng.threads, |u| {
-        let (b, wi) = (u / k, u % k);
-        window_signature(eng, &paths[b * per_path..(b + 1) * per_path], windows[wi])
-    });
-    let mut out = Vec::with_capacity(batch * k * odim);
-    for r in rows {
-        out.extend(r);
-    }
+    let mut out = vec![0.0; batch * windows.len() * eng.out_dim()];
+    windowed_signatures_batch_into(eng, paths, batch, windows, &mut out);
     out
+}
+
+/// [`windowed_signatures_batch`] writing into a caller-provided
+/// `(B, K, |I|)` buffer — in-place rows, pooled workspaces, lane-major
+/// kernel when `B` spans at least one lane block.
+pub fn windowed_signatures_batch_into(
+    eng: &SigEngine,
+    paths: &[f64],
+    batch: usize,
+    windows: &[Window],
+    out: &mut [f64],
+) {
+    assert!(batch > 0);
+    assert_eq!(paths.len() % batch, 0);
+    let per_path = paths.len() / batch;
+    let d = eng.table.d;
+    assert!(per_path % d == 0 && per_path / d >= 1, "bad path shape");
+    let m1 = per_path / d;
+    for w in windows {
+        assert!(w.r < m1, "window right edge {} out of range (M={})", w.r, m1 - 1);
+    }
+    let odim = eng.out_dim();
+    let kk = windows.len();
+    assert_eq!(out.len(), batch * kk * odim, "output buffer has wrong size");
+    if kk == 0 {
+        return;
+    }
+    let lanes = eng.lanes();
+
+    if batch < lanes {
+        // Scalar fallback: unit u = (path b, window k), row u written in
+        // place (out is (B, K, |I|) row-major, so unit order == row order).
+        let nw = eng.threads.min(batch * kk).max(1);
+        let mut workers = eng.fwd_pool.take_at_least(nw);
+        parallel_for_into(out, odim, &mut workers[..nw], |u, row, ws| {
+            let (b, wi) = (u / kk, u % kk);
+            window_forward_ws(eng, &paths[b * per_path..(b + 1) * per_path], windows[wi], ws);
+            eng.table.project(&ws.state, row);
+        });
+        eng.fwd_pool.put(workers);
+        return;
+    }
+
+    // Lane-major path: unit u = (lane block, window). A unit's rows are
+    // strided in the (B, K, |I|) output — row (b0 + l, wi) for each
+    // lane l — so they are scattered through a raw pointer; rows are
+    // disjoint across units because each (b, wi) pair belongs to
+    // exactly one unit.
+    let n_blocks = batch.div_ceil(lanes);
+    let nw = eng.threads.min(n_blocks * kk).max(1);
+    let mut workers = eng.fwd_pool.take_at_least(nw);
+    for w in workers.iter_mut().take(nw) {
+        w.ensure_lanes(eng);
+    }
+    let out_ptr = SendPtr(out.as_mut_ptr());
+    parallel_for_ctx(n_blocks * kk, &mut workers[..nw], move |u, ws| {
+        let blk = u / kk;
+        let wi = u % kk;
+        let win = windows[wi];
+        let b0 = blk * lanes;
+        let nb = (batch - b0).min(lanes);
+        let block = &paths[b0 * per_path..(b0 + nb) * per_path];
+        lane_forward_dispatch(eng, block, nb, per_path, win.l, win.r, ws);
+        for l in 0..nb {
+            let row_start = ((b0 + l) * kk + wi) * odim;
+            // SAFETY: each (b, wi) row is written by exactly one unit
+            // (see above); `out` outlives the scoped workers.
+            let row =
+                unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(row_start), odim) };
+            project_lane(eng, &ws.lane_state, lanes, l, row);
+        }
+    });
+    eng.fwd_pool.put(workers);
 }
 
 /// Sliding windows of fixed `len` and `stride` over a path with `m1`
@@ -238,6 +322,37 @@ mod tests {
                 0.0,
                 "batch block",
             );
+        }
+    }
+
+    #[test]
+    fn batch_windows_lane_path_matches_scalar() {
+        // Batch wide enough for the lane kernel, non-divisible by the
+        // lane width, checked row-by-row against the scalar kernel.
+        let mut rng = Rng::new(305);
+        let d = 2;
+        let e = eng(d, 3);
+        let b = e.lanes() + 3;
+        let m = 12;
+        let mut paths = Vec::new();
+        for _ in 0..b {
+            paths.extend(rng.brownian_path(m, d, 0.9));
+        }
+        let wins = vec![Window::new(0, 5), Window::new(3, 12), Window::new(11, 12)];
+        let out = windowed_signatures_batch(&e, &paths, b, &wins);
+        let odim = e.out_dim();
+        let per = (m + 1) * d;
+        for bi in 0..b {
+            for (k, w) in wins.iter().enumerate() {
+                let single = window_signature(&e, &paths[bi * per..(bi + 1) * per], *w);
+                assert_allclose(
+                    &out[(bi * wins.len() + k) * odim..(bi * wins.len() + k + 1) * odim],
+                    &single,
+                    0.0,
+                    0.0,
+                    "lane window row",
+                );
+            }
         }
     }
 

@@ -11,6 +11,7 @@
 pub mod rng;
 pub mod json;
 pub mod fft;
+pub mod pool;
 pub mod threadpool;
 pub mod stats;
 pub mod cli;

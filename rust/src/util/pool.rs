@@ -1,0 +1,98 @@
+//! Reusable-buffer pools for the zero-allocation hot paths.
+//!
+//! Batch entry points need one scratch workspace per worker thread.
+//! Allocating those on every call is exactly the churn the lane-major
+//! kernel is meant to avoid, so engines keep a [`Pool`] of workspaces:
+//! a call takes the whole vector of workspaces out (one mutex lock),
+//! grows it if the worker count went up, and puts it back when done.
+//! In steady state (same engine, same worker count) the take/put pair
+//! performs no heap allocation at all — verified by the counting
+//! allocator in `benches/fig1_truncated.rs`.
+
+use std::fmt;
+use std::sync::Mutex;
+
+/// A mutex-guarded stash of reusable worker contexts.
+///
+/// Cloning a pool yields an *empty* pool (scratch buffers are not
+/// shared between engine clones), which keeps `#[derive(Clone)]`
+/// usable on structs that embed one.
+pub struct Pool<T>(Mutex<Vec<T>>);
+
+impl<T> Default for Pool<T> {
+    fn default() -> Self {
+        Pool(Mutex::new(Vec::new()))
+    }
+}
+
+impl<T> fmt::Debug for Pool<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let n = self.0.lock().map(|v| v.len()).unwrap_or(0);
+        write!(f, "Pool({n} cached)")
+    }
+}
+
+impl<T> Clone for Pool<T> {
+    fn clone(&self) -> Self {
+        Pool::default()
+    }
+}
+
+impl<T: Default> Pool<T> {
+    /// Take the cached contexts, growing the vector to at least `n`
+    /// entries (new entries are `T::default()`). Steady state — pool
+    /// already holds ≥ `n` contexts — allocates nothing.
+    pub fn take_at_least(&self, n: usize) -> Vec<T> {
+        let mut v = std::mem::take(&mut *self.0.lock().unwrap());
+        if v.len() < n {
+            v.resize_with(n, T::default);
+        }
+        v
+    }
+
+    /// Return contexts to the pool for the next call. If two calls
+    /// race, the later `put` wins and the other vector is dropped —
+    /// correctness is unaffected, only reuse.
+    pub fn put(&self, v: Vec<T>) {
+        *self.0.lock().unwrap() = v;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_grows_and_put_reuses() {
+        let pool: Pool<Vec<u8>> = Pool::default();
+        let mut v = pool.take_at_least(3);
+        assert_eq!(v.len(), 3);
+        v[0].push(7);
+        let cap = {
+            v[0].reserve(100);
+            v[0].capacity()
+        };
+        pool.put(v);
+        // Second take sees the same buffers (no shrink, no realloc).
+        let v2 = pool.take_at_least(2);
+        assert_eq!(v2.len(), 3);
+        assert_eq!(v2[0][0], 7);
+        assert_eq!(v2[0].capacity(), cap);
+    }
+
+    #[test]
+    fn clone_is_empty() {
+        let pool: Pool<u32> = Pool::default();
+        pool.put(vec![1, 2, 3]);
+        let clone = pool.clone();
+        assert_eq!(clone.take_at_least(0).len(), 0);
+        assert_eq!(pool.take_at_least(0).len(), 3);
+    }
+
+    #[test]
+    fn debug_prints_cache_size() {
+        let pool: Pool<u32> = Pool::default();
+        pool.put(vec![1, 2]);
+        assert!(format!("{pool:?}").contains('2'));
+    }
+}

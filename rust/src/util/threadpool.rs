@@ -71,14 +71,10 @@ impl ThreadPool {
         }
     }
 
-    /// Pool sized to the machine (`available_parallelism`, capped at 16 —
-    /// the paper's workloads saturate well before that on CPU).
+    /// Pool sized like [`default_threads`] (`PATHSIG_THREADS` override,
+    /// else `available_parallelism` capped at 16).
     pub fn default_pool() -> Self {
-        let n = std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(4)
-            .min(16);
-        ThreadPool::new(n)
+        ThreadPool::new(default_threads())
     }
 
     /// Number of worker threads.
@@ -149,8 +145,103 @@ impl Drop for ThreadPool {
     }
 }
 
+/// Default worker count: the `PATHSIG_THREADS` environment variable if
+/// set to a positive integer, else `available_parallelism` capped at 16
+/// (the paper's CPU workloads saturate well before that).
+pub fn default_threads() -> usize {
+    threads_from(std::env::var("PATHSIG_THREADS").ok().as_deref())
+}
+
+/// Pure core of [`default_threads`] (unit-testable without touching the
+/// process environment): `env` is the raw `PATHSIG_THREADS` value.
+fn threads_from(env: Option<&str>) -> usize {
+    match env.and_then(|v| v.trim().parse::<usize>().ok()) {
+        Some(n) if n >= 1 => n,
+        _ => std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+            .min(16),
+    }
+}
+
+/// Run `f(i, ctx)` for `i in 0..n` with one scoped worker thread per
+/// context in `ctxs`, work-stealing unit indices from a shared atomic
+/// counter. Each worker owns its `&mut W` exclusively, which is how the
+/// batch kernels thread reusable workspaces through a parallel loop
+/// without locks or per-unit allocation. With a single context (or a
+/// single unit) the loop runs inline on the caller's thread — no spawn,
+/// no allocation.
+pub fn parallel_for_ctx<W: Send, F>(n: usize, ctxs: &mut [W], f: F)
+where
+    F: Fn(usize, &mut W) + Send + Sync,
+{
+    assert!(!ctxs.is_empty(), "parallel_for_ctx needs at least one context");
+    if n == 0 {
+        return;
+    }
+    if ctxs.len() == 1 || n == 1 {
+        let ctx = &mut ctxs[0];
+        for i in 0..n {
+            f(i, ctx);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        let f = &f;
+        let next = &next;
+        for ctx in ctxs.iter_mut().take(n) {
+            s.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                f(i, ctx);
+            });
+        }
+    });
+}
+
+/// Chunked parallel write into the caller's output buffer: splits `out`
+/// into consecutive `chunk`-sized pieces (last may be short) and runs
+/// `f(chunk_index, piece, ctx)` across one worker per context, writing
+/// **in place** — no per-job boxing, no result rows, no post-join copy.
+/// This replaces the old `parallel_map` + `out.extend(row)` pattern on
+/// every batch hot path.
+pub fn parallel_for_into<T, W, F>(out: &mut [T], chunk: usize, ctxs: &mut [W], f: F)
+where
+    T: Send,
+    W: Send,
+    F: Fn(usize, &mut [T], &mut W) + Send + Sync,
+{
+    let chunk = chunk.max(1);
+    let len = out.len();
+    let n_chunks = len.div_ceil(chunk);
+    let base = SendPtr(out.as_mut_ptr());
+    parallel_for_ctx(n_chunks, ctxs, move |k, ctx| {
+        let start = k * chunk;
+        let end = (start + chunk).min(len);
+        // SAFETY: each chunk index is claimed exactly once by
+        // parallel_for_ctx, so the slices are disjoint; `out` outlives
+        // the scoped workers.
+        let piece = unsafe { std::slice::from_raw_parts_mut(base.0.add(start), end - start) };
+        f(k, piece, ctx);
+    });
+}
+
+/// [`parallel_for_into`] without worker contexts: fill `out` row by row
+/// (`row_len` elements each) across `threads` workers.
+pub fn parallel_fill_rows<T: Send, F>(out: &mut [T], row_len: usize, threads: usize, f: F)
+where
+    F: Fn(usize, &mut [T]) + Send + Sync,
+{
+    let mut ctxs = vec![(); threads.max(1)];
+    parallel_for_into(out, row_len, &mut ctxs, |k, piece, _| f(k, piece));
+}
+
 /// Run `f(i)` for `i in 0..n` across `threads` scoped threads, collecting
-/// results in order. The workhorse for batch-parallel signature kernels.
+/// results in order. Prefer [`parallel_for_into`] on hot paths — this
+/// variant allocates one `T` slot per unit.
 pub fn parallel_map<T: Send, F>(n: usize, threads: usize, f: F) -> Vec<T>
 where
     F: Fn(usize) -> T + Send + Sync,
@@ -219,7 +310,11 @@ where
     });
 }
 
-struct SendPtr<T>(*mut T);
+/// A raw pointer that asserts Send/Sync so scoped workers can write to
+/// provably disjoint regions of one buffer (each index claimed exactly
+/// once via an atomic counter). Crate-visible for kernels whose output
+/// rows are disjoint but strided (e.g. windowed batch lanes).
+pub(crate) struct SendPtr<T>(pub(crate) *mut T);
 // Manual Clone/Copy: the derive would add a spurious `T: Copy` bound.
 impl<T> Clone for SendPtr<T> {
     fn clone(&self) -> Self {
@@ -284,5 +379,67 @@ mod tests {
     fn parallel_map_single_thread_fallback() {
         let out = parallel_map(5, 1, |i| i + 1);
         assert_eq!(out, vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn parallel_for_into_writes_every_chunk_in_place() {
+        let mut out = vec![0usize; 103]; // 103 = 10 chunks of 11 + tail of 4... (9*11=99, tail 4)
+        let mut ctxs = vec![0usize; 4];
+        parallel_for_into(&mut out, 11, &mut ctxs, |k, piece, ctx| {
+            *ctx += 1;
+            for x in piece {
+                *x = k + 1;
+            }
+        });
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i / 11 + 1, "element {i}");
+        }
+        // Every chunk was handled by exactly one worker.
+        assert_eq!(ctxs.iter().sum::<usize>(), 103usize.div_ceil(11));
+    }
+
+    #[test]
+    fn parallel_for_into_single_context_runs_inline() {
+        let mut out = vec![0u8; 10];
+        let mut ctxs = [0usize];
+        parallel_for_into(&mut out, 3, &mut ctxs, |_, piece, ctx| {
+            *ctx += piece.len();
+        });
+        assert_eq!(ctxs[0], 10);
+    }
+
+    #[test]
+    fn parallel_fill_rows_covers_exact_rows() {
+        let mut out = vec![0.0f64; 6 * 4];
+        parallel_fill_rows(&mut out, 4, 3, |r, row| {
+            assert_eq!(row.len(), 4);
+            for x in row {
+                *x = r as f64;
+            }
+        });
+        for r in 0..6 {
+            assert!(out[r * 4..(r + 1) * 4].iter().all(|&x| x == r as f64));
+        }
+    }
+
+    #[test]
+    fn parallel_for_ctx_each_unit_once() {
+        let hits = AtomicU64::new(0);
+        let mut ctxs = vec![(); 5];
+        parallel_for_ctx(777, &mut ctxs, |_, _| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 777);
+    }
+
+    #[test]
+    fn threads_from_env_parsing() {
+        assert_eq!(threads_from(Some("3")), 3);
+        assert_eq!(threads_from(Some(" 12 ")), 12);
+        let fallback = threads_from(None);
+        assert!((1..=16).contains(&fallback));
+        // Zero and garbage fall back to the machine default.
+        assert_eq!(threads_from(Some("0")), fallback);
+        assert_eq!(threads_from(Some("many")), fallback);
     }
 }

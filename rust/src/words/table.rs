@@ -6,8 +6,16 @@
 //! by (level, lexicographic), with the empty word at state index 0. Per
 //! word it stores the letters and the state indices of all proper
 //! prefixes, so Algorithm 1's Horner update is a pair of flat gathers.
-//! The same layout is produced by `python/compile/words.py` for the
-//! Pallas kernel (golden-file cross-checked).
+//!
+//! Storage is **level-major CSR**: word `i` of length `n` owns the slots
+//! `csr_start[i] .. csr_start[i] + n` of `csr_letters` / `csr_prefix`,
+//! and because words are sorted by level those slots are densely packed
+//! per level with no padding to `max_level` — projected and anisotropic
+//! sets (mostly-short words) waste no cache lines on stride slack, and
+//! a level sweep reads the metadata arrays strictly sequentially. The
+//! strided `(state_len, max_level)` layout consumed by the Pallas
+//! kernel is reconstructed on demand in [`WordTable::to_json`]
+//! (golden-file cross-checked against `python/compile/words.py`).
 
 use super::{encode::word_code, Word};
 use std::collections::HashMap;
@@ -26,13 +34,17 @@ pub struct WordTable {
     /// `level_start[n]..level_start[n+1]` is the state-index range of
     /// level-`n` words; `level_start.len() == max_level + 2`.
     pub level_start: Vec<usize>,
-    /// Letters, stride `max_level`: `letters[i*stride + t]` = letter
-    /// `i_{t+1}` of word `i` (0 beyond the word's length).
-    pub letters: Vec<u16>,
-    /// Prefix state indices, stride `max_level`:
-    /// `prefix_idx[i*stride + k]` = state index of `w_[k]`
-    /// (so entry `k=0` is always 0 = ε; entries `k ≥ |w|` unused).
-    pub prefix_idx: Vec<u32>,
+    /// CSR row starts: word `i` owns `csr_start[i]..csr_start[i+1]`
+    /// (`|w_i|` slots) of the packed arrays; `csr_start.len() ==
+    /// state_len + 1`. Within a level all rows have equal length, so
+    /// `csr_start[i] = csr_start[level_start[n]] + (i - level_start[n])·n`.
+    pub csr_start: Vec<u32>,
+    /// Packed letters: `csr_letters[csr_start[i] + t]` = letter `i_{t+1}`
+    /// of word `i`.
+    pub csr_letters: Vec<u16>,
+    /// Packed prefix state indices: `csr_prefix[csr_start[i] + k]` =
+    /// state index of `w_[k]` (entry `k = 0` is always 0 = ε).
+    pub csr_prefix: Vec<u32>,
     /// State indices of the *requested* words, in request order — the
     /// output projection `π_I` (§7.1).
     pub output_map: Vec<u32>,
@@ -86,7 +98,6 @@ impl WordTable {
         entries.sort_by_key(|(key, _)| *key);
 
         let max_level = entries.last().map(|((l, _), _)| *l as usize).unwrap_or(0);
-        let stride = max_level.max(1);
         let state_len = entries.len();
 
         let mut index_of: HashMap<(u8, u64), u32> = HashMap::with_capacity(state_len);
@@ -104,18 +115,20 @@ impl WordTable {
             }
         }
 
-        let mut letters = vec![0u16; state_len * stride];
-        let mut prefix_idx = vec![0u32; state_len * stride];
-        for (i, w) in words.iter().enumerate() {
-            for (t, &l) in w.0.iter().enumerate() {
-                letters[i * stride + t] = l;
-            }
-            for k in 0..w.len() {
-                let p = &w.0[..k];
-                let key = (k as u8, word_code(p, d));
-                prefix_idx[i * stride + k] = index_of[&key];
+        // Level-major CSR packing: |w| slots per word, no stride waste.
+        let total: usize = words.iter().map(|w| w.len()).sum();
+        let mut csr_start = Vec::with_capacity(state_len + 1);
+        let mut csr_letters = Vec::with_capacity(total);
+        let mut csr_prefix = Vec::with_capacity(total);
+        for w in &words {
+            csr_start.push(csr_letters.len() as u32);
+            for (k, &l) in w.0.iter().enumerate() {
+                csr_letters.push(l);
+                let key = (k as u8, word_code(&w.0[..k], d));
+                csr_prefix.push(index_of[&key]);
             }
         }
+        csr_start.push(csr_letters.len() as u32);
 
         let output_map = request
             .iter()
@@ -128,23 +141,26 @@ impl WordTable {
             state_len,
             words,
             level_start,
-            letters,
-            prefix_idx,
+            csr_start,
+            csr_letters,
+            csr_prefix,
             output_map,
             requested: request.to_vec(),
         }
-    }
-
-    /// Stride of the `letters` / `prefix_idx` tables.
-    #[inline]
-    pub fn stride(&self) -> usize {
-        self.max_level.max(1)
     }
 
     /// State-index range of level-`n` words.
     #[inline]
     pub fn level_range(&self, n: usize) -> std::ops::Range<usize> {
         self.level_start[n]..self.level_start[n + 1]
+    }
+
+    /// CSR offset of the first level-`n` word's row (level rows are
+    /// contiguous and `n` slots each, so word `level_start[n] + k` has
+    /// its row at `level_csr_base(n) + k·n`).
+    #[inline]
+    pub fn level_csr_base(&self, n: usize) -> usize {
+        self.csr_start[self.level_start[n]] as usize
     }
 
     /// Number of output coordinates `|I|`.
@@ -188,19 +204,32 @@ impl WordTable {
     pub fn check_invariants(&self) {
         // ε at index 0.
         assert!(self.words[0].is_empty());
-        let stride = self.stride();
+        assert_eq!(self.csr_start.len(), self.state_len + 1);
         for (i, w) in self.words.iter().enumerate() {
             let n = w.len();
-            // Level ranges consistent.
+            let base = self.csr_start[i] as usize;
+            // CSR row width equals the word length.
+            assert_eq!(
+                self.csr_start[i + 1] as usize - base,
+                n,
+                "csr row width wrong for word {i}"
+            );
+            // Level ranges consistent, and the level-major closed form
+            // for the row offset holds.
             assert!(self.level_range(n).contains(&i), "word {i} not in its level range");
+            assert_eq!(
+                base,
+                self.level_csr_base(n) + (i - self.level_start[n]) * n,
+                "csr row offset not level-major for word {i}"
+            );
             // Prefix pointers point at the true prefixes.
             for k in 0..n {
-                let p = &self.words[self.prefix_idx[i * stride + k] as usize];
+                let p = &self.words[self.csr_prefix[base + k] as usize];
                 assert_eq!(p.0, w.0[..k], "prefix table wrong for word {i} k={k}");
             }
             // Letters as stored.
             for (t, &l) in w.0.iter().enumerate() {
-                assert_eq!(self.letters[i * stride + t], l);
+                assert_eq!(self.csr_letters[base + t], l);
             }
         }
         // Sorted by (level, lex) and unique.
@@ -214,20 +243,32 @@ impl WordTable {
     }
 
     /// Serialize to JSON (artifact-manifest format shared with
-    /// `python/compile/words.py`).
+    /// `python/compile/words.py`). The manifest keeps the Pallas
+    /// kernel's strided `(state_len, max_level)` layout, reconstructed
+    /// here from the CSR rows.
     pub fn to_json(&self) -> crate::util::json::Json {
         use crate::util::json::Json;
+        let stride = self.max_level.max(1);
+        let mut letters = vec![0u16; self.state_len * stride];
+        let mut prefix_idx = vec![0u32; self.state_len * stride];
+        for (i, w) in self.words.iter().enumerate() {
+            let base = self.csr_start[i] as usize;
+            for k in 0..w.len() {
+                letters[i * stride + k] = self.csr_letters[base + k];
+                prefix_idx[i * stride + k] = self.csr_prefix[base + k];
+            }
+        }
         Json::obj(vec![
             ("d", Json::Num(self.d as f64)),
             ("max_level", Json::Num(self.max_level as f64)),
             ("state_len", Json::Num(self.state_len as f64)),
             (
                 "letters",
-                Json::Arr(self.letters.iter().map(|&l| Json::Num(l as f64)).collect()),
+                Json::Arr(letters.iter().map(|&l| Json::Num(l as f64)).collect()),
             ),
             (
                 "prefix_idx",
-                Json::Arr(self.prefix_idx.iter().map(|&p| Json::Num(p as f64)).collect()),
+                Json::Arr(prefix_idx.iter().map(|&p| Json::Num(p as f64)).collect()),
             ),
             ("level_start", Json::arr_usize(&self.level_start)),
             (
@@ -262,6 +303,19 @@ mod tests {
         assert_eq!(t.out_dim(), 1);
         assert_eq!(t.words[t.output_map[0] as usize], w);
         assert!(!t.output_is_identity());
+        t.check_invariants();
+    }
+
+    #[test]
+    fn csr_packing_has_no_stride_waste() {
+        // A projected set of mostly-short words: the packed arrays hold
+        // exactly Σ|w| slots, not state_len · max_level.
+        let ws = vec![Word(vec![0]), Word(vec![1]), Word(vec![0, 1, 1, 0, 1])];
+        let t = WordTable::build(2, &ws);
+        let total: usize = t.words.iter().map(|w| w.len()).sum();
+        assert_eq!(t.csr_letters.len(), total);
+        assert_eq!(t.csr_prefix.len(), total);
+        assert!(total < t.state_len * t.max_level, "packing saved nothing");
         t.check_invariants();
     }
 
@@ -311,14 +365,20 @@ mod tests {
     }
 
     #[test]
-    fn json_serialization_contains_tables() {
+    fn json_serialization_reconstructs_strided_tables() {
         let t = WordTable::build(2, &truncated_words(2, 2));
         let j = t.to_json();
         assert_eq!(j.get("d").as_usize(), Some(2));
         assert_eq!(j.get("state_len").as_usize(), Some(7));
+        // The manifest format is strided (state_len × max_level), even
+        // though in-memory storage is CSR.
         assert_eq!(
             j.get("letters").as_arr().unwrap().len(),
-            t.letters.len()
+            t.state_len * t.max_level
+        );
+        assert_eq!(
+            j.get("prefix_idx").as_arr().unwrap().len(),
+            t.state_len * t.max_level
         );
     }
 }

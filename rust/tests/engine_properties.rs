@@ -5,12 +5,12 @@
 
 use pathsig::logsig::LogSigEngine;
 use pathsig::sig::{
-    sig_backward, sig_forward_state, signature, signature_stream, window_signature, SigEngine,
-    Window,
+    sig_backward, sig_forward_state, signature, signature_batch, signature_batch_scalar,
+    signature_stream, window_signature, SigEngine, Window,
 };
 use pathsig::tensor::{tensor_log_series, TruncTensor};
 use pathsig::util::proptest::{assert_allclose, property, Gen};
-use pathsig::words::{truncated_words, Word, WordTable};
+use pathsig::words::{anisotropic_words, truncated_words, Word, WordTable};
 
 fn random_trunc_engine(g: &mut Gen) -> (SigEngine, usize, usize) {
     let d = g.usize_in(2, 4);
@@ -273,6 +273,59 @@ fn scaling_homogeneity() {
                 w.pretty()
             );
         }
+    });
+}
+
+#[test]
+fn lane_kernel_equals_scalar_kernel() {
+    // ISSUE-2 satellite: the lane-major batch kernel must agree with
+    // the scalar per-path kernel to 1e-13 across random
+    // (d, depth, B, M, word-set flavor, lane-width, thread-count)
+    // configurations — including B < L (scalar fallback) and B not
+    // divisible by the lane width (padded tail block).
+    property("lane kernel ≡ scalar kernel", 40, |g| {
+        let d = g.usize_in(2, 4);
+        let depth = g.usize_in(1, 4);
+        let words = match g.usize_in(0, 2) {
+            // Truncated: dense table, identity projection.
+            0 => truncated_words(d, depth),
+            // Projected: random sparse request with uneven lengths.
+            1 => (0..g.usize_in(1, 8))
+                .map(|_| {
+                    let len = g.usize_in(1, depth);
+                    Word((0..len).map(|_| g.usize_in(0, d - 1) as u16).collect())
+                })
+                .collect(),
+            // Anisotropic: weighted-degree cutoff (§7.2).
+            _ => {
+                let gamma: Vec<f64> = (0..d).map(|_| g.f64_in(1.0, 2.0)).collect();
+                let ws = anisotropic_words(d, &gamma, depth as f64);
+                if ws.is_empty() {
+                    truncated_words(d, 1)
+                } else {
+                    ws
+                }
+            }
+        };
+        let mut eng = SigEngine::with_threads(WordTable::build(d, &words), g.usize_in(1, 3));
+        eng.lane_width = *g.choose(&[4usize, 8, 16, 32]);
+        // Batch sizes straddle the lane width: below (fallback), equal,
+        // above-and-not-divisible (padded tail).
+        let b = g.usize_in(1, 2 * eng.lanes() + 3);
+        let m = g.usize_in(1, 12);
+        let mut paths = Vec::new();
+        for _ in 0..b {
+            paths.extend(g.path(m, d, 0.5));
+        }
+        let got = signature_batch(&eng, &paths, b);
+        let want = signature_batch_scalar(&eng, &paths, b);
+        assert_allclose(
+            &got,
+            &want,
+            1e-13,
+            1e-13,
+            &format!("lane≡scalar d={d} depth={depth} B={b} M={m} L={}", eng.lanes()),
+        );
     });
 }
 
