@@ -17,16 +17,19 @@ bench:
 	cargo bench
 
 # Emit the repo-root perf-trajectory artifacts (BENCH_fig1.json,
-# BENCH_table2.json): mean/median/min per case, peak bytes, the
-# lane-major-vs-scalar speedup and the zero-alloc steady-state count.
+# BENCH_table1.json, BENCH_table2.json): mean/median/min per case, peak
+# bytes, the lane-major-vs-scalar forward AND backward speedups, and
+# the zero-alloc steady-state counts (batch forward + train step).
 bench-json:
 	cargo bench --bench fig1_truncated -- --json
+	cargo bench --bench table1_training -- --json
 	cargo bench --bench table2_memory -- --json
 
 # CI-sized variant of bench-json: tiny cases, 1 warmup / 2 runs —
 # exercises the artifact pipeline, not a measurement.
 bench-smoke:
 	cargo bench --bench fig1_truncated -- --json --smoke
+	cargo bench --bench table1_training -- --json --smoke
 	cargo bench --bench table2_memory -- --json --smoke
 
 # Emit the AOT/PJRT artifacts (HLO text + manifest.json) into ./artifacts.

@@ -1,0 +1,42 @@
+"""Golden-manifest compatibility: ``compile.words.build_word_table``
+must reproduce the committed ``python/tests/golden/word_table_*.json``
+files exactly. The Rust side checks ``WordTable::to_json`` against the
+same files (``rust/tests/golden_words.rs``), so this pins both
+implementations to one canonical strided manifest layout — the contract
+the PJRT artifact pipeline and the CSR-backed Rust engine share."""
+
+import json
+from pathlib import Path
+
+import pytest
+
+from compile.words import build_word_table, truncated_words
+
+GOLDEN = Path(__file__).parent / "golden"
+CASES = [("word_table_d2_n4.json", 2, 4), ("word_table_d3_n3.json", 3, 3)]
+
+
+@pytest.mark.parametrize("name,d,depth", CASES)
+def test_manifest_matches_golden(name, d, depth):
+    want = json.loads((GOLDEN / name).read_text())
+    got = build_word_table(d, truncated_words(d, depth)).to_json()
+    assert got == want, f"{name}: manifest drifted from golden layout"
+
+
+def test_golden_files_cover_all_cases():
+    # Every committed golden file is asserted above — a new golden file
+    # must come with a matching case here.
+    names = sorted(p.name for p in GOLDEN.glob("word_table_*.json"))
+    assert names == sorted(c[0] for c in CASES)
+
+
+@pytest.mark.parametrize("name,d,depth", CASES)
+def test_manifest_shape_invariants(name, d, depth):
+    t = build_word_table(d, truncated_words(d, depth))
+    j = t.to_json()
+    assert j["state_len"] == t.state_len
+    # Strided manifest layout: state_len × max(max_level, 1) slots.
+    stride = max(j["max_level"], 1)
+    assert len(j["letters"]) == j["state_len"] * stride
+    assert len(j["prefix_idx"]) == j["state_len"] * stride
+    assert j["level_start"][-1] == j["state_len"]

@@ -4,18 +4,47 @@
 //! sweeps). Depth-6 rows are capped to depth 5 by default (the d=6
 //! level-6 slab alone is 46k coefficients); `PATHSIG_BENCH_FULL=1`
 //! restores the paper's exact rows.
+//!
+//! Three headline sections beyond the baseline table:
+//! * the pathsig row itself now runs the **fused**
+//!   `signature_and_backward_batch_into` (one forward sweep per step),
+//!   with the unfused two-pass time reported alongside;
+//! * `lane_vs_scalar` times the lane-major batched backward against the
+//!   pre-lane scalar-per-path backward (the ISSUE-3 headline);
+//! * `steady_state_allocs_per_call` counts heap allocations of a warm
+//!   `DeepSigModel::train_step` — the end-to-end zero-alloc contract.
+//!
+//! Modes: `--json` additionally writes the repo-root `BENCH_table1.json`
+//! perf-trajectory artifact; `--smoke` shrinks every case to CI size
+//! (1 warmup / 2 runs) so the artifact pipeline can be exercised in
+//! seconds.
 
 mod common;
-use common::{dump, full};
+use common::{dump, dump_root, full, json_mode, smoke};
 use pathsig::baselines::chen_full::chen_full_state;
 use pathsig::baselines::matmul_style_train_step;
-use pathsig::bench::{time_auto, Timing};
-use pathsig::sig::{sig_backward_batch, signature_batch, SigEngine};
+use pathsig::bench::{alloc_count, time_auto, time_fn, CountingAllocator, Timing};
+use pathsig::nn::{DeepSigModel, DeepSigSpec};
+use pathsig::sig::{
+    sig_backward_batch, sig_backward_batch_scalar, signature_and_backward_batch_into,
+    signature_batch, SigEngine,
+};
 use pathsig::tensor::{mul_adjoint, TruncTensor};
 use pathsig::util::json::Json;
 use pathsig::util::rng::Rng;
 use pathsig::util::threadpool::parallel_map;
 use pathsig::words::{generate::sig_dim, truncated_words, WordTable};
+
+#[global_allocator]
+static ALLOC: CountingAllocator = CountingAllocator;
+
+fn timeit<F: FnMut()>(name: &str, smoke: bool, budget: f64, f: F) -> Timing {
+    if smoke {
+        time_fn(name, 1, 2, f)
+    } else {
+        time_auto(name, budget, f)
+    }
+}
 
 /// pySigLib-style training step: dense forward + reverse sweep that
 /// (like its autograd) re-multiplies the stored per-step exponentials —
@@ -58,25 +87,117 @@ fn pysig_style_train(d: usize, depth: usize, path: &[f64], grad_out: &[f64]) -> 
     grad
 }
 
+/// The lane-major batched backward against the pre-lane
+/// scalar-per-path backward, same engine, same run (the ISSUE-3
+/// acceptance headline).
+fn lane_vs_scalar(smoke: bool, budget: f64) -> Json {
+    let (d, n, b, m) = if smoke { (2, 2, 16, 10) } else { (4, 5, 64, 100) };
+    let eng = SigEngine::new(WordTable::build(d, &truncated_words(d, n)));
+    let mut rng = Rng::new(0x1A5F);
+    let dim = sig_dim(d, n);
+    let mut paths = Vec::with_capacity(b * (m + 1) * d);
+    for _ in 0..b {
+        paths.extend(rng.brownian_path(m, d, 0.3));
+    }
+    let grads: Vec<f64> = (0..b * dim).map(|_| rng.gaussian()).collect();
+    let lane = timeit("lane-major backward", smoke, budget, || {
+        std::hint::black_box(sig_backward_batch(&eng, &paths, &grads, b));
+    });
+    let scalar = timeit("scalar-per-path backward", smoke, budget, || {
+        std::hint::black_box(sig_backward_batch_scalar(&eng, &paths, &grads, b));
+    });
+    let speedup = scalar.median_s / lane.median_s;
+    println!(
+        "\n# lane-major vs scalar-per-path backward (d={d} N={n} B={b} M={m}, {} threads, L={}):",
+        eng.threads,
+        eng.lanes()
+    );
+    println!("  lane   median {}", Timing::fmt_secs(lane.median_s));
+    println!("  scalar median {}", Timing::fmt_secs(scalar.median_s));
+    println!("  speedup {speedup:.2}x");
+    Json::obj(vec![
+        ("dim", Json::Num(d as f64)),
+        ("depth", Json::Num(n as f64)),
+        ("batch", Json::Num(b as f64)),
+        ("seq_len", Json::Num(m as f64)),
+        ("threads", Json::Num(eng.threads as f64)),
+        ("lane_width", Json::Num(eng.lanes() as f64)),
+        ("lane_mean_s", Json::Num(lane.mean_s)),
+        ("lane_median_s", Json::Num(lane.median_s)),
+        ("lane_min_s", Json::Num(lane.min_s)),
+        ("scalar_mean_s", Json::Num(scalar.mean_s)),
+        ("scalar_median_s", Json::Num(scalar.median_s)),
+        ("scalar_min_s", Json::Num(scalar.min_s)),
+        ("speedup", Json::Num(speedup)),
+    ])
+}
+
+/// Count heap allocations per steady-state `DeepSigModel::train_step`
+/// call (sequential engine, warm TrainCache and workspace pools),
+/// averaged over 5 calls as an exact fraction so even a single stray
+/// allocation cannot floor to 0. The training zero-alloc contract:
+/// this must be 0.
+fn steady_state_allocs(smoke: bool) -> f64 {
+    let (dim, depth, b, m) = if smoke { (2, 2, 12, 8) } else { (2, 3, 32, 32) };
+    let mut rng = Rng::new(0xA111);
+    let spec = DeepSigSpec {
+        dim,
+        words: truncated_words(2 * dim, depth),
+        hidden: vec![8],
+        lr: 1e-3,
+    };
+    let mut model = DeepSigModel::new(&mut rng, spec);
+    // Sequential engine: the zero-alloc contract is per-worker; scoped
+    // thread spawns would show up as allocations.
+    model.engine.threads = 1;
+    let mut paths = Vec::with_capacity(b * (m + 1) * dim);
+    let mut targets = Vec::with_capacity(b);
+    for _ in 0..b {
+        paths.extend(rng.brownian_path(m, dim, 0.3));
+        targets.push(rng.gaussian());
+    }
+    // Two warm calls: the first sizes the TrainCache and fills the
+    // engine pools, the second proves they round-trip.
+    model.train_step(&paths, &targets, b);
+    model.train_step(&paths, &targets, b);
+    let calls = 5;
+    let before = alloc_count();
+    for _ in 0..calls {
+        std::hint::black_box(model.train_step(&paths, &targets, b));
+    }
+    let per_call = (alloc_count() - before) as f64 / calls as f64;
+    println!(
+        "# steady-state allocations per DeepSigModel::train_step call \
+         (dim={dim} N={depth} B={b} M={m}, sequential): {per_call}"
+    );
+    per_call
+}
+
 fn main() {
     let full = full();
+    let smoke = smoke();
     let cap_n = if full { 6 } else { 5 };
-    // The paper's Table-1 rows.
+    // The paper's Table-1 rows (a tiny sub-grid in --smoke mode).
     let mut rows: Vec<(usize, usize, usize, usize)> = Vec::new();
-    for n in 2..=cap_n.min(5) {
-        rows.push((32, 100, 6, n)); // depth sweep
-    }
-    for m in [50, 100, 200, 500, 1000] {
-        rows.push((64, m, 4, if full { 6 } else { 5 })); // seq-len sweep
-    }
-    for b in [1, 32, 64, if full { 128 } else { 96 }] {
-        rows.push((b, 200, 10, if full { 4 } else { 3 })); // batch sweep
+    if smoke {
+        rows.push((8, 10, 2, 2));
+        rows.push((16, 10, 3, 2));
+    } else {
+        for n in 2..=cap_n.min(5) {
+            rows.push((32, 100, 6, n)); // depth sweep
+        }
+        for m in [50, 100, 200, 500, 1000] {
+            rows.push((64, m, 4, if full { 6 } else { 5 })); // seq-len sweep
+        }
+        for b in [1, 32, 64, if full { 128 } else { 96 }] {
+            rows.push((b, 200, 10, if full { 4 } else { 3 })); // batch sweep
+        }
     }
 
     println!("# Table 1 — training-step (fwd+bwd) time and speedups");
     println!(
-        "{:>4} {:>5} {:>3} {:>2} {:>8} | {:>10} {:>10} {:>10} | {:>9} {:>9}",
-        "B", "M", "d", "N", "sig dim", "keras-sty", "pysig-sty", "pathsig", "vs keras", "vs pysig"
+        "{:>4} {:>5} {:>3} {:>2} {:>8} | {:>10} {:>10} {:>10} {:>10} | {:>9} {:>9}",
+        "B", "M", "d", "N", "sig dim", "keras-sty", "pysig-sty", "pathsig", "unfused", "vs keras", "vs pysig"
     );
 
     let mut rng = Rng::new(0x7AB1);
@@ -91,13 +212,21 @@ fn main() {
         }
         let grads: Vec<f64> = (0..b * dim).map(|_| rng.gaussian()).collect();
 
-        let ours = time_auto("pathsig", budget, || {
+        // Fused training step: one forward sweep feeds both outputs.
+        let mut sig_out = vec![0.0; b * dim];
+        let mut grad_out = vec![0.0; paths.len()];
+        let ours = timeit("pathsig (fused)", smoke, budget, || {
+            signature_and_backward_batch_into(&eng, &paths, &grads, b, &mut sig_out, &mut grad_out);
+            std::hint::black_box((&sig_out, &grad_out));
+        });
+        // Unfused reference: separate forward + backward passes.
+        let unfused = timeit("pathsig (two-pass)", smoke, budget, || {
             let sig = signature_batch(&eng, &paths, b);
             let g = sig_backward_batch(&eng, &paths, &grads, b);
             std::hint::black_box((sig, g));
         });
         let per = (m + 1) * d;
-        let keras = time_auto("keras", budget, || {
+        let keras = timeit("keras", smoke, budget, || {
             let outs = parallel_map(b, eng.threads, |k| {
                 matmul_style_train_step(
                     d,
@@ -108,7 +237,7 @@ fn main() {
             });
             std::hint::black_box(outs);
         });
-        let pysig = time_auto("pysig", budget, || {
+        let pysig = timeit("pysig", smoke, budget, || {
             let outs = parallel_map(b, 4, |k| {
                 pysig_style_train(
                     d,
@@ -123,7 +252,7 @@ fn main() {
         let sk = keras.median_s / ours.median_s;
         let sp = pysig.median_s / ours.median_s;
         println!(
-            "{:>4} {:>5} {:>3} {:>2} {:>8} | {:>10} {:>10} {:>10} | {:>8.2}x {:>8.2}x",
+            "{:>4} {:>5} {:>3} {:>2} {:>8} | {:>10} {:>10} {:>10} {:>10} | {:>8.2}x {:>8.2}x",
             b,
             m,
             d,
@@ -132,6 +261,7 @@ fn main() {
             Timing::fmt_secs(keras.median_s),
             Timing::fmt_secs(pysig.median_s),
             Timing::fmt_secs(ours.median_s),
+            Timing::fmt_secs(unfused.median_s),
             sk,
             sp
         );
@@ -142,6 +272,7 @@ fn main() {
             ("depth", Json::Num(n as f64)),
             ("sig_dim", Json::Num(dim as f64)),
             ("pathsig_s", Json::Num(ours.median_s)),
+            ("pathsig_unfused_s", Json::Num(unfused.median_s)),
             ("keras_style_s", Json::Num(keras.median_s)),
             ("pysig_style_s", Json::Num(pysig.median_s)),
             ("speedup_vs_keras", Json::Num(sk)),
@@ -149,5 +280,26 @@ fn main() {
         ]));
     }
     println!("\npaper medians: 7.9x vs keras_sig, 24.9x vs pySigLib (H200; shapes not absolutes expected to transfer)");
-    dump("table1_training", Json::Arr(out_rows));
+
+    let lane = lane_vs_scalar(smoke, budget);
+    let allocs = steady_state_allocs(smoke);
+
+    let mode = if smoke {
+        "smoke"
+    } else if full {
+        "full"
+    } else {
+        "default"
+    };
+    let artifact = Json::obj(vec![
+        ("bench", Json::Str("table1_training".into())),
+        ("mode", Json::Str(mode.into())),
+        ("rows", Json::Arr(out_rows)),
+        ("lane_vs_scalar", lane),
+        ("steady_state_allocs_per_call", Json::Num(allocs)),
+    ]);
+    dump("table1_training", artifact.clone());
+    if json_mode() {
+        dump_root("BENCH_table1.json", artifact);
+    }
 }

@@ -11,11 +11,22 @@
 
 use super::protocol::{Backend, Request, RequestOp};
 use crate::logsig::LogSigEngine;
-use crate::sig::{signature, signature_batch, windowed_signatures, SigEngine, Window};
+use crate::sig::{signature, signature_batch_into, windowed_signatures, SigEngine, Window};
 use crate::runtime::Runtime;
+use crate::util::pool::Pool;
 use crate::words::{WordSpec, WordTable};
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex, RwLock};
+
+/// Reusable flatten/output buffers for the stacked-batch execution
+/// path: the service keeps them pooled so steady-state batch requests
+/// re-use one allocation pair instead of flattening into a fresh
+/// vector per call.
+#[derive(Debug, Default)]
+struct BatchScratch {
+    flat: Vec<f64>,
+    out: Vec<f64>,
+}
 
 /// Cache key for an engine: alphabet size + projection description +
 /// depth. (`WordSpec::describe()` is injective enough for our spec set
@@ -75,6 +86,7 @@ fn spec_identity(spec: &WordSpec) -> String {
 pub struct SigService {
     engines: RwLock<HashMap<String, Arc<SigEngine>>>,
     logsig_engines: Mutex<HashMap<(usize, usize), Arc<LogSigEngine>>>,
+    batch_scratch: Pool<BatchScratch>,
     /// PJRT artifact runtime, if one was configured at boot.
     pub runtime: Option<Arc<Runtime>>,
     /// Shared metrics registry (also read by the server).
@@ -87,6 +99,7 @@ impl SigService {
         SigService {
             engines: RwLock::new(HashMap::new()),
             logsig_engines: Mutex::new(HashMap::new()),
+            batch_scratch: Pool::default(),
             runtime,
             metrics: Arc::new(super::Metrics::new()),
         }
@@ -211,8 +224,10 @@ impl SigService {
     /// Execute a stacked batch of same-config signature requests
     /// natively (lane-major kernel once the batch spans a lane block).
     /// `paths` must all have equal length; paths are borrowed, not
-    /// cloned, so the only copies are the stacking flatten and the
-    /// per-request response rows the wire protocol needs.
+    /// cloned, and the stacking flatten plus the batch output go
+    /// through pooled scratch buffers — in steady state the only
+    /// allocations left are the per-request response rows the wire
+    /// protocol needs.
     pub fn execute_native_batch(
         &self,
         dim: usize,
@@ -220,13 +235,22 @@ impl SigService {
         paths: &[&[f64]],
     ) -> Vec<Vec<f64>> {
         let eng = self.engine(dim, spec);
-        let flat: Vec<f64> = paths.iter().flat_map(|p| p.iter().copied()).collect();
-        let out = signature_batch(&eng, &flat, paths.len());
         let odim = eng.out_dim();
+        let mut scratch = self.batch_scratch.take_at_least(1);
+        let ws = &mut scratch[0];
+        ws.flat.clear();
+        for p in paths {
+            ws.flat.extend_from_slice(p);
+        }
+        ws.out.clear();
+        ws.out.resize(paths.len() * odim, 0.0);
+        signature_batch_into(&eng, &ws.flat, paths.len(), &mut ws.out);
         self.metrics
             .native_executions
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        out.chunks(odim).map(|c| c.to_vec()).collect()
+        let rows = ws.out.chunks(odim).map(|c| c.to_vec()).collect();
+        self.batch_scratch.put(scratch);
+        rows
     }
 
     /// Execute a stacked batch through a PJRT artifact, padding the

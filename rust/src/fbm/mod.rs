@@ -160,8 +160,19 @@ pub fn fbm_dataset(
 pub fn lead_lag(path: &[f64], d: usize) -> Vec<f64> {
     let m1 = path.len() / d;
     let m = m1 - 1;
+    let mut out = vec![0.0; (2 * m + 1) * 2 * d];
+    lead_lag_into(path, d, &mut out);
+    out
+}
+
+/// [`lead_lag`] writing into a caller-provided `(2M+1, 2d)` buffer —
+/// the zero-allocation variant used by the training hot path.
+pub fn lead_lag_into(path: &[f64], d: usize, out: &mut [f64]) {
+    let m1 = path.len() / d;
+    debug_assert_eq!(path.len(), m1 * d);
+    let m = m1 - 1;
     let d2 = 2 * d;
-    let mut out = vec![0.0; (2 * m + 1) * d2];
+    assert_eq!(out.len(), (2 * m + 1) * d2, "lead–lag buffer has wrong size");
     let pt = |j: usize| &path[j * d..(j + 1) * d];
     for k in 0..m {
         // X̂_{2k} = (X_k, X_k)
@@ -174,7 +185,6 @@ pub fn lead_lag(path: &[f64], d: usize) -> Vec<f64> {
     // X̂_{2M} = (X_M, X_M)
     out[(2 * m) * d2..(2 * m) * d2 + d].copy_from_slice(pt(m));
     out[(2 * m) * d2 + d..(2 * m + 1) * d2].copy_from_slice(pt(m));
-    out
 }
 
 #[cfg(test)]

@@ -15,11 +15,61 @@
 //! level-`N` slab dominates both work and memory (`d^N` of `D_sig`
 //! coefficients), so skipping its non-Lyndon part is where the paper's
 //! "log-signature 2–3× faster than signature" observation comes from.
+//!
+//! All entry points run on the `*_into` + workspace-pool discipline:
+//! scratch (closure state, dense power tensors, adjoint accumulators
+//! and the §4 backward workspace) lives in a pooled
+//! [`LogSigWorkspace`], so steady-state batch and gradient calls reuse
+//! buffers instead of reallocating the dense tensor chain per call.
 
-use crate::sig::{sig_forward_state, sig_backward, SigEngine};
+use crate::sig::{
+    forward_sweep_range, sig_backward_into, BackwardWorkspace, SigEngine,
+};
 use crate::tensor::{mul_adjoint, TruncTensor};
-use crate::util::threadpool::{parallel_fill_rows, parallel_map};
+use crate::util::pool::Pool;
+use crate::util::threadpool::{parallel_fill_rows, parallel_for_into};
 use crate::words::{lyndon_words, truncated_words, Word, WordTable};
+
+/// Reusable scratch for log-signature forward/backward calls. One per
+/// worker; engines cache them in a [`Pool`] so steady-state calls
+/// perform no tensor reallocation.
+#[derive(Debug)]
+pub struct LogSigWorkspace {
+    /// Closure state of the reduced signature engine.
+    state: Vec<f64>,
+    /// Step increment scratch for the forward sweep.
+    dx: Vec<f64>,
+    /// Dense `y = S - 1` truncated at depth `N-1`.
+    y: TruncTensor,
+    /// Dense powers `P_m = y^{⊗m}`, `m = 1..N-1`.
+    powers: Vec<TruncTensor>,
+    /// Dense truncated log `Σ c_m P_m` (forward outputs).
+    dense_log: TruncTensor,
+    /// Adjoint accumulators (backward).
+    g_y: TruncTensor,
+    g_powers: Vec<TruncTensor>,
+    g_state: Vec<f64>,
+    g_request: Vec<f64>,
+    /// §4 signature backward scratch.
+    bwd: BackwardWorkspace,
+}
+
+impl Default for LogSigWorkspace {
+    fn default() -> Self {
+        LogSigWorkspace {
+            state: Vec::new(),
+            dx: Vec::new(),
+            y: TruncTensor::zero(1, 0),
+            powers: Vec::new(),
+            dense_log: TruncTensor::zero(1, 0),
+            g_y: TruncTensor::zero(1, 0),
+            g_powers: Vec::new(),
+            g_state: Vec::new(),
+            g_request: Vec::new(),
+            bwd: BackwardWorkspace::default(),
+        }
+    }
+}
 
 /// Engine for Lyndon-basis log-signatures at depth `N`.
 #[derive(Clone, Debug)]
@@ -41,6 +91,8 @@ pub struct LogSigEngine {
     low_positions: Vec<(usize, usize)>,
     /// log-series coefficients c_m = (-1)^{m+1}/m.
     coef: Vec<f64>,
+    /// Pooled per-worker scratch (cloning an engine yields empty pools).
+    ws_pool: Pool<LogSigWorkspace>,
 }
 
 impl LogSigEngine {
@@ -104,6 +156,7 @@ impl LogSigEngine {
             top_state_idx,
             low_positions,
             coef,
+            ws_pool: Pool::default(),
         }
     }
 
@@ -112,29 +165,38 @@ impl LogSigEngine {
         self.lyndon.len()
     }
 
-    /// Forward intermediates retained for the backward pass.
-    fn forward_internal(&self, path: &[f64]) -> LogSigForward {
-        let state = sig_forward_state(&self.sig, path);
-        // Dense y = S - 1 at depth N-1 (scalar part zeroed).
-        let mut y = TruncTensor::zero(self.d, self.depth - 1);
+    /// Forward intermediates into the workspace: terminal closure state
+    /// (`ws.state`), dense `y = S - 1` at depth `N-1` and its powers —
+    /// allocation-free once the workspace is warm.
+    fn forward_internal(&self, path: &[f64], ws: &mut LogSigWorkspace) {
+        let d = self.sig.table.d;
+        assert!(path.len() % d == 0, "path length not divisible by d");
+        let m1 = path.len() / d;
+        assert!(m1 >= 1, "path needs at least one point");
+        forward_sweep_range(&self.sig, path, 0, m1 - 1, &mut ws.state, &mut ws.dx);
+        // Dense y = S - 1 at depth N-1 (scalar part zeroed). Dense
+        // words occupy state indices 1..=D_{N-1} in state order
+        // (level-major, lex) — exactly the flat layout.
+        ws.y.reset_zero(self.d, self.depth - 1);
         {
-            // Dense words occupy state indices 1..=D_{N-1} in state
-            // order (level-major, lex) — exactly the flat layout.
             let mut k = 1;
             for n in 1..self.depth {
                 for c in 0..self.d.pow(n as u32) {
-                    y.levels[n][c] = state[k];
+                    ws.y.levels[n][c] = ws.state[k];
                     k += 1;
                 }
             }
         }
         // Dense powers P_m = y^{⊗m}, m = 1..N-1 (depth N-1).
-        let mut powers = vec![y.clone()];
-        for _ in 2..self.depth {
-            let next = powers.last().unwrap().mul(&y);
-            powers.push(next);
+        let np = (self.depth - 1).max(1);
+        if ws.powers.len() != np {
+            ws.powers = (0..np).map(|_| TruncTensor::zero(1, 0)).collect();
         }
-        LogSigForward { state, y, powers }
+        ws.powers[0].copy_from(&ws.y);
+        for m in 2..self.depth {
+            let (head, tail) = ws.powers.split_at_mut(m - 1);
+            tail[0].mul_into(&head[m - 2], &ws.y);
+        }
     }
 
     /// The log-signature in the Lyndon basis: coefficients of
@@ -154,40 +216,59 @@ impl LogSigEngine {
     /// assert!(out[2..].iter().all(|x| x.abs() < 1e-12));
     /// ```
     pub fn logsig(&self, path: &[f64]) -> Vec<f64> {
-        let fwd = self.forward_internal(path);
-        self.outputs_from(&fwd)
+        let mut out = vec![0.0; self.out_dim()];
+        let mut workers = self.ws_pool.take_at_least(1);
+        // A standalone single-path call is the one place the level-N
+        // Lyndon slab (the dominant cost) can use the whole pool, so
+        // spread the top-word loop across the engine's threads; the
+        // per-worker `logsig_into` stays sequential and allocation-free.
+        self.forward_internal(path, &mut workers[0]);
+        self.outputs_from(&mut workers[0], &mut out, self.sig.threads);
+        self.ws_pool.put(workers);
+        out
     }
 
-    fn outputs_from(&self, fwd: &LogSigForward) -> Vec<f64> {
+    /// [`LogSigEngine::logsig`] with caller-provided workspace and
+    /// output row (`out.len() == out_dim()`) — the zero-allocation
+    /// per-worker hot path (sequential inside; batch entry points
+    /// parallelise over paths instead).
+    pub fn logsig_into(&self, path: &[f64], ws: &mut LogSigWorkspace, out: &mut [f64]) {
+        assert_eq!(out.len(), self.out_dim(), "output buffer has wrong size");
+        self.forward_internal(path, ws);
+        self.outputs_from(ws, out, 1);
+    }
+
+    fn outputs_from(&self, ws: &mut LogSigWorkspace, out: &mut [f64], threads: usize) {
         let n = self.depth;
         // Dense log at depth N-1: Σ c_m P_m.
-        let mut dense_log = TruncTensor::zero(self.d, n - 1);
-        for (m, p) in fwd.powers.iter().enumerate() {
+        ws.dense_log.reset_zero(self.d, n - 1);
+        for (m, p) in ws.powers.iter().enumerate() {
             let c = self.coef[m + 1];
             for lvl in 1..n {
-                for (o, v) in dense_log.levels[lvl].iter_mut().zip(&p.levels[lvl]) {
+                for (o, v) in ws.dense_log.levels[lvl].iter_mut().zip(&p.levels[lvl]) {
                     *o += c * v;
                 }
             }
         }
-        let mut out = Vec::with_capacity(self.out_dim());
-        for &(lvl, code) in &self.low_positions {
-            out.push(dense_log.levels[lvl][code]);
+        for (o, &(lvl, code)) in out.iter_mut().zip(&self.low_positions) {
+            *o = ws.dense_log.levels[lvl][code];
         }
         // Top level: log_N(w) = c_1·S_N(w) + Σ_{m=2}^{N} c_m·(y^m)_N(w),
         // (y^m)_N(w) = Σ_{k} (y^{m-1})_k(w_[k]) · y_{N-k}(suffix_k).
+        // One unit per top word; `threads == 1` runs inline with no
+        // spawn and no allocation (`parallel_fill_rows` fast path).
+        let n_low = self.low_positions.len();
         let top_words = self.top_words();
-        let tops: Vec<f64> = parallel_map(top_words.len(), self.sig.threads, |wi| {
+        let (powers, y, state) = (&ws.powers, &ws.y, &ws.state);
+        parallel_fill_rows(&mut out[n_low..], 1, threads, |wi, slot| {
             let w = &top_words[wi];
-            let s_top = fwd.state[self.top_state_idx[wi]];
+            let s_top = state[self.top_state_idx[wi]];
             let mut acc = self.coef[1] * s_top;
             for m in 2..=n {
-                acc += self.coef[m] * self.power_top_coeff(&fwd.powers, &fwd.y, w, m);
+                acc += self.coef[m] * self.power_top_coeff(powers, y, w, m);
             }
-            acc
+            slot[0] = acc;
         });
-        out.extend(tops);
-        out
     }
 
     /// Level-`N` Lyndon words (the top slab of the output).
@@ -220,71 +301,106 @@ impl LogSigEngine {
     /// Batched log-signatures: `(B, M+1, d)` → `(B, out_dim)`. Rows are
     /// written straight into the output buffer (no post-join copy).
     pub fn logsig_batch(&self, paths: &[f64], batch: usize) -> Vec<f64> {
+        let mut out = vec![0.0; batch * self.out_dim()];
+        self.logsig_batch_into(paths, batch, &mut out);
+        out
+    }
+
+    /// [`LogSigEngine::logsig_batch`] writing into a caller-provided
+    /// `(B, out_dim)` buffer with pooled per-worker workspaces — zero
+    /// tensor churn in steady state.
+    pub fn logsig_batch_into(&self, paths: &[f64], batch: usize, out: &mut [f64]) {
+        assert!(batch > 0);
+        assert_eq!(paths.len() % batch, 0);
         let per = paths.len() / batch;
         let odim = self.out_dim();
-        let mut out = vec![0.0; batch * odim];
-        parallel_fill_rows(&mut out, odim, self.sig.threads, |b, row| {
-            row.copy_from_slice(&self.logsig(&paths[b * per..(b + 1) * per]));
+        assert_eq!(out.len(), batch * odim, "output buffer has wrong size");
+        let nw = self.sig.threads.min(batch).max(1);
+        let mut workers = self.ws_pool.take_at_least(nw);
+        parallel_for_into(out, odim, &mut workers[..nw], |b, row, ws| {
+            self.logsig_into(&paths[b * per..(b + 1) * per], ws, row);
         });
-        out
+        self.ws_pool.put(workers);
     }
 
     /// Backward pass: cotangents on the Lyndon outputs → path gradient
     /// `(M+1, d)`. Reverse-mode through the truncated log series, then
     /// through the signature engine (§4).
     pub fn logsig_backward(&self, path: &[f64], grad_out: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; path.len()];
+        let mut workers = self.ws_pool.take_at_least(1);
+        self.logsig_backward_into(path, grad_out, &mut workers[0], &mut out);
+        self.ws_pool.put(workers);
+        out
+    }
+
+    /// [`LogSigEngine::logsig_backward`] with caller-provided workspace
+    /// and output buffer (`out.len() == path.len()`) — the
+    /// zero-allocation gradient path (the dense adjoint tensors and the
+    /// §4 backward workspace are all recycled).
+    pub fn logsig_backward_into(
+        &self,
+        path: &[f64],
+        grad_out: &[f64],
+        ws: &mut LogSigWorkspace,
+        out: &mut [f64],
+    ) {
         assert_eq!(grad_out.len(), self.out_dim());
+        assert_eq!(out.len(), path.len(), "gradient buffer has wrong size");
         let n = self.depth;
-        let fwd = self.forward_internal(path);
+        self.forward_internal(path, ws);
 
         // --- adjoint accumulators ---
-        let mut g_y = TruncTensor::zero(self.d, n - 1);
-        let mut g_powers: Vec<TruncTensor> = (0..n - 1)
-            .map(|_| TruncTensor::zero(self.d, n - 1))
-            .collect();
+        ws.g_y.reset_zero(self.d, n - 1);
+        if ws.g_powers.len() != n - 1 {
+            ws.g_powers = (0..n - 1).map(|_| TruncTensor::zero(1, 0)).collect();
+        }
+        for gp in &mut ws.g_powers {
+            gp.reset_zero(self.d, n - 1);
+        }
         // Gradient wrt signature state (closure layout).
-        let mut g_state = vec![0.0; fwd.state.len()];
+        ws.g_state.clear();
+        ws.g_state.resize(ws.state.len(), 0.0);
 
         // (1) dense Lyndon outputs: dense_log = Σ c_m P_m.
         let n_low = self.low_positions.len();
         for (oi, &(lvl, code)) in self.low_positions.iter().enumerate() {
             let g = grad_out[oi];
-            for (m, gp) in g_powers.iter_mut().enumerate() {
+            for (m, gp) in ws.g_powers.iter_mut().enumerate() {
                 gp.levels[lvl][code] += self.coef[m + 1] * g;
             }
         }
         // (2) top-level outputs.
-        let top_words: Vec<Word> = self.top_words().to_vec();
-        for (wi, w) in top_words.iter().enumerate() {
+        for (wi, w) in self.top_words().iter().enumerate() {
             let g = grad_out[n_low + wi];
             if g == 0.0 {
                 continue;
             }
-            g_state[self.top_state_idx[wi]] += self.coef[1] * g;
+            ws.g_state[self.top_state_idx[wi]] += self.coef[1] * g;
             for m in 2..=n {
                 let c = self.coef[m] * g;
                 for k in (m - 1).max(1)..n {
                     let pk = crate::words::encode::word_code(&w.0[..k], self.d) as usize;
                     let sk = crate::words::encode::word_code(&w.0[k..], self.d) as usize;
-                    let a = fwd.powers[m - 2].levels[k][pk];
-                    let b = fwd.y.levels[n - k][sk];
-                    g_powers[m - 2].levels[k][pk] += c * b;
-                    g_y.levels[n - k][sk] += c * a;
+                    let a = ws.powers[m - 2].levels[k][pk];
+                    let b = ws.y.levels[n - k][sk];
+                    ws.g_powers[m - 2].levels[k][pk] += c * b;
+                    ws.g_y.levels[n - k][sk] += c * a;
                 }
             }
         }
         // (3) reverse the power chain P_m = P_{m-1} ⊗ y.
         for m in (2..n).rev() {
             // C = A ⊗ B adjoint: Â(u) += Ĉ(u∘v)·B(v), B̂(v) += A(u)·Ĉ(u∘v).
-            let (head, tail) = g_powers.split_at_mut(m - 1);
+            let (head, tail) = ws.g_powers.split_at_mut(m - 1);
             let gc = &tail[0]; // grad of P_m (index m-1)
             let ga = &mut head[m - 2]; // grad of P_{m-1}
-            mul_adjoint(&fwd.powers[m - 2], &fwd.y, gc, ga, &mut g_y);
+            mul_adjoint(&ws.powers[m - 2], &ws.y, gc, ga, &mut ws.g_y);
         }
         // grad of P_1 = y flows straight into g_y.
         if n > 1 {
             for lvl in 1..n {
-                for (gy, gp) in g_y.levels[lvl].iter_mut().zip(&g_powers[0].levels[lvl]) {
+                for (gy, gp) in ws.g_y.levels[lvl].iter_mut().zip(&ws.g_powers[0].levels[lvl]) {
                     *gy += gp;
                 }
             }
@@ -294,7 +410,7 @@ impl LogSigEngine {
             let mut k = 1;
             for lvl in 1..n {
                 for c in 0..self.d.pow(lvl as u32) {
-                    g_state[k] += g_y.levels[lvl][c];
+                    ws.g_state[k] += ws.g_y.levels[lvl][c];
                     k += 1;
                 }
             }
@@ -302,27 +418,17 @@ impl LogSigEngine {
         // (5) signature backward. g_state is in closure-state layout;
         // requested order = dense words then top Lyndon words, and
         // state indices 1.. match that order exactly.
-        let g_request: Vec<f64> = self
-            .sig
-            .table
-            .output_map
-            .iter()
-            .map(|&i| g_state[i as usize])
-            .collect();
-        sig_backward(&self.sig, path, &g_request)
+        ws.g_request.clear();
+        ws.g_request
+            .extend(self.sig.table.output_map.iter().map(|&i| ws.g_state[i as usize]));
+        sig_backward_into(&self.sig, path, &ws.g_request, &mut ws.bwd, out);
     }
-}
-
-struct LogSigForward {
-    state: Vec<f64>,
-    y: TruncTensor,
-    powers: Vec<TruncTensor>,
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sig::signature;
+    use crate::sig::{sig_forward_state, signature};
     use crate::tensor::tensor_log_series;
     use crate::util::proptest::assert_allclose;
     use crate::util::rng::Rng;
@@ -357,6 +463,27 @@ mod tests {
             let want = oracle_logsig(d, n, &path);
             assert_allclose(&got, &want, 1e-11, 1e-9, &format!("logsig d={d} n={n}"));
         }
+    }
+
+    #[test]
+    fn workspace_reuse_is_deterministic() {
+        // The same workspace must give identical results across calls
+        // with different shapes (tensor reset, not stale state).
+        let mut rng = Rng::new(403);
+        let eng3 = LogSigEngine::new(2, 3);
+        let eng4 = LogSigEngine::new(2, 4);
+        let mut ws = LogSigWorkspace::default();
+        let p1 = rng.brownian_path(6, 2, 0.5);
+        let p2 = rng.brownian_path(9, 2, 0.5);
+        let mut a = vec![0.0; eng3.out_dim()];
+        eng3.logsig_into(&p1, &mut ws, &mut a);
+        // Interleave a different engine/shape through the same workspace.
+        let mut b = vec![0.0; eng4.out_dim()];
+        eng4.logsig_into(&p2, &mut ws, &mut b);
+        let mut a2 = vec![0.0; eng3.out_dim()];
+        eng3.logsig_into(&p1, &mut ws, &mut a2);
+        assert_eq!(a, a2, "workspace reuse changed the result");
+        assert_eq!(b, eng4.logsig(&p2), "fresh vs reused workspace");
     }
 
     #[test]
@@ -418,6 +545,19 @@ mod tests {
     }
 
     #[test]
+    fn depth_one_roundtrip() {
+        // Degenerate depth: log-sig = level-1 increments; backward is
+        // the endpoint indicator (exercises the empty power chain).
+        let eng = LogSigEngine::new(2, 1);
+        let path = [0.0, 0.0, 1.0, -2.0, 3.0, 0.5];
+        let out = eng.logsig(&path);
+        assert_allclose(&out, &[3.0, 0.5], 1e-13, 0.0, "depth-1 logsig");
+        let grad = eng.logsig_backward(&path, &[1.0, 0.0]);
+        let want = [-1.0, 0.0, 0.0, 0.0, 1.0, 0.0];
+        assert_allclose(&grad, &want, 1e-13, 0.0, "depth-1 grad");
+    }
+
+    #[test]
     fn batch_matches_single() {
         let mut rng = Rng::new(402);
         let eng = LogSigEngine::new(2, 3);
@@ -439,5 +579,20 @@ mod tests {
                 "row",
             );
         }
+    }
+
+    // sig_forward_state is still exercised through the public oracle
+    // path below (kept from the pre-workspace implementation).
+    #[test]
+    fn forward_state_matches_reduced_projection() {
+        let mut rng = Rng::new(404);
+        let eng = LogSigEngine::new(3, 3);
+        let path = rng.brownian_path(5, 3, 0.5);
+        let state = sig_forward_state(&eng.sig, &path);
+        let mut ws = LogSigWorkspace::default();
+        let mut out = vec![0.0; eng.out_dim()];
+        eng.logsig_into(&path, &mut ws, &mut out);
+        // The workspace's state buffer must equal the standalone sweep.
+        assert_eq!(ws.state, state);
     }
 }

@@ -2,9 +2,15 @@
 //!
 //! `X (B, M+1, dim) → φ_θ (pointwise linear) → lead–lag → π_I(S(·)) →
 //! MLP head → Ĥ`, trained end-to-end with Adam. The signature layer
-//! backpropagates with the §4 memory-minimal backward
-//! ([`crate::sig::sig_backward`]), the lead–lag transform with its exact
-//! adjoint, and `φ_θ` as a shared-weights dense layer over time.
+//! backpropagates with the §4 memory-minimal backward — batched through
+//! the lane-major kernel ([`crate::sig::sig_backward_batch_into`]) —
+//! the lead–lag transform with its exact adjoint, and `φ_θ` as a
+//! shared-weights dense layer over time.
+//!
+//! [`DeepSigModel::train_step`] runs entirely on `*_into` entry points
+//! against a model-owned [`TrainCache`], so a steady-state training
+//! step performs **zero heap allocations** (verified by the counting
+//! allocator in `benches/table1_training.rs`).
 //!
 //! Three Figure-4 variants are expressible:
 //! * FNN baseline — use [`crate::nn::Mlp`] on the flattened path;
@@ -12,11 +18,14 @@
 //! * sparse lead–lag projection —
 //!   `spec.words = concat_generated_words(2·dim, N, sparse_leadlag_generators(dim))`.
 
-use super::{adam_update, mse_loss, relu, relu_backward, Linear};
-use crate::fbm::lead_lag;
-use crate::sig::{sig_backward, signature, SigEngine};
+use super::{adam_update, mse_loss, mse_loss_into, relu, relu_backward, relu_masked, Linear};
+use crate::fbm::lead_lag_into;
+use crate::sig::{
+    sig_backward_batch_from_states_into, signature_batch_into, signature_batch_states_into,
+    SigEngine,
+};
 use crate::util::rng::Rng;
-use crate::util::threadpool::{parallel_fill_rows, parallel_map};
+use crate::util::threadpool::parallel_fill_rows;
 use crate::words::{Word, WordTable};
 
 /// Model hyper-parameters.
@@ -32,6 +41,48 @@ pub struct DeepSigSpec {
     pub lr: f64,
 }
 
+/// Reusable buffers making steady-state [`DeepSigModel::train_step`]
+/// allocation-free. Every `Vec` is `clear()` + `resize()`d per call —
+/// free once capacity is warm — and the per-layer vectors are built
+/// once on the first step.
+#[derive(Debug, Default)]
+struct TrainCache {
+    /// φ output, `(B, M+1, dim)`.
+    mapped: Vec<f64>,
+    /// Lead–lag paths, `(B, 2M+1, 2·dim)`.
+    lls: Vec<f64>,
+    /// Signature features, `(B, |I|)` — input to the head.
+    feats: Vec<f64>,
+    /// Terminal closure states, `(B, state_len)` — cached by the
+    /// forward so the signature backward skips its forward sweep
+    /// (`O(B·D_sig)` memory, the paper's Table-2 envelope).
+    states: Vec<f64>,
+    /// Per-head-layer outputs (post-activation).
+    acts: Vec<Vec<f64>>,
+    /// Hidden-layer ReLU masks.
+    masks: Vec<Vec<bool>>,
+    /// Ping-pong cotangent buffers for the head backward.
+    g_a: Vec<f64>,
+    g_b: Vec<f64>,
+    /// Cotangents on the lead–lag paths, `(B, 2M+1, 2·dim)`.
+    g_ll: Vec<f64>,
+    /// Cotangents on the φ output, `(B, M+1, dim)`.
+    path_grads: Vec<f64>,
+    /// Per-head-layer weight/bias gradients.
+    gw: Vec<Vec<f64>>,
+    gb: Vec<Vec<f64>>,
+    /// φ gradients.
+    g_phi_w: Vec<f64>,
+    g_phi_b: Vec<f64>,
+}
+
+/// `v.clear(); v.resize(n, 0.0)` — zeroed and sized, allocation-free
+/// within capacity.
+fn fit(v: &mut Vec<f64>, n: usize) {
+    v.clear();
+    v.resize(n, 0.0);
+}
+
 /// Deep signature model with learnable channel map and dense head.
 pub struct DeepSigModel {
     /// The hyper-parameters the model was built from.
@@ -43,6 +94,7 @@ pub struct DeepSigModel {
     /// Dense head on the signature features.
     pub head: Vec<Linear>,
     step: usize,
+    cache: TrainCache,
 }
 
 impl DeepSigModel {
@@ -67,6 +119,7 @@ impl DeepSigModel {
             engine,
             head,
             step: 0,
+            cache: TrainCache::default(),
         }
     }
 
@@ -80,19 +133,22 @@ impl DeepSigModel {
         self.phi.n_params() + self.head.iter().map(|l| l.n_params()).sum::<usize>()
     }
 
-    /// Signature features for a batch of paths (φ + lead–lag + sig).
-    /// Feature rows are written in place (no post-join copy).
+    /// Signature features for a batch of paths (φ + lead–lag + sig),
+    /// batched through the lane-major forward kernel.
     pub fn features(&self, paths: &[f64], batch: usize) -> Vec<f64> {
         let per = paths.len() / batch;
         let m1 = per / self.spec.dim;
         let fdim = self.feature_dim();
         let mut out = vec![0.0; batch * fdim];
-        parallel_fill_rows(&mut out, fdim, self.engine.threads, |b, row| {
-            let path = &paths[b * per..(b + 1) * per];
-            let mapped = self.phi.forward(path, m1); // pointwise over time
-            let ll = lead_lag(&mapped, self.spec.dim);
-            row.copy_from_slice(&signature(&self.engine, &ll));
+        let ll_len = (2 * (m1 - 1) + 1) * 2 * self.spec.dim;
+        let mut lls = vec![0.0; batch * ll_len];
+        let phi = &self.phi;
+        let dim = self.spec.dim;
+        parallel_fill_rows(&mut lls, ll_len, self.engine.threads, |b, row| {
+            let mapped = phi.forward(&paths[b * per..(b + 1) * per], m1);
+            lead_lag_into(&mapped, dim, row);
         });
+        signature_batch_into(&self.engine, &lls, batch, &mut out);
         out
     }
 
@@ -124,77 +180,142 @@ impl DeepSigModel {
     }
 
     /// One end-to-end Adam step; returns the training loss.
+    ///
+    /// Forward features and the §4 signature backward both run through
+    /// the lane-major batch kernels; every intermediate lives in the
+    /// model-owned [`TrainCache`], so with a warm cache (and a
+    /// sequential engine) the step allocates nothing.
     pub fn train_step(&mut self, paths: &[f64], targets: &[f64], batch: usize) -> f64 {
         self.step += 1;
+        let step = self.step;
+        let DeepSigModel {
+            spec,
+            phi,
+            engine,
+            head,
+            cache,
+            ..
+        } = self;
         let per = paths.len() / batch;
-        let m1 = per / self.spec.dim;
-        let dim = self.spec.dim;
+        let dim = spec.dim;
+        let m1 = per / dim;
+        let ll_len = (2 * (m1 - 1) + 1) * 2 * dim;
+        let fdim = engine.out_dim();
+        let n_layers = head.len();
 
-        // Forward with caches (per-path φ outputs + lead–lag paths).
-        let mapped: Vec<Vec<f64>> = parallel_map(batch, self.engine.threads, |b| {
-            self.phi.forward(&paths[b * per..(b + 1) * per], m1)
+        // (1) φ pointwise over time, rows in place.
+        fit(&mut cache.mapped, batch * per);
+        parallel_fill_rows(&mut cache.mapped, per, engine.threads, |b, row| {
+            phi.forward_into(&paths[b * per..(b + 1) * per], m1, row);
         });
-        let lls: Vec<Vec<f64>> = parallel_map(batch, self.engine.threads, |b| {
-            lead_lag(&mapped[b], dim)
-        });
-        let feat_dim = self.feature_dim();
-        let feats_rows: Vec<Vec<f64>> = parallel_map(batch, self.engine.threads, |b| {
-            signature(&self.engine, &lls[b])
-        });
-        let mut feats = Vec::with_capacity(batch * feat_dim);
-        for r in &feats_rows {
-            feats.extend_from_slice(r);
+
+        // (2) lead–lag per path.
+        fit(&mut cache.lls, batch * ll_len);
+        {
+            let mapped = &cache.mapped;
+            parallel_fill_rows(&mut cache.lls, ll_len, engine.threads, |b, row| {
+                lead_lag_into(&mapped[b * per..(b + 1) * per], dim, row);
+            });
         }
-        let (pred, inputs, masks) = self.head_forward(&feats, batch);
-        let (loss, gpred) = mse_loss(&pred, targets);
 
-        // Head backward.
-        let mut grads: Vec<(Vec<f64>, Vec<f64>)> = self
-            .head
-            .iter()
-            .map(|l| (vec![0.0; l.w.len()], vec![0.0; l.b.len()]))
-            .collect();
-        let mut g = gpred;
-        for li in (0..self.head.len()).rev() {
-            if li + 1 < self.head.len() {
-                relu_backward(&mut g, &masks[li]);
+        // (3) signature features, lane-major batched forward — also
+        // caching each path's terminal closure state so step (6) can
+        // start its reverse reconstruction without a second forward.
+        fit(&mut cache.feats, batch * fdim);
+        fit(&mut cache.states, batch * engine.state_len());
+        signature_batch_states_into(engine, &cache.lls, batch, &mut cache.feats, &mut cache.states);
+
+        // (4) head forward with cached activations.
+        if cache.acts.len() != n_layers {
+            cache.acts = (0..n_layers).map(|_| Vec::new()).collect();
+        }
+        if cache.masks.len() != n_layers.saturating_sub(1) {
+            cache.masks = (0..n_layers.saturating_sub(1)).map(|_| Vec::new()).collect();
+        }
+        for li in 0..n_layers {
+            let (prev, rest) = cache.acts.split_at_mut(li);
+            let out = &mut rest[0];
+            fit(out, batch * head[li].n_out);
+            let input: &[f64] = if li == 0 { &cache.feats } else { &prev[li - 1] };
+            head[li].forward_into(input, batch, out);
+            if li + 1 < n_layers {
+                relu_masked(out, &mut cache.masks[li]);
             }
-            let (gw, gb) = &mut grads[li];
-            g = self.head[li].backward(&inputs[li], &g, batch, gw, gb);
         }
-        // g is now ∂L/∂features (B, feat_dim).
+        let pred = &cache.acts[n_layers - 1];
+        fit(&mut cache.g_a, pred.len());
+        let loss = mse_loss_into(pred, targets, &mut cache.g_a);
 
-        // Signature backward + lead–lag adjoint + φ backward, per path.
-        let g_ref = &g;
-        let path_grads: Vec<Vec<f64>> = parallel_map(batch, self.engine.threads, |b| {
-            let g_ll = sig_backward(
-                &self.engine,
-                &lls[b],
-                &g_ref[b * feat_dim..(b + 1) * feat_dim],
-            );
-            lead_lag_adjoint(&g_ll, dim, m1)
-        });
-        // φ backward (shared weights across time and batch).
-        let mut g_phi_w = vec![0.0; self.phi.w.len()];
-        let mut g_phi_b = vec![0.0; self.phi.b.len()];
+        // (5) head backward, ping-ponging the cotangent buffers.
+        if cache.gw.len() != n_layers {
+            cache.gw = head.iter().map(|l| vec![0.0; l.w.len()]).collect();
+            cache.gb = head.iter().map(|l| vec![0.0; l.b.len()]).collect();
+        }
+        for (gw, gb) in cache.gw.iter_mut().zip(cache.gb.iter_mut()) {
+            gw.fill(0.0);
+            gb.fill(0.0);
+        }
+        {
+            let mut cur = &mut cache.g_a;
+            let mut nxt = &mut cache.g_b;
+            for li in (0..n_layers).rev() {
+                if li + 1 < n_layers {
+                    relu_backward(cur, &cache.masks[li]);
+                }
+                let input: &[f64] = if li == 0 { &cache.feats } else { &cache.acts[li - 1] };
+                fit(nxt, batch * head[li].n_in);
+                head[li].backward_into(input, cur, batch, &mut cache.gw[li], &mut cache.gb[li], nxt);
+                std::mem::swap(&mut cur, &mut nxt);
+            }
+        }
+        // After the swap at li = 0, `cache.g_a` xor `cache.g_b` holds
+        // ∂L/∂features — track which via parity of the layer count.
+        let g_feats: &[f64] = if n_layers % 2 == 0 { &cache.g_a } else { &cache.g_b };
+        debug_assert_eq!(g_feats.len(), batch * fdim);
+
+        // (6) signature backward, lane-major batched (§4), resuming
+        // from the terminal states cached in step (3) — one forward
+        // pass per training step in total.
+        fit(&mut cache.g_ll, batch * ll_len);
+        sig_backward_batch_from_states_into(
+            engine,
+            &cache.lls,
+            &cache.states,
+            g_feats,
+            batch,
+            &mut cache.g_ll,
+        );
+
+        // (7) lead–lag adjoint per path.
+        fit(&mut cache.path_grads, batch * per);
+        {
+            let g_ll = &cache.g_ll;
+            parallel_fill_rows(&mut cache.path_grads, per, engine.threads, |b, row| {
+                lead_lag_adjoint_into(&g_ll[b * ll_len..(b + 1) * ll_len], dim, m1, row);
+            });
+        }
+
+        // (8) φ backward (shared weights across time and batch; the
+        // raw path is a leaf, so only parameter grads are needed).
+        fit(&mut cache.g_phi_w, phi.w.len());
+        fit(&mut cache.g_phi_b, phi.b.len());
         for b in 0..batch {
-            self.phi.backward(
+            phi.backward_params(
                 &paths[b * per..(b + 1) * per],
-                &path_grads[b],
+                &cache.path_grads[b * per..(b + 1) * per],
                 m1,
-                &mut g_phi_w,
-                &mut g_phi_b,
+                &mut cache.g_phi_w,
+                &mut cache.g_phi_b,
             );
         }
 
-        // Adam updates.
-        for (li, (gw, gb)) in grads.iter().enumerate() {
-            self.head[li].adam_step(gw, gb, self.spec.lr, self.step);
+        // (9) Adam updates.
+        for (li, layer) in head.iter_mut().enumerate() {
+            layer.adam_step(&cache.gw[li], &cache.gb[li], spec.lr, step);
         }
-        let lr = self.spec.lr;
-        let st = self.step;
-        adam_update(&mut self.phi.w, &mut self.phi.mw, &mut self.phi.vw, &g_phi_w, lr, st);
-        adam_update(&mut self.phi.b, &mut self.phi.mb, &mut self.phi.vb, &g_phi_b, lr, st);
+        let lr = spec.lr;
+        adam_update(&mut phi.w, &mut phi.mw, &mut phi.vw, &cache.g_phi_w, lr, step);
+        adam_update(&mut phi.b, &mut phi.mb, &mut phi.vb, &cache.g_phi_b, lr, step);
         loss
     }
 }
@@ -202,10 +323,19 @@ impl DeepSigModel {
 /// Adjoint of the lead–lag transform: gradient on the `(2M+1, 2d)`
 /// lead–lag path → gradient on the `(M+1, d)` base path.
 pub fn lead_lag_adjoint(g_ll: &[f64], d: usize, m1: usize) -> Vec<f64> {
+    let mut g = vec![0.0; m1 * d];
+    lead_lag_adjoint_into(g_ll, d, m1, &mut g);
+    g
+}
+
+/// [`lead_lag_adjoint`] writing into a caller-provided `(M+1, d)`
+/// buffer (overwritten).
+pub fn lead_lag_adjoint_into(g_ll: &[f64], d: usize, m1: usize, g: &mut [f64]) {
     let m = m1 - 1;
     let d2 = 2 * d;
     debug_assert_eq!(g_ll.len(), (2 * m + 1) * d2);
-    let mut g = vec![0.0; m1 * d];
+    assert_eq!(g.len(), m1 * d, "adjoint buffer has wrong size");
+    g.fill(0.0);
     let mut add = |k: usize, half: usize, row: usize| {
         for i in 0..d {
             g[k * d + i] += g_ll[row * d2 + half * d + i];
@@ -219,7 +349,6 @@ pub fn lead_lag_adjoint(g_ll: &[f64], d: usize, m1: usize) -> Vec<f64> {
     }
     add(m, 0, 2 * m);
     add(m, 1, 2 * m);
-    g
 }
 
 #[cfg(test)]
@@ -276,6 +405,29 @@ mod tests {
         }
         assert!(improved > 15, "training not descending ({improved}/30)");
         assert!(prev < base, "loss did not improve: {base} → {prev}");
+    }
+
+    #[test]
+    fn train_step_batch_wider_than_lanes() {
+        // Engage the lane-major forward *and* backward inside the
+        // training step (B > L) and check the loss still descends.
+        let mut rng = Rng::new(803);
+        let dim = 2;
+        let spec = DeepSigSpec {
+            dim,
+            words: truncated_words(2 * dim, 2),
+            hidden: vec![8],
+            lr: 1e-3,
+        };
+        let mut model = DeepSigModel::new(&mut rng, spec);
+        let b = model.engine.lanes() + 3;
+        let (paths, hs) = fbm_dataset(&mut rng, b, 8, dim, 0.3, 0.7);
+        let base = model.mse(&paths, &hs, b);
+        for _ in 0..25 {
+            model.train_step(&paths, &hs, b);
+        }
+        let after = model.mse(&paths, &hs, b);
+        assert!(after < base, "loss did not improve: {base} → {after}");
     }
 
     #[test]

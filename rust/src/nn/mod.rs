@@ -60,6 +60,16 @@ impl Linear {
     /// Forward for a batch: `x (B, n_in)` → `y (B, n_out)`.
     pub fn forward(&self, x: &[f64], batch: usize) -> Vec<f64> {
         let mut y = vec![0.0; batch * self.n_out];
+        self.forward_into(x, batch, &mut y);
+        y
+    }
+
+    /// [`Linear::forward`] writing into a caller-provided `(B, n_out)`
+    /// buffer — the zero-allocation variant used by the training hot
+    /// path.
+    pub fn forward_into(&self, x: &[f64], batch: usize, y: &mut [f64]) {
+        assert_eq!(x.len(), batch * self.n_in, "input has wrong size");
+        assert_eq!(y.len(), batch * self.n_out, "output buffer has wrong size");
         for b in 0..batch {
             let xr = &x[b * self.n_in..(b + 1) * self.n_in];
             let yr = &mut y[b * self.n_out..(b + 1) * self.n_out];
@@ -72,7 +82,6 @@ impl Linear {
                 yr[o] = acc;
             }
         }
-        y
     }
 
     /// Backward: given `gy (B, n_out)` and the stored input `x`,
@@ -86,6 +95,24 @@ impl Linear {
         gb: &mut [f64],
     ) -> Vec<f64> {
         let mut gx = vec![0.0; batch * self.n_in];
+        self.backward_into(x, gy, batch, gw, gb, &mut gx);
+        gx
+    }
+
+    /// [`Linear::backward`] writing the input gradient into a
+    /// caller-provided `(B, n_in)` buffer (overwritten, not
+    /// accumulated). Weight/bias grads accumulate as before.
+    pub fn backward_into(
+        &self,
+        x: &[f64],
+        gy: &[f64],
+        batch: usize,
+        gw: &mut [f64],
+        gb: &mut [f64],
+        gx: &mut [f64],
+    ) {
+        assert_eq!(gx.len(), batch * self.n_in, "gx buffer has wrong size");
+        gx.fill(0.0);
         for b in 0..batch {
             let xr = &x[b * self.n_in..(b + 1) * self.n_in];
             let gyr = &gy[b * self.n_out..(b + 1) * self.n_out];
@@ -104,7 +131,34 @@ impl Linear {
                 }
             }
         }
-        gx
+    }
+
+    /// Parameter-gradient-only backward: accumulate `gw`/`gb` without
+    /// producing the input gradient (used when `x` is a leaf, e.g. the
+    /// raw path feeding `φ_θ`).
+    pub fn backward_params(
+        &self,
+        x: &[f64],
+        gy: &[f64],
+        batch: usize,
+        gw: &mut [f64],
+        gb: &mut [f64],
+    ) {
+        for b in 0..batch {
+            let xr = &x[b * self.n_in..(b + 1) * self.n_in];
+            let gyr = &gy[b * self.n_out..(b + 1) * self.n_out];
+            for o in 0..self.n_out {
+                let g = gyr[o];
+                if g == 0.0 {
+                    continue;
+                }
+                gb[o] += g;
+                let grow = &mut gw[o * self.n_in..(o + 1) * self.n_in];
+                for i in 0..self.n_in {
+                    grow[i] += g * xr[i];
+                }
+            }
+        }
     }
 
     /// Adam update (β1=0.9, β2=0.999, eps=1e-8), step count `t ≥ 1`.
@@ -139,16 +193,23 @@ pub(crate) fn adam_update(
 
 /// ReLU forward (in place) returning a mask for the backward pass.
 pub fn relu(x: &mut [f64]) -> Vec<bool> {
-    x.iter_mut()
-        .map(|v| {
-            if *v > 0.0 {
-                true
-            } else {
-                *v = 0.0;
-                false
-            }
-        })
-        .collect()
+    let mut mask = Vec::new();
+    relu_masked(x, &mut mask);
+    mask
+}
+
+/// [`relu`] reusing a caller-provided mask buffer (cleared and
+/// refilled; allocation-free once capacity is warm).
+pub fn relu_masked(x: &mut [f64], mask: &mut Vec<bool>) {
+    mask.clear();
+    mask.extend(x.iter_mut().map(|v| {
+        if *v > 0.0 {
+            true
+        } else {
+            *v = 0.0;
+            false
+        }
+    }));
 }
 
 /// ReLU backward: zero the gradient where the mask is false.
@@ -163,19 +224,23 @@ pub fn relu_backward(g: &mut [f64], mask: &[bool]) {
 /// Mean-squared error and its gradient wrt predictions:
 /// `L = mean((pred - target)²)`, `∂L/∂pred = 2(pred - target)/B`.
 pub fn mse_loss(pred: &[f64], target: &[f64]) -> (f64, Vec<f64>) {
+    let mut grad = vec![0.0; pred.len()];
+    let loss = mse_loss_into(pred, target, &mut grad);
+    (loss, grad)
+}
+
+/// [`mse_loss`] writing the gradient into a caller-provided buffer.
+pub fn mse_loss_into(pred: &[f64], target: &[f64], grad: &mut [f64]) -> f64 {
     assert_eq!(pred.len(), target.len());
+    assert_eq!(grad.len(), pred.len(), "gradient buffer has wrong size");
     let n = pred.len() as f64;
     let mut loss = 0.0;
-    let grad = pred
-        .iter()
-        .zip(target)
-        .map(|(p, t)| {
-            let e = p - t;
-            loss += e * e;
-            2.0 * e / n
-        })
-        .collect();
-    (loss / n, grad)
+    for ((g, p), t) in grad.iter_mut().zip(pred).zip(target) {
+        let e = p - t;
+        loss += e * e;
+        *g = 2.0 * e / n;
+    }
+    loss / n
 }
 
 /// A plain MLP with ReLU hidden activations (the §8 FNN baseline).

@@ -23,21 +23,64 @@
 //! precomputed right suffix products (`R_p`):
 //! `∂/∂ΔX^{(i_p)} += λ(w)·A_p·R_p` with
 //! `A_{p+1} = A_p·ΔX^{(i_p)} + S_{j-1}(w_[p])/(n-p)!`.
+//!
+//! **Batching.** [`sig_backward_batch_into`] cuts the batch into blocks
+//! of [`SigEngine::lanes`] paths and runs the whole reverse sweep —
+//! inverse reconstruction, cotangent transpose, ΔX-gradient — in the
+//! lane-major SoA layout of [`crate::sig::lanes`], amortizing the CSR
+//! word walk across `L` paths exactly as the forward kernel does. The
+//! scalar per-path kernel remains the `B < L` fallback and the
+//! differential-testing oracle ([`sig_backward_batch_scalar`]).
+//! [`signature_and_backward_batch_into`] fuses forward and backward,
+//! reusing the terminal state of the forward sweep instead of
+//! recomputing it — one forward pass per training step, not two.
 
 use super::forward::forward_sweep_range;
+use super::lanes::{
+    backward_step_lanes, chen_update_lanes, lane_forward, project_block, ForwardWorkspace,
+    DEFAULT_LANE_WIDTH,
+};
 use super::{chen_update, SigEngine};
-use crate::util::threadpool::parallel_for_into;
+use crate::util::threadpool::{parallel_for_into, parallel_map, SendPtr};
 
-/// Reusable buffers for a single-path backward pass.
+/// Reusable buffers for the backward pass (scalar and lane-major).
 #[derive(Debug, Default)]
 pub struct BackwardWorkspace {
-    state: Vec<f64>,
+    /// Embedded forward scratch: scalar `state`/`dx` plus the
+    /// lane-major `lane_state`/`dx_lanes` matrices — the backward pass
+    /// reconstructs signatures in the same buffers the forward sweep
+    /// fills, which is what makes the fused entry points reuse the
+    /// terminal state for free.
+    fwd: ForwardWorkspace,
     lambda: Vec<f64>,
-    lambda_next: Vec<f64>,
-    dx: Vec<f64>,
     neg_dx: Vec<f64>,
     right_prod: Vec<f64>,
     grad_dx: Vec<f64>,
+    /// Lane-major cotangent state, `state_len × L`.
+    lane_lambda: Vec<f64>,
+    /// Lane-major negated increments, `d × L`.
+    neg_dx_lanes: Vec<f64>,
+    /// Lane-major right suffix products, `(max_level + 1) × L`.
+    right_prod_lanes: Vec<f64>,
+    /// Lane-major per-step increment gradient, `d × L`.
+    gdx_lanes: Vec<f64>,
+}
+
+impl BackwardWorkspace {
+    /// Size the lane-major buffers for `eng` (idempotent; free in
+    /// steady state — a bare `resize` within capacity neither
+    /// allocates nor writes, and every buffer is fully re-initialized
+    /// by the kernels before being read: `lane_lambda` and the dx
+    /// buffers are `fill`ed per block, `gdx_lanes` per step, and
+    /// `right_prod_lanes` rows are written before use per word).
+    fn ensure_lanes(&mut self, eng: &SigEngine) {
+        let l = eng.lanes();
+        self.fwd.ensure_lanes(eng);
+        self.lane_lambda.resize(eng.table.state_len * l, 0.0);
+        self.neg_dx_lanes.resize(eng.table.d * l, 0.0);
+        self.right_prod_lanes.resize((eng.table.max_level + 1) * l, 0.0);
+        self.gdx_lanes.resize(eng.table.d * l, 0.0);
+    }
 }
 
 /// Gradient of `L` with respect to the path points, for a single path.
@@ -82,28 +125,45 @@ pub fn sig_backward_into(
     assert_eq!(out.len(), path.len(), "gradient buffer has wrong size");
 
     // Forward pass to the terminal signature (the only stored state).
-    forward_sweep_range(eng, path, 0, steps, &mut ws.state, &mut ws.dx);
+    forward_sweep_range(eng, path, 0, steps, &mut ws.fwd.state, &mut ws.fwd.dx);
+    scalar_backward_from_state(eng, path, grad_out, ws, out);
+}
+
+/// The reverse sweep of [`sig_backward_into`], assuming `ws.fwd.state`
+/// already holds the terminal closure state for `path` (how the fused
+/// entry points avoid the second forward pass).
+fn scalar_backward_from_state(
+    eng: &SigEngine,
+    path: &[f64],
+    grad_out: &[f64],
+    ws: &mut BackwardWorkspace,
+    out: &mut [f64],
+) {
+    let t = &eng.table;
+    let d = t.d;
+    let m1 = path.len() / d;
+    let steps = m1 - 1;
 
     // Seed λ_M: scatter the output cotangents onto the closure.
     ws.lambda.clear();
     ws.lambda.resize(t.state_len, 0.0);
     t.scatter_grad(grad_out, &mut ws.lambda);
-    ws.lambda_next.clear();
-    ws.lambda_next.resize(t.state_len, 0.0);
 
-    ws.dx.resize(d, 0.0);
+    ws.fwd.dx.resize(d, 0.0);
+    ws.neg_dx.clear();
     ws.neg_dx.resize(d, 0.0);
+    ws.right_prod.clear();
     ws.right_prod.resize(t.max_level + 1, 0.0);
     ws.grad_dx.clear();
     ws.grad_dx.resize(steps * d, 0.0);
 
     for j in (1..=steps).rev() {
         for i in 0..d {
-            ws.dx[i] = path[j * d + i] - path[(j - 1) * d + i];
-            ws.neg_dx[i] = -ws.dx[i];
+            ws.fwd.dx[i] = path[j * d + i] - path[(j - 1) * d + i];
+            ws.neg_dx[i] = -ws.fwd.dx[i];
         }
         // Reconstruct S_{j-1} (Prop 4.6): S ← S ⊗ exp(-ΔX_j).
-        chen_update(eng, &mut ws.state, &ws.neg_dx);
+        chen_update(eng, &mut ws.fwd.state, &ws.neg_dx);
 
         // λ transpose + ΔX gradient, one in-place sweep over the
         // closure. The transpose sends contributions strictly from a
@@ -114,9 +174,9 @@ pub fn sig_backward_into(
         // term λ(w) += λ(w)·1, a no-op in place).
         let gdx = &mut ws.grad_dx[(j - 1) * d..j * d];
         let lambda = ws.lambda.as_mut_slice();
-        let state = ws.state.as_slice();
+        let state = ws.fwd.state.as_slice();
         let right_prod = ws.right_prod.as_mut_slice();
-        let dx = ws.dx.as_slice();
+        let dx = ws.fwd.dx.as_slice();
         for n in 1..=t.max_level {
             let inv_fact_n = eng.inv_fact[n];
             let level_base = t.level_csr_base(n);
@@ -181,8 +241,137 @@ pub fn sig_backward_into(
     }
 }
 
+/// Lane-major reverse sweep over one block of `nb ≤ L` paths,
+/// mirroring [`scalar_backward_from_state`] with the lane axis
+/// contiguous. If `reuse_terminal` is set, `ws.fwd.lane_state` must
+/// already hold the block's terminal lane state (fused path);
+/// otherwise the forward sweep runs first. `grads` holds `nb`
+/// consecutive cotangent rows (`|I|` each); `out` is the block's
+/// `nb · per_path` gradient rows, written in place.
+#[allow(clippy::too_many_arguments)]
+fn lane_backward<const L: usize>(
+    eng: &SigEngine,
+    block: &[f64],
+    nb: usize,
+    per_path: usize,
+    grads: &[f64],
+    ws: &mut BackwardWorkspace,
+    out: &mut [f64],
+    reuse_terminal: bool,
+) {
+    let t = &eng.table;
+    let d = t.d;
+    let sl = t.state_len;
+    let odim = t.out_dim();
+    let m1 = per_path / d;
+    let steps = m1 - 1;
+    debug_assert!(nb >= 1 && nb <= L);
+    debug_assert_eq!(block.len(), nb * per_path);
+    debug_assert_eq!(grads.len(), nb * odim);
+    debug_assert_eq!(out.len(), nb * per_path);
+    if !reuse_terminal {
+        lane_forward::<L>(eng, block, nb, per_path, 0, steps, &mut ws.fwd);
+    }
+    let lane_state = &mut ws.fwd.lane_state[..sl * L];
+    let dx_lanes = &mut ws.fwd.dx_lanes[..d * L];
+    let lane_lambda = &mut ws.lane_lambda[..sl * L];
+    let neg_dx = &mut ws.neg_dx_lanes[..d * L];
+    let right_prod = &mut ws.right_prod_lanes[..(t.max_level + 1) * L];
+    let gdx = &mut ws.gdx_lanes[..d * L];
+
+    // Seed λ_M per lane: scatter each path's output cotangents onto
+    // the closure (accumulating on duplicate requests, like
+    // `WordTable::scatter_grad`).
+    lane_lambda.fill(0.0);
+    for (l, grow) in grads.chunks_exact(odim).enumerate() {
+        for (g, &idx) in grow.iter().zip(&t.output_map) {
+            lane_lambda[idx as usize * L + l] += *g;
+        }
+    }
+    // Inactive lanes (nb < L) keep Δx = 0 and λ = 0 throughout: the
+    // reconstruction leaves them at the trivial signature and every
+    // gradient contribution is an exact zero.
+    dx_lanes.fill(0.0);
+    neg_dx.fill(0.0);
+    out.fill(0.0);
+
+    for j in (1..=steps).rev() {
+        // Transpose this step's increments into lane-major layout.
+        for (l, p) in block.chunks_exact(per_path).enumerate() {
+            for i in 0..d {
+                let v = p[j * d + i] - p[(j - 1) * d + i];
+                dx_lanes[i * L + l] = v;
+                neg_dx[i * L + l] = -v;
+            }
+        }
+        // Reconstruct S_{j-1} for all lanes (Prop 4.6).
+        chen_update_lanes::<L>(eng, lane_state, neg_dx);
+        gdx.fill(0.0);
+        backward_step_lanes::<L>(eng, lane_state, lane_lambda, dx_lanes, right_prod, gdx);
+        // De-transpose g_j into each path's point-j slot (converted to
+        // point gradients below).
+        for (l, row) in out.chunks_exact_mut(per_path).enumerate() {
+            for i in 0..d {
+                row[j * d + i] = gdx[i * L + l];
+            }
+        }
+    }
+
+    // Chain rule from increments to points, in place per path:
+    // ∂L/∂X_0 = -g_1, ∂L/∂X_j = g_j - g_{j+1}, ∂L/∂X_M = g_M.
+    // Ascending j reads slot j+1 before it is rewritten.
+    for row in out.chunks_exact_mut(per_path) {
+        if steps == 0 {
+            continue; // already zero
+        }
+        for i in 0..d {
+            row[i] = -row[d + i];
+        }
+        for j in 1..steps {
+            for i in 0..d {
+                row[j * d + i] -= row[(j + 1) * d + i];
+            }
+        }
+    }
+}
+
+/// Monomorphization dispatch for [`lane_backward`] on the engine's
+/// lane width.
+#[allow(clippy::too_many_arguments)]
+fn lane_backward_dispatch(
+    eng: &SigEngine,
+    block: &[f64],
+    nb: usize,
+    per_path: usize,
+    grads: &[f64],
+    ws: &mut BackwardWorkspace,
+    out: &mut [f64],
+    reuse_terminal: bool,
+) {
+    match eng.lanes() {
+        4 => lane_backward::<4>(eng, block, nb, per_path, grads, ws, out, reuse_terminal),
+        8 => lane_backward::<8>(eng, block, nb, per_path, grads, ws, out, reuse_terminal),
+        16 => lane_backward::<16>(eng, block, nb, per_path, grads, ws, out, reuse_terminal),
+        32 => lane_backward::<32>(eng, block, nb, per_path, grads, ws, out, reuse_terminal),
+        // `SigEngine::lanes` only returns the widths above; the arm
+        // exists so the match is total without coupling to the default.
+        _ => lane_backward::<DEFAULT_LANE_WIDTH>(
+            eng,
+            block,
+            nb,
+            per_path,
+            grads,
+            ws,
+            out,
+            reuse_terminal,
+        ),
+    }
+}
+
 /// Batched backward: `paths` `(B, M+1, d)`, `grads_out` `(B, |I|)` →
-/// `(B, M+1, d)`. Parallel over paths.
+/// `(B, M+1, d)`. Blocks of [`SigEngine::lanes`] paths run the
+/// lane-major SIMD kernel; `B < L` falls back to the scalar per-path
+/// kernel.
 pub fn sig_backward_batch(
     eng: &SigEngine,
     paths: &[f64],
@@ -195,8 +384,9 @@ pub fn sig_backward_batch(
 }
 
 /// [`sig_backward_batch`] writing into a caller-provided `(B, M+1, d)`
-/// buffer: each path's gradient row is written in place by a pooled
-/// per-worker workspace — no per-row allocation, no post-join copy.
+/// buffer: each lane block's gradient rows are written in place by a
+/// pooled per-worker workspace — no per-row allocation, no post-join
+/// copy.
 pub fn sig_backward_batch_into(
     eng: &SigEngine,
     paths: &[f64],
@@ -210,15 +400,338 @@ pub fn sig_backward_batch_into(
     let odim = eng.out_dim();
     assert_eq!(grads_out.len(), batch * odim);
     assert_eq!(out.len(), paths.len(), "gradient buffer has wrong size");
-    let nw = eng.threads.min(batch).max(1);
+    let d = eng.table.d;
+    assert!(per_path % d == 0 && per_path / d >= 1, "bad path shape");
+    let lanes = eng.lanes();
+
+    if batch < lanes {
+        // Scalar per-path fallback, rows still written in place.
+        let nw = eng.threads.min(batch).max(1);
+        let mut workers = eng.bwd_pool.take_at_least(nw);
+        parallel_for_into(out, per_path, &mut workers[..nw], |b, row, ws| {
+            sig_backward_into(
+                eng,
+                &paths[b * per_path..(b + 1) * per_path],
+                &grads_out[b * odim..(b + 1) * odim],
+                ws,
+                row,
+            );
+        });
+        eng.bwd_pool.put(workers);
+        return;
+    }
+
+    // Lane-major path: each unit is a block of `lanes` paths (last
+    // block may be partial — padded lanes stay inert).
+    let n_blocks = batch.div_ceil(lanes);
+    let nw = eng.threads.min(n_blocks).max(1);
     let mut workers = eng.bwd_pool.take_at_least(nw);
-    parallel_for_into(out, per_path, &mut workers[..nw], |b, row, ws| {
-        sig_backward_into(
+    for w in workers.iter_mut().take(nw) {
+        w.ensure_lanes(eng);
+    }
+    parallel_for_into(out, lanes * per_path, &mut workers[..nw], |blk, out_rows, ws| {
+        let b0 = blk * lanes;
+        let nb = (batch - b0).min(lanes);
+        lane_backward_dispatch(
+            eng,
+            &paths[b0 * per_path..(b0 + nb) * per_path],
+            nb,
+            per_path,
+            &grads_out[b0 * odim..(b0 + nb) * odim],
+            ws,
+            out_rows,
+            false,
+        );
+    });
+    eng.bwd_pool.put(workers);
+}
+
+/// The pre-lane scalar batch path: one allocation-per-row
+/// `parallel_map` over paths. Kept verbatim as (a) the baseline the
+/// Table-1 bench measures the lane backward against and (b) the
+/// differential-testing oracle for [`sig_backward_batch`].
+pub fn sig_backward_batch_scalar(
+    eng: &SigEngine,
+    paths: &[f64],
+    grads_out: &[f64],
+    batch: usize,
+) -> Vec<f64> {
+    assert!(batch > 0);
+    assert_eq!(paths.len() % batch, 0);
+    let per_path = paths.len() / batch;
+    let odim = eng.out_dim();
+    assert_eq!(grads_out.len(), batch * odim);
+    let rows = parallel_map(batch, eng.threads, |b| {
+        sig_backward(
             eng,
             &paths[b * per_path..(b + 1) * per_path],
             &grads_out[b * odim..(b + 1) * odim],
+        )
+    });
+    let mut out = Vec::with_capacity(paths.len());
+    for row in rows {
+        out.extend(row);
+    }
+    out
+}
+
+/// Fused forward + backward over a batch: signatures `(B, |I|)` and
+/// path gradients `(B, M+1, d)` from **one** forward sweep — the
+/// reverse reconstruction starts from the terminal state the forward
+/// sweep just produced instead of recomputing it. This is the
+/// training-step primitive (Table 1: forward + backward per step).
+pub fn signature_and_backward_batch(
+    eng: &SigEngine,
+    paths: &[f64],
+    grads_out: &[f64],
+    batch: usize,
+) -> (Vec<f64>, Vec<f64>) {
+    let mut sig_out = vec![0.0; batch * eng.out_dim()];
+    let mut grad_out = vec![0.0; paths.len()];
+    signature_and_backward_batch_into(eng, paths, grads_out, batch, &mut sig_out, &mut grad_out);
+    (sig_out, grad_out)
+}
+
+/// [`signature_and_backward_batch`] writing into caller-provided
+/// buffers (`sig_out.len() == B·|I|`, `grad_out.len() == paths.len()`)
+/// — zero allocations in steady state.
+pub fn signature_and_backward_batch_into(
+    eng: &SigEngine,
+    paths: &[f64],
+    grads_out: &[f64],
+    batch: usize,
+    sig_out: &mut [f64],
+    grad_out: &mut [f64],
+) {
+    assert!(batch > 0);
+    assert_eq!(paths.len() % batch, 0);
+    let per_path = paths.len() / batch;
+    let odim = eng.out_dim();
+    assert_eq!(grads_out.len(), batch * odim);
+    assert_eq!(sig_out.len(), batch * odim, "signature buffer has wrong size");
+    assert_eq!(grad_out.len(), paths.len(), "gradient buffer has wrong size");
+    let d = eng.table.d;
+    assert!(per_path % d == 0 && per_path / d >= 1, "bad path shape");
+    let steps = per_path / d - 1;
+    let lanes = eng.lanes();
+    // SAFETY (both branches below): each unit index is claimed exactly
+    // once by `parallel_for_into`, so the signature rows derived from
+    // it are disjoint; `sig_out` outlives the scoped workers.
+    let sig_ptr = SendPtr(sig_out.as_mut_ptr());
+
+    if batch < lanes {
+        // Scalar fallback: forward once into the workspace, project,
+        // then run the reverse sweep from the state just computed.
+        let nw = eng.threads.min(batch).max(1);
+        let mut workers = eng.bwd_pool.take_at_least(nw);
+        parallel_for_into(grad_out, per_path, &mut workers[..nw], move |b, row, ws| {
+            // Capture the SendPtr wrapper by value (edition-2021
+            // disjoint capture would otherwise grab the raw field and
+            // lose the Send impl).
+            let sig_ptr = sig_ptr;
+            let path = &paths[b * per_path..(b + 1) * per_path];
+            forward_sweep_range(eng, path, 0, steps, &mut ws.fwd.state, &mut ws.fwd.dx);
+            let sig_row =
+                unsafe { std::slice::from_raw_parts_mut(sig_ptr.0.add(b * odim), odim) };
+            eng.table.project(&ws.fwd.state, sig_row);
+            scalar_backward_from_state(
+                eng,
+                path,
+                &grads_out[b * odim..(b + 1) * odim],
+                ws,
+                row,
+            );
+        });
+        eng.bwd_pool.put(workers);
+        return;
+    }
+
+    let n_blocks = batch.div_ceil(lanes);
+    let nw = eng.threads.min(n_blocks).max(1);
+    let mut workers = eng.bwd_pool.take_at_least(nw);
+    for w in workers.iter_mut().take(nw) {
+        w.ensure_lanes(eng);
+    }
+    parallel_for_into(
+        grad_out,
+        lanes * per_path,
+        &mut workers[..nw],
+        move |blk, out_rows, ws| {
+            // See above: capture the SendPtr wrapper, not its field.
+            let sig_ptr = sig_ptr;
+            let b0 = blk * lanes;
+            let nb = (batch - b0).min(lanes);
+            let block = &paths[b0 * per_path..(b0 + nb) * per_path];
+            super::lanes::lane_forward_dispatch(eng, block, nb, per_path, 0, steps, &mut ws.fwd);
+            let sig_rows = unsafe {
+                std::slice::from_raw_parts_mut(sig_ptr.0.add(b0 * odim), nb * odim)
+            };
+            project_block(eng, &ws.fwd.lane_state, lanes, nb, sig_rows);
+            lane_backward_dispatch(
+                eng,
+                block,
+                nb,
+                per_path,
+                &grads_out[b0 * odim..(b0 + nb) * odim],
+                ws,
+                out_rows,
+                true,
+            );
+        },
+    );
+    eng.bwd_pool.put(workers);
+}
+
+/// Batched forward that also **exports each path's terminal closure
+/// state** (`states_out`, `(B, state_len)` row-major) alongside the
+/// projected signatures (`sig_out`, `(B, |I|)`). The exported states
+/// are the cache that lets a later
+/// [`sig_backward_batch_from_states_into`] skip its forward sweep —
+/// the two-phase form of the fused entry point for training loops
+/// where the cotangents only exist after a head/loss evaluation.
+/// Memory cost of the cache is the paper's `O(B·D_sig)` (Table 2).
+pub fn signature_batch_states_into(
+    eng: &SigEngine,
+    paths: &[f64],
+    batch: usize,
+    sig_out: &mut [f64],
+    states_out: &mut [f64],
+) {
+    assert!(batch > 0);
+    assert_eq!(paths.len() % batch, 0);
+    let per_path = paths.len() / batch;
+    let odim = eng.out_dim();
+    let sl = eng.table.state_len;
+    assert_eq!(sig_out.len(), batch * odim, "signature buffer has wrong size");
+    assert_eq!(states_out.len(), batch * sl, "state buffer has wrong size");
+    let d = eng.table.d;
+    assert!(per_path % d == 0 && per_path / d >= 1, "bad path shape");
+    let steps = per_path / d - 1;
+    let lanes = eng.lanes();
+    // SAFETY (both branches): each unit index is claimed exactly once
+    // by `parallel_for_into`, so the signature rows derived from it
+    // are disjoint; `sig_out` outlives the scoped workers.
+    let sig_ptr = SendPtr(sig_out.as_mut_ptr());
+
+    if batch < lanes {
+        let nw = eng.threads.min(batch).max(1);
+        let mut workers = eng.bwd_pool.take_at_least(nw);
+        parallel_for_into(states_out, sl, &mut workers[..nw], move |b, state_row, ws| {
+            let sig_ptr = sig_ptr; // capture the wrapper, not its field
+            let path = &paths[b * per_path..(b + 1) * per_path];
+            forward_sweep_range(eng, path, 0, steps, &mut ws.fwd.state, &mut ws.fwd.dx);
+            let sig_row =
+                unsafe { std::slice::from_raw_parts_mut(sig_ptr.0.add(b * odim), odim) };
+            eng.table.project(&ws.fwd.state, sig_row);
+            state_row.copy_from_slice(&ws.fwd.state);
+        });
+        eng.bwd_pool.put(workers);
+        return;
+    }
+
+    let n_blocks = batch.div_ceil(lanes);
+    let nw = eng.threads.min(n_blocks).max(1);
+    let mut workers = eng.bwd_pool.take_at_least(nw);
+    for w in workers.iter_mut().take(nw) {
+        w.ensure_lanes(eng);
+    }
+    parallel_for_into(
+        states_out,
+        lanes * sl,
+        &mut workers[..nw],
+        move |blk, state_rows, ws| {
+            let sig_ptr = sig_ptr; // capture the wrapper, not its field
+            let b0 = blk * lanes;
+            let nb = (batch - b0).min(lanes);
+            let block = &paths[b0 * per_path..(b0 + nb) * per_path];
+            super::lanes::lane_forward_dispatch(eng, block, nb, per_path, 0, steps, &mut ws.fwd);
+            let sig_rows = unsafe {
+                std::slice::from_raw_parts_mut(sig_ptr.0.add(b0 * odim), nb * odim)
+            };
+            project_block(eng, &ws.fwd.lane_state, lanes, nb, sig_rows);
+            // De-transpose the terminal lane states into per-path rows.
+            for (l, row) in state_rows.chunks_exact_mut(sl).enumerate() {
+                for (w, slot) in row.iter_mut().enumerate() {
+                    *slot = ws.fwd.lane_state[w * lanes + l];
+                }
+            }
+        },
+    );
+    eng.bwd_pool.put(workers);
+}
+
+/// Batched backward starting from **cached terminal states** (the
+/// `(B, state_len)` rows exported by [`signature_batch_states_into`])
+/// instead of re-running the forward sweep — the reverse
+/// reconstruction begins directly at `S_{0,T}`. With this pair a
+/// training step performs exactly one forward pass even though the
+/// cotangents arrive late (after the loss).
+pub fn sig_backward_batch_from_states_into(
+    eng: &SigEngine,
+    paths: &[f64],
+    states: &[f64],
+    grads_out: &[f64],
+    batch: usize,
+    out: &mut [f64],
+) {
+    assert!(batch > 0);
+    assert_eq!(paths.len() % batch, 0);
+    let per_path = paths.len() / batch;
+    let odim = eng.out_dim();
+    let sl = eng.table.state_len;
+    assert_eq!(states.len(), batch * sl, "state cache has wrong size");
+    assert_eq!(grads_out.len(), batch * odim);
+    assert_eq!(out.len(), paths.len(), "gradient buffer has wrong size");
+    let d = eng.table.d;
+    assert!(per_path % d == 0 && per_path / d >= 1, "bad path shape");
+    let lanes = eng.lanes();
+
+    if batch < lanes {
+        let nw = eng.threads.min(batch).max(1);
+        let mut workers = eng.bwd_pool.take_at_least(nw);
+        parallel_for_into(out, per_path, &mut workers[..nw], |b, row, ws| {
+            ws.fwd.state.clear();
+            ws.fwd.state.extend_from_slice(&states[b * sl..(b + 1) * sl]);
+            scalar_backward_from_state(
+                eng,
+                &paths[b * per_path..(b + 1) * per_path],
+                &grads_out[b * odim..(b + 1) * odim],
+                ws,
+                row,
+            );
+        });
+        eng.bwd_pool.put(workers);
+        return;
+    }
+
+    let n_blocks = batch.div_ceil(lanes);
+    let nw = eng.threads.min(n_blocks).max(1);
+    let mut workers = eng.bwd_pool.take_at_least(nw);
+    for w in workers.iter_mut().take(nw) {
+        w.ensure_lanes(eng);
+    }
+    parallel_for_into(out, lanes * per_path, &mut workers[..nw], |blk, out_rows, ws| {
+        let b0 = blk * lanes;
+        let nb = (batch - b0).min(lanes);
+        // Transpose the cached per-path states into the lane-major
+        // layout; inactive lanes stay zero (finite — their λ is zero,
+        // so every contribution they touch is an exact zero).
+        ws.fwd.lane_state.fill(0.0);
+        for l in 0..nb {
+            let row = &states[(b0 + l) * sl..(b0 + l + 1) * sl];
+            for (w, &v) in row.iter().enumerate() {
+                ws.fwd.lane_state[w * lanes + l] = v;
+            }
+        }
+        lane_backward_dispatch(
+            eng,
+            &paths[b0 * per_path..(b0 + nb) * per_path],
+            nb,
+            per_path,
+            &grads_out[b0 * odim..(b0 + nb) * odim],
             ws,
-            row,
+            out_rows,
+            true,
         );
     });
     eng.bwd_pool.put(workers);
@@ -227,7 +740,7 @@ pub fn sig_backward_batch_into(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sig::signature;
+    use crate::sig::{signature, signature_batch};
     use crate::util::proptest::assert_allclose;
     use crate::util::rng::Rng;
     use crate::words::{truncated_words, Word, WordTable};
@@ -332,6 +845,104 @@ mod tests {
             );
             assert_allclose(&all[k * per..(k + 1) * per], &single, 1e-15, 0.0, "row");
         }
+    }
+
+    #[test]
+    fn batch_backward_lane_path_matches_scalar_oracle() {
+        // Batch wide enough to engage the lane kernel, size chosen so
+        // the last block is partial.
+        let mut rng = Rng::new(206);
+        let d = 3;
+        let eng = trunc_engine(d, 3);
+        let b = eng.lanes() * 2 + 3;
+        let m = 6;
+        let mut paths = Vec::new();
+        let mut grads = Vec::new();
+        for _ in 0..b {
+            paths.extend(rng.brownian_path(m, d, 0.8));
+            grads.extend((0..eng.out_dim()).map(|_| rng.gaussian()));
+        }
+        let got = sig_backward_batch(&eng, &paths, &grads, b);
+        let want = sig_backward_batch_scalar(&eng, &paths, &grads, b);
+        assert_allclose(&got, &want, 1e-12, 1e-12, "lane vs scalar backward");
+    }
+
+    #[test]
+    fn fused_matches_separate_calls() {
+        let mut rng = Rng::new(207);
+        let d = 2;
+        let eng = trunc_engine(d, 4);
+        for &b in &[3usize, 8, 19] {
+            // straddles the lane width (fallback / exact / padded tail)
+            let m = 5;
+            let mut paths = Vec::new();
+            let mut grads = Vec::new();
+            for _ in 0..b {
+                paths.extend(rng.brownian_path(m, d, 0.7));
+                grads.extend((0..eng.out_dim()).map(|_| rng.gaussian()));
+            }
+            let (sig, grad) = signature_and_backward_batch(&eng, &paths, &grads, b);
+            let sig_want = signature_batch(&eng, &paths, b);
+            let grad_want = sig_backward_batch(&eng, &paths, &grads, b);
+            assert_allclose(&sig, &sig_want, 1e-15, 0.0, &format!("fused sig B={b}"));
+            assert_allclose(&grad, &grad_want, 1e-15, 0.0, &format!("fused grad B={b}"));
+        }
+    }
+
+    #[test]
+    fn states_roundtrip_matches_plain_batch() {
+        // signature_batch_states_into + sig_backward_batch_from_states_into
+        // must equal signature_batch + sig_backward_batch exactly, on
+        // both the scalar fallback and the lane path (padded tail).
+        let mut rng = Rng::new(209);
+        let d = 3;
+        let eng = trunc_engine(d, 3);
+        let sl = eng.state_len();
+        for &b in &[2usize, 8, 19] {
+            let m = 5;
+            let mut paths = Vec::new();
+            let mut grads = Vec::new();
+            for _ in 0..b {
+                paths.extend(rng.brownian_path(m, d, 0.6));
+                grads.extend((0..eng.out_dim()).map(|_| rng.gaussian()));
+            }
+            let mut sig = vec![0.0; b * eng.out_dim()];
+            let mut states = vec![0.0; b * sl];
+            signature_batch_states_into(&eng, &paths, b, &mut sig, &mut states);
+            assert_allclose(&sig, &signature_batch(&eng, &paths, b), 0.0, 0.0, "sig rows");
+            // Exported states are the terminal closure states.
+            let per = (m + 1) * d;
+            for k in 0..b {
+                let want = crate::sig::sig_forward_state(&eng, &paths[k * per..(k + 1) * per]);
+                assert_allclose(&states[k * sl..(k + 1) * sl], &want, 0.0, 0.0, "state row");
+            }
+            let mut grad = vec![0.0; paths.len()];
+            sig_backward_batch_from_states_into(&eng, &paths, &states, &grads, b, &mut grad);
+            let want = sig_backward_batch(&eng, &paths, &grads, b);
+            assert_allclose(&grad, &want, 0.0, 0.0, &format!("from-states grad B={b}"));
+        }
+    }
+
+    #[test]
+    fn backward_batch_into_reuses_buffer() {
+        let mut rng = Rng::new(208);
+        let d = 2;
+        let eng = trunc_engine(d, 3);
+        let b = eng.lanes() + 2;
+        let m = 4;
+        let mut paths = Vec::new();
+        let mut grads = Vec::new();
+        for _ in 0..b {
+            paths.extend(rng.brownian_path(m, d, 1.0));
+            grads.extend((0..eng.out_dim()).map(|_| rng.gaussian()));
+        }
+        let mut out = vec![f64::NAN; paths.len()];
+        sig_backward_batch_into(&eng, &paths, &grads, b, &mut out);
+        let want = sig_backward_batch_scalar(&eng, &paths, &grads, b);
+        assert_allclose(&out, &want, 1e-12, 1e-12, "into == scalar");
+        // Second call with the same buffer must fully overwrite it.
+        sig_backward_batch_into(&eng, &paths, &grads, b, &mut out);
+        assert_allclose(&out, &want, 1e-12, 1e-12, "second call");
     }
 
     #[test]

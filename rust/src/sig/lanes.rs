@@ -19,6 +19,15 @@
 //! [`crate::sig::signature`] — the scalar kernel stays as the `B < L`
 //! fallback and as the differential-testing oracle
 //! (`signature_batch_scalar`).
+//!
+//! The **backward pass** (§4) is vectorized the same way: the cotangent
+//! state `λ[word][lane]` and the reconstructed signature share the SoA
+//! layout, the group-inverse reconstruction `S_{0,t_{j-1}} = S_{0,t_j}
+//! ⊗ exp(-ΔX_j)` is one [`chen_update_lanes`] call on negated
+//! increments, and [`backward_step_lanes`] runs the transposed
+//! Chen/Horner cotangent sweep plus the ΔX-gradient Horner sweep with
+//! the lane axis innermost — the CSR word walk is again read once per
+//! `L` paths. See `sig::backward` for the block driver.
 
 use super::SigEngine;
 
@@ -45,15 +54,14 @@ pub struct ForwardWorkspace {
 
 impl ForwardWorkspace {
     /// Size the lane-major buffers for `eng` (idempotent; steady state
-    /// performs no allocation because `resize` within capacity is
-    /// free). The scalar buffers are sized by the scalar kernels
+    /// performs no allocation *and no writes* — the kernels fully
+    /// re-initialize both buffers before reading, so a bare `resize`
+    /// suffices). The scalar buffers are sized by the scalar kernels
     /// themselves, so purely scalar paths never pay for the `×L` lane
     /// matrix.
     pub(crate) fn ensure_lanes(&mut self, eng: &SigEngine) {
         let l = eng.lanes();
-        self.lane_state.clear();
         self.lane_state.resize(eng.table.state_len * l, 0.0);
-        self.dx_lanes.clear();
         self.dx_lanes.resize(eng.table.d * l, 0.0);
     }
 }
@@ -113,13 +121,112 @@ pub fn chen_update_lanes<const L: usize>(
     }
 }
 
+/// One lane-major backward step: given the reconstructed state
+/// `S_{j-1}` (`lane_state`, `state_len × L`), the step increments
+/// (`dx_lanes`, `d × L`) and the incoming cotangents `λ_j`
+/// (`lane_lambda`, `state_len × L`), update `λ` in place to `λ_{j-1}`
+/// and accumulate this step's increment gradient into `gdx_lanes`
+/// (`d × L`, caller-zeroed). `right_prod` is `(max_level+1) × L`
+/// scratch for the right suffix products.
+///
+/// Per lane this performs exactly the scalar fused sweep of
+/// `sig_backward_into` (same word order, same operation order per
+/// accumulator), so results match the scalar kernel bitwise; lanes
+/// whose `λ` is identically zero contribute exact zeros. Levels are
+/// processed in ASCENDING order: the transpose sends contributions
+/// strictly from a word to its shorter prefixes, so every `λ(w)` is
+/// read before anything lands on it — the in-place mirror of the
+/// forward's descending trick.
+pub fn backward_step_lanes<const L: usize>(
+    eng: &SigEngine,
+    lane_state: &[f64],
+    lane_lambda: &mut [f64],
+    dx_lanes: &[f64],
+    right_prod: &mut [f64],
+    gdx_lanes: &mut [f64],
+) {
+    let t = &eng.table;
+    // Hard asserts, not debug: the kernel below does unchecked reads
+    // and writes at multiples of L (see `chen_update_lanes`).
+    assert_eq!(lane_state.len(), t.state_len * L, "lane_state must be state_len × L");
+    assert_eq!(lane_lambda.len(), t.state_len * L, "lane_lambda must be state_len × L");
+    assert_eq!(dx_lanes.len(), t.d * L, "dx_lanes must be d × L");
+    assert!(right_prod.len() >= (t.max_level + 1) * L, "right_prod too small");
+    assert_eq!(gdx_lanes.len(), t.d * L, "gdx_lanes must be d × L");
+    let dx_ptr = dx_lanes.as_ptr();
+    let st_ptr = lane_state.as_ptr();
+    let lam_ptr = lane_lambda.as_mut_ptr();
+    let rp_ptr = right_prod.as_mut_ptr();
+    for n in 1..=t.max_level {
+        let inv_fact_n = eng.inv_fact[n];
+        let level_base = t.level_csr_base(n);
+        for (off, w) in t.level_range(n).enumerate() {
+            // SAFETY: indices come from the validated WordTable
+            // (letters < d, prefix indices < state_len, CSR rows in
+            // bounds), and every `[f64; L]` view starts at a
+            // multiple-of-L offset inside a buffer of length
+            // (state_len|d|max_level+1)·L asserted above. `lam_v` is a
+            // copy, and the `&mut` prefix-row views into `lane_lambda`
+            // target strictly shorter words (level < n), never row `w`.
+            unsafe {
+                let lam_v = *(lam_ptr.add(w * L) as *const [f64; L]);
+                if lam_v.iter().all(|&x| x == 0.0) {
+                    continue;
+                }
+                let base = level_base + off * n;
+                let letters = t.csr_letters.get_unchecked(base..base + n);
+                let prefixes = t.csr_prefix.get_unchecked(base..base + n);
+                // Right suffix products R_p = Π_{q=p+1..n} dx_{i_q}.
+                *(rp_ptr.add(n * L) as *mut [f64; L]) = [1.0; L];
+                for p in (1..n).rev() {
+                    let letter = *letters.get_unchecked(p) as usize; // i_{p+1}
+                    let dxl = &*(dx_ptr.add(letter * L) as *const [f64; L]);
+                    let hi = *(rp_ptr.add((p + 1) * L) as *const [f64; L]);
+                    let lo = &mut *(rp_ptr.add(p * L) as *mut [f64; L]);
+                    for l in 0..L {
+                        lo[l] = hi[l] * dxl[l];
+                    }
+                }
+                // Fused sweep over positions p = 1..=n (per lane, the
+                // exact scalar recurrence — see `sig_backward_into`):
+                //   gdx[i_p]    += λ·A_p·R_p       (A_1 = 1/n!)
+                //   λ(w_[p-1])  += λ·dx_{i_p}·R_p/(n-p+1)!
+                //   A_{p+1}      = A_p·dx_{i_p} + S(w_[p])/(n-p)!
+                let mut a = [inv_fact_n; L];
+                for p in 1..=n {
+                    let letter = *letters.get_unchecked(p - 1) as usize; // i_p
+                    let dxl = &*(dx_ptr.add(letter * L) as *const [f64; L]);
+                    let rp = &*(rp_ptr.add(p * L) as *const [f64; L]);
+                    let inv1 = *eng.inv_fact.get_unchecked(n - p + 1);
+                    let g = &mut *(gdx_lanes.as_mut_ptr().add(letter * L) as *mut [f64; L]);
+                    let pref_lam = &mut *(lam_ptr
+                        .add(*prefixes.get_unchecked(p - 1) as usize * L)
+                        as *mut [f64; L]);
+                    for l in 0..L {
+                        g[l] += lam_v[l] * a[l] * rp[l];
+                        pref_lam[l] += lam_v[l] * (dxl[l] * rp[l] * inv1);
+                    }
+                    if p < n {
+                        let s = &*(st_ptr.add(*prefixes.get_unchecked(p) as usize * L)
+                            as *const [f64; L]);
+                        let inv2 = *eng.inv_fact.get_unchecked(n - p);
+                        for l in 0..L {
+                            a[l] = a[l] * dxl[l] + s[l] * inv2;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
 /// Forward-sweep a block of `nb ≤ L` paths over steps
 /// `jl+1 ..= jr` (the `[jl, jr]` index window; the full path is
 /// `jl = 0, jr = M`), leaving the result in `ws.lane_state`. Inactive
 /// lanes (`nb < L`) carry zero increments and stay at the trivial
 /// signature. `block` holds the `nb` paths back to back, `per_path`
 /// values each, row-major `(M+1, d)`.
-fn lane_forward<const L: usize>(
+pub(crate) fn lane_forward<const L: usize>(
     eng: &SigEngine,
     block: &[f64],
     nb: usize,
@@ -162,8 +269,11 @@ pub(crate) fn lane_forward_dispatch(
 ) {
     match eng.lanes() {
         4 => lane_forward::<4>(eng, block, nb, per_path, jl, jr, ws),
+        8 => lane_forward::<8>(eng, block, nb, per_path, jl, jr, ws),
         16 => lane_forward::<16>(eng, block, nb, per_path, jl, jr, ws),
         32 => lane_forward::<32>(eng, block, nb, per_path, jl, jr, ws),
+        // `SigEngine::lanes` only returns the widths above; the arm
+        // exists so the match is total without coupling to the default.
         _ => lane_forward::<DEFAULT_LANE_WIDTH>(eng, block, nb, per_path, jl, jr, ws),
     }
 }

@@ -14,8 +14,11 @@
 //! thread pool, and **within** a unit the batch is cut into lane blocks
 //! whose state matrices are lane-major, so the Horner inner loop is a
 //! SIMD sweep over paths (see [`lanes`] and DESIGN.md's "Memory layout
-//! & vectorization"). Batch entry points draw per-worker scratch from
-//! engine-owned pools, making steady-state calls allocation-free.
+//! & vectorization"). The backward pass batches the same way: the
+//! cotangent sweep, group-inverse reconstruction, and ΔX-gradient all
+//! run lane-major per block (see [`backward_step_lanes`]). Batch entry
+//! points draw per-worker scratch from engine-owned pools, making
+//! steady-state calls allocation-free.
 
 mod backward;
 mod forward;
@@ -23,14 +26,17 @@ pub mod lanes;
 mod windows;
 
 pub use backward::{
-    sig_backward, sig_backward_batch, sig_backward_batch_into, sig_backward_into,
-    sig_backward_ws, BackwardWorkspace,
+    sig_backward, sig_backward_batch, sig_backward_batch_from_states_into,
+    sig_backward_batch_into, sig_backward_batch_scalar, sig_backward_into, sig_backward_ws,
+    signature_and_backward_batch, signature_and_backward_batch_into,
+    signature_batch_states_into, BackwardWorkspace,
 };
+pub(crate) use forward::forward_sweep_range;
 pub use forward::{
     chen_update, sig_forward_state, signature, signature_batch, signature_batch_into,
     signature_batch_scalar, signature_stream, signature_stream_into,
 };
-pub use lanes::{chen_update_lanes, ForwardWorkspace, DEFAULT_LANE_WIDTH};
+pub use lanes::{backward_step_lanes, chen_update_lanes, ForwardWorkspace, DEFAULT_LANE_WIDTH};
 pub use windows::{
     expanding_windows, sliding_windows, window_signature, windowed_signatures,
     windowed_signatures_batch, windowed_signatures_batch_into, windowed_signatures_into, Window,

@@ -114,6 +114,55 @@ impl TruncTensor {
         }
     }
 
+    /// Reset to the zero element of shape `(d, depth)`, reusing the
+    /// level storage when the shape already matches — the
+    /// allocation-free way to recycle a tensor across calls.
+    pub fn reset_zero(&mut self, d: usize, depth: usize) {
+        if self.d == d && self.depth == depth && self.levels.len() == depth + 1 {
+            for lvl in &mut self.levels {
+                lvl.fill(0.0);
+            }
+        } else {
+            *self = TruncTensor::zero(d, depth);
+        }
+    }
+
+    /// Overwrite `self` with a copy of `other`, reusing storage when
+    /// shapes match (unlike the derived `clone_from`, which reallocates
+    /// the level vectors).
+    pub fn copy_from(&mut self, other: &TruncTensor) {
+        self.reset_zero(other.d, other.depth);
+        for (dst, src) in self.levels.iter_mut().zip(&other.levels) {
+            dst.copy_from_slice(src);
+        }
+    }
+
+    /// `self ← a ⊗ b`, overwriting — allocation-free when `self`
+    /// already has the `(a.d, a.depth)` shape. Same Cauchy product as
+    /// [`TruncTensor::mul`].
+    pub fn mul_into(&mut self, a: &TruncTensor, b: &TruncTensor) {
+        assert_eq!(a.d, b.d);
+        assert_eq!(a.depth, b.depth);
+        self.reset_zero(a.d, a.depth);
+        for n in 0..=a.depth {
+            let cn = &mut self.levels[n];
+            for k in 0..=n {
+                let av = &a.levels[k];
+                let bv = &b.levels[n - k];
+                let bl = bv.len();
+                for (i, &ai) in av.iter().enumerate() {
+                    if ai == 0.0 {
+                        continue;
+                    }
+                    let base = i * bl;
+                    for (j, &bj) in bv.iter().enumerate() {
+                        cn[base + j] += ai * bj;
+                    }
+                }
+            }
+        }
+    }
+
     /// Truncated tensor product `self ⊗ other` (Cauchy product, §2.1):
     /// `c_n = Σ_{k=0}^n a_k ⊗ b_{n-k}`, with
     /// `(a_k ⊗ b_m)[u∘v] = a_k[u]·b_m[v]` — an outer product in the flat

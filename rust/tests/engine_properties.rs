@@ -5,8 +5,9 @@
 
 use pathsig::logsig::LogSigEngine;
 use pathsig::sig::{
-    sig_backward, sig_forward_state, signature, signature_batch, signature_batch_scalar,
-    signature_stream, window_signature, SigEngine, Window,
+    sig_backward, sig_backward_batch, sig_backward_batch_scalar, sig_forward_state, signature,
+    signature_and_backward_batch, signature_batch, signature_batch_scalar, signature_stream,
+    window_signature, SigEngine, Window,
 };
 use pathsig::tensor::{tensor_log_series, TruncTensor};
 use pathsig::util::proptest::{assert_allclose, property, Gen};
@@ -326,6 +327,147 @@ fn lane_kernel_equals_scalar_kernel() {
             1e-13,
             &format!("lane≡scalar d={d} depth={depth} B={b} M={m} L={}", eng.lanes()),
         );
+    });
+}
+
+/// Random word set of one of the three paper flavors: truncated
+/// (dense), projected (sparse random request), anisotropic
+/// (weighted-degree cutoff, §7.2).
+fn random_word_set(g: &mut Gen, d: usize, depth: usize, flavor: usize) -> Vec<Word> {
+    match flavor {
+        0 => truncated_words(d, depth),
+        1 => (0..g.usize_in(1, 8))
+            .map(|_| {
+                let len = g.usize_in(1, depth);
+                Word((0..len).map(|_| g.usize_in(0, d - 1) as u16).collect())
+            })
+            .collect(),
+        _ => {
+            let gamma: Vec<f64> = (0..d).map(|_| g.f64_in(1.0, 2.0)).collect();
+            let ws = anisotropic_words(d, &gamma, depth as f64);
+            if ws.is_empty() {
+                truncated_words(d, 1)
+            } else {
+                ws
+            }
+        }
+    }
+}
+
+#[test]
+fn backward_lane_kernel_equals_scalar_kernel() {
+    // ISSUE-3 satellite: the lane-major batched backward must agree
+    // with the scalar per-path backward to ≤ 1e-12 across random
+    // (d, depth, word-set flavor, lane-width, thread-count) configs —
+    // and across EVERY `B mod L` residue, so each padded-tail shape of
+    // the last lane block is exercised (plus a sub-lane batch for the
+    // scalar fallback).
+    property("backward lane ≡ scalar", 10, |g| {
+        let d = g.usize_in(2, 4);
+        let depth = g.usize_in(1, 4);
+        let flavor = g.usize_in(0, 2);
+        let words = random_word_set(g, d, depth, flavor);
+        let mut eng = SigEngine::with_threads(WordTable::build(d, &words), g.usize_in(1, 3));
+        eng.lane_width = *g.choose(&[4usize, 8, 16, 32]);
+        let lw = eng.lanes();
+        let odim = eng.out_dim();
+        let m = g.usize_in(1, 7);
+        let per = (m + 1) * d;
+        for r in 0..lw {
+            // B = L + r: engages the lane kernel with a tail block of
+            // exactly r lanes (r = 0 → single full block).
+            let b = lw + r;
+            let mut paths = Vec::with_capacity(b * per);
+            let mut grads = Vec::with_capacity(b * odim);
+            for _ in 0..b {
+                paths.extend(g.path(m, d, 0.5));
+                grads.extend(g.gaussian_vec(odim));
+            }
+            let got = sig_backward_batch(&eng, &paths, &grads, b);
+            let want = sig_backward_batch_scalar(&eng, &paths, &grads, b);
+            assert_allclose(
+                &got,
+                &want,
+                1e-12,
+                1e-12,
+                &format!("bwd lane≡scalar d={d} depth={depth} B={b} M={m} L={lw} flavor={flavor}"),
+            );
+        }
+        // Sub-lane batch: the scalar fallback path.
+        let b = g.usize_in(1, lw - 1);
+        let mut paths = Vec::with_capacity(b * per);
+        let mut grads = Vec::with_capacity(b * odim);
+        for _ in 0..b {
+            paths.extend(g.path(m, d, 0.5));
+            grads.extend(g.gaussian_vec(odim));
+        }
+        let got = sig_backward_batch(&eng, &paths, &grads, b);
+        let want = sig_backward_batch_scalar(&eng, &paths, &grads, b);
+        assert_allclose(&got, &want, 1e-12, 1e-12, "bwd fallback B<L");
+    });
+}
+
+#[test]
+fn backward_gradcheck_all_word_set_flavors() {
+    // ISSUE-3 satellite: central finite differences confirm the
+    // analytic gradient across truncated, projected AND anisotropic
+    // word sets (the unit tests in sig::backward cover the first two;
+    // this property covers all three on random configurations).
+    property("backward finite differences", 12, |g| {
+        let d = g.usize_in(2, 3);
+        let depth = g.usize_in(1, 3);
+        let flavor = g.usize_in(0, 2);
+        let words = random_word_set(g, d, depth, flavor);
+        let eng = SigEngine::new(WordTable::build(d, &words));
+        let m = g.usize_in(1, 6);
+        let path = g.path(m, d, 0.5);
+        let grad_out = g.gaussian_vec(eng.out_dim());
+        let got = sig_backward(&eng, &path, &grad_out);
+        let eps = 1e-6;
+        let mut p = path.clone();
+        for k in 0..path.len() {
+            p[k] = path[k] + eps;
+            let up: f64 = signature(&eng, &p).iter().zip(&grad_out).map(|(a, b)| a * b).sum();
+            p[k] = path[k] - eps;
+            let dn: f64 = signature(&eng, &p).iter().zip(&grad_out).map(|(a, b)| a * b).sum();
+            p[k] = path[k];
+            let fd = (up - dn) / (2.0 * eps);
+            assert!(
+                (got[k] - fd).abs() < 2e-5 * (1.0 + fd.abs()),
+                "fd gradcheck d={d} depth={depth} flavor={flavor} coord {k}: got {} fd {}",
+                got[k],
+                fd
+            );
+        }
+    });
+}
+
+#[test]
+fn fused_forward_backward_equals_separate() {
+    // The fused one-sweep entry point must reproduce the separate
+    // forward and backward calls exactly, on both the lane path and
+    // the scalar fallback.
+    property("fused ≡ separate", 20, |g| {
+        let d = g.usize_in(2, 4);
+        let depth = g.usize_in(1, 4);
+        let flavor = g.usize_in(0, 2);
+        let words = random_word_set(g, d, depth, flavor);
+        let mut eng = SigEngine::with_threads(WordTable::build(d, &words), g.usize_in(1, 3));
+        eng.lane_width = *g.choose(&[4usize, 8, 16, 32]);
+        let odim = eng.out_dim();
+        let b = g.usize_in(1, 2 * eng.lanes() + 3);
+        let m = g.usize_in(1, 8);
+        let mut paths = Vec::new();
+        let mut grads = Vec::new();
+        for _ in 0..b {
+            paths.extend(g.path(m, d, 0.5));
+            grads.extend(g.gaussian_vec(odim));
+        }
+        let (sig, grad) = signature_and_backward_batch(&eng, &paths, &grads, b);
+        let sig_want = signature_batch(&eng, &paths, b);
+        let grad_want = sig_backward_batch(&eng, &paths, &grads, b);
+        assert_allclose(&sig, &sig_want, 0.0, 0.0, "fused signature rows");
+        assert_allclose(&grad, &grad_want, 0.0, 0.0, "fused gradient rows");
     });
 }
 
