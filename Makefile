@@ -17,13 +17,16 @@ bench:
 	cargo bench
 
 # Emit the repo-root perf-trajectory artifacts (BENCH_fig1.json,
-# BENCH_table1.json, BENCH_table2.json): mean/median/min per case, peak
-# bytes, the lane-major-vs-scalar forward AND backward speedups, and
-# the zero-alloc steady-state counts (batch forward + train step).
+# BENCH_table1.json, BENCH_table2.json, BENCH_stream.json): mean/median/
+# min per case, peak bytes, the lane-major-vs-scalar forward AND
+# backward speedups, the streaming-vs-recompute sliding-window rows,
+# and the zero-alloc steady-state counts (batch forward, train step,
+# stream push).
 bench-json:
 	cargo bench --bench fig1_truncated -- --json
 	cargo bench --bench table1_training -- --json
 	cargo bench --bench table2_memory -- --json
+	cargo bench --bench fig3_windows -- --json
 
 # CI-sized variant of bench-json: tiny cases, 1 warmup / 2 runs —
 # exercises the artifact pipeline, not a measurement.
@@ -31,6 +34,7 @@ bench-smoke:
 	cargo bench --bench fig1_truncated -- --json --smoke
 	cargo bench --bench table1_training -- --json --smoke
 	cargo bench --bench table2_memory -- --json --smoke
+	cargo bench --bench fig3_windows -- --json --smoke
 
 # Emit the AOT/PJRT artifacts (HLO text + manifest.json) into ./artifacts.
 artifacts:

@@ -2,7 +2,9 @@
 installed package, and skip dependency-heavy modules gracefully so
 ``python3 -m pytest python/tests -q`` works both in CI (full deps) and
 in minimal environments (stdlib + pytest: the golden-manifest tests
-still run whenever numpy is present)."""
+still run whenever numpy is present, and the sliding-window stream
+goldens in ``test_stream_golden.py`` are stdlib-only, so they run
+everywhere — with or without the jax stack)."""
 
 import importlib.util
 import sys

@@ -217,3 +217,81 @@ class TestWordTables:
             got = sig_fwd(paths, table)
             want = ref.oracle_signature_batch(paths, depth)
             np.testing.assert_allclose(got, want, rtol=1e-10, atol=1e-12)
+
+
+class TestSlidingWindowGoldenRust:
+    """Sliding-window cross-check against the Rust streaming golden
+    values (``rust/tests/golden_sig.rs::sliding_window_stream_golden_depth3``):
+    depth-3, w=3 windows over the 6-point 2-D staircase path. The same
+    constants live in ``test_stream_golden.py`` (pure-stdlib, runs
+    without the jax stack); here they are checked against the Pallas
+    ``sig_fwd`` kernel evaluated on each window slice.
+    """
+
+    # Staircase (0,0)→(1,0)→(1,1)→(2,1)→(2,2)→(3,2):
+    # increments e1, e2, e1, e2, e1.
+    PATH = np.array(
+        [[0, 0], [1, 0], [1, 1], [2, 1], [2, 2], [3, 2]], np.float32
+    )
+    # (window point-slice, {word: coefficient}); words are 0-based
+    # letter tuples, absent words are 0. Each full window is
+    # exp(e_a)⊗exp(e_b)⊗exp(e_c): coefficient on w sums 1/(i!·j!·k!)
+    # over splits w = a^i ∘ b^j ∘ c^k.
+    WINDOWS = [
+        ((0, 2), {(0,): 1, (0, 0): 0.5, (0, 0, 0): 1 / 6}),
+        (
+            (0, 3),
+            {
+                (0,): 1, (1,): 1, (0, 0): 0.5, (0, 1): 1, (1, 1): 0.5,
+                (0, 0, 0): 1 / 6, (0, 0, 1): 0.5, (0, 1, 1): 0.5,
+                (1, 1, 1): 1 / 6,
+            },
+        ),
+        (
+            (0, 4),
+            {
+                (0,): 2, (1,): 1, (0, 0): 2, (0, 1): 1, (1, 0): 1,
+                (1, 1): 0.5, (0, 0, 0): 4 / 3, (0, 0, 1): 0.5,
+                (0, 1, 0): 1, (0, 1, 1): 0.5, (1, 0, 0): 0.5,
+                (1, 1, 0): 0.5, (1, 1, 1): 1 / 6,
+            },
+        ),
+        (
+            (1, 5),
+            {
+                (1,): 2, (0,): 1, (1, 1): 2, (1, 0): 1, (0, 1): 1,
+                (0, 0): 0.5, (1, 1, 1): 4 / 3, (1, 1, 0): 0.5,
+                (1, 0, 1): 1, (1, 0, 0): 0.5, (0, 1, 1): 0.5,
+                (0, 0, 1): 0.5, (0, 0, 0): 1 / 6,
+            },
+        ),
+        (
+            (2, 6),
+            {
+                (0,): 2, (1,): 1, (0, 0): 2, (0, 1): 1, (1, 0): 1,
+                (1, 1): 0.5, (0, 0, 0): 4 / 3, (0, 0, 1): 0.5,
+                (0, 1, 0): 1, (0, 1, 1): 0.5, (1, 0, 0): 0.5,
+                (1, 1, 0): 0.5, (1, 1, 1): 1 / 6,
+            },
+        ),
+    ]
+
+    def test_window_slices_match_rust_golden(self):
+        table = trunc_table(2, 3)
+        for (lo, hi), golden in self.WINDOWS:
+            paths = jnp.asarray(self.PATH[None, lo:hi])
+            got = np.asarray(sig_fwd(paths, table))[0]
+            for pos, w in enumerate(table.requested):
+                want = golden.get(tuple(w), 0.0)
+                assert abs(got[pos] - want) < 1e-5, (
+                    f"window [{lo},{hi}) word {w}: {got[pos]} vs {want}"
+                )
+
+    def test_full_staircase_level1(self):
+        table = trunc_table(2, 3)
+        got = np.asarray(sig_fwd(jnp.asarray(self.PATH[None]), table))[0]
+        # Total displacement (3, 2); S(11) = 3²/2 (matches the Rust
+        # stream's running-signature golden).
+        np.testing.assert_allclose(got[:2], [3.0, 2.0], atol=1e-5)
+        idx = list(map(tuple, table.requested)).index((0, 0))
+        assert abs(got[idx] - 4.5) < 1e-5

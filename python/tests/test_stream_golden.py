@@ -1,0 +1,126 @@
+"""Sliding-window golden cross-check that runs with or without the jax
+stack: a tiny pure-stdlib dense tensor-algebra oracle recomputes the
+depth-3 sliding windows of the 6-point 2-D staircase path and checks
+them against the hand-computed constants shared with
+``rust/tests/golden_sig.rs::sliding_window_stream_golden_depth3`` and
+``test_kernel.py::TestSlidingWindowGoldenRust``.
+
+No numpy, no jax — ``conftest.py`` never needs to skip this module, so
+the golden contract is exercised even in minimal environments.
+"""
+
+import itertools
+import math
+
+D = 2
+DEPTH = 3
+# Staircase (0,0)→(1,0)→(1,1)→(2,1)→(2,2)→(3,2).
+PATH = [(0.0, 0.0), (1.0, 0.0), (1.0, 1.0), (2.0, 1.0), (2.0, 2.0), (3.0, 2.0)]
+
+# (window point-slice, {word: coefficient}) — the Rust stream golden
+# rows for w = 3, stride 1 (absent words are 0).
+WINDOWS = [
+    ((0, 2), {(0,): 1, (0, 0): 0.5, (0, 0, 0): 1 / 6}),
+    (
+        (0, 3),
+        {
+            (0,): 1, (1,): 1, (0, 0): 0.5, (0, 1): 1, (1, 1): 0.5,
+            (0, 0, 0): 1 / 6, (0, 0, 1): 0.5, (0, 1, 1): 0.5, (1, 1, 1): 1 / 6,
+        },
+    ),
+    (
+        (0, 4),
+        {
+            (0,): 2, (1,): 1, (0, 0): 2, (0, 1): 1, (1, 0): 1, (1, 1): 0.5,
+            (0, 0, 0): 4 / 3, (0, 0, 1): 0.5, (0, 1, 0): 1, (0, 1, 1): 0.5,
+            (1, 0, 0): 0.5, (1, 1, 0): 0.5, (1, 1, 1): 1 / 6,
+        },
+    ),
+    (
+        (1, 5),
+        {
+            (1,): 2, (0,): 1, (1, 1): 2, (1, 0): 1, (0, 1): 1, (0, 0): 0.5,
+            (1, 1, 1): 4 / 3, (1, 1, 0): 0.5, (1, 0, 1): 1, (1, 0, 0): 0.5,
+            (0, 1, 1): 0.5, (0, 0, 1): 0.5, (0, 0, 0): 1 / 6,
+        },
+    ),
+    (
+        (2, 6),
+        {
+            (0,): 2, (1,): 1, (0, 0): 2, (0, 1): 1, (1, 0): 1, (1, 1): 0.5,
+            (0, 0, 0): 4 / 3, (0, 0, 1): 0.5, (0, 1, 0): 1, (0, 1, 1): 0.5,
+            (1, 0, 0): 0.5, (1, 1, 0): 0.5, (1, 1, 1): 1 / 6,
+        },
+    ),
+]
+
+
+def all_words(d, depth):
+    out = []
+    for n in range(depth + 1):
+        out += [tuple(w) for w in itertools.product(range(d), repeat=n)]
+    return out
+
+
+def dense_signature(points, d, depth):
+    """Chen recursion in the full dense word basis (dict word → coeff)."""
+    words = all_words(d, depth)
+    sig = {w: (1.0 if w == () else 0.0) for w in words}
+    for j in range(1, len(points)):
+        dx = [points[j][i] - points[j - 1][i] for i in range(d)]
+        exp = {}
+        for w in words:
+            c = 1.0
+            for letter in w:
+                c *= dx[letter]
+            exp[w] = c / math.factorial(len(w))
+        sig = {
+            w: sum(sig[w[:k]] * exp[w[k:]] for k in range(len(w) + 1))
+            for w in words
+        }
+    return sig
+
+
+def test_sliding_windows_match_rust_golden():
+    for (lo, hi), golden in WINDOWS:
+        sig = dense_signature(PATH[lo:hi], D, DEPTH)
+        for w in all_words(D, DEPTH):
+            if w == ():
+                continue
+            want = golden.get(w, 0.0)
+            assert abs(sig[w] - want) < 1e-12, f"window [{lo},{hi}) word {w}"
+
+
+def test_full_staircase_running_signature():
+    sig = dense_signature(PATH, D, DEPTH)
+    # Matches the Rust stream's running-signature spot values.
+    assert abs(sig[(0,)] - 3.0) < 1e-12
+    assert abs(sig[(1,)] - 2.0) < 1e-12
+    assert abs(sig[(0, 0)] - 4.5) < 1e-12  # 3²/2
+
+
+def test_window_coefficients_are_three_way_splits():
+    # Independent derivation of the closed form used to hand-compute
+    # the goldens: for window increments e_a, e_b, e_c the coefficient
+    # on word w is Σ 1/(i!·j!·k!) over splits w = a^i ∘ b^j ∘ c^k.
+    for (lo, hi), golden in WINDOWS:
+        incs = []
+        for j in range(lo + 1, hi):
+            dx = [PATH[j][i] - PATH[j - 1][i] for i in range(D)]
+            incs.append(dx.index(1.0))
+        if len(incs) != 3:
+            continue
+        a, b, c = incs
+        for w in all_words(D, DEPTH):
+            if w == ():
+                continue
+            total = 0.0
+            n = len(w)
+            for i in range(n + 1):
+                for j in range(n - i + 1):
+                    k = n - i - j
+                    if w == (a,) * i + (b,) * j + (c,) * k:
+                        total += 1 / (
+                            math.factorial(i) * math.factorial(j) * math.factorial(k)
+                        )
+            assert abs(total - golden.get(w, 0.0)) < 1e-12, f"{w}"

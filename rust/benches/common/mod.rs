@@ -1,7 +1,18 @@
 //! Shared helpers for the paper-table benches.
 #![allow(dead_code)] // each bench binary uses a subset of these helpers
 
+use pathsig::bench::{time_auto, time_fn, Timing};
 use pathsig::util::json::Json;
+
+/// Smoke-aware timer: CI smoke mode pins 1 warmup / 2 runs; otherwise
+/// the adaptive budgeted harness runs.
+pub fn timeit<F: FnMut()>(name: &str, smoke: bool, budget: f64, f: F) -> Timing {
+    if smoke {
+        time_fn(name, 1, 2, f)
+    } else {
+        time_auto(name, budget, f)
+    }
+}
 
 pub fn geomean(xs: &[f64]) -> f64 {
     (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()

@@ -17,9 +17,9 @@
 //! seconds.
 
 mod common;
-use common::{dump, dump_root, full, geomean, json_mode, median, smoke};
+use common::{dump, dump_root, full, geomean, json_mode, median, smoke, timeit};
 use pathsig::baselines::{chen_full_signature_batch, matmul_style_signature_batch};
-use pathsig::bench::{alloc_count, time_auto, time_fn, CountingAllocator, Timing};
+use pathsig::bench::{alloc_count, CountingAllocator, Timing};
 use pathsig::sig::{signature_batch, signature_batch_into, signature_batch_scalar, SigEngine};
 use pathsig::util::json::Json;
 use pathsig::util::rng::Rng;
@@ -27,14 +27,6 @@ use pathsig::words::{truncated_words, WordTable};
 
 #[global_allocator]
 static ALLOC: CountingAllocator = CountingAllocator;
-
-fn timeit<F: FnMut()>(name: &str, smoke: bool, budget: f64, f: F) -> Timing {
-    if smoke {
-        time_fn(name, 1, 2, f)
-    } else {
-        time_auto(name, budget, f)
-    }
-}
 
 /// The lane-major kernel against the pre-lane scalar-per-path batch
 /// path, same engine, same run (the ISSUE-2 acceptance headline).

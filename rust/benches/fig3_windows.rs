@@ -1,4 +1,7 @@
-//! Figure 3: windowed-signature scaling with the number of windows.
+//! Figure 3: windowed-signature scaling with the number of windows,
+//! plus the **streaming** rows (ISSUE 4): amortized-O(1) sliding-window
+//! maintenance vs per-push recompute, emitted as the repo-root
+//! `BENCH_stream.json` artifact in `--json` mode.
 //!
 //! pathsig evaluates the whole window collection in one call (windows
 //! are an extra parallel axis, §5); the pySigLib-style baseline pays a
@@ -6,21 +9,180 @@
 //! Chen-combination baseline (expanding states + group inverse) is also
 //! measured — fast per window but `O(M·D_sig)` memory and numerically
 //! fragile (see `baselines::chen_windows` tests).
+//!
+//! The streaming section measures the live-serving shape instead: one
+//! new sample arrives, the window signature must be refreshed. The
+//! recompute path costs O(window) per push; `StreamEngine`'s two-stack
+//! queue costs amortized O(1) in the window length, so the speedup row
+//! grows linearly with the window — and a warm push performs **zero**
+//! heap allocations (`steady_state_allocs_per_push`, checked in CI).
 
 mod common;
-use common::{dump, full, median};
+use common::{dump, dump_root, full, json_mode, median, smoke, timeit};
 use pathsig::baselines::{chen_full_signature, chen_windowed_signatures};
-use pathsig::bench::{time_auto, Timing};
-use pathsig::sig::{windowed_signatures_batch, SigEngine, Window};
+use pathsig::bench::{alloc_count, CountingAllocator, Timing};
+use pathsig::sig::{
+    windowed_signatures_batch, windowed_signatures_into, MultiStream, SigEngine, StreamEngine,
+    StreamTable, Window,
+};
 use pathsig::util::json::Json;
 use pathsig::util::rng::Rng;
 use pathsig::util::threadpool::parallel_map;
 use pathsig::words::{truncated_words, WordTable};
+use std::sync::Arc;
+
+#[global_allocator]
+static ALLOC: CountingAllocator = CountingAllocator;
+
+/// Streaming vs per-push recompute across window lengths: the
+/// recompute column grows with the window, the stream column does not.
+fn stream_rows(smoke: bool, budget: f64) -> Vec<Json> {
+    let (d, depth, steps) = if smoke { (2, 2, 96) } else { (3, 3, 2048) };
+    let window_lens: &[usize] = if smoke { &[4, 16] } else { &[8, 32, 128, 512] };
+    let words = truncated_words(d, depth);
+    let eng = SigEngine::sequential(WordTable::build(d, &words));
+    let tbl = Arc::new(StreamTable::new(d, &words));
+    let mut rng = Rng::new(0xF164);
+    let path = rng.brownian_path(steps, d, 0.3);
+    let odim = eng.out_dim();
+
+    println!("\n# streaming sliding window vs per-push recompute (d={d} N={depth}, {steps} pushes)");
+    println!(
+        "{:>6} | {:>12} {:>12} | {:>8}",
+        "window", "recompute", "stream", "speedup"
+    );
+    let mut rows = Vec::new();
+    for &wlen in window_lens {
+        let mut row = vec![0.0; odim];
+        let mut stream = StreamEngine::new(Arc::clone(&tbl), wlen);
+        let streaming = timeit("stream", smoke, budget, || {
+            stream.reset();
+            for j in 0..=steps {
+                stream.push(&path[j * d..(j + 1) * d]);
+                stream.window_into(&mut row);
+                std::hint::black_box(&row);
+            }
+        });
+        let recompute = timeit("recompute", smoke, budget, || {
+            for j in 1..=steps {
+                let win = [Window::new(j.saturating_sub(wlen), j)];
+                windowed_signatures_into(&eng, &path, &win, &mut row);
+                std::hint::black_box(&row);
+            }
+        });
+        let speedup = recompute.median_s / streaming.median_s;
+        let per_push = |t: &Timing| t.median_s / steps as f64 * 1e6;
+        println!(
+            "{:>6} | {:>9.3} µs {:>9.3} µs | {:>7.2}x",
+            wlen,
+            per_push(&recompute),
+            per_push(&streaming),
+            speedup
+        );
+        rows.push(Json::obj(vec![
+            ("window", Json::Num(wlen as f64)),
+            ("pushes", Json::Num(steps as f64)),
+            ("stream_per_push_us", Json::Num(per_push(&streaming))),
+            ("recompute_per_push_us", Json::Num(per_push(&recompute))),
+            ("speedup", Json::Num(speedup)),
+        ]));
+    }
+    rows
+}
+
+/// M lockstep sessions through the lane-major multi-stream vs M
+/// independent scalar StreamEngines.
+fn multi_stream_row(smoke: bool, budget: f64) -> Json {
+    let (d, depth, wlen, steps, m) = if smoke { (2, 2, 8, 64, 8) } else { (3, 3, 32, 512, 32) };
+    let words = truncated_words(d, depth);
+    let tbl = Arc::new(StreamTable::new(d, &words));
+    let mut rng = Rng::new(0xF165);
+    let odim = tbl.out_dim();
+    let paths: Vec<Vec<f64>> = (0..m).map(|_| rng.brownian_path(steps, d, 0.4)).collect();
+    let mut sample = vec![0.0; m * d];
+    let mut out = vec![0.0; m * odim];
+
+    let mut multi = MultiStream::new(Arc::clone(&tbl), m, wlen);
+    let lanes = timeit("multi-stream", smoke, budget, || {
+        for j in 0..=steps {
+            for (k, p) in paths.iter().enumerate() {
+                sample[k * d..(k + 1) * d].copy_from_slice(&p[j * d..(j + 1) * d]);
+            }
+            multi.push_all(&sample);
+            multi.window_into(&mut out);
+            std::hint::black_box(&out);
+        }
+    });
+    let mut singles: Vec<StreamEngine> =
+        (0..m).map(|_| StreamEngine::new(Arc::clone(&tbl), wlen)).collect();
+    let scalar = timeit("scalar-streams", smoke, budget, || {
+        for j in 0..=steps {
+            for (k, s) in singles.iter_mut().enumerate() {
+                s.push(&paths[k][j * d..(j + 1) * d]);
+                s.window_into(&mut out[k * odim..(k + 1) * odim]);
+            }
+            std::hint::black_box(&out);
+        }
+    });
+    let speedup = scalar.median_s / lanes.median_s;
+    println!(
+        "\n# {m} concurrent sessions, lane-major vs scalar (w={wlen}): \
+         {} vs {} per sweep, {speedup:.2}x",
+        Timing::fmt_secs(lanes.median_s),
+        Timing::fmt_secs(scalar.median_s)
+    );
+    Json::obj(vec![
+        ("streams", Json::Num(m as f64)),
+        ("window", Json::Num(wlen as f64)),
+        ("lane_median_s", Json::Num(lanes.median_s)),
+        ("scalar_median_s", Json::Num(scalar.median_s)),
+        ("speedup_vs_scalar_streams", Json::Num(speedup)),
+    ])
+}
+
+/// Heap allocations per warm `stream_push` + window query (exact
+/// fraction over many pushes; the streaming zero-alloc contract
+/// requires this to be 0).
+fn stream_allocs(smoke: bool) -> f64 {
+    let (d, depth, wlen) = if smoke { (2, 2, 8) } else { (3, 3, 64) };
+    let words = truncated_words(d, depth);
+    let tbl = Arc::new(StreamTable::new(d, &words));
+    let mut rng = Rng::new(0xF166);
+    let steps = 4 * wlen;
+    let path = rng.brownian_path(steps, d, 0.5);
+    let mut stream = StreamEngine::new(Arc::clone(&tbl), wlen);
+    let mut row = vec![0.0; tbl.out_dim()];
+    // Warm pass: fills the window and crosses several refolds.
+    for j in 0..=steps {
+        stream.push(&path[j * d..(j + 1) * d]);
+        stream.window_into(&mut row);
+    }
+    let pushes = 3 * steps;
+    let before = alloc_count();
+    for k in 0..pushes {
+        let j = k % (steps + 1);
+        stream.push(&path[j * d..(j + 1) * d]);
+        stream.window_into(&mut row);
+        std::hint::black_box(&row);
+    }
+    let per_push = (alloc_count() - before) as f64 / pushes as f64;
+    println!("# steady-state allocations per stream push+query (w={wlen}): {per_push}");
+    per_push
+}
 
 fn main() {
     let full = full();
-    let batches: &[usize] = if full { &[1, 16, 32] } else { &[1, 16] };
-    let n_windows: &[usize] = if full {
+    let smoke = smoke();
+    let batches: &[usize] = if smoke {
+        &[1]
+    } else if full {
+        &[1, 16, 32]
+    } else {
+        &[1, 16]
+    };
+    let n_windows: &[usize] = if smoke {
+        &[2, 8]
+    } else if full {
         &[2, 8, 32, 128, 512, 1024]
     } else {
         &[2, 8, 32, 128, 512]
@@ -40,7 +202,7 @@ fn main() {
     for &b in batches {
         for &k in n_windows {
             // Path long enough to host K overlapping windows.
-            let m = (win_len + k).max(256);
+            let m = (win_len + k).max(if smoke { 64 } else { 256 });
             let mut paths = Vec::with_capacity(b * (m + 1) * d);
             for _ in 0..b {
                 paths.extend(rng.brownian_path(m, d, 0.2));
@@ -54,12 +216,12 @@ fn main() {
                 .collect();
             let eng = SigEngine::new(WordTable::build(d, &truncated_words(d, depth)));
 
-            let ours = time_auto("pathsig", budget, || {
+            let ours = timeit("pathsig", smoke, budget, || {
                 std::hint::black_box(windowed_signatures_batch(&eng, &paths, b, &windows));
             });
             // pySigLib-style: separate evaluation per window (its
             // windowed API shape), 4 threads.
-            let per_win = time_auto("per-window", budget, || {
+            let per_win = timeit("per-window", smoke, budget, || {
                 let outs = parallel_map(b * k, 4, |u| {
                     let (bi, wi) = (u / k, u % k);
                     let w = windows[wi];
@@ -70,7 +232,7 @@ fn main() {
                 std::hint::black_box(outs);
             });
             // Signatory-style Chen combination.
-            let chen = time_auto("chen-comb", budget, || {
+            let chen = timeit("chen-comb", smoke, budget, || {
                 let outs = parallel_map(b, eng.threads, |bi| {
                     chen_windowed_signatures(
                         d,
@@ -116,4 +278,39 @@ fn main() {
          (paper: median 153x across 2700 configs on H200; speedup must grow with K then saturate)"
     );
     dump("fig3_windows", Json::Arr(out_rows));
+
+    // ---- streaming section (ISSUE 4) → BENCH_stream.json ----
+    let srows = stream_rows(smoke, budget);
+    let headline = srows
+        .last()
+        .and_then(|r| r.get("speedup").as_f64())
+        .unwrap_or(1.0);
+    let multi = multi_stream_row(smoke, budget);
+    let allocs = stream_allocs(smoke);
+    let mode = if smoke {
+        "smoke"
+    } else if full {
+        "full"
+    } else {
+        "default"
+    };
+    let artifact = Json::obj(vec![
+        ("bench", Json::str("stream_windows")),
+        ("mode", Json::str(mode)),
+        (
+            "stream_vs_recompute",
+            Json::obj(vec![
+                // Largest measured window — where O(1) vs O(w) bites.
+                ("speedup", Json::Num(headline)),
+                ("rows", Json::Arr(srows)),
+            ]),
+        ),
+        ("multi_stream", multi),
+        ("steady_state_allocs_per_push", Json::Num(allocs)),
+    ]);
+    if json_mode() {
+        dump_root("BENCH_stream.json", artifact);
+    } else {
+        dump("stream_windows", artifact);
+    }
 }

@@ -20,10 +20,10 @@
 //! seconds.
 
 mod common;
-use common::{dump, dump_root, full, json_mode, smoke};
+use common::{dump, dump_root, full, json_mode, smoke, timeit};
 use pathsig::baselines::chen_full::chen_full_state;
 use pathsig::baselines::matmul_style_train_step;
-use pathsig::bench::{alloc_count, time_auto, time_fn, CountingAllocator, Timing};
+use pathsig::bench::{alloc_count, CountingAllocator, Timing};
 use pathsig::nn::{DeepSigModel, DeepSigSpec};
 use pathsig::sig::{
     sig_backward_batch, sig_backward_batch_scalar, signature_and_backward_batch_into,
@@ -37,14 +37,6 @@ use pathsig::words::{generate::sig_dim, truncated_words, WordTable};
 
 #[global_allocator]
 static ALLOC: CountingAllocator = CountingAllocator;
-
-fn timeit<F: FnMut()>(name: &str, smoke: bool, budget: f64, f: F) -> Timing {
-    if smoke {
-        time_fn(name, 1, 2, f)
-    } else {
-        time_auto(name, budget, f)
-    }
-}
 
 /// pySigLib-style training step: dense forward + reverse sweep that
 /// (like its autograd) re-multiplies the stored per-step exponentials —

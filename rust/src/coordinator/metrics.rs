@@ -19,6 +19,14 @@ pub struct Metrics {
     pub pjrt_executions: AtomicU64,
     /// Batches / requests executed on the native engine.
     pub native_executions: AtomicU64,
+    /// Streaming sessions opened (`stream_open`).
+    pub sessions_opened: AtomicU64,
+    /// Streaming sessions closed by the client (`stream_close`).
+    pub sessions_closed: AtomicU64,
+    /// Streaming sessions dropped by the idle-TTL sweep.
+    pub sessions_evicted: AtomicU64,
+    /// Samples pushed across all streaming sessions.
+    pub stream_pushes: AtomicU64,
     /// End-to-end per-request latency.
     pub request_latency: LatencyHistogram,
     /// Per-batch execution latency.
@@ -80,6 +88,22 @@ impl Metrics {
             (
                 "native_executions",
                 Json::Num(self.native_executions.load(Relaxed) as f64),
+            ),
+            (
+                "sessions_opened",
+                Json::Num(self.sessions_opened.load(Relaxed) as f64),
+            ),
+            (
+                "sessions_closed",
+                Json::Num(self.sessions_closed.load(Relaxed) as f64),
+            ),
+            (
+                "sessions_evicted",
+                Json::Num(self.sessions_evicted.load(Relaxed) as f64),
+            ),
+            (
+                "stream_pushes",
+                Json::Num(self.stream_pushes.load(Relaxed) as f64),
             ),
             (
                 "request_latency_p50_us",

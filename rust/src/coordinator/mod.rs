@@ -9,8 +9,15 @@
 //! batch axis being exactly the parallelism the paper's CUDA kernels
 //! exploit (§3.2, §5).
 //!
+//! Stateless compute ops are dynamically batched; **stateful streaming
+//! sessions** (`stream_open` / `stream_push` / `stream_window` /
+//! `stream_close`) hold a per-session [`crate::sig::StreamEngine`] in
+//! the service's session table, giving amortized-O(1) sliding-window
+//! serving with idle-TTL eviction and pooled per-session workspaces.
+//!
 //! * [`protocol`] — wire types (requests, responses, projections).
-//! * [`service`]  — engine cache + request execution (native / PJRT).
+//! * [`service`]  — engine cache + request execution (native / PJRT)
+//!   + the streaming session table.
 //! * [`batcher`]  — dynamic batching with size/latency policy.
 //! * [`server`]   — TCP JSON-lines front end.
 //! * [`metrics`]  — counters and latency histograms.
@@ -25,4 +32,4 @@ pub use batcher::{Batcher, BatcherConfig};
 pub use metrics::Metrics;
 pub use protocol::{parse_request, Request, RequestOp, Response};
 pub use server::{serve, ServerConfig};
-pub use service::{ConfigKey, SigService};
+pub use service::{ConfigKey, SigService, StreamReply};

@@ -20,12 +20,30 @@
 //! Extra ops: `"logsig"`, `"windowed"` (+ `"windows": [[l, r], …]`),
 //! `"metrics"`, `"ping"`.
 //!
+//! Stateful streaming sessions (amortized-O(1) sliding windows, see
+//! `sig::stream`):
+//! * `{"op": "stream_open", "dim": d, "depth": N, "projection": {…},
+//!   "window": w}` → `{"ok": true, "body": {"session": "s1", …}}`;
+//! * `{"op": "stream_push", "session": "s1", "samples": [/* k·d */]}`
+//!   — appends `k` samples in order;
+//! * `{"op": "stream_window", "session": "s1"}` → sliding-window
+//!   signature (`"mode": "full"` returns the running `S_{0,t}`
+//!   instead);
+//! * `{"op": "stream_close", "session": "s1"}` — frees the session
+//!   (sessions also expire after the server's idle TTL).
+//!
 //! Response: `{"id": …, "ok": true, "result": [...], "shape": [...],
 //! "backend": "native"|"pjrt", "latency_us": ...}` or
 //! `{"ok": false, "error": "..."}`.
 
 use crate::util::json::Json;
 use crate::words::{generate::sparse_leadlag_generators, Word, WordSpec};
+
+/// Upper bound on a session's sliding-window length (increments). The
+/// per-session two-stack store costs `O(window · state_len)` memory
+/// reserved at `stream_open`, so the wire protocol rejects windows
+/// beyond this before any allocation happens.
+pub const MAX_STREAM_WINDOW: usize = 1 << 16;
 
 /// Operation requested by the client.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -40,6 +58,30 @@ pub enum RequestOp {
     Metrics,
     /// Health check (control op, handled by the server).
     Ping,
+    /// Open a stateful streaming session (`window` = sliding-window
+    /// length in increments).
+    StreamOpen,
+    /// Push samples into an open session (`samples`, `session`).
+    StreamPush,
+    /// Query a session's sliding-window (or, with `mode: "full"`,
+    /// running) signature.
+    StreamWindow,
+    /// Close a session and free its workspace.
+    StreamClose,
+}
+
+impl RequestOp {
+    /// Whether this op addresses a stateful streaming session (routed
+    /// to the session table, never to the batcher).
+    pub fn is_stream(self) -> bool {
+        matches!(
+            self,
+            RequestOp::StreamOpen
+                | RequestOp::StreamPush
+                | RequestOp::StreamWindow
+                | RequestOp::StreamClose
+        )
+    }
 }
 
 /// Backend preference.
@@ -72,6 +114,15 @@ pub struct Request {
     pub path: Vec<f64>,
     /// For `Windowed`: index pairs.
     pub windows: Vec<(usize, usize)>,
+    /// For stream ops: the session handle (empty for `stream_open`).
+    pub session: String,
+    /// For `StreamPush`: flat `(k, dim)` samples to append.
+    pub samples: Vec<f64>,
+    /// For `StreamOpen`: sliding-window length in increments.
+    pub window_len: usize,
+    /// For `StreamWindow`: query the running `S_{0,t}` instead of the
+    /// sliding window (`"mode": "full"`).
+    pub full: bool,
 }
 
 /// Parse a JSON-line request.
@@ -84,19 +135,52 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
         "windowed" => RequestOp::Windowed,
         "metrics" => RequestOp::Metrics,
         "ping" => RequestOp::Ping,
+        "stream_open" => RequestOp::StreamOpen,
+        "stream_push" => RequestOp::StreamPush,
+        "stream_window" => RequestOp::StreamWindow,
+        "stream_close" => RequestOp::StreamClose,
         other => return Err(format!("unknown op '{other}'")),
     };
+    let blank = |id: String, op: RequestOp| Request {
+        id,
+        op,
+        dim: 0,
+        depth: 0,
+        spec: WordSpec::Truncated { depth: 0 },
+        backend: Backend::Auto,
+        path: Vec::new(),
+        windows: Vec::new(),
+        session: String::new(),
+        samples: Vec::new(),
+        window_len: 0,
+        full: false,
+    };
     if matches!(op, RequestOp::Metrics | RequestOp::Ping) {
-        return Ok(Request {
-            id,
-            op,
-            dim: 0,
-            depth: 0,
-            spec: WordSpec::Truncated { depth: 0 },
-            backend: Backend::Auto,
-            path: Vec::new(),
-            windows: Vec::new(),
-        });
+        return Ok(blank(id, op));
+    }
+    if op.is_stream() && op != RequestOp::StreamOpen {
+        // Session-addressed ops: the session carries the configuration,
+        // so no dim/projection is parsed here.
+        let session = j.get("session").as_str().unwrap_or("").to_string();
+        if session.is_empty() {
+            return Err("stream op needs a 'session' handle".into());
+        }
+        let mut req = blank(id, op);
+        req.session = session;
+        if op == RequestOp::StreamPush {
+            req.samples = j.f64_vec("samples");
+            if req.samples.is_empty() {
+                return Err("stream_push needs a non-empty 'samples' array".into());
+            }
+        }
+        if op == RequestOp::StreamWindow {
+            req.full = match j.get("mode").as_str().unwrap_or("window") {
+                "window" => false,
+                "full" => true,
+                other => return Err(format!("unknown stream_window mode '{other}'")),
+            };
+        }
+        return Ok(req);
     }
     let dim = j
         .get("dim")
@@ -113,6 +197,29 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
         "pjrt" => Backend::Pjrt,
         other => return Err(format!("unknown backend '{other}'")),
     };
+    if op == RequestOp::StreamOpen {
+        let window_len = j.get("window").as_usize().ok_or_else(|| {
+            "stream_open needs 'window' (sliding-window length in increments, ≥ 1)".to_string()
+        })?;
+        if window_len == 0 {
+            return Err("'window' must be ≥ 1".into());
+        }
+        if window_len > MAX_STREAM_WINDOW {
+            // The two-stack store reserves O(window · state_len) up
+            // front; an unbounded window would let one request abort
+            // the server on allocation failure.
+            return Err(format!(
+                "'window' {window_len} exceeds the server cap {MAX_STREAM_WINDOW}"
+            ));
+        }
+        let mut req = blank(id, op);
+        req.dim = dim;
+        req.depth = depth;
+        req.spec = spec;
+        req.backend = backend;
+        req.window_len = window_len;
+        return Ok(req);
+    }
     let path = j.f64_vec("path");
     if path.is_empty() || path.len() % dim != 0 {
         return Err(format!(
@@ -147,16 +254,14 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
             }
         }
     }
-    Ok(Request {
-        id,
-        op,
-        dim,
-        depth,
-        spec,
-        backend,
-        path,
-        windows,
-    })
+    let mut req = blank(id, op);
+    req.dim = dim;
+    req.depth = depth;
+    req.spec = spec;
+    req.backend = backend;
+    req.path = path;
+    req.windows = windows;
+    Ok(req)
 }
 
 fn parse_projection(j: &Json, depth: usize, dim: usize) -> Result<WordSpec, String> {
@@ -377,6 +482,59 @@ mod tests {
                "projection":{"type":"words","words":[[7]]},"path":[0,0,1,1]}"#
         )
         .is_err());
+    }
+
+    #[test]
+    fn parse_stream_verbs() {
+        let r = parse_request(
+            r#"{"op":"stream_open","dim":2,"depth":3,"window":16,
+                "projection":{"type":"truncated"}}"#,
+        )
+        .unwrap();
+        assert_eq!(r.op, RequestOp::StreamOpen);
+        assert_eq!((r.dim, r.depth, r.window_len), (2, 3, 16));
+
+        let r = parse_request(
+            r#"{"op":"stream_push","session":"s7","samples":[0.5,1.5,2.5,3.5]}"#,
+        )
+        .unwrap();
+        assert_eq!(r.op, RequestOp::StreamPush);
+        assert_eq!(r.session, "s7");
+        assert_eq!(r.samples.len(), 4);
+
+        let r = parse_request(r#"{"op":"stream_window","session":"s7"}"#).unwrap();
+        assert!(!r.full);
+        let r = parse_request(r#"{"op":"stream_window","session":"s7","mode":"full"}"#).unwrap();
+        assert!(r.full);
+
+        let r = parse_request(r#"{"op":"stream_close","session":"s7"}"#).unwrap();
+        assert_eq!(r.op, RequestOp::StreamClose);
+        assert!(r.op.is_stream() && !RequestOp::Signature.is_stream());
+    }
+
+    #[test]
+    fn rejects_malformed_stream_verbs() {
+        // Missing/zero window, missing session, empty samples, bad mode.
+        assert!(parse_request(r#"{"op":"stream_open","dim":2,"depth":2}"#).is_err());
+        assert!(parse_request(r#"{"op":"stream_open","dim":2,"depth":2,"window":0}"#).is_err());
+        // Windows beyond the cap are rejected before any allocation.
+        let big = format!(
+            r#"{{"op":"stream_open","dim":2,"depth":2,"window":{}}}"#,
+            MAX_STREAM_WINDOW + 1
+        );
+        assert!(parse_request(&big).unwrap_err().contains("cap"));
+        let at_cap = format!(
+            r#"{{"op":"stream_open","dim":2,"depth":2,"window":{MAX_STREAM_WINDOW}}}"#
+        );
+        assert_eq!(parse_request(&at_cap).unwrap().window_len, MAX_STREAM_WINDOW);
+        assert!(parse_request(r#"{"op":"stream_open","window":4}"#).is_err()); // no dim
+        assert!(parse_request(r#"{"op":"stream_push","samples":[1.0]}"#).is_err());
+        assert!(parse_request(r#"{"op":"stream_push","session":"s1"}"#).is_err());
+        assert!(parse_request(r#"{"op":"stream_window","session":""}"#).is_err());
+        assert!(
+            parse_request(r#"{"op":"stream_window","session":"s1","mode":"sideways"}"#).is_err()
+        );
+        assert!(parse_request(r#"{"op":"stream_close"}"#).is_err());
     }
 
     #[test]

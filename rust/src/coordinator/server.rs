@@ -8,7 +8,8 @@
 
 use super::batcher::{Batcher, BatcherConfig};
 use super::protocol::{parse_request, RequestOp, Response};
-use super::service::SigService;
+use super::service::{SigService, StreamReply};
+use crate::util::json::Json;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -33,21 +34,30 @@ impl Default for ServerConfig {
     }
 }
 
-/// A running server handle (owned listener thread + shutdown flag).
+/// A running server handle (owned listener + sweeper threads and the
+/// shutdown flag).
 pub struct ServerHandle {
     /// The address the listener actually bound (resolves `:0`).
     pub addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
+    sweep_thread: Option<std::thread::JoinHandle<()>>,
 }
 
 impl ServerHandle {
-    /// Request shutdown and join the accept loop.
+    /// Request shutdown and join the accept loop and session sweeper.
     pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
         // Poke the accept loop with a dummy connection.
         let _ = TcpStream::connect(self.addr);
         if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.sweep_thread.take() {
             let _ = h.join();
         }
     }
@@ -55,11 +65,7 @@ impl ServerHandle {
 
 impl Drop for ServerHandle {
     fn drop(&mut self) {
-        self.stop.store(true, Ordering::SeqCst);
-        let _ = TcpStream::connect(self.addr);
-        if let Some(h) = self.accept_thread.take() {
-            let _ = h.join();
-        }
+        self.stop_and_join();
     }
 }
 
@@ -69,6 +75,20 @@ pub fn serve(service: Arc<SigService>, config: ServerConfig) -> std::io::Result<
     let addr = listener.local_addr()?;
     let stop = Arc::new(AtomicBool::new(false));
     let batcher = Arc::new(Batcher::new(Arc::clone(&service), config.batcher));
+    // Background session sweeper: streaming sessions must be reclaimed
+    // by the idle TTL even when no stream traffic arrives to trigger
+    // the in-band sweep (the sweep itself is throttled service-side,
+    // so the short poll period costs nothing between real sweeps).
+    let sweep_thread = {
+        let stop = Arc::clone(&stop);
+        let svc = Arc::clone(&service);
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::SeqCst) {
+                std::thread::sleep(std::time::Duration::from_millis(100));
+                svc.evict_idle();
+            }
+        })
+    };
     let accept_thread = {
         let stop = Arc::clone(&stop);
         std::thread::spawn(move || {
@@ -91,6 +111,7 @@ pub fn serve(service: Arc<SigService>, config: ServerConfig) -> std::io::Result<
         addr,
         stop,
         accept_thread: Some(accept_thread),
+        sweep_thread: Some(sweep_thread),
     })
 }
 
@@ -145,6 +166,40 @@ fn handle_line(line: &str, service: &Arc<SigService>, batcher: &Arc<Batcher>) ->
             id,
             body: service.metrics.snapshot(),
         },
+        // Stateful session ops: routed straight to the session table
+        // (never batched — ordering within a session matters, and a
+        // connection's requests are handled sequentially).
+        op if op.is_stream() => {
+            let t0 = Instant::now();
+            match service.execute_stream(&req) {
+                Ok(StreamReply::Values { result, shape }) => Response::Ok {
+                    id,
+                    result,
+                    shape,
+                    backend: "native",
+                    latency_us: t0.elapsed().as_micros() as u64,
+                },
+                Ok(StreamReply::Opened { session, out_dim }) => Response::Json {
+                    id,
+                    body: Json::obj(vec![
+                        ("session", Json::str(&session)),
+                        ("out_dim", Json::Num(out_dim as f64)),
+                    ]),
+                },
+                Ok(StreamReply::Pushed { pushed, seen }) => Response::Json {
+                    id,
+                    body: Json::obj(vec![
+                        ("pushed", Json::Num(pushed as f64)),
+                        ("seen", Json::Num(seen as f64)),
+                    ]),
+                },
+                Ok(StreamReply::Closed) => Response::Json {
+                    id,
+                    body: Json::obj(vec![("closed", Json::Bool(true))]),
+                },
+                Err(error) => Response::Err { id, error },
+            }
+        }
         _ => {
             let t0 = Instant::now();
             match batcher.submit(req) {
@@ -255,6 +310,79 @@ mod tests {
         let body = m.get("body");
         assert!(body.get("requests_total").as_usize().unwrap() >= 3);
         assert!(body.get("batches_total").as_usize().unwrap() >= 1);
+        handle.shutdown();
+    }
+
+    #[test]
+    fn stream_session_roundtrip_over_tcp() {
+        let (handle, addr) = start_test_server();
+        let mut client = Client::connect(&addr).unwrap();
+        let opened = client
+            .call(r#"{"op":"stream_open","id":"o1","dim":1,"depth":2,"window":2}"#)
+            .unwrap();
+        assert_eq!(opened.get("ok").as_bool(), Some(true));
+        let session = opened.get("body").get("session").as_str().unwrap().to_string();
+
+        let pushed = client
+            .call(&format!(
+                r#"{{"op":"stream_push","session":"{session}","samples":[0,1,3,6]}}"#
+            ))
+            .unwrap();
+        assert_eq!(pushed.get("body").get("seen").as_usize(), Some(4));
+
+        let win = client
+            .call(&format!(r#"{{"op":"stream_window","session":"{session}"}}"#))
+            .unwrap();
+        let result = win.f64_vec("result");
+        assert!((result[0] - 5.0).abs() < 1e-9, "window level 1: {result:?}");
+
+        let closed = client
+            .call(&format!(r#"{{"op":"stream_close","session":"{session}"}}"#))
+            .unwrap();
+        assert_eq!(closed.get("body").get("closed").as_bool(), Some(true));
+
+        // The session is gone; the error is a JSON response and the
+        // connection (and server) stay alive.
+        let err = client
+            .call(&format!(r#"{{"op":"stream_window","session":"{session}"}}"#))
+            .unwrap();
+        assert_eq!(err.get("ok").as_bool(), Some(false));
+        let pong = client.call(r#"{"op":"ping"}"#).unwrap();
+        assert_eq!(pong.get("ok").as_bool(), Some(true));
+        handle.shutdown();
+    }
+
+    #[test]
+    fn idle_sessions_reclaimed_without_stream_traffic() {
+        // The background sweeper must enforce the TTL even when no
+        // further stream verbs arrive to trigger the in-band sweep.
+        let mut service = SigService::new(None);
+        service.session_ttl = std::time::Duration::from_millis(200);
+        let service = Arc::new(service);
+        let handle = serve(
+            Arc::clone(&service),
+            ServerConfig {
+                addr: "127.0.0.1:0".to_string(),
+                batcher: BatcherConfig {
+                    max_batch: 8,
+                    max_wait: std::time::Duration::from_millis(1),
+                },
+            },
+        )
+        .unwrap();
+        let mut client = Client::connect(&handle.addr.to_string()).unwrap();
+        let opened = client
+            .call(r#"{"op":"stream_open","dim":1,"depth":2,"window":4}"#)
+            .unwrap();
+        assert_eq!(opened.get("ok").as_bool(), Some(true));
+        assert_eq!(service.session_count(), 1);
+        // Silence: only the sweeper thread can reclaim the session.
+        std::thread::sleep(std::time::Duration::from_millis(800));
+        assert_eq!(service.session_count(), 0, "sweeper did not reclaim idle session");
+        assert_eq!(
+            service.metrics.sessions_evicted.load(std::sync::atomic::Ordering::Relaxed),
+            1
+        );
         handle.shutdown();
     }
 

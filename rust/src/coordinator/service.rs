@@ -11,12 +11,17 @@
 
 use super::protocol::{Backend, Request, RequestOp};
 use crate::logsig::LogSigEngine;
-use crate::sig::{signature, signature_batch_into, windowed_signatures, SigEngine, Window};
+use crate::sig::{
+    signature, signature_batch_into, windowed_signatures, SigEngine, StreamEngine, StreamScratch,
+    StreamTable, Window,
+};
 use crate::runtime::Runtime;
 use crate::util::pool::Pool;
 use crate::words::{WordSpec, WordTable};
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
 use std::sync::{Arc, Mutex, RwLock};
+use std::time::{Duration, Instant};
 
 /// Reusable flatten/output buffers for the stacked-batch execution
 /// path: the service keeps them pooled so steady-state batch requests
@@ -60,6 +65,10 @@ impl ConfigKey {
                 RequestOp::Windowed => "windowed",
                 RequestOp::Metrics => "metrics",
                 RequestOp::Ping => "ping",
+                RequestOp::StreamOpen
+                | RequestOp::StreamPush
+                | RequestOp::StreamWindow
+                | RequestOp::StreamClose => "stream",
             },
             points: if req.dim == 0 { 0 } else { req.path.len() / req.dim },
         }
@@ -82,11 +91,82 @@ fn spec_identity(spec: &WordSpec) -> String {
     }
 }
 
+/// One live streaming session: a stateful [`StreamEngine`] behind its
+/// own lock (so concurrent sessions never serialize on the table
+/// lock), plus the idle-eviction timestamp (milliseconds since the
+/// service epoch, atomically bumped outside the engine lock).
+struct StreamSession {
+    stream: Mutex<StreamEngine>,
+    last_used_ms: AtomicU64,
+}
+
+/// What a stream op produced (the server maps this onto the wire
+/// [`super::protocol::Response`] variants).
+#[derive(Clone, Debug, PartialEq)]
+pub enum StreamReply {
+    /// `stream_open` succeeded.
+    Opened {
+        /// The session handle to pass to subsequent stream ops.
+        session: String,
+        /// Output dimension `|I|` of the session's projection.
+        out_dim: usize,
+    },
+    /// `stream_push` appended samples.
+    Pushed {
+        /// Samples appended by this request.
+        pushed: usize,
+        /// Total samples the session has seen.
+        seen: usize,
+    },
+    /// `stream_window` computed a signature.
+    Values {
+        /// Flat result values.
+        result: Vec<f64>,
+        /// Logical shape (`[|I|]`).
+        shape: Vec<usize>,
+    },
+    /// `stream_close` freed the session.
+    Closed,
+}
+
 /// Engine cache + optional PJRT runtime.
 pub struct SigService {
     engines: RwLock<HashMap<String, Arc<SigEngine>>>,
     logsig_engines: Mutex<HashMap<(usize, usize), Arc<LogSigEngine>>>,
     batch_scratch: Pool<BatchScratch>,
+    /// Factor-closed streaming tables, cached per `(dim, spec)` like
+    /// [`SigService::engine`].
+    stream_tables: RwLock<HashMap<String, Arc<StreamTable>>>,
+    /// Live streaming sessions keyed by numeric id. The table lock is
+    /// held only for O(1) lookups/inserts; each session carries its own
+    /// engine lock, so concurrent sessions compute in parallel.
+    sessions: Mutex<HashMap<u64, Arc<StreamSession>>>,
+    next_session: AtomicU64,
+    /// Epoch for the sessions' millisecond idle timestamps.
+    epoch: Instant,
+    /// Recycled stream workspaces: closing (or evicting) a session
+    /// returns its buffers here so the next `stream_open` reuses them.
+    stream_scratch: Pool<StreamScratch>,
+    /// Idle eviction threshold: sessions untouched for longer than
+    /// this are dropped on the next stream op (their buffers are
+    /// recycled). Set before sharing the service across threads.
+    pub session_ttl: Duration,
+    /// Upper bound on concurrently open sessions: `stream_open` is
+    /// rejected (after an eviction sweep) once the table is full, so a
+    /// client loop cannot exhaust server memory faster than the TTL
+    /// reclaims it. Set before sharing the service across threads.
+    pub max_sessions: usize,
+    /// Per-session reservation budget in `f64` slots: `stream_open`
+    /// rejects configurations whose two-stack store would reserve more
+    /// than this (`window · (state_len + d)`). The wire-level
+    /// `MAX_STREAM_WINDOW` caps only the increment count; this bounds
+    /// the actual memory, which scales with the word-table size.
+    /// Default `1 << 24` (128 MiB per session); worst-case streaming
+    /// footprint is `max_sessions · max_session_floats · 8` bytes.
+    pub max_session_floats: usize,
+    /// Millisecond timestamp of the last idle-eviction sweep (the
+    /// sweep is throttled so hot stream ops stay O(1) on the table).
+    last_sweep_ms: AtomicU64,
     /// PJRT artifact runtime, if one was configured at boot.
     pub runtime: Option<Arc<Runtime>>,
     /// Shared metrics registry (also read by the server).
@@ -100,6 +180,15 @@ impl SigService {
             engines: RwLock::new(HashMap::new()),
             logsig_engines: Mutex::new(HashMap::new()),
             batch_scratch: Pool::default(),
+            stream_tables: RwLock::new(HashMap::new()),
+            sessions: Mutex::new(HashMap::new()),
+            next_session: AtomicU64::new(1),
+            epoch: Instant::now(),
+            stream_scratch: Pool::default(),
+            session_ttl: Duration::from_secs(300),
+            max_sessions: 1024,
+            max_session_floats: 1 << 24,
+            last_sweep_ms: AtomicU64::new(0),
             runtime,
             metrics: Arc::new(super::Metrics::new()),
         }
@@ -127,6 +216,247 @@ impl SigService {
             .entry((dim, depth))
             .or_insert_with(|| Arc::new(LogSigEngine::new(dim, depth)))
             .clone()
+    }
+
+    /// Get (or build) the factor-closed streaming table for a
+    /// (dim, spec) pair.
+    pub fn stream_table(&self, dim: usize, spec: &WordSpec) -> Arc<StreamTable> {
+        let key = format!("{dim}:{}", spec_identity(spec));
+        if let Some(t) = self.stream_tables.read().unwrap().get(&key) {
+            return t.clone();
+        }
+        let words = spec.words(dim);
+        let table = Arc::new(StreamTable::new(dim, &words));
+        self.stream_tables.write().unwrap().insert(key, table.clone());
+        table
+    }
+
+    /// Live session count (after eviction sweeps).
+    pub fn session_count(&self) -> usize {
+        self.sessions.lock().unwrap().len()
+    }
+
+    /// Drop sessions idle for longer than [`SigService::session_ttl`],
+    /// recycling their workspaces. Runs at the start of every stream
+    /// op and periodically from the server's background sweeper (so
+    /// memory is reclaimed even when stream traffic stops entirely);
+    /// internally throttled, so callers may invoke it freely.
+    pub fn evict_idle(&self) {
+        let now_ms = self.epoch.elapsed().as_millis() as u64;
+        let ttl_ms = self.session_ttl.as_millis() as u64;
+        // Throttle: the sweep scans the whole table, so run it at most
+        // every ttl/10 ms; between sweeps stream ops touch the table
+        // lock only for their O(1) lookup. A CAS elects one sweeper.
+        let interval = ttl_ms / 10;
+        let last = self.last_sweep_ms.load(Relaxed);
+        if now_ms.saturating_sub(last) < interval {
+            return;
+        }
+        if self
+            .last_sweep_ms
+            .compare_exchange(last, now_ms, Relaxed, Relaxed)
+            .is_err()
+        {
+            return; // another thread is sweeping
+        }
+        let mut evicted = Vec::new();
+        {
+            let mut sessions = self.sessions.lock().unwrap();
+            let expired: Vec<u64> = sessions
+                .iter()
+                .filter(|(_, s)| now_ms.saturating_sub(s.last_used_ms.load(Relaxed)) > ttl_ms)
+                .map(|(&id, _)| id)
+                .collect();
+            for id in expired {
+                if let Some(s) = sessions.remove(&id) {
+                    evicted.push(s);
+                }
+            }
+        }
+        if !evicted.is_empty() {
+            self.metrics.sessions_evicted.fetch_add(evicted.len() as u64, Relaxed);
+            self.recycle_sessions(evicted);
+        }
+    }
+
+    /// Return removed sessions' buffers to the scratch pool. A session
+    /// with an op still in flight (its `Arc` has another holder) is
+    /// simply dropped once that op finishes — recycling is an
+    /// optimisation, not a correctness requirement.
+    fn recycle_sessions(&self, removed: Vec<Arc<StreamSession>>) {
+        let mut cache = self.stream_scratch.take_at_least(0);
+        for sess in removed {
+            if let Ok(sess) = Arc::try_unwrap(sess) {
+                if let Ok(stream) = sess.stream.into_inner() {
+                    cache.push(stream.into_scratch());
+                }
+            }
+        }
+        self.stream_scratch.put(cache);
+    }
+
+    /// Current time in milliseconds since the service epoch.
+    fn now_ms(&self) -> u64 {
+        self.epoch.elapsed().as_millis() as u64
+    }
+
+    /// Parse an `"s<N>"` session handle. Only the canonical form is
+    /// accepted — the round-trip check rejects aliases like `"s+7"` or
+    /// `"s007"` that `u64::from_str` would otherwise tolerate (a
+    /// malformed handle must error, never address another session).
+    fn parse_session_id(handle: &str) -> Result<u64, String> {
+        handle
+            .strip_prefix('s')
+            .and_then(|n| n.parse::<u64>().ok())
+            .filter(|id| format!("s{id}") == handle)
+            .ok_or_else(|| format!("malformed session handle '{handle}'"))
+    }
+
+    /// Execute one stateful stream op against the session table.
+    /// Stream ops bypass the batcher: they are order-sensitive per
+    /// session (a connection's requests are handled sequentially, so a
+    /// client observes its own pushes).
+    pub fn execute_stream(&self, req: &Request) -> Result<StreamReply, String> {
+        self.evict_idle();
+        match req.op {
+            RequestOp::StreamOpen => {
+                // Cheap pre-check before any table/engine work; racing
+                // opens are caught again under the insert lock below.
+                if self.session_count() >= self.max_sessions {
+                    return Err(format!(
+                        "session table full ({} live sessions); close or let idle \
+                         sessions expire (ttl {:?})",
+                        self.max_sessions, self.session_ttl
+                    ));
+                }
+                let table = self.stream_table(req.dim, &req.spec);
+                // Bound the actual reservation, not just the window
+                // count: the two-stack store scales with the table.
+                let need = req
+                    .window_len
+                    .saturating_mul(table.state_len() + table.dim());
+                if need > self.max_session_floats {
+                    return Err(format!(
+                        "session would reserve {need} floats (window {} × state \
+                         {}), exceeding the per-session budget of {} floats",
+                        req.window_len,
+                        table.state_len(),
+                        self.max_session_floats
+                    ));
+                }
+                let scratch = {
+                    let mut cache = self.stream_scratch.take_at_least(0);
+                    let s = cache.pop().unwrap_or_default();
+                    self.stream_scratch.put(cache);
+                    s
+                };
+                let stream = StreamEngine::with_scratch(table, req.window_len, scratch);
+                let out_dim = stream.out_dim();
+                let id = self.next_session.fetch_add(1, Relaxed);
+                {
+                    // Cap check and insert under one lock so racing
+                    // opens cannot overshoot `max_sessions`.
+                    let mut sessions = self.sessions.lock().unwrap();
+                    if sessions.len() >= self.max_sessions {
+                        return Err(format!(
+                            "session table full ({} live sessions); close or let \
+                             idle sessions expire (ttl {:?})",
+                            self.max_sessions, self.session_ttl
+                        ));
+                    }
+                    sessions.insert(
+                        id,
+                        Arc::new(StreamSession {
+                            stream: Mutex::new(stream),
+                            last_used_ms: AtomicU64::new(self.now_ms()),
+                        }),
+                    );
+                }
+                self.metrics.sessions_opened.fetch_add(1, Relaxed);
+                Ok(StreamReply::Opened {
+                    session: format!("s{id}"),
+                    out_dim,
+                })
+            }
+            RequestOp::StreamPush => self.with_session(&req.session, |stream| {
+                let d = stream.dim();
+                if req.samples.len() % d != 0 {
+                    return Err(format!(
+                        "samples length {} not divisible by session dim {d}",
+                        req.samples.len()
+                    ));
+                }
+                for sample in req.samples.chunks_exact(d) {
+                    stream.push(sample);
+                }
+                self.metrics
+                    .stream_pushes
+                    .fetch_add((req.samples.len() / d) as u64, Relaxed);
+                Ok(StreamReply::Pushed {
+                    pushed: req.samples.len() / d,
+                    seen: stream.samples_seen(),
+                })
+            }),
+            RequestOp::StreamWindow => self.with_session(&req.session, |stream| {
+                let mut result = vec![0.0; stream.out_dim()];
+                if req.full {
+                    stream.signature_into(&mut result);
+                } else {
+                    stream.window_into(&mut result);
+                }
+                let shape = vec![result.len()];
+                Ok(StreamReply::Values { result, shape })
+            }),
+            RequestOp::StreamClose => {
+                let id = Self::parse_session_id(&req.session)?;
+                let removed = self.sessions.lock().unwrap().remove(&id);
+                match removed {
+                    Some(sess) => {
+                        self.recycle_sessions(vec![sess]);
+                        self.metrics.sessions_closed.fetch_add(1, Relaxed);
+                        Ok(StreamReply::Closed)
+                    }
+                    None => Err(format!(
+                        "unknown session '{}' (already closed or evicted)",
+                        req.session
+                    )),
+                }
+            }
+            _ => Err("not a stream op".into()),
+        }
+    }
+
+    /// Run `f` on a live session, bumping its idle timestamp. The
+    /// global table lock is held only for the lookup; the computation
+    /// runs under the session's own lock, so concurrent sessions never
+    /// serialize on each other.
+    fn with_session<T>(
+        &self,
+        handle: &str,
+        f: impl FnOnce(&mut StreamEngine) -> Result<T, String>,
+    ) -> Result<T, String> {
+        let id = Self::parse_session_id(handle)?;
+        let sess = {
+            // Bump the idle stamp while still holding the table lock:
+            // the sweeper scans under the same lock, so lookup-and-touch
+            // is atomic w.r.t. eviction — a just-looked-up session can
+            // no longer be reaped before its timestamp refresh lands
+            // (which would acknowledge a push on a detached engine).
+            let sessions = self.sessions.lock().unwrap();
+            match sessions.get(&id) {
+                Some(sess) => {
+                    sess.last_used_ms.store(self.now_ms(), Relaxed);
+                    Arc::clone(sess)
+                }
+                None => {
+                    return Err(format!(
+                        "unknown session '{handle}' (already closed or evicted)"
+                    ))
+                }
+            }
+        };
+        let mut stream = sess.stream.lock().unwrap();
+        f(&mut stream)
     }
 
     /// Name of a PJRT artifact able to serve `key` (batch size `b`), if
@@ -217,6 +547,12 @@ impl SigService {
             }
             RequestOp::Metrics | RequestOp::Ping => {
                 Err("control ops are handled by the server, not the service".into())
+            }
+            RequestOp::StreamOpen
+            | RequestOp::StreamPush
+            | RequestOp::StreamWindow
+            | RequestOp::StreamClose => {
+                Err("stream ops are stateful; use SigService::execute_stream".into())
             }
         }
     }
@@ -372,6 +708,201 @@ mod tests {
             let single = crate::sig::signature(&eng, p);
             assert_eq!(batch[b], single);
         }
+    }
+
+    #[test]
+    fn stream_session_lifecycle() {
+        let s = svc();
+        let open = parse_request(
+            r#"{"op":"stream_open","dim":1,"depth":2,"window":2}"#,
+        )
+        .unwrap();
+        let reply = s.execute_stream(&open).unwrap();
+        let (session, out_dim) = match reply {
+            StreamReply::Opened { session, out_dim } => (session, out_dim),
+            other => panic!("expected Opened, got {other:?}"),
+        };
+        assert_eq!(out_dim, 2); // (1), (1,1)
+        assert_eq!(s.session_count(), 1);
+
+        let push = parse_request(&format!(
+            r#"{{"op":"stream_push","session":"{session}","samples":[0,1,3,6]}}"#
+        ))
+        .unwrap();
+        match s.execute_stream(&push).unwrap() {
+            StreamReply::Pushed { pushed, seen } => {
+                assert_eq!((pushed, seen), (4, 4));
+            }
+            other => panic!("expected Pushed, got {other:?}"),
+        }
+
+        let query = parse_request(&format!(
+            r#"{{"op":"stream_window","session":"{session}"}}"#
+        ))
+        .unwrap();
+        match s.execute_stream(&query).unwrap() {
+            StreamReply::Values { result, shape } => {
+                // Window of last 2 increments: X_3 - X_1 = 5.
+                assert_eq!(shape, vec![2]);
+                assert!((result[0] - 5.0).abs() < 1e-12);
+            }
+            other => panic!("expected Values, got {other:?}"),
+        }
+        let full = parse_request(&format!(
+            r#"{{"op":"stream_window","session":"{session}","mode":"full"}}"#
+        ))
+        .unwrap();
+        match s.execute_stream(&full).unwrap() {
+            StreamReply::Values { result, .. } => assert!((result[0] - 6.0).abs() < 1e-12),
+            other => panic!("expected Values, got {other:?}"),
+        }
+
+        let close = parse_request(&format!(
+            r#"{{"op":"stream_close","session":"{session}"}}"#
+        ))
+        .unwrap();
+        assert_eq!(s.execute_stream(&close).unwrap(), StreamReply::Closed);
+        assert_eq!(s.session_count(), 0);
+        // Double close errors without panicking.
+        let err = s.execute_stream(&close).unwrap_err();
+        assert!(err.contains("unknown session"), "{err}");
+        // Push to the closed session errors too.
+        assert!(s.execute_stream(&push).is_err());
+    }
+
+    #[test]
+    fn stream_sessions_evict_after_ttl() {
+        let mut service = SigService::new(None);
+        service.session_ttl = Duration::from_millis(40);
+        let s = service;
+        let open = parse_request(
+            r#"{"op":"stream_open","dim":2,"depth":2,"window":4}"#,
+        )
+        .unwrap();
+        let session = match s.execute_stream(&open).unwrap() {
+            StreamReply::Opened { session, .. } => session,
+            other => panic!("{other:?}"),
+        };
+        std::thread::sleep(Duration::from_millis(150));
+        let push = parse_request(&format!(
+            r#"{{"op":"stream_push","session":"{session}","samples":[0,0]}}"#
+        ))
+        .unwrap();
+        let err = s.execute_stream(&push).unwrap_err();
+        assert!(err.contains("unknown session"), "{err}");
+        assert_eq!(s.session_count(), 0);
+        assert_eq!(
+            s.metrics.sessions_evicted.load(std::sync::atomic::Ordering::Relaxed),
+            1
+        );
+    }
+
+    #[test]
+    fn stream_session_cap_rejects_excess_opens() {
+        let mut service = SigService::new(None);
+        service.max_sessions = 2;
+        let s = service;
+        let open = parse_request(
+            r#"{"op":"stream_open","dim":1,"depth":1,"window":2}"#,
+        )
+        .unwrap();
+        let first = match s.execute_stream(&open).unwrap() {
+            StreamReply::Opened { session, .. } => session,
+            other => panic!("{other:?}"),
+        };
+        s.execute_stream(&open).unwrap();
+        let err = s.execute_stream(&open).unwrap_err();
+        assert!(err.contains("session table full"), "{err}");
+        // Closing one frees a slot.
+        let close = parse_request(&format!(
+            r#"{{"op":"stream_close","session":"{first}"}}"#
+        ))
+        .unwrap();
+        s.execute_stream(&close).unwrap();
+        assert!(s.execute_stream(&open).is_ok());
+    }
+
+    #[test]
+    fn stream_open_respects_session_float_budget() {
+        // The budget bounds window · (state_len + d), not the raw
+        // window count — a deep table with a modest window must be
+        // rejected before any reservation happens.
+        let mut service = SigService::new(None);
+        service.max_session_floats = 100;
+        let s = service;
+        let open = parse_request(
+            r#"{"op":"stream_open","dim":2,"depth":3,"window":64}"#,
+        )
+        .unwrap();
+        let err = s.execute_stream(&open).unwrap_err();
+        assert!(err.contains("per-session budget"), "{err}");
+        assert_eq!(s.session_count(), 0);
+        // A small window over the same table fits (15 + 2 floats/slot).
+        let open = parse_request(
+            r#"{"op":"stream_open","dim":2,"depth":3,"window":2}"#,
+        )
+        .unwrap();
+        assert!(s.execute_stream(&open).is_ok());
+    }
+
+    #[test]
+    fn stream_push_dim_mismatch_rejected() {
+        let s = svc();
+        let open = parse_request(
+            r#"{"op":"stream_open","dim":3,"depth":1,"window":2}"#,
+        )
+        .unwrap();
+        let session = match s.execute_stream(&open).unwrap() {
+            StreamReply::Opened { session, .. } => session,
+            other => panic!("{other:?}"),
+        };
+        let push = parse_request(&format!(
+            r#"{{"op":"stream_push","session":"{session}","samples":[1,2]}}"#
+        ))
+        .unwrap();
+        let err = s.execute_stream(&push).unwrap_err();
+        assert!(err.contains("not divisible"), "{err}");
+        // Garbage and non-canonical handles are rejected before the
+        // session lookup — "s+1"/"s01" must not alias session s1.
+        for handle in ["nope", "s+1", "s01", "s 1", "s18446744073709551616"] {
+            let bad = parse_request(&format!(
+                r#"{{"op":"stream_push","session":"{handle}","samples":[1,2,3]}}"#
+            ))
+            .unwrap();
+            assert!(
+                s.execute_stream(&bad).unwrap_err().contains("malformed"),
+                "handle {handle:?} must be rejected as malformed"
+            );
+        }
+    }
+
+    #[test]
+    fn stream_open_reuses_pooled_scratch_and_caches_tables() {
+        let s = svc();
+        let open = parse_request(
+            r#"{"op":"stream_open","dim":2,"depth":3,"window":8}"#,
+        )
+        .unwrap();
+        let a = s.stream_table(2, &WordSpec::Truncated { depth: 3 });
+        let b = s.stream_table(2, &WordSpec::Truncated { depth: 3 });
+        assert!(Arc::ptr_eq(&a, &b));
+        // Open → close → open round-trips the scratch pool.
+        for _ in 0..2 {
+            let session = match s.execute_stream(&open).unwrap() {
+                StreamReply::Opened { session, .. } => session,
+                other => panic!("{other:?}"),
+            };
+            let close = parse_request(&format!(
+                r#"{{"op":"stream_close","session":"{session}"}}"#
+            ))
+            .unwrap();
+            s.execute_stream(&close).unwrap();
+        }
+        assert_eq!(s.session_count(), 0);
+        assert_eq!(
+            s.metrics.sessions_opened.load(std::sync::atomic::Ordering::Relaxed),
+            2
+        );
     }
 
     #[test]

@@ -20,7 +20,8 @@
 //!   inverse) used by the baselines and the log-signature.
 //! * [`sig`] — the core engine: batched forward/backward signature
 //!   computation over arbitrary prefix-closed word tables, windowed
-//!   signatures (§5).
+//!   signatures (§5), and the streaming engine (amortized-O(1) sliding
+//!   windows via a two-stack banker's queue over factor-closed tables).
 //! * [`logsig`] — log-signatures in the Lyndon basis with the §3.3
 //!   truncated-materialisation optimisation.
 //! * [`baselines`] — faithful re-implementations of the comparator
@@ -33,7 +34,7 @@
 //! * [`runtime`] — PJRT executable cache loading the AOT artifacts emitted
 //!   by `python/compile/aot.py` (HLO text, see DESIGN.md).
 //! * [`coordinator`] — the L3 serving layer: TCP JSON-lines feature server,
-//!   dynamic batcher, router, metrics.
+//!   dynamic batcher, router, stateful streaming sessions, metrics.
 //! * [`util`] — from-scratch substrates: JSON, PRNG, FFT, thread pool,
 //!   stats, CLI parsing, property-testing mini-framework.
 //! * [`bench`] — timing harness + counting allocator used by `cargo bench`.

@@ -23,6 +23,7 @@
 mod backward;
 mod forward;
 pub mod lanes;
+mod stream;
 mod windows;
 
 pub use backward::{
@@ -37,6 +38,7 @@ pub use forward::{
     signature_batch_scalar, signature_stream, signature_stream_into,
 };
 pub use lanes::{backward_step_lanes, chen_update_lanes, ForwardWorkspace, DEFAULT_LANE_WIDTH};
+pub use stream::{MultiStream, StreamEngine, StreamScratch, StreamTable};
 pub use windows::{
     expanding_windows, sliding_windows, window_signature, windowed_signatures,
     windowed_signatures_batch, windowed_signatures_batch_into, windowed_signatures_into, Window,

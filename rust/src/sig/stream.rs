@@ -1,0 +1,1035 @@
+//! Streaming signature engine — amortized-O(1) sliding windows.
+//!
+//! The batch windowed path (`sig::windows`) recomputes every window
+//! from its left edge: serving a live tick stream that way costs
+//! O(window) per new sample. This module maintains the same quantities
+//! incrementally:
+//!
+//! * **extend**: the running signature `S_{0,t}` advances by one
+//!   [`crate::sig::chen_update`] per sample (Chen's identity is inherently
+//!   incremental);
+//! * **sliding window**: the last-`w`-increments signature
+//!   `S_{t-w,t}` is maintained in amortized `O(|W|·N)` per push —
+//!   *independent of `w`* — with a **two-stack banker's queue** of
+//!   partial signatures, avoiding group inverses entirely (inverse-based
+//!   sliding updates are the numerically fragile scheme the paper warns
+//!   about; see `baselines::chen_windows`).
+//!
+//! ## The two-stack queue
+//!
+//! The window's increments are split into an older *front* segment and
+//! a newer *back* segment (`window = front ∘ back`):
+//!
+//! ```text
+//!   increments:   v1 v2 v3 | v4 v5          (chronological)
+//!                 ---front---  ---back---
+//!   front stack:  [S3, S2, S1]   Si = vi ⊗ … ⊗ v3  (suffix products,
+//!                        ^ top = S1 = oldest)
+//!   back stack:   raw v4, v5  +  back_agg = v4 ⊗ v5 (running prefix)
+//!   window sig =  front.top ⊗ back_agg  =  v1 ⊗ v2 ⊗ v3 ⊗ v4 ⊗ v5
+//! ```
+//!
+//! A push extends `back_agg` by one Chen update. Evicting the oldest
+//! increment pops the front stack; when the front is empty the back is
+//! **re-folded**: its raw increments are replayed newest-to-oldest,
+//! each left-multiplied onto the previous suffix product
+//! (`S_i = exp(v_i) ⊗ S_{i+1}`), and pushed so the oldest ends on top.
+//! Every increment is folded exactly once, so the amortized cost per
+//! push is one Chen update plus one left-multiply — O(1) in the window
+//! length (the classic banker's-queue argument).
+//!
+//! ## Factor closure
+//!
+//! The left-multiply `(exp(dx) ⊗ S)(w) = Σ_k dx^{w_{:k}}/k! · S(w_{k:})`
+//! and the front⊗back combine both read **suffixes** of table words,
+//! while the engine's state set is only prefix-closed. [`StreamTable`]
+//! therefore builds its word table over the **factor closure** (every
+//! contiguous subword of every requested word) and adds a suffix-index
+//! CSR mirroring `csr_prefix`. For truncated, anisotropic and DAG word
+//! sets the factor closure *is* the prefix closure (those sets are
+//! already suffix-closed), so the augmentation is free; sparse custom
+//! word lists grow by at most `|w|²/2` entries per requested word.
+//!
+//! ## Vectorized sessions
+//!
+//! [`MultiStream`] runs `M` lockstep streams through the lane-major
+//! SoA kernels of [`crate::sig::lanes`]: pushes go through
+//! [`chen_update_lanes`], refolds and window queries through lane-major
+//! left-multiply/combine sweeps, so `M` concurrent sessions cost one
+//! table walk per `L` streams. Per lane the arithmetic order is
+//! identical to the scalar [`StreamEngine`], so results match bitwise.
+//!
+//! All per-stream buffers are sized at construction (bounded by the
+//! window length), so a warm push performs **zero heap allocations** —
+//! asserted by the counting allocator in `benches/fig3_windows.rs`.
+
+use super::forward::chen_update;
+use super::lanes::chen_update_lanes;
+use super::SigEngine;
+use crate::words::{Word, WordTable};
+use std::collections::{HashMap, HashSet};
+use std::sync::Arc;
+
+/// A [`SigEngine`] over the **factor closure** of a requested word set,
+/// extended with the suffix-index CSR the streaming kernels need
+/// (left-multiplication and general Chen combine read suffix values;
+/// see the module docs). Build once per configuration and share across
+/// sessions via `Arc`.
+#[derive(Clone, Debug)]
+pub struct StreamTable {
+    /// Engine over the factor-closed table. Its `output_map` covers the
+    /// augmented request; streaming entry points project through the
+    /// table's private `out_map` (the originally requested words) via
+    /// [`StreamTable::project_into`] instead.
+    pub eng: SigEngine,
+    /// Suffix state indices in the same packed level-major CSR layout
+    /// as `csr_prefix`: `csr_suffix[csr_start[i] + k]` = state index of
+    /// `w_i` with its first `k` letters dropped (entry `k = 0` is `i`
+    /// itself).
+    csr_suffix: Vec<u32>,
+    /// State indices of the *originally requested* words, request
+    /// order — the streaming output projection.
+    out_map: Vec<u32>,
+}
+
+impl StreamTable {
+    /// Build the factor-closed streaming table for `request` over
+    /// alphabet `d`. The underlying [`WordTable`] is built over the
+    /// request augmented with every proper suffix of every requested
+    /// word; its prefix closure is then exactly the factor closure.
+    pub fn new(d: usize, request: &[Word]) -> StreamTable {
+        let mut aug = request.to_vec();
+        let mut seen: HashSet<Vec<u16>> = request.iter().map(|w| w.0.clone()).collect();
+        for w in request {
+            for k in 1..w.len() {
+                let s = w.suffix_from(k);
+                if seen.insert(s.0.clone()) {
+                    aug.push(s);
+                }
+            }
+        }
+        let eng = SigEngine::new(WordTable::build(d, &aug));
+        let t = &eng.table;
+        let out_map = t.output_map[..request.len()].to_vec();
+        let index: HashMap<&[u16], u32> = t
+            .words
+            .iter()
+            .enumerate()
+            .map(|(i, w)| (w.0.as_slice(), i as u32))
+            .collect();
+        let mut csr_suffix = vec![0u32; t.csr_letters.len()];
+        for (i, w) in t.words.iter().enumerate() {
+            let base = t.csr_start[i] as usize;
+            for k in 0..w.len() {
+                csr_suffix[base + k] = *index
+                    .get(&w.0[k..])
+                    .expect("factor closure must contain every suffix");
+            }
+        }
+        let table = StreamTable {
+            eng,
+            csr_suffix,
+            out_map,
+        };
+        debug_assert!({
+            table.check_invariants();
+            true
+        });
+        table
+    }
+
+    /// Alphabet size `d`.
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.eng.table.d
+    }
+
+    /// Output dimension `|I|` of the *original* request.
+    #[inline]
+    pub fn out_dim(&self) -> usize {
+        self.out_map.len()
+    }
+
+    /// Closure state length (factor closure, including ε).
+    #[inline]
+    pub fn state_len(&self) -> usize {
+        self.eng.table.state_len
+    }
+
+    /// Project a factor-closure state onto the originally requested
+    /// coordinates (`out.len() == out_dim()`).
+    pub fn project_into(&self, state: &[f64], out: &mut [f64]) {
+        debug_assert_eq!(state.len(), self.state_len());
+        debug_assert_eq!(out.len(), self.out_dim());
+        for (o, &idx) in out.iter_mut().zip(&self.out_map) {
+            *o = state[idx as usize];
+        }
+    }
+
+    /// Reset a state vector to the trivial signature (ε = 1).
+    fn identity_into(&self, state: &mut Vec<f64>) {
+        state.clear();
+        state.resize(self.state_len(), 0.0);
+        state[0] = 1.0;
+    }
+
+    /// In-place **left** Chen/Horner update `S ← exp(dx) ⊗ S` — the
+    /// mirror of [`crate::sig::chen_update`], walking the suffix chain instead of
+    /// the prefix chain:
+    ///
+    /// ```text
+    /// S'(w) = S(w) + dx_{i_1}·( S(w_{1:}) + dx_{i_2}/2·( S(w_{2:}) + … ))
+    /// ```
+    ///
+    /// Levels are processed top-down so in-place updates read only
+    /// old (strictly shorter) suffix values.
+    pub fn lmul_update(&self, state: &mut [f64], dx: &[f64]) {
+        let t = &self.eng.table;
+        assert_eq!(state.len(), t.state_len, "state must be a closure state");
+        assert_eq!(dx.len(), t.d, "dx must have d entries");
+        for n in (1..=t.max_level).rev() {
+            let level_base = t.level_csr_base(n);
+            for (off, i) in t.level_range(n).enumerate() {
+                let base = level_base + off * n;
+                let letters = &t.csr_letters[base..base + n];
+                let suffixes = &self.csr_suffix[base..base + n];
+                let mut acc = 1.0; // S(ε)
+                for k in (1..n).rev() {
+                    acc = state[suffixes[k] as usize]
+                        + dx[letters[k] as usize] * self.eng.recip[k + 1] * acc;
+                }
+                state[i] += dx[letters[0] as usize] * acc;
+            }
+        }
+    }
+
+    /// Lane-major [`StreamTable::lmul_update`]: `state` is
+    /// `state_len × L` (lanes contiguous), `dx` is `d × L`. Per lane
+    /// the operation order matches the scalar kernel exactly, so
+    /// results are bitwise identical lane by lane.
+    pub fn lmul_update_lanes<const L: usize>(&self, state: &mut [f64], dx: &[f64]) {
+        let t = &self.eng.table;
+        assert_eq!(state.len(), t.state_len * L, "state must be state_len × L");
+        assert_eq!(dx.len(), t.d * L, "dx must be d × L");
+        for n in (1..=t.max_level).rev() {
+            let level_base = t.level_csr_base(n);
+            for (off, i) in t.level_range(n).enumerate() {
+                let base = level_base + off * n;
+                let letters = &t.csr_letters[base..base + n];
+                let suffixes = &self.csr_suffix[base..base + n];
+                let mut acc = [1.0f64; L];
+                for k in (1..n).rev() {
+                    let suf = suffixes[k] as usize * L;
+                    let letter = letters[k] as usize * L;
+                    let r = self.eng.recip[k + 1];
+                    for l in 0..L {
+                        acc[l] = state[suf + l] + dx[letter + l] * r * acc[l];
+                    }
+                }
+                let letter0 = letters[0] as usize * L;
+                for l in 0..L {
+                    state[i * L + l] += dx[letter0 + l] * acc[l];
+                }
+            }
+        }
+    }
+
+    /// General Chen product `out ← a ⊗ b` of two factor-closure states:
+    /// `C(w) = Σ_{k=0}^{|w|} A(w_{:k})·B(w_{k:})` via the prefix and
+    /// suffix CSR rows. Used once per window query to join the front
+    /// stack's suffix product with the back stack's running prefix.
+    pub fn combine(&self, a: &[f64], b: &[f64], out: &mut [f64]) {
+        let t = &self.eng.table;
+        assert_eq!(a.len(), t.state_len, "a must be a closure state");
+        assert_eq!(b.len(), t.state_len, "b must be a closure state");
+        assert_eq!(out.len(), t.state_len, "out must be a closure state");
+        out[0] = 1.0;
+        for n in 1..=t.max_level {
+            let level_base = t.level_csr_base(n);
+            for (off, i) in t.level_range(n).enumerate() {
+                let base = level_base + off * n;
+                let prefixes = &t.csr_prefix[base..base + n];
+                let suffixes = &self.csr_suffix[base..base + n];
+                let mut acc = a[i] + b[i];
+                for k in 1..n {
+                    acc += a[prefixes[k] as usize] * b[suffixes[k] as usize];
+                }
+                out[i] = acc;
+            }
+        }
+    }
+
+    /// Lane-major [`StreamTable::combine`] (`a`, `b`, `out` are
+    /// `state_len × L`, lanes contiguous); bitwise identical per lane
+    /// to the scalar kernel.
+    pub fn combine_lanes<const L: usize>(&self, a: &[f64], b: &[f64], out: &mut [f64]) {
+        let t = &self.eng.table;
+        assert_eq!(a.len(), t.state_len * L, "a must be state_len × L");
+        assert_eq!(b.len(), t.state_len * L, "b must be state_len × L");
+        assert_eq!(out.len(), t.state_len * L, "out must be state_len × L");
+        out[..L].fill(1.0); // ε row
+        for n in 1..=t.max_level {
+            let level_base = t.level_csr_base(n);
+            for (off, i) in t.level_range(n).enumerate() {
+                let base = level_base + off * n;
+                let prefixes = &t.csr_prefix[base..base + n];
+                let suffixes = &self.csr_suffix[base..base + n];
+                let mut acc = [0.0f64; L];
+                for l in 0..L {
+                    acc[l] = a[i * L + l] + b[i * L + l];
+                }
+                for k in 1..n {
+                    let p = prefixes[k] as usize * L;
+                    let s = suffixes[k] as usize * L;
+                    for l in 0..L {
+                        acc[l] += a[p + l] * b[s + l];
+                    }
+                }
+                out[i * L..i * L + L].copy_from_slice(&acc);
+            }
+        }
+    }
+
+    /// Verify the suffix CSR against [`Word::suffix_from`] (used by
+    /// tests; mirrors `WordTable::check_invariants`).
+    pub fn check_invariants(&self) {
+        let t = &self.eng.table;
+        t.check_invariants();
+        for (i, w) in t.words.iter().enumerate() {
+            let base = t.csr_start[i] as usize;
+            for k in 0..w.len() {
+                let s = &t.words[self.csr_suffix[base + k] as usize];
+                assert_eq!(s.0, w.0[k..], "suffix table wrong for word {i} k={k}");
+            }
+        }
+        for (r, &idx) in self.out_map.iter().enumerate() {
+            assert!((idx as usize) < t.state_len, "out_map entry {r} out of range");
+        }
+    }
+}
+
+/// Reusable buffer set of a [`StreamEngine`], recyclable through a
+/// [`crate::util::pool::Pool`] so reopening a session reuses the
+/// previous session's allocations (the coordinator keeps one pool per
+/// service).
+#[derive(Clone, Debug, Default)]
+pub struct StreamScratch {
+    last: Vec<f64>,
+    total: Vec<f64>,
+    dx: Vec<f64>,
+    back_dx: Vec<f64>,
+    back_agg: Vec<f64>,
+    front: Vec<f64>,
+    qstate: Vec<f64>,
+}
+
+/// A stateful single-stream signature session: push one sample at a
+/// time, query the running signature `S_{0,t}` and the sliding-window
+/// signature `S_{t-w,t}` at any point. Amortized cost per push is
+/// independent of the window length, and a warm push allocates nothing
+/// (all buffers are bounded by the window length and reserved up
+/// front).
+///
+/// # Examples
+///
+/// ```
+/// use pathsig::sig::{StreamEngine, StreamTable};
+/// use pathsig::words::truncated_words;
+/// use std::sync::Arc;
+///
+/// // 1-D stream at depth 2, window = 2 increments.
+/// let tbl = Arc::new(StreamTable::new(1, &truncated_words(1, 2)));
+/// let mut s = StreamEngine::new(tbl, 2);
+/// for x in [0.0, 1.0, 3.0, 6.0] {
+///     s.push(&[x]);
+/// }
+/// // Window covers the last two increments: X_3 - X_1 = 5.
+/// let w = s.window_signature();
+/// assert!((w[0] - 5.0).abs() < 1e-12);
+/// assert!((w[1] - 12.5).abs() < 1e-12); // 5²/2
+/// // The running signature covers the whole stream: X_3 - X_0 = 6.
+/// assert!((s.signature()[0] - 6.0).abs() < 1e-12);
+/// ```
+#[derive(Clone, Debug)]
+pub struct StreamEngine {
+    tbl: Arc<StreamTable>,
+    window: usize,
+    n_seen: usize,
+    back_len: usize,
+    front_len: usize,
+    s: StreamScratch,
+}
+
+impl StreamEngine {
+    /// Open a stream over `tbl` maintaining a sliding window of
+    /// `window ≥ 1` increments.
+    pub fn new(tbl: Arc<StreamTable>, window: usize) -> StreamEngine {
+        StreamEngine::with_scratch(tbl, window, StreamScratch::default())
+    }
+
+    /// [`StreamEngine::new`] reusing a recycled buffer set (see
+    /// [`StreamEngine::into_scratch`]); buffer capacities are kept, so
+    /// a pooled reopen allocates at most up to the new window bound.
+    pub fn with_scratch(tbl: Arc<StreamTable>, window: usize, mut s: StreamScratch) -> StreamEngine {
+        assert!(window >= 1, "window must hold at least one increment");
+        let d = tbl.dim();
+        let sl = tbl.state_len();
+        s.last.clear();
+        s.last.resize(d, 0.0);
+        s.dx.clear();
+        s.dx.resize(d, 0.0);
+        tbl.identity_into(&mut s.total);
+        tbl.identity_into(&mut s.back_agg);
+        s.qstate.clear();
+        s.qstate.resize(sl, 0.0);
+        s.back_dx.clear();
+        s.back_dx.reserve(window * d);
+        s.front.clear();
+        s.front.reserve(window * sl);
+        StreamEngine {
+            tbl,
+            window,
+            n_seen: 0,
+            back_len: 0,
+            front_len: 0,
+            s,
+        }
+    }
+
+    /// The shared streaming table.
+    #[inline]
+    pub fn table(&self) -> &StreamTable {
+        &self.tbl
+    }
+
+    /// Alphabet size `d`.
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.tbl.dim()
+    }
+
+    /// Output dimension `|I|`.
+    #[inline]
+    pub fn out_dim(&self) -> usize {
+        self.tbl.out_dim()
+    }
+
+    /// Sliding-window capacity in increments.
+    #[inline]
+    pub fn window_len(&self) -> usize {
+        self.window
+    }
+
+    /// Samples pushed so far.
+    #[inline]
+    pub fn samples_seen(&self) -> usize {
+        self.n_seen
+    }
+
+    /// Increments currently inside the window
+    /// (`min(samples_seen - 1, window_len)`; 0 before the second
+    /// sample).
+    #[inline]
+    pub fn window_fill(&self) -> usize {
+        self.front_len + self.back_len
+    }
+
+    /// Push one sample (`sample.len() == d`). The first sample sets the
+    /// stream's base point; each later one contributes the increment to
+    /// the previous sample. Warm pushes perform no heap allocation.
+    pub fn push(&mut self, sample: &[f64]) {
+        let d = self.tbl.dim();
+        assert_eq!(sample.len(), d, "sample must have d entries");
+        self.n_seen += 1;
+        if self.n_seen == 1 {
+            self.s.last.copy_from_slice(sample);
+            return;
+        }
+        for (x, (&a, &b)) in self.s.dx.iter_mut().zip(sample.iter().zip(&self.s.last)) {
+            *x = a - b;
+        }
+        self.s.last.copy_from_slice(sample);
+        chen_update(&self.tbl.eng, &mut self.s.total, &self.s.dx);
+        if self.front_len + self.back_len == self.window {
+            if self.front_len == 0 {
+                self.refold();
+            }
+            self.front_len -= 1;
+            let sl = self.tbl.state_len();
+            self.s.front.truncate(self.front_len * sl);
+        }
+        self.s.back_dx.extend_from_slice(&self.s.dx);
+        chen_update(&self.tbl.eng, &mut self.s.back_agg, &self.s.dx);
+        self.back_len += 1;
+    }
+
+    /// Re-fold the back stack into front-stack suffix products (called
+    /// with the front empty): replay the raw increments newest to
+    /// oldest, left-multiplying each onto the previous suffix product,
+    /// so the oldest increment's product ends on top.
+    fn refold(&mut self) {
+        debug_assert_eq!(self.front_len, 0);
+        let sl = self.tbl.state_len();
+        let d = self.tbl.dim();
+        for j in (0..self.back_len).rev() {
+            let row = self.front_len;
+            self.s.front.resize((row + 1) * sl, 0.0);
+            let (prev, cur) = self.s.front.split_at_mut(row * sl);
+            let cur = &mut cur[..sl];
+            if row == 0 {
+                cur.fill(0.0);
+                cur[0] = 1.0;
+            } else {
+                cur.copy_from_slice(&prev[(row - 1) * sl..row * sl]);
+            }
+            self.tbl.lmul_update(cur, &self.s.back_dx[j * d..(j + 1) * d]);
+            self.front_len += 1;
+        }
+        self.back_len = 0;
+        self.s.back_dx.clear();
+        self.tbl.identity_into(&mut self.s.back_agg);
+    }
+
+    /// Sliding-window signature `π_I(S_{t-w,t})` into a caller buffer
+    /// (`out.len() == out_dim()`). Before the window is full it covers
+    /// all increments seen so far; with no increments yet it is the
+    /// trivial signature (all requested coordinates 0).
+    pub fn window_into(&mut self, out: &mut [f64]) {
+        assert_eq!(out.len(), self.tbl.out_dim(), "output buffer has wrong size");
+        let sl = self.tbl.state_len();
+        if self.front_len == 0 {
+            self.tbl.project_into(&self.s.back_agg, out);
+        } else if self.back_len == 0 {
+            let top = &self.s.front[(self.front_len - 1) * sl..self.front_len * sl];
+            self.tbl.project_into(top, out);
+        } else {
+            self.tbl.combine(
+                &self.s.front[(self.front_len - 1) * sl..self.front_len * sl],
+                &self.s.back_agg,
+                &mut self.s.qstate,
+            );
+            self.tbl.project_into(&self.s.qstate, out);
+        }
+    }
+
+    /// Allocating convenience wrapper around [`StreamEngine::window_into`].
+    pub fn window_signature(&mut self) -> Vec<f64> {
+        let mut out = vec![0.0; self.tbl.out_dim()];
+        self.window_into(&mut out);
+        out
+    }
+
+    /// Running whole-stream signature `π_I(S_{0,t})` into a caller
+    /// buffer. Arithmetic is step-for-step identical to
+    /// [`crate::sig::signature`] over the same samples, so the values
+    /// match bitwise.
+    pub fn signature_into(&self, out: &mut [f64]) {
+        assert_eq!(out.len(), self.tbl.out_dim(), "output buffer has wrong size");
+        self.tbl.project_into(&self.s.total, out);
+    }
+
+    /// Allocating convenience wrapper around [`StreamEngine::signature_into`].
+    pub fn signature(&self) -> Vec<f64> {
+        let mut out = vec![0.0; self.tbl.out_dim()];
+        self.signature_into(&mut out);
+        out
+    }
+
+    /// Forget all samples but keep the buffers (and their capacity):
+    /// the stream restarts empty with zero further allocations.
+    pub fn reset(&mut self) {
+        self.n_seen = 0;
+        self.back_len = 0;
+        self.front_len = 0;
+        self.s.back_dx.clear();
+        self.s.front.clear();
+        self.tbl.identity_into(&mut self.s.total);
+        self.tbl.identity_into(&mut self.s.back_agg);
+    }
+
+    /// Tear down the stream, recovering its buffer set for pooling.
+    pub fn into_scratch(self) -> StreamScratch {
+        self.s
+    }
+}
+
+/// `M` lockstep streams vectorized through the lane-major SoA kernels:
+/// streams are cut into blocks of `L = eng.lanes()` lanes, each block's
+/// states are `state[word][lane]` matrices, and every push/refold/query
+/// walks the word table once per block instead of once per stream. All
+/// streams share one window configuration and advance together
+/// ([`MultiStream::push_all`] takes one sample per stream).
+///
+/// Per lane the arithmetic matches the scalar [`StreamEngine`]
+/// bitwise; trailing lanes of a partial block carry zero increments
+/// and stay at the trivial signature.
+#[derive(Clone, Debug)]
+pub struct MultiStream {
+    tbl: Arc<StreamTable>,
+    window: usize,
+    m: usize,
+    lanes: usize,
+    n_blocks: usize,
+    n_seen: usize,
+    back_len: usize,
+    front_len: usize,
+    last: Vec<f64>,
+    total: Vec<f64>,
+    back_dx: Vec<f64>,
+    back_agg: Vec<f64>,
+    front: Vec<f64>,
+    dx_lanes: Vec<f64>,
+    qstate: Vec<f64>,
+}
+
+impl MultiStream {
+    /// Open `m ≥ 1` lockstep streams with a shared sliding window of
+    /// `window ≥ 1` increments. All buffers (including the full
+    /// two-stack store, `O(m · window · state_len)`) are allocated here;
+    /// pushes and queries never allocate.
+    pub fn new(tbl: Arc<StreamTable>, m: usize, window: usize) -> MultiStream {
+        assert!(m >= 1, "need at least one stream");
+        assert!(window >= 1, "window must hold at least one increment");
+        let lanes = tbl.eng.lanes();
+        let n_blocks = m.div_ceil(lanes);
+        let d = tbl.dim();
+        let sl = tbl.state_len();
+        let mut ms = MultiStream {
+            last: vec![0.0; m * d],
+            total: vec![0.0; n_blocks * sl * lanes],
+            back_dx: vec![0.0; n_blocks * window * d * lanes],
+            back_agg: vec![0.0; n_blocks * sl * lanes],
+            front: vec![0.0; n_blocks * window * sl * lanes],
+            dx_lanes: vec![0.0; d * lanes],
+            qstate: vec![0.0; sl * lanes],
+            tbl,
+            window,
+            m,
+            lanes,
+            n_blocks,
+            n_seen: 0,
+            back_len: 0,
+            front_len: 0,
+        };
+        for blk in 0..n_blocks {
+            ms.total[blk * sl * lanes..blk * sl * lanes + lanes].fill(1.0);
+            ms.back_agg[blk * sl * lanes..blk * sl * lanes + lanes].fill(1.0);
+        }
+        ms
+    }
+
+    /// Number of streams.
+    #[inline]
+    pub fn streams(&self) -> usize {
+        self.m
+    }
+
+    /// Output dimension `|I|` per stream.
+    #[inline]
+    pub fn out_dim(&self) -> usize {
+        self.tbl.out_dim()
+    }
+
+    /// Samples pushed per stream so far.
+    #[inline]
+    pub fn samples_seen(&self) -> usize {
+        self.n_seen
+    }
+
+    /// Push one sample per stream (`samples` is row-major `(m, d)`).
+    pub fn push_all(&mut self, samples: &[f64]) {
+        assert_eq!(
+            samples.len(),
+            self.m * self.tbl.dim(),
+            "need one d-sample per stream"
+        );
+        match self.lanes {
+            4 => self.push_impl::<4>(samples),
+            8 => self.push_impl::<8>(samples),
+            16 => self.push_impl::<16>(samples),
+            32 => self.push_impl::<32>(samples),
+            // Buffers are strided by `self.lanes`; running a kernel at
+            // any other width would corrupt silently, so fail loudly if
+            // the lane domain ever grows without updating this match.
+            other => unreachable!("unsupported MultiStream lane width {other}"),
+        }
+    }
+
+    fn push_impl<const L: usize>(&mut self, samples: &[f64]) {
+        self.n_seen += 1;
+        if self.n_seen == 1 {
+            self.last.copy_from_slice(samples);
+            return;
+        }
+        if self.front_len + self.back_len == self.window {
+            if self.front_len == 0 {
+                self.refold_impl::<L>();
+            }
+            self.front_len -= 1;
+        }
+        let d = self.tbl.dim();
+        let sl = self.tbl.state_len();
+        let step = self.back_len;
+        for blk in 0..self.n_blocks {
+            let b0 = blk * L;
+            let nb = (self.m - b0).min(L);
+            self.dx_lanes.fill(0.0);
+            for l in 0..nb {
+                let s0 = (b0 + l) * d;
+                for i in 0..d {
+                    self.dx_lanes[i * L + l] = samples[s0 + i] - self.last[s0 + i];
+                }
+            }
+            chen_update_lanes::<L>(
+                &self.tbl.eng,
+                &mut self.total[blk * sl * L..(blk + 1) * sl * L],
+                &self.dx_lanes,
+            );
+            let slot = (blk * self.window + step) * d * L;
+            self.back_dx[slot..slot + d * L].copy_from_slice(&self.dx_lanes);
+            chen_update_lanes::<L>(
+                &self.tbl.eng,
+                &mut self.back_agg[blk * sl * L..(blk + 1) * sl * L],
+                &self.dx_lanes,
+            );
+        }
+        self.back_len += 1;
+        self.last.copy_from_slice(samples);
+    }
+
+    fn refold_impl<const L: usize>(&mut self) {
+        debug_assert_eq!(self.front_len, 0);
+        let d = self.tbl.dim();
+        let sl = self.tbl.state_len();
+        let rows = self.back_len;
+        for blk in 0..self.n_blocks {
+            for r in 0..rows {
+                let j = rows - 1 - r; // back step folded into front row r
+                let dst = (blk * self.window + r) * sl * L;
+                if r == 0 {
+                    self.front[dst..dst + sl * L].fill(0.0);
+                    self.front[dst..dst + L].fill(1.0);
+                } else {
+                    let src = (blk * self.window + r - 1) * sl * L;
+                    self.front.copy_within(src..src + sl * L, dst);
+                }
+                let dx0 = (blk * self.window + j) * d * L;
+                self.tbl.lmul_update_lanes::<L>(
+                    &mut self.front[dst..dst + sl * L],
+                    &self.back_dx[dx0..dx0 + d * L],
+                );
+            }
+            let ba = &mut self.back_agg[blk * sl * L..(blk + 1) * sl * L];
+            ba.fill(0.0);
+            ba[..L].fill(1.0);
+        }
+        self.front_len = rows;
+        self.back_len = 0;
+    }
+
+    /// Sliding-window signatures of all streams into a row-major
+    /// `(m, |I|)` buffer.
+    pub fn window_into(&mut self, out: &mut [f64]) {
+        assert_eq!(
+            out.len(),
+            self.m * self.tbl.out_dim(),
+            "output buffer has wrong size"
+        );
+        match self.lanes {
+            4 => self.window_impl::<4>(out),
+            8 => self.window_impl::<8>(out),
+            16 => self.window_impl::<16>(out),
+            32 => self.window_impl::<32>(out),
+            other => unreachable!("unsupported MultiStream lane width {other}"),
+        }
+    }
+
+    fn window_impl<const L: usize>(&mut self, out: &mut [f64]) {
+        let sl = self.tbl.state_len();
+        for blk in 0..self.n_blocks {
+            let agg = blk * sl * L..(blk + 1) * sl * L;
+            let top = (blk * self.window + self.front_len.max(1) - 1) * sl * L;
+            if self.front_len > 0 && self.back_len > 0 {
+                self.tbl.combine_lanes::<L>(
+                    &self.front[top..top + sl * L],
+                    &self.back_agg[agg.clone()],
+                    &mut self.qstate,
+                );
+            }
+            let src: &[f64] = if self.front_len == 0 {
+                &self.back_agg[agg]
+            } else if self.back_len == 0 {
+                &self.front[top..top + sl * L]
+            } else {
+                &self.qstate
+            };
+            self.project_block::<L>(src, blk, out);
+        }
+    }
+
+    /// Running whole-stream signatures into a row-major `(m, |I|)`
+    /// buffer.
+    pub fn signature_into(&self, out: &mut [f64]) {
+        assert_eq!(
+            out.len(),
+            self.m * self.tbl.out_dim(),
+            "output buffer has wrong size"
+        );
+        match self.lanes {
+            4 => self.signature_impl::<4>(out),
+            8 => self.signature_impl::<8>(out),
+            16 => self.signature_impl::<16>(out),
+            32 => self.signature_impl::<32>(out),
+            other => unreachable!("unsupported MultiStream lane width {other}"),
+        }
+    }
+
+    fn signature_impl<const L: usize>(&self, out: &mut [f64]) {
+        let sl = self.tbl.state_len();
+        for blk in 0..self.n_blocks {
+            self.project_block::<L>(&self.total[blk * sl * L..(blk + 1) * sl * L], blk, out);
+        }
+    }
+
+    /// Scatter block `blk`'s lane-major state `src` into per-stream
+    /// output rows.
+    fn project_block<const L: usize>(&self, src: &[f64], blk: usize, out: &mut [f64]) {
+        let odim = self.tbl.out_dim();
+        let b0 = blk * L;
+        let nb = (self.m - b0).min(L);
+        for l in 0..nb {
+            let row = &mut out[(b0 + l) * odim..(b0 + l + 1) * odim];
+            for (o, &idx) in row.iter_mut().zip(&self.tbl.out_map) {
+                *o = src[idx as usize * L + l];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sig::{signature, window_signature, SigEngine, Window};
+    use crate::util::proptest::assert_allclose;
+    use crate::util::rng::Rng;
+    use crate::words::truncated_words;
+
+    fn stream_tbl(d: usize, n: usize) -> Arc<StreamTable> {
+        Arc::new(StreamTable::new(d, &truncated_words(d, n)))
+    }
+
+    #[test]
+    fn factor_closure_contains_all_suffixes() {
+        // A sparse custom request: the stream table must add exactly
+        // the factors, and the suffix CSR must point at true suffixes.
+        let req = vec![Word(vec![2, 0, 1]), Word(vec![1, 1])];
+        let t = StreamTable::new(3, &req);
+        t.check_invariants();
+        assert_eq!(t.out_dim(), 2);
+        // Factors of (2,0,1): ε,(2),(0),(1),(2,0),(0,1),(2,0,1);
+        // of (1,1): (1),(1,1) → closure size 8.
+        assert_eq!(t.state_len(), 8);
+        // The plain prefix closure would have had only 6 entries.
+        assert_eq!(WordTable::build(3, &req).state_len, 6);
+    }
+
+    #[test]
+    fn truncated_tables_need_no_augmentation() {
+        let t = StreamTable::new(2, &truncated_words(2, 3));
+        let plain = WordTable::build(2, &truncated_words(2, 3));
+        assert_eq!(t.state_len(), plain.state_len);
+        assert_eq!(t.out_dim(), plain.out_dim());
+        t.check_invariants();
+    }
+
+    #[test]
+    fn lmul_of_identity_is_exponential() {
+        // exp(dx) ⊗ 1 = exp(dx) = 1 ⊗ exp(dx): left- and right-multiply
+        // onto the trivial signature must agree exactly.
+        let t = stream_tbl(3, 4);
+        let dx = [0.5, -1.25, 2.0];
+        let mut left = vec![0.0; t.state_len()];
+        let mut right = vec![0.0; t.state_len()];
+        left[0] = 1.0;
+        right[0] = 1.0;
+        t.lmul_update(&mut left, &dx);
+        chen_update(&t.eng, &mut right, &dx);
+        assert_allclose(&left, &right, 1e-15, 1e-15, "exp via lmul");
+    }
+
+    #[test]
+    fn lmul_matches_combine_with_exponential() {
+        // exp(dx) ⊗ S computed by the left-multiply kernel must equal
+        // the general combine of exp(dx) with S.
+        let mut rng = Rng::new(7100);
+        let t = stream_tbl(2, 4);
+        let sl = t.state_len();
+        // S = signature state of a random path.
+        let path = rng.brownian_path(6, 2, 0.8);
+        let mut s = vec![0.0; sl];
+        s[0] = 1.0;
+        for j in 1..=6 {
+            let dxbuf = [
+                path[j * 2] - path[(j - 1) * 2],
+                path[j * 2 + 1] - path[(j - 1) * 2 + 1],
+            ];
+            chen_update(&t.eng, &mut s, &dxbuf);
+        }
+        let dx = [0.3, -0.7];
+        let mut e = vec![0.0; sl];
+        e[0] = 1.0;
+        chen_update(&t.eng, &mut e, &dx);
+        let mut want = vec![0.0; sl];
+        t.combine(&e, &s, &mut want);
+        let mut got = s.clone();
+        t.lmul_update(&mut got, &dx);
+        assert_allclose(&got, &want, 1e-13, 1e-12, "lmul vs combine");
+    }
+
+    #[test]
+    fn stream_window_matches_recompute() {
+        // Every push: window query ≡ batch-style recompute over the
+        // same index window (includes warmup, full and refold phases).
+        let mut rng = Rng::new(7101);
+        let d = 2;
+        let tbl = stream_tbl(d, 3);
+        let eng = SigEngine::new(WordTable::build(d, &truncated_words(d, 3)));
+        let w = 4;
+        let mut s = StreamEngine::new(Arc::clone(&tbl), w);
+        let m = 14;
+        let path = rng.brownian_path(m, d, 0.6);
+        for j in 0..=m {
+            s.push(&path[j * d..(j + 1) * d]);
+            let got = s.window_signature();
+            if j == 0 {
+                assert!(got.iter().all(|&x| x == 0.0), "empty window not trivial");
+                continue;
+            }
+            let l = j.saturating_sub(w);
+            let want = window_signature(&eng, &path, Window::new(l, j));
+            assert_allclose(&got, &want, 1e-12, 1e-12, &format!("push {j}"));
+        }
+    }
+
+    #[test]
+    fn stream_extend_matches_signature_bitwise() {
+        let mut rng = Rng::new(7102);
+        let d = 3;
+        let tbl = stream_tbl(d, 3);
+        let eng = SigEngine::new(WordTable::build(d, &truncated_words(d, 3)));
+        let mut s = StreamEngine::new(tbl, 5);
+        let m = 11;
+        let path = rng.brownian_path(m, d, 0.4);
+        for j in 0..=m {
+            s.push(&path[j * d..(j + 1) * d]);
+        }
+        let got = s.signature();
+        let want = signature(&eng, &path);
+        assert_eq!(got, want, "streamed extend must be bitwise-equal");
+    }
+
+    #[test]
+    fn window_one_is_last_increment_exponential() {
+        let tbl = stream_tbl(2, 3);
+        let mut s = StreamEngine::new(Arc::clone(&tbl), 1);
+        s.push(&[0.0, 0.0]);
+        s.push(&[1.0, 2.0]);
+        s.push(&[1.5, 2.0]);
+        // Window of one increment = exp(ΔX_last).
+        let got = s.window_signature();
+        let mut e = vec![0.0; tbl.state_len()];
+        e[0] = 1.0;
+        chen_update(&tbl.eng, &mut e, &[0.5, 0.0]);
+        let mut want = vec![0.0; tbl.out_dim()];
+        tbl.project_into(&e, &mut want);
+        assert_allclose(&got, &want, 1e-15, 1e-15, "window 1");
+    }
+
+    #[test]
+    fn multi_stream_matches_scalar_bitwise() {
+        // M spanning several lane residues; every stream must match an
+        // independent scalar StreamEngine bitwise at every push.
+        let mut rng = Rng::new(7103);
+        let d = 2;
+        let tbl = stream_tbl(d, 3);
+        let lanes = tbl.eng.lanes();
+        for m_streams in [1, lanes - 1, lanes, lanes + 3] {
+            let w = 3;
+            let mut multi = MultiStream::new(Arc::clone(&tbl), m_streams, w);
+            let mut singles: Vec<StreamEngine> =
+                (0..m_streams).map(|_| StreamEngine::new(Arc::clone(&tbl), w)).collect();
+            let steps = 9;
+            let paths: Vec<Vec<f64>> =
+                (0..m_streams).map(|_| rng.brownian_path(steps, d, 0.7)).collect();
+            let odim = tbl.out_dim();
+            let mut got = vec![0.0; m_streams * odim];
+            let mut sample = vec![0.0; m_streams * d];
+            for j in 0..=steps {
+                for (k, p) in paths.iter().enumerate() {
+                    sample[k * d..(k + 1) * d].copy_from_slice(&p[j * d..(j + 1) * d]);
+                    singles[k].push(&p[j * d..(j + 1) * d]);
+                }
+                multi.push_all(&sample);
+                multi.window_into(&mut got);
+                for (k, single) in singles.iter_mut().enumerate() {
+                    let want = single.window_signature();
+                    assert_eq!(
+                        &got[k * odim..(k + 1) * odim],
+                        &want[..],
+                        "stream {k}/{m_streams} push {j}"
+                    );
+                }
+                multi.signature_into(&mut got);
+                for (k, single) in singles.iter().enumerate() {
+                    let want = single.signature();
+                    assert_eq!(&got[k * odim..(k + 1) * odim], &want[..], "full {k} push {j}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reset_restarts_clean() {
+        let tbl = stream_tbl(2, 2);
+        let mut s = StreamEngine::new(Arc::clone(&tbl), 2);
+        for j in 0..5 {
+            s.push(&[j as f64, -(j as f64)]);
+        }
+        s.reset();
+        assert_eq!(s.samples_seen(), 0);
+        assert_eq!(s.window_fill(), 0);
+        s.push(&[0.0, 0.0]);
+        s.push(&[2.0, 1.0]);
+        let got = s.window_signature();
+        assert!((got[0] - 2.0).abs() < 1e-15 && (got[1] - 1.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn scratch_recycling_preserves_correctness() {
+        let tbl = stream_tbl(2, 3);
+        let mut s = StreamEngine::new(Arc::clone(&tbl), 3);
+        for j in 0..7 {
+            s.push(&[j as f64, (j * j) as f64]);
+        }
+        let scratch = s.into_scratch();
+        let mut s2 = StreamEngine::with_scratch(Arc::clone(&tbl), 2, scratch);
+        assert_eq!(s2.samples_seen(), 0);
+        s2.push(&[0.0, 0.0]);
+        s2.push(&[1.0, 0.0]);
+        let got = s2.window_signature();
+        assert!((got[0] - 1.0).abs() < 1e-15 && got[1].abs() < 1e-15);
+    }
+
+    #[test]
+    #[should_panic(expected = "window must hold at least one increment")]
+    fn zero_window_rejected() {
+        StreamEngine::new(stream_tbl(1, 1), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "sample must have d entries")]
+    fn wrong_sample_dim_rejected() {
+        let mut s = StreamEngine::new(stream_tbl(2, 1), 1);
+        s.push(&[1.0]);
+    }
+}

@@ -197,6 +197,14 @@ pub fn windowed_signatures_batch_into(
 
 /// Sliding windows of fixed `len` and `stride` over a path with `m1`
 /// points (§5's `t ↦ S_{t-h,t}` viewpoint).
+///
+/// A window `[l, l+len]` needs `l + len ≤ m1 - 1` path points, so
+/// windows exist **iff `len < m1`**; when the path is too short
+/// (`len ≥ m1`, including the degenerate `m1 ∈ {0, 1}` with no
+/// increments at all) the result is empty rather than a panic — the
+/// streaming conformance suite relies on this for its empty-window
+/// case, and [`crate::sig::StreamEngine`] mirrors it by reporting the
+/// trivial signature until increments arrive.
 pub fn sliding_windows(m1: usize, len: usize, stride: usize) -> Vec<Window> {
     assert!(len >= 1 && stride >= 1);
     let mut out = Vec::new();
@@ -362,6 +370,18 @@ mod tests {
         assert_eq!(s, vec![Window::new(0, 4), Window::new(2, 6), Window::new(4, 8)]);
         let e = expanding_windows(4);
         assert_eq!(e, vec![Window::new(0, 1), Window::new(0, 2), Window::new(0, 3)]);
+    }
+
+    #[test]
+    fn sliding_windows_short_paths_are_empty() {
+        // Windows exist iff len < m1 (documented contract): a path with
+        // too few points yields no windows instead of panicking.
+        assert!(sliding_windows(5, 5, 1).is_empty()); // len == m1
+        assert!(sliding_windows(5, 9, 2).is_empty()); // len > m1
+        assert!(sliding_windows(1, 1, 1).is_empty()); // single point
+        assert!(sliding_windows(0, 3, 1).is_empty()); // no points at all
+        // Boundary: len == m1 - 1 gives exactly one window.
+        assert_eq!(sliding_windows(5, 4, 3), vec![Window::new(0, 4)]);
     }
 
     #[test]

@@ -1,8 +1,13 @@
 //! Property tests on coordinator invariants: request parsing totality,
 //! batcher order preservation under concurrency, padding correctness of
-//! the PJRT batch path, and JSON round-trip fuzz.
+//! the PJRT batch path, JSON round-trip fuzz, and streaming-session
+//! protocol robustness (malformed frames, dead sessions, double close —
+//! all must come back as protocol errors with the server still alive).
 
-use pathsig::coordinator::{parse_request, Batcher, BatcherConfig, SigService};
+use pathsig::coordinator::{
+    parse_request, serve, Batcher, BatcherConfig, ServerConfig, SigService,
+};
+use pathsig::coordinator::server::Client;
 use pathsig::util::json::Json;
 use pathsig::util::proptest::{property, Gen};
 use std::sync::Arc;
@@ -154,6 +159,133 @@ fn batcher_mixed_configs_never_cross() {
             j.join().unwrap();
         }
     });
+}
+
+fn start_server(service: Arc<SigService>) -> (pathsig::coordinator::server::ServerHandle, String) {
+    let handle = serve(
+        service,
+        ServerConfig {
+            addr: "127.0.0.1:0".to_string(),
+            batcher: BatcherConfig {
+                max_batch: 8,
+                max_wait: Duration::from_millis(1),
+            },
+        },
+    )
+    .unwrap();
+    let addr = handle.addr.to_string();
+    (handle, addr)
+}
+
+#[test]
+fn stream_protocol_survives_malformed_and_truncated_frames() {
+    // Garbage, truncated JSON, wrong-typed fields, and stream ops
+    // against nonexistent sessions must each produce exactly one error
+    // response — and the connection (hence the server thread) must
+    // stay alive throughout.
+    let (handle, addr) = start_server(Arc::new(SigService::new(None)));
+    let mut client = Client::connect(&addr).unwrap();
+    let bad_lines = [
+        // Truncated mid-object (a cut-off frame).
+        r#"{"op":"stream_push","session":"#,
+        // Not JSON at all.
+        "stream_push s1 0.5 0.5",
+        // Valid JSON, missing the session handle.
+        r#"{"op":"stream_push","samples":[1,2]}"#,
+        // Wrong type for samples.
+        r#"{"op":"stream_push","session":"s1","samples":"lots"}"#,
+        // Unknown session (never opened).
+        r#"{"op":"stream_push","session":"s999","samples":[1,2]}"#,
+        // Malformed session handle.
+        r#"{"op":"stream_window","session":"☃"}"#,
+        // Unknown mode.
+        r#"{"op":"stream_window","session":"s1","mode":"diagonal"}"#,
+        // Open without a window.
+        r#"{"op":"stream_open","dim":2,"depth":2}"#,
+        // Close of a session that never existed.
+        r#"{"op":"stream_close","session":"s424242"}"#,
+    ];
+    for line in bad_lines {
+        let resp = client.call(line).unwrap();
+        assert_eq!(resp.get("ok").as_bool(), Some(false), "line {line:?} must error");
+        assert!(resp.get("error").as_str().is_some(), "line {line:?} lacks error text");
+    }
+    // The same connection still serves real traffic.
+    let pong = client.call(r#"{"op":"ping"}"#).unwrap();
+    assert_eq!(pong.get("ok").as_bool(), Some(true));
+    let sig = client
+        .call(r#"{"op":"signature","dim":1,"depth":2,"path":[0,2]}"#)
+        .unwrap();
+    assert_eq!(sig.get("ok").as_bool(), Some(true));
+    handle.shutdown();
+}
+
+#[test]
+fn stream_double_close_and_evicted_sessions_error_cleanly() {
+    // TTL long enough that back-to-back open/close can't flake on a
+    // slow CI box, short enough that the eviction half stays quick.
+    let mut service = SigService::new(None);
+    service.session_ttl = Duration::from_millis(500);
+    let (handle, addr) = start_server(Arc::new(service));
+    let mut client = Client::connect(&addr).unwrap();
+
+    // Session A: closed twice — the second close is an error, not a
+    // crash.
+    let opened = client
+        .call(r#"{"op":"stream_open","dim":1,"depth":2,"window":3}"#)
+        .unwrap();
+    let sa = opened.get("body").get("session").as_str().unwrap().to_string();
+    let closed = client
+        .call(&format!(r#"{{"op":"stream_close","session":"{sa}"}}"#))
+        .unwrap();
+    assert_eq!(closed.get("ok").as_bool(), Some(true));
+    let again = client
+        .call(&format!(r#"{{"op":"stream_close","session":"{sa}"}}"#))
+        .unwrap();
+    assert_eq!(again.get("ok").as_bool(), Some(false));
+    assert!(again.get("error").as_str().unwrap().contains("unknown session"));
+
+    // Session B: evicted by the idle TTL — a later push errors.
+    let opened = client
+        .call(r#"{"op":"stream_open","dim":1,"depth":2,"window":3}"#)
+        .unwrap();
+    let sb = opened.get("body").get("session").as_str().unwrap().to_string();
+    std::thread::sleep(Duration::from_millis(900));
+    let push = client
+        .call(&format!(r#"{{"op":"stream_push","session":"{sb}","samples":[1.0]}}"#))
+        .unwrap();
+    assert_eq!(push.get("ok").as_bool(), Some(false));
+    assert!(push.get("error").as_str().unwrap().contains("unknown session"));
+
+    // Metrics reflect the lifecycle and the server still answers.
+    let m = client.call(r#"{"op":"metrics"}"#).unwrap();
+    let body = m.get("body");
+    assert_eq!(body.get("sessions_opened").as_usize(), Some(2));
+    assert_eq!(body.get("sessions_closed").as_usize(), Some(1));
+    assert_eq!(body.get("sessions_evicted").as_usize(), Some(1));
+    handle.shutdown();
+}
+
+#[test]
+fn stream_fuzzed_frames_never_kill_the_server() {
+    // Random printable garbage fired at the server: every non-blank
+    // line gets exactly one response, and a fresh client can still do
+    // real work afterwards.
+    let (handle, addr) = start_server(Arc::new(SigService::new(None)));
+    property("stream frame fuzz", 40, |g| {
+        let len = g.sized(1, 48);
+        let line: String = (0..len).map(|_| g.usize_in(32, 126) as u8 as char).collect();
+        if line.trim().is_empty() {
+            return; // blank lines are skipped by the server, no response
+        }
+        let mut client = Client::connect(&addr).expect("server accepting");
+        let resp = client.call(&line).expect("one response per line");
+        assert!(resp.get("ok").as_bool().is_some());
+    });
+    let mut client = Client::connect(&addr).unwrap();
+    let pong = client.call(r#"{"op":"ping"}"#).unwrap();
+    assert_eq!(pong.get("ok").as_bool(), Some(true));
+    handle.shutdown();
 }
 
 #[test]

@@ -5,9 +5,10 @@
 //! engine beyond the word encoding.
 
 use pathsig::baselines::chen_full_signature;
-use pathsig::sig::{signature, SigEngine};
+use pathsig::sig::{signature, window_signature, SigEngine, StreamEngine, StreamTable, Window};
 use pathsig::util::proptest::assert_allclose;
 use pathsig::words::{truncated_words, WordTable};
+use std::sync::Arc;
 
 fn trunc_engine(d: usize, n: usize) -> SigEngine {
     SigEngine::new(WordTable::build(d, &truncated_words(d, n)))
@@ -87,6 +88,96 @@ fn axis_path_agrees_with_chen_full_baseline() {
         let dense = chen_full_signature(2, depth, &path);
         assert_allclose(&ours, &dense, 1e-13, 1e-12, "engine vs chen_full");
     }
+}
+
+/// Hand-computed golden values for the depth-3 sliding-window stream
+/// (w = 3 increments, stride 1) over the 6-point 2-D "staircase"
+///
+/// ```text
+///   (0,0) → (1,0) → (1,1) → (2,1) → (2,2) → (3,2)
+///   increments: e₁, e₂, e₁, e₂, e₁   (alternating unit axis steps)
+/// ```
+///
+/// Every full window holds three axis increments `e_a, e_b, e_c`, so
+/// by Chen `S = exp(e_a) ⊗ exp(e_b) ⊗ exp(e_c)` and the coefficient on
+/// a word `w` is the sum of `1/(i!·j!·k!)` over all three-way splits
+/// `w = a^i ∘ b^j ∘ c^k` — a closed form computable by hand. For the
+/// window `(e₁, e₂, e₁)` for instance:
+///
+/// ```text
+///   S(1)   = 1+1 = 2        S(11)  = 1/2 + 1 + 1/2 = 2
+///   S(121) = 1·1·1 = 1      S(111) = 1/6 + 1/2 + 1/2 + 1/6 = 4/3
+///   S(212) = 0 (no split: the 2s cannot bracket a 1-run)
+/// ```
+///
+/// The push timeline crosses the two-stack refold boundary: with
+/// w = 3, pushes 1–3 only grow the back stack; the eviction at push 4
+/// finds the front stack empty, refolds the three back increments into
+/// suffix products, and pops the oldest — so the row after push 4 is
+/// produced by the front⊗back combine, and the row after push 5 mixes
+/// a popped front with a refilled back.
+#[test]
+fn sliding_window_stream_golden_depth3() {
+    let depth = 3;
+    let (d, w) = (2, 3);
+    let eng = trunc_engine(d, depth);
+    let tbl = Arc::new(StreamTable::new(d, &truncated_words(d, depth)));
+    let mut stream = StreamEngine::new(tbl, w);
+    let path = [
+        0.0, 0.0, //
+        1.0, 0.0, //
+        1.0, 1.0, //
+        2.0, 1.0, //
+        2.0, 2.0, //
+        3.0, 2.0,
+    ];
+    // Row order: (1),(2),(11),(12),(21),(22),(111),(112),(121),(122),
+    //            (211),(212),(221),(222).
+    let golden: [[f64; 14]; 6] = [
+        // push 0: no increments yet — trivial signature.
+        [0.0; 14],
+        // push 1: window = (e₁) = exp(e₁).
+        [1.0, 0.0, 0.5, 0.0, 0.0, 0.0, 1.0 / 6.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0],
+        // push 2: window = (e₁,e₂): S(1^a ∘ 2^b) = 1/(a!·b!).
+        [
+            1.0, 1.0, 0.5, 1.0, 0.0, 0.5, 1.0 / 6.0, 0.5, 0.0, 0.5, 0.0, 0.0, 0.0,
+            1.0 / 6.0,
+        ],
+        // push 3: window = (e₁,e₂,e₁), three-way-split closed form.
+        [
+            2.0, 1.0, 2.0, 1.0, 1.0, 0.5, 4.0 / 3.0, 0.5, 1.0, 0.5, 0.5, 0.0, 0.5,
+            1.0 / 6.0,
+        ],
+        // push 4: window = (e₂,e₁,e₂) — the refold boundary; the
+        // letter-swapped mirror of the row above.
+        [
+            1.0, 2.0, 0.5, 1.0, 1.0, 2.0, 1.0 / 6.0, 0.5, 0.0, 0.5, 0.5, 1.0, 0.5,
+            4.0 / 3.0,
+        ],
+        // push 5: window = (e₁,e₂,e₁) again (popped front + new back).
+        [
+            2.0, 1.0, 2.0, 1.0, 1.0, 0.5, 4.0 / 3.0, 0.5, 1.0, 0.5, 0.5, 0.0, 0.5,
+            1.0 / 6.0,
+        ],
+    ];
+    for (j, want) in golden.iter().enumerate() {
+        stream.push(&path[j * d..(j + 1) * d]);
+        let got = stream.window_signature();
+        assert_allclose(&got, want, 1e-14, 1e-14, &format!("golden window after push {j}"));
+        // Differential check: the batch recompute must agree with the
+        // same hand values.
+        if j >= 1 {
+            let recomputed =
+                window_signature(&eng, &path, Window::new(j.saturating_sub(w), j));
+            assert_allclose(&recomputed, want, 1e-14, 1e-14, &format!("recompute {j}"));
+        }
+    }
+    // The running stream signature is the full 5-increment staircase.
+    let full = stream.signature();
+    let want_full = signature(&eng, &path);
+    assert_eq!(full, want_full, "extend path must be bitwise-identical");
+    assert!((full[0] - 3.0).abs() < 1e-14 && (full[1] - 2.0).abs() < 1e-14);
+    assert!((full[2] - 4.5).abs() < 1e-14, "S(11) = 3²/2");
 }
 
 /// The unit square loop: level 1 vanishes (closed path) and the level-2

@@ -1,0 +1,258 @@
+//! Conformance suite for the streaming signature engine: the
+//! amortized-O(1) sliding-window path (`sig::stream`) must agree with
+//! the batch recompute path (`sig::windows`) on every configuration CI
+//! exercises — truncated / projected / anisotropic word sets, every
+//! `B mod L` lane residue (the `PATHSIG_LANES ∈ {4, 16, 32}` CI matrix
+//! sweeps the lane width itself), warmup / full / refold phases of the
+//! two-stack queue, and the degenerate empty-window cases.
+
+use pathsig::sig::{
+    signature, sliding_windows, windowed_signatures_batch, MultiStream, SigEngine, StreamEngine,
+    StreamTable, Window,
+};
+use pathsig::util::proptest::{assert_allclose, property, Gen};
+use pathsig::util::rng::Rng;
+use pathsig::words::{anisotropic_words, truncated_words, Word, WordTable};
+use std::sync::Arc;
+
+/// Draw a requested word set of one of the three CI spec families.
+fn random_spec(g: &mut Gen, d: usize, depth: usize) -> (Vec<Word>, &'static str) {
+    match g.usize_in(0, 2) {
+        0 => (truncated_words(d, depth), "truncated"),
+        1 => {
+            let all = truncated_words(d, depth);
+            let k = g.usize_in(1, all.len().min(6));
+            let mut words = Vec::new();
+            for _ in 0..k {
+                words.push(g.choose(&all).clone());
+            }
+            (words, "projected")
+        }
+        _ => {
+            let gamma: Vec<f64> = (0..d).map(|_| *g.choose(&[1.0, 1.5, 2.0])).collect();
+            let mut words = anisotropic_words(d, &gamma, depth as f64);
+            if words.is_empty() {
+                words = truncated_words(d, 1);
+            }
+            (words, "anisotropic")
+        }
+    }
+}
+
+#[test]
+fn stream_window_conformance_all_spec_types() {
+    // At every push, the StreamEngine's sliding window must equal the
+    // windowed_signatures_batch recompute over the same index window,
+    // to 1e-12 — across all three word-set families, including warmup
+    // (window not yet full), steady state, and refold boundaries.
+    property("stream ≡ batch recompute", 30, |g| {
+        let d = g.usize_in(1, 3);
+        let depth = g.usize_in(1, 4);
+        let (words, tag) = random_spec(g, d, depth);
+        let eng = SigEngine::new(WordTable::build(d, &words));
+        let tbl = Arc::new(StreamTable::new(d, &words));
+        let w = g.usize_in(1, 6);
+        let m = g.usize_in(1, 16);
+        let path = g.path(m, d, 0.6);
+        let mut stream = StreamEngine::new(tbl, w);
+        let odim = eng.out_dim();
+        for j in 0..=m {
+            stream.push(&path[j * d..(j + 1) * d]);
+            let got = stream.window_signature();
+            if j == 0 {
+                assert!(got.iter().all(|&x| x == 0.0), "{tag}: empty window not trivial");
+                continue;
+            }
+            let win = [Window::new(j.saturating_sub(w), j)];
+            let want = windowed_signatures_batch(&eng, &path, 1, &win);
+            assert_allclose(&got, &want, 1e-12, 1e-12, &format!("{tag} d={d} N={depth} w={w} j={j}"));
+        }
+    });
+}
+
+#[test]
+fn stream_extend_bitwise_equals_signature() {
+    // The running S_{0,t} of a stream is arithmetic-identical to the
+    // offline forward pass — bitwise, not just close.
+    property("stream extend ≡ signature (bitwise)", 25, |g| {
+        let d = g.usize_in(1, 4);
+        let depth = g.usize_in(1, 4);
+        let (words, tag) = random_spec(g, d, depth);
+        let eng = SigEngine::new(WordTable::build(d, &words));
+        let tbl = Arc::new(StreamTable::new(d, &words));
+        let m = g.usize_in(1, 20);
+        let path = g.path(m, d, 0.8);
+        let mut stream = StreamEngine::new(tbl, g.usize_in(1, 5));
+        for j in 0..=m {
+            stream.push(&path[j * d..(j + 1) * d]);
+            let got = stream.signature();
+            let want = signature(&eng, &path[..(j + 1) * d]);
+            assert_eq!(got, want, "{tag}: extend diverged at step {j}");
+        }
+    });
+}
+
+#[test]
+fn multi_stream_conformance_every_lane_residue() {
+    // M lockstep sessions vectorized through the lane-major kernel:
+    // for every batch residue mod L, the recorded sliding windows must
+    // match one windowed_signatures_batch recompute over the shared
+    // window list (rows transposed: stream records (t, b), batch
+    // produces (b, t)).
+    let mut rng = Rng::new(0x57AE);
+    let d = 2;
+    let depth = 3;
+    let words = truncated_words(d, depth);
+    let eng = SigEngine::new(WordTable::build(d, &words));
+    let tbl = Arc::new(StreamTable::new(d, &words));
+    let lanes = eng.lanes();
+    let w = 3;
+    let m = 10;
+    let odim = eng.out_dim();
+    for m_streams in [1, lanes - 1, lanes, lanes + 1, 2 * lanes + 3] {
+        let mut paths = Vec::new();
+        for _ in 0..m_streams {
+            paths.extend(rng.brownian_path(m, d, 0.7));
+        }
+        let mut multi = MultiStream::new(Arc::clone(&tbl), m_streams, w);
+        let mut sample = vec![0.0; m_streams * d];
+        let mut streamed = Vec::new(); // (t, b, |I|) rows for t = 1..=m
+        let mut row = vec![0.0; m_streams * odim];
+        for j in 0..=m {
+            for b in 0..m_streams {
+                let p = &paths[b * (m + 1) * d..];
+                sample[b * d..(b + 1) * d].copy_from_slice(&p[j * d..(j + 1) * d]);
+            }
+            multi.push_all(&sample);
+            if j >= 1 {
+                multi.window_into(&mut row);
+                streamed.extend_from_slice(&row);
+            }
+        }
+        let windows: Vec<Window> =
+            (1..=m).map(|j| Window::new(j.saturating_sub(w), j)).collect();
+        let want = windowed_signatures_batch(&eng, &paths, m_streams, &windows);
+        for (t, win) in windows.iter().enumerate() {
+            for b in 0..m_streams {
+                let got = &streamed[(t * m_streams + b) * odim..(t * m_streams + b + 1) * odim];
+                let exp = &want[(b * windows.len() + t) * odim..(b * windows.len() + t + 1) * odim];
+                assert_allclose(
+                    got,
+                    exp,
+                    1e-12,
+                    1e-12,
+                    &format!("B={m_streams} (mod L={lanes}) window {win:?} stream {b}"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn multi_stream_projected_spec_conformance() {
+    // A sparse custom word set through the lane-major multi-stream:
+    // the factor-closure augmentation must stay invisible in outputs.
+    let mut rng = Rng::new(0x57AF);
+    let d = 3;
+    let words = vec![
+        Word(vec![2, 0, 1]),
+        Word(vec![1]),
+        Word(vec![0, 0, 1, 1]),
+        Word(vec![2, 2]),
+    ];
+    let eng = SigEngine::new(WordTable::build(d, &words));
+    let tbl = Arc::new(StreamTable::new(d, &words));
+    let m_streams = eng.lanes() + 2;
+    let w = 4;
+    let m = 9;
+    let odim = eng.out_dim();
+    let mut paths = Vec::new();
+    for _ in 0..m_streams {
+        paths.extend(rng.brownian_path(m, d, 0.5));
+    }
+    let mut multi = MultiStream::new(tbl, m_streams, w);
+    let mut sample = vec![0.0; m_streams * d];
+    let mut row = vec![0.0; m_streams * odim];
+    for j in 0..=m {
+        for b in 0..m_streams {
+            let p = &paths[b * (m + 1) * d..];
+            sample[b * d..(b + 1) * d].copy_from_slice(&p[j * d..(j + 1) * d]);
+        }
+        multi.push_all(&sample);
+        if j == 0 {
+            continue;
+        }
+        multi.window_into(&mut row);
+        let win = [Window::new(j.saturating_sub(w), j)];
+        let want = windowed_signatures_batch(&eng, &paths, m_streams, &win);
+        assert_allclose(&row, &want, 1e-12, 1e-12, &format!("projected multi j={j}"));
+    }
+}
+
+#[test]
+fn empty_window_cases_match_documented_contract() {
+    // sliding_windows yields no windows when len ≥ m1 (documented in
+    // sig::windows); the stream engine mirrors this: before any
+    // increment its window is the trivial signature, and while the
+    // window is underfull it covers exactly the increments seen.
+    assert!(sliding_windows(3, 3, 1).is_empty());
+    assert!(sliding_windows(1, 4, 1).is_empty());
+
+    let d = 2;
+    let words = truncated_words(d, 2);
+    let eng = SigEngine::new(WordTable::build(d, &words));
+    let tbl = Arc::new(StreamTable::new(d, &words));
+    let mut stream = StreamEngine::new(tbl, 10); // window longer than the path
+    let mut rng = Rng::new(0x57B0);
+    let m = 6;
+    let path = rng.brownian_path(m, d, 1.0);
+
+    stream.push(&path[0..d]);
+    assert!(stream.window_signature().iter().all(|&x| x == 0.0));
+    assert_eq!(stream.window_fill(), 0);
+
+    for j in 1..=m {
+        stream.push(&path[j * d..(j + 1) * d]);
+        assert_eq!(stream.window_fill(), j);
+        // Underfull window ≡ expanding window [0, j] ≡ full signature.
+        let got = stream.window_signature();
+        let want = signature(&eng, &path[..(j + 1) * d]);
+        assert_allclose(&got, &want, 1e-12, 1e-12, &format!("underfull j={j}"));
+        assert_eq!(stream.signature(), want, "extend bitwise at j={j}");
+    }
+}
+
+#[test]
+fn stream_tracks_sliding_windows_generator() {
+    // End-to-end: querying a stride-s stream at the generator's window
+    // positions reproduces windowed_signatures_batch over
+    // sliding_windows(m1, len, stride) exactly.
+    let mut rng = Rng::new(0x57B1);
+    let d = 2;
+    let words = truncated_words(d, 3);
+    let eng = SigEngine::new(WordTable::build(d, &words));
+    let tbl = Arc::new(StreamTable::new(d, &words));
+    let (m, len, stride) = (17, 4, 3);
+    let path = rng.brownian_path(m, d, 0.9);
+    let wins = sliding_windows(m + 1, len, stride);
+    assert!(!wins.is_empty());
+    let want = windowed_signatures_batch(&eng, &path, 1, &wins);
+    let odim = eng.out_dim();
+    let mut stream = StreamEngine::new(tbl, len);
+    let mut by_right: std::collections::HashMap<usize, usize> =
+        wins.iter().enumerate().map(|(k, w)| (w.r, k)).collect();
+    for j in 0..=m {
+        stream.push(&path[j * d..(j + 1) * d]);
+        if let Some(k) = by_right.remove(&j) {
+            let got = stream.window_signature();
+            assert_allclose(
+                &got,
+                &want[k * odim..(k + 1) * odim],
+                1e-12,
+                1e-12,
+                &format!("generator window {k}"),
+            );
+        }
+    }
+    assert!(by_right.is_empty(), "all generator windows visited");
+}
