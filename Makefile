@@ -2,7 +2,7 @@
 # `artifacts` requires a Python environment with jax installed (see
 # DESIGN.md — the AOT artifacts are optional, the crate runs without them).
 
-.PHONY: build test doc bench bench-json bench-smoke artifacts clean
+.PHONY: build test doc bench bench-json bench-smoke bench-record artifacts clean
 
 build:
 	cargo build --release
@@ -17,16 +17,18 @@ bench:
 	cargo bench
 
 # Emit the repo-root perf-trajectory artifacts (BENCH_fig1.json,
-# BENCH_table1.json, BENCH_table2.json, BENCH_stream.json): mean/median/
-# min per case, peak bytes, the lane-major-vs-scalar forward AND
-# backward speedups, the streaming-vs-recompute sliding-window rows,
-# and the zero-alloc steady-state counts (batch forward, train step,
-# stream push).
+# BENCH_table1.json, BENCH_table2.json, BENCH_stream.json,
+# BENCH_tree.json): mean/median/min per case, peak bytes, the
+# lane-major-vs-scalar forward AND backward speedups, the
+# streaming-vs-recompute sliding-window rows, the long-path
+# tree-vs-sequential rows, and the zero-alloc steady-state counts
+# (batch forward, train step, stream push, tree fwd+bwd).
 bench-json:
 	cargo bench --bench fig1_truncated -- --json
 	cargo bench --bench table1_training -- --json
 	cargo bench --bench table2_memory -- --json
 	cargo bench --bench fig3_windows -- --json
+	cargo bench --bench fig4_longpath -- --json
 
 # CI-sized variant of bench-json: tiny cases, 1 warmup / 2 runs —
 # exercises the artifact pipeline, not a measurement.
@@ -35,6 +37,14 @@ bench-smoke:
 	cargo bench --bench table1_training -- --json --smoke
 	cargo bench --bench table2_memory -- --json --smoke
 	cargo bench --bench fig3_windows -- --json --smoke
+	cargo bench --bench fig4_longpath -- --json --smoke
+
+# Run the JSON bench suite and stage the BENCH_*.json artifacts for
+# commit — the perf trajectory is tracked in-repo, one snapshot per
+# perf PR (see README "Perf trajectory"). Pass SMOKE=1 for the CI-sized
+# run when a full measurement is not wanted.
+bench-record:
+	./scripts/bench_record.sh $(if $(SMOKE),--smoke,)
 
 # Emit the AOT/PJRT artifacts (HLO text + manifest.json) into ./artifacts.
 artifacts:

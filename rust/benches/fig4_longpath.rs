@@ -1,0 +1,214 @@
+//! Long-path regime bench (ISSUE 5): the time-parallel chunked tree vs
+//! the sequential-time kernels, forward and checkpointed backward, at
+//! `B = 1` — the regime the paper's batch-parallel mapping leaves on
+//! one core. Emits the repo-root `BENCH_tree.json` perf-trajectory
+//! artifact in `--json` mode; `--smoke` shrinks every case to CI size.
+//!
+//! Headline: `tree_vs_sequential.speedup` (forward, largest M) and
+//! `backward.speedup` must exceed 1 for M ≥ 4096 with ≥ 4 threads —
+//! the ISSUE-5 acceptance bar. The zero-alloc contract is measured on
+//! a sequential engine (like fig1): warm tree calls must not allocate.
+
+mod common;
+use common::{dump, dump_root, full, json_mode, smoke, timeit};
+use pathsig::bench::{alloc_count, CountingAllocator, Timing};
+use pathsig::sig::{
+    sig_backward_batch_into, signature_batch_into, sliding_windows, windowed_signatures_batch,
+    ChunkPolicy, SigEngine,
+};
+use pathsig::util::json::Json;
+use pathsig::util::rng::Rng;
+use pathsig::words::{truncated_words, WordTable};
+
+#[global_allocator]
+static ALLOC: CountingAllocator = CountingAllocator;
+
+fn engines(d: usize, n: usize) -> (SigEngine, SigEngine) {
+    // Same table, same thread budget; only the time-axis policy differs.
+    let mut seq = SigEngine::new(WordTable::build(d, &truncated_words(d, n)));
+    seq.time_chunk = ChunkPolicy::Off;
+    let mut tree = SigEngine::new(WordTable::build(d, &truncated_words(d, n)));
+    if tree.time_chunk == ChunkPolicy::Off {
+        tree.time_chunk = ChunkPolicy::Auto; // the bench must exercise the tree
+    }
+    (seq, tree)
+}
+
+/// Heap allocations per warm time-parallel call (forward + backward),
+/// measured on a sequential engine so the parallel-section thread
+/// spawns don't count (fig1 measures the classic path the same way).
+fn steady_state_allocs(smoke: bool) -> f64 {
+    let (d, n, m) = if smoke { (2, 2, 256) } else { (2, 3, 4096) };
+    let mut eng = SigEngine::sequential(WordTable::build(d, &truncated_words(d, n)));
+    eng.time_chunk = ChunkPolicy::Fixed(64);
+    let mut rng = Rng::new(0xF402);
+    let path = rng.brownian_path(m, d, 0.2);
+    let grads: Vec<f64> = (0..eng.out_dim()).map(|_| rng.gaussian()).collect();
+    let mut sig = vec![0.0; eng.out_dim()];
+    let mut grad = vec![0.0; path.len()];
+    // Warm: builds the factor-closure table and fills every pool.
+    for _ in 0..3 {
+        signature_batch_into(&eng, &path, 1, &mut sig);
+        sig_backward_batch_into(&eng, &path, &grads, 1, &mut grad);
+    }
+    let calls = 8;
+    let before = alloc_count();
+    for _ in 0..calls {
+        signature_batch_into(&eng, &path, 1, &mut sig);
+        sig_backward_batch_into(&eng, &path, &grads, 1, &mut grad);
+        std::hint::black_box((&sig, &grad));
+    }
+    let per_call = (alloc_count() - before) as f64 / calls as f64;
+    println!("# steady-state allocations per warm tree fwd+bwd call: {per_call}");
+    per_call
+}
+
+/// Windowed long-path row: sliding windows over one long path, grid
+/// reuse vs per-window recompute (the classic path).
+fn windows_row(smoke: bool, budget: f64) -> Json {
+    let (d, n, m, wlen, stride) = if smoke { (2, 2, 256, 96, 16) } else { (2, 3, 8192, 2048, 256) };
+    let (seq, tree) = engines(d, n);
+    let mut rng = Rng::new(0xF403);
+    let path = rng.brownian_path(m, d, 0.2);
+    let wins = sliding_windows(m + 1, wlen, stride);
+    let t_seq = timeit("windows-sequential", smoke, budget, || {
+        std::hint::black_box(windowed_signatures_batch(&seq, &path, 1, &wins));
+    });
+    let t_tree = timeit("windows-tree", smoke, budget, || {
+        std::hint::black_box(windowed_signatures_batch(&tree, &path, 1, &wins));
+    });
+    let speedup = t_seq.median_s / t_tree.median_s;
+    println!(
+        "# windows M={m} len={wlen} K={}: sequential {} vs tree {} ({speedup:.2}x)",
+        wins.len(),
+        Timing::fmt_secs(t_seq.median_s),
+        Timing::fmt_secs(t_tree.median_s)
+    );
+    Json::obj(vec![
+        ("m", Json::Num(m as f64)),
+        ("win_len", Json::Num(wlen as f64)),
+        ("windows", Json::Num(wins.len() as f64)),
+        ("sequential_s", Json::Num(t_seq.median_s)),
+        ("tree_s", Json::Num(t_tree.median_s)),
+        ("speedup", Json::Num(speedup)),
+    ])
+}
+
+fn main() {
+    let full = full();
+    let smoke = smoke();
+    let budget = if full { 0.8 } else { 0.3 };
+    let (d, depth) = if smoke { (2, 2) } else { (2, 3) };
+    let ms: &[usize] = if smoke {
+        &[256]
+    } else if full {
+        &[4096, 16384, 65536]
+    } else {
+        &[4096, 16384]
+    };
+    let (seq, tree) = engines(d, depth);
+    let threads = tree.threads;
+    println!(
+        "# Long-path regime (B=1, d={d}, N={depth}, {threads} threads, L={}): \
+         time-parallel tree vs sequential time axis",
+        tree.lanes()
+    );
+    println!(
+        "{:>7} | {:>11} {:>11} {:>8} | {:>11} {:>11} {:>8}",
+        "M", "seq fwd", "tree fwd", "speedup", "seq bwd", "tree bwd", "speedup"
+    );
+
+    let mut rng = Rng::new(0xF401);
+    let mut fwd_rows = Vec::new();
+    let mut bwd_rows = Vec::new();
+    let mut last_fwd = 1.0;
+    let mut last_bwd = 1.0;
+    for &m in ms {
+        let path = rng.brownian_path(m, d, 0.2);
+        let grads: Vec<f64> = (0..seq.out_dim()).map(|_| rng.gaussian()).collect();
+        let mut out = vec![0.0; seq.out_dim()];
+        let mut grad = vec![0.0; path.len()];
+
+        let f_seq = timeit("fwd-seq", smoke, budget, || {
+            signature_batch_into(&seq, &path, 1, &mut out);
+            std::hint::black_box(&out);
+        });
+        let f_tree = timeit("fwd-tree", smoke, budget, || {
+            signature_batch_into(&tree, &path, 1, &mut out);
+            std::hint::black_box(&out);
+        });
+        let b_seq = timeit("bwd-seq", smoke, budget, || {
+            sig_backward_batch_into(&seq, &path, &grads, 1, &mut grad);
+            std::hint::black_box(&grad);
+        });
+        let b_tree = timeit("bwd-tree", smoke, budget, || {
+            sig_backward_batch_into(&tree, &path, &grads, 1, &mut grad);
+            std::hint::black_box(&grad);
+        });
+        last_fwd = f_seq.median_s / f_tree.median_s;
+        last_bwd = b_seq.median_s / b_tree.median_s;
+        println!(
+            "{:>7} | {:>11} {:>11} {:>7.2}x | {:>11} {:>11} {:>7.2}x",
+            m,
+            Timing::fmt_secs(f_seq.median_s),
+            Timing::fmt_secs(f_tree.median_s),
+            last_fwd,
+            Timing::fmt_secs(b_seq.median_s),
+            Timing::fmt_secs(b_tree.median_s),
+            last_bwd
+        );
+        fwd_rows.push(Json::obj(vec![
+            ("m", Json::Num(m as f64)),
+            ("batch", Json::Num(1.0)),
+            ("threads", Json::Num(threads as f64)),
+            ("sequential_s", Json::Num(f_seq.median_s)),
+            ("tree_s", Json::Num(f_tree.median_s)),
+            ("speedup", Json::Num(last_fwd)),
+        ]));
+        bwd_rows.push(Json::obj(vec![
+            ("m", Json::Num(m as f64)),
+            ("batch", Json::Num(1.0)),
+            ("threads", Json::Num(threads as f64)),
+            ("sequential_s", Json::Num(b_seq.median_s)),
+            ("tree_s", Json::Num(b_tree.median_s)),
+            ("speedup", Json::Num(last_bwd)),
+        ]));
+    }
+
+    let win = windows_row(smoke, budget);
+    let allocs = steady_state_allocs(smoke);
+    let mode = if smoke {
+        "smoke"
+    } else if full {
+        "full"
+    } else {
+        "default"
+    };
+    let artifact = Json::obj(vec![
+        ("bench", Json::str("fig4_longpath")),
+        ("mode", Json::str(mode)),
+        ("threads", Json::Num(threads as f64)),
+        (
+            "tree_vs_sequential",
+            Json::obj(vec![
+                // Largest measured M — the acceptance headline.
+                ("speedup", Json::Num(last_fwd)),
+                ("rows", Json::Arr(fwd_rows)),
+            ]),
+        ),
+        (
+            "backward",
+            Json::obj(vec![
+                ("speedup", Json::Num(last_bwd)),
+                ("rows", Json::Arr(bwd_rows)),
+            ]),
+        ),
+        ("windows", win),
+        ("steady_state_allocs_per_call", Json::Num(allocs)),
+    ]);
+    if json_mode() {
+        dump_root("BENCH_tree.json", artifact);
+    } else {
+        dump("fig4_longpath", artifact);
+    }
+}

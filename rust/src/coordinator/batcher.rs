@@ -8,8 +8,9 @@
 //! waited `max_wait`. Responses are scattered back in arrival order
 //! through per-request channels.
 
-use super::protocol::{Request, RequestOp};
+use super::protocol::{Backend, Request, RequestOp};
 use super::service::{ConfigKey, SigService};
+use crate::sig::{plan, TimeMode};
 use std::collections::HashMap;
 use std::sync::mpsc::Sender;
 use std::sync::{Arc, Condvar, Mutex};
@@ -22,6 +23,15 @@ pub struct BatcherConfig {
     pub max_batch: usize,
     /// Flush a queue once its oldest request has waited this long.
     pub max_wait: Duration,
+    /// Signature requests with at least this many path points skip the
+    /// queue and execute immediately — provided the engine's scheduler
+    /// ([`crate::sig::schedule`]) will actually serve them
+    /// time-parallel, so the path saturates the engine alone. Queueing
+    /// such a request would add `max_wait` of latency for nothing, and
+    /// stacking several long paths into one batch would serialize a
+    /// huge unit on a single flush. With the tree disabled
+    /// (`PATHSIG_TIME_CHUNK=off`) requests queue normally.
+    pub long_path_points: usize,
 }
 
 impl Default for BatcherConfig {
@@ -29,6 +39,7 @@ impl Default for BatcherConfig {
         BatcherConfig {
             max_batch: 32,
             max_wait: Duration::from_millis(2),
+            long_path_points: 2048,
         }
     }
 }
@@ -74,11 +85,35 @@ impl Batcher {
     }
 
     /// Submit a request; blocks until its batch executes and returns the
-    /// result. Batchable ops: plain signatures (same config key). Other
-    /// ops execute immediately.
+    /// result. Batchable ops: plain signatures (same config key) below
+    /// the long-path threshold. Other ops — and long-path signatures,
+    /// which saturate the engine alone — execute immediately.
     pub fn submit(&self, req: Request) -> Result<(Vec<f64>, Vec<usize>, &'static str), String> {
         if req.op != RequestOp::Signature {
             return self.service.execute(&req);
+        }
+        let points = if req.dim == 0 { 0 } else { req.path.len() / req.dim };
+        // Requests that may route to a PJRT artifact keep queueing —
+        // artifacts batch natively, and probing the native engine here
+        // would build and cache it for nothing.
+        let native_only = req.backend == Backend::Native || self.service.runtime.is_none();
+        if native_only && points >= self.config.long_path_points {
+            // Bypass only when the engine will actually serve this
+            // request time-parallel; with the tree unavailable
+            // (PATHSIG_TIME_CHUNK=off, degenerate shapes) a B=1
+            // execution would run single-lane, and queueing for batch
+            // parallelism remains the right call.
+            let eng = self.service.engine(req.dim, &req.spec);
+            if matches!(
+                plan(&eng, 1, points.saturating_sub(1)),
+                TimeMode::TimeParallel { .. }
+            ) {
+                self.service
+                    .metrics
+                    .long_path_bypass
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                return self.service.execute(&req);
+            }
         }
         let (tx, rx) = std::sync::mpsc::channel();
         {
@@ -240,6 +275,7 @@ mod tests {
             BatcherConfig {
                 max_batch: 64,
                 max_wait: Duration::from_millis(1),
+                ..BatcherConfig::default()
             },
         );
         let (out, shape, backend) = b.submit(make_req(2, &[0.0, 0.0, 1.0, 1.0])).unwrap();
@@ -256,6 +292,7 @@ mod tests {
             BatcherConfig {
                 max_batch: 8,
                 max_wait: Duration::from_millis(20),
+                ..BatcherConfig::default()
             },
         ));
         let mut handles = Vec::new();
@@ -291,6 +328,7 @@ mod tests {
             BatcherConfig {
                 max_batch: 4,
                 max_wait: Duration::from_millis(5),
+                ..BatcherConfig::default()
             },
         ));
         let b1 = Arc::clone(&b);
@@ -302,6 +340,45 @@ mod tests {
         let r2 = h2.join().unwrap().unwrap();
         assert_eq!(r1.1, vec![6]); // d=2, N=2 → 6
         assert_eq!(r2.1, vec![12]); // d=3, N=2 → 12
+    }
+
+    #[test]
+    fn long_paths_bypass_the_queue() {
+        // A path over the threshold AND over the scheduler's
+        // time-parallel gate must be served immediately (no max_wait
+        // stall, no engine batch) and counted in the metric.
+        let svc = Arc::new(SigService::new(None));
+        let b = Batcher::new(
+            Arc::clone(&svc),
+            BatcherConfig {
+                max_batch: 64,
+                // Long enough that a queued request would visibly stall.
+                max_wait: Duration::from_secs(5),
+                long_path_points: 16,
+            },
+        );
+        let m1 = 97; // ≥ threshold, and ≥ MIN_TIME_STEPS increments
+        let path: Vec<f64> = (0..m1 * 2).map(|i| (i as f64) * 0.01).collect();
+        // The bypass defers to the scheduler; under an ambient
+        // PATHSIG_TIME_CHUNK that disables the tree (e.g. `off`) the
+        // request would rightly queue instead — skip the latency
+        // assertions there rather than inherit env flakiness.
+        let eng = svc.engine(2, &crate::words::WordSpec::Truncated { depth: 2 });
+        if !matches!(plan(&eng, 1, m1 - 1), TimeMode::TimeParallel { .. }) {
+            return;
+        }
+        let t0 = Instant::now();
+        let (out, shape, backend) = b.submit(make_req(2, &path)).unwrap();
+        assert!(t0.elapsed() < Duration::from_secs(2), "long path was queued");
+        assert_eq!(shape, vec![6]);
+        assert_eq!(backend, "native");
+        // Level 1 = total displacement.
+        assert!((out[0] - (m1 - 1) as f64 * 0.02).abs() < 1e-9);
+        assert_eq!(
+            svc.metrics.long_path_bypass.load(std::sync::atomic::Ordering::Relaxed),
+            1
+        );
+        assert_eq!(b.queued(), 0);
     }
 
     #[test]

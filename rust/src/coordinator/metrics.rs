@@ -27,6 +27,10 @@ pub struct Metrics {
     pub sessions_evicted: AtomicU64,
     /// Samples pushed across all streaming sessions.
     pub stream_pushes: AtomicU64,
+    /// Signature requests that bypassed the batch queue because their
+    /// path exceeded the batcher's long-path threshold (they saturate
+    /// the engine alone via the time-parallel scheduler).
+    pub long_path_bypass: AtomicU64,
     /// End-to-end per-request latency.
     pub request_latency: LatencyHistogram,
     /// Per-batch execution latency.
@@ -104,6 +108,10 @@ impl Metrics {
             (
                 "stream_pushes",
                 Json::Num(self.stream_pushes.load(Relaxed) as f64),
+            ),
+            (
+                "long_path_bypass",
+                Json::Num(self.long_path_bypass.load(Relaxed) as f64),
             ),
             (
                 "request_latency_p50_us",

@@ -258,6 +258,7 @@ mod tests {
                 batcher: BatcherConfig {
                     max_batch: 8,
                     max_wait: std::time::Duration::from_millis(1),
+                    ..BatcherConfig::default()
                 },
             },
         )
@@ -366,6 +367,7 @@ mod tests {
                 batcher: BatcherConfig {
                     max_batch: 8,
                     max_wait: std::time::Duration::from_millis(1),
+                    ..BatcherConfig::default()
                 },
             },
         )

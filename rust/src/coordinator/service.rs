@@ -12,7 +12,7 @@
 use super::protocol::{Backend, Request, RequestOp};
 use crate::logsig::LogSigEngine;
 use crate::sig::{
-    signature, signature_batch_into, windowed_signatures, SigEngine, StreamEngine, StreamScratch,
+    signature_batch_into, windowed_signatures, SigEngine, StreamEngine, StreamScratch,
     StreamTable, Window,
 };
 use crate::runtime::Runtime;
@@ -515,7 +515,13 @@ impl SigService {
                     }
                 }
                 let eng = self.engine(req.dim, &req.spec);
-                let out = signature(&eng, &req.path);
+                // Route through the batch kernel with B = 1: identical
+                // arithmetic for short paths (scalar fallback), and long
+                // paths pick up the time-parallel scheduler — a single
+                // wire request no longer serializes a worker on one
+                // core (see `crate::sig::schedule`).
+                let mut out = vec![0.0; eng.out_dim()];
+                signature_batch_into(&eng, &req.path, 1, &mut out);
                 self.metrics
                     .native_executions
                     .fetch_add(1, std::sync::atomic::Ordering::Relaxed);

@@ -77,6 +77,7 @@ fn cmd_serve(args: &Args) -> i32 {
         batcher: BatcherConfig {
             max_batch: args.usize("max-batch", 32),
             max_wait: std::time::Duration::from_millis(args.u64("max-wait-ms", 2)),
+            long_path_points: args.usize("long-path-points", 2048),
         },
     };
     match serve(service, config) {

@@ -37,9 +37,10 @@
 
 use super::forward::forward_sweep_range;
 use super::lanes::{
-    backward_step_lanes, chen_update_lanes, lane_forward, project_block, ForwardWorkspace,
-    DEFAULT_LANE_WIDTH,
+    backward_step_lanes, chen_update_lanes, lane_dispatch, lane_forward, project_block,
+    ForwardWorkspace,
 };
+use super::schedule::{self, TimeMode};
 use super::{chen_update, SigEngine};
 use crate::util::threadpool::{parallel_for_into, parallel_map, SendPtr};
 
@@ -348,24 +349,10 @@ fn lane_backward_dispatch(
     out: &mut [f64],
     reuse_terminal: bool,
 ) {
-    match eng.lanes() {
-        4 => lane_backward::<4>(eng, block, nb, per_path, grads, ws, out, reuse_terminal),
-        8 => lane_backward::<8>(eng, block, nb, per_path, grads, ws, out, reuse_terminal),
-        16 => lane_backward::<16>(eng, block, nb, per_path, grads, ws, out, reuse_terminal),
-        32 => lane_backward::<32>(eng, block, nb, per_path, grads, ws, out, reuse_terminal),
-        // `SigEngine::lanes` only returns the widths above; the arm
-        // exists so the match is total without coupling to the default.
-        _ => lane_backward::<DEFAULT_LANE_WIDTH>(
-            eng,
-            block,
-            nb,
-            per_path,
-            grads,
-            ws,
-            out,
-            reuse_terminal,
-        ),
-    }
+    lane_dispatch!(
+        eng.lanes(),
+        lane_backward(eng, block, nb, per_path, grads, ws, out, reuse_terminal)
+    );
 }
 
 /// Batched backward: `paths` `(B, M+1, d)`, `grads_out` `(B, |I|)` →
@@ -402,6 +389,11 @@ pub fn sig_backward_batch_into(
     assert_eq!(out.len(), paths.len(), "gradient buffer has wrong size");
     let d = eng.table.d;
     assert!(per_path % d == 0 && per_path / d >= 1, "bad path shape");
+    // Long paths with small batches route to the checkpointed
+    // time-parallel backward (see `schedule` / `tree`).
+    if let TimeMode::TimeParallel { chunk } = schedule::plan(eng, batch, per_path / d - 1) {
+        return super::tree::sig_backward_batch_tree_into(eng, paths, grads_out, batch, chunk, out);
+    }
     let lanes = eng.lanes();
 
     if batch < lanes {
@@ -513,6 +505,13 @@ pub fn signature_and_backward_batch_into(
     let d = eng.table.d;
     assert!(per_path % d == 0 && per_path / d >= 1, "bad path shape");
     let steps = per_path / d - 1;
+    // Long paths with small batches: the fused tree gets the signature
+    // from the boundary prefix scan the backward needs anyway.
+    if let TimeMode::TimeParallel { chunk } = schedule::plan(eng, batch, steps) {
+        return super::tree::signature_and_backward_batch_tree_into(
+            eng, paths, grads_out, batch, chunk, sig_out, grad_out,
+        );
+    }
     let lanes = eng.lanes();
     // SAFETY (both branches below): each unit index is claimed exactly
     // once by `parallel_for_into`, so the signature rows derived from
@@ -590,6 +589,12 @@ pub fn signature_and_backward_batch_into(
 /// the two-phase form of the fused entry point for training loops
 /// where the cotangents only exist after a head/loss evaluation.
 /// Memory cost of the cache is the paper's `O(B·D_sig)` (Table 2).
+///
+/// The two-phase pair always uses the sequential-time kernels (its
+/// contract is the cached terminal state, which the time-parallel
+/// tree replaces with chunk-boundary checkpoints); long-path training
+/// should prefer [`signature_and_backward_batch_into`], which routes
+/// through the checkpointed tree automatically.
 pub fn signature_batch_states_into(
     eng: &SigEngine,
     paths: &[f64],

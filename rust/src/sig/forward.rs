@@ -17,6 +17,7 @@
 //! fallback and the differential-testing oracle.
 
 use super::lanes::{lane_forward_dispatch, project_block, ForwardWorkspace};
+use super::schedule::{self, TimeMode};
 use super::SigEngine;
 use crate::util::threadpool::{parallel_for_into, parallel_map};
 
@@ -153,6 +154,13 @@ pub fn signature_batch_into(eng: &SigEngine, paths: &[f64], batch: usize, out: &
     let d = eng.table.d;
     assert!(per_path % d == 0 && per_path / d >= 1, "bad path shape");
     let m1 = per_path / d;
+    // Long paths with small batches route to the time-parallel tree
+    // (chunked Chen sweeps + log-depth combine reduction, ~1e-12 vs the
+    // sequential kernels) — see `schedule` for the policy and the
+    // `PATHSIG_TIME_CHUNK` knob.
+    if let TimeMode::TimeParallel { chunk } = schedule::plan(eng, batch, m1 - 1) {
+        return super::tree::signature_batch_tree_into(eng, paths, batch, chunk, out);
+    }
     let lanes = eng.lanes();
 
     if batch < lanes {

@@ -256,6 +256,26 @@ pub(crate) fn lane_forward<const L: usize>(
     }
 }
 
+/// Dispatch a generic-over-`L` kernel on the runtime lane width —
+/// the ONE place the supported width set `{4, 8, 16, 32}` is spelled
+/// out for monomorphization. These are the only values
+/// [`SigEngine::lanes`] can return; workspace buffers are strided by
+/// the lane width, so running a kernel at any other width would
+/// corrupt silently — fail loudly if the lane domain ever grows
+/// without updating this match.
+macro_rules! lane_dispatch {
+    ($lanes:expr, $func:ident($($args:expr),* $(,)?)) => {
+        match $lanes {
+            4 => $func::<4>($($args),*),
+            8 => $func::<8>($($args),*),
+            16 => $func::<16>($($args),*),
+            32 => $func::<32>($($args),*),
+            other => unreachable!("unsupported lane width {other}"),
+        }
+    };
+}
+pub(crate) use lane_dispatch;
+
 /// Monomorphization dispatch for [`lane_forward`] on the engine's lane
 /// width.
 pub(crate) fn lane_forward_dispatch(
@@ -267,15 +287,7 @@ pub(crate) fn lane_forward_dispatch(
     jr: usize,
     ws: &mut ForwardWorkspace,
 ) {
-    match eng.lanes() {
-        4 => lane_forward::<4>(eng, block, nb, per_path, jl, jr, ws),
-        8 => lane_forward::<8>(eng, block, nb, per_path, jl, jr, ws),
-        16 => lane_forward::<16>(eng, block, nb, per_path, jl, jr, ws),
-        32 => lane_forward::<32>(eng, block, nb, per_path, jl, jr, ws),
-        // `SigEngine::lanes` only returns the widths above; the arm
-        // exists so the match is total without coupling to the default.
-        _ => lane_forward::<DEFAULT_LANE_WIDTH>(eng, block, nb, per_path, jl, jr, ws),
-    }
+    lane_dispatch!(eng.lanes(), lane_forward(eng, block, nb, per_path, jl, jr, ws));
 }
 
 /// Project lane `l` of a lane-major state matrix onto the requested

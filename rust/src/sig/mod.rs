@@ -23,7 +23,9 @@
 mod backward;
 mod forward;
 pub mod lanes;
+pub mod schedule;
 mod stream;
+mod tree;
 mod windows;
 
 pub use backward::{
@@ -38,7 +40,12 @@ pub use forward::{
     signature_batch_scalar, signature_stream, signature_stream_into,
 };
 pub use lanes::{backward_step_lanes, chen_update_lanes, ForwardWorkspace, DEFAULT_LANE_WIDTH};
+pub use schedule::{plan, ChunkPolicy, TimeMode, MIN_TIME_STEPS};
 pub use stream::{MultiStream, StreamEngine, StreamScratch, StreamTable};
+pub use tree::{
+    sig_backward_batch_tree_into, signature_and_backward_batch_tree_into,
+    signature_batch_tree_into, windowed_signatures_batch_tree_into,
+};
 pub use windows::{
     expanding_windows, sliding_windows, window_signature, windowed_signatures,
     windowed_signatures_batch, windowed_signatures_batch_into, windowed_signatures_into, Window,
@@ -47,6 +54,7 @@ pub use windows::{
 use crate::util::pool::Pool;
 use crate::util::threadpool::default_threads;
 use crate::words::WordTable;
+use std::sync::{Arc, OnceLock};
 
 /// A word table bundled with the small precomputed constant tables the
 /// kernels need (`1/k` and `1/k!`), the parallelism configuration, and
@@ -69,10 +77,21 @@ pub struct SigEngine {
     /// `PATHSIG_LANES` environment variable. Batches with `B < L` use
     /// the scalar per-path kernel.
     pub lane_width: usize,
+    /// Time-axis chunking policy (`PATHSIG_TIME_CHUNK`): whether and
+    /// how batch entry points may split long paths into concurrently
+    /// swept chunks — see [`schedule`].
+    pub time_chunk: ChunkPolicy,
     /// Pooled forward workspaces (one per worker, reused across calls).
     pub(crate) fwd_pool: Pool<ForwardWorkspace>,
     /// Pooled backward workspaces.
     pub(crate) bwd_pool: Pool<BackwardWorkspace>,
+    /// Lazily built factor-closed combine table for the time-parallel
+    /// tree (shared by clones — it is immutable once built).
+    pub(crate) tree_tbl: OnceLock<Arc<StreamTable>>,
+    /// Pooled shared buffers of the time-parallel engine.
+    pub(crate) tree_pool: Pool<tree::TreeBuffers>,
+    /// Pooled per-worker scratch of the time-parallel engine.
+    pub(crate) tree_ctx_pool: Pool<tree::TreeScratch>,
 }
 
 impl SigEngine {
@@ -97,8 +116,14 @@ impl SigEngine {
             inv_fact,
             threads: default_threads(),
             lane_width,
+            time_chunk: schedule::chunk_policy_from(
+                std::env::var("PATHSIG_TIME_CHUNK").ok().as_deref(),
+            ),
             fwd_pool: Pool::default(),
             bwd_pool: Pool::default(),
+            tree_tbl: OnceLock::new(),
+            tree_pool: Pool::default(),
+            tree_ctx_pool: Pool::default(),
         }
     }
 
@@ -124,6 +149,24 @@ impl SigEngine {
             4 | 8 | 16 | 32 => self.lane_width,
             _ => DEFAULT_LANE_WIDTH,
         }
+    }
+
+    /// The factor-closed combine table the time-parallel tree runs on,
+    /// built lazily from the engine's requested words on first use and
+    /// cached for the engine's lifetime (clones share it). Free — an
+    /// identical table — for suffix-closed requests (truncated,
+    /// anisotropic, DAG); general projected sets grow by at most
+    /// `|w|²/2` state entries per requested word (see
+    /// [`StreamTable`]).
+    pub(crate) fn tree_table(&self) -> Arc<StreamTable> {
+        self.tree_tbl
+            .get_or_init(|| {
+                let mut st = StreamTable::new(self.table.d, &self.table.requested);
+                st.eng.threads = self.threads;
+                st.eng.lane_width = self.lane_width;
+                Arc::new(st)
+            })
+            .clone()
     }
 
     /// Output dimension `|I|`.

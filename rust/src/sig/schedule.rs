@@ -1,0 +1,308 @@
+//! Adaptive batch×time scheduler — which parallelism axis a batch call
+//! should spend the machine on.
+//!
+//! The paper's kernels parallelize over **words × batch**; every entry
+//! point in this crate additionally cuts the batch into lane blocks so
+//! the Horner inner loop is SIMD over paths. That leaves one regime on
+//! the table: **long paths with small batches** (large `M`, `B < L` or
+//! `B/L < threads`), where the strictly sequential walk down the time
+//! axis uses one lane of one core no matter how much hardware is
+//! available. Chen's identity is associative, so the time axis can be
+//! chunked and reduced — see [`crate::sig::tree`] — at the price of a
+//! reassociated summation order (results match the sequential kernels
+//! to ~1e-12, not bitwise).
+//!
+//! This module decides *when* that trade is worth it and *how long* the
+//! chunks should be:
+//!
+//! * **batch-parallel** (the classic path) whenever the batch alone
+//!   already fills both the SIMD lanes and the thread pool;
+//! * **time-parallel** when `B < L`: lanes are packed over
+//!   (path × chunk) units, so even a single path sweeps `L` chunks per
+//!   instruction;
+//! * **hybrid** when `B ≥ L` but there are fewer lane blocks than
+//!   worker threads: lanes stay packed over paths and the spare threads
+//!   sweep different chunks of the time axis.
+//!
+//! The knob: `PATHSIG_TIME_CHUNK` = `auto` (default — the heuristic
+//! below), an explicit chunk length in increments (forces that chunk
+//! whenever time-parallelism is engaged), or `off`/`0` (always the
+//! classic sequential-time path). Paths shorter than
+//! [`MIN_TIME_STEPS`] increments never engage time-parallelism, so
+//! short-path calls keep their bitwise-stable fast path regardless of
+//! the knob.
+
+use super::windows::Window;
+use super::SigEngine;
+
+/// Minimum number of increments before a batch call may be routed to
+/// the time-parallel tree. Below this the chunking overhead (boundary
+/// products, reduction) outweighs any parallel win, and short-path
+/// callers keep bitwise-identical results under every knob setting.
+pub const MIN_TIME_STEPS: usize = 64;
+
+/// Smallest chunk the `auto` policy will pick (an explicit
+/// `PATHSIG_TIME_CHUNK=<C>` may go lower). Keeps the sequential
+/// boundary scans a small fraction of the parallel chunk work.
+pub(crate) const MIN_CHUNK: usize = 16;
+
+/// Largest chunk the `auto` policy will pick — bounds the per-chunk
+/// sequential tail so very long paths still spread over all units.
+pub(crate) const MAX_CHUNK: usize = 4096;
+
+/// Parsed `PATHSIG_TIME_CHUNK` policy (see the module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChunkPolicy {
+    /// Pick the chunk length from `(B, M, threads, L)` — the default.
+    Auto,
+    /// Force this chunk length (in increments) whenever the
+    /// time-parallel path engages. The engagement gates (path length,
+    /// batch saturation) still apply.
+    Fixed(usize),
+    /// Never use the time-parallel path.
+    Off,
+}
+
+/// Parse a raw `PATHSIG_TIME_CHUNK` value (unset ⇒ [`ChunkPolicy::Auto`];
+/// unparsable values fall back to `Auto` rather than erroring, matching
+/// the other env knobs).
+pub(crate) fn chunk_policy_from(env: Option<&str>) -> ChunkPolicy {
+    let Some(s) = env.map(str::trim) else {
+        return ChunkPolicy::Auto;
+    };
+    if s.is_empty() || s.eq_ignore_ascii_case("auto") {
+        return ChunkPolicy::Auto;
+    }
+    if s.eq_ignore_ascii_case("off") {
+        return ChunkPolicy::Off;
+    }
+    match s.parse::<usize>() {
+        Ok(0) => ChunkPolicy::Off,
+        Ok(c) => ChunkPolicy::Fixed(c),
+        Err(_) => ChunkPolicy::Auto,
+    }
+}
+
+/// The execution mode the scheduler chose for one batch call.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TimeMode {
+    /// Classic path: parallel over paths, lanes over paths (or the
+    /// scalar per-path fallback for `B < L`). Sequential over time.
+    BatchParallel,
+    /// Chunked time-parallel path ([`crate::sig::signature_batch_tree_into`]
+    /// and friends): the time axis is split into `ceil(M/chunk)`
+    /// chunks swept concurrently, then reduced with the Chen combine.
+    TimeParallel {
+        /// Chunk length in increments.
+        chunk: usize,
+    },
+}
+
+/// Decide the execution mode for a batch call of `batch` paths with
+/// `steps` increments each, from the engine's configuration
+/// (`threads`, lane width, `PATHSIG_TIME_CHUNK`).
+pub fn plan(eng: &SigEngine, batch: usize, steps: usize) -> TimeMode {
+    plan_with(eng.time_chunk, batch, steps, eng.threads, eng.lanes())
+}
+
+/// Pure core of [`plan`] (unit-testable without touching the process
+/// environment or building engines).
+pub(crate) fn plan_with(
+    policy: ChunkPolicy,
+    batch: usize,
+    steps: usize,
+    threads: usize,
+    lanes: usize,
+) -> TimeMode {
+    if batch == 0 || steps < MIN_TIME_STEPS {
+        return TimeMode::BatchParallel;
+    }
+    let blocks = batch.div_ceil(lanes);
+    if batch >= lanes && blocks >= threads {
+        // The batch alone fills the SIMD lanes and the thread pool —
+        // chunking the time axis could only add overhead.
+        return TimeMode::BatchParallel;
+    }
+    let chunk = match policy {
+        ChunkPolicy::Off => return TimeMode::BatchParallel,
+        ChunkPolicy::Fixed(c) => c.max(1),
+        ChunkPolicy::Auto => {
+            // Target enough (path × chunk) units to fill the idle axis
+            // twice over (slack for load balancing): lanes when B < L,
+            // threads when only the thread pool is starved.
+            let k_target = if batch < lanes {
+                (2 * threads * lanes).div_ceil(batch)
+            } else {
+                (2 * threads).div_ceil(blocks)
+            };
+            steps.div_ceil(k_target.max(2)).clamp(MIN_CHUNK, MAX_CHUNK)
+        }
+    };
+    let chunk = chunk.min(steps);
+    if steps.div_ceil(chunk) < 2 {
+        return TimeMode::BatchParallel;
+    }
+    TimeMode::TimeParallel { chunk }
+}
+
+/// Snap a window-call chunk length onto the windows' start grid: if
+/// every window start is a multiple of some `g ≥ 4`, pick a divisor of
+/// `g` near `chunk` so window left edges coincide with chunk
+/// boundaries and the per-window head sweep vanishes (sliding windows
+/// with stride `s` get this for free whenever the chunk divides `s`).
+/// Falls back to `chunk` unchanged when the starts share no useful
+/// grid — unaligned heads are still handled correctly, just without
+/// the reuse.
+pub(crate) fn snap_chunk(chunk: usize, windows: &[Window]) -> usize {
+    fn gcd(mut a: usize, mut b: usize) -> usize {
+        while b != 0 {
+            let t = a % b;
+            a = b;
+            b = t;
+        }
+        a
+    }
+    let g = windows.iter().fold(0usize, |acc, w| gcd(acc, w.l));
+    if g == 0 {
+        // Every window starts at 0 — aligned for any chunk.
+        return chunk;
+    }
+    if g < 4 {
+        return chunk;
+    }
+    if g <= 2 * chunk {
+        // Snap only when the grid stays comparable to the suggested
+        // chunk — a tiny gcd would explode the chunk count (memory and
+        // scan cost scale with it) for a minor head-sweep saving.
+        return if 4 * g >= chunk { g } else { chunk };
+    }
+    // Largest divisor of g not exceeding the suggested chunk.
+    let mut best = 1;
+    for c in (1..=chunk.min(g)).rev() {
+        if g % c == 0 {
+            best = c;
+            break;
+        }
+    }
+    if best >= 4 {
+        best
+    } else {
+        chunk
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_parsing() {
+        assert_eq!(chunk_policy_from(None), ChunkPolicy::Auto);
+        assert_eq!(chunk_policy_from(Some("auto")), ChunkPolicy::Auto);
+        assert_eq!(chunk_policy_from(Some(" AUTO ")), ChunkPolicy::Auto);
+        assert_eq!(chunk_policy_from(Some("")), ChunkPolicy::Auto);
+        assert_eq!(chunk_policy_from(Some("off")), ChunkPolicy::Off);
+        assert_eq!(chunk_policy_from(Some("0")), ChunkPolicy::Off);
+        assert_eq!(chunk_policy_from(Some("64")), ChunkPolicy::Fixed(64));
+        assert_eq!(chunk_policy_from(Some(" 4 ")), ChunkPolicy::Fixed(4));
+        assert_eq!(chunk_policy_from(Some("garbage")), ChunkPolicy::Auto);
+    }
+
+    #[test]
+    fn short_paths_never_engage() {
+        for policy in [ChunkPolicy::Auto, ChunkPolicy::Fixed(4)] {
+            assert_eq!(
+                plan_with(policy, 1, MIN_TIME_STEPS - 1, 8, 8),
+                TimeMode::BatchParallel
+            );
+        }
+    }
+
+    #[test]
+    fn saturated_batches_stay_batch_parallel() {
+        // B ≥ L and enough lane blocks to fill every thread.
+        assert_eq!(plan_with(ChunkPolicy::Auto, 64, 4096, 4, 8), TimeMode::BatchParallel);
+        assert_eq!(plan_with(ChunkPolicy::Fixed(32), 64, 4096, 4, 8), TimeMode::BatchParallel);
+    }
+
+    #[test]
+    fn long_single_path_goes_time_parallel() {
+        // B = 1, M = 4096, 4 threads × 8 lanes: target 64 chunks.
+        match plan_with(ChunkPolicy::Auto, 1, 4096, 4, 8) {
+            TimeMode::TimeParallel { chunk } => {
+                assert_eq!(chunk, 64);
+            }
+            other => panic!("expected time-parallel, got {other:?}"),
+        }
+        // Single-threaded still engages: the win is SIMD lanes over
+        // chunks.
+        assert!(matches!(
+            plan_with(ChunkPolicy::Auto, 1, 4096, 1, 8),
+            TimeMode::TimeParallel { .. }
+        ));
+    }
+
+    #[test]
+    fn hybrid_regime_engages_when_blocks_underfill_threads() {
+        // B = 16 = 2 lane blocks < 16 threads: spare threads sweep the
+        // time axis.
+        assert!(matches!(
+            plan_with(ChunkPolicy::Auto, 16, 10_000, 16, 8),
+            TimeMode::TimeParallel { .. }
+        ));
+    }
+
+    #[test]
+    fn fixed_policy_forces_chunk_length() {
+        match plan_with(ChunkPolicy::Fixed(4), 1, 256, 4, 8) {
+            TimeMode::TimeParallel { chunk } => assert_eq!(chunk, 4),
+            other => panic!("expected forced chunk, got {other:?}"),
+        }
+        // Off always wins.
+        assert_eq!(plan_with(ChunkPolicy::Off, 1, 1 << 20, 8, 8), TimeMode::BatchParallel);
+    }
+
+    #[test]
+    fn single_chunk_falls_back() {
+        // Forced chunk covering the whole path ⇒ no parallelism to win.
+        assert_eq!(
+            plan_with(ChunkPolicy::Fixed(100_000), 1, 4096, 4, 8),
+            TimeMode::BatchParallel
+        );
+    }
+
+    #[test]
+    fn auto_clamps_chunk_range() {
+        // Tiny path just over the gate: chunk clamps to MIN_CHUNK.
+        match plan_with(ChunkPolicy::Auto, 1, MIN_TIME_STEPS, 8, 32) {
+            TimeMode::TimeParallel { chunk } => assert_eq!(chunk, MIN_CHUNK),
+            other => panic!("{other:?}"),
+        }
+        // Huge path: chunk clamps to MAX_CHUNK.
+        match plan_with(ChunkPolicy::Auto, 1, 1 << 24, 2, 4) {
+            TimeMode::TimeParallel { chunk } => assert_eq!(chunk, MAX_CHUNK),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn snapping_aligns_to_window_starts() {
+        let wins: Vec<Window> = (0..4).map(|i| Window::new(i * 24, i * 24 + 48)).collect();
+        // gcd of starts is 24 ≤ 2·chunk ⇒ snap to 24.
+        assert_eq!(snap_chunk(32, &wins), 24);
+        // All-zero starts: nothing to snap.
+        let expanding: Vec<Window> = (1..5).map(|r| Window::new(0, r * 10)).collect();
+        assert_eq!(snap_chunk(32, &expanding), 32);
+        // Large gcd: pick its largest divisor ≤ chunk.
+        let wide: Vec<Window> = (0..3).map(|i| Window::new(i * 96, i * 96 + 100)).collect();
+        assert_eq!(snap_chunk(32, &wide), 32); // 96 % 32 == 0
+        let wide2: Vec<Window> = (0..3).map(|i| Window::new(i * 90, i * 90 + 100)).collect();
+        assert_eq!(snap_chunk(32, &wide2), 30); // largest divisor of 90 ≤ 32
+        // No useful grid (gcd 1): unchanged.
+        let ragged = vec![Window::new(3, 40), Window::new(7, 50)];
+        assert_eq!(snap_chunk(32, &ragged), 32);
+        // A tiny gcd must not explode the chunk count.
+        let fine: Vec<Window> = (0..4).map(|i| Window::new(i * 4, i * 4 + 200)).collect();
+        assert_eq!(snap_chunk(64, &fine), 64);
+    }
+}

@@ -259,6 +259,58 @@ impl StreamTable {
         }
     }
 
+    /// Transpose of right Chen multiplication: given a constant factor
+    /// `e` (a closure state), rewrite `lambda` in place from the
+    /// cotangent of `S ⊗ e` to the cotangent of `S`:
+    ///
+    /// ```text
+    /// λ'(p) = Σ_{w = p∘s ∈ C} λ(w)·e(s)
+    /// ```
+    ///
+    /// This is the chunk-boundary cotangent scan of the checkpointed
+    /// backward pass ([`crate::sig::tree`]): one call replaces a whole
+    /// chunk's worth of per-step transposes. Levels are processed in
+    /// ASCENDING order — contributions go strictly from a word to its
+    /// shorter prefixes (the `s = ε` split is the in-place identity
+    /// term `λ(w) += λ(w)·1`, skipped), so every `λ(w)` is read before
+    /// anything lands on it, exactly like the per-step backward sweep.
+    pub fn combine_transpose_right(&self, e: &[f64], lambda: &mut [f64]) {
+        let t = &self.eng.table;
+        assert_eq!(e.len(), t.state_len, "e must be a closure state");
+        assert_eq!(lambda.len(), t.state_len, "lambda must be a closure state");
+        for n in 1..=t.max_level {
+            let level_base = t.level_csr_base(n);
+            for (off, w) in t.level_range(n).enumerate() {
+                let lam = lambda[w];
+                if lam == 0.0 {
+                    continue;
+                }
+                let base = level_base + off * n;
+                let prefixes = &t.csr_prefix[base..base + n];
+                let suffixes = &self.csr_suffix[base..base + n];
+                // Splits k = 0..n-1: prefix w_{:k} gains λ(w)·e(w_{k:})
+                // (k = 0 sends λ(w)·e(w) to ε, which is inert).
+                for k in 0..n {
+                    lambda[prefixes[k] as usize] += lam * e[suffixes[k] as usize];
+                }
+            }
+        }
+    }
+
+    /// Adjoint of [`StreamTable::project_into`]: accumulate
+    /// requested-coordinate cotangents onto a factor-closure state
+    /// vector (duplicate requests accumulate, like
+    /// [`crate::words::WordTable::scatter_grad`]).
+    pub fn scatter_into(&self, grad_out: &[f64], state: &mut [f64]) {
+        // Hard asserts: a short `grad_out` would otherwise be silently
+        // truncated by the zip in release builds, dropping cotangents.
+        assert_eq!(grad_out.len(), self.out_dim(), "grad_out must have |I| entries");
+        assert_eq!(state.len(), self.state_len(), "state must be a closure state");
+        for (g, &idx) in grad_out.iter().zip(&self.out_map) {
+            state[idx as usize] += *g;
+        }
+    }
+
     /// Lane-major [`StreamTable::combine`] (`a`, `b`, `out` are
     /// `state_len × L`, lanes contiguous); bitwise identical per lane
     /// to the scalar kernel.
@@ -884,6 +936,47 @@ mod tests {
         let mut got = s.clone();
         t.lmul_update(&mut got, &dx);
         assert_allclose(&got, &want, 1e-13, 1e-12, "lmul vs combine");
+    }
+
+    #[test]
+    fn combine_transpose_right_is_adjoint_of_combine() {
+        // λ'(p) must equal ∂/∂a(p) Σ_w λ(w)·(a ⊗ e)(w): the combine is
+        // linear in `a` (with a(ε) pinned to 1), so central differences
+        // are exact up to rounding.
+        let t = stream_tbl(2, 3);
+        let sl = t.state_len();
+        let mut rng = Rng::new(7104);
+        let mut a = vec![0.0; sl];
+        let mut e = vec![0.0; sl];
+        a[0] = 1.0;
+        e[0] = 1.0;
+        for w in 1..sl {
+            a[w] = rng.gaussian() * 0.3;
+            e[w] = rng.gaussian() * 0.3;
+        }
+        let lam: Vec<f64> = (0..sl).map(|w| if w == 0 { 0.0 } else { rng.gaussian() }).collect();
+        let mut lam_t = lam.clone();
+        t.combine_transpose_right(&e, &mut lam_t);
+        let f = |a: &[f64]| {
+            let mut c = vec![0.0; sl];
+            t.combine(a, &e, &mut c);
+            (1..sl).map(|w| lam[w] * c[w]).sum::<f64>()
+        };
+        let eps = 1e-6;
+        let mut ap = a.clone();
+        for p in 1..sl {
+            ap[p] = a[p] + eps;
+            let up = f(&ap);
+            ap[p] = a[p] - eps;
+            let dn = f(&ap);
+            ap[p] = a[p];
+            let fd = (up - dn) / (2.0 * eps);
+            assert!(
+                (lam_t[p] - fd).abs() < 1e-7 * (1.0 + fd.abs()),
+                "coord {p}: transpose {} vs fd {fd}",
+                lam_t[p]
+            );
+        }
     }
 
     #[test]

@@ -1,0 +1,963 @@
+//! Time-parallel signature engine — chunked Chen tree reduction and the
+//! checkpointed backward pass (ISSUE 5).
+//!
+//! Every other kernel in this crate walks the time axis strictly
+//! sequentially (one Chen update per increment), so a long path with a
+//! small batch uses one SIMD lane of one core. Chen's identity is
+//! associative — `S_{0,T} = S_{0,u} ⊗ S_{u,T}` — so the time axis can
+//! be **chunked**:
+//!
+//! ```text
+//!   increments:  |---c0---|---c1---|---c2---|--c3--|      (C each)
+//!   phase 1:      E_0       E_1      E_2     E_3     chunk-local sigs,
+//!                                                    swept CONCURRENTLY
+//!   phase 2:        E_0⊗E_1     E_2⊗E_3               log-depth tree of
+//!                       (E_0⊗E_1)⊗(E_2⊗E_3) = S_{0,T}  combine_lanes
+//! ```
+//!
+//! Phase 1 packs the `(path × chunk)` units into the lane-major SIMD
+//! kernel ([`chen_update_lanes`]): when `B < L` the lanes sweep `L`
+//! different chunks at once (a single path still fills a whole SIMD
+//! register), and when `B ≥ L` lanes stay packed over paths while the
+//! spare threads take different chunks (the scheduler's hybrid mode —
+//! see [`crate::sig::schedule`]). Phase 2 reduces each path's chunk
+//! signatures pairwise with the factor-closure Chen combine of
+//! [`StreamTable`], packing up to `L` independent pairs per
+//! [`StreamTable::combine_lanes`] call — `O(log K)` levels, every level
+//! SIMD over pairs.
+//!
+//! The combine reads **suffix** coordinates, so the reduction runs over
+//! the factor closure of the engine's request: free (identical table)
+//! for truncated/anisotropic/DAG sets, which are already suffix-closed,
+//! and an automatic factor-closure fallback for general projected sets
+//! (at most `|w|²/2` extra state entries per requested word — the same
+//! table [`StreamTable`] builds for streaming, cached per engine).
+//!
+//! ## Checkpointed backward
+//!
+//! The forward scan's chunk-boundary prefix states `P_k = S_{0,kC}` are
+//! free checkpoints. The backward pass becomes:
+//!
+//! 1. chunk-local signatures `E_k` (parallel, as above);
+//! 2. a cheap sequential boundary scan per path: prefixes
+//!    `P_{k+1} = P_k ⊗ E_k` and boundary cotangents
+//!    `Λ_k = (· ⊗ E_k)ᵀ Λ_{k+1}` — `O(K)` combines instead of `O(M)`
+//!    Chen steps;
+//! 3. every chunk replays **independently, in parallel**: seeded with
+//!    `(P_{k+1}, Λ_{k+1})`, it runs the standard group-inverse
+//!    reconstruction + cotangent sweep over its own `C` increments.
+//!
+//! Group-inverse drift — the numerical hazard of the §4 reconstruction
+//! on long paths — is now bounded to one chunk, because every chunk
+//! restarts from an exactly-scanned boundary state.
+//!
+//! Because the tree reassociates floating-point sums, results match the
+//! sequential kernels to ~1e-12 relative, **not bitwise** — asserted by
+//! the conformance matrix in `tests/tree_properties.rs`. All scratch is
+//! pooled on the engine, so warm calls perform zero heap allocations
+//! (counted in `benches/fig4_longpath.rs`).
+
+use super::forward::forward_sweep_range;
+use super::lanes::{backward_step_lanes, chen_update_lanes, lane_dispatch};
+use super::stream::StreamTable;
+use super::windows::Window;
+use super::{chen_update, SigEngine};
+use crate::util::threadpool::{
+    parallel_fill_rows, parallel_for_ctx, parallel_for_ctx_grained, parallel_for_into, SendPtr,
+};
+
+/// Chunk-grid geometry of one time-parallel call: how the `B × K`
+/// (path, chunk) units map onto the unit axis the lane blocks sweep.
+#[derive(Clone, Copy, Debug)]
+struct Grid {
+    batch: usize,
+    /// Chunks per path, `ceil(steps / chunk)`.
+    kk: usize,
+    /// Chunk length in increments (last chunk of a path may be short).
+    chunk: usize,
+    /// Increments per path.
+    steps: usize,
+    /// `true` ⇒ `u = b·K + k` (lanes sweep chunks of the same path;
+    /// chosen when `B < L`), else `u = k·B + b` (lanes sweep paths at
+    /// the same chunk).
+    path_major: bool,
+}
+
+impl Grid {
+    #[inline]
+    fn units(&self) -> usize {
+        self.batch * self.kk
+    }
+
+    #[inline]
+    fn unit(&self, b: usize, k: usize) -> usize {
+        if self.path_major {
+            b * self.kk + k
+        } else {
+            k * self.batch + b
+        }
+    }
+
+    #[inline]
+    fn split(&self, u: usize) -> (usize, usize) {
+        if self.path_major {
+            (u / self.kk, u % self.kk)
+        } else {
+            (u % self.batch, u / self.batch)
+        }
+    }
+
+    /// Number of real increments in chunk `k` (the last chunk of a
+    /// path is short when `chunk` does not divide `steps`).
+    #[inline]
+    fn chunk_len(&self, k: usize) -> usize {
+        (self.steps - k * self.chunk).min(self.chunk)
+    }
+}
+
+/// Shared per-call buffers of the time-parallel engine (chunk
+/// signatures + the backward pass's boundary checkpoints/cotangents).
+/// Pooled on the engine so warm calls of the same shape allocate
+/// nothing.
+#[derive(Debug, Default)]
+pub(crate) struct TreeBuffers {
+    /// Chunk-local signatures, unit-major: `E_u` at `u·state_len`.
+    chunk_sigs: Vec<f64>,
+    /// Boundary prefix states, `(B, K+1, state_len)`: `P_k = S_{0,kC}`.
+    bound_states: Vec<f64>,
+    /// Boundary cotangents, `(B, K+1, state_len)`: `Λ_k = ∂L/∂S_{0,kC}`.
+    bound_lambda: Vec<f64>,
+}
+
+/// Per-worker scratch of the time-parallel engine (lane-major sweep
+/// state, combine operands, the per-path reduction segment and scalar
+/// window-fold states). Pooled on the engine.
+#[derive(Clone, Debug, Default)]
+pub(crate) struct TreeScratch {
+    lane_state: Vec<f64>,
+    lane_lambda: Vec<f64>,
+    dx: Vec<f64>,
+    neg_dx: Vec<f64>,
+    right_prod: Vec<f64>,
+    gdx: Vec<f64>,
+    /// Lane-major combine operands/result (`state_len × L` each).
+    ca: Vec<f64>,
+    cb: Vec<f64>,
+    cc: Vec<f64>,
+    /// Contiguous copy of one path's `K` chunk signatures for the
+    /// pairwise reduction.
+    seg: Vec<f64>,
+    /// Scalar fold states + step increment for the windowed path.
+    s1: Vec<f64>,
+    s2: Vec<f64>,
+    sdx: Vec<f64>,
+}
+
+impl TreeScratch {
+    /// Size every buffer for `tbl` (idempotent; steady state neither
+    /// allocates nor writes). `reduce_kk` is the chunk count of the
+    /// forward reduction — the only phase that reads `seg` — so the
+    /// backward and windowed drivers pass 0 and never grow a
+    /// `K × state_len` buffer they won't touch.
+    fn ensure(&mut self, tbl: &StreamTable, reduce_kk: usize) {
+        let kk = reduce_kk;
+        let l = tbl.eng.lanes();
+        let sl = tbl.state_len();
+        let d = tbl.dim();
+        let ml = tbl.eng.table.max_level;
+        self.lane_state.resize(sl * l, 0.0);
+        self.lane_lambda.resize(sl * l, 0.0);
+        self.dx.resize(d * l, 0.0);
+        self.neg_dx.resize(d * l, 0.0);
+        self.right_prod.resize((ml + 1) * l, 0.0);
+        self.gdx.resize(d * l, 0.0);
+        self.ca.resize(sl * l, 0.0);
+        self.cb.resize(sl * l, 0.0);
+        self.cc.resize(sl * l, 0.0);
+        self.seg.resize(kk.max(1) * sl, 0.0);
+        self.s1.resize(sl, 0.0);
+        self.s2.resize(sl, 0.0);
+        self.sdx.resize(d, 0.0);
+    }
+}
+
+// ------------------------------------------------------------------
+// Phase 1 — concurrent chunk-local signatures
+// ------------------------------------------------------------------
+
+/// Sweep the chunk-local signatures of units `u0 .. u0 + rows.len()/sl`
+/// lane-major and de-transpose them into consecutive unit-major `rows`.
+/// Lanes whose chunk is short (a path's last chunk) carry zero
+/// increments past their end; lanes beyond the unit count stay inert.
+#[allow(clippy::too_many_arguments)]
+fn chunk_block_forward<const L: usize>(
+    tbl: &StreamTable,
+    paths: &[f64],
+    per_path: usize,
+    grid: Grid,
+    u0: usize,
+    rows: &mut [f64],
+    ws: &mut TreeScratch,
+) {
+    let ieng = &tbl.eng;
+    let d = ieng.table.d;
+    let sl = ieng.table.state_len;
+    let nu = rows.len() / sl;
+    debug_assert!(nu >= 1 && nu <= L);
+    let lane_state = &mut ws.lane_state[..sl * L];
+    let dx = &mut ws.dx[..d * L];
+    lane_state.fill(0.0);
+    lane_state[..L].fill(1.0); // ε row
+    dx.fill(0.0);
+    for s in 0..grid.chunk {
+        for l in 0..nu {
+            let (b, k) = grid.split(u0 + l);
+            let len = grid.chunk_len(k);
+            if s < len {
+                let p = &paths[b * per_path..(b + 1) * per_path];
+                let j = k * grid.chunk + s + 1;
+                for i in 0..d {
+                    dx[i * L + l] = p[j * d + i] - p[(j - 1) * d + i];
+                }
+            } else if s == len {
+                // First padded step of a short chunk: zero this lane's
+                // increment once; later steps keep it zero.
+                for i in 0..d {
+                    dx[i * L + l] = 0.0;
+                }
+            }
+        }
+        chen_update_lanes::<L>(ieng, lane_state, dx);
+    }
+    for (l, row) in rows.chunks_exact_mut(sl).enumerate() {
+        for (w, slot) in row.iter_mut().enumerate() {
+            *slot = lane_state[w * L + l];
+        }
+    }
+}
+
+// ------------------------------------------------------------------
+// Phase 2 — log-depth pairwise reduction (forward)
+// ------------------------------------------------------------------
+
+/// Reduce one path's `K` chunk signatures to `S_{0,T}` with a pairwise
+/// tree, packing up to `L` independent pairs into each
+/// [`StreamTable::combine_lanes`] call. Copies the path's chunk rows
+/// into `ws.seg` first (the shared `chunk_sigs` store stays read-only),
+/// and leaves the result in `ws.seg[..state_len]`.
+///
+/// Adjacent pairs `(2p, 2p+1) → p` preserve chronological order (the
+/// Chen product is associative but not commutative); an odd orphan is
+/// carried to the end of the next level.
+fn reduce_path<const L: usize>(
+    tbl: &StreamTable,
+    chunk_sigs: &[f64],
+    grid: Grid,
+    b: usize,
+    ws: &mut TreeScratch,
+) {
+    let sl = tbl.state_len();
+    for k in 0..grid.kk {
+        let u = grid.unit(b, k);
+        ws.seg[k * sl..(k + 1) * sl].copy_from_slice(&chunk_sigs[u * sl..(u + 1) * sl]);
+    }
+    let mut width = grid.kk;
+    while width > 1 {
+        let pairs = width / 2;
+        let mut p0 = 0;
+        while p0 < pairs {
+            let np = (pairs - p0).min(L);
+            for l in 0..np {
+                let i = 2 * (p0 + l);
+                for w in 0..sl {
+                    ws.ca[w * L + l] = ws.seg[i * sl + w];
+                    ws.cb[w * L + l] = ws.seg[(i + 1) * sl + w];
+                }
+            }
+            tbl.combine_lanes::<L>(&ws.ca[..sl * L], &ws.cb[..sl * L], &mut ws.cc[..sl * L]);
+            // Destination p < every pending source 2p' (p' ≥ p0), so
+            // the compacting scatter never clobbers an unread operand.
+            for l in 0..np {
+                for w in 0..sl {
+                    ws.seg[(p0 + l) * sl + w] = ws.cc[w * L + l];
+                }
+            }
+            p0 += np;
+        }
+        if width % 2 == 1 {
+            ws.seg.copy_within((width - 1) * sl..width * sl, pairs * sl);
+        }
+        width = pairs + width % 2;
+    }
+}
+
+// ------------------------------------------------------------------
+// Forward driver
+// ------------------------------------------------------------------
+
+fn tree_setup(
+    eng: &SigEngine,
+    batch: usize,
+    steps: usize,
+    chunk: usize,
+) -> (std::sync::Arc<StreamTable>, Grid) {
+    let tbl = eng.tree_table();
+    let lanes = tbl.eng.lanes();
+    let chunk = chunk.clamp(1, steps);
+    let grid = Grid {
+        batch,
+        kk: steps.div_ceil(chunk),
+        chunk,
+        steps,
+        path_major: batch < lanes,
+    };
+    (tbl, grid)
+}
+
+fn forward_impl<const L: usize>(
+    eng: &SigEngine,
+    tbl: &StreamTable,
+    paths: &[f64],
+    per_path: usize,
+    grid: Grid,
+    out: &mut [f64],
+) {
+    let sl = tbl.state_len();
+    let odim = tbl.out_dim();
+    let n_blocks = grid.units().div_ceil(L);
+    let nw = eng.threads.min(n_blocks.max(grid.batch)).max(1);
+    let mut bufs = eng.tree_pool.take_at_least(1);
+    let mut workers = eng.tree_ctx_pool.take_at_least(nw);
+    for w in workers.iter_mut().take(nw) {
+        w.ensure(tbl, grid.kk);
+    }
+    let buf = &mut bufs[0];
+    buf.chunk_sigs.resize(grid.units() * sl, 0.0);
+    parallel_for_into(&mut buf.chunk_sigs, L * sl, &mut workers[..nw], |blk, rows, ws| {
+        chunk_block_forward::<L>(tbl, paths, per_path, grid, blk * L, rows, ws);
+    });
+    let chunk_sigs: &[f64] = &buf.chunk_sigs;
+    parallel_for_into(out, odim, &mut workers[..nw], |b, row, ws| {
+        reduce_path::<L>(tbl, chunk_sigs, grid, b, ws);
+        tbl.project_into(&ws.seg[..sl], row);
+    });
+    eng.tree_ctx_pool.put(workers);
+    eng.tree_pool.put(bufs);
+}
+
+/// Time-parallel batched forward: split each path's `M` increments into
+/// `ceil(M/chunk)` chunks, sweep the chunks concurrently with the
+/// lane-major Chen kernel, and reduce each path's chunk signatures in a
+/// log-depth tree of factor-closure combines. Exact up to summation
+/// reassociation (~1e-12 relative vs [`crate::sig::signature_batch`];
+/// see the module docs). `signature_batch_into` routes here
+/// automatically when [`crate::sig::schedule::plan`] picks the
+/// time-parallel mode; call this directly to force a specific chunk.
+///
+/// # Examples
+///
+/// ```
+/// use pathsig::sig::{signature_batch_scalar, signature_batch_tree_into, SigEngine};
+/// use pathsig::words::{truncated_words, WordTable};
+///
+/// let eng = SigEngine::sequential(WordTable::build(2, &truncated_words(2, 3)));
+/// let path: Vec<f64> = (0..97 * 2).map(|i| (i as f64 * 0.37).sin()).collect();
+/// let mut out = vec![0.0; eng.out_dim()];
+/// signature_batch_tree_into(&eng, &path, 1, 16, &mut out);
+/// let want = signature_batch_scalar(&eng, &path, 1);
+/// for (a, b) in out.iter().zip(&want) {
+///     assert!((a - b).abs() < 1e-10 * (1.0 + b.abs()));
+/// }
+/// ```
+pub fn signature_batch_tree_into(
+    eng: &SigEngine,
+    paths: &[f64],
+    batch: usize,
+    chunk: usize,
+    out: &mut [f64],
+) {
+    assert!(batch > 0);
+    assert_eq!(paths.len() % batch, 0);
+    let per_path = paths.len() / batch;
+    let odim = eng.out_dim();
+    assert_eq!(out.len(), batch * odim, "output buffer has wrong size");
+    let d = eng.table.d;
+    assert!(per_path % d == 0 && per_path / d >= 2, "bad path shape");
+    let steps = per_path / d - 1;
+    let (tbl, grid) = tree_setup(eng, batch, steps, chunk);
+    lane_dispatch!(tbl.eng.lanes(), forward_impl(eng, &tbl, paths, per_path, grid, out));
+}
+
+// ------------------------------------------------------------------
+// Checkpointed backward
+// ------------------------------------------------------------------
+
+/// Replay + differentiate one lane block of chunks, each seeded with
+/// its boundary checkpoint `P_{k+1}` (chunk right-edge prefix state)
+/// and boundary cotangent `Λ_{k+1}`. Within the chunk this is exactly
+/// the §4 reverse sweep: group-inverse reconstruction, cotangent
+/// transpose and ΔX gradient — but the drift of the inverse
+/// reconstruction is bounded to one chunk, and every chunk runs
+/// independently. Increment gradients land in each path's point-`j`
+/// slot of `out` (converted to point gradients by the caller);
+/// disjoint across units because every step belongs to exactly one
+/// chunk.
+#[allow(clippy::too_many_arguments)]
+fn chunk_block_backward<const L: usize>(
+    tbl: &StreamTable,
+    paths: &[f64],
+    per_path: usize,
+    grid: Grid,
+    bound_states: &[f64],
+    bound_lambda: &[f64],
+    u0: usize,
+    out_ptr: SendPtr<f64>,
+    ws: &mut TreeScratch,
+) {
+    let ieng = &tbl.eng;
+    let d = ieng.table.d;
+    let sl = ieng.table.state_len;
+    let ml = ieng.table.max_level;
+    let nu = (grid.units() - u0).min(L);
+    let kk1 = grid.kk + 1;
+    let lane_state = &mut ws.lane_state[..sl * L];
+    let lane_lambda = &mut ws.lane_lambda[..sl * L];
+    let dx = &mut ws.dx[..d * L];
+    let neg_dx = &mut ws.neg_dx[..d * L];
+    let right_prod = &mut ws.right_prod[..(ml + 1) * L];
+    let gdx = &mut ws.gdx[..d * L];
+    // Seed: inert lanes keep the identity state, zero λ and zero dx —
+    // every contribution they touch is an exact zero.
+    lane_state.fill(0.0);
+    lane_state[..L].fill(1.0);
+    lane_lambda.fill(0.0);
+    dx.fill(0.0);
+    neg_dx.fill(0.0);
+    for l in 0..nu {
+        let (b, k) = grid.split(u0 + l);
+        let ps = &bound_states[(b * kk1 + k + 1) * sl..(b * kk1 + k + 2) * sl];
+        let lm = &bound_lambda[(b * kk1 + k + 1) * sl..(b * kk1 + k + 2) * sl];
+        for w in 0..sl {
+            lane_state[w * L + l] = ps[w];
+            lane_lambda[w * L + l] = lm[w];
+        }
+    }
+    // Reverse sweep over local steps. A short chunk's padded positions
+    // (s ≥ len) come FIRST in reverse order; their lanes still carry
+    // the initial zero increments, so state and λ pass through
+    // untouched until the real steps begin.
+    for s in (0..grid.chunk).rev() {
+        for l in 0..nu {
+            let (b, k) = grid.split(u0 + l);
+            if s < grid.chunk_len(k) {
+                let p = &paths[b * per_path..(b + 1) * per_path];
+                let j = k * grid.chunk + s + 1;
+                for i in 0..d {
+                    let v = p[j * d + i] - p[(j - 1) * d + i];
+                    dx[i * L + l] = v;
+                    neg_dx[i * L + l] = -v;
+                }
+            }
+        }
+        // Reconstruct S_{0,j-1} (Prop 4.6) for all lanes, then the
+        // fused cotangent/ΔX-gradient sweep.
+        chen_update_lanes::<L>(ieng, lane_state, neg_dx);
+        gdx.fill(0.0);
+        backward_step_lanes::<L>(ieng, lane_state, lane_lambda, dx, right_prod, gdx);
+        for l in 0..nu {
+            let (b, k) = grid.split(u0 + l);
+            if s < grid.chunk_len(k) {
+                let j = k * grid.chunk + s + 1;
+                // SAFETY: each (path, step) slot belongs to exactly one
+                // (path, chunk) unit, claimed by exactly one block; the
+                // output buffer outlives the scoped workers.
+                let row = unsafe {
+                    std::slice::from_raw_parts_mut(out_ptr.0.add(b * per_path + j * d), d)
+                };
+                for i in 0..d {
+                    row[i] = gdx[i * L + l];
+                }
+            }
+        }
+    }
+}
+
+/// Convert one path's increment gradients (stored in point slots
+/// `j = 1..=steps`) to point gradients in place:
+/// `∂L/∂X_0 = -g_1`, `∂L/∂X_j = g_j - g_{j+1}`, `∂L/∂X_M = g_M`.
+/// Ascending `j` reads slot `j+1` before it is rewritten.
+fn chain_rule_row(row: &mut [f64], d: usize, steps: usize) {
+    if steps == 0 {
+        return; // already zero
+    }
+    for i in 0..d {
+        row[i] = -row[d + i];
+    }
+    for j in 1..steps {
+        for i in 0..d {
+            row[j * d + i] -= row[(j + 1) * d + i];
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn backward_impl<const L: usize>(
+    eng: &SigEngine,
+    tbl: &StreamTable,
+    paths: &[f64],
+    grads_out: &[f64],
+    per_path: usize,
+    grid: Grid,
+    out: &mut [f64],
+    mut sig_out: Option<&mut [f64]>,
+) {
+    let sl = tbl.state_len();
+    let odim = tbl.out_dim();
+    let d = tbl.dim();
+    let kk1 = grid.kk + 1;
+    let n_blocks = grid.units().div_ceil(L);
+    let nw = eng.threads.min(n_blocks.max(grid.batch)).max(1);
+    let mut bufs = eng.tree_pool.take_at_least(1);
+    let mut workers = eng.tree_ctx_pool.take_at_least(nw);
+    for w in workers.iter_mut().take(nw) {
+        w.ensure(tbl, 0); // no forward reduction here — seg stays small
+    }
+    let TreeBuffers {
+        chunk_sigs,
+        bound_states,
+        bound_lambda,
+    } = &mut bufs[0];
+    chunk_sigs.resize(grid.units() * sl, 0.0);
+    bound_states.resize(grid.batch * kk1 * sl, 0.0);
+    bound_lambda.resize(grid.batch * kk1 * sl, 0.0);
+
+    // Phase 1: chunk-local signatures (parallel lane blocks).
+    parallel_for_into(chunk_sigs, L * sl, &mut workers[..nw], |blk, rows, ws| {
+        chunk_block_forward::<L>(tbl, paths, per_path, grid, blk * L, rows, ws);
+    });
+    let chunk_sigs: &[f64] = chunk_sigs;
+
+    // Phase 2a: boundary prefix scan P_{k+1} = P_k ⊗ E_k (per path).
+    parallel_fill_rows(bound_states, kk1 * sl, nw, |b, seg| {
+        seg[..sl].fill(0.0);
+        seg[0] = 1.0;
+        for k in 0..grid.kk {
+            let u = grid.unit(b, k);
+            let (lo, hi) = seg.split_at_mut((k + 1) * sl);
+            tbl.combine(&lo[k * sl..], &chunk_sigs[u * sl..(u + 1) * sl], &mut hi[..sl]);
+        }
+    });
+    let bound_states: &[f64] = bound_states;
+
+    // Phase 2b: boundary cotangent scan Λ_k = (· ⊗ E_k)ᵀ Λ_{k+1}.
+    parallel_fill_rows(bound_lambda, kk1 * sl, nw, |b, seg| {
+        seg[grid.kk * sl..].fill(0.0);
+        tbl.scatter_into(&grads_out[b * odim..(b + 1) * odim], &mut seg[grid.kk * sl..]);
+        for k in (0..grid.kk).rev() {
+            let u = grid.unit(b, k);
+            seg.copy_within((k + 1) * sl..(k + 2) * sl, k * sl);
+            tbl.combine_transpose_right(
+                &chunk_sigs[u * sl..(u + 1) * sl],
+                &mut seg[k * sl..(k + 1) * sl],
+            );
+        }
+    });
+    let bound_lambda: &[f64] = bound_lambda;
+
+    // Phase 3: chunk replays, parallel over lane blocks; increment
+    // gradients land in disjoint point slots of `out`.
+    out.fill(0.0);
+    let out_ptr = SendPtr(out.as_mut_ptr());
+    parallel_for_ctx(n_blocks, &mut workers[..nw], move |blk, ws| {
+        // Capture the SendPtr wrapper by value (edition-2021 disjoint
+        // capture would otherwise grab the raw field and lose Send).
+        let out_ptr = out_ptr;
+        chunk_block_backward::<L>(
+            tbl,
+            paths,
+            per_path,
+            grid,
+            bound_states,
+            bound_lambda,
+            blk * L,
+            out_ptr,
+            ws,
+        );
+    });
+
+    // Phase 4: increment → point gradients, in place per path.
+    parallel_fill_rows(out, per_path, nw, |_, row| chain_rule_row(row, d, grid.steps));
+
+    // Fused entry: the terminal boundary state IS the signature.
+    if let Some(sig) = sig_out.as_deref_mut() {
+        for b in 0..grid.batch {
+            tbl.project_into(
+                &bound_states[(b * kk1 + grid.kk) * sl..(b * kk1 + grid.kk + 1) * sl],
+                &mut sig[b * odim..(b + 1) * odim],
+            );
+        }
+    }
+    eng.tree_ctx_pool.put(workers);
+    eng.tree_pool.put(bufs);
+}
+
+fn backward_entry_checks(
+    eng: &SigEngine,
+    paths: &[f64],
+    grads_out: &[f64],
+    batch: usize,
+    out: &[f64],
+) -> (usize, usize) {
+    assert!(batch > 0);
+    assert_eq!(paths.len() % batch, 0);
+    let per_path = paths.len() / batch;
+    let odim = eng.out_dim();
+    assert_eq!(grads_out.len(), batch * odim);
+    assert_eq!(out.len(), paths.len(), "gradient buffer has wrong size");
+    let d = eng.table.d;
+    assert!(per_path % d == 0 && per_path / d >= 2, "bad path shape");
+    (per_path, per_path / d - 1)
+}
+
+/// Time-parallel batched backward: the checkpointed form of
+/// [`crate::sig::sig_backward_batch_into`] (see the module docs —
+/// boundary scans + independent chunk replays).
+/// `sig_backward_batch_into` routes here automatically when the
+/// scheduler picks time-parallel mode; call this directly to force a
+/// specific chunk.
+pub fn sig_backward_batch_tree_into(
+    eng: &SigEngine,
+    paths: &[f64],
+    grads_out: &[f64],
+    batch: usize,
+    chunk: usize,
+    out: &mut [f64],
+) {
+    let (per_path, steps) = backward_entry_checks(eng, paths, grads_out, batch, out);
+    let (tbl, grid) = tree_setup(eng, batch, steps, chunk);
+    lane_dispatch!(
+        tbl.eng.lanes(),
+        backward_impl(eng, &tbl, paths, grads_out, per_path, grid, out, None)
+    );
+}
+
+/// Fused time-parallel forward + backward: signatures come from the
+/// boundary prefix scan the backward pass needs anyway, so the full
+/// training-step primitive costs one chunk sweep + one replay.
+/// `signature_and_backward_batch_into` routes here automatically when
+/// the scheduler picks time-parallel mode.
+pub fn signature_and_backward_batch_tree_into(
+    eng: &SigEngine,
+    paths: &[f64],
+    grads_out: &[f64],
+    batch: usize,
+    chunk: usize,
+    sig_out: &mut [f64],
+    grad_out: &mut [f64],
+) {
+    let (per_path, steps) = backward_entry_checks(eng, paths, grads_out, batch, grad_out);
+    assert_eq!(sig_out.len(), batch * eng.out_dim(), "signature buffer has wrong size");
+    let (tbl, grid) = tree_setup(eng, batch, steps, chunk);
+    lane_dispatch!(
+        tbl.eng.lanes(),
+        backward_impl(eng, &tbl, paths, grads_out, per_path, grid, grad_out, Some(sig_out))
+    );
+}
+
+// ------------------------------------------------------------------
+// Windowed signatures over the shared chunk grid
+// ------------------------------------------------------------------
+
+/// One window's signature from the shared chunk grid: sweep the
+/// unaligned head (`l → c0·C`), fold the full grid chunks inside the
+/// window with the Chen combine, then extend through the unaligned
+/// tail (`c1·C → r`) one Chen update at a time. Windows too short to
+/// contain a full grid chunk fall back to a direct sweep.
+#[allow(clippy::too_many_arguments)]
+fn window_from_grid(
+    tbl: &StreamTable,
+    chunk_sigs: &[f64],
+    path: &[f64],
+    grid: Grid,
+    b: usize,
+    w: Window,
+    ws: &mut TreeScratch,
+    row: &mut [f64],
+) {
+    let ieng = &tbl.eng;
+    let sl = tbl.state_len();
+    let d = tbl.dim();
+    let c0 = w.l.div_ceil(grid.chunk);
+    let c1 = w.r / grid.chunk;
+    if c1 <= c0 {
+        // No full grid chunk inside the window: direct sweep.
+        forward_sweep_range(ieng, path, w.l, w.r, &mut ws.s1, &mut ws.sdx);
+    } else {
+        // Head (identity when the window start is grid-aligned).
+        forward_sweep_range(ieng, path, w.l, c0 * grid.chunk, &mut ws.s1, &mut ws.sdx);
+        for k in c0..c1 {
+            let u = grid.unit(b, k);
+            ws.s2.resize(sl, 0.0);
+            tbl.combine(&ws.s1[..sl], &chunk_sigs[u * sl..(u + 1) * sl], &mut ws.s2[..sl]);
+            std::mem::swap(&mut ws.s1, &mut ws.s2);
+        }
+        // Tail: right-multiplying by exp(dx) is one Chen update.
+        for j in (c1 * grid.chunk + 1)..=w.r {
+            for i in 0..d {
+                ws.sdx[i] = path[j * d + i] - path[(j - 1) * d + i];
+            }
+            chen_update(ieng, &mut ws.s1[..sl], &ws.sdx[..d]);
+        }
+    }
+    tbl.project_into(&ws.s1[..sl], row);
+}
+
+fn windows_impl<const L: usize>(
+    eng: &SigEngine,
+    tbl: &StreamTable,
+    paths: &[f64],
+    per_path: usize,
+    grid: Grid,
+    windows: &[Window],
+    out: &mut [f64],
+) {
+    let sl = tbl.state_len();
+    let odim = tbl.out_dim();
+    let kw = windows.len();
+    let n_blocks = grid.units().div_ceil(L);
+    let units = grid.batch * kw;
+    let nw = eng.threads.min(n_blocks.max(units)).max(1);
+    let mut bufs = eng.tree_pool.take_at_least(1);
+    let mut workers = eng.tree_ctx_pool.take_at_least(nw);
+    for w in workers.iter_mut().take(nw) {
+        w.ensure(tbl, 0); // window folds never touch seg
+    }
+    let buf = &mut bufs[0];
+    buf.chunk_sigs.resize(grid.units() * sl, 0.0);
+    parallel_for_into(&mut buf.chunk_sigs, L * sl, &mut workers[..nw], |blk, rows, ws| {
+        chunk_block_forward::<L>(tbl, paths, per_path, grid, blk * L, rows, ws);
+    });
+    let chunk_sigs: &[f64] = &buf.chunk_sigs;
+    // One unit per (path, window) pair; unit u writes row u of the
+    // (B, K, |I|) output. Grained claims keep the shared counter cold —
+    // window folds are much cheaper than chunk sweeps.
+    let out_ptr = SendPtr(out.as_mut_ptr());
+    parallel_for_ctx_grained(units, 4, &mut workers[..nw], move |u, ws| {
+        let out_ptr = out_ptr; // capture the wrapper, not its field
+        let (b, wi) = (u / kw, u % kw);
+        // SAFETY: each row index u is claimed exactly once; `out`
+        // outlives the scoped workers.
+        let row = unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(u * odim), odim) };
+        window_from_grid(
+            tbl,
+            chunk_sigs,
+            &paths[b * per_path..(b + 1) * per_path],
+            grid,
+            b,
+            windows[wi],
+            ws,
+            row,
+        );
+    });
+    eng.tree_ctx_pool.put(workers);
+    eng.tree_pool.put(bufs);
+}
+
+/// Time-parallel batched windowed signatures: the chunk grid is swept
+/// once per call and shared by every window, so `K` overlapping
+/// windows of length `w` cost `O(M + K·(C + w/C))` Chen-step
+/// equivalents instead of `O(K·w)`. Window edges that don't land on
+/// the grid are handled by per-window head/tail sweeps (the scheduler
+/// snaps the chunk to the windows' start grid when one exists — see
+/// [`crate::sig::schedule`]). `windowed_signatures_batch_into` routes
+/// here automatically for long paths with small batches.
+pub fn windowed_signatures_batch_tree_into(
+    eng: &SigEngine,
+    paths: &[f64],
+    batch: usize,
+    windows: &[Window],
+    chunk: usize,
+    out: &mut [f64],
+) {
+    assert!(batch > 0);
+    assert_eq!(paths.len() % batch, 0);
+    let per_path = paths.len() / batch;
+    let d = eng.table.d;
+    assert!(per_path % d == 0 && per_path / d >= 2, "bad path shape");
+    let m1 = per_path / d;
+    for w in windows {
+        assert!(w.r < m1, "window right edge {} out of range (M={})", w.r, m1 - 1);
+    }
+    let odim = eng.out_dim();
+    assert_eq!(out.len(), batch * windows.len() * odim, "output buffer has wrong size");
+    if windows.is_empty() {
+        return;
+    }
+    let (tbl, grid) = tree_setup(eng, batch, m1 - 1, chunk);
+    lane_dispatch!(
+        tbl.eng.lanes(),
+        windows_impl(eng, &tbl, paths, per_path, grid, windows, out)
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sig::{
+        sig_backward_batch_scalar, signature, signature_batch_scalar, window_signature,
+    };
+    use crate::util::proptest::assert_allclose;
+    use crate::util::rng::Rng;
+    use crate::words::{truncated_words, Word, WordTable};
+
+    fn trunc_engine(d: usize, n: usize) -> SigEngine {
+        SigEngine::sequential(WordTable::build(d, &truncated_words(d, n)))
+    }
+
+    #[test]
+    fn single_chunk_tree_is_bitwise_scalar() {
+        // chunk ≥ steps ⇒ one chunk per path: the chunk sweep IS the
+        // sequential lane sweep, and the reduction is a no-op.
+        let mut rng = Rng::new(500);
+        let eng = trunc_engine(2, 3);
+        let path = rng.brownian_path(9, 2, 0.7);
+        let mut out = vec![0.0; eng.out_dim()];
+        signature_batch_tree_into(&eng, &path, 1, 100, &mut out);
+        let want = signature(&eng, &path);
+        assert_eq!(out, want, "single-chunk tree must be bitwise-sequential");
+    }
+
+    #[test]
+    fn tree_forward_small_grid_matches_sequential() {
+        let mut rng = Rng::new(501);
+        let d = 3;
+        let eng = trunc_engine(d, 3);
+        let m = 23;
+        for b in [1usize, 2, 5] {
+            let mut paths = Vec::new();
+            for _ in 0..b {
+                paths.extend(rng.brownian_path(m, d, 0.5));
+            }
+            let want = signature_batch_scalar(&eng, &paths, b);
+            for chunk in [1usize, 3, 7, 23] {
+                let mut out = vec![0.0; b * eng.out_dim()];
+                signature_batch_tree_into(&eng, &paths, b, chunk, &mut out);
+                assert_allclose(&out, &want, 1e-12, 1e-12, &format!("B={b} C={chunk}"));
+            }
+        }
+    }
+
+    #[test]
+    fn tree_forward_projected_set_uses_factor_closure() {
+        // A sparse projected request whose prefix closure is NOT
+        // suffix-closed: the combine must run over the factor closure
+        // and still project back to the requested coordinates.
+        let mut rng = Rng::new(502);
+        let d = 3;
+        let request = vec![Word(vec![2, 0, 1]), Word(vec![1, 1]), Word(vec![0, 2, 2, 1])];
+        let eng = SigEngine::sequential(WordTable::build(d, &request));
+        let path = rng.brownian_path(17, d, 0.6);
+        let want = signature(&eng, &path);
+        let mut out = vec![0.0; eng.out_dim()];
+        signature_batch_tree_into(&eng, &path, 1, 4, &mut out);
+        assert_allclose(&out, &want, 1e-12, 1e-12, "projected tree");
+    }
+
+    #[test]
+    fn tree_backward_matches_scalar() {
+        let mut rng = Rng::new(503);
+        let d = 2;
+        let eng = trunc_engine(d, 3);
+        let m = 19;
+        for b in [1usize, 3] {
+            let mut paths = Vec::new();
+            let mut grads = Vec::new();
+            for _ in 0..b {
+                paths.extend(rng.brownian_path(m, d, 0.5));
+                grads.extend((0..eng.out_dim()).map(|_| rng.gaussian()));
+            }
+            let want = sig_backward_batch_scalar(&eng, &paths, &grads, b);
+            for chunk in [1usize, 4, 19] {
+                let mut out = vec![0.0; paths.len()];
+                sig_backward_batch_tree_into(&eng, &paths, &grads, b, chunk, &mut out);
+                assert_allclose(&out, &want, 1e-10, 1e-10, &format!("bwd B={b} C={chunk}"));
+            }
+        }
+    }
+
+    #[test]
+    fn fused_tree_matches_two_phase_tree() {
+        let mut rng = Rng::new(504);
+        let d = 2;
+        let eng = trunc_engine(d, 4);
+        let b = 2;
+        let m = 15;
+        let mut paths = Vec::new();
+        let mut grads = Vec::new();
+        for _ in 0..b {
+            paths.extend(rng.brownian_path(m, d, 0.6));
+            grads.extend((0..eng.out_dim()).map(|_| rng.gaussian()));
+        }
+        let mut sig = vec![0.0; b * eng.out_dim()];
+        let mut grad = vec![0.0; paths.len()];
+        signature_and_backward_batch_tree_into(&eng, &paths, &grads, b, 5, &mut sig, &mut grad);
+        let mut grad_want = vec![0.0; paths.len()];
+        sig_backward_batch_tree_into(&eng, &paths, &grads, b, 5, &mut grad_want);
+        assert_eq!(grad, grad_want, "fused grad must equal backward-only grad");
+        // The fused signature comes from the boundary prefix scan.
+        let want = signature_batch_scalar(&eng, &paths, b);
+        assert_allclose(&sig, &want, 1e-12, 1e-12, "fused sig");
+    }
+
+    #[test]
+    fn tree_windows_match_direct_windows() {
+        let mut rng = Rng::new(505);
+        let d = 2;
+        let eng = trunc_engine(d, 3);
+        let m = 40;
+        let path = rng.brownian_path(m, d, 0.5);
+        // Aligned, unaligned, short (direct-sweep fallback) and
+        // full-path windows.
+        let wins = vec![
+            Window::new(0, 40),
+            Window::new(8, 24),
+            Window::new(3, 29),
+            Window::new(17, 19),
+            Window::new(39, 40),
+        ];
+        let mut out = vec![0.0; wins.len() * eng.out_dim()];
+        windowed_signatures_batch_tree_into(&eng, &path, 1, &wins, 8, &mut out);
+        let odim = eng.out_dim();
+        for (k, w) in wins.iter().enumerate() {
+            let want = window_signature(&eng, &path, *w);
+            assert_allclose(
+                &out[k * odim..(k + 1) * odim],
+                &want,
+                1e-12,
+                1e-12,
+                &format!("window {k}"),
+            );
+        }
+    }
+
+    #[test]
+    fn grid_split_roundtrips_both_packings() {
+        for path_major in [true, false] {
+            let grid = Grid {
+                batch: 5,
+                kk: 7,
+                chunk: 4,
+                steps: 26,
+                path_major,
+            };
+            for b in 0..grid.batch {
+                for k in 0..grid.kk {
+                    assert_eq!(grid.split(grid.unit(b, k)), (b, k));
+                }
+            }
+            // Last chunk is short: 26 - 6·4 = 2.
+            assert_eq!(grid.chunk_len(6), 2);
+            assert_eq!(grid.chunk_len(0), 4);
+        }
+    }
+}

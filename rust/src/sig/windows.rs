@@ -17,6 +17,7 @@
 
 use super::forward::forward_sweep_range;
 use super::lanes::{lane_forward_dispatch, project_lane, ForwardWorkspace};
+use super::schedule::{self, TimeMode};
 use super::SigEngine;
 use crate::util::threadpool::{parallel_for_ctx, parallel_for_into, SendPtr};
 
@@ -71,27 +72,15 @@ pub fn windowed_signatures(eng: &SigEngine, path: &[f64], windows: &[Window]) ->
 }
 
 /// [`windowed_signatures`] writing into a caller-provided `(K, |I|)`
-/// buffer: rows are produced in place by pooled per-worker workspaces.
+/// buffer. Delegates to the batch entry point with `B = 1` — same
+/// arithmetic, and long paths pick up the time-parallel grid reuse.
 pub fn windowed_signatures_into(
     eng: &SigEngine,
     path: &[f64],
     windows: &[Window],
     out: &mut [f64],
 ) {
-    let d = eng.table.d;
-    let m1 = path.len() / d;
-    for w in windows {
-        assert!(w.r < m1, "window right edge {} out of range (M={})", w.r, m1 - 1);
-    }
-    let odim = eng.out_dim();
-    assert_eq!(out.len(), windows.len() * odim, "output buffer has wrong size");
-    let nw = eng.threads.min(windows.len()).max(1);
-    let mut workers = eng.fwd_pool.take_at_least(nw);
-    parallel_for_into(out, odim, &mut workers[..nw], |k, row, ws| {
-        window_forward_ws(eng, path, windows[k], ws);
-        eng.table.project(&ws.state, row);
-    });
-    eng.fwd_pool.put(workers);
+    windowed_signatures_batch_into(eng, path, 1, windows, out);
 }
 
 /// One window's projected signature (sequential inner kernel).
@@ -146,6 +135,24 @@ pub fn windowed_signatures_batch_into(
     assert_eq!(out.len(), batch * kk * odim, "output buffer has wrong size");
     if kk == 0 {
         return;
+    }
+    // Long paths with small batches: sweep the chunk grid once, share
+    // its partial products across every window (heads/tails off the
+    // grid are swept per window). Engaged only when (a) some window
+    // actually spans ≥ 2 grid chunks and (b) the total window work
+    // dominates the one full-path grid sweep the tree pays up front —
+    // a few short windows on a huge path stay on the classic per-window
+    // path, which never touches increments outside the windows. The
+    // chunk snaps to the windows' start grid when one exists (see
+    // `schedule::snap_chunk`).
+    if let TimeMode::TimeParallel { chunk } = schedule::plan(eng, batch, m1 - 1) {
+        let chunk = schedule::snap_chunk(chunk, windows);
+        let total_len: usize = windows.iter().map(|w| w.r - w.l).sum();
+        if total_len >= 2 * (m1 - 1) && windows.iter().any(|w| w.r - w.l >= 2 * chunk) {
+            return super::tree::windowed_signatures_batch_tree_into(
+                eng, paths, batch, windows, chunk, out,
+            );
+        }
     }
     let lanes = eng.lanes();
 

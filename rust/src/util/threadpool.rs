@@ -175,11 +175,27 @@ pub fn parallel_for_ctx<W: Send, F>(n: usize, ctxs: &mut [W], f: F)
 where
     F: Fn(usize, &mut W) + Send + Sync,
 {
-    assert!(!ctxs.is_empty(), "parallel_for_ctx needs at least one context");
+    // The grain-1 case of the grained claim loop below — one shared
+    // implementation, one place to fix.
+    parallel_for_ctx_grained(n, 1, ctxs, f);
+}
+
+/// [`parallel_for_ctx`] claiming `grain` consecutive unit indices per
+/// atomic fetch. For fine-grained unit loops (many cheap units — e.g.
+/// the time-parallel windowed path's per-window folds) the per-index
+/// contention on the shared counter becomes measurable; batched claims
+/// keep the counter cold while preserving work stealing across
+/// workers. Each worker still owns its `&mut W` context exclusively.
+pub fn parallel_for_ctx_grained<W: Send, F>(n: usize, grain: usize, ctxs: &mut [W], f: F)
+where
+    F: Fn(usize, &mut W) + Send + Sync,
+{
+    let grain = grain.max(1);
+    assert!(!ctxs.is_empty(), "parallel_for_ctx_grained needs at least one context");
     if n == 0 {
         return;
     }
-    if ctxs.len() == 1 || n == 1 {
+    if ctxs.len() == 1 || n <= grain {
         let ctx = &mut ctxs[0];
         for i in 0..n {
             f(i, ctx);
@@ -190,13 +206,15 @@ where
     std::thread::scope(|s| {
         let f = &f;
         let next = &next;
-        for ctx in ctxs.iter_mut().take(n) {
+        for ctx in ctxs.iter_mut().take(n.div_ceil(grain)) {
             s.spawn(move || loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
+                let start = next.fetch_add(grain, Ordering::Relaxed);
+                if start >= n {
                     break;
                 }
-                f(i, ctx);
+                for i in start..(start + grain).min(n) {
+                    f(i, ctx);
+                }
             });
         }
     });
@@ -420,6 +438,28 @@ mod tests {
         for r in 0..6 {
             assert!(out[r * 4..(r + 1) * 4].iter().all(|&x| x == r as f64));
         }
+    }
+
+    #[test]
+    fn parallel_for_ctx_grained_each_unit_once() {
+        // Unit count not divisible by the grain; every index claimed
+        // exactly once, by exactly one worker.
+        let mut hits = vec![0u8; 1003];
+        let slot = SendPtr(hits.as_mut_ptr());
+        let mut ctxs = vec![(); 5];
+        parallel_for_ctx_grained(1003, 16, &mut ctxs, move |i, _| {
+            let slot = slot;
+            // SAFETY: each index is claimed exactly once.
+            unsafe { *slot.0.add(i) += 1 };
+        });
+        assert!(hits.iter().all(|&h| h == 1));
+        // Single-context fallback runs inline.
+        let c = AtomicU64::new(0);
+        let mut one = [()];
+        parallel_for_ctx_grained(7, 3, &mut one, |_, _| {
+            c.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(c.load(Ordering::Relaxed), 7);
     }
 
     #[test]

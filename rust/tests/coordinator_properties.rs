@@ -87,6 +87,7 @@ fn batcher_preserves_request_response_pairing() {
         BatcherConfig {
             max_batch: 8,
             max_wait: Duration::from_millis(3),
+            ..BatcherConfig::default()
         },
     ));
     let mut joins = Vec::new();
@@ -130,6 +131,7 @@ fn batcher_mixed_configs_never_cross() {
             BatcherConfig {
                 max_batch: 4,
                 max_wait: Duration::from_millis(1),
+                ..BatcherConfig::default()
             },
         ));
         let mut joins = Vec::new();
@@ -169,6 +171,7 @@ fn start_server(service: Arc<SigService>) -> (pathsig::coordinator::server::Serv
             batcher: BatcherConfig {
                 max_batch: 8,
                 max_wait: Duration::from_millis(1),
+                ..BatcherConfig::default()
             },
         },
     )

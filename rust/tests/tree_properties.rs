@@ -1,0 +1,268 @@
+//! Conformance suite for the time-parallel tree engine (ISSUE 5):
+//! `tree ≡ sequential` to 1e-12 across word-set flavors × chunk sizes ×
+//! every `B mod L` residue × thread counts, an FD gradcheck of the
+//! checkpointed backward, and dispatch-level checks of the
+//! `PATHSIG_TIME_CHUNK` policy.
+//!
+//! The tree reassociates floating-point sums (chunk products are
+//! combined pairwise instead of one Chen update at a time), so bitwise
+//! equality with the sequential kernels is **out of scope by design** —
+//! the contract is 1e-12 relative agreement, which these tests pin
+//! down. Short paths (fewer than `MIN_TIME_STEPS` increments) never
+//! route to the tree, so the existing bitwise lane≡scalar suites keep
+//! holding under every knob setting.
+
+use pathsig::sig::{
+    sig_backward_batch, sig_backward_batch_scalar, sig_backward_batch_tree_into, signature,
+    signature_and_backward_batch, signature_batch, signature_batch_scalar,
+    signature_batch_tree_into, sliding_windows, window_signature,
+    windowed_signatures_batch, windowed_signatures_batch_tree_into, ChunkPolicy, SigEngine,
+    MIN_TIME_STEPS,
+};
+use pathsig::util::proptest::{assert_allclose, property, Gen};
+use pathsig::util::rng::Rng;
+use pathsig::words::{anisotropic_words, truncated_words, Word, WordTable};
+
+/// Random word set of one of the three paper flavors.
+fn random_word_set(g: &mut Gen, d: usize, depth: usize, flavor: usize) -> Vec<Word> {
+    match flavor {
+        0 => truncated_words(d, depth),
+        1 => (0..g.usize_in(1, 8))
+            .map(|_| {
+                let len = g.usize_in(1, depth);
+                Word((0..len).map(|_| g.usize_in(0, d - 1) as u16).collect())
+            })
+            .collect(),
+        _ => {
+            let gamma: Vec<f64> = (0..d).map(|_| g.f64_in(1.0, 2.0)).collect();
+            let ws = anisotropic_words(d, &gamma, depth as f64);
+            if ws.is_empty() {
+                truncated_words(d, 1)
+            } else {
+                ws
+            }
+        }
+    }
+}
+
+#[test]
+fn tree_forward_equals_sequential_full_matrix() {
+    // The satellite conformance matrix: flavor × C ∈ {1, 3, 16, M} ×
+    // every B mod L residue (B = 1..=L, both packings, padded lane
+    // tails) × threads ∈ {1, 4}.
+    property("tree ≡ sequential forward", 6, |g| {
+        let d = g.usize_in(2, 3);
+        let depth = g.usize_in(2, 3);
+        let flavor = g.usize_in(0, 2);
+        let words = random_word_set(g, d, depth, flavor);
+        let m = g.usize_in(17, 29);
+        for &threads in &[1usize, 4] {
+            let eng = SigEngine::with_threads(WordTable::build(d, &words), threads);
+            let lw = eng.lanes();
+            let odim = eng.out_dim();
+            let batches: Vec<usize> = (1..=lw).chain([lw + 3]).collect();
+            for &b in &batches {
+                let mut paths = Vec::new();
+                for _ in 0..b {
+                    paths.extend(g.path(m, d, 0.5));
+                }
+                let want = signature_batch_scalar(&eng, &paths, b);
+                for &chunk in &[1usize, 3, 16, m] {
+                    let mut out = vec![0.0; b * odim];
+                    signature_batch_tree_into(&eng, &paths, b, chunk, &mut out);
+                    assert_allclose(
+                        &out,
+                        &want,
+                        1e-12,
+                        1e-12,
+                        &format!(
+                            "tree fwd d={d} N={depth} flavor={flavor} B={b} L={lw} \
+                             M={m} C={chunk} T={threads}"
+                        ),
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn tree_backward_equals_sequential() {
+    property("tree ≡ sequential backward", 8, |g| {
+        let d = g.usize_in(2, 3);
+        let depth = g.usize_in(2, 3);
+        let flavor = g.usize_in(0, 2);
+        let words = random_word_set(g, d, depth, flavor);
+        let eng = SigEngine::with_threads(WordTable::build(d, &words), g.usize_in(1, 4));
+        let lw = eng.lanes();
+        let odim = eng.out_dim();
+        let m = g.usize_in(13, 25);
+        // Residues around the lane width: scalar-per-chunk regime
+        // (B < L, lanes over chunks) and block regime (B ≥ L, lanes
+        // over paths).
+        for &b in &[1usize, 2, lw - 1, lw, lw + 3] {
+            let mut paths = Vec::new();
+            let mut grads = Vec::new();
+            for _ in 0..b {
+                paths.extend(g.path(m, d, 0.5));
+                grads.extend(g.gaussian_vec(odim));
+            }
+            let want = sig_backward_batch_scalar(&eng, &paths, &grads, b);
+            for &chunk in &[1usize, 4, 16, m] {
+                let mut out = vec![0.0; paths.len()];
+                sig_backward_batch_tree_into(&eng, &paths, &grads, b, chunk, &mut out);
+                assert_allclose(
+                    &out,
+                    &want,
+                    1e-9,
+                    1e-9,
+                    &format!("tree bwd d={d} N={depth} flavor={flavor} B={b} M={m} C={chunk}"),
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn checkpointed_backward_gradcheck() {
+    // FD gradcheck of the checkpointed backward itself (not just
+    // agreement with the sequential kernel): L(X) = <g, sig(X)>.
+    let mut g = Gen { rng: Rng::new(0x7EE5), case: 0, cases: 1 };
+    for flavor in 0..3usize {
+        let d = 2 + flavor % 2;
+        let words = random_word_set(&mut g, d, 3, flavor);
+        let eng = SigEngine::with_threads(WordTable::build(d, &words), 2);
+        let odim = eng.out_dim();
+        let m = 12;
+        let path = g.path(m, d, 0.5);
+        let grad: Vec<f64> = g.gaussian_vec(odim);
+        let mut got = vec![0.0; path.len()];
+        sig_backward_batch_tree_into(&eng, &path, &grad, 1, 4, &mut got);
+        let eps = 1e-5;
+        let mut p = path.clone();
+        for k in 0..path.len() {
+            p[k] = path[k] + eps;
+            let up: f64 = signature(&eng, &p).iter().zip(&grad).map(|(a, b)| a * b).sum();
+            p[k] = path[k] - eps;
+            let dn: f64 = signature(&eng, &p).iter().zip(&grad).map(|(a, b)| a * b).sum();
+            p[k] = path[k];
+            let fd = (up - dn) / (2.0 * eps);
+            assert!(
+                (got[k] - fd).abs() < 1e-5 * (1.0 + fd.abs()),
+                "flavor {flavor} coord {k}: tree {} vs fd {fd}",
+                got[k]
+            );
+        }
+    }
+}
+
+#[test]
+fn tree_windows_equal_per_window_sequential() {
+    property("tree windows ≡ sequential windows", 8, |g| {
+        let d = g.usize_in(2, 3);
+        let depth = g.usize_in(2, 3);
+        let flavor = g.usize_in(0, 2);
+        let words = random_word_set(g, d, depth, flavor);
+        let eng = SigEngine::with_threads(WordTable::build(d, &words), g.usize_in(1, 4));
+        let odim = eng.out_dim();
+        let m = g.usize_in(30, 48);
+        let b = g.usize_in(1, 3);
+        let mut paths = Vec::new();
+        for _ in 0..b {
+            paths.extend(g.path(m, d, 0.5));
+        }
+        let per = (m + 1) * d;
+        // Sliding (grid-friendly), plus ragged edges and a tiny window.
+        let mut wins = sliding_windows(m + 1, m / 3, m / 4);
+        wins.push(pathsig::sig::Window::new(1, m - 1));
+        wins.push(pathsig::sig::Window::new(m - 2, m));
+        let chunk = g.usize_in(2, 9);
+        let mut out = vec![0.0; b * wins.len() * odim];
+        windowed_signatures_batch_tree_into(&eng, &paths, b, &wins, chunk, &mut out);
+        for bi in 0..b {
+            for (k, w) in wins.iter().enumerate() {
+                let want = window_signature(&eng, &paths[bi * per..(bi + 1) * per], *w);
+                assert_allclose(
+                    &out[(bi * wins.len() + k) * odim..(bi * wins.len() + k + 1) * odim],
+                    &want,
+                    1e-12,
+                    1e-12,
+                    &format!("win d={d} flavor={flavor} B={b} M={m} C={chunk} k={k}"),
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn dispatch_routes_long_paths_and_respects_off() {
+    // Above the MIN_TIME_STEPS gate, a forced chunk routes the public
+    // batch entry points through the tree (1e-12 agreement); Off pins
+    // the classic path (bitwise agreement with the scalar oracle).
+    let mut g = Gen { rng: Rng::new(0x7EE6), case: 0, cases: 1 };
+    let d = 2;
+    let m = MIN_TIME_STEPS + 33;
+    let path = g.path(m, d, 0.3);
+    let mut eng = SigEngine::with_threads(WordTable::build(d, &truncated_words(d, 3)), 2);
+    let want = signature_batch_scalar(&eng, &path, 1);
+
+    eng.time_chunk = ChunkPolicy::Fixed(16);
+    let got_tree = signature_batch(&eng, &path, 1);
+    assert_allclose(&got_tree, &want, 1e-12, 1e-12, "forced-chunk dispatch");
+
+    eng.time_chunk = ChunkPolicy::Off;
+    let got_off = signature_batch(&eng, &path, 1);
+    assert_eq!(got_off, want, "Off must keep the bitwise sequential path");
+
+    // Backward + fused dispatch under the forced chunk.
+    let grads: Vec<f64> = g.gaussian_vec(eng.out_dim());
+    eng.time_chunk = ChunkPolicy::Off;
+    let grad_want = sig_backward_batch(&eng, &path, &grads, 1);
+    eng.time_chunk = ChunkPolicy::Fixed(16);
+    let grad_tree = sig_backward_batch(&eng, &path, &grads, 1);
+    assert_allclose(&grad_tree, &grad_want, 1e-9, 1e-9, "backward dispatch");
+    let (sig_f, grad_f) = signature_and_backward_batch(&eng, &path, &grads, 1);
+    assert_allclose(&sig_f, &want, 1e-12, 1e-12, "fused dispatch sig");
+    assert_eq!(grad_f, grad_tree, "fused grad must equal backward-only tree grad");
+}
+
+#[test]
+fn short_paths_keep_bitwise_path_under_any_knob() {
+    // Below MIN_TIME_STEPS the tree never engages, even with a forced
+    // chunk — short-path results stay bitwise-identical.
+    let mut g = Gen { rng: Rng::new(0x7EE7), case: 0, cases: 1 };
+    let d = 2;
+    let m = MIN_TIME_STEPS - 2;
+    let path = g.path(m, d, 0.4);
+    let mut eng = SigEngine::with_threads(WordTable::build(d, &truncated_words(d, 3)), 2);
+    let want = signature_batch(&eng, &path, 1);
+    eng.time_chunk = ChunkPolicy::Fixed(4);
+    let got = signature_batch(&eng, &path, 1);
+    assert_eq!(got, want, "short path rerouted despite the gate");
+}
+
+#[test]
+fn windowed_dispatch_long_path_matches_sequential() {
+    // The public windowed batch entry with a forced chunk on a long
+    // path: grid reuse must agree with per-window recomputation.
+    let mut g = Gen { rng: Rng::new(0x7EE8), case: 0, cases: 1 };
+    let d = 2;
+    let m = MIN_TIME_STEPS + 64;
+    let path = g.path(m, d, 0.3);
+    let mut eng = SigEngine::with_threads(WordTable::build(d, &truncated_words(d, 3)), 4);
+    eng.time_chunk = ChunkPolicy::Fixed(8);
+    let wins = sliding_windows(m + 1, 48, 16);
+    assert!(!wins.is_empty());
+    let odim = eng.out_dim();
+    let got = windowed_signatures_batch(&eng, &path, 1, &wins);
+    for (k, w) in wins.iter().enumerate() {
+        let want = window_signature(&eng, &path, *w);
+        assert_allclose(
+            &got[k * odim..(k + 1) * odim],
+            &want,
+            1e-12,
+            1e-12,
+            &format!("windowed dispatch k={k}"),
+        );
+    }
+}

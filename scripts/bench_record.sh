@@ -1,0 +1,30 @@
+#!/usr/bin/env bash
+# Record a perf-trajectory snapshot: run the JSON bench suite and stage
+# the repo-root BENCH_*.json artifacts so the next commit carries them.
+#
+# Usage:
+#   scripts/bench_record.sh          # full measurement (bench-json)
+#   scripts/bench_record.sh --smoke  # CI-sized smoke run (bench-smoke)
+#
+# The driver commits the staged artifacts with each perf PR, so the
+# repo's history doubles as the perf trajectory — `git log -p -- \
+# 'BENCH_*.json'` shows every speedup headline over time.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+target=bench-json
+if [[ "${1:-}" == "--smoke" ]]; then
+    target=bench-smoke
+fi
+
+make "$target"
+
+artifacts=(BENCH_*.json)
+if [[ ! -e "${artifacts[0]}" ]]; then
+    echo "error: no BENCH_*.json artifacts were produced" >&2
+    exit 1
+fi
+
+git add -- "${artifacts[@]}"
+echo "staged perf artifacts: ${artifacts[*]}"
+git status --short -- 'BENCH_*.json'
