@@ -2,7 +2,7 @@
 # `artifacts` requires a Python environment with jax installed (see
 # DESIGN.md — the AOT artifacts are optional, the crate runs without them).
 
-.PHONY: build test doc bench bench-json bench-smoke bench-record artifacts clean
+.PHONY: build test doc bench bench-json bench-smoke bench-record bench-compare artifacts clean
 
 build:
 	cargo build --release
@@ -18,17 +18,19 @@ bench:
 
 # Emit the repo-root perf-trajectory artifacts (BENCH_fig1.json,
 # BENCH_table1.json, BENCH_table2.json, BENCH_stream.json,
-# BENCH_tree.json): mean/median/min per case, peak bytes, the
-# lane-major-vs-scalar forward AND backward speedups, the
+# BENCH_tree.json, BENCH_coord.json): mean/median/min per case, peak
+# bytes, the lane-major-vs-scalar forward AND backward speedups, the
 # streaming-vs-recompute sliding-window rows, the long-path
-# tree-vs-sequential rows, and the zero-alloc steady-state counts
-# (batch forward, train step, stream push, tree fwd+bwd).
+# tree-vs-sequential rows, the zero-alloc steady-state counts (batch
+# forward, train step, stream push, tree fwd+bwd), and the sharded
+# coordinator's p50/p99 latency under thousands of live sessions.
 bench-json:
 	cargo bench --bench fig1_truncated -- --json
 	cargo bench --bench table1_training -- --json
 	cargo bench --bench table2_memory -- --json
 	cargo bench --bench fig3_windows -- --json
 	cargo bench --bench fig4_longpath -- --json
+	cargo bench --bench fig5_coordinator -- --json
 
 # CI-sized variant of bench-json: tiny cases, 1 warmup / 2 runs —
 # exercises the artifact pipeline, not a measurement.
@@ -38,6 +40,7 @@ bench-smoke:
 	cargo bench --bench table2_memory -- --json --smoke
 	cargo bench --bench fig3_windows -- --json --smoke
 	cargo bench --bench fig4_longpath -- --json --smoke
+	cargo bench --bench fig5_coordinator -- --json --smoke
 
 # Run the JSON bench suite and stage the BENCH_*.json artifacts for
 # commit — the perf trajectory is tracked in-repo, one snapshot per
@@ -45,6 +48,13 @@ bench-smoke:
 # run when a full measurement is not wanted.
 bench-record:
 	./scripts/bench_record.sh $(if $(SMOKE),--smoke,)
+
+# Perf-regression gate: compare the working-tree BENCH_*.json artifacts
+# against the last recorded snapshot (REF=..., default HEAD) and fail
+# on a >15% regression in any headline metric. SMOKE=1 relaxes to
+# shape checks (CI); RUN=1 runs the bench suite first.
+bench-compare:
+	./scripts/bench_compare.sh $(if $(SMOKE),--smoke,) $(if $(RUN),--run,) $(if $(REF),--ref $(REF),)
 
 # Emit the AOT/PJRT artifacts (HLO text + manifest.json) into ./artifacts.
 artifacts:

@@ -32,7 +32,9 @@ fn main() {
         ),
         None => println!("no artifacts — native engine only"),
     }
-    let service = Arc::new(SigService::new(runtime));
+    let mut service = SigService::new(runtime);
+    service.shard_count = 4; // sharded session table (0 = auto)
+    let service = Arc::new(service);
     let handle = serve(
         Arc::clone(&service),
         ServerConfig {
@@ -40,6 +42,7 @@ fn main() {
             batcher: BatcherConfig {
                 max_batch: 32,
                 max_wait: std::time::Duration::from_millis(2),
+                ..BatcherConfig::default()
             },
         },
     )
@@ -124,6 +127,23 @@ fn main() {
         "dynamic batching ineffective (mean batch {mean_batch})"
     );
     println!("\ndynamic batching active (mean batch size {mean_batch:.2}) ✓");
+
+    // --- wire protocol v2: per-shard stats over binary frames ----------------
+    use pathsig::coordinator::wire::{OkBody, RequestFrame, ResponseFrame, WireClient};
+    let mut v2 = WireClient::connect(&addr).unwrap();
+    if let ResponseFrame::Ok {
+        body: OkBody::Stats(rows),
+        ..
+    } = v2.call(&RequestFrame::Stats).unwrap()
+    {
+        println!("\nper-shard coordinator stats (v2 `stats` verb):");
+        for r in rows {
+            println!(
+                "  shard {}: sessions {}  mailbox {}  sheds {}  pushes {}",
+                r.shard, r.sessions, r.mailbox_depth, r.sheds, r.pushes
+            );
+        }
+    }
 
     // keep the metrics JSON for EXPERIMENTS.md
     let _ = std::fs::write(

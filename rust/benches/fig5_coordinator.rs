@@ -1,0 +1,234 @@
+//! Coordinator scaling bench (ISSUE 6): thousands of concurrent
+//! streaming sessions against a live TCP server, on the v2 binary
+//! protocol, across shard counts. Emits the repo-root
+//! `BENCH_coord.json` perf-trajectory artifact in `--json` mode;
+//! `--smoke` shrinks to CI size (1k sessions).
+//!
+//! Per shard count the harness opens every session up front (they stay
+//! live for the whole run — this is a *concurrency* bench, not a
+//! throughput sprint), then drives push+window rounds over all of them
+//! from a fixed worker pool, recording per-op round-trip latency. The
+//! headline row reports p50/p99 latency, aggregate ops/s,
+//! sessions-per-core, and — from the `stats` verb — shard-reported
+//! sheds. `lost_sessions` counts sessions that failed verification or
+//! close; CI requires it (and sheds) to be zero.
+//!
+//! Knobs: `PATHSIG_COORD_SESSIONS=n`, `PATHSIG_COORD_SHARDS=1,4,8`.
+
+mod common;
+use common::{dump, json_mode, smoke};
+use pathsig::coordinator::wire::{OkBody, RequestFrame, ResponseFrame, SpecFrame, WireClient};
+use pathsig::coordinator::{serve, BatcherConfig, ServerConfig, SigService};
+use pathsig::util::json::Json;
+use pathsig::util::stats::percentile_sorted;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// One worker's share of the run: its open session ids and the
+/// latencies (µs) it observed.
+struct WorkerLog {
+    sessions: Vec<u64>,
+    latency_us: Vec<f64>,
+    lost: u64,
+}
+
+fn env_usize(key: &str) -> Option<usize> {
+    std::env::var(key).ok()?.parse().ok()
+}
+
+fn env_shards(default: &[usize]) -> Vec<usize> {
+    match std::env::var("PATHSIG_COORD_SHARDS") {
+        Ok(s) => s
+            .split(',')
+            .filter_map(|t| t.trim().parse().ok())
+            .collect(),
+        Err(_) => default.to_vec(),
+    }
+}
+
+fn open_sessions(client: &mut WireClient, count: usize, log: &mut WorkerLog) {
+    for _ in 0..count {
+        let t0 = Instant::now();
+        let resp = client
+            .call(&RequestFrame::StreamOpen {
+                dim: 1,
+                depth: 2,
+                window: 8,
+                spec: SpecFrame::Truncated,
+            })
+            .expect("open round trip");
+        log.latency_us.push(t0.elapsed().as_secs_f64() * 1e6);
+        match resp {
+            ResponseFrame::Ok {
+                body: OkBody::Opened { session, .. },
+                ..
+            } => log.sessions.push(session),
+            other => panic!("open failed: {other:?}"),
+        }
+    }
+}
+
+/// One push+window round over every session this worker owns.
+fn drive_round(client: &mut WireClient, log: &mut WorkerLog, round: usize) {
+    let sessions = log.sessions.clone();
+    for (k, sid) in sessions.into_iter().enumerate() {
+        let sample = (round * 31 + k) as f64 / 16.0;
+        let t0 = Instant::now();
+        let pushed = client
+            .call(&RequestFrame::StreamPush {
+                session: sid,
+                samples: vec![sample],
+            })
+            .expect("push round trip");
+        log.latency_us.push(t0.elapsed().as_secs_f64() * 1e6);
+        if !matches!(
+            pushed,
+            ResponseFrame::Ok {
+                body: OkBody::Pushed { .. },
+                ..
+            }
+        ) {
+            log.lost += 1;
+            continue;
+        }
+        let t1 = Instant::now();
+        let win = client
+            .call(&RequestFrame::StreamWindow {
+                session: sid,
+                full: false,
+            })
+            .expect("window round trip");
+        log.latency_us.push(t1.elapsed().as_secs_f64() * 1e6);
+        match win {
+            ResponseFrame::Ok {
+                body: OkBody::Values { values, .. },
+                ..
+            } if !values.is_empty() && values.iter().all(|v| v.is_finite()) => {}
+            _ => log.lost += 1,
+        }
+    }
+}
+
+fn close_sessions(client: &mut WireClient, log: &mut WorkerLog) {
+    let sessions = log.sessions.clone();
+    for sid in sessions {
+        match client.call(&RequestFrame::StreamClose { session: sid }) {
+            Ok(ResponseFrame::Ok { .. }) => {}
+            _ => log.lost += 1,
+        }
+    }
+}
+
+/// Run the full scenario against one server configuration; returns the
+/// artifact row.
+fn run_case(shards: usize, sessions: usize, rounds: usize, workers: usize) -> Json {
+    let mut service = SigService::new(None);
+    service.shard_count = shards;
+    service.max_sessions = sessions + 64;
+    let handle = serve(
+        Arc::new(service),
+        ServerConfig {
+            addr: "127.0.0.1:0".to_string(),
+            batcher: BatcherConfig {
+                max_batch: 32,
+                max_wait: Duration::from_millis(1),
+                ..BatcherConfig::default()
+            },
+        },
+    )
+    .expect("bind bench server");
+    let addr = handle.addr.to_string();
+
+    let t_wall = Instant::now();
+    let logs: Vec<WorkerLog> = std::thread::scope(|scope| {
+        let mut join = Vec::new();
+        for w in 0..workers {
+            let addr = addr.clone();
+            // Spread the remainder so every session is owned exactly once.
+            let share = sessions / workers + usize::from(w < sessions % workers);
+            join.push(scope.spawn(move || {
+                let mut client = WireClient::connect(&addr).expect("worker connect");
+                let mut log = WorkerLog {
+                    sessions: Vec::with_capacity(share),
+                    latency_us: Vec::new(),
+                    lost: 0,
+                };
+                open_sessions(&mut client, share, &mut log);
+                for round in 0..rounds {
+                    drive_round(&mut client, &mut log, round);
+                }
+                close_sessions(&mut client, &mut log);
+                log
+            }));
+        }
+        join.into_iter().map(|h| h.join().expect("worker")).collect()
+    });
+    let wall_s = t_wall.elapsed().as_secs_f64();
+
+    // Shard-reported totals after the storm.
+    let mut probe = WireClient::connect(&addr).expect("stats connect");
+    let (sheds, live_after) = match probe.call(&RequestFrame::Stats).expect("stats") {
+        ResponseFrame::Ok {
+            body: OkBody::Stats(rows),
+            ..
+        } => (
+            rows.iter().map(|r| r.sheds).sum::<u64>(),
+            rows.iter().map(|r| r.sessions).sum::<u64>(),
+        ),
+        other => panic!("stats failed: {other:?}"),
+    };
+    handle.shutdown();
+
+    let mut lat: Vec<f64> = logs.iter().flat_map(|l| l.latency_us.iter().copied()).collect();
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let opened: usize = logs.iter().map(|l| l.sessions.len()).sum();
+    // Sessions still live after every close, plus per-op failures.
+    let lost: u64 = logs.iter().map(|l| l.lost).sum::<u64>() + live_after;
+    let ops = lat.len() as f64;
+    let cores = std::thread::available_parallelism().map_or(1, |n| n.get());
+    let p50 = percentile_sorted(&lat, 0.5);
+    let p99 = percentile_sorted(&lat, 0.99);
+    println!(
+        "# shards {shards:>2}  sessions {opened:>6}  p50 {p50:>8.1}µs  p99 {p99:>8.1}µs  \
+         {:>9.0} ops/s  sheds {sheds}  lost {lost}",
+        ops / wall_s
+    );
+    assert_eq!(opened, sessions, "every session must open");
+    Json::obj(vec![
+        ("shards", Json::Num(shards as f64)),
+        ("sessions", Json::Num(sessions as f64)),
+        ("rounds", Json::Num(rounds as f64)),
+        ("workers", Json::Num(workers as f64)),
+        ("p50_us", Json::Num(p50)),
+        ("p99_us", Json::Num(p99)),
+        ("ops_per_sec", Json::Num(ops / wall_s)),
+        ("sessions_per_core", Json::Num(sessions as f64 / cores as f64)),
+        ("sheds", Json::Num(sheds as f64)),
+        ("lost_sessions", Json::Num(lost as f64)),
+    ])
+}
+
+fn main() {
+    let smoke = smoke();
+    let sessions = env_usize("PATHSIG_COORD_SESSIONS").unwrap_or(if smoke { 1000 } else { 16384 });
+    let shard_grid = env_shards(if smoke { &[1, 4][..] } else { &[1, 4, 8][..] });
+    let rounds = if smoke { 2 } else { 4 };
+    let workers = 16.min(sessions.max(1));
+    println!(
+        "# fig5: {sessions} concurrent streaming sessions, {rounds} push+window rounds, \
+         {workers} workers, shards {shard_grid:?}"
+    );
+    let rows: Vec<Json> = shard_grid
+        .iter()
+        .map(|&s| run_case(s, sessions, rounds, workers))
+        .collect();
+    let j = Json::obj(vec![
+        ("bench", Json::str("fig5_coordinator")),
+        ("smoke", Json::Bool(smoke)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    dump("fig5_coordinator", j.clone());
+    if json_mode() {
+        common::dump_root("BENCH_coord.json", j);
+    }
+}

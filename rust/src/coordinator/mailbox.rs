@@ -1,0 +1,226 @@
+//! Bounded actor mailboxes for the sharded coordinator.
+//!
+//! A [`Mailbox`] is a fixed-capacity MPSC queue: any number of producer
+//! handles (the connection threads) feed one logical consumer (the
+//! shard worker). Sends never block — a full mailbox is reported back
+//! to the producer as [`SendError::Full`] so the server can load-shed
+//! with a `retry-after` error frame instead of stalling the acceptor.
+//! Closing the mailbox flips it into **drain mode**: queued messages
+//! are still delivered (so every in-flight request gets its reply), new
+//! sends are rejected, and once the queue is empty the consumer sees
+//! [`Recv::Closed`] and exits.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// Why a send was rejected (the message is handed back untouched).
+#[derive(Debug)]
+pub enum SendError<T> {
+    /// The mailbox is at capacity — the shard is overloaded; callers
+    /// should answer with a load-shed / retry-after error.
+    Full(T),
+    /// The mailbox was closed (coordinator shutting down).
+    Closed(T),
+}
+
+/// Outcome of a [`Mailbox::recv_timeout`] call.
+#[derive(Debug)]
+pub enum Recv<T> {
+    /// A message was dequeued.
+    Msg(T),
+    /// The timeout elapsed with the queue empty (idle tick — shard
+    /// workers use this to run their TTL sweep).
+    Timeout,
+    /// The mailbox is closed and fully drained; the worker should exit.
+    Closed,
+}
+
+struct Inner<T> {
+    queue: Mutex<Queue<T>>,
+    recv_cv: Condvar,
+    capacity: usize,
+}
+
+struct Queue<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// A bounded MPSC mailbox handle. Cloning yields another producer
+/// handle over the same queue; by convention exactly one thread (the
+/// shard worker) calls [`Mailbox::recv_timeout`].
+pub struct Mailbox<T> {
+    inner: Arc<Inner<T>>,
+}
+
+impl<T> Clone for Mailbox<T> {
+    fn clone(&self) -> Self {
+        Mailbox {
+            inner: Arc::clone(&self.inner),
+        }
+    }
+}
+
+impl<T> std::fmt::Debug for Mailbox<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Mailbox({}/{})", self.len(), self.inner.capacity)
+    }
+}
+
+impl<T> Mailbox<T> {
+    /// Create a mailbox holding at most `capacity` queued messages
+    /// (`capacity` ≥ 1; 0 is clamped to 1 — a zero-capacity mailbox
+    /// could never deliver anything).
+    pub fn new(capacity: usize) -> Mailbox<T> {
+        Mailbox {
+            inner: Arc::new(Inner {
+                queue: Mutex::new(Queue {
+                    items: VecDeque::with_capacity(capacity.max(1)),
+                    closed: false,
+                }),
+                recv_cv: Condvar::new(),
+                capacity: capacity.max(1),
+            }),
+        }
+    }
+
+    /// Enqueue without blocking. `Err(Full)` when at capacity (the
+    /// caller load-sheds), `Err(Closed)` after [`Mailbox::close`].
+    pub fn try_send(&self, msg: T) -> Result<(), SendError<T>> {
+        let mut q = self.inner.queue.lock().unwrap();
+        if q.closed {
+            return Err(SendError::Closed(msg));
+        }
+        if q.items.len() >= self.inner.capacity {
+            return Err(SendError::Full(msg));
+        }
+        q.items.push_back(msg);
+        drop(q);
+        self.inner.recv_cv.notify_one();
+        Ok(())
+    }
+
+    /// Dequeue one message, waiting up to `timeout` for one to arrive.
+    /// A closed mailbox keeps delivering its backlog (drain mode) and
+    /// reports [`Recv::Closed`] only once empty.
+    pub fn recv_timeout(&self, timeout: Duration) -> Recv<T> {
+        let mut q = self.inner.queue.lock().unwrap();
+        loop {
+            if let Some(msg) = q.items.pop_front() {
+                return Recv::Msg(msg);
+            }
+            if q.closed {
+                return Recv::Closed;
+            }
+            let (guard, res) = self.inner.recv_cv.wait_timeout(q, timeout).unwrap();
+            q = guard;
+            if res.timed_out() && q.items.is_empty() && !q.closed {
+                return Recv::Timeout;
+            }
+        }
+    }
+
+    /// Close the mailbox: new sends are rejected, queued messages still
+    /// drain, and the consumer is woken.
+    pub fn close(&self) {
+        self.inner.queue.lock().unwrap().closed = true;
+        self.inner.recv_cv.notify_all();
+    }
+
+    /// Whether [`Mailbox::close`] has been called.
+    pub fn is_closed(&self) -> bool {
+        self.inner.queue.lock().unwrap().closed
+    }
+
+    /// Messages currently queued (the per-shard `mailbox_depth` stat).
+    pub fn len(&self) -> usize {
+        self.inner.queue.lock().unwrap().items.len()
+    }
+
+    /// Whether the queue is currently empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The fixed capacity this mailbox admits.
+    pub fn capacity(&self) -> usize {
+        self.inner.capacity
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn send_recv_fifo() {
+        let mb: Mailbox<u32> = Mailbox::new(4);
+        for k in 0..4 {
+            mb.try_send(k).unwrap();
+        }
+        for k in 0..4 {
+            match mb.recv_timeout(Duration::from_millis(10)) {
+                Recv::Msg(v) => assert_eq!(v, k),
+                other => panic!("expected Msg({k}), got {other:?}"),
+            }
+        }
+        assert!(matches!(
+            mb.recv_timeout(Duration::from_millis(1)),
+            Recv::Timeout
+        ));
+    }
+
+    #[test]
+    fn full_mailbox_sheds_instead_of_blocking() {
+        let mb: Mailbox<u32> = Mailbox::new(2);
+        mb.try_send(1).unwrap();
+        mb.try_send(2).unwrap();
+        let t0 = std::time::Instant::now();
+        match mb.try_send(3) {
+            Err(SendError::Full(v)) => assert_eq!(v, 3),
+            other => panic!("expected Full, got {other:?}"),
+        }
+        // The rejection must be immediate — that is the whole point.
+        assert!(t0.elapsed() < Duration::from_millis(50));
+        assert_eq!(mb.len(), 2);
+    }
+
+    #[test]
+    fn close_drains_backlog_then_reports_closed() {
+        let mb: Mailbox<u32> = Mailbox::new(4);
+        mb.try_send(7).unwrap();
+        mb.try_send(8).unwrap();
+        mb.close();
+        match mb.try_send(9) {
+            Err(SendError::Closed(v)) => assert_eq!(v, 9),
+            other => panic!("expected Closed, got {other:?}"),
+        }
+        assert!(matches!(mb.recv_timeout(Duration::from_millis(5)), Recv::Msg(7)));
+        assert!(matches!(mb.recv_timeout(Duration::from_millis(5)), Recv::Msg(8)));
+        assert!(matches!(mb.recv_timeout(Duration::from_millis(5)), Recv::Closed));
+    }
+
+    #[test]
+    fn recv_wakes_on_cross_thread_send() {
+        let mb: Mailbox<u32> = Mailbox::new(1);
+        let tx = mb.clone();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            tx.try_send(42).unwrap();
+        });
+        match mb.recv_timeout(Duration::from_secs(2)) {
+            Recv::Msg(v) => assert_eq!(v, 42),
+            other => panic!("expected Msg, got {other:?}"),
+        }
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn zero_capacity_clamps_to_one() {
+        let mb: Mailbox<u32> = Mailbox::new(0);
+        assert_eq!(mb.capacity(), 1);
+        mb.try_send(1).unwrap();
+        assert!(matches!(mb.try_send(2), Err(SendError::Full(2))));
+    }
+}

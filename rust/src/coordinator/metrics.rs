@@ -27,6 +27,9 @@ pub struct Metrics {
     pub sessions_evicted: AtomicU64,
     /// Samples pushed across all streaming sessions.
     pub stream_pushes: AtomicU64,
+    /// Stream requests load-shed because a shard mailbox was full
+    /// (the client got a `retry_after_ms` hint instead of blocking).
+    pub requests_shed: AtomicU64,
     /// Signature requests that bypassed the batch queue because their
     /// path exceeded the batcher's long-path threshold (they saturate
     /// the engine alone via the time-parallel scheduler).
@@ -108,6 +111,10 @@ impl Metrics {
             (
                 "stream_pushes",
                 Json::Num(self.stream_pushes.load(Relaxed) as f64),
+            ),
+            (
+                "requests_shed",
+                Json::Num(self.requests_shed.load(Relaxed) as f64),
             ),
             (
                 "long_path_bypass",

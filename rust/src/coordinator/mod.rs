@@ -2,34 +2,48 @@
 //!
 //! The paper ships pathsig as a PyTorch library; its §6 benchmarks imply
 //! the deployment shape this module provides: a **signature feature
-//! server** that accepts path-valued requests over TCP (JSON-lines),
-//! routes them to a compiled PJRT artifact (when one matches the request
-//! shape) or the native Rust engine (any shape), and **dynamically
-//! batches** concurrent requests for the same configuration — the
-//! batch axis being exactly the parallelism the paper's CUDA kernels
-//! exploit (§3.2, §5).
+//! server** that accepts path-valued requests over TCP, routes them to
+//! a compiled PJRT artifact (when one matches the request shape) or the
+//! native Rust engine (any shape), and **dynamically batches**
+//! concurrent requests for the same configuration — the batch axis
+//! being exactly the parallelism the paper's CUDA kernels exploit
+//! (§3.2, §5).
 //!
 //! Stateless compute ops are dynamically batched; **stateful streaming
 //! sessions** (`stream_open` / `stream_push` / `stream_window` /
-//! `stream_close`) hold a per-session [`crate::sig::StreamEngine`] in
-//! the service's session table, giving amortized-O(1) sliding-window
-//! serving with idle-TTL eviction and pooled per-session workspaces.
+//! `stream_close`) live in a sharded actor core: N shard workers each
+//! exclusively own a slice of the session table (hash of the session
+//! id picks the shard), so session state needs no locks at all —
+//! commands arrive through bounded per-shard [`mailbox`]es that shed
+//! load with a retry hint instead of blocking the acceptor, and TTL
+//! sweeping happens on each worker's own idle ticks.
 //!
-//! * [`protocol`] — wire types (requests, responses, projections).
-//! * [`service`]  — engine cache + request execution (native / PJRT)
-//!   + the streaming session table.
+//! Two wire protocols share one port, disambiguated per message by the
+//! first byte: v1 JSON-lines (a line starts with `{`) and v2
+//! length-prefixed binary frames (first byte `0x02`, see [`wire`]).
+//!
+//! * [`protocol`] — v1 wire types (requests, responses, projections).
+//! * [`wire`]     — v2 binary frames + the `stats` verb + [`wire::WireClient`].
+//! * [`service`]  — engine cache + request execution (native / PJRT).
+//! * [`shard`]    — shard workers owning the streaming session table.
+//! * [`mailbox`]  — bounded MPSC channel backing each shard.
 //! * [`batcher`]  — dynamic batching with size/latency policy.
-//! * [`server`]   — TCP JSON-lines front end.
+//! * [`server`]   — TCP front end speaking both protocols.
 //! * [`metrics`]  — counters and latency histograms.
 
 pub mod batcher;
+pub mod mailbox;
 pub mod metrics;
 pub mod protocol;
 pub mod server;
 pub mod service;
+pub mod shard;
+pub mod wire;
 
 pub use batcher::{Batcher, BatcherConfig};
 pub use metrics::Metrics;
 pub use protocol::{parse_request, Request, RequestOp, Response};
 pub use server::{serve, ServerConfig};
 pub use service::{ConfigKey, SigService, StreamReply};
+pub use shard::{ShardConfig, ShardSet, ShardStat, StreamError};
+pub use wire::WireClient;

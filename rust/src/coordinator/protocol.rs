@@ -58,6 +58,10 @@ pub enum RequestOp {
     Metrics,
     /// Health check (control op, handled by the server).
     Ping,
+    /// Per-shard coordinator stats — sessions, mailbox depth, sheds,
+    /// pushes (control op, handled by the server; protocol v2's
+    /// flagship verb, also reachable from v1 as `{"op":"stats"}`).
+    Stats,
     /// Open a stateful streaming session (`window` = sliding-window
     /// length in increments).
     StreamOpen,
@@ -135,6 +139,7 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
         "windowed" => RequestOp::Windowed,
         "metrics" => RequestOp::Metrics,
         "ping" => RequestOp::Ping,
+        "stats" => RequestOp::Stats,
         "stream_open" => RequestOp::StreamOpen,
         "stream_push" => RequestOp::StreamPush,
         "stream_window" => RequestOp::StreamWindow,
@@ -155,7 +160,7 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
         window_len: 0,
         full: false,
     };
-    if matches!(op, RequestOp::Metrics | RequestOp::Ping) {
+    if matches!(op, RequestOp::Metrics | RequestOp::Ping | RequestOp::Stats) {
         return Ok(blank(id, op));
     }
     if op.is_stream() && op != RequestOp::StreamOpen {
@@ -373,6 +378,17 @@ pub enum Response {
         /// Error description.
         error: String,
     },
+    /// Load-shed: the target shard's mailbox was full, so the request
+    /// was dropped before doing any work. Clients should retry after
+    /// the indicated backoff.
+    Shed {
+        /// Echoed request id.
+        id: String,
+        /// Human-readable shed description.
+        error: String,
+        /// Suggested client backoff in milliseconds.
+        retry_after_ms: u64,
+    },
 }
 
 impl Response {
@@ -404,6 +420,17 @@ impl Response {
                 ("id", Json::str(id)),
                 ("ok", Json::Bool(false)),
                 ("error", Json::str(error)),
+            ])
+            .to_string(),
+            Response::Shed {
+                id,
+                error,
+                retry_after_ms,
+            } => Json::obj(vec![
+                ("id", Json::str(id)),
+                ("ok", Json::Bool(false)),
+                ("error", Json::str(error)),
+                ("retry_after_ms", Json::Num(*retry_after_ms as f64)),
             ])
             .to_string(),
         }
@@ -535,6 +562,22 @@ mod tests {
             parse_request(r#"{"op":"stream_window","session":"s1","mode":"sideways"}"#).is_err()
         );
         assert!(parse_request(r#"{"op":"stream_close"}"#).is_err());
+    }
+
+    #[test]
+    fn parse_stats_and_shed_roundtrip() {
+        let r = parse_request(r#"{"op":"stats","id":"m1"}"#).unwrap();
+        assert_eq!(r.op, RequestOp::Stats);
+        assert!(!r.op.is_stream());
+        let shed = Response::Shed {
+            id: "r9".into(),
+            error: "overloaded; retry after 25 ms".into(),
+            retry_after_ms: 25,
+        };
+        let j = Json::parse(&shed.to_line()).unwrap();
+        assert_eq!(j.get("ok").as_bool(), Some(false));
+        assert_eq!(j.get("retry_after_ms").as_usize(), Some(25));
+        assert!(j.get("error").as_str().unwrap().contains("retry"));
     }
 
     #[test]

@@ -1,16 +1,26 @@
-//! TCP JSON-lines front end.
+//! TCP front end speaking both wire protocols.
 //!
-//! One connection = one client; each line is an independent request and
-//! receives exactly one response line (requests on a connection are
-//! handled sequentially per connection, batched *across* connections by
-//! the [`super::Batcher`]). `{"op": "ping"}` health-checks;
-//! `{"op": "metrics"}` returns the metrics snapshot.
+//! One connection = one client; requests on a connection are handled
+//! sequentially (batched *across* connections by the
+//! [`super::Batcher`]). The protocol is disambiguated **per message**
+//! on the first byte: `0x02` starts a v2 binary frame
+//! ([`super::wire`]); anything else (a JSON line starts with `{` =
+//! `0x7B`) is a v1 JSON-lines request ([`super::protocol`]) — so
+//! deployed v1 clients keep working unchanged against a v2 server.
+//!
+//! Session TTL enforcement needs no server-side sweeper thread: each
+//! shard worker sweeps its own slice on idle ticks (see
+//! [`super::shard`]). When a stream op hits a full shard mailbox the
+//! server answers a load-shed response (v1: `retry_after_ms` field;
+//! v2: a `shed` frame) instead of blocking the connection thread.
 
 use super::batcher::{Batcher, BatcherConfig};
 use super::protocol::{parse_request, RequestOp, Response};
 use super::service::{SigService, StreamReply};
+use super::shard::StreamError;
+use super::wire;
 use crate::util::json::Json;
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -34,18 +44,16 @@ impl Default for ServerConfig {
     }
 }
 
-/// A running server handle (owned listener + sweeper threads and the
-/// shutdown flag).
+/// A running server handle (owned listener thread and shutdown flag).
 pub struct ServerHandle {
     /// The address the listener actually bound (resolves `:0`).
     pub addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
-    sweep_thread: Option<std::thread::JoinHandle<()>>,
 }
 
 impl ServerHandle {
-    /// Request shutdown and join the accept loop and session sweeper.
+    /// Request shutdown and join the accept loop.
     pub fn shutdown(mut self) {
         self.stop_and_join();
     }
@@ -55,9 +63,6 @@ impl ServerHandle {
         // Poke the accept loop with a dummy connection.
         let _ = TcpStream::connect(self.addr);
         if let Some(h) = self.accept_thread.take() {
-            let _ = h.join();
-        }
-        if let Some(h) = self.sweep_thread.take() {
             let _ = h.join();
         }
     }
@@ -75,20 +80,6 @@ pub fn serve(service: Arc<SigService>, config: ServerConfig) -> std::io::Result<
     let addr = listener.local_addr()?;
     let stop = Arc::new(AtomicBool::new(false));
     let batcher = Arc::new(Batcher::new(Arc::clone(&service), config.batcher));
-    // Background session sweeper: streaming sessions must be reclaimed
-    // by the idle TTL even when no stream traffic arrives to trigger
-    // the in-band sweep (the sweep itself is throttled service-side,
-    // so the short poll period costs nothing between real sweeps).
-    let sweep_thread = {
-        let stop = Arc::clone(&stop);
-        let svc = Arc::clone(&service);
-        std::thread::spawn(move || {
-            while !stop.load(Ordering::SeqCst) {
-                std::thread::sleep(std::time::Duration::from_millis(100));
-                svc.evict_idle();
-            }
-        })
-    };
     let accept_thread = {
         let stop = Arc::clone(&stop);
         std::thread::spawn(move || {
@@ -111,36 +102,209 @@ pub fn serve(service: Arc<SigService>, config: ServerConfig) -> std::io::Result<
         addr,
         stop,
         accept_thread: Some(accept_thread),
-        sweep_thread: Some(sweep_thread),
     })
 }
 
+/// What a v2 frame handler decided about the connection.
+enum V2Outcome {
+    /// Send these bytes and keep reading.
+    Reply(Vec<u8>),
+    /// Send these bytes, then close — the byte stream can no longer be
+    /// trusted to be frame-aligned (e.g. an oversized length prefix).
+    ReplyAndClose(Vec<u8>),
+}
+
 fn handle_connection(stream: TcpStream, service: Arc<SigService>, batcher: Arc<Batcher>) {
-    let peer = stream.peer_addr().ok();
-    let reader = BufReader::new(match stream.try_clone() {
+    let mut reader = BufReader::new(match stream.try_clone() {
         Ok(s) => s,
         Err(_) => return,
     });
     let mut writer = stream;
-    for line in reader.lines() {
-        let line = match line {
-            Ok(l) => l,
+    loop {
+        // Peek the first byte of the next message to pick the protocol.
+        let first = match reader.fill_buf() {
+            Ok([]) => break, // clean EOF
+            Ok(buf) => buf[0],
             Err(_) => break,
         };
-        if line.trim().is_empty() {
-            continue;
-        }
-        let t0 = Instant::now();
-        let resp = handle_line(&line, &service, &batcher);
-        let ok = !matches!(resp, Response::Err { .. });
-        service.metrics.record_request(t0.elapsed(), ok);
-        let mut out = resp.to_line();
-        out.push('\n');
-        if writer.write_all(out.as_bytes()).is_err() {
-            break;
+        if first == wire::WIRE_V2 {
+            let t0 = Instant::now();
+            let (outcome, ok) = handle_v2_frame(&mut reader, &service, &batcher);
+            service.metrics.record_request(t0.elapsed(), ok);
+            match outcome {
+                Some(V2Outcome::Reply(bytes)) => {
+                    if writer.write_all(&bytes).is_err() {
+                        break;
+                    }
+                }
+                Some(V2Outcome::ReplyAndClose(bytes)) => {
+                    let _ = writer.write_all(&bytes);
+                    break;
+                }
+                None => break, // read error mid-frame
+            }
+        } else {
+            let mut line = String::new();
+            match reader.read_line(&mut line) {
+                Ok(0) | Err(_) => break,
+                Ok(_) => {}
+            }
+            if line.trim().is_empty() {
+                continue;
+            }
+            let t0 = Instant::now();
+            let resp = handle_line(&line, &service, &batcher);
+            let ok = !matches!(resp, Response::Err { .. } | Response::Shed { .. });
+            service.metrics.record_request(t0.elapsed(), ok);
+            let mut out = resp.to_line();
+            out.push('\n');
+            if writer.write_all(out.as_bytes()).is_err() {
+                break;
+            }
         }
     }
-    let _ = peer;
+}
+
+/// Read and execute one v2 frame. Returns the outcome plus whether the
+/// request succeeded (for the request metrics); `None` means the
+/// socket died mid-frame.
+fn handle_v2_frame(
+    reader: &mut BufReader<TcpStream>,
+    service: &Arc<SigService>,
+    batcher: &Arc<Batcher>,
+) -> (Option<V2Outcome>, bool) {
+    use wire::{errcode, OkBody, RequestFrame, ResponseFrame};
+    let mut header = [0u8; 6];
+    if reader.read_exact(&mut header).is_err() {
+        return (None, false);
+    }
+    let verb = header[1];
+    let len = u32::from_le_bytes(header[2..6].try_into().unwrap()) as usize;
+    if len > wire::MAX_FRAME_LEN {
+        // The declared payload is absurd; draining it would let one
+        // client pin a connection thread, and skipping it desyncs the
+        // stream. Answer and hang up.
+        let resp = ResponseFrame::Err {
+            verb,
+            code: errcode::BAD_FRAME,
+            message: format!("frame length {len} exceeds cap {}", wire::MAX_FRAME_LEN),
+        };
+        return (Some(V2Outcome::ReplyAndClose(resp.encode())), false);
+    }
+    let mut payload = vec![0u8; len];
+    if reader.read_exact(&mut payload).is_err() {
+        return (None, false);
+    }
+    // From here the stream is frame-aligned again regardless of what
+    // the payload contains, so errors keep the connection open.
+    let frame = match RequestFrame::decode(verb, &payload) {
+        Ok(f) => f,
+        Err(e) => {
+            let code = if e.starts_with("unknown verb") {
+                errcode::UNSUPPORTED
+            } else {
+                errcode::BAD_FRAME
+            };
+            let resp = ResponseFrame::Err {
+                verb,
+                code,
+                message: e,
+            };
+            return (Some(V2Outcome::Reply(resp.encode())), false);
+        }
+    };
+    let req = match frame.into_request() {
+        Ok(r) => r,
+        Err(e) => {
+            let resp = ResponseFrame::Err {
+                verb,
+                code: errcode::BAD_REQUEST,
+                message: e,
+            };
+            return (Some(V2Outcome::Reply(resp.encode())), false);
+        }
+    };
+    let resp = match req.op {
+        RequestOp::Ping => ResponseFrame::Ok {
+            verb,
+            body: OkBody::Empty,
+        },
+        RequestOp::Stats => ResponseFrame::Ok {
+            verb,
+            body: OkBody::Stats(service.shard_set().stats()),
+        },
+        RequestOp::Metrics => ResponseFrame::Err {
+            verb,
+            code: errcode::UNSUPPORTED,
+            message: "metrics is a v1-only verb; use stats".into(),
+        },
+        op if op.is_stream() => match service.execute_stream(&req) {
+            Ok(StreamReply::Opened { session, out_dim }) => {
+                // The handle is always canonical "s<id>".
+                let id = session
+                    .strip_prefix('s')
+                    .and_then(|n| n.parse::<u64>().ok())
+                    .unwrap_or(0);
+                ResponseFrame::Ok {
+                    verb,
+                    body: OkBody::Opened {
+                        session: id,
+                        out_dim: out_dim as u32,
+                    },
+                }
+            }
+            Ok(StreamReply::Pushed { pushed, seen }) => ResponseFrame::Ok {
+                verb,
+                body: OkBody::Pushed {
+                    pushed: pushed as u64,
+                    seen: seen as u64,
+                },
+            },
+            Ok(StreamReply::Values { result, shape }) => ResponseFrame::Ok {
+                verb,
+                body: OkBody::Values {
+                    shape: shape.iter().map(|&s| s as u32).collect(),
+                    values: result,
+                },
+            },
+            Ok(StreamReply::Closed) => ResponseFrame::Ok {
+                verb,
+                body: OkBody::Empty,
+            },
+            Err(StreamError::Shed { retry_after_ms }) => {
+                service
+                    .metrics
+                    .requests_shed
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                ResponseFrame::Shed {
+                    verb,
+                    retry_after_ms: retry_after_ms as u32,
+                    message: format!("overloaded; retry after {retry_after_ms} ms"),
+                }
+            }
+            Err(StreamError::Msg(m)) => ResponseFrame::Err {
+                verb,
+                code: wire::code_for(&m),
+                message: m,
+            },
+        },
+        _ => match batcher.submit(req) {
+            Ok((result, shape, _backend)) => ResponseFrame::Ok {
+                verb,
+                body: OkBody::Values {
+                    shape: shape.iter().map(|&s| s as u32).collect(),
+                    values: result,
+                },
+            },
+            Err(e) => ResponseFrame::Err {
+                verb,
+                code: errcode::BAD_REQUEST,
+                message: e,
+            },
+        },
+    };
+    let ok = matches!(resp, ResponseFrame::Ok { .. });
+    (Some(V2Outcome::Reply(resp.encode())), ok)
 }
 
 fn handle_line(line: &str, service: &Arc<SigService>, batcher: &Arc<Batcher>) -> Response {
@@ -166,9 +330,13 @@ fn handle_line(line: &str, service: &Arc<SigService>, batcher: &Arc<Batcher>) ->
             id,
             body: service.metrics.snapshot(),
         },
-        // Stateful session ops: routed straight to the session table
-        // (never batched — ordering within a session matters, and a
-        // connection's requests are handled sequentially).
+        RequestOp::Stats => Response::Json {
+            id,
+            body: service.stats_json(),
+        },
+        // Stateful session ops: routed straight to the sharded session
+        // table (never batched — ordering within a session matters, and
+        // a connection's requests are handled sequentially).
         op if op.is_stream() => {
             let t0 = Instant::now();
             match service.execute_stream(&req) {
@@ -197,7 +365,18 @@ fn handle_line(line: &str, service: &Arc<SigService>, batcher: &Arc<Batcher>) ->
                     id,
                     body: Json::obj(vec![("closed", Json::Bool(true))]),
                 },
-                Err(error) => Response::Err { id, error },
+                Err(StreamError::Shed { retry_after_ms }) => {
+                    service
+                        .metrics
+                        .requests_shed
+                        .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    Response::Shed {
+                        id,
+                        error: format!("overloaded; retry after {retry_after_ms} ms"),
+                        retry_after_ms,
+                    }
+                }
+                Err(StreamError::Msg(error)) => Response::Err { id, error },
             }
         }
         _ => {
@@ -216,7 +395,8 @@ fn handle_line(line: &str, service: &Arc<SigService>, batcher: &Arc<Batcher>) ->
     }
 }
 
-/// Minimal blocking client (used by tests, examples and the CLI).
+/// Minimal blocking v1 (JSON-lines) client — used by tests, examples
+/// and the CLI. The binary v2 client is [`super::wire::WireClient`].
 pub struct Client {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
@@ -248,6 +428,9 @@ impl Client {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::wire::{
+        verb, OkBody, RequestFrame, ResponseFrame, SpecFrame, WireClient,
+    };
 
     fn start_test_server() -> (ServerHandle, String) {
         let service = Arc::new(SigService::new(None));
@@ -355,8 +538,8 @@ mod tests {
 
     #[test]
     fn idle_sessions_reclaimed_without_stream_traffic() {
-        // The background sweeper must enforce the TTL even when no
-        // further stream verbs arrive to trigger the in-band sweep.
+        // Shard workers must enforce the TTL on their own idle ticks,
+        // with no further stream verbs (and no server sweeper thread).
         let mut service = SigService::new(None);
         service.session_ttl = std::time::Duration::from_millis(200);
         let service = Arc::new(service);
@@ -378,9 +561,9 @@ mod tests {
             .unwrap();
         assert_eq!(opened.get("ok").as_bool(), Some(true));
         assert_eq!(service.session_count(), 1);
-        // Silence: only the sweeper thread can reclaim the session.
+        // Silence: only the shard workers can reclaim the session.
         std::thread::sleep(std::time::Duration::from_millis(800));
-        assert_eq!(service.session_count(), 0, "sweeper did not reclaim idle session");
+        assert_eq!(service.session_count(), 0, "workers did not reclaim idle session");
         assert_eq!(
             service.metrics.sessions_evicted.load(std::sync::atomic::Ordering::Relaxed),
             1
@@ -408,6 +591,206 @@ mod tests {
         for j in joins {
             j.join().unwrap();
         }
+        handle.shutdown();
+    }
+
+    #[test]
+    fn v2_session_lifecycle_over_tcp() {
+        let (handle, addr) = start_test_server();
+        let mut c = WireClient::connect(&addr).unwrap();
+        // ping
+        match c.call(&RequestFrame::Ping).unwrap() {
+            ResponseFrame::Ok {
+                verb: v,
+                body: OkBody::Empty,
+            } => assert_eq!(v, verb::PING),
+            other => panic!("{other:?}"),
+        }
+        // open
+        let session = match c
+            .call(&RequestFrame::StreamOpen {
+                dim: 1,
+                depth: 2,
+                window: 2,
+                spec: SpecFrame::Truncated,
+            })
+            .unwrap()
+        {
+            ResponseFrame::Ok {
+                body: OkBody::Opened { session, out_dim },
+                ..
+            } => {
+                assert_eq!(out_dim, 2);
+                session
+            }
+            other => panic!("{other:?}"),
+        };
+        // push
+        match c
+            .call(&RequestFrame::StreamPush {
+                session,
+                samples: vec![0.0, 1.0, 3.0, 6.0],
+            })
+            .unwrap()
+        {
+            ResponseFrame::Ok {
+                body: OkBody::Pushed { pushed, seen },
+                ..
+            } => assert_eq!((pushed, seen), (4, 4)),
+            other => panic!("{other:?}"),
+        }
+        // window
+        match c
+            .call(&RequestFrame::StreamWindow {
+                session,
+                full: false,
+            })
+            .unwrap()
+        {
+            ResponseFrame::Ok {
+                body: OkBody::Values { shape, values },
+                ..
+            } => {
+                assert_eq!(shape, vec![2]);
+                assert!((values[0] - 5.0).abs() < 1e-9);
+            }
+            other => panic!("{other:?}"),
+        }
+        // stats: one row per shard, at least one session live somewhere
+        match c.call(&RequestFrame::Stats).unwrap() {
+            ResponseFrame::Ok {
+                body: OkBody::Stats(rows),
+                ..
+            } => {
+                assert!(!rows.is_empty());
+                assert_eq!(rows.iter().map(|r| r.sessions).sum::<u64>(), 1);
+            }
+            other => panic!("{other:?}"),
+        }
+        // close, then the session is unknown (code 3)
+        match c.call(&RequestFrame::StreamClose { session }).unwrap() {
+            ResponseFrame::Ok {
+                body: OkBody::Empty,
+                ..
+            } => {}
+            other => panic!("{other:?}"),
+        }
+        match c.call(&RequestFrame::StreamClose { session }).unwrap() {
+            ResponseFrame::Err { code, message, .. } => {
+                assert_eq!(code, wire::errcode::UNKNOWN_SESSION);
+                assert!(message.contains("unknown session"));
+            }
+            other => panic!("{other:?}"),
+        }
+        handle.shutdown();
+    }
+
+    #[test]
+    fn v2_signature_matches_v1() {
+        let (handle, addr) = start_test_server();
+        let mut v1 = Client::connect(&addr).unwrap();
+        let mut v2 = WireClient::connect(&addr).unwrap();
+        let from_v1 = v1
+            .call(r#"{"op":"signature","dim":2,"depth":2,"path":[0,0,1,0,1,1]}"#)
+            .unwrap()
+            .f64_vec("result");
+        let from_v2 = match v2
+            .call(&RequestFrame::Signature {
+                dim: 2,
+                depth: 2,
+                spec: SpecFrame::Truncated,
+                path: vec![0.0, 0.0, 1.0, 0.0, 1.0, 1.0],
+            })
+            .unwrap()
+        {
+            ResponseFrame::Ok {
+                body: OkBody::Values { values, .. },
+                ..
+            } => values,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(from_v1, from_v2);
+        handle.shutdown();
+    }
+
+    #[test]
+    fn v1_and_v2_interleave_on_one_connection() {
+        let (handle, addr) = start_test_server();
+        // Drive the raw socket by hand: a v1 line, then a v2 frame,
+        // then a v1 line again.
+        let stream = TcpStream::connect(&addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut writer = stream;
+
+        writer.write_all(b"{\"op\":\"ping\"}\n").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("\"ok\":true"), "{line}");
+
+        writer.write_all(&RequestFrame::Ping.encode()).unwrap();
+        match crate::coordinator::wire::read_response(&mut reader).unwrap() {
+            ResponseFrame::Ok {
+                body: OkBody::Empty,
+                ..
+            } => {}
+            other => panic!("{other:?}"),
+        }
+
+        writer.write_all(b"{\"op\":\"ping\"}\n").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("\"ok\":true"), "{line}");
+        handle.shutdown();
+    }
+
+    #[test]
+    fn v2_bad_frames_answered_without_killing_server() {
+        let (handle, addr) = start_test_server();
+        // Unknown verb: connection survives.
+        {
+            let mut c = WireClient::connect(&addr).unwrap();
+            let mut raw = TcpStream::connect(&addr).unwrap();
+            raw.write_all(&wire::frame(0x7F, &[])).unwrap();
+            let mut reader = BufReader::new(raw.try_clone().unwrap());
+            match crate::coordinator::wire::read_response(&mut reader).unwrap() {
+                ResponseFrame::Err { code, .. } => {
+                    assert_eq!(code, wire::errcode::UNSUPPORTED)
+                }
+                other => panic!("{other:?}"),
+            }
+            // Same raw connection still serves a good frame.
+            raw.write_all(&RequestFrame::Ping.encode()).unwrap();
+            assert!(matches!(
+                crate::coordinator::wire::read_response(&mut reader).unwrap(),
+                ResponseFrame::Ok { .. }
+            ));
+            // And an independent client is unaffected.
+            assert!(matches!(
+                c.call(&RequestFrame::Ping).unwrap(),
+                ResponseFrame::Ok { .. }
+            ));
+        }
+        // Oversized length prefix: error frame, then the server closes.
+        {
+            let mut raw = TcpStream::connect(&addr).unwrap();
+            let mut hdr = vec![wire::WIRE_V2, verb::PING];
+            hdr.extend_from_slice(&(u32::MAX).to_le_bytes());
+            raw.write_all(&hdr).unwrap();
+            let mut reader = BufReader::new(raw.try_clone().unwrap());
+            match crate::coordinator::wire::read_response(&mut reader).unwrap() {
+                ResponseFrame::Err { code, .. } => assert_eq!(code, wire::errcode::BAD_FRAME),
+                other => panic!("{other:?}"),
+            }
+            let mut rest = Vec::new();
+            let n = reader.read_to_end(&mut rest).unwrap_or(0);
+            assert_eq!(n, 0, "server should close after an oversized prefix");
+        }
+        // The server is still healthy.
+        let mut c = WireClient::connect(&addr).unwrap();
+        assert!(matches!(
+            c.call(&RequestFrame::Ping).unwrap(),
+            ResponseFrame::Ok { .. }
+        ));
         handle.shutdown();
     }
 }

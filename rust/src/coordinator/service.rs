@@ -8,20 +8,28 @@
 //!   artifacts have static shapes, so anything else falls back;
 //! * otherwise the native word-basis engine handles it (any shape, any
 //!   projection).
+//!
+//! Streaming sessions live in an actor-sharded table (see
+//! [`super::shard`]): the service performs parsing, admission-relevant
+//! budget checks and engine construction, then routes the session op to
+//! the shard worker that owns it. The shard set is spun up lazily on
+//! first use, capturing the `pub` tuning fields (`session_ttl`,
+//! `max_sessions`, `shard_count`, …) at that point.
 
 use super::protocol::{Backend, Request, RequestOp};
+use super::shard::{ShardConfig, ShardSet, ShardStat, StreamError};
 use crate::logsig::LogSigEngine;
 use crate::sig::{
     signature_batch_into, windowed_signatures, SigEngine, StreamEngine, StreamScratch,
     StreamTable, Window,
 };
 use crate::runtime::Runtime;
+use crate::util::json::Json;
 use crate::util::pool::Pool;
 use crate::words::{WordSpec, WordTable};
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
-use std::sync::{Arc, Mutex, RwLock};
-use std::time::{Duration, Instant};
+use std::sync::{Arc, Mutex, OnceLock, RwLock};
+use std::time::Duration;
 
 /// Reusable flatten/output buffers for the stacked-batch execution
 /// path: the service keeps them pooled so steady-state batch requests
@@ -65,6 +73,7 @@ impl ConfigKey {
                 RequestOp::Windowed => "windowed",
                 RequestOp::Metrics => "metrics",
                 RequestOp::Ping => "ping",
+                RequestOp::Stats => "stats",
                 RequestOp::StreamOpen
                 | RequestOp::StreamPush
                 | RequestOp::StreamWindow
@@ -89,15 +98,6 @@ fn spec_identity(spec: &WordSpec) -> String {
         }
         WordSpec::Custom { words } => format!("custom:{words:?}"),
     }
-}
-
-/// One live streaming session: a stateful [`StreamEngine`] behind its
-/// own lock (so concurrent sessions never serialize on the table
-/// lock), plus the idle-eviction timestamp (milliseconds since the
-/// service epoch, atomically bumped outside the engine lock).
-struct StreamSession {
-    stream: Mutex<StreamEngine>,
-    last_used_ms: AtomicU64,
 }
 
 /// What a stream op produced (the server maps this onto the wire
@@ -137,24 +137,21 @@ pub struct SigService {
     /// Factor-closed streaming tables, cached per `(dim, spec)` like
     /// [`SigService::engine`].
     stream_tables: RwLock<HashMap<String, Arc<StreamTable>>>,
-    /// Live streaming sessions keyed by numeric id. The table lock is
-    /// held only for O(1) lookups/inserts; each session carries its own
-    /// engine lock, so concurrent sessions compute in parallel.
-    sessions: Mutex<HashMap<u64, Arc<StreamSession>>>,
-    next_session: AtomicU64,
-    /// Epoch for the sessions' millisecond idle timestamps.
-    epoch: Instant,
+    /// The actor-sharded session table, spun up lazily on first stream
+    /// use so the `pub` tuning fields below can be set after `new()`.
+    shards: OnceLock<Arc<ShardSet>>,
     /// Recycled stream workspaces: closing (or evicting) a session
     /// returns its buffers here so the next `stream_open` reuses them.
-    stream_scratch: Pool<StreamScratch>,
+    /// Shared with the shard workers.
+    stream_scratch: Arc<Pool<StreamScratch>>,
     /// Idle eviction threshold: sessions untouched for longer than
-    /// this are dropped on the next stream op (their buffers are
-    /// recycled). Set before sharing the service across threads.
+    /// this are dropped by their shard worker's sweep. Set before the
+    /// first stream op.
     pub session_ttl: Duration,
-    /// Upper bound on concurrently open sessions: `stream_open` is
-    /// rejected (after an eviction sweep) once the table is full, so a
-    /// client loop cannot exhaust server memory faster than the TTL
-    /// reclaims it. Set before sharing the service across threads.
+    /// Upper bound on concurrently open sessions across all shards:
+    /// `stream_open` is admission-controlled, so a client loop cannot
+    /// exhaust server memory faster than the TTL reclaims it. Set
+    /// before the first stream op.
     pub max_sessions: usize,
     /// Per-session reservation budget in `f64` slots: `stream_open`
     /// rejects configurations whose two-stack store would reserve more
@@ -164,9 +161,15 @@ pub struct SigService {
     /// Default `1 << 24` (128 MiB per session); worst-case streaming
     /// footprint is `max_sessions · max_session_floats · 8` bytes.
     pub max_session_floats: usize,
-    /// Millisecond timestamp of the last idle-eviction sweep (the
-    /// sweep is throttled so hot stream ops stay O(1) on the table).
-    last_sweep_ms: AtomicU64,
+    /// Shard workers to spin up; `0` (the default) resolves to the
+    /// machine's available parallelism, capped at 8. Set before the
+    /// first stream op (the CLI's `--shards`).
+    pub shard_count: usize,
+    /// Bounded per-shard mailbox capacity; a full mailbox load-sheds
+    /// instead of blocking the connection thread.
+    pub mailbox_capacity: usize,
+    /// Backoff hint (milliseconds) carried in load-shed replies.
+    pub shed_retry_ms: u64,
     /// PJRT artifact runtime, if one was configured at boot.
     pub runtime: Option<Arc<Runtime>>,
     /// Shared metrics registry (also read by the server).
@@ -181,17 +184,53 @@ impl SigService {
             logsig_engines: Mutex::new(HashMap::new()),
             batch_scratch: Pool::default(),
             stream_tables: RwLock::new(HashMap::new()),
-            sessions: Mutex::new(HashMap::new()),
-            next_session: AtomicU64::new(1),
-            epoch: Instant::now(),
-            stream_scratch: Pool::default(),
+            shards: OnceLock::new(),
+            stream_scratch: Arc::new(Pool::default()),
             session_ttl: Duration::from_secs(300),
             max_sessions: 1024,
             max_session_floats: 1 << 24,
-            last_sweep_ms: AtomicU64::new(0),
+            shard_count: 0,
+            mailbox_capacity: 256,
+            shed_retry_ms: 25,
             runtime,
             metrics: Arc::new(super::Metrics::new()),
         }
+    }
+
+    /// Create a service with a fixed shard count (used by the CLI and
+    /// the shard ≡ single-table equivalence tests).
+    pub fn with_shards(runtime: Option<Arc<Runtime>>, shards: usize) -> SigService {
+        let mut s = SigService::new(runtime);
+        s.shard_count = shards;
+        s
+    }
+
+    /// The shard set, spun up on first use with the current tuning
+    /// fields. `shard_count == 0` resolves to available parallelism
+    /// capped at 8 (diminishing returns past that: the mailbox hop
+    /// costs more than the contention it removes).
+    pub fn shard_set(&self) -> &Arc<ShardSet> {
+        self.shards.get_or_init(|| {
+            let shards = if self.shard_count == 0 {
+                std::thread::available_parallelism()
+                    .map(|n| n.get())
+                    .unwrap_or(1)
+                    .clamp(1, 8)
+            } else {
+                self.shard_count
+            };
+            Arc::new(ShardSet::new(
+                ShardConfig {
+                    shards,
+                    mailbox_capacity: self.mailbox_capacity,
+                    session_ttl: self.session_ttl,
+                    max_sessions: self.max_sessions,
+                    shed_retry_ms: self.shed_retry_ms,
+                },
+                Arc::clone(&self.metrics),
+                Arc::clone(&self.stream_scratch),
+            ))
+        })
     }
 
     /// Get (or build) the native engine for a (dim, spec) pair.
@@ -231,73 +270,50 @@ impl SigService {
         table
     }
 
-    /// Live session count (after eviction sweeps).
+    /// Live session count across all shards.
     pub fn session_count(&self) -> usize {
-        self.sessions.lock().unwrap().len()
+        self.shards.get().map_or(0, |s| s.live_sessions())
     }
 
-    /// Drop sessions idle for longer than [`SigService::session_ttl`],
-    /// recycling their workspaces. Runs at the start of every stream
-    /// op and periodically from the server's background sweeper (so
-    /// memory is reclaimed even when stream traffic stops entirely);
-    /// internally throttled, so callers may invoke it freely.
+    /// Ask the shard workers to run their idle-eviction sweeps now.
+    /// Workers also sweep on their own idle ticks (every `ttl / 10`,
+    /// clamped to 5–100 ms), so calling this is never required for
+    /// reclamation — it only accelerates it.
     pub fn evict_idle(&self) {
-        let now_ms = self.epoch.elapsed().as_millis() as u64;
-        let ttl_ms = self.session_ttl.as_millis() as u64;
-        // Throttle: the sweep scans the whole table, so run it at most
-        // every ttl/10 ms; between sweeps stream ops touch the table
-        // lock only for their O(1) lookup. A CAS elects one sweeper.
-        let interval = ttl_ms / 10;
-        let last = self.last_sweep_ms.load(Relaxed);
-        if now_ms.saturating_sub(last) < interval {
-            return;
-        }
-        if self
-            .last_sweep_ms
-            .compare_exchange(last, now_ms, Relaxed, Relaxed)
-            .is_err()
-        {
-            return; // another thread is sweeping
-        }
-        let mut evicted = Vec::new();
-        {
-            let mut sessions = self.sessions.lock().unwrap();
-            let expired: Vec<u64> = sessions
-                .iter()
-                .filter(|(_, s)| now_ms.saturating_sub(s.last_used_ms.load(Relaxed)) > ttl_ms)
-                .map(|(&id, _)| id)
-                .collect();
-            for id in expired {
-                if let Some(s) = sessions.remove(&id) {
-                    evicted.push(s);
-                }
-            }
-        }
-        if !evicted.is_empty() {
-            self.metrics.sessions_evicted.fetch_add(evicted.len() as u64, Relaxed);
-            self.recycle_sessions(evicted);
+        if let Some(s) = self.shards.get() {
+            s.sweep_all();
         }
     }
 
-    /// Return removed sessions' buffers to the scratch pool. A session
-    /// with an op still in flight (its `Arc` has another holder) is
-    /// simply dropped once that op finishes — recycling is an
-    /// optimisation, not a correctness requirement.
-    fn recycle_sessions(&self, removed: Vec<Arc<StreamSession>>) {
-        let mut cache = self.stream_scratch.take_at_least(0);
-        for sess in removed {
-            if let Ok(sess) = Arc::try_unwrap(sess) {
-                if let Ok(stream) = sess.stream.into_inner() {
-                    cache.push(stream.into_scratch());
-                }
-            }
-        }
-        self.stream_scratch.put(cache);
+    /// Per-shard counters for the `stats` verb (empty until the first
+    /// stream op spins the shard set up).
+    pub fn shard_stats(&self) -> Vec<ShardStat> {
+        self.shards.get().map_or_else(Vec::new, |s| s.stats())
     }
 
-    /// Current time in milliseconds since the service epoch.
-    fn now_ms(&self) -> u64 {
-        self.epoch.elapsed().as_millis() as u64
+    /// JSON body of the `stats` wire verb: shard count, live sessions,
+    /// and per-shard counters. Spins the shard set up if needed so the
+    /// reply always has one row per shard.
+    pub fn stats_json(&self) -> Json {
+        let set = self.shard_set();
+        let rows: Vec<Json> = set
+            .stats()
+            .into_iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("shard", Json::Num(s.shard as f64)),
+                    ("sessions", Json::Num(s.sessions as f64)),
+                    ("mailbox_depth", Json::Num(s.mailbox_depth as f64)),
+                    ("sheds", Json::Num(s.sheds as f64)),
+                    ("pushes", Json::Num(s.pushes as f64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("shards", Json::Num(set.shard_count() as f64)),
+            ("live_sessions", Json::Num(set.live_sessions() as f64)),
+            ("per_shard", Json::Arr(rows)),
+        ])
     }
 
     /// Parse an `"s<N>"` session handle. Only the canonical form is
@@ -312,23 +328,15 @@ impl SigService {
             .ok_or_else(|| format!("malformed session handle '{handle}'"))
     }
 
-    /// Execute one stateful stream op against the session table.
-    /// Stream ops bypass the batcher: they are order-sensitive per
-    /// session (a connection's requests are handled sequentially, so a
-    /// client observes its own pushes).
-    pub fn execute_stream(&self, req: &Request) -> Result<StreamReply, String> {
-        self.evict_idle();
+    /// Execute one stateful stream op against the sharded session
+    /// table. Stream ops bypass the batcher: they are order-sensitive
+    /// per session (a connection's requests are handled sequentially,
+    /// so a client observes its own pushes). A full shard mailbox
+    /// returns [`StreamError::Shed`] — the server answers with a
+    /// `retry-after` frame instead of blocking.
+    pub fn execute_stream(&self, req: &Request) -> Result<StreamReply, StreamError> {
         match req.op {
             RequestOp::StreamOpen => {
-                // Cheap pre-check before any table/engine work; racing
-                // opens are caught again under the insert lock below.
-                if self.session_count() >= self.max_sessions {
-                    return Err(format!(
-                        "session table full ({} live sessions); close or let idle \
-                         sessions expire (ttl {:?})",
-                        self.max_sessions, self.session_ttl
-                    ));
-                }
                 let table = self.stream_table(req.dim, &req.spec);
                 // Bound the actual reservation, not just the window
                 // count: the two-stack store scales with the table.
@@ -336,13 +344,13 @@ impl SigService {
                     .window_len
                     .saturating_mul(table.state_len() + table.dim());
                 if need > self.max_session_floats {
-                    return Err(format!(
+                    return Err(StreamError::Msg(format!(
                         "session would reserve {need} floats (window {} × state \
                          {}), exceeding the per-session budget of {} floats",
                         req.window_len,
                         table.state_len(),
                         self.max_session_floats
-                    ));
+                    )));
                 }
                 let scratch = {
                     let mut cache = self.stream_scratch.take_at_least(0);
@@ -351,112 +359,22 @@ impl SigService {
                     s
                 };
                 let stream = StreamEngine::with_scratch(table, req.window_len, scratch);
-                let out_dim = stream.out_dim();
-                let id = self.next_session.fetch_add(1, Relaxed);
-                {
-                    // Cap check and insert under one lock so racing
-                    // opens cannot overshoot `max_sessions`.
-                    let mut sessions = self.sessions.lock().unwrap();
-                    if sessions.len() >= self.max_sessions {
-                        return Err(format!(
-                            "session table full ({} live sessions); close or let \
-                             idle sessions expire (ttl {:?})",
-                            self.max_sessions, self.session_ttl
-                        ));
-                    }
-                    sessions.insert(
-                        id,
-                        Arc::new(StreamSession {
-                            stream: Mutex::new(stream),
-                            last_used_ms: AtomicU64::new(self.now_ms()),
-                        }),
-                    );
-                }
-                self.metrics.sessions_opened.fetch_add(1, Relaxed);
-                Ok(StreamReply::Opened {
-                    session: format!("s{id}"),
-                    out_dim,
-                })
+                self.shard_set().open(stream)
             }
-            RequestOp::StreamPush => self.with_session(&req.session, |stream| {
-                let d = stream.dim();
-                if req.samples.len() % d != 0 {
-                    return Err(format!(
-                        "samples length {} not divisible by session dim {d}",
-                        req.samples.len()
-                    ));
-                }
-                for sample in req.samples.chunks_exact(d) {
-                    stream.push(sample);
-                }
-                self.metrics
-                    .stream_pushes
-                    .fetch_add((req.samples.len() / d) as u64, Relaxed);
-                Ok(StreamReply::Pushed {
-                    pushed: req.samples.len() / d,
-                    seen: stream.samples_seen(),
-                })
-            }),
-            RequestOp::StreamWindow => self.with_session(&req.session, |stream| {
-                let mut result = vec![0.0; stream.out_dim()];
-                if req.full {
-                    stream.signature_into(&mut result);
-                } else {
-                    stream.window_into(&mut result);
-                }
-                let shape = vec![result.len()];
-                Ok(StreamReply::Values { result, shape })
-            }),
+            RequestOp::StreamPush => {
+                let id = Self::parse_session_id(&req.session)?;
+                self.shard_set().push(id, req.samples.clone())
+            }
+            RequestOp::StreamWindow => {
+                let id = Self::parse_session_id(&req.session)?;
+                self.shard_set().window(id, req.full)
+            }
             RequestOp::StreamClose => {
                 let id = Self::parse_session_id(&req.session)?;
-                let removed = self.sessions.lock().unwrap().remove(&id);
-                match removed {
-                    Some(sess) => {
-                        self.recycle_sessions(vec![sess]);
-                        self.metrics.sessions_closed.fetch_add(1, Relaxed);
-                        Ok(StreamReply::Closed)
-                    }
-                    None => Err(format!(
-                        "unknown session '{}' (already closed or evicted)",
-                        req.session
-                    )),
-                }
+                self.shard_set().close(id)
             }
-            _ => Err("not a stream op".into()),
+            _ => Err(StreamError::Msg("not a stream op".into())),
         }
-    }
-
-    /// Run `f` on a live session, bumping its idle timestamp. The
-    /// global table lock is held only for the lookup; the computation
-    /// runs under the session's own lock, so concurrent sessions never
-    /// serialize on each other.
-    fn with_session<T>(
-        &self,
-        handle: &str,
-        f: impl FnOnce(&mut StreamEngine) -> Result<T, String>,
-    ) -> Result<T, String> {
-        let id = Self::parse_session_id(handle)?;
-        let sess = {
-            // Bump the idle stamp while still holding the table lock:
-            // the sweeper scans under the same lock, so lookup-and-touch
-            // is atomic w.r.t. eviction — a just-looked-up session can
-            // no longer be reaped before its timestamp refresh lands
-            // (which would acknowledge a push on a detached engine).
-            let sessions = self.sessions.lock().unwrap();
-            match sessions.get(&id) {
-                Some(sess) => {
-                    sess.last_used_ms.store(self.now_ms(), Relaxed);
-                    Arc::clone(sess)
-                }
-                None => {
-                    return Err(format!(
-                        "unknown session '{handle}' (already closed or evicted)"
-                    ))
-                }
-            }
-        };
-        let mut stream = sess.stream.lock().unwrap();
-        f(&mut stream)
     }
 
     /// Name of a PJRT artifact able to serve `key` (batch size `b`), if
@@ -551,7 +469,7 @@ impl SigService {
                 let odim = eng.out_dim();
                 Ok((out, vec![wins.len(), odim], "native"))
             }
-            RequestOp::Metrics | RequestOp::Ping => {
+            RequestOp::Metrics | RequestOp::Ping | RequestOp::Stats => {
                 Err("control ops are handled by the server, not the service".into())
             }
             RequestOp::StreamOpen
@@ -770,7 +688,7 @@ mod tests {
         assert_eq!(s.execute_stream(&close).unwrap(), StreamReply::Closed);
         assert_eq!(s.session_count(), 0);
         // Double close errors without panicking.
-        let err = s.execute_stream(&close).unwrap_err();
+        let err = s.execute_stream(&close).unwrap_err().to_string();
         assert!(err.contains("unknown session"), "{err}");
         // Push to the closed session errors too.
         assert!(s.execute_stream(&push).is_err());
@@ -794,7 +712,7 @@ mod tests {
             r#"{{"op":"stream_push","session":"{session}","samples":[0,0]}}"#
         ))
         .unwrap();
-        let err = s.execute_stream(&push).unwrap_err();
+        let err = s.execute_stream(&push).unwrap_err().to_string();
         assert!(err.contains("unknown session"), "{err}");
         assert_eq!(s.session_count(), 0);
         assert_eq!(
@@ -817,7 +735,7 @@ mod tests {
             other => panic!("{other:?}"),
         };
         s.execute_stream(&open).unwrap();
-        let err = s.execute_stream(&open).unwrap_err();
+        let err = s.execute_stream(&open).unwrap_err().to_string();
         assert!(err.contains("session table full"), "{err}");
         // Closing one frees a slot.
         let close = parse_request(&format!(
@@ -840,7 +758,7 @@ mod tests {
             r#"{"op":"stream_open","dim":2,"depth":3,"window":64}"#,
         )
         .unwrap();
-        let err = s.execute_stream(&open).unwrap_err();
+        let err = s.execute_stream(&open).unwrap_err().to_string();
         assert!(err.contains("per-session budget"), "{err}");
         assert_eq!(s.session_count(), 0);
         // A small window over the same table fits (15 + 2 floats/slot).
@@ -866,7 +784,7 @@ mod tests {
             r#"{{"op":"stream_push","session":"{session}","samples":[1,2]}}"#
         ))
         .unwrap();
-        let err = s.execute_stream(&push).unwrap_err();
+        let err = s.execute_stream(&push).unwrap_err().to_string();
         assert!(err.contains("not divisible"), "{err}");
         // Garbage and non-canonical handles are rejected before the
         // session lookup — "s+1"/"s01" must not alias session s1.
@@ -876,7 +794,10 @@ mod tests {
             ))
             .unwrap();
             assert!(
-                s.execute_stream(&bad).unwrap_err().contains("malformed"),
+                s.execute_stream(&bad)
+                    .unwrap_err()
+                    .to_string()
+                    .contains("malformed"),
                 "handle {handle:?} must be rejected as malformed"
             );
         }
@@ -909,6 +830,50 @@ mod tests {
             s.metrics.sessions_opened.load(std::sync::atomic::Ordering::Relaxed),
             2
         );
+    }
+
+    #[test]
+    fn shard_equivalence_smoke() {
+        // Same tiny script on 1 and 4 shards: identical handles,
+        // identical values (the full property lives in
+        // tests/coordinator_properties.rs).
+        let mut replies = Vec::new();
+        for shards in [1usize, 4] {
+            let s = SigService::with_shards(None, shards);
+            let open = parse_request(
+                r#"{"op":"stream_open","dim":1,"depth":2,"window":3}"#,
+            )
+            .unwrap();
+            let session = match s.execute_stream(&open).unwrap() {
+                StreamReply::Opened { session, .. } => session,
+                other => panic!("{other:?}"),
+            };
+            let push = parse_request(&format!(
+                r#"{{"op":"stream_push","session":"{session}","samples":[0,2,5]}}"#
+            ))
+            .unwrap();
+            s.execute_stream(&push).unwrap();
+            let win = parse_request(&format!(
+                r#"{{"op":"stream_window","session":"{session}"}}"#
+            ))
+            .unwrap();
+            replies.push((session, s.execute_stream(&win).unwrap()));
+        }
+        assert_eq!(replies[0], replies[1]);
+    }
+
+    #[test]
+    fn stats_json_has_one_row_per_shard() {
+        let s = SigService::with_shards(None, 3);
+        let open = parse_request(
+            r#"{"op":"stream_open","dim":1,"depth":1,"window":2}"#,
+        )
+        .unwrap();
+        s.execute_stream(&open).unwrap();
+        let j = s.stats_json();
+        assert_eq!(j.get("shards").as_usize(), Some(3));
+        assert_eq!(j.get("live_sessions").as_usize(), Some(1));
+        assert_eq!(j.get("per_shard").as_arr().unwrap().len(), 3);
     }
 
     #[test]

@@ -1,0 +1,737 @@
+//! Actor-sharded session table: N shard workers, each exclusively
+//! owning a slice of the streaming sessions.
+//!
+//! PR 4's coordinator kept one global session table — a mutex-guarded
+//! `HashMap` plus per-session engine locks and a CAS-throttled TTL
+//! sweeper. Correct, but every stream op still rendezvoused on the
+//! table lock, and the sweeper scanned all sessions from whatever
+//! thread got elected. This module moves the table into [`ShardSet`]:
+//! sessions are routed by `splitmix64(id) % shards` to a worker thread
+//! that owns its slice outright, so within a shard there are **no
+//! locks at all** — no per-session mutex, no table mutex, and the TTL
+//! sweep is a shard-local scan on the worker's own idle ticks.
+//!
+//! Flow control is explicit: each worker reads from a bounded
+//! [`Mailbox`], and a full mailbox makes the producer **load-shed** —
+//! the client gets a [`StreamError::Shed`] carrying `retry_after_ms`
+//! instead of the acceptor thread blocking. Shutdown is a graceful
+//! drain: closing the mailboxes lets queued requests finish (every
+//! in-flight reply is delivered) before the workers exit and return
+//! their sessions' scratch buffers to the shared pool.
+
+use super::mailbox::{Mailbox, Recv, SendError};
+use super::service::StreamReply;
+use super::Metrics;
+use crate::sig::{StreamEngine, StreamScratch};
+use crate::util::pool::Pool;
+use crate::util::rng::splitmix64;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering::Relaxed};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+/// Stream-op failure, split so the server can answer a shed with a
+/// distinct `retry-after` frame instead of a generic error.
+#[derive(Clone, Debug, PartialEq)]
+pub enum StreamError {
+    /// The target shard's mailbox was full — the request was dropped
+    /// *before* doing any work; the client should retry after the
+    /// indicated backoff.
+    Shed {
+        /// Suggested client backoff in milliseconds.
+        retry_after_ms: u64,
+    },
+    /// Any other failure (unknown session, malformed handle, budget…).
+    Msg(String),
+}
+
+impl std::fmt::Display for StreamError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StreamError::Shed { retry_after_ms } => {
+                write!(f, "overloaded; retry after {retry_after_ms} ms")
+            }
+            StreamError::Msg(m) => f.write_str(m),
+        }
+    }
+}
+
+impl From<String> for StreamError {
+    fn from(m: String) -> StreamError {
+        StreamError::Msg(m)
+    }
+}
+
+impl From<&str> for StreamError {
+    fn from(m: &str) -> StreamError {
+        StreamError::Msg(m.to_string())
+    }
+}
+
+/// Reply channel carried inside a [`ShardMsg`].
+pub type ReplyTx = mpsc::Sender<Result<StreamReply, String>>;
+
+/// A typed message to a shard worker. Session-addressed variants carry
+/// the numeric id (already parsed and routed); `Open` carries the
+/// fully-built engine so the worker only files it — table construction
+/// and budget checks stay on the caller's thread.
+pub enum ShardMsg {
+    /// File a new session under `id` and acknowledge with `Opened`.
+    Open {
+        /// Pre-allocated global session id.
+        id: u64,
+        /// The session's engine, built by the service.
+        stream: Box<StreamEngine>,
+        /// Where to send the acknowledgement.
+        reply: ReplyTx,
+    },
+    /// Append samples to session `id`.
+    Push {
+        /// Target session id.
+        id: u64,
+        /// Flat `(k, dim)` samples.
+        samples: Vec<f64>,
+        /// Where to send the acknowledgement.
+        reply: ReplyTx,
+    },
+    /// Query session `id`'s sliding-window (or running) signature.
+    Window {
+        /// Target session id.
+        id: u64,
+        /// `true` → running `S_{0,t}` instead of the sliding window.
+        full: bool,
+        /// Where to send the values.
+        reply: ReplyTx,
+    },
+    /// Close session `id`, recycling its workspace.
+    Close {
+        /// Target session id.
+        id: u64,
+        /// Where to send the acknowledgement.
+        reply: ReplyTx,
+    },
+    /// Force an idle-eviction sweep now (bypasses the worker's own
+    /// sweep throttle; sent by [`ShardSet::sweep_all`]).
+    Sweep,
+    /// Diagnostic verb (tests/benches only): park the worker for the
+    /// given duration so its mailbox can be filled deterministically to
+    /// exercise the load-shed path. Never produced from wire traffic.
+    Stall(Duration),
+}
+
+/// Point-in-time counters for one shard (the `stats` wire verb).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardStat {
+    /// Shard index.
+    pub shard: usize,
+    /// Sessions currently owned by this shard.
+    pub sessions: u64,
+    /// Messages queued in the shard's mailbox right now.
+    pub mailbox_depth: u64,
+    /// Requests load-shed because the mailbox was full.
+    pub sheds: u64,
+    /// Samples pushed into this shard's sessions.
+    pub pushes: u64,
+}
+
+/// Lock-free per-shard counters, written by the worker (sessions,
+/// pushes) and by producers (sheds).
+#[derive(Debug, Default)]
+struct ShardCounters {
+    sessions: AtomicU64,
+    sheds: AtomicU64,
+    pushes: AtomicU64,
+}
+
+struct Shard {
+    mailbox: Mailbox<ShardMsg>,
+    counters: Arc<ShardCounters>,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+/// Configuration captured when the shard set spins up.
+#[derive(Clone, Debug)]
+pub struct ShardConfig {
+    /// Number of shard workers (≥ 1).
+    pub shards: usize,
+    /// Bounded mailbox capacity per shard; a full mailbox load-sheds.
+    pub mailbox_capacity: usize,
+    /// Idle TTL after which a worker evicts a session.
+    pub session_ttl: Duration,
+    /// Global cap on concurrently open sessions (admission-controlled
+    /// across all shards, so the single-shard and sharded coordinators
+    /// reject the same N+1'th open).
+    pub max_sessions: usize,
+    /// Backoff hint carried in [`StreamError::Shed`] replies.
+    pub shed_retry_ms: u64,
+}
+
+impl Default for ShardConfig {
+    fn default() -> ShardConfig {
+        ShardConfig {
+            shards: 1,
+            mailbox_capacity: 256,
+            session_ttl: Duration::from_secs(300),
+            max_sessions: 1024,
+            shed_retry_ms: 25,
+        }
+    }
+}
+
+/// The sharded session table: owns the worker threads and routes
+/// session ops to them. Dropping the set closes every mailbox, drains
+/// the backlog, and joins the workers.
+pub struct ShardSet {
+    shards: Vec<Shard>,
+    /// Global live-session count (admission control; workers decrement
+    /// on close/evict).
+    live: Arc<AtomicUsize>,
+    /// Globally sequential session ids — identical handles regardless
+    /// of shard count, which is what makes the shard ≡ single-table
+    /// equivalence tests possible.
+    next_session: AtomicU64,
+    config: ShardConfig,
+}
+
+impl std::fmt::Debug for ShardSet {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "ShardSet({} shards, {} live)",
+            self.shards.len(),
+            self.live.load(Relaxed)
+        )
+    }
+}
+
+/// Which shard owns session `id` among `n` shards. `splitmix64` gives
+/// a full-avalanche mix, so sequential ids spread uniformly.
+pub fn shard_of(id: u64, n: usize) -> usize {
+    let mut x = id;
+    (splitmix64(&mut x) % n as u64) as usize
+}
+
+impl ShardSet {
+    /// Spin up `config.shards` workers sharing `metrics` and the
+    /// scratch `pool`.
+    pub fn new(
+        config: ShardConfig,
+        metrics: Arc<Metrics>,
+        pool: Arc<Pool<StreamScratch>>,
+    ) -> ShardSet {
+        let n = config.shards.max(1);
+        let live = Arc::new(AtomicUsize::new(0));
+        let epoch = Instant::now();
+        let shards = (0..n)
+            .map(|i| {
+                let mailbox: Mailbox<ShardMsg> = Mailbox::new(config.mailbox_capacity);
+                let counters = Arc::new(ShardCounters::default());
+                let worker = ShardWorker {
+                    mailbox: mailbox.clone(),
+                    counters: Arc::clone(&counters),
+                    live: Arc::clone(&live),
+                    metrics: Arc::clone(&metrics),
+                    pool: Arc::clone(&pool),
+                    ttl: config.session_ttl,
+                    epoch,
+                    sessions: HashMap::new(),
+                };
+                let handle = std::thread::Builder::new()
+                    .name(format!("pathsig-shard-{i}"))
+                    .spawn(move || worker.run())
+                    .expect("spawn shard worker");
+                Shard {
+                    mailbox,
+                    counters,
+                    worker: Some(handle),
+                }
+            })
+            .collect();
+        ShardSet {
+            shards,
+            live,
+            next_session: AtomicU64::new(1),
+            config,
+        }
+    }
+
+    /// Number of shard workers.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Sessions currently live across all shards.
+    pub fn live_sessions(&self) -> usize {
+        self.live.load(Relaxed)
+    }
+
+    /// The configuration this set was built with.
+    pub fn config(&self) -> &ShardConfig {
+        &self.config
+    }
+
+    /// Admit and file a new session built from `stream`. Fails with the
+    /// table-full error when `max_sessions` are live, or sheds when the
+    /// target shard's mailbox is full.
+    pub fn open(&self, stream: StreamEngine) -> Result<StreamReply, StreamError> {
+        // Reserve a slot first so racing opens can never overshoot the
+        // global cap; release it on any subsequent failure.
+        if self
+            .live
+            .fetch_update(Relaxed, Relaxed, |c| {
+                (c < self.config.max_sessions).then(|| c + 1)
+            })
+            .is_err()
+        {
+            return Err(StreamError::Msg(format!(
+                "session table full ({} live sessions); close or let idle \
+                 sessions expire (ttl {:?})",
+                self.config.max_sessions, self.config.session_ttl
+            )));
+        }
+        let id = self.next_session.fetch_add(1, Relaxed);
+        let (reply, rx) = mpsc::channel();
+        let msg = ShardMsg::Open {
+            id,
+            stream: Box::new(stream),
+            reply,
+        };
+        if let Err(e) = self.send(id, msg) {
+            self.live.fetch_sub(1, Relaxed);
+            return Err(e);
+        }
+        Self::wait(rx)
+    }
+
+    /// Append `samples` to session `id`.
+    pub fn push(&self, id: u64, samples: Vec<f64>) -> Result<StreamReply, StreamError> {
+        let (reply, rx) = mpsc::channel();
+        self.send(id, ShardMsg::Push { id, samples, reply })?;
+        Self::wait(rx)
+    }
+
+    /// Query session `id`'s window (or, with `full`, running) signature.
+    pub fn window(&self, id: u64, full: bool) -> Result<StreamReply, StreamError> {
+        let (reply, rx) = mpsc::channel();
+        self.send(id, ShardMsg::Window { id, full, reply })?;
+        Self::wait(rx)
+    }
+
+    /// Close session `id`.
+    pub fn close(&self, id: u64) -> Result<StreamReply, StreamError> {
+        let (reply, rx) = mpsc::channel();
+        self.send(id, ShardMsg::Close { id, reply })?;
+        Self::wait(rx)
+    }
+
+    /// Ask every shard to run its idle-eviction sweep now. Best-effort:
+    /// a full mailbox is skipped (that shard is busy and will sweep on
+    /// its own ticks anyway).
+    pub fn sweep_all(&self) {
+        for s in &self.shards {
+            let _ = s.mailbox.try_send(ShardMsg::Sweep);
+        }
+    }
+
+    /// Park shard `shard` for `d` (diagnostic; see [`ShardMsg::Stall`]).
+    pub fn stall_shard(&self, shard: usize, d: Duration) {
+        let _ = self.shards[shard].mailbox.try_send(ShardMsg::Stall(d));
+    }
+
+    /// Point-in-time per-shard counters for the `stats` verb.
+    pub fn stats(&self) -> Vec<ShardStat> {
+        self.shards
+            .iter()
+            .enumerate()
+            .map(|(i, s)| ShardStat {
+                shard: i,
+                sessions: s.counters.sessions.load(Relaxed),
+                mailbox_depth: s.mailbox.len() as u64,
+                sheds: s.counters.sheds.load(Relaxed),
+                pushes: s.counters.pushes.load(Relaxed),
+            })
+            .collect()
+    }
+
+    fn send(&self, id: u64, msg: ShardMsg) -> Result<(), StreamError> {
+        let shard = &self.shards[shard_of(id, self.shards.len())];
+        match shard.mailbox.try_send(msg) {
+            Ok(()) => Ok(()),
+            Err(SendError::Full(_)) => {
+                shard.counters.sheds.fetch_add(1, Relaxed);
+                Err(StreamError::Shed {
+                    retry_after_ms: self.config.shed_retry_ms,
+                })
+            }
+            Err(SendError::Closed(_)) => {
+                Err(StreamError::Msg("coordinator is shutting down".into()))
+            }
+        }
+    }
+
+    fn wait(rx: mpsc::Receiver<Result<StreamReply, String>>) -> Result<StreamReply, StreamError> {
+        match rx.recv() {
+            Ok(res) => res.map_err(StreamError::Msg),
+            Err(_) => Err(StreamError::Msg(
+                "shard worker exited before replying".into(),
+            )),
+        }
+    }
+}
+
+impl Drop for ShardSet {
+    fn drop(&mut self) {
+        for s in &self.shards {
+            s.mailbox.close();
+        }
+        for s in &mut self.shards {
+            if let Some(h) = s.worker.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+/// One session slot owned by a worker. No locks: the worker is the
+/// only thread that ever touches the engine.
+struct Slot {
+    stream: StreamEngine,
+    last_used_ms: u64,
+}
+
+struct ShardWorker {
+    mailbox: Mailbox<ShardMsg>,
+    counters: Arc<ShardCounters>,
+    live: Arc<AtomicUsize>,
+    metrics: Arc<Metrics>,
+    pool: Arc<Pool<StreamScratch>>,
+    ttl: Duration,
+    epoch: Instant,
+    sessions: HashMap<u64, Slot>,
+}
+
+impl ShardWorker {
+    fn run(mut self) {
+        let ttl_ms = self.ttl.as_millis() as u64;
+        // Sweep at most every ttl/10 ms (same cadence as the old global
+        // CAS-throttled sweeper, now shard-local and contention-free);
+        // idle ticks are clamped so a short test TTL still sweeps
+        // promptly and a production TTL doesn't spin.
+        let interval_ms = ttl_ms / 10;
+        let tick = Duration::from_millis(interval_ms.clamp(5, 100));
+        let mut last_sweep_ms = 0u64;
+        loop {
+            match self.mailbox.recv_timeout(tick) {
+                Recv::Msg(msg) => {
+                    let force = matches!(msg, ShardMsg::Sweep);
+                    self.handle(msg);
+                    let now = self.now_ms();
+                    if force || now.saturating_sub(last_sweep_ms) >= interval_ms {
+                        last_sweep_ms = now;
+                        self.sweep(ttl_ms);
+                    }
+                }
+                Recv::Timeout => {
+                    let now = self.now_ms();
+                    if now.saturating_sub(last_sweep_ms) >= interval_ms {
+                        last_sweep_ms = now;
+                        self.sweep(ttl_ms);
+                    }
+                }
+                Recv::Closed => break,
+            }
+        }
+        // Graceful exit: the mailbox has already drained (Closed is
+        // only reported on an empty queue), so every queued request got
+        // its reply above. Recycle the surviving sessions' workspaces.
+        let ids: Vec<u64> = self.sessions.keys().copied().collect();
+        for id in ids {
+            if let Some(slot) = self.sessions.remove(&id) {
+                self.recycle(slot.stream);
+                self.live.fetch_sub(1, Relaxed);
+            }
+        }
+        self.counters.sessions.store(0, Relaxed);
+    }
+
+    fn handle(&mut self, msg: ShardMsg) {
+        match msg {
+            ShardMsg::Open { id, stream, reply } => {
+                let out_dim = stream.out_dim();
+                let now = self.now_ms();
+                self.sessions.insert(
+                    id,
+                    Slot {
+                        stream: *stream,
+                        last_used_ms: now,
+                    },
+                );
+                self.counters.sessions.store(self.sessions.len() as u64, Relaxed);
+                self.metrics.sessions_opened.fetch_add(1, Relaxed);
+                let _ = reply.send(Ok(StreamReply::Opened {
+                    session: format!("s{id}"),
+                    out_dim,
+                }));
+            }
+            ShardMsg::Push { id, samples, reply } => {
+                let now = self.now_ms();
+                let res = match self.sessions.get_mut(&id) {
+                    Some(slot) => {
+                        slot.last_used_ms = now;
+                        let d = slot.stream.dim();
+                        if samples.len() % d != 0 {
+                            Err(format!(
+                                "samples length {} not divisible by session dim {d}",
+                                samples.len()
+                            ))
+                        } else {
+                            for sample in samples.chunks_exact(d) {
+                                slot.stream.push(sample);
+                            }
+                            let pushed = samples.len() / d;
+                            self.counters.pushes.fetch_add(pushed as u64, Relaxed);
+                            self.metrics.stream_pushes.fetch_add(pushed as u64, Relaxed);
+                            Ok(StreamReply::Pushed {
+                                pushed,
+                                seen: slot.stream.samples_seen(),
+                            })
+                        }
+                    }
+                    None => Err(unknown_session(id)),
+                };
+                let _ = reply.send(res);
+            }
+            ShardMsg::Window { id, full, reply } => {
+                let now = self.now_ms();
+                let res = match self.sessions.get_mut(&id) {
+                    Some(slot) => {
+                        slot.last_used_ms = now;
+                        let mut result = vec![0.0; slot.stream.out_dim()];
+                        if full {
+                            slot.stream.signature_into(&mut result);
+                        } else {
+                            slot.stream.window_into(&mut result);
+                        }
+                        let shape = vec![result.len()];
+                        Ok(StreamReply::Values { result, shape })
+                    }
+                    None => Err(unknown_session(id)),
+                };
+                let _ = reply.send(res);
+            }
+            ShardMsg::Close { id, reply } => {
+                let res = match self.sessions.remove(&id) {
+                    Some(slot) => {
+                        self.recycle(slot.stream);
+                        self.live.fetch_sub(1, Relaxed);
+                        self.counters.sessions.store(self.sessions.len() as u64, Relaxed);
+                        self.metrics.sessions_closed.fetch_add(1, Relaxed);
+                        Ok(StreamReply::Closed)
+                    }
+                    None => Err(unknown_session(id)),
+                };
+                let _ = reply.send(res);
+            }
+            ShardMsg::Sweep => {} // sweep runs in the loop after handling
+            ShardMsg::Stall(d) => std::thread::sleep(d),
+        }
+    }
+
+    fn sweep(&mut self, ttl_ms: u64) {
+        let now = self.now_ms();
+        let expired: Vec<u64> = self
+            .sessions
+            .iter()
+            .filter(|(_, s)| now.saturating_sub(s.last_used_ms) > ttl_ms)
+            .map(|(&id, _)| id)
+            .collect();
+        if expired.is_empty() {
+            return;
+        }
+        for id in expired {
+            if let Some(slot) = self.sessions.remove(&id) {
+                self.recycle(slot.stream);
+                self.live.fetch_sub(1, Relaxed);
+                self.metrics.sessions_evicted.fetch_add(1, Relaxed);
+            }
+        }
+        self.counters.sessions.store(self.sessions.len() as u64, Relaxed);
+    }
+
+    fn recycle(&self, stream: StreamEngine) {
+        let mut cache = self.pool.take_at_least(0);
+        cache.push(stream.into_scratch());
+        self.pool.put(cache);
+    }
+
+    fn now_ms(&self) -> u64 {
+        self.epoch.elapsed().as_millis() as u64
+    }
+}
+
+/// The exact error string PR 4's single-table coordinator used — kept
+/// byte-identical so v1 clients matching on it keep working.
+fn unknown_session(id: u64) -> String {
+    format!("unknown session 's{id}' (already closed or evicted)")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sig::StreamTable;
+    use crate::words::WordSpec;
+
+    fn engine(dim: usize, depth: usize, window: usize) -> StreamEngine {
+        let words = WordSpec::Truncated { depth }.words(dim);
+        let table = Arc::new(StreamTable::new(dim, &words));
+        StreamEngine::with_scratch(table, window, StreamScratch::default())
+    }
+
+    fn set(shards: usize) -> ShardSet {
+        let cfg = ShardConfig {
+            shards,
+            ..ShardConfig::default()
+        };
+        ShardSet::new(cfg, Arc::new(Metrics::new()), Arc::new(Pool::default()))
+    }
+
+    #[test]
+    fn lifecycle_roundtrip_across_shards() {
+        for shards in [1, 4] {
+            let s = set(shards);
+            let opened = s.open(engine(1, 2, 2)).unwrap();
+            let id = match opened {
+                StreamReply::Opened { session, out_dim } => {
+                    assert_eq!(out_dim, 2);
+                    session.strip_prefix('s').unwrap().parse::<u64>().unwrap()
+                }
+                other => panic!("{other:?}"),
+            };
+            assert_eq!(s.live_sessions(), 1);
+            match s.push(id, vec![0.0, 1.0, 3.0, 6.0]).unwrap() {
+                StreamReply::Pushed { pushed, seen } => assert_eq!((pushed, seen), (4, 4)),
+                other => panic!("{other:?}"),
+            }
+            match s.window(id, false).unwrap() {
+                StreamReply::Values { result, shape } => {
+                    assert_eq!(shape, vec![2]);
+                    assert!((result[0] - 5.0).abs() < 1e-12);
+                }
+                other => panic!("{other:?}"),
+            }
+            assert_eq!(s.close(id).unwrap(), StreamReply::Closed);
+            assert_eq!(s.live_sessions(), 0);
+            let err = s.close(id).unwrap_err();
+            assert!(err.to_string().contains("unknown session"), "{err}");
+        }
+    }
+
+    #[test]
+    fn admission_cap_is_global_across_shards() {
+        let cfg = ShardConfig {
+            shards: 4,
+            max_sessions: 2,
+            ..ShardConfig::default()
+        };
+        let s = ShardSet::new(cfg, Arc::new(Metrics::new()), Arc::new(Pool::default()));
+        s.open(engine(1, 1, 2)).unwrap();
+        s.open(engine(1, 1, 2)).unwrap();
+        let err = s.open(engine(1, 1, 2)).unwrap_err();
+        assert!(err.to_string().contains("session table full"), "{err}");
+        assert_eq!(s.live_sessions(), 2);
+    }
+
+    #[test]
+    fn full_mailbox_sheds_with_retry_hint() {
+        let cfg = ShardConfig {
+            shards: 1,
+            mailbox_capacity: 2,
+            shed_retry_ms: 7,
+            ..ShardConfig::default()
+        };
+        let s = ShardSet::new(cfg, Arc::new(Metrics::new()), Arc::new(Pool::default()));
+        let id = match s.open(engine(1, 1, 2)).unwrap() {
+            StreamReply::Opened { session, .. } => {
+                session.strip_prefix('s').unwrap().parse::<u64>().unwrap()
+            }
+            other => panic!("{other:?}"),
+        };
+        // Park the worker, then flood the 2-slot mailbox: the stall
+        // occupies the worker, two pushes queue, the next one sheds.
+        s.stall_shard(shard_of(id, 1), Duration::from_millis(300));
+        std::thread::sleep(Duration::from_millis(30)); // worker picks up the stall
+        let sender = {
+            let mut shed = None;
+            for _ in 0..4 {
+                let (reply, _rx) = mpsc::channel();
+                if let Err(e) = s.send(
+                    id,
+                    ShardMsg::Push {
+                        id,
+                        samples: vec![1.0],
+                        reply,
+                    },
+                ) {
+                    shed = Some(e);
+                    break;
+                }
+            }
+            shed
+        };
+        match sender {
+            Some(StreamError::Shed { retry_after_ms }) => assert_eq!(retry_after_ms, 7),
+            other => panic!("expected shed, got {other:?}"),
+        }
+        assert!(s.stats()[0].sheds >= 1);
+    }
+
+    #[test]
+    fn ttl_sweep_is_shard_local() {
+        let cfg = ShardConfig {
+            shards: 2,
+            session_ttl: Duration::from_millis(40),
+            ..ShardConfig::default()
+        };
+        let metrics = Arc::new(Metrics::new());
+        let s = ShardSet::new(cfg, Arc::clone(&metrics), Arc::new(Pool::default()));
+        let id = match s.open(engine(2, 2, 4)).unwrap() {
+            StreamReply::Opened { session, .. } => {
+                session.strip_prefix('s').unwrap().parse::<u64>().unwrap()
+            }
+            other => panic!("{other:?}"),
+        };
+        std::thread::sleep(Duration::from_millis(200));
+        let err = s.push(id, vec![0.0, 0.0]).unwrap_err();
+        assert!(err.to_string().contains("unknown session"), "{err}");
+        assert_eq!(s.live_sessions(), 0);
+        assert_eq!(metrics.sessions_evicted.load(Relaxed), 1);
+    }
+
+    #[test]
+    fn drop_drains_and_joins() {
+        let pool = Arc::new(Pool::default());
+        let cfg = ShardConfig {
+            shards: 3,
+            ..ShardConfig::default()
+        };
+        let s = ShardSet::new(cfg, Arc::new(Metrics::new()), Arc::clone(&pool));
+        for _ in 0..6 {
+            s.open(engine(1, 2, 4)).unwrap();
+        }
+        drop(s); // closes mailboxes, drains, joins, recycles scratch
+        assert_eq!(pool.take_at_least(0).len(), 6);
+    }
+
+    #[test]
+    fn ids_are_global_and_sequential() {
+        let s = set(8);
+        for expect in 1..=16u64 {
+            match s.open(engine(1, 1, 2)).unwrap() {
+                StreamReply::Opened { session, .. } => {
+                    assert_eq!(session, format!("s{expect}"));
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+    }
+}

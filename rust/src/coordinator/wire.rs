@@ -1,0 +1,1079 @@
+//! Wire protocol v2: versioned, length-prefixed binary frames.
+//!
+//! v1 (JSON-lines, [`super::protocol`]) stays fully supported — the
+//! server disambiguates per message on the first byte (`0x02` = a v2
+//! frame; anything else, e.g. `{` = `0x7B`, is a v1 JSON line), so v1
+//! clients keep working against a v2 server unchanged, and a single
+//! connection may even interleave both.
+//!
+//! ## Frame layout
+//!
+//! Every frame — request and response — is
+//!
+//! ```text
+//! ┌──────┬──────────────┬────────────────┬─────────┐
+//! │ 0x02 │ verb/status  │ len: u32 LE    │ payload │
+//! │ u8   │ u8           │ (payload only) │ len B   │
+//! └──────┴──────────────┴────────────────┴─────────┘
+//! ```
+//!
+//! All integers are little-endian; floats are IEEE-754 `f64` bits LE.
+//! `len` counts payload bytes only (the header is always 6 bytes) and
+//! is capped at [`MAX_FRAME_LEN`] — an oversized prefix is answered
+//! with a `bad_frame` error and the connection is closed (the stream
+//! can no longer be trusted to be in sync).
+//!
+//! Request verbs: `ping` 0x01, `stats` 0x02, `signature` 0x03,
+//! `stream_open` 0x10, `stream_push` 0x11, `stream_window` 0x12,
+//! `stream_close` 0x13. Response status: `ok` 0, `err` 1, `shed` 2;
+//! every response payload leads with the request verb it answers.
+//!
+//! The `stats` verb is v2's flagship: it returns per-shard counters
+//! (sessions, mailbox depth, sheds, pushes) from the actor-sharded
+//! session table ([`super::shard`]).
+
+use super::protocol::{Backend, Request, RequestOp, MAX_STREAM_WINDOW};
+use super::shard::ShardStat;
+use crate::words::{generate::sparse_leadlag_generators, Word, WordSpec};
+use std::io::{Read, Write};
+use std::net::TcpStream;
+
+/// The protocol version byte leading every v2 frame.
+pub const WIRE_V2: u8 = 0x02;
+
+/// Upper bound on a frame's payload length (16 MiB). Anything larger
+/// is rejected before allocation as a `bad_frame` error.
+pub const MAX_FRAME_LEN: usize = 1 << 24;
+
+/// Request verb bytes.
+pub mod verb {
+    /// Health check.
+    pub const PING: u8 = 0x01;
+    /// Per-shard coordinator stats.
+    pub const STATS: u8 = 0x02;
+    /// One-shot projected signature.
+    pub const SIGNATURE: u8 = 0x03;
+    /// Open a streaming session.
+    pub const STREAM_OPEN: u8 = 0x10;
+    /// Push samples into a session.
+    pub const STREAM_PUSH: u8 = 0x11;
+    /// Query a session's window/running signature.
+    pub const STREAM_WINDOW: u8 = 0x12;
+    /// Close a session.
+    pub const STREAM_CLOSE: u8 = 0x13;
+}
+
+/// Response status bytes.
+pub mod status {
+    /// Success; payload = verb byte + verb-specific body.
+    pub const OK: u8 = 0;
+    /// Failure; payload = verb, error code, message.
+    pub const ERR: u8 = 1;
+    /// Load-shed; payload = verb, retry-after hint, message.
+    pub const SHED: u8 = 2;
+}
+
+/// Error codes carried in `err` response frames.
+pub mod errcode {
+    /// The frame itself was malformed (bad length, truncated payload,
+    /// trailing bytes). The server closes the connection after this.
+    pub const BAD_FRAME: u8 = 1;
+    /// The frame decoded but the request was invalid (bad dim, window
+    /// over the cap, …).
+    pub const BAD_REQUEST: u8 = 2;
+    /// The addressed session does not exist (closed or evicted).
+    pub const UNKNOWN_SESSION: u8 = 3;
+    /// Unknown verb byte.
+    pub const UNSUPPORTED: u8 = 4;
+    /// The server failed internally.
+    pub const INTERNAL: u8 = 5;
+}
+
+/// Map a service error message onto a wire error code. Error strings
+/// are the stable v1 surface, so matching on them here keeps the two
+/// protocols consistent without a parallel error enum through the
+/// service layer.
+pub fn code_for(msg: &str) -> u8 {
+    if msg.contains("unknown session") {
+        errcode::UNKNOWN_SESSION
+    } else {
+        errcode::BAD_REQUEST
+    }
+}
+
+/// Projection spec as encoded on the wire (tag byte + variant body).
+#[derive(Clone, Debug, PartialEq)]
+pub enum SpecFrame {
+    /// Tag 0: full truncated tensor algebra at the request's depth.
+    Truncated,
+    /// Tag 1: Lyndon-word basis at the request's depth.
+    Lyndon,
+    /// Tag 2: anisotropic weights + cutoff.
+    Anisotropic {
+        /// Per-letter weights (length = dim).
+        gamma: Vec<f64>,
+        /// Weighted-degree cutoff.
+        cutoff: f64,
+    },
+    /// Tag 3: DAG-restricted words (adjacency rows, one per letter).
+    Dag {
+        /// `edges[a]` = letters allowed to follow `a`.
+        edges: Vec<Vec<u16>>,
+    },
+    /// Tag 4: explicit word list.
+    Words {
+        /// The projection's words.
+        words: Vec<Vec<u16>>,
+    },
+    /// Tag 5: sparse lead-lag generator set (§8); alphabet must be
+    /// `2 · base_dim`.
+    SparseLeadLag {
+        /// Base path dimension before lead-lag doubling.
+        base_dim: u32,
+    },
+}
+
+/// A decoded v2 request frame.
+#[derive(Clone, Debug, PartialEq)]
+pub enum RequestFrame {
+    /// Health check.
+    Ping,
+    /// Per-shard stats.
+    Stats,
+    /// One-shot signature of a path.
+    Signature {
+        /// Path dimension.
+        dim: u32,
+        /// Truncation depth.
+        depth: u32,
+        /// Projection.
+        spec: SpecFrame,
+        /// Row-major `(M+1)·dim` samples.
+        path: Vec<f64>,
+    },
+    /// Open a streaming session.
+    StreamOpen {
+        /// Path dimension.
+        dim: u32,
+        /// Truncation depth.
+        depth: u32,
+        /// Sliding-window length in increments.
+        window: u32,
+        /// Projection.
+        spec: SpecFrame,
+    },
+    /// Push samples into session `session`.
+    StreamPush {
+        /// Numeric session id (v1's `"s<N>"` without the prefix).
+        session: u64,
+        /// Flat `(k, dim)` samples.
+        samples: Vec<f64>,
+    },
+    /// Query session `session`'s signature.
+    StreamWindow {
+        /// Numeric session id.
+        session: u64,
+        /// `true` → running `S_{0,t}` instead of the sliding window.
+        full: bool,
+    },
+    /// Close session `session`.
+    StreamClose {
+        /// Numeric session id.
+        session: u64,
+    },
+}
+
+/// A decoded v2 response frame.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ResponseFrame {
+    /// Success.
+    Ok {
+        /// The request verb this answers.
+        verb: u8,
+        /// Verb-specific body.
+        body: OkBody,
+    },
+    /// Failure.
+    Err {
+        /// The request verb this answers (0 if it never decoded).
+        verb: u8,
+        /// One of [`errcode`]'s codes.
+        code: u8,
+        /// Human-readable message.
+        message: String,
+    },
+    /// Load-shed: retry after the hint.
+    Shed {
+        /// The request verb this answers.
+        verb: u8,
+        /// Suggested backoff in milliseconds.
+        retry_after_ms: u32,
+        /// Human-readable message.
+        message: String,
+    },
+}
+
+/// Body of an `ok` response, shaped by the verb it answers.
+#[derive(Clone, Debug, PartialEq)]
+pub enum OkBody {
+    /// `ping` / `stream_close`: no body.
+    Empty,
+    /// `stats`: per-shard counters.
+    Stats(
+        /// One row per shard.
+        Vec<ShardStat>,
+    ),
+    /// `signature` / `stream_window`: shaped values.
+    Values {
+        /// Logical shape.
+        shape: Vec<u32>,
+        /// Flat values.
+        values: Vec<f64>,
+    },
+    /// `stream_open`: the new session.
+    Opened {
+        /// Numeric session id.
+        session: u64,
+        /// Output dimension `|I|`.
+        out_dim: u32,
+    },
+    /// `stream_push`: acknowledgement.
+    Pushed {
+        /// Samples appended by this request.
+        pushed: u64,
+        /// Total samples seen by the session.
+        seen: u64,
+    },
+}
+
+// ---------------------------------------------------------------------
+// Encoding
+// ---------------------------------------------------------------------
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64s(out: &mut Vec<u8>, vs: &[f64]) {
+    put_u32(out, vs.len() as u32);
+    for &v in vs {
+        put_f64(out, v);
+    }
+}
+
+/// Wrap a payload in the 6-byte v2 header.
+pub fn frame(kind: u8, payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(6 + payload.len());
+    out.push(WIRE_V2);
+    out.push(kind);
+    put_u32(&mut out, payload.len() as u32);
+    out.extend_from_slice(payload);
+    out
+}
+
+impl SpecFrame {
+    fn encode_into(&self, out: &mut Vec<u8>) {
+        match self {
+            SpecFrame::Truncated => out.push(0),
+            SpecFrame::Lyndon => out.push(1),
+            SpecFrame::Anisotropic { gamma, cutoff } => {
+                out.push(2);
+                put_f64s(out, gamma);
+                put_f64(out, *cutoff);
+            }
+            SpecFrame::Dag { edges } => {
+                out.push(3);
+                put_u32(out, edges.len() as u32);
+                for row in edges {
+                    put_u32(out, row.len() as u32);
+                    for &l in row {
+                        out.extend_from_slice(&l.to_le_bytes());
+                    }
+                }
+            }
+            SpecFrame::Words { words } => {
+                out.push(4);
+                put_u32(out, words.len() as u32);
+                for w in words {
+                    put_u32(out, w.len() as u32);
+                    for &l in w {
+                        out.extend_from_slice(&l.to_le_bytes());
+                    }
+                }
+            }
+            SpecFrame::SparseLeadLag { base_dim } => {
+                out.push(5);
+                put_u32(out, *base_dim);
+            }
+        }
+    }
+}
+
+impl RequestFrame {
+    /// The verb byte of this request.
+    pub fn verb(&self) -> u8 {
+        match self {
+            RequestFrame::Ping => verb::PING,
+            RequestFrame::Stats => verb::STATS,
+            RequestFrame::Signature { .. } => verb::SIGNATURE,
+            RequestFrame::StreamOpen { .. } => verb::STREAM_OPEN,
+            RequestFrame::StreamPush { .. } => verb::STREAM_PUSH,
+            RequestFrame::StreamWindow { .. } => verb::STREAM_WINDOW,
+            RequestFrame::StreamClose { .. } => verb::STREAM_CLOSE,
+        }
+    }
+
+    /// Encode as a complete frame (header + payload).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut p = Vec::new();
+        match self {
+            RequestFrame::Ping | RequestFrame::Stats => {}
+            RequestFrame::Signature {
+                dim,
+                depth,
+                spec,
+                path,
+            } => {
+                put_u32(&mut p, *dim);
+                put_u32(&mut p, *depth);
+                spec.encode_into(&mut p);
+                put_f64s(&mut p, path);
+            }
+            RequestFrame::StreamOpen {
+                dim,
+                depth,
+                window,
+                spec,
+            } => {
+                put_u32(&mut p, *dim);
+                put_u32(&mut p, *depth);
+                put_u32(&mut p, *window);
+                spec.encode_into(&mut p);
+            }
+            RequestFrame::StreamPush { session, samples } => {
+                put_u64(&mut p, *session);
+                put_f64s(&mut p, samples);
+            }
+            RequestFrame::StreamWindow { session, full } => {
+                put_u64(&mut p, *session);
+                p.push(u8::from(*full));
+            }
+            RequestFrame::StreamClose { session } => {
+                put_u64(&mut p, *session);
+            }
+        }
+        frame(self.verb(), &p)
+    }
+
+    /// Decode a request payload for `verb_byte`. The payload must be
+    /// consumed exactly — trailing bytes are a `bad_frame` error.
+    pub fn decode(verb_byte: u8, payload: &[u8]) -> Result<RequestFrame, String> {
+        let mut c = Cur::new(payload);
+        let req = match verb_byte {
+            verb::PING => RequestFrame::Ping,
+            verb::STATS => RequestFrame::Stats,
+            verb::SIGNATURE => {
+                let dim = c.u32()?;
+                let depth = c.u32()?;
+                let spec = decode_spec(&mut c)?;
+                let path = c.f64s()?;
+                RequestFrame::Signature {
+                    dim,
+                    depth,
+                    spec,
+                    path,
+                }
+            }
+            verb::STREAM_OPEN => {
+                let dim = c.u32()?;
+                let depth = c.u32()?;
+                let window = c.u32()?;
+                let spec = decode_spec(&mut c)?;
+                RequestFrame::StreamOpen {
+                    dim,
+                    depth,
+                    window,
+                    spec,
+                }
+            }
+            verb::STREAM_PUSH => {
+                let session = c.u64()?;
+                let samples = c.f64s()?;
+                RequestFrame::StreamPush { session, samples }
+            }
+            verb::STREAM_WINDOW => {
+                let session = c.u64()?;
+                let full = match c.u8()? {
+                    0 => false,
+                    1 => true,
+                    m => return Err(format!("unknown stream_window mode byte {m}")),
+                };
+                RequestFrame::StreamWindow { session, full }
+            }
+            verb::STREAM_CLOSE => {
+                let session = c.u64()?;
+                RequestFrame::StreamClose { session }
+            }
+            other => return Err(format!("unknown verb byte 0x{other:02x}")),
+        };
+        c.finish()?;
+        Ok(req)
+    }
+
+    /// Lower into the protocol-level [`Request`] the service executes,
+    /// running the same validations v1's JSON parser applies (so both
+    /// protocols reject exactly the same requests).
+    pub fn into_request(self) -> Result<Request, String> {
+        let blank = |op: RequestOp| Request {
+            id: String::new(),
+            op,
+            dim: 0,
+            depth: 0,
+            spec: WordSpec::Truncated { depth: 0 },
+            backend: Backend::Auto,
+            path: Vec::new(),
+            windows: Vec::new(),
+            session: String::new(),
+            samples: Vec::new(),
+            window_len: 0,
+            full: false,
+        };
+        match self {
+            RequestFrame::Ping => Ok(blank(RequestOp::Ping)),
+            RequestFrame::Stats => Ok(blank(RequestOp::Stats)),
+            RequestFrame::Signature {
+                dim,
+                depth,
+                spec,
+                path,
+            } => {
+                let (dim, depth) = (dim as usize, depth as usize);
+                if dim == 0 {
+                    return Err("dim must be ≥ 1".into());
+                }
+                if path.is_empty() || path.len() % dim != 0 {
+                    return Err(format!(
+                        "path must be a non-empty flat (M+1)·dim array (got {} floats, dim {})",
+                        path.len(),
+                        dim
+                    ));
+                }
+                let mut req = blank(RequestOp::Signature);
+                req.dim = dim;
+                req.depth = depth;
+                req.spec = spec.into_word_spec(depth, dim)?;
+                req.path = path;
+                Ok(req)
+            }
+            RequestFrame::StreamOpen {
+                dim,
+                depth,
+                window,
+                spec,
+            } => {
+                let (dim, depth, window) = (dim as usize, depth as usize, window as usize);
+                if dim == 0 {
+                    return Err("dim must be ≥ 1".into());
+                }
+                if window == 0 {
+                    return Err("'window' must be ≥ 1".into());
+                }
+                if window > MAX_STREAM_WINDOW {
+                    return Err(format!(
+                        "'window' {window} exceeds the server cap {MAX_STREAM_WINDOW}"
+                    ));
+                }
+                let mut req = blank(RequestOp::StreamOpen);
+                req.dim = dim;
+                req.depth = depth;
+                req.spec = spec.into_word_spec(depth, dim)?;
+                req.window_len = window;
+                Ok(req)
+            }
+            RequestFrame::StreamPush { session, samples } => {
+                if samples.is_empty() {
+                    return Err("stream_push needs a non-empty 'samples' array".into());
+                }
+                let mut req = blank(RequestOp::StreamPush);
+                req.session = format!("s{session}");
+                req.samples = samples;
+                Ok(req)
+            }
+            RequestFrame::StreamWindow { session, full } => {
+                let mut req = blank(RequestOp::StreamWindow);
+                req.session = format!("s{session}");
+                req.full = full;
+                Ok(req)
+            }
+            RequestFrame::StreamClose { session } => {
+                let mut req = blank(RequestOp::StreamClose);
+                req.session = format!("s{session}");
+                Ok(req)
+            }
+        }
+    }
+}
+
+impl SpecFrame {
+    /// Lower into a [`WordSpec`], applying the same validation v1's
+    /// projection parser applies.
+    pub fn into_word_spec(self, depth: usize, dim: usize) -> Result<WordSpec, String> {
+        match self {
+            SpecFrame::Truncated => Ok(WordSpec::Truncated { depth }),
+            SpecFrame::Lyndon => Ok(WordSpec::Lyndon { depth }),
+            SpecFrame::Anisotropic { gamma, cutoff } => {
+                if gamma.len() != dim {
+                    return Err(format!(
+                        "anisotropic projection needs {dim} weights, got {}",
+                        gamma.len()
+                    ));
+                }
+                if gamma.iter().any(|&g| g <= 0.0) {
+                    return Err("anisotropic weights must be positive".into());
+                }
+                Ok(WordSpec::Anisotropic { gamma, cutoff })
+            }
+            SpecFrame::Dag { edges } => {
+                if edges.len() != dim {
+                    return Err(format!("dag needs {dim} adjacency rows"));
+                }
+                if edges.iter().flatten().any(|&l| l as usize >= dim) {
+                    return Err("dag edge letter out of range".into());
+                }
+                Ok(WordSpec::Dag { depth, edges })
+            }
+            SpecFrame::Words { words } => {
+                if words.is_empty() {
+                    return Err("words projection needs a non-empty list".into());
+                }
+                for w in &words {
+                    if w.is_empty() {
+                        return Err("empty word in projection".into());
+                    }
+                    if w.iter().any(|&l| l as usize >= dim) {
+                        return Err("word letter out of range".into());
+                    }
+                }
+                Ok(WordSpec::Custom {
+                    words: words.into_iter().map(Word).collect(),
+                })
+            }
+            SpecFrame::SparseLeadLag { base_dim } => {
+                let base = base_dim as usize;
+                if 2 * base != dim {
+                    return Err(format!(
+                        "sparse_leadlag: dim must be 2·base_dim (dim={dim}, base={base})"
+                    ));
+                }
+                Ok(WordSpec::ConcatGenerated {
+                    depth,
+                    generators: sparse_leadlag_generators(base),
+                })
+            }
+        }
+    }
+}
+
+fn decode_spec(c: &mut Cur<'_>) -> Result<SpecFrame, String> {
+    Ok(match c.u8()? {
+        0 => SpecFrame::Truncated,
+        1 => SpecFrame::Lyndon,
+        2 => {
+            let gamma = c.f64s()?;
+            let cutoff = c.f64()?;
+            SpecFrame::Anisotropic { gamma, cutoff }
+        }
+        3 => {
+            let rows = c.u32()? as usize;
+            let mut edges = Vec::new();
+            for _ in 0..rows {
+                edges.push(c.u16s()?);
+            }
+            SpecFrame::Dag { edges }
+        }
+        4 => {
+            let count = c.u32()? as usize;
+            let mut words = Vec::new();
+            for _ in 0..count {
+                words.push(c.u16s()?);
+            }
+            SpecFrame::Words { words }
+        }
+        5 => SpecFrame::SparseLeadLag { base_dim: c.u32()? },
+        t => return Err(format!("unknown projection tag {t}")),
+    })
+}
+
+impl ResponseFrame {
+    /// Encode as a complete frame (header + payload).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut p = Vec::new();
+        let kind = match self {
+            ResponseFrame::Ok { verb: v, body } => {
+                p.push(*v);
+                match body {
+                    OkBody::Empty => {}
+                    OkBody::Stats(rows) => {
+                        put_u32(&mut p, rows.len() as u32);
+                        for r in rows {
+                            put_u32(&mut p, r.shard as u32);
+                            put_u64(&mut p, r.sessions);
+                            put_u64(&mut p, r.mailbox_depth);
+                            put_u64(&mut p, r.sheds);
+                            put_u64(&mut p, r.pushes);
+                        }
+                    }
+                    OkBody::Values { shape, values } => {
+                        put_u32(&mut p, shape.len() as u32);
+                        for &s in shape {
+                            put_u32(&mut p, s);
+                        }
+                        put_f64s(&mut p, values);
+                    }
+                    OkBody::Opened { session, out_dim } => {
+                        put_u64(&mut p, *session);
+                        put_u32(&mut p, *out_dim);
+                    }
+                    OkBody::Pushed { pushed, seen } => {
+                        put_u64(&mut p, *pushed);
+                        put_u64(&mut p, *seen);
+                    }
+                }
+                status::OK
+            }
+            ResponseFrame::Err {
+                verb: v,
+                code,
+                message,
+            } => {
+                p.push(*v);
+                p.push(*code);
+                put_u32(&mut p, message.len() as u32);
+                p.extend_from_slice(message.as_bytes());
+                status::ERR
+            }
+            ResponseFrame::Shed {
+                verb: v,
+                retry_after_ms,
+                message,
+            } => {
+                p.push(*v);
+                put_u32(&mut p, *retry_after_ms);
+                put_u32(&mut p, message.len() as u32);
+                p.extend_from_slice(message.as_bytes());
+                status::SHED
+            }
+        };
+        frame(kind, &p)
+    }
+
+    /// Decode a response payload for `status_byte`. Ok bodies are
+    /// shaped by the verb byte leading the payload.
+    pub fn decode(status_byte: u8, payload: &[u8]) -> Result<ResponseFrame, String> {
+        let mut c = Cur::new(payload);
+        let resp = match status_byte {
+            status::OK => {
+                let v = c.u8()?;
+                let body = match v {
+                    verb::PING | verb::STREAM_CLOSE => OkBody::Empty,
+                    verb::STATS => {
+                        let n = c.u32()? as usize;
+                        let mut rows = Vec::new();
+                        for _ in 0..n {
+                            rows.push(ShardStat {
+                                shard: c.u32()? as usize,
+                                sessions: c.u64()?,
+                                mailbox_depth: c.u64()?,
+                                sheds: c.u64()?,
+                                pushes: c.u64()?,
+                            });
+                        }
+                        OkBody::Stats(rows)
+                    }
+                    verb::SIGNATURE | verb::STREAM_WINDOW => {
+                        let n = c.u32()? as usize;
+                        let mut shape = Vec::new();
+                        for _ in 0..n {
+                            shape.push(c.u32()?);
+                        }
+                        let values = c.f64s()?;
+                        OkBody::Values { shape, values }
+                    }
+                    verb::STREAM_OPEN => OkBody::Opened {
+                        session: c.u64()?,
+                        out_dim: c.u32()?,
+                    },
+                    verb::STREAM_PUSH => OkBody::Pushed {
+                        pushed: c.u64()?,
+                        seen: c.u64()?,
+                    },
+                    other => return Err(format!("unknown ok verb byte 0x{other:02x}")),
+                };
+                ResponseFrame::Ok { verb: v, body }
+            }
+            status::ERR => {
+                let v = c.u8()?;
+                let code = c.u8()?;
+                let message = c.string()?;
+                ResponseFrame::Err {
+                    verb: v,
+                    code,
+                    message,
+                }
+            }
+            status::SHED => {
+                let v = c.u8()?;
+                let retry_after_ms = c.u32()?;
+                let message = c.string()?;
+                ResponseFrame::Shed {
+                    verb: v,
+                    retry_after_ms,
+                    message,
+                }
+            }
+            other => return Err(format!("unknown status byte 0x{other:02x}")),
+        };
+        c.finish()?;
+        Ok(resp)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Byte cursor
+// ---------------------------------------------------------------------
+
+/// Bounds-checked little-endian reader over a frame payload. Every
+/// length is validated against the remaining bytes *before* any
+/// allocation, so a hostile length field cannot trigger an OOM.
+struct Cur<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn new(b: &'a [u8]) -> Cur<'a> {
+        Cur { b, i: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.b.len() - self.i < n {
+            return Err("truncated frame payload".into());
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64, String> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64s(&mut self) -> Result<Vec<f64>, String> {
+        let n = self.u32()? as usize;
+        let bytes = self.take(n.checked_mul(8).ok_or("count overflow")?)?;
+        Ok(bytes
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn u16s(&mut self) -> Result<Vec<u16>, String> {
+        let n = self.u32()? as usize;
+        let bytes = self.take(n.checked_mul(2).ok_or("count overflow")?)?;
+        Ok(bytes
+            .chunks_exact(2)
+            .map(|c| u16::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        let n = self.u32()? as usize;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| "non-utf8 string".to_string())
+    }
+
+    fn finish(&self) -> Result<(), String> {
+        if self.i == self.b.len() {
+            Ok(())
+        } else {
+            Err(format!(
+                "trailing bytes in frame payload ({} unread)",
+                self.b.len() - self.i
+            ))
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Binary client
+// ---------------------------------------------------------------------
+
+/// Minimal blocking v2 client (tests, benches, and the CLI). The v1
+/// JSON client is [`super::server::Client`].
+pub struct WireClient {
+    stream: TcpStream,
+}
+
+impl WireClient {
+    /// Open a TCP connection to a running feature server.
+    pub fn connect(addr: &str) -> std::io::Result<WireClient> {
+        Ok(WireClient {
+            stream: TcpStream::connect(addr)?,
+        })
+    }
+
+    /// Send one request frame, read one response frame back.
+    pub fn call(&mut self, req: &RequestFrame) -> std::io::Result<ResponseFrame> {
+        self.stream.write_all(&req.encode())?;
+        read_response(&mut self.stream)
+    }
+}
+
+/// Read one complete response frame from `r`.
+pub fn read_response(r: &mut impl Read) -> std::io::Result<ResponseFrame> {
+    let mut header = [0u8; 6];
+    r.read_exact(&mut header)?;
+    let bad = |m: String| std::io::Error::new(std::io::ErrorKind::InvalidData, m);
+    if header[0] != WIRE_V2 {
+        return Err(bad(format!("bad version byte 0x{:02x}", header[0])));
+    }
+    let len = u32::from_le_bytes(header[2..6].try_into().unwrap()) as usize;
+    if len > MAX_FRAME_LEN {
+        return Err(bad(format!("frame length {len} exceeds cap")));
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    ResponseFrame::decode(header[1], &payload).map_err(bad)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_req(f: RequestFrame) {
+        let bytes = f.encode();
+        assert_eq!(bytes[0], WIRE_V2);
+        assert_eq!(bytes[1], f.verb());
+        let len = u32::from_le_bytes(bytes[2..6].try_into().unwrap()) as usize;
+        assert_eq!(len, bytes.len() - 6);
+        let back = RequestFrame::decode(bytes[1], &bytes[6..]).unwrap();
+        assert_eq!(back, f);
+    }
+
+    #[test]
+    fn request_frames_roundtrip() {
+        roundtrip_req(RequestFrame::Ping);
+        roundtrip_req(RequestFrame::Stats);
+        roundtrip_req(RequestFrame::Signature {
+            dim: 2,
+            depth: 3,
+            spec: SpecFrame::Truncated,
+            path: vec![0.0, 0.0, 1.0, 0.5],
+        });
+        roundtrip_req(RequestFrame::Signature {
+            dim: 2,
+            depth: 4,
+            spec: SpecFrame::Anisotropic {
+                gamma: vec![1.0, 2.0],
+                cutoff: 3.5,
+            },
+            path: vec![0.0, 0.0, 1.0, 1.0],
+        });
+        roundtrip_req(RequestFrame::Signature {
+            dim: 2,
+            depth: 2,
+            spec: SpecFrame::Dag {
+                edges: vec![vec![0, 1], vec![1]],
+            },
+            path: vec![0.0, 0.0, 1.0, 1.0],
+        });
+        roundtrip_req(RequestFrame::Signature {
+            dim: 2,
+            depth: 2,
+            spec: SpecFrame::Words {
+                words: vec![vec![0, 1], vec![1]],
+            },
+            path: vec![0.0, 0.0, 1.0, 1.0],
+        });
+        roundtrip_req(RequestFrame::Signature {
+            dim: 4,
+            depth: 2,
+            spec: SpecFrame::SparseLeadLag { base_dim: 2 },
+            path: vec![0.0; 8],
+        });
+        roundtrip_req(RequestFrame::StreamOpen {
+            dim: 1,
+            depth: 2,
+            window: 16,
+            spec: SpecFrame::Lyndon,
+        });
+        roundtrip_req(RequestFrame::StreamPush {
+            session: 7,
+            samples: vec![0.25, -1.5],
+        });
+        roundtrip_req(RequestFrame::StreamWindow {
+            session: 7,
+            full: true,
+        });
+        roundtrip_req(RequestFrame::StreamClose { session: 7 });
+    }
+
+    #[test]
+    fn response_frames_roundtrip() {
+        let cases = vec![
+            ResponseFrame::Ok {
+                verb: verb::PING,
+                body: OkBody::Empty,
+            },
+            ResponseFrame::Ok {
+                verb: verb::STATS,
+                body: OkBody::Stats(vec![ShardStat {
+                    shard: 0,
+                    sessions: 3,
+                    mailbox_depth: 1,
+                    sheds: 0,
+                    pushes: 42,
+                }]),
+            },
+            ResponseFrame::Ok {
+                verb: verb::STREAM_WINDOW,
+                body: OkBody::Values {
+                    shape: vec![2],
+                    values: vec![5.0, 12.5],
+                },
+            },
+            ResponseFrame::Ok {
+                verb: verb::STREAM_OPEN,
+                body: OkBody::Opened {
+                    session: 9,
+                    out_dim: 6,
+                },
+            },
+            ResponseFrame::Ok {
+                verb: verb::STREAM_PUSH,
+                body: OkBody::Pushed { pushed: 4, seen: 8 },
+            },
+            ResponseFrame::Err {
+                verb: verb::STREAM_PUSH,
+                code: errcode::UNKNOWN_SESSION,
+                message: "unknown session 's9' (already closed or evicted)".into(),
+            },
+            ResponseFrame::Shed {
+                verb: verb::STREAM_PUSH,
+                retry_after_ms: 25,
+                message: "overloaded; retry after 25 ms".into(),
+            },
+        ];
+        for f in cases {
+            let bytes = f.encode();
+            let back = ResponseFrame::decode(bytes[1], &bytes[6..]).unwrap();
+            assert_eq!(back, f);
+        }
+    }
+
+    #[test]
+    fn decoder_rejects_malformed() {
+        // Truncated payload.
+        assert!(RequestFrame::decode(verb::STREAM_CLOSE, &[1, 2, 3]).is_err());
+        // Trailing bytes.
+        let mut bytes = RequestFrame::StreamClose { session: 1 }.encode();
+        bytes.push(0xFF);
+        assert!(RequestFrame::decode(bytes[1], &bytes[6..]).is_err());
+        // Unknown verb.
+        assert!(RequestFrame::decode(0x77, &[]).is_err());
+        // Hostile count field: claims 2^31 floats in a 12-byte payload.
+        let mut p = Vec::new();
+        p.extend_from_slice(&7u64.to_le_bytes());
+        p.extend_from_slice(&0x8000_0000u32.to_le_bytes());
+        assert!(RequestFrame::decode(verb::STREAM_PUSH, &p).is_err());
+        // Bad projection tag.
+        let mut p = Vec::new();
+        p.extend_from_slice(&2u32.to_le_bytes());
+        p.extend_from_slice(&2u32.to_le_bytes());
+        p.push(9); // tag 9 does not exist
+        assert!(RequestFrame::decode(verb::SIGNATURE, &p).is_err());
+    }
+
+    #[test]
+    fn into_request_validates_like_v1() {
+        // dim 0.
+        assert!(RequestFrame::Signature {
+            dim: 0,
+            depth: 2,
+            spec: SpecFrame::Truncated,
+            path: vec![1.0],
+        }
+        .into_request()
+        .is_err());
+        // Path not divisible by dim.
+        assert!(RequestFrame::Signature {
+            dim: 2,
+            depth: 2,
+            spec: SpecFrame::Truncated,
+            path: vec![1.0, 2.0, 3.0],
+        }
+        .into_request()
+        .is_err());
+        // Window over the cap.
+        assert!(RequestFrame::StreamOpen {
+            dim: 1,
+            depth: 2,
+            window: (MAX_STREAM_WINDOW + 1) as u32,
+            spec: SpecFrame::Truncated,
+        }
+        .into_request()
+        .is_err());
+        // Empty push.
+        assert!(RequestFrame::StreamPush {
+            session: 1,
+            samples: vec![],
+        }
+        .into_request()
+        .is_err());
+        // Anisotropic gamma length mismatch.
+        assert!(RequestFrame::Signature {
+            dim: 2,
+            depth: 2,
+            spec: SpecFrame::Anisotropic {
+                gamma: vec![1.0],
+                cutoff: 2.0,
+            },
+            path: vec![0.0, 0.0, 1.0, 1.0],
+        }
+        .into_request()
+        .is_err());
+        // Session handles are canonical.
+        let req = RequestFrame::StreamClose { session: 7 }.into_request().unwrap();
+        assert_eq!(req.session, "s7");
+        assert_eq!(req.op, RequestOp::StreamClose);
+    }
+
+    #[test]
+    fn error_code_mapping() {
+        assert_eq!(
+            code_for("unknown session 's1' (already closed or evicted)"),
+            errcode::UNKNOWN_SESSION
+        );
+        assert_eq!(code_for("dim must be ≥ 1"), errcode::BAD_REQUEST);
+    }
+}

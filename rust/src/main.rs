@@ -3,6 +3,7 @@
 //! ```text
 //! pathsig serve        [--addr 127.0.0.1:7717] [--artifacts artifacts/]
 //!                      [--max-batch 32] [--max-wait-ms 2]
+//!                      [--shards 0] [--mailbox-cap 256] [--session-ttl-s 300]
 //! pathsig compute      --dim D --depth N [--steps M] [--seed S]
 //!                      [--projection trunc|lyndon] [--json]
 //! pathsig logsig       --dim D --depth N [--steps M] [--seed S]
@@ -71,7 +72,14 @@ fn load_runtime(args: &Args) -> Option<Arc<Runtime>> {
 
 fn cmd_serve(args: &Args) -> i32 {
     let runtime = load_runtime(args);
-    let service = Arc::new(SigService::new(runtime));
+    let mut service = SigService::new(runtime);
+    // Sharded session table: 0 = auto (available parallelism, capped
+    // at 8). The shard set spins up on the first stream op.
+    service.shard_count = args.usize("shards", 0);
+    service.mailbox_capacity = args.usize("mailbox-cap", 256);
+    service.session_ttl = std::time::Duration::from_secs(args.u64("session-ttl-s", 300));
+    service.max_sessions = args.usize("max-sessions", 1024);
+    let service = Arc::new(service);
     let config = ServerConfig {
         addr: args.str_or("addr", "127.0.0.1:7717").to_string(),
         batcher: BatcherConfig {

@@ -292,6 +292,130 @@ fn stream_fuzzed_frames_never_kill_the_server() {
 }
 
 #[test]
+fn sharded_and_single_table_coordinators_are_equivalent() {
+    // ISSUE 6 tentpole property: the same interleaved session script,
+    // run against coordinators with 1, 4 and 8 shards, must produce
+    // identical observable behaviour — same session handles (ids are
+    // globally sequential, independent of the shard layout), identical
+    // signature bytes, same error strings, and the same live-session
+    // count at every step. With 8 shards and dozens of sessions the
+    // script exercises same-shard collisions by construction
+    // (pigeonhole), so shard-local ownership is covered too.
+    use pathsig::coordinator::StreamReply;
+    use pathsig::util::rng::Rng;
+
+    #[derive(Clone, Debug)]
+    enum Op {
+        Open { dim: usize, depth: usize, window: usize },
+        Push { slot: usize, samples: Vec<f64> },
+        Window { slot: usize, full: bool },
+        Close { slot: usize },
+    }
+
+    // One deterministic script over "slots" (the k-th opened session),
+    // including re-use of closed slots (unknown-session errors) so the
+    // error surface is compared as well.
+    let mut rng = Rng::new(0xC0DE6);
+    let mut script = Vec::new();
+    let mut opened = 0usize;
+    for k in 0..24 {
+        let dim = 1 + k % 3;
+        script.push(Op::Open {
+            dim,
+            depth: 1 + k % 2,
+            window: 2 + k % 4,
+        });
+        opened += 1;
+        for _ in 0..rng.range(1, 4) {
+            let slot = rng.below(opened);
+            let dim = 1 + slot % 3; // matches the slot's open dim
+            match rng.below(4) {
+                0 => {
+                    let n = rng.range(1, 3) * dim;
+                    let samples: Vec<f64> =
+                        (0..n).map(|_| (rng.gaussian() * 64.0).round() / 16.0).collect();
+                    script.push(Op::Push { slot, samples });
+                }
+                1 => script.push(Op::Window { slot, full: false }),
+                2 => script.push(Op::Window { slot, full: true }),
+                _ => script.push(Op::Close { slot }),
+            }
+        }
+    }
+
+    let run = |shards: usize| -> (Vec<Result<StreamReply, String>>, Vec<usize>) {
+        let svc = SigService::with_shards(None, shards);
+        let mut handles: Vec<String> = Vec::new();
+        let mut log = Vec::new();
+        let mut counts = Vec::new();
+        for op in &script {
+            let line = match op {
+                Op::Open { dim, depth, window } => format!(
+                    r#"{{"op":"stream_open","dim":{dim},"depth":{depth},"window":{window}}}"#
+                ),
+                Op::Push { slot, samples } => {
+                    let s: Vec<String> = samples.iter().map(|x| format!("{x}")).collect();
+                    format!(
+                        r#"{{"op":"stream_push","session":"{}","samples":[{}]}}"#,
+                        handles[*slot],
+                        s.join(",")
+                    )
+                }
+                Op::Window { slot, full } => format!(
+                    r#"{{"op":"stream_window","session":"{}"{}}}"#,
+                    handles[*slot],
+                    if *full { r#","mode":"full""# } else { "" }
+                ),
+                Op::Close { slot } => format!(
+                    r#"{{"op":"stream_close","session":"{}"}}"#,
+                    handles[*slot]
+                ),
+            };
+            let reply = svc
+                .execute_stream(&parse_request(&line).unwrap())
+                .map_err(|e| e.to_string());
+            if let Ok(StreamReply::Opened { session, .. }) = &reply {
+                handles.push(session.clone());
+            }
+            log.push(reply);
+            counts.push(svc.session_count());
+        }
+        (log, counts)
+    };
+
+    let (base_log, base_counts) = run(1);
+    // Sanity on the baseline: the script produced real values, real
+    // pushes, and at least one unknown-session error.
+    assert!(base_log.iter().any(|r| matches!(r, Ok(StreamReply::Values { .. }))));
+    assert!(base_log.iter().any(|r| matches!(r, Ok(StreamReply::Pushed { .. }))));
+    assert!(base_log
+        .iter()
+        .any(|r| matches!(r, Err(e) if e.contains("unknown session"))));
+    for shards in [4usize, 8] {
+        let (log, counts) = run(shards);
+        assert_eq!(
+            base_counts, counts,
+            "live-session counts diverge on {shards} shards"
+        );
+        for (i, (a, b)) in base_log.iter().zip(&log).enumerate() {
+            match (a, b) {
+                (Ok(StreamReply::Values { result: ra, shape: sa }),
+                 Ok(StreamReply::Values { result: rb, shape: sb })) => {
+                    assert_eq!(sa, sb, "step {i}: shape diverges on {shards} shards");
+                    for (x, y) in ra.iter().zip(rb) {
+                        assert!(
+                            (x - y).abs() < 1e-12,
+                            "step {i}: values diverge on {shards} shards ({x} vs {y})"
+                        );
+                    }
+                }
+                _ => assert_eq!(a, b, "step {i}: replies diverge on {shards} shards"),
+            }
+        }
+    }
+}
+
+#[test]
 fn service_word_spec_cache_correctness() {
     // Anisotropic + DAG + custom specs through the service agree with
     // directly-built engines.

@@ -1,0 +1,294 @@
+//! Wire-protocol fuzzing against a live server (ISSUE 6 satellite).
+//!
+//! A seeded xorshift-style generator ([`pathsig::util::rng::Rng`],
+//! splitmix-seeded xorshift core) takes *valid* v1 JSON lines and v2
+//! binary frames and mutates them — truncation, bit flips, oversized
+//! length prefixes, wrong version bytes, random splices — then fires
+//! each mutant at a real TCP server. The contract under fuzz:
+//!
+//! 1. the server never panics (checked by staying serviceable);
+//! 2. everything it writes back is well-formed — parseable v1 JSON
+//!    lines or decodable v2 frames, never a torn byte stream;
+//! 3. a connection either gets answers or is closed cleanly;
+//! 4. after the barrage, a fresh client can still run a full
+//!    streaming-session lifecycle.
+
+use pathsig::coordinator::wire::{self, RequestFrame, ResponseFrame, SpecFrame, WireClient};
+use pathsig::coordinator::{serve, BatcherConfig, ServerConfig, SigService};
+use pathsig::coordinator::server::Client;
+use pathsig::util::json::Json;
+use pathsig::util::rng::Rng;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn start_server() -> (pathsig::coordinator::server::ServerHandle, String) {
+    let mut service = SigService::new(None);
+    service.shard_count = 2;
+    let handle = serve(
+        Arc::new(service),
+        ServerConfig {
+            addr: "127.0.0.1:0".to_string(),
+            batcher: BatcherConfig {
+                max_batch: 8,
+                max_wait: Duration::from_millis(1),
+                ..BatcherConfig::default()
+            },
+        },
+    )
+    .unwrap();
+    let addr = handle.addr.to_string();
+    (handle, addr)
+}
+
+/// Valid v1 lines used as mutation seeds.
+fn v1_corpus() -> Vec<Vec<u8>> {
+    [
+        r#"{"op":"ping","id":"f1"}"#,
+        r#"{"op":"stats"}"#,
+        r#"{"op":"metrics"}"#,
+        r#"{"op":"signature","dim":2,"depth":2,"path":[0,0,1,0,1,1]}"#,
+        r#"{"op":"signature","dim":2,"depth":3,"projection":{"type":"lyndon"},"path":[0,0,1,1]}"#,
+        r#"{"op":"logsig","dim":2,"depth":2,"path":[0,0,1,1]}"#,
+        r#"{"op":"windowed","dim":1,"depth":2,"windows":[[0,2]],"path":[0,1,2]}"#,
+        r#"{"op":"stream_open","dim":1,"depth":2,"window":4}"#,
+        r#"{"op":"stream_push","session":"s1","samples":[0.5,1.5]}"#,
+        r#"{"op":"stream_window","session":"s1"}"#,
+        r#"{"op":"stream_window","session":"s1","mode":"full"}"#,
+        r#"{"op":"stream_close","session":"s1"}"#,
+    ]
+    .iter()
+    .map(|s| {
+        let mut b = s.as_bytes().to_vec();
+        b.push(b'\n');
+        b
+    })
+    .collect()
+}
+
+/// Valid v2 frames used as mutation seeds.
+fn v2_corpus() -> Vec<Vec<u8>> {
+    vec![
+        RequestFrame::Ping.encode(),
+        RequestFrame::Stats.encode(),
+        RequestFrame::Signature {
+            dim: 2,
+            depth: 2,
+            spec: SpecFrame::Truncated,
+            path: vec![0.0, 0.0, 1.0, 0.0, 1.0, 1.0],
+        }
+        .encode(),
+        RequestFrame::Signature {
+            dim: 2,
+            depth: 2,
+            spec: SpecFrame::Anisotropic {
+                gamma: vec![1.0, 2.0],
+                cutoff: 2.0,
+            },
+            path: vec![0.0, 0.0, 1.0, 1.0],
+        }
+        .encode(),
+        RequestFrame::StreamOpen {
+            dim: 1,
+            depth: 2,
+            window: 4,
+            spec: SpecFrame::Truncated,
+        }
+        .encode(),
+        RequestFrame::StreamPush {
+            session: 1,
+            samples: vec![0.5, 1.5],
+        }
+        .encode(),
+        RequestFrame::StreamWindow {
+            session: 1,
+            full: false,
+        }
+        .encode(),
+        RequestFrame::StreamClose { session: 1 }.encode(),
+    ]
+}
+
+/// Mutate one seed into an adversarial byte string.
+fn mutate(rng: &mut Rng, seed: &[u8]) -> Vec<u8> {
+    let mut b = seed.to_vec();
+    match rng.below(6) {
+        // Truncate at a random point (torn frame / cut-off line).
+        0 => {
+            let keep = rng.below(b.len().max(1));
+            b.truncate(keep);
+        }
+        // Flip 1–8 random bits.
+        1 => {
+            for _ in 0..rng.range(1, 9) {
+                if b.is_empty() {
+                    break;
+                }
+                let i = rng.below(b.len());
+                b[i] ^= 1 << rng.below(8);
+            }
+        }
+        // Oversized / hostile length prefix on a v2 frame (or splice
+        // one onto a v1 line).
+        2 => {
+            let huge = (rng.next_u64() as u32) | 0x0100_0000; // > MAX_FRAME_LEN
+            if b.len() >= 6 && b[0] == wire::WIRE_V2 {
+                b[2..6].copy_from_slice(&huge.to_le_bytes());
+            } else {
+                let mut f = vec![wire::WIRE_V2, 0x01];
+                f.extend_from_slice(&huge.to_le_bytes());
+                b = f;
+            }
+        }
+        // Wrong version byte / verb byte.
+        3 => {
+            if !b.is_empty() {
+                b[0] = rng.below(256) as u8;
+            }
+        }
+        // Splice two seeds' halves together.
+        4 => {
+            let cut = rng.below(b.len().max(1));
+            b.truncate(cut);
+            b.extend((0..rng.below(32)).map(|_| rng.below(256) as u8));
+        }
+        // Pure random garbage.
+        _ => {
+            b = (0..rng.range(1, 64)).map(|_| rng.below(256) as u8).collect();
+        }
+    }
+    b
+}
+
+/// Everything the server wrote back must be a well-formed sequence of
+/// v1 JSON lines and/or v2 response frames — a torn or unparseable
+/// byte stream fails the fuzz case.
+fn assert_well_formed_responses(bytes: &[u8]) {
+    let mut rest = bytes;
+    while !rest.is_empty() {
+        if rest[0] == wire::WIRE_V2 {
+            let mut cur = rest;
+            let resp = wire::read_response(&mut cur)
+                .unwrap_or_else(|e| panic!("torn v2 response frame: {e} in {rest:?}"));
+            match resp {
+                ResponseFrame::Ok { .. }
+                | ResponseFrame::Err { .. }
+                | ResponseFrame::Shed { .. } => {}
+            }
+            rest = cur;
+        } else {
+            let nl = rest
+                .iter()
+                .position(|&c| c == b'\n')
+                .unwrap_or_else(|| panic!("v1 response without newline: {rest:?}"));
+            let line = std::str::from_utf8(&rest[..nl]).expect("v1 response is utf8");
+            let j = Json::parse(line).unwrap_or_else(|e| panic!("bad v1 response {line:?}: {e}"));
+            assert!(j.get("ok").as_bool().is_some(), "response lacks ok: {line}");
+            rest = &rest[nl + 1..];
+        }
+    }
+}
+
+/// Fire one byte string at the server; return what it wrote back.
+fn fire(addr: &str, payload: &[u8]) -> Vec<u8> {
+    let mut s = TcpStream::connect(addr).expect("server accepting connections");
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    // A mutant may be a half-frame the server waits on forever; closing
+    // our write half gives it EOF so the connection always winds down.
+    let _ = s.write_all(payload);
+    let _ = s.shutdown(std::net::Shutdown::Write);
+    let mut out = Vec::new();
+    s.read_to_end(&mut out)
+        .expect("server must answer or close, never hang");
+    out
+}
+
+/// Full streaming lifecycle on both protocols — the serviceability
+/// probe between fuzz rounds.
+fn assert_serviceable(addr: &str) {
+    // v1.
+    let mut c = Client::connect(addr).expect("v1 connect");
+    let pong = c.call(r#"{"op":"ping"}"#).unwrap();
+    assert_eq!(pong.get("ok").as_bool(), Some(true));
+    let opened = c
+        .call(r#"{"op":"stream_open","dim":1,"depth":2,"window":2}"#)
+        .unwrap();
+    assert_eq!(opened.get("ok").as_bool(), Some(true), "{opened:?}");
+    let session = opened.get("body").get("session").as_str().unwrap().to_string();
+    c.call(&format!(
+        r#"{{"op":"stream_push","session":"{session}","samples":[0,1,3]}}"#
+    ))
+    .unwrap();
+    let win = c
+        .call(&format!(r#"{{"op":"stream_window","session":"{session}"}}"#))
+        .unwrap();
+    assert_eq!(win.get("ok").as_bool(), Some(true), "{win:?}");
+    let vals = win.f64_vec("result");
+    assert!((vals[0] - 3.0).abs() < 1e-9, "{vals:?}");
+    c.call(&format!(r#"{{"op":"stream_close","session":"{session}"}}"#))
+        .unwrap();
+    // v2.
+    let mut w = WireClient::connect(addr).expect("v2 connect");
+    match w.call(&RequestFrame::Ping).unwrap() {
+        ResponseFrame::Ok { .. } => {}
+        other => panic!("v2 ping failed after fuzzing: {other:?}"),
+    }
+    match w.call(&RequestFrame::Stats).unwrap() {
+        ResponseFrame::Ok { .. } => {}
+        other => panic!("v2 stats failed after fuzzing: {other:?}"),
+    }
+}
+
+#[test]
+fn fuzzed_frames_never_take_the_server_down() {
+    let (handle, addr) = start_server();
+    let seeds: Vec<Vec<u8>> = v1_corpus().into_iter().chain(v2_corpus()).collect();
+    let mut rng = Rng::new(0xF422);
+    for round in 0..240 {
+        let seed = &seeds[rng.below(seeds.len())];
+        let mutant = mutate(&mut rng, seed);
+        let answer = fire(&addr, &mutant);
+        assert_well_formed_responses(&answer);
+        if round % 40 == 39 {
+            assert_serviceable(&addr);
+        }
+    }
+    assert_serviceable(&addr);
+    handle.shutdown();
+}
+
+#[test]
+fn unmutated_corpus_gets_well_formed_answers() {
+    // Control arm: every valid seed elicits at least one well-formed
+    // response (stream ops may error on unknown sessions, but they must
+    // *answer*).
+    let (handle, addr) = start_server();
+    for seed in v1_corpus().into_iter().chain(v2_corpus()) {
+        let answer = fire(&addr, &seed);
+        assert!(!answer.is_empty(), "no answer to valid frame {seed:?}");
+        assert_well_formed_responses(&answer);
+    }
+    handle.shutdown();
+}
+
+#[test]
+fn oversized_length_prefix_is_answered_then_closed() {
+    // The one mutation class where the server *must* drop the
+    // connection (the stream can't be resynchronized), and must still
+    // answer first with a bad_frame error.
+    let (handle, addr) = start_server();
+    for verb in [0x01u8, 0x03, 0x11, 0x7F] {
+        let mut payload = vec![wire::WIRE_V2, verb];
+        payload.extend_from_slice(&u32::MAX.to_le_bytes());
+        let answer = fire(&addr, &payload);
+        let mut cur = answer.as_slice();
+        match wire::read_response(&mut cur).expect("bad_frame error frame") {
+            ResponseFrame::Err { code, .. } => assert_eq!(code, wire::errcode::BAD_FRAME),
+            other => panic!("{other:?}"),
+        }
+        assert!(cur.is_empty(), "nothing may follow the bad_frame error");
+    }
+    assert_serviceable(&addr);
+    handle.shutdown();
+}

@@ -1,0 +1,142 @@
+#!/usr/bin/env bash
+# Perf-regression gate over the repo-root BENCH_*.json trajectory
+# artifacts (see README "Perf trajectory"). Compares the working-tree
+# artifacts — typically just produced by `make bench-json` /
+# `make bench-smoke` — against the last recorded snapshot in git, and
+# fails on a >15% regression in any headline metric:
+#
+#   BENCH_fig1.json    lane_vs_scalar.speedup        (forward kernel)
+#   BENCH_table1.json  lane_vs_scalar.speedup        (backward kernel)
+#   BENCH_stream.json  stream_vs_recompute.speedup   (O(1) window push)
+#   BENCH_tree.json    tree_vs_sequential.speedup,
+#                      backward.speedup              (time-parallel tree)
+#   BENCH_coord.json   rows[*].p99_us                (coordinator latency)
+#   + every steady_state_allocs_* counter must not increase.
+#
+# Usage:
+#   scripts/bench_compare.sh [--smoke] [--ref REF] [--run]
+#
+#   --smoke   smoke artifacts are shape checks, not measurements: verify
+#             the headline metrics exist and are positive, skip the 15%
+#             thresholds (CI wires this into the bench-smoke job).
+#   --ref R   baseline git ref (default HEAD). A ref that predates an
+#             artifact skips that file with a note — the first
+#             `make bench-record` commit seeds the baseline.
+#   --run     run the matching bench suite first (bench-json, or
+#             bench-smoke with --smoke).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+smoke=0 ref=HEAD run=0
+while [[ $# -gt 0 ]]; do
+    case "$1" in
+        --smoke) smoke=1 ;;
+        --ref) ref="$2"; shift ;;
+        --run) run=1 ;;
+        *) echo "unknown flag $1" >&2; exit 2 ;;
+    esac
+    shift
+done
+
+if [[ "$run" == 1 ]]; then
+    if [[ "$smoke" == 1 ]]; then make bench-smoke; else make bench-json; fi
+fi
+
+baseline_dir=$(mktemp -d)
+trap 'rm -rf "$baseline_dir"' EXIT
+
+have_baseline=0
+for f in BENCH_fig1.json BENCH_table1.json BENCH_stream.json BENCH_tree.json BENCH_coord.json; do
+    if git show "$ref:$f" > "$baseline_dir/$f" 2>/dev/null; then
+        have_baseline=1
+    else
+        rm -f "$baseline_dir/$f"
+        echo "note: no baseline $f at $ref — skipping (first recording seeds it)"
+    fi
+done
+
+SMOKE="$smoke" BASELINE_DIR="$baseline_dir" HAVE_BASELINE="$have_baseline" python3 - <<'EOF'
+import json, os, sys
+
+smoke = os.environ["SMOKE"] == "1"
+bdir = os.environ["BASELINE_DIR"]
+TOL = 0.15  # >15% regression fails
+failures, checked = [], 0
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except FileNotFoundError:
+        return None
+
+
+def headline(doc, name):
+    """(metric-name, value, kind) triples; kind: 'hi' = higher is
+    better, 'lo' = lower is better, 'alloc' = must not increase."""
+    if doc is None:
+        return []
+    out = []
+    if name == "BENCH_fig1.json":
+        out.append(("fig1.lane_vs_scalar.speedup", doc["lane_vs_scalar"]["speedup"], "hi"))
+        out.append(("fig1.steady_state_allocs_per_call", doc["steady_state_allocs_per_call"], "alloc"))
+    elif name == "BENCH_table1.json":
+        out.append(("table1.lane_vs_scalar.speedup", doc["lane_vs_scalar"]["speedup"], "hi"))
+        out.append(("table1.steady_state_allocs_per_call", doc["steady_state_allocs_per_call"], "alloc"))
+    elif name == "BENCH_stream.json":
+        out.append(("stream.stream_vs_recompute.speedup", doc["stream_vs_recompute"]["speedup"], "hi"))
+        out.append(("stream.steady_state_allocs_per_push", doc["steady_state_allocs_per_push"], "alloc"))
+    elif name == "BENCH_tree.json":
+        out.append(("tree.tree_vs_sequential.speedup", doc["tree_vs_sequential"]["speedup"], "hi"))
+        out.append(("tree.backward.speedup", doc["backward"]["speedup"], "hi"))
+        out.append(("tree.steady_state_allocs_per_call", doc["steady_state_allocs_per_call"], "alloc"))
+    elif name == "BENCH_coord.json":
+        for row in doc["rows"]:
+            out.append((f"coord.shards{row['shards']}.p99_us", row["p99_us"], "lo"))
+            out.append((f"coord.shards{row['shards']}.lost_sessions", row["lost_sessions"], "alloc"))
+    return out
+
+
+for name in ("BENCH_fig1.json", "BENCH_table1.json", "BENCH_stream.json",
+             "BENCH_tree.json", "BENCH_coord.json"):
+    cur_doc = load(name)
+    base_doc = load(os.path.join(bdir, name))
+    cur = dict((k, (v, kind)) for k, v, kind in headline(cur_doc, name))
+    base = dict((k, (v, kind)) for k, v, kind in headline(base_doc, name))
+    if cur_doc is None:
+        if base_doc is not None:
+            failures.append(f"{name}: baseline exists but working tree lost the artifact")
+        continue
+    # The artifact itself must carry sane headline values regardless of
+    # baseline availability (this is the whole check in smoke mode).
+    for k, (v, kind) in cur.items():
+        checked += 1
+        if kind == "hi" and not v > 0:
+            failures.append(f"{k}: headline metric {v} is not positive")
+        if kind == "lo" and not v > 0:
+            failures.append(f"{k}: latency {v} is not positive")
+        if kind == "alloc" and v < 0:
+            failures.append(f"{k}: negative counter {v}")
+    if smoke or base_doc is None:
+        continue
+    for k, (v, kind) in cur.items():
+        if k not in base:
+            continue  # new metric this PR: no baseline yet
+        b = base[k][0]
+        if kind == "hi" and v < b * (1 - TOL):
+            failures.append(f"{k}: {v:.3f} vs baseline {b:.3f} (> {TOL:.0%} regression)")
+        elif kind == "lo" and b > 0 and v > b * (1 + TOL):
+            failures.append(f"{k}: {v:.1f} vs baseline {b:.1f} (> {TOL:.0%} regression)")
+        elif kind == "alloc" and v > b:
+            failures.append(f"{k}: {v} vs baseline {b} (counter increased)")
+
+mode = "smoke (shape checks only)" if smoke else f"full (±{TOL:.0%} thresholds)"
+print(f"bench_compare: {checked} headline metrics checked, mode {mode}")
+if failures:
+    print("PERF REGRESSION GATE FAILED:", file=sys.stderr)
+    for f in failures:
+        print(f"  - {f}", file=sys.stderr)
+    sys.exit(1)
+print("bench_compare: OK")
+EOF

@@ -1,0 +1,248 @@
+#!/usr/bin/env python3
+"""Regenerate the wire-protocol golden files in rust/tests/golden/.
+
+This is an independent mirror of the two wire codecs:
+
+* v2 binary frames (rust/src/coordinator/wire.rs): 6-byte header
+  (0x02, verb/status, u32 LE payload length) + little-endian payload;
+* v1 JSON-lines responses (rust/src/coordinator/protocol.rs): compact
+  JSON with alphabetically sorted keys (the Rust Json::Obj is a
+  BTreeMap) and integers printed without a decimal point.
+
+The Rust test rust/tests/wire_golden.rs builds the same frames with the
+real codec and compares byte-for-byte, so any drift between the two
+implementations — or any accidental change to the wire format — fails
+CI. Run from the repo root:
+
+    python3 scripts/gen_goldens.py
+"""
+import json
+import os
+import struct
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+GOLDEN = os.path.join(ROOT, "rust", "tests", "golden")
+
+WIRE_V2 = 0x02
+VERB = {
+    "ping": 0x01,
+    "stats": 0x02,
+    "signature": 0x03,
+    "stream_open": 0x10,
+    "stream_push": 0x11,
+    "stream_window": 0x12,
+    "stream_close": 0x13,
+}
+STATUS = {"ok": 0, "err": 1, "shed": 2}
+
+
+def u8(v):
+    return struct.pack("<B", v)
+
+
+def u16(v):
+    return struct.pack("<H", v)
+
+
+def u32(v):
+    return struct.pack("<I", v)
+
+
+def u64(v):
+    return struct.pack("<Q", v)
+
+
+def f64(v):
+    return struct.pack("<d", v)
+
+
+def f64s(vs):
+    return u32(len(vs)) + b"".join(f64(v) for v in vs)
+
+
+def u16s(vs):
+    return u32(len(vs)) + b"".join(u16(v) for v in vs)
+
+
+def frame(kind, payload):
+    return u8(WIRE_V2) + u8(kind) + u32(len(payload)) + payload
+
+
+def spec_truncated():
+    return u8(0)
+
+
+def spec_lyndon():
+    return u8(1)
+
+
+def spec_anisotropic(gamma, cutoff):
+    return u8(2) + f64s(gamma) + f64(cutoff)
+
+
+def spec_dag(edges):
+    return u8(3) + u32(len(edges)) + b"".join(u16s(row) for row in edges)
+
+
+def spec_words(words):
+    return u8(4) + u32(len(words)) + b"".join(u16s(w) for w in words)
+
+
+def spec_sparse_leadlag(base_dim):
+    return u8(5) + u32(base_dim)
+
+
+def string(s):
+    b = s.encode("utf-8")
+    return u32(len(b)) + b
+
+
+def v2_frames():
+    """(name, frame bytes) for every request verb, every projection
+    tag, and every response status/body shape."""
+    rows = []
+    # Requests — all 7 verbs.
+    rows.append(("req_ping", frame(VERB["ping"], b"")))
+    rows.append(("req_stats", frame(VERB["stats"], b"")))
+    rows.append((
+        "req_signature_truncated",
+        frame(VERB["signature"],
+              u32(2) + u32(2) + spec_truncated()
+              + f64s([0.0, 0.0, 1.0, 0.0, 1.0, 1.0])),
+    ))
+    rows.append((
+        "req_signature_lyndon",
+        frame(VERB["signature"],
+              u32(2) + u32(3) + spec_lyndon() + f64s([0.0, 0.0, 1.0, 1.0])),
+    ))
+    rows.append((
+        "req_signature_anisotropic",
+        frame(VERB["signature"],
+              u32(2) + u32(4) + spec_anisotropic([1.0, 2.0], 2.5)
+              + f64s([0.0, 0.0, 1.0, 1.0])),
+    ))
+    rows.append((
+        "req_signature_dag",
+        frame(VERB["signature"],
+              u32(2) + u32(2) + spec_dag([[0, 1], [1]])
+              + f64s([0.0, 0.0, 1.0, 1.0])),
+    ))
+    rows.append((
+        "req_signature_words",
+        frame(VERB["signature"],
+              u32(2) + u32(2) + spec_words([[0, 1], [1]])
+              + f64s([0.0, 0.0, 1.0, 1.0])),
+    ))
+    rows.append((
+        "req_signature_sparse_leadlag",
+        frame(VERB["signature"],
+              u32(4) + u32(2) + spec_sparse_leadlag(2) + f64s([0.0] * 8)),
+    ))
+    rows.append((
+        "req_stream_open",
+        frame(VERB["stream_open"], u32(1) + u32(2) + u32(4) + spec_truncated()),
+    ))
+    rows.append((
+        "req_stream_push",
+        frame(VERB["stream_push"], u64(7) + f64s([0.5, 1.5])),
+    ))
+    rows.append((
+        "req_stream_window_full",
+        frame(VERB["stream_window"], u64(7) + u8(1)),
+    ))
+    rows.append((
+        "req_stream_close",
+        frame(VERB["stream_close"], u64(7)),
+    ))
+    # Responses — every status, every ok-body shape.
+    rows.append(("resp_ok_ping", frame(STATUS["ok"], u8(VERB["ping"]))))
+    rows.append((
+        "resp_ok_stats",
+        frame(STATUS["ok"],
+              u8(VERB["stats"]) + u32(1)
+              + u32(0) + u64(3) + u64(1) + u64(0) + u64(42)),
+    ))
+    rows.append((
+        "resp_ok_values",
+        frame(STATUS["ok"],
+              u8(VERB["stream_window"]) + u32(1) + u32(2) + f64s([5.0, 12.5])),
+    ))
+    rows.append((
+        "resp_ok_opened",
+        frame(STATUS["ok"], u8(VERB["stream_open"]) + u64(9) + u32(6)),
+    ))
+    rows.append((
+        "resp_ok_pushed",
+        frame(STATUS["ok"], u8(VERB["stream_push"]) + u64(4) + u64(8)),
+    ))
+    rows.append(("resp_ok_closed", frame(STATUS["ok"], u8(VERB["stream_close"]))))
+    rows.append((
+        "resp_err_unknown_session",
+        frame(STATUS["err"],
+              u8(VERB["stream_push"]) + u8(3)
+              + string("unknown session 's9' (already closed or evicted)")),
+    ))
+    rows.append((
+        "resp_shed",
+        frame(STATUS["shed"],
+              u8(VERB["stream_push"]) + u32(25)
+              + string("overloaded; retry after 25 ms")),
+    ))
+    return rows
+
+
+def jline(obj):
+    """Compact JSON with sorted keys — byte-identical to the Rust
+    Json writer for the integer/float values used here."""
+    return json.dumps(obj, sort_keys=True, separators=(",", ":"))
+
+
+def v1_responses():
+    """Expected byte-exact Response::to_line outputs."""
+    return [
+        jline({"backend": "native", "id": "r1", "latency_us": 42, "ok": True,
+               "result": [1, 2.5], "shape": [2]}),
+        jline({"body": {"out_dim": 6, "session": "s1"}, "id": "o1", "ok": True}),
+        jline({"body": {"pushed": 4, "seen": 8}, "id": "p1", "ok": True}),
+        jline({"body": {"closed": True}, "id": "c1", "ok": True}),
+        jline({"error": "unknown session 's9' (already closed or evicted)",
+               "id": "e1", "ok": False}),
+        jline({"error": "overloaded; retry after 25 ms", "id": "sh1",
+               "ok": False, "retry_after_ms": 25}),
+    ]
+
+
+def v1_requests():
+    """One valid v1 request line per op (parse-checked by the test)."""
+    return [
+        '{"op":"ping","id":"g1"}',
+        '{"op":"stats","id":"g2"}',
+        '{"op":"metrics","id":"g3"}',
+        '{"op":"signature","id":"g4","dim":2,"depth":2,"path":[0,0,1,0,1,1]}',
+        '{"op":"logsig","id":"g5","dim":2,"depth":2,"path":[0,0,1,1]}',
+        '{"op":"windowed","id":"g6","dim":1,"depth":2,"windows":[[0,2]],"path":[0,1,2]}',
+        '{"op":"stream_open","id":"g7","dim":1,"depth":2,"window":4}',
+        '{"op":"stream_push","id":"g8","session":"s1","samples":[0.5,1.5]}',
+        '{"op":"stream_window","id":"g9","session":"s1","mode":"full"}',
+        '{"op":"stream_close","id":"g10","session":"s1"}',
+    ]
+
+
+def main():
+    os.makedirs(GOLDEN, exist_ok=True)
+    with open(os.path.join(GOLDEN, "v2_frames.hex"), "w") as f:
+        f.write("# name hex — one golden v2 frame per line; regenerate with\n")
+        f.write("# python3 scripts/gen_goldens.py\n")
+        for name, b in v2_frames():
+            f.write(f"{name} {b.hex()}\n")
+    with open(os.path.join(GOLDEN, "v1_responses.jsonl"), "w") as f:
+        for line in v1_responses():
+            f.write(line + "\n")
+    with open(os.path.join(GOLDEN, "v1_requests.jsonl"), "w") as f:
+        for line in v1_requests():
+            f.write(line + "\n")
+    print(f"wrote goldens under {GOLDEN}")
+
+
+if __name__ == "__main__":
+    main()
