@@ -169,7 +169,7 @@ fn run_case(shards: usize, sessions: usize, rounds: usize, workers: usize) -> Js
     let mut probe = WireClient::connect(&addr).expect("stats connect");
     let (sheds, live_after) = match probe.call(&RequestFrame::Stats).expect("stats") {
         ResponseFrame::Ok {
-            body: OkBody::Stats(rows),
+            body: OkBody::Stats { shards: rows, .. },
             ..
         } => (
             rows.iter().map(|r| r.sheds).sum::<u64>(),

@@ -1,0 +1,198 @@
+//! Durability bench (ISSUE 7): what crash-safety costs and how fast it
+//! pays out. Emits the repo-root `BENCH_durability.json`
+//! perf-trajectory artifact in `--json` mode; `--smoke` shrinks to CI
+//! size.
+//!
+//! Three questions, one artifact:
+//!
+//! 1. **Push latency tax** — per-op p50/p99 through the sharded
+//!    coordinator with durability off, journaled, and journaled+fsync,
+//!    same sessions and samples. The journal is one buffered `write(2)`
+//!    per op, so the no-fsync tax should be small; fsync shows the
+//!    worst case.
+//! 2. **Recovery time** — wall-clock for [`ShardSet::new`] to rebuild N
+//!    checkpointed sessions from disk, the restart-cost curve.
+//! 3. **Zero-alloc appends** — a warm [`JournalWriter::append_push`]
+//!    must not heap-allocate (the encode buffer is reused), counted by
+//!    the same [`CountingAllocator`] the kernel benches use and
+//!    asserted, not just reported.
+//!
+//! Knobs: `PATHSIG_DUR_SESSIONS=n`, `PATHSIG_DUR_ROUNDS=n`.
+
+mod common;
+use common::{dump, json_mode, smoke};
+use pathsig::bench::{alloc_count, CountingAllocator};
+use pathsig::coordinator::{DurabilityConfig, Metrics, ShardConfig, ShardSet, StreamReply};
+use pathsig::persist::{journal_path, JournalWriter};
+use pathsig::sig::{StreamEngine, StreamTable};
+use pathsig::util::json::Json;
+use pathsig::util::pool::Pool;
+use pathsig::util::stats::percentile_sorted;
+use pathsig::words::WordSpec;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+#[global_allocator]
+static ALLOC: CountingAllocator = CountingAllocator;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("pathsig-fig6-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn engine(dim: usize, depth: usize, window: usize) -> StreamEngine {
+    let words = WordSpec::Truncated { depth }.words(dim);
+    StreamEngine::new(Arc::new(StreamTable::new(dim, &words)), window)
+}
+
+fn build_set(durability: Option<DurabilityConfig>, max_sessions: usize) -> ShardSet {
+    let cfg = ShardConfig {
+        shards: 2,
+        max_sessions,
+        durability,
+        ..ShardConfig::default()
+    };
+    ShardSet::new(cfg, Arc::new(Metrics::new()), Arc::new(Pool::default()))
+}
+
+fn open_id(s: &ShardSet) -> u64 {
+    match s
+        .open(engine(2, 2, 8), WordSpec::Truncated { depth: 2 })
+        .unwrap()
+    {
+        StreamReply::Opened { session, .. } => {
+            session.strip_prefix('s').unwrap().parse().unwrap()
+        }
+        other => panic!("open failed: {other:?}"),
+    }
+}
+
+/// One durability mode's push-latency row: open `sessions`, drive
+/// `rounds` single-row pushes over each, return (p50_us, p99_us).
+fn push_case(mode: &str, durability: Option<DurabilityConfig>, sessions: usize, rounds: usize) -> Json {
+    let set = build_set(durability, sessions + 8);
+    let ids: Vec<u64> = (0..sessions).map(|_| open_id(&set)).collect();
+    // Warm every session (tables built, scratch allocated, journal warm).
+    for &id in &ids {
+        set.push(id, vec![0.0, 0.0]).unwrap();
+    }
+    let mut lat_us = Vec::with_capacity(sessions * rounds);
+    for r in 0..rounds {
+        for (k, &id) in ids.iter().enumerate() {
+            let x = (r * 31 + k) as f64 / 16.0;
+            let t0 = Instant::now();
+            set.push(id, vec![x, 0.5 * x]).unwrap();
+            lat_us.push(t0.elapsed().as_secs_f64() * 1e6);
+        }
+    }
+    lat_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p50 = percentile_sorted(&lat_us, 0.5);
+    let p99 = percentile_sorted(&lat_us, 0.99);
+    println!("# push {mode:<16} sessions {sessions:>5}  p50 {p50:>8.2}µs  p99 {p99:>8.2}µs");
+    Json::obj(vec![
+        ("mode", Json::str(mode)),
+        ("sessions", Json::Num(sessions as f64)),
+        ("rounds", Json::Num(rounds as f64)),
+        ("p50_us", Json::Num(p50)),
+        ("p99_us", Json::Num(p99)),
+    ])
+}
+
+/// Recovery-time row: checkpoint `sessions` sessions to disk via a
+/// graceful shutdown, then time the restart that rebuilds them.
+fn recovery_case(sessions: usize) -> Json {
+    let dir = tmpdir(&format!("recover-{sessions}"));
+    {
+        let set = build_set(Some(DurabilityConfig::new(dir.clone())), sessions + 8);
+        for _ in 0..sessions {
+            let id = open_id(&set);
+            set.push(id, vec![1.0, 0.5, 2.0, 0.25, 3.0, 0.125]).unwrap();
+        }
+    }
+    let t0 = Instant::now();
+    let set = build_set(Some(DurabilityConfig::new(dir.clone())), sessions + 8);
+    let ms = t0.elapsed().as_secs_f64() * 1e3;
+    assert_eq!(set.live_sessions(), sessions, "recovery lost sessions");
+    drop(set);
+    std::fs::remove_dir_all(&dir).unwrap();
+    println!("# recovery {sessions:>5} sessions in {ms:>8.2} ms");
+    Json::obj(vec![
+        ("sessions", Json::Num(sessions as f64)),
+        ("recover_ms", Json::Num(ms)),
+    ])
+}
+
+/// Steady-state allocations per warm `append_push` — the journal's
+/// zero-alloc contract, measured exactly like the kernel benches.
+fn steady_state_allocs() -> f64 {
+    let dir = tmpdir("alloc");
+    let mut w = JournalWriter::create(&journal_path(&dir, 0), false, 0).unwrap();
+    let samples = [0.5, 1.5, 2.5, 3.5];
+    // Two warm appends size the encode buffer.
+    w.append_push(1, &samples).unwrap();
+    w.append_push(1, &samples).unwrap();
+    let calls = 50;
+    let before = alloc_count();
+    for _ in 0..calls {
+        w.append_push(1, &samples).unwrap();
+    }
+    let per_call = (alloc_count() - before) as f64 / calls as f64;
+    drop(w);
+    std::fs::remove_dir_all(&dir).unwrap();
+    println!("# steady-state allocations per warm append_push: {per_call}");
+    assert_eq!(per_call, 0.0, "warm journal append allocated");
+    per_call
+}
+
+fn env_usize(key: &str) -> Option<usize> {
+    std::env::var(key).ok()?.parse().ok()
+}
+
+fn main() {
+    let smoke = smoke();
+    let sessions = env_usize("PATHSIG_DUR_SESSIONS").unwrap_or(if smoke { 64 } else { 512 });
+    let rounds = env_usize("PATHSIG_DUR_ROUNDS").unwrap_or(if smoke { 4 } else { 16 });
+    let recovery_grid: &[usize] = if smoke { &[32, 128] } else { &[256, 1024] };
+    println!("# fig6: durability tax + recovery curve ({sessions} sessions, {rounds} rounds)");
+
+    let dir_j = tmpdir("journal");
+    let dir_f = tmpdir("fsync");
+    let push_rows = vec![
+        push_case("off", None, sessions, rounds),
+        push_case(
+            "journal",
+            Some(DurabilityConfig::new(dir_j.clone())),
+            sessions,
+            rounds,
+        ),
+        push_case(
+            "journal+fsync",
+            Some(DurabilityConfig {
+                fsync: true,
+                ..DurabilityConfig::new(dir_f.clone())
+            }),
+            sessions,
+            rounds,
+        ),
+    ];
+    std::fs::remove_dir_all(&dir_j).unwrap();
+    std::fs::remove_dir_all(&dir_f).unwrap();
+
+    let recovery_rows: Vec<Json> = recovery_grid.iter().map(|&n| recovery_case(n)).collect();
+    let allocs = steady_state_allocs();
+
+    let j = Json::obj(vec![
+        ("bench", Json::str("fig6_durability")),
+        ("smoke", Json::Bool(smoke)),
+        ("push", Json::obj(vec![("rows", Json::Arr(push_rows))])),
+        ("recovery", Json::obj(vec![("rows", Json::Arr(recovery_rows))])),
+        ("steady_state_allocs_per_append", Json::Num(allocs)),
+    ]);
+    dump("fig6_durability", j.clone());
+    if json_mode() {
+        common::dump_root("BENCH_durability.json", j);
+    }
+}

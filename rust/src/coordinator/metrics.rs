@@ -34,6 +34,25 @@ pub struct Metrics {
     /// path exceeded the batcher's long-path threshold (they saturate
     /// the engine alone via the time-parallel scheduler).
     pub long_path_bypass: AtomicU64,
+    /// Journal records appended across all shards.
+    pub journal_appends: AtomicU64,
+    /// Journal bytes written across all shards.
+    pub journal_bytes: AtomicU64,
+    /// Shard checkpoints written (each truncates its journal).
+    pub checkpoints_written: AtomicU64,
+    /// Journal/checkpoint IO failures (append, truncate, checkpoint).
+    /// Non-fatal: the coordinator keeps serving from memory.
+    pub journal_errors: AtomicU64,
+    /// Torn journal tails truncated during recovery (crash mid-write).
+    pub journal_torn_tails: AtomicU64,
+    /// Records/checkpoints dropped during recovery as corrupt or
+    /// tombstoned (CRC failures, inadmissible specs, resurrections).
+    pub journal_corrupt_dropped: AtomicU64,
+    /// Sessions rebuilt from checkpoint + journal replay at boot.
+    pub sessions_recovered: AtomicU64,
+    /// Recovered sessions dropped at re-admission because they
+    /// exceeded the session-count or per-session float budget.
+    pub recovery_dropped: AtomicU64,
     /// End-to-end per-request latency.
     pub request_latency: LatencyHistogram,
     /// Per-batch execution latency.
@@ -119,6 +138,38 @@ impl Metrics {
             (
                 "long_path_bypass",
                 Json::Num(self.long_path_bypass.load(Relaxed) as f64),
+            ),
+            (
+                "journal_appends",
+                Json::Num(self.journal_appends.load(Relaxed) as f64),
+            ),
+            (
+                "journal_bytes",
+                Json::Num(self.journal_bytes.load(Relaxed) as f64),
+            ),
+            (
+                "checkpoints_written",
+                Json::Num(self.checkpoints_written.load(Relaxed) as f64),
+            ),
+            (
+                "journal_errors",
+                Json::Num(self.journal_errors.load(Relaxed) as f64),
+            ),
+            (
+                "journal_torn_tails",
+                Json::Num(self.journal_torn_tails.load(Relaxed) as f64),
+            ),
+            (
+                "journal_corrupt_dropped",
+                Json::Num(self.journal_corrupt_dropped.load(Relaxed) as f64),
+            ),
+            (
+                "sessions_recovered",
+                Json::Num(self.sessions_recovered.load(Relaxed) as f64),
+            ),
+            (
+                "recovery_dropped",
+                Json::Num(self.recovery_dropped.load(Relaxed) as f64),
             ),
             (
                 "request_latency_p50_us",

@@ -22,6 +22,11 @@
 //! first byte: v1 JSON-lines (a line starts with `{`) and v2
 //! length-prefixed binary frames (first byte `0x02`, see [`wire`]).
 //!
+//! With `--journal-dir` set, the shard workers journal every session op
+//! and periodically checkpoint engine state to disk (see
+//! [`crate::persist`]), so a crash or restart recovers every live
+//! session instead of losing them.
+//!
 //! * [`protocol`] — v1 wire types (requests, responses, projections).
 //! * [`wire`]     — v2 binary frames + the `stats` verb + [`wire::WireClient`].
 //! * [`service`]  — engine cache + request execution (native / PJRT).
@@ -47,3 +52,5 @@ pub use server::{serve, ServerConfig};
 pub use service::{ConfigKey, SigService, StreamReply};
 pub use shard::{ShardConfig, ShardSet, ShardStat, StreamError};
 pub use wire::WireClient;
+
+pub use crate::persist::DurabilityConfig;

@@ -431,6 +431,10 @@ impl Response {
                 ("ok", Json::Bool(false)),
                 ("error", Json::str(error)),
                 ("retry_after_ms", Json::Num(*retry_after_ms as f64)),
+                // Machine-readable marker so clients can branch on shed
+                // vs hard error without string-matching `error` (parity
+                // with protocol v2's dedicated `Shed` frame kind).
+                ("status", Json::str("shed")),
             ])
             .to_string(),
         }
@@ -577,6 +581,7 @@ mod tests {
         let j = Json::parse(&shed.to_line()).unwrap();
         assert_eq!(j.get("ok").as_bool(), Some(false));
         assert_eq!(j.get("retry_after_ms").as_usize(), Some(25));
+        assert_eq!(j.get("status").as_str(), Some("shed"));
         assert!(j.get("error").as_str().unwrap().contains("retry"));
     }
 

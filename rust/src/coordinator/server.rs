@@ -231,7 +231,10 @@ fn handle_v2_frame(
         },
         RequestOp::Stats => ResponseFrame::Ok {
             verb,
-            body: OkBody::Stats(service.shard_set().stats()),
+            body: OkBody::Stats {
+                shards: service.shard_set().stats(),
+                cache: service.cache_stats(),
+            },
         },
         RequestOp::Metrics => ResponseFrame::Err {
             verb,
@@ -431,6 +434,7 @@ mod tests {
     use crate::coordinator::wire::{
         verb, OkBody, RequestFrame, ResponseFrame, SpecFrame, WireClient,
     };
+    use crate::persist::CacheStats;
 
     fn start_test_server() -> (ServerHandle, String) {
         let service = Arc::new(SigService::new(None));
@@ -659,11 +663,14 @@ mod tests {
         // stats: one row per shard, at least one session live somewhere
         match c.call(&RequestFrame::Stats).unwrap() {
             ResponseFrame::Ok {
-                body: OkBody::Stats(rows),
+                body: OkBody::Stats { shards: rows, cache },
                 ..
             } => {
                 assert!(!rows.is_empty());
                 assert_eq!(rows.iter().map(|r| r.sessions).sum::<u64>(), 1);
+                // Durability off: nothing journaled, nothing cached.
+                assert!(rows.iter().all(|r| r.journal_lag == 0));
+                assert_eq!(cache, CacheStats::default());
             }
             other => panic!("{other:?}"),
         }

@@ -19,6 +19,7 @@
 use super::protocol::{Backend, Request, RequestOp};
 use super::shard::{ShardConfig, ShardSet, ShardStat, StreamError};
 use crate::logsig::LogSigEngine;
+use crate::persist::{cache_key, CacheStats, DurabilityConfig, SigCache};
 use crate::sig::{
     signature_batch_into, windowed_signatures, SigEngine, StreamEngine, StreamScratch,
     StreamTable, Window,
@@ -28,6 +29,7 @@ use crate::util::json::Json;
 use crate::util::pool::Pool;
 use crate::words::{WordSpec, WordTable};
 use std::collections::HashMap;
+use std::path::PathBuf;
 use std::sync::{Arc, Mutex, OnceLock, RwLock};
 use std::time::Duration;
 
@@ -170,6 +172,24 @@ pub struct SigService {
     pub mailbox_capacity: usize,
     /// Backoff hint (milliseconds) carried in load-shed replies.
     pub shed_retry_ms: u64,
+    /// Journal directory for crash-safe sessions; `None` (the default)
+    /// disables durability entirely — no files are touched and every
+    /// serving path is bitwise identical. Set before the first stream
+    /// op (the CLI's `--journal-dir`).
+    pub journal_dir: Option<PathBuf>,
+    /// Checkpoint cadence: snapshot each shard's sessions (and truncate
+    /// its journal) every this many journaled ops (`--checkpoint-every`).
+    pub checkpoint_every: u64,
+    /// `fdatasync` after every journal append (`--fsync`): a crash
+    /// loses at most the record being written.
+    pub fsync: bool,
+    /// Bounded content-addressed cache of terminal signatures consulted
+    /// by the batch `signature` verb, in entries; `0` (the default)
+    /// disables it — not even a key is hashed (`--sig-cache-cap`).
+    pub sig_cache_cap: usize,
+    /// The content-addressed cache itself, spun up lazily with
+    /// `sig_cache_cap` on first use.
+    sig_cache: OnceLock<Mutex<SigCache>>,
     /// PJRT artifact runtime, if one was configured at boot.
     pub runtime: Option<Arc<Runtime>>,
     /// Shared metrics registry (also read by the server).
@@ -192,6 +212,11 @@ impl SigService {
             shard_count: 0,
             mailbox_capacity: 256,
             shed_retry_ms: 25,
+            journal_dir: None,
+            checkpoint_every: 256,
+            fsync: false,
+            sig_cache_cap: 0,
+            sig_cache: OnceLock::new(),
             runtime,
             metrics: Arc::new(super::Metrics::new()),
         }
@@ -226,6 +251,12 @@ impl SigService {
                     session_ttl: self.session_ttl,
                     max_sessions: self.max_sessions,
                     shed_retry_ms: self.shed_retry_ms,
+                    durability: self.journal_dir.as_ref().map(|dir| DurabilityConfig {
+                        dir: dir.clone(),
+                        checkpoint_every: self.checkpoint_every,
+                        fsync: self.fsync,
+                        max_session_floats: self.max_session_floats,
+                    }),
                 },
                 Arc::clone(&self.metrics),
                 Arc::clone(&self.stream_scratch),
@@ -270,6 +301,21 @@ impl SigService {
         table
     }
 
+    /// The content-addressed signature cache, spun up on first use with
+    /// the current `sig_cache_cap`.
+    fn sig_cache(&self) -> &Mutex<SigCache> {
+        self.sig_cache
+            .get_or_init(|| Mutex::new(SigCache::new(self.sig_cache_cap)))
+    }
+
+    /// Point-in-time counters of the content-addressed signature cache
+    /// (all zero while the cache is disabled or untouched).
+    pub fn cache_stats(&self) -> CacheStats {
+        self.sig_cache
+            .get()
+            .map_or_else(CacheStats::default, |c| c.lock().unwrap().stats())
+    }
+
     /// Live session count across all shards.
     pub fn session_count(&self) -> usize {
         self.shards.get().map_or(0, |s| s.live_sessions())
@@ -292,8 +338,10 @@ impl SigService {
     }
 
     /// JSON body of the `stats` wire verb: shard count, live sessions,
-    /// and per-shard counters. Spins the shard set up if needed so the
-    /// reply always has one row per shard.
+    /// per-shard counters (including the journal lag — records appended
+    /// since that shard's last checkpoint), and the signature-cache
+    /// counters. Spins the shard set up if needed so the reply always
+    /// has one row per shard.
     pub fn stats_json(&self) -> Json {
         let set = self.shard_set();
         let rows: Vec<Json> = set
@@ -306,13 +354,23 @@ impl SigService {
                     ("mailbox_depth", Json::Num(s.mailbox_depth as f64)),
                     ("sheds", Json::Num(s.sheds as f64)),
                     ("pushes", Json::Num(s.pushes as f64)),
+                    ("journal_lag", Json::Num(s.journal_lag as f64)),
                 ])
             })
             .collect();
+        let cache = self.cache_stats();
         Json::obj(vec![
             ("shards", Json::Num(set.shard_count() as f64)),
             ("live_sessions", Json::Num(set.live_sessions() as f64)),
             ("per_shard", Json::Arr(rows)),
+            (
+                "sig_cache",
+                Json::obj(vec![
+                    ("hits", Json::Num(cache.hits as f64)),
+                    ("misses", Json::Num(cache.misses as f64)),
+                    ("evictions", Json::Num(cache.evictions as f64)),
+                ]),
+            ),
         ])
     }
 
@@ -359,7 +417,7 @@ impl SigService {
                     s
                 };
                 let stream = StreamEngine::with_scratch(table, req.window_len, scratch);
-                self.shard_set().open(stream)
+                self.shard_set().open(stream, req.spec.clone())
             }
             RequestOp::StreamPush => {
                 let id = Self::parse_session_id(&req.session)?;
@@ -410,6 +468,22 @@ impl SigService {
         match req.op {
             RequestOp::Signature => {
                 let key = ConfigKey::of(req);
+                // Content-addressed cache: identical (spec, increments)
+                // requests are answered without touching any engine.
+                // Disabled (`sig_cache_cap == 0`) means not even a key
+                // is hashed; a forced-PJRT request also bypasses it so
+                // its error semantics stay exact.
+                let ckey = if self.sig_cache_cap > 0 && req.backend != Backend::Pjrt {
+                    let k = cache_key(req.dim, &key.spec_id, &req.path);
+                    if let Some(hit) = self.sig_cache().lock().unwrap().get(&k) {
+                        let out = hit.to_vec();
+                        let n = out.len();
+                        return Ok((out, vec![n], "cache"));
+                    }
+                    Some(k)
+                } else {
+                    None
+                };
                 if req.backend != Backend::Native {
                     if let Some(name) = self.pjrt_artifact_for(&key, 1) {
                         if let Ok(out) = self.execute_pjrt_batch(&name, &[req.path.as_slice()]) {
@@ -443,6 +517,9 @@ impl SigService {
                 self.metrics
                     .native_executions
                     .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if let Some(k) = ckey {
+                    self.sig_cache().lock().unwrap().insert(k, out.clone());
+                }
                 let n = out.len();
                 Ok((out, vec![n], "native"))
             }
@@ -874,6 +951,64 @@ mod tests {
         assert_eq!(j.get("shards").as_usize(), Some(3));
         assert_eq!(j.get("live_sessions").as_usize(), Some(1));
         assert_eq!(j.get("per_shard").as_arr().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn signature_cache_serves_repeats_and_translates() {
+        let mut service = SigService::new(None);
+        service.sig_cache_cap = 8;
+        let s = service;
+        let req = parse_request(
+            r#"{"op":"signature","dim":2,"depth":2,"path":[0,0,1,0,1,1]}"#,
+        )
+        .unwrap();
+        let (out1, _, b1) = s.execute(&req).unwrap();
+        assert_eq!(b1, "native");
+        let (out2, shape2, b2) = s.execute(&req).unwrap();
+        assert_eq!(b2, "cache");
+        assert_eq!(out1, out2);
+        assert_eq!(shape2, vec![out1.len()]);
+        // A translated path has identical increments, hence the same
+        // signature and the same cache entry.
+        let shifted = parse_request(
+            r#"{"op":"signature","dim":2,"depth":2,"path":[5,7,6,7,6,8]}"#,
+        )
+        .unwrap();
+        let (out3, _, b3) = s.execute(&shifted).unwrap();
+        assert_eq!(b3, "cache");
+        assert_eq!(out1, out3);
+        let st = s.cache_stats();
+        assert_eq!((st.hits, st.misses, st.evictions), (2, 1, 0));
+        // A different depth misses.
+        let other = parse_request(
+            r#"{"op":"signature","dim":2,"depth":3,"path":[0,0,1,0,1,1]}"#,
+        )
+        .unwrap();
+        let (_, _, b4) = s.execute(&other).unwrap();
+        assert_eq!(b4, "native");
+    }
+
+    #[test]
+    fn cache_disabled_by_default_stays_silent() {
+        let s = svc();
+        let req = parse_request(
+            r#"{"op":"signature","dim":2,"depth":2,"path":[0,0,1,0,1,1]}"#,
+        )
+        .unwrap();
+        let (_, _, b1) = s.execute(&req).unwrap();
+        let (_, _, b2) = s.execute(&req).unwrap();
+        assert_eq!((b1, b2), ("native", "native"));
+        assert_eq!(s.cache_stats(), CacheStats::default());
+    }
+
+    #[test]
+    fn stats_json_carries_journal_lag_and_cache() {
+        let s = SigService::with_shards(None, 2);
+        let j = s.stats_json();
+        let rows = j.get("per_shard").as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].get("journal_lag").as_usize(), Some(0));
+        assert_eq!(j.get("sig_cache").get("hits").as_usize(), Some(0));
     }
 
     #[test]

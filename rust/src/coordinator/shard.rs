@@ -19,13 +19,26 @@
 //! in-flight reply is delivered) before the workers exit and return
 //! their sessions' scratch buffers to the shared pool.
 
+//!
+//! With a [`DurabilityConfig`] present, each worker additionally owns
+//! an append-only journal + checkpoint file pair (see
+//! [`crate::persist`]): session ops are journaled *before* their reply
+//! is sent, checkpoints of the full engine state are written every
+//! `checkpoint_every` ops, and [`ShardSet::new`] recovers every live
+//! session from disk before the workers spawn. Without the config, no
+//! persistence code runs at all.
+
 use super::mailbox::{Mailbox, Recv, SendError};
 use super::service::StreamReply;
 use super::Metrics;
-use crate::sig::{StreamEngine, StreamScratch};
+use crate::persist::{self, DurabilityConfig, JournalWriter};
+use crate::sig::{StreamEngine, StreamScratch, StreamTable};
 use crate::util::pool::Pool;
 use crate::util::rng::splitmix64;
+use crate::words::WordSpec;
 use std::collections::HashMap;
+use std::io;
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering::Relaxed};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
@@ -82,6 +95,9 @@ pub enum ShardMsg {
         id: u64,
         /// The session's engine, built by the service.
         stream: Box<StreamEngine>,
+        /// The declarative word-set spec the engine was built from —
+        /// journaled so recovery can rebuild the table.
+        spec: WordSpec,
         /// Where to send the acknowledgement.
         reply: ReplyTx,
     },
@@ -132,15 +148,19 @@ pub struct ShardStat {
     pub sheds: u64,
     /// Samples pushed into this shard's sessions.
     pub pushes: u64,
+    /// Journal records appended since the last checkpoint (0 when
+    /// durability is off — the shard never lags what it never writes).
+    pub journal_lag: u64,
 }
 
 /// Lock-free per-shard counters, written by the worker (sessions,
-/// pushes) and by producers (sheds).
+/// pushes, journal_lag) and by producers (sheds).
 #[derive(Debug, Default)]
 struct ShardCounters {
     sessions: AtomicU64,
     sheds: AtomicU64,
     pushes: AtomicU64,
+    journal_lag: AtomicU64,
 }
 
 struct Shard {
@@ -164,6 +184,10 @@ pub struct ShardConfig {
     pub max_sessions: usize,
     /// Backoff hint carried in [`StreamError::Shed`] replies.
     pub shed_retry_ms: u64,
+    /// Crash-safety knobs; `None` (the default) disables persistence
+    /// entirely — no files are touched and every code path is bitwise
+    /// identical to the pre-durability coordinator.
+    pub durability: Option<DurabilityConfig>,
 }
 
 impl Default for ShardConfig {
@@ -174,6 +198,7 @@ impl Default for ShardConfig {
             session_ttl: Duration::from_secs(300),
             max_sessions: 1024,
             shed_retry_ms: 25,
+            durability: None,
         }
     }
 }
@@ -214,18 +239,118 @@ pub fn shard_of(id: u64, n: usize) -> usize {
 impl ShardSet {
     /// Spin up `config.shards` workers sharing `metrics` and the
     /// scratch `pool`.
+    ///
+    /// With durability configured, recovery runs synchronously first:
+    /// every session found in the journal directory is rebuilt
+    /// (checkpoint load + tail replay), re-admitted in ascending-id
+    /// order under the `max_sessions` / `max_session_floats` budgets,
+    /// re-partitioned onto the current shard count, and re-persisted as
+    /// a fresh checkpoint per shard before any worker starts serving.
+    ///
+    /// # Panics
+    ///
+    /// Panics if the journal directory cannot be created, scanned or
+    /// rewritten — an unusable `--journal-dir` is an operator error the
+    /// server must refuse to boot over, not silently run without.
     pub fn new(
         config: ShardConfig,
         metrics: Arc<Metrics>,
         pool: Arc<Pool<StreamScratch>>,
     ) -> ShardSet {
         let n = config.shards.max(1);
-        let live = Arc::new(AtomicUsize::new(0));
         let epoch = Instant::now();
+        let mut by_shard: Vec<Vec<(u64, WordSpec, StreamEngine)>> =
+            (0..n).map(|_| Vec::new()).collect();
+        let mut durables: Vec<Option<Durable>> = (0..n).map(|_| None).collect();
+        let mut admitted = 0usize;
+        let mut max_id = 0u64;
+        if let Some(dur) = &config.durability {
+            std::fs::create_dir_all(&dur.dir).expect("create journal dir");
+            let mut memo: HashMap<String, Arc<StreamTable>> = HashMap::new();
+            let mut resolve = |dim: usize, spec: &WordSpec| {
+                memo.entry(format!("{dim}:{spec:?}"))
+                    .or_insert_with(|| Arc::new(StreamTable::new(dim, &spec.words(dim))))
+                    .clone()
+            };
+            let rec = persist::recover_dir(&dur.dir, &mut resolve).expect("scan journal dir");
+            metrics
+                .journal_torn_tails
+                .fetch_add(rec.stats.torn_tails, Relaxed);
+            metrics.journal_corrupt_dropped.fetch_add(
+                rec.stats.corrupt_checkpoints + rec.stats.tombstone_hits,
+                Relaxed,
+            );
+            max_id = rec.max_id;
+            let mut dropped = 0u64;
+            for s in rec.sessions {
+                // Re-admit under the same budgets a fresh open faces:
+                // global session cap, per-session float budget.
+                let need = s
+                    .window
+                    .saturating_mul(s.stream.table().state_len() + s.dim);
+                if admitted >= config.max_sessions || need > dur.max_session_floats {
+                    dropped += 1;
+                    continue;
+                }
+                admitted += 1;
+                by_shard[shard_of(s.id, n)].push((s.id, s.spec, s.stream));
+            }
+            metrics.sessions_recovered.fetch_add(admitted as u64, Relaxed);
+            metrics.recovery_dropped.fetch_add(dropped, Relaxed);
+            // Re-persist under the current topology: the old files may
+            // describe a different shard count (or dropped sessions),
+            // so clear them all and write one fresh checkpoint + empty
+            // journal per current shard.
+            for entry in std::fs::read_dir(&dur.dir).expect("scan journal dir") {
+                let entry = entry.expect("scan journal dir");
+                let name = entry.file_name();
+                let name = name.to_string_lossy();
+                if name.starts_with("shard-")
+                    && (name.ends_with(".journal")
+                        || name.ends_with(".ckpt")
+                        || name.ends_with(".ckpt.tmp"))
+                {
+                    std::fs::remove_file(entry.path()).expect("clear stale journal file");
+                }
+            }
+            for (i, durable) in durables.iter_mut().enumerate() {
+                let sessions: Vec<(u64, &WordSpec, &StreamEngine)> = by_shard[i]
+                    .iter()
+                    .map(|(id, spec, stream)| (*id, spec, stream))
+                    .collect();
+                persist::write_checkpoint(&dur.dir, i, 0, &sessions)
+                    .expect("write recovery checkpoint");
+                let writer = JournalWriter::create(&persist::journal_path(&dur.dir, i), dur.fsync, 0)
+                    .expect("create shard journal");
+                *durable = Some(Durable {
+                    writer,
+                    dir: dur.dir.clone(),
+                    shard: i,
+                    checkpoint_every: dur.checkpoint_every.max(1),
+                    since_ckpt: 0,
+                });
+            }
+        }
+        let live = Arc::new(AtomicUsize::new(admitted));
         let shards = (0..n)
             .map(|i| {
                 let mailbox: Mailbox<ShardMsg> = Mailbox::new(config.mailbox_capacity);
                 let counters = Arc::new(ShardCounters::default());
+                let now_ms = epoch.elapsed().as_millis() as u64;
+                let sessions: HashMap<u64, Slot> = by_shard[i]
+                    .drain(..)
+                    .map(|(id, spec, stream)| {
+                        (
+                            id,
+                            Slot {
+                                stream,
+                                spec,
+                                last_used_ms: now_ms,
+                            },
+                        )
+                    })
+                    .collect();
+                counters.sessions.store(sessions.len() as u64, Relaxed);
                 let worker = ShardWorker {
                     mailbox: mailbox.clone(),
                     counters: Arc::clone(&counters),
@@ -234,7 +359,8 @@ impl ShardSet {
                     pool: Arc::clone(&pool),
                     ttl: config.session_ttl,
                     epoch,
-                    sessions: HashMap::new(),
+                    sessions,
+                    durable: durables[i].take(),
                 };
                 let handle = std::thread::Builder::new()
                     .name(format!("pathsig-shard-{i}"))
@@ -250,7 +376,7 @@ impl ShardSet {
         ShardSet {
             shards,
             live,
-            next_session: AtomicU64::new(1),
+            next_session: AtomicU64::new(max_id + 1),
             config,
         }
     }
@@ -270,10 +396,11 @@ impl ShardSet {
         &self.config
     }
 
-    /// Admit and file a new session built from `stream`. Fails with the
-    /// table-full error when `max_sessions` are live, or sheds when the
-    /// target shard's mailbox is full.
-    pub fn open(&self, stream: StreamEngine) -> Result<StreamReply, StreamError> {
+    /// Admit and file a new session built from `stream` (described by
+    /// `spec`, which the durable path journals so recovery can rebuild
+    /// the table). Fails with the table-full error when `max_sessions`
+    /// are live, or sheds when the target shard's mailbox is full.
+    pub fn open(&self, stream: StreamEngine, spec: WordSpec) -> Result<StreamReply, StreamError> {
         // Reserve a slot first so racing opens can never overshoot the
         // global cap; release it on any subsequent failure.
         if self
@@ -294,6 +421,7 @@ impl ShardSet {
         let msg = ShardMsg::Open {
             id,
             stream: Box::new(stream),
+            spec,
             reply,
         };
         if let Err(e) = self.send(id, msg) {
@@ -349,6 +477,7 @@ impl ShardSet {
                 mailbox_depth: s.mailbox.len() as u64,
                 sheds: s.counters.sheds.load(Relaxed),
                 pushes: s.counters.pushes.load(Relaxed),
+                journal_lag: s.counters.journal_lag.load(Relaxed),
             })
             .collect()
     }
@@ -396,7 +525,20 @@ impl Drop for ShardSet {
 /// only thread that ever touches the engine.
 struct Slot {
     stream: StreamEngine,
+    /// Declarative spec the engine was built from, kept so checkpoints
+    /// can describe the session without reverse-engineering the table.
+    spec: WordSpec,
     last_used_ms: u64,
+}
+
+/// A worker's durable half: the journal writer plus checkpoint cadence
+/// bookkeeping. Absent entirely when durability is off.
+struct Durable {
+    writer: JournalWriter,
+    dir: PathBuf,
+    shard: usize,
+    checkpoint_every: u64,
+    since_ckpt: u64,
 }
 
 struct ShardWorker {
@@ -408,6 +550,7 @@ struct ShardWorker {
     ttl: Duration,
     epoch: Instant,
     sessions: HashMap<u64, Slot>,
+    durable: Option<Durable>,
 }
 
 impl ShardWorker {
@@ -443,7 +586,10 @@ impl ShardWorker {
         }
         // Graceful exit: the mailbox has already drained (Closed is
         // only reported on an empty queue), so every queued request got
-        // its reply above. Recycle the surviving sessions' workspaces.
+        // its reply above. A final checkpoint captures the surviving
+        // sessions (so a clean restart replays nothing), then their
+        // workspaces go back to the pool.
+        self.write_checkpoint();
         let ids: Vec<u64> = self.sessions.keys().copied().collect();
         for id in ids {
             if let Some(slot) = self.sessions.remove(&id) {
@@ -456,13 +602,20 @@ impl ShardWorker {
 
     fn handle(&mut self, msg: ShardMsg) {
         match msg {
-            ShardMsg::Open { id, stream, reply } => {
+            ShardMsg::Open {
+                id,
+                stream,
+                spec,
+                reply,
+            } => {
                 let out_dim = stream.out_dim();
                 let now = self.now_ms();
+                self.journal(|w| w.append_open(id, stream.dim(), stream.window_len(), &spec));
                 self.sessions.insert(
                     id,
                     Slot {
                         stream: *stream,
+                        spec,
                         last_used_ms: now,
                     },
                 );
@@ -499,6 +652,11 @@ impl ShardWorker {
                     }
                     None => Err(unknown_session(id)),
                 };
+                if res.is_ok() {
+                    // Journal before acknowledging: once the client
+                    // sees the reply, the samples are replayable.
+                    self.journal(|w| w.append_push(id, &samples));
+                }
                 let _ = reply.send(res);
             }
             ShardMsg::Window { id, full, reply } => {
@@ -530,6 +688,9 @@ impl ShardWorker {
                     }
                     None => Err(unknown_session(id)),
                 };
+                if res.is_ok() {
+                    self.journal(|w| w.append_close(id));
+                }
                 let _ = reply.send(res);
             }
             ShardMsg::Sweep => {} // sweep runs in the loop after handling
@@ -553,6 +714,10 @@ impl ShardWorker {
                 self.recycle(slot.stream);
                 self.live.fetch_sub(1, Relaxed);
                 self.metrics.sessions_evicted.fetch_add(1, Relaxed);
+                // Tombstone: an eviction must survive a crash, or the
+                // evicted session would resurrect from its OPEN/PUSH
+                // history on replay.
+                self.journal(|w| w.append_evict(id));
             }
         }
         self.counters.sessions.store(self.sessions.len() as u64, Relaxed);
@@ -562,6 +727,71 @@ impl ShardWorker {
         let mut cache = self.pool.take_at_least(0);
         cache.push(stream.into_scratch());
         self.pool.put(cache);
+    }
+
+    /// Run one journal append (no-op when durability is off), then
+    /// checkpoint if the cadence is due. Append failures are counted
+    /// and logged, never fatal — the coordinator keeps serving from
+    /// memory and the operator sees `journal_errors` climb.
+    fn journal<F>(&mut self, append: F)
+    where
+        F: FnOnce(&mut JournalWriter) -> io::Result<usize>,
+    {
+        let due = {
+            let d = match self.durable.as_mut() {
+                Some(d) => d,
+                None => return,
+            };
+            match append(&mut d.writer) {
+                Ok(bytes) => {
+                    d.since_ckpt += 1;
+                    self.counters.journal_lag.store(d.since_ckpt, Relaxed);
+                    self.metrics.journal_appends.fetch_add(1, Relaxed);
+                    self.metrics.journal_bytes.fetch_add(bytes as u64, Relaxed);
+                }
+                Err(e) => {
+                    eprintln!("pathsig: journal append failed on shard {}: {e}", d.shard);
+                    self.metrics.journal_errors.fetch_add(1, Relaxed);
+                }
+            }
+            d.since_ckpt >= d.checkpoint_every
+        };
+        if due {
+            self.write_checkpoint();
+        }
+    }
+
+    /// Snapshot every live session into the shard's checkpoint file
+    /// (atomic tmp → rename), then truncate the journal it covers.
+    /// No-op when durability is off; best-effort on IO failure.
+    fn write_checkpoint(&mut self) {
+        let d = match self.durable.as_mut() {
+            Some(d) => d,
+            None => return,
+        };
+        let sessions: Vec<(u64, &WordSpec, &StreamEngine)> = self
+            .sessions
+            .iter()
+            .map(|(&id, slot)| (id, &slot.spec, &slot.stream))
+            .collect();
+        match persist::write_checkpoint(&d.dir, d.shard, d.writer.seq(), &sessions) {
+            Ok(()) => {
+                if let Err(e) = d.writer.truncate() {
+                    eprintln!(
+                        "pathsig: journal truncate failed on shard {}: {e}",
+                        d.shard
+                    );
+                    self.metrics.journal_errors.fetch_add(1, Relaxed);
+                }
+                d.since_ckpt = 0;
+                self.counters.journal_lag.store(0, Relaxed);
+                self.metrics.checkpoints_written.fetch_add(1, Relaxed);
+            }
+            Err(e) => {
+                eprintln!("pathsig: checkpoint failed on shard {}: {e}", d.shard);
+                self.metrics.journal_errors.fetch_add(1, Relaxed);
+            }
+        }
     }
 
     fn now_ms(&self) -> u64 {
@@ -587,6 +817,15 @@ mod tests {
         StreamEngine::with_scratch(table, window, StreamScratch::default())
     }
 
+    fn open_on(
+        s: &ShardSet,
+        dim: usize,
+        depth: usize,
+        window: usize,
+    ) -> Result<StreamReply, StreamError> {
+        s.open(engine(dim, depth, window), WordSpec::Truncated { depth })
+    }
+
     fn set(shards: usize) -> ShardSet {
         let cfg = ShardConfig {
             shards,
@@ -599,7 +838,7 @@ mod tests {
     fn lifecycle_roundtrip_across_shards() {
         for shards in [1, 4] {
             let s = set(shards);
-            let opened = s.open(engine(1, 2, 2)).unwrap();
+            let opened = open_on(&s, 1, 2, 2).unwrap();
             let id = match opened {
                 StreamReply::Opened { session, out_dim } => {
                     assert_eq!(out_dim, 2);
@@ -634,9 +873,9 @@ mod tests {
             ..ShardConfig::default()
         };
         let s = ShardSet::new(cfg, Arc::new(Metrics::new()), Arc::new(Pool::default()));
-        s.open(engine(1, 1, 2)).unwrap();
-        s.open(engine(1, 1, 2)).unwrap();
-        let err = s.open(engine(1, 1, 2)).unwrap_err();
+        open_on(&s, 1, 1, 2).unwrap();
+        open_on(&s, 1, 1, 2).unwrap();
+        let err = open_on(&s, 1, 1, 2).unwrap_err();
         assert!(err.to_string().contains("session table full"), "{err}");
         assert_eq!(s.live_sessions(), 2);
     }
@@ -650,7 +889,7 @@ mod tests {
             ..ShardConfig::default()
         };
         let s = ShardSet::new(cfg, Arc::new(Metrics::new()), Arc::new(Pool::default()));
-        let id = match s.open(engine(1, 1, 2)).unwrap() {
+        let id = match open_on(&s, 1, 1, 2).unwrap() {
             StreamReply::Opened { session, .. } => {
                 session.strip_prefix('s').unwrap().parse::<u64>().unwrap()
             }
@@ -694,7 +933,7 @@ mod tests {
         };
         let metrics = Arc::new(Metrics::new());
         let s = ShardSet::new(cfg, Arc::clone(&metrics), Arc::new(Pool::default()));
-        let id = match s.open(engine(2, 2, 4)).unwrap() {
+        let id = match open_on(&s, 2, 2, 4).unwrap() {
             StreamReply::Opened { session, .. } => {
                 session.strip_prefix('s').unwrap().parse::<u64>().unwrap()
             }
@@ -716,7 +955,7 @@ mod tests {
         };
         let s = ShardSet::new(cfg, Arc::new(Metrics::new()), Arc::clone(&pool));
         for _ in 0..6 {
-            s.open(engine(1, 2, 4)).unwrap();
+            open_on(&s, 1, 2, 4).unwrap();
         }
         drop(s); // closes mailboxes, drains, joins, recycles scratch
         assert_eq!(pool.take_at_least(0).len(), 6);
@@ -726,7 +965,7 @@ mod tests {
     fn ids_are_global_and_sequential() {
         let s = set(8);
         for expect in 1..=16u64 {
-            match s.open(engine(1, 1, 2)).unwrap() {
+            match open_on(&s, 1, 1, 2).unwrap() {
                 StreamReply::Opened { session, .. } => {
                     assert_eq!(session, format!("s{expect}"));
                 }

@@ -29,11 +29,13 @@
 //! every response payload leads with the request verb it answers.
 //!
 //! The `stats` verb is v2's flagship: it returns per-shard counters
-//! (sessions, mailbox depth, sheds, pushes) from the actor-sharded
-//! session table ([`super::shard`]).
+//! (sessions, mailbox depth, sheds, pushes, journal lag) from the
+//! actor-sharded session table ([`super::shard`]) plus the
+//! content-addressed signature-cache counters ([`crate::persist`]).
 
 use super::protocol::{Backend, Request, RequestOp, MAX_STREAM_WINDOW};
 use super::shard::ShardStat;
+use crate::persist::CacheStats;
 use crate::words::{generate::sparse_leadlag_generators, Word, WordSpec};
 use std::io::{Read, Write};
 use std::net::TcpStream;
@@ -218,11 +220,14 @@ pub enum ResponseFrame {
 pub enum OkBody {
     /// `ping` / `stream_close`: no body.
     Empty,
-    /// `stats`: per-shard counters.
-    Stats(
+    /// `stats`: per-shard counters + signature-cache counters.
+    Stats {
         /// One row per shard.
-        Vec<ShardStat>,
-    ),
+        shards: Vec<ShardStat>,
+        /// Content-addressed signature-cache counters (all zero when
+        /// the cache is disabled).
+        cache: CacheStats,
+    },
     /// `signature` / `stream_window`: shaped values.
     Values {
         /// Logical shape.
@@ -621,15 +626,19 @@ impl ResponseFrame {
                 p.push(*v);
                 match body {
                     OkBody::Empty => {}
-                    OkBody::Stats(rows) => {
-                        put_u32(&mut p, rows.len() as u32);
-                        for r in rows {
+                    OkBody::Stats { shards, cache } => {
+                        put_u32(&mut p, shards.len() as u32);
+                        for r in shards {
                             put_u32(&mut p, r.shard as u32);
                             put_u64(&mut p, r.sessions);
                             put_u64(&mut p, r.mailbox_depth);
                             put_u64(&mut p, r.sheds);
                             put_u64(&mut p, r.pushes);
+                            put_u64(&mut p, r.journal_lag);
                         }
+                        put_u64(&mut p, cache.hits);
+                        put_u64(&mut p, cache.misses);
+                        put_u64(&mut p, cache.evictions);
                     }
                     OkBody::Values { shape, values } => {
                         put_u32(&mut p, shape.len() as u32);
@@ -694,9 +703,15 @@ impl ResponseFrame {
                                 mailbox_depth: c.u64()?,
                                 sheds: c.u64()?,
                                 pushes: c.u64()?,
+                                journal_lag: c.u64()?,
                             });
                         }
-                        OkBody::Stats(rows)
+                        let cache = CacheStats {
+                            hits: c.u64()?,
+                            misses: c.u64()?,
+                            evictions: c.u64()?,
+                        };
+                        OkBody::Stats { shards: rows, cache }
                     }
                     verb::SIGNATURE | verb::STREAM_WINDOW => {
                         let n = c.u32()? as usize;
@@ -947,13 +962,21 @@ mod tests {
             },
             ResponseFrame::Ok {
                 verb: verb::STATS,
-                body: OkBody::Stats(vec![ShardStat {
-                    shard: 0,
-                    sessions: 3,
-                    mailbox_depth: 1,
-                    sheds: 0,
-                    pushes: 42,
-                }]),
+                body: OkBody::Stats {
+                    shards: vec![ShardStat {
+                        shard: 0,
+                        sessions: 3,
+                        mailbox_depth: 1,
+                        sheds: 0,
+                        pushes: 42,
+                        journal_lag: 5,
+                    }],
+                    cache: CacheStats {
+                        hits: 7,
+                        misses: 2,
+                        evictions: 1,
+                    },
+                },
             },
             ResponseFrame::Ok {
                 verb: verb::STREAM_WINDOW,

@@ -35,6 +35,10 @@
 //!   by `python/compile/aot.py` (HLO text, see DESIGN.md).
 //! * [`coordinator`] — the L3 serving layer: TCP JSON-lines feature server,
 //!   dynamic batcher, router, stateful streaming sessions, metrics.
+//! * [`persist`] — durability: crash-safe per-shard session journals,
+//!   checkpointed recovery of streaming state, and a content-addressed
+//!   terminal-signature cache (checksummed binary records, from-scratch
+//!   SHA-256; off unless `--journal-dir` is given).
 //! * [`util`] — from-scratch substrates: JSON, PRNG, FFT, thread pool,
 //!   stats, CLI parsing, property-testing mini-framework.
 //! * [`bench`] — timing harness + counting allocator used by `cargo bench`.
@@ -72,6 +76,7 @@ pub mod fbm;
 pub mod nn;
 pub mod runtime;
 pub mod coordinator;
+pub mod persist;
 pub mod bench;
 
 /// Crate version string (mirrors `Cargo.toml`).

@@ -4,6 +4,8 @@
 //! pathsig serve        [--addr 127.0.0.1:7717] [--artifacts artifacts/]
 //!                      [--max-batch 32] [--max-wait-ms 2]
 //!                      [--shards 0] [--mailbox-cap 256] [--session-ttl-s 300]
+//!                      [--journal-dir DIR] [--checkpoint-every 256] [--fsync]
+//!                      [--sig-cache-cap 0]
 //! pathsig compute      --dim D --depth N [--steps M] [--seed S]
 //!                      [--projection trunc|lyndon] [--json]
 //! pathsig logsig       --dim D --depth N [--steps M] [--seed S]
@@ -79,6 +81,15 @@ fn cmd_serve(args: &Args) -> i32 {
     service.mailbox_capacity = args.usize("mailbox-cap", 256);
     service.session_ttl = std::time::Duration::from_secs(args.u64("session-ttl-s", 300));
     service.max_sessions = args.usize("max-sessions", 1024);
+    // Durability (off unless --journal-dir is given): shard workers
+    // journal session ops and checkpoint engine state there, and a
+    // restart on the same directory recovers every live session.
+    service.journal_dir = args.get("journal-dir").map(std::path::PathBuf::from);
+    service.checkpoint_every = args.u64("checkpoint-every", 256);
+    service.fsync = args.flag("fsync");
+    // Content-addressed cache of terminal signatures for the batch
+    // `signature` verb (entries; 0 = disabled).
+    service.sig_cache_cap = args.usize("sig-cache-cap", 0);
     let service = Arc::new(service);
     let config = ServerConfig {
         addr: args.str_or("addr", "127.0.0.1:7717").to_string(),

@@ -1,0 +1,183 @@
+//! Bounded content-addressed cache of terminal signatures.
+//!
+//! The batch `signature` verb is frequently replayed with identical
+//! inputs (retries, fan-out duplication, idempotent pipelines). The
+//! cache keys each result by content, never by request identity:
+//!
+//! ```text
+//! key = SHA-256( manifest_digest ‖ path_digest )
+//! manifest_digest = SHA-256("pathsig-manifest v1\ndim {d}\nspec {spec}\n")
+//! path_digest     = SHA-256(increments x_{j} − x_{j−1}, f64 LE bytes)
+//! ```
+//!
+//! The manifest is a tiny self-describing text block (the
+//! manifest+sha256 idiom), so two requests hit the same entry iff they
+//! agree on the word-set configuration *and* on the path increments —
+//! hashing increments rather than samples means a translated path
+//! (which has the same signature) shares the entry. Eviction is FIFO
+//! by insertion order, bounded by entry count; hits, misses and
+//! evictions are counted for `stats_json` and the v2 `stats` verb.
+
+use super::sha256::Sha256;
+use std::collections::{HashMap, VecDeque};
+
+/// Point-in-time cache counters (also carried in v2 `stats` frames).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Lookups answered from the cache.
+    pub hits: u64,
+    /// Lookups that fell through to a real computation.
+    pub misses: u64,
+    /// Entries displaced by the capacity bound.
+    pub evictions: u64,
+}
+
+/// Compute the content key for a `(dim, spec, path)` request. `spec_id`
+/// is the coordinator's canonical spec-identity string; `path` is the
+/// flat row-major sample buffer.
+pub fn cache_key(dim: usize, spec_id: &str, path: &[f64]) -> [u8; 32] {
+    let mut manifest = Sha256::new();
+    manifest.update(format!("pathsig-manifest v1\ndim {dim}\nspec {spec_id}\n").as_bytes());
+    let mut incr = Sha256::new();
+    if dim > 0 {
+        let mut buf = [0u8; 8];
+        for j in 1..path.len() / dim {
+            for i in 0..dim {
+                let dx = path[j * dim + i] - path[(j - 1) * dim + i];
+                buf.copy_from_slice(&dx.to_le_bytes());
+                incr.update(&buf);
+            }
+        }
+    }
+    let mut key = Sha256::new();
+    key.update(&manifest.finish());
+    key.update(&incr.finish());
+    key.finish()
+}
+
+/// Bounded FIFO map from content keys to terminal signature vectors.
+/// Capacity 0 disables the cache entirely (every lookup misses without
+/// counting — the durability-off configuration stays bitwise-silent).
+#[derive(Debug, Default)]
+pub struct SigCache {
+    capacity: usize,
+    map: HashMap<[u8; 32], Vec<f64>>,
+    order: VecDeque<[u8; 32]>,
+    stats: CacheStats,
+}
+
+impl SigCache {
+    /// Cache bounded to `capacity` entries (0 = disabled).
+    pub fn new(capacity: usize) -> SigCache {
+        SigCache {
+            capacity,
+            map: HashMap::new(),
+            order: VecDeque::new(),
+            stats: CacheStats::default(),
+        }
+    }
+
+    /// Whether inserts/lookups do anything at all.
+    pub fn enabled(&self) -> bool {
+        self.capacity > 0
+    }
+
+    /// Entries currently held.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// True when no entries are held.
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+
+    /// Look up a key, counting the hit or miss.
+    pub fn get(&mut self, key: &[u8; 32]) -> Option<&[f64]> {
+        if !self.enabled() {
+            return None;
+        }
+        match self.map.get(key) {
+            Some(v) => {
+                self.stats.hits += 1;
+                Some(v.as_slice())
+            }
+            None => {
+                self.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert a computed signature, evicting the oldest entry when at
+    /// capacity. Re-inserting an existing key refreshes the value
+    /// without growing the order queue.
+    pub fn insert(&mut self, key: [u8; 32], value: Vec<f64>) {
+        if !self.enabled() {
+            return;
+        }
+        if self.map.insert(key, value).is_some() {
+            return;
+        }
+        self.order.push_back(key);
+        while self.map.len() > self.capacity {
+            if let Some(old) = self.order.pop_front() {
+                if self.map.remove(&old).is_some() {
+                    self.stats.evictions += 1;
+                }
+            } else {
+                break;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keys_depend_on_increments_not_offsets() {
+        let a = cache_key(2, "trunc:3", &[0.0, 0.0, 1.0, 2.0, 3.0, 5.0]);
+        let b = cache_key(2, "trunc:3", &[10.0, -4.0, 11.0, -2.0, 13.0, 1.0]);
+        assert_eq!(a, b, "translated paths share a signature, hence a key");
+        let c = cache_key(2, "trunc:3", &[0.0, 0.0, 1.0, 2.0, 3.0, 5.5]);
+        assert_ne!(a, c);
+        let d = cache_key(2, "trunc:2", &[0.0, 0.0, 1.0, 2.0, 3.0, 5.0]);
+        assert_ne!(a, d, "manifest digest separates configurations");
+    }
+
+    #[test]
+    fn bounded_fifo_with_counters() {
+        let mut c = SigCache::new(2);
+        let k = |n: u8| {
+            let mut k = [0u8; 32];
+            k[0] = n;
+            k
+        };
+        assert!(c.get(&k(1)).is_none());
+        c.insert(k(1), vec![1.0]);
+        c.insert(k(2), vec![2.0]);
+        assert_eq!(c.get(&k(1)), Some(&[1.0][..]));
+        c.insert(k(3), vec![3.0]); // evicts k(1), the oldest
+        assert!(c.get(&k(1)).is_none());
+        assert_eq!(c.get(&k(3)), Some(&[3.0][..]));
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.evictions), (2, 2, 1));
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn capacity_zero_is_inert() {
+        let mut c = SigCache::new(0);
+        c.insert([0u8; 32], vec![1.0]);
+        assert!(c.get(&[0u8; 32]).is_none());
+        assert_eq!(c.stats(), CacheStats::default());
+        assert!(c.is_empty());
+    }
+}

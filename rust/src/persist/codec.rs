@@ -1,0 +1,710 @@
+//! Length-prefixed, checksummed binary records — the on-disk idiom of
+//! the durability layer (journal + checkpoint files share it).
+//!
+//! ## Record framing
+//!
+//! ```text
+//! [u32 LE len] [payload = u8 kind · u64 LE seq · body] [u32 LE crc]
+//! ```
+//!
+//! `len` counts payload bytes only; `crc` is CRC-32 (IEEE/zlib
+//! polynomial, reflected — byte-compatible with Python's `zlib.crc32`,
+//! which is what `scripts/gen_goldens.py` uses to emit the byte-exact
+//! goldens in `rust/tests/golden/persist_records.hex`). `seq` is the
+//! writer's monotonically increasing record number; checkpoint records
+//! reuse the field as the journal-sequence watermark they cover.
+//!
+//! ## Record kinds
+//!
+//! | kind | name        | body |
+//! |------|-------------|------|
+//! | 1    | `OPEN`      | `u64 id · u32 dim · u32 window · spec` |
+//! | 2    | `PUSH`      | `u64 id · f64s samples` |
+//! | 3    | `CLOSE`     | `u64 id` |
+//! | 4    | `EVICT`     | `u64 id` (tombstone — identical replay semantics to `CLOSE`) |
+//! | 5    | `SNAP`      | `u64 id · u32 dim · spec · stream checkpoint` |
+//! | 6    | `CKPT_HEAD` | `u32 n_sessions` (seq field = watermark) |
+//!
+//! Repeated scalar encodings follow wire v2: `f64s` = `u32 count` +
+//! count little-endian doubles, `u16s` = `u32 count` + count `u16`s.
+//! A [`WordSpec`] is a `u8` tag (0 truncated, 1 lyndon, 2 anisotropic,
+//! 3 dag, 4 concat-generated, 5 custom) followed by the variant fields,
+//! and a [`StreamCheckpoint`] is its four counters followed by the five
+//! buffers (see [`encode_snap`]).
+//!
+//! ## Reading and the torn-tail rule
+//!
+//! [`RecordReader`] iterates records, validating the length prefix,
+//! remaining bytes, checksum, kind and a non-decreasing `seq` before
+//! yielding anything. At the **first** invalid record it stops and
+//! reports the byte offset of the end of the last good record
+//! ([`RecordReader::good_len`]) — recovery truncates the file there and
+//! replays only the clean prefix (the crash-mid-write contract).
+
+use crate::sig::StreamCheckpoint;
+use crate::words::{Word, WordSpec};
+
+/// Fixed per-record byte overhead (length prefix + checksum).
+pub const RECORD_OVERHEAD: usize = 8;
+
+/// Hard cap on a single record's payload length (64 MiB) — a corrupt
+/// length prefix must not drive a giant allocation.
+pub const MAX_RECORD_LEN: usize = 1 << 26;
+
+/// Record kind bytes (see the module table).
+pub mod kind {
+    /// Session opened: id, dim, window, word spec.
+    pub const OPEN: u8 = 1;
+    /// Samples pushed into a session.
+    pub const PUSH: u8 = 2;
+    /// Session closed by the client.
+    pub const CLOSE: u8 = 3;
+    /// Session evicted by the TTL sweeper (tombstone).
+    pub const EVICT: u8 = 4;
+    /// Per-session engine snapshot inside a checkpoint file.
+    pub const SNAP: u8 = 5;
+    /// Checkpoint header: journal watermark + session count.
+    pub const CKPT_HEAD: u8 = 6;
+}
+
+const CRC_TABLE: [u32; 256] = build_crc_table();
+
+const fn build_crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+/// CRC-32 (IEEE 802.3 polynomial, reflected, init/xorout `!0`) —
+/// bit-for-bit the checksum `zlib.crc32` computes.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = !0u32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+// ---------------------------------------------------------------------
+// Encoding
+// ---------------------------------------------------------------------
+
+fn put_u16(buf: &mut Vec<u8>, v: u16) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64s(buf: &mut Vec<u8>, vs: &[f64]) {
+    put_u32(buf, vs.len() as u32);
+    for &v in vs {
+        put_f64(buf, v);
+    }
+}
+
+fn put_u16s(buf: &mut Vec<u8>, vs: &[u16]) {
+    put_u32(buf, vs.len() as u32);
+    for &v in vs {
+        put_u16(buf, v);
+    }
+}
+
+fn put_spec(buf: &mut Vec<u8>, spec: &WordSpec) {
+    match spec {
+        WordSpec::Truncated { depth } => {
+            buf.push(0);
+            put_u32(buf, *depth as u32);
+        }
+        WordSpec::Lyndon { depth } => {
+            buf.push(1);
+            put_u32(buf, *depth as u32);
+        }
+        WordSpec::Anisotropic { gamma, cutoff } => {
+            buf.push(2);
+            put_f64s(buf, gamma);
+            put_f64(buf, *cutoff);
+        }
+        WordSpec::Dag { depth, edges } => {
+            buf.push(3);
+            put_u32(buf, *depth as u32);
+            put_u32(buf, edges.len() as u32);
+            for row in edges {
+                put_u16s(buf, row);
+            }
+        }
+        WordSpec::ConcatGenerated { depth, generators } => {
+            buf.push(4);
+            put_u32(buf, *depth as u32);
+            put_u32(buf, generators.len() as u32);
+            for w in generators {
+                put_u16s(buf, &w.0);
+            }
+        }
+        WordSpec::Custom { words } => {
+            buf.push(5);
+            put_u32(buf, words.len() as u32);
+            for w in words {
+                put_u16s(buf, &w.0);
+            }
+        }
+    }
+}
+
+/// Frame `payload`-building closure output as a complete record
+/// (`len · kind · seq · body · crc`) appended to `buf`. Returns the
+/// record's total byte length.
+fn frame_record(buf: &mut Vec<u8>, kind: u8, seq: u64, body: impl FnOnce(&mut Vec<u8>)) -> usize {
+    let len_at = buf.len();
+    put_u32(buf, 0); // patched below
+    let payload_at = buf.len();
+    buf.push(kind);
+    put_u64(buf, seq);
+    body(buf);
+    let payload_len = buf.len() - payload_at;
+    buf[len_at..len_at + 4].copy_from_slice(&(payload_len as u32).to_le_bytes());
+    let crc = crc32(&buf[payload_at..]);
+    put_u32(buf, crc);
+    buf.len() - len_at
+}
+
+/// Append an `OPEN` record. Returns its encoded length in bytes.
+pub fn encode_open(
+    buf: &mut Vec<u8>,
+    seq: u64,
+    id: u64,
+    dim: usize,
+    window: usize,
+    spec: &WordSpec,
+) -> usize {
+    frame_record(buf, kind::OPEN, seq, |b| {
+        put_u64(b, id);
+        put_u32(b, dim as u32);
+        put_u32(b, window as u32);
+        put_spec(b, spec);
+    })
+}
+
+/// Append a `PUSH` record. Returns its encoded length in bytes.
+pub fn encode_push(buf: &mut Vec<u8>, seq: u64, id: u64, samples: &[f64]) -> usize {
+    frame_record(buf, kind::PUSH, seq, |b| {
+        put_u64(b, id);
+        put_f64s(b, samples);
+    })
+}
+
+/// Append a `CLOSE` record. Returns its encoded length in bytes.
+pub fn encode_close(buf: &mut Vec<u8>, seq: u64, id: u64) -> usize {
+    frame_record(buf, kind::CLOSE, seq, |b| put_u64(b, id))
+}
+
+/// Append an `EVICT` tombstone record. Returns its encoded length.
+pub fn encode_evict(buf: &mut Vec<u8>, seq: u64, id: u64) -> usize {
+    frame_record(buf, kind::EVICT, seq, |b| put_u64(b, id))
+}
+
+/// Append a `CKPT_HEAD` record (`watermark` rides in the seq field).
+pub fn encode_ckpt_head(buf: &mut Vec<u8>, watermark: u64, n_sessions: usize) -> usize {
+    frame_record(buf, kind::CKPT_HEAD, watermark, |b| {
+        put_u32(b, n_sessions as u32)
+    })
+}
+
+/// Append a `SNAP` record carrying one session's full engine state.
+pub fn encode_snap(
+    buf: &mut Vec<u8>,
+    watermark: u64,
+    id: u64,
+    dim: usize,
+    spec: &WordSpec,
+    ck: &StreamCheckpoint,
+) -> usize {
+    frame_record(buf, kind::SNAP, watermark, |b| {
+        put_u64(b, id);
+        put_u32(b, dim as u32);
+        put_spec(b, spec);
+        put_u32(b, ck.window as u32);
+        put_u64(b, ck.n_seen as u64);
+        put_u32(b, ck.back_len as u32);
+        put_u32(b, ck.front_len as u32);
+        put_f64s(b, &ck.last);
+        put_f64s(b, &ck.total);
+        put_f64s(b, &ck.back_agg);
+        put_f64s(b, &ck.back_dx);
+        put_f64s(b, &ck.front);
+    })
+}
+
+// ---------------------------------------------------------------------
+// Decoding
+// ---------------------------------------------------------------------
+
+/// A decoded record body (seq is reported alongside by the reader).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Record {
+    /// Session opened.
+    Open {
+        /// Session id.
+        id: u64,
+        /// Alphabet size.
+        dim: usize,
+        /// Sliding-window length in increments.
+        window: usize,
+        /// Word-set specification.
+        spec: WordSpec,
+    },
+    /// Samples pushed (flat row-major, `k·dim` values).
+    Push {
+        /// Session id.
+        id: u64,
+        /// The pushed samples.
+        samples: Vec<f64>,
+    },
+    /// Session closed.
+    Close {
+        /// Session id.
+        id: u64,
+    },
+    /// Session evicted (tombstone).
+    Evict {
+        /// Session id.
+        id: u64,
+    },
+    /// One session's engine snapshot (checkpoint files only).
+    Snap {
+        /// Session id.
+        id: u64,
+        /// Alphabet size.
+        dim: usize,
+        /// Word-set specification.
+        spec: WordSpec,
+        /// Serialized two-stack engine state.
+        ck: StreamCheckpoint,
+    },
+    /// Checkpoint header (checkpoint files only).
+    CkptHead {
+        /// Number of `SNAP` records that follow.
+        n_sessions: usize,
+    },
+}
+
+/// Bounds-checked byte cursor (the wire-v2 `Cur` idiom).
+struct Cur<'a> {
+    b: &'a [u8],
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.b.len() < n {
+            return Err(format!("record body short: need {n}, have {}", self.b.len()));
+        }
+        let (head, rest) = self.b.split_at(n);
+        self.b = rest;
+        Ok(head)
+    }
+
+    fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, String> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, String> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    fn f64(&mut self) -> Result<f64, String> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn f64s(&mut self) -> Result<Vec<f64>, String> {
+        let n = self.u32()? as usize;
+        if self.b.len() < n * 8 {
+            return Err(format!("f64s count {n} exceeds remaining bytes"));
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.f64()?);
+        }
+        Ok(out)
+    }
+
+    fn u16s(&mut self) -> Result<Vec<u16>, String> {
+        let n = self.u32()? as usize;
+        if self.b.len() < n * 2 {
+            return Err(format!("u16s count {n} exceeds remaining bytes"));
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let b = self.take(2)?;
+            out.push(u16::from_le_bytes([b[0], b[1]]));
+        }
+        Ok(out)
+    }
+
+    fn spec(&mut self) -> Result<WordSpec, String> {
+        match self.u8()? {
+            0 => Ok(WordSpec::Truncated {
+                depth: self.u32()? as usize,
+            }),
+            1 => Ok(WordSpec::Lyndon {
+                depth: self.u32()? as usize,
+            }),
+            2 => {
+                let gamma = self.f64s()?;
+                let cutoff = self.f64()?;
+                Ok(WordSpec::Anisotropic { gamma, cutoff })
+            }
+            3 => {
+                let depth = self.u32()? as usize;
+                let n = self.u32()? as usize;
+                if n > self.b.len() {
+                    return Err(format!("dag row count {n} exceeds remaining bytes"));
+                }
+                let mut edges = Vec::with_capacity(n);
+                for _ in 0..n {
+                    edges.push(self.u16s()?);
+                }
+                Ok(WordSpec::Dag { depth, edges })
+            }
+            4 => {
+                let depth = self.u32()? as usize;
+                let n = self.u32()? as usize;
+                if n > self.b.len() {
+                    return Err(format!("generator count {n} exceeds remaining bytes"));
+                }
+                let mut generators = Vec::with_capacity(n);
+                for _ in 0..n {
+                    generators.push(Word(self.u16s()?));
+                }
+                Ok(WordSpec::ConcatGenerated { depth, generators })
+            }
+            5 => {
+                let n = self.u32()? as usize;
+                if n > self.b.len() {
+                    return Err(format!("word count {n} exceeds remaining bytes"));
+                }
+                let mut words = Vec::with_capacity(n);
+                for _ in 0..n {
+                    words.push(Word(self.u16s()?));
+                }
+                Ok(WordSpec::Custom { words })
+            }
+            t => Err(format!("unknown word-spec tag {t}")),
+        }
+    }
+
+    fn finish(self) -> Result<(), String> {
+        if self.b.is_empty() {
+            Ok(())
+        } else {
+            Err(format!("{} trailing bytes in record body", self.b.len()))
+        }
+    }
+}
+
+fn decode_body(kind: u8, body: &[u8]) -> Result<Record, String> {
+    let mut c = Cur { b: body };
+    let rec = match kind {
+        kind::OPEN => Record::Open {
+            id: c.u64()?,
+            dim: c.u32()? as usize,
+            window: c.u32()? as usize,
+            spec: c.spec()?,
+        },
+        kind::PUSH => Record::Push {
+            id: c.u64()?,
+            samples: c.f64s()?,
+        },
+        kind::CLOSE => Record::Close { id: c.u64()? },
+        kind::EVICT => Record::Evict { id: c.u64()? },
+        kind::SNAP => {
+            let id = c.u64()?;
+            let dim = c.u32()? as usize;
+            let spec = c.spec()?;
+            let window = c.u32()? as usize;
+            let n_seen = c.u64()? as usize;
+            let back_len = c.u32()? as usize;
+            let front_len = c.u32()? as usize;
+            let last = c.f64s()?;
+            let total = c.f64s()?;
+            let back_agg = c.f64s()?;
+            let back_dx = c.f64s()?;
+            let front = c.f64s()?;
+            Record::Snap {
+                id,
+                dim,
+                spec,
+                ck: StreamCheckpoint {
+                    window,
+                    n_seen,
+                    back_len,
+                    front_len,
+                    last,
+                    total,
+                    back_agg,
+                    back_dx,
+                    front,
+                },
+            }
+        }
+        kind::CKPT_HEAD => Record::CkptHead {
+            n_sessions: c.u32()? as usize,
+        },
+        k => return Err(format!("unknown record kind {k}")),
+    };
+    c.finish()?;
+    Ok(rec)
+}
+
+/// Streaming validator/decoder over a byte buffer of records.
+///
+/// Yields `(seq, record)` pairs until the bytes run out or the first
+/// invalid record; after iteration, [`RecordReader::good_len`] is the
+/// clean-prefix length (the truncation point) and
+/// [`RecordReader::error`] describes what stopped the scan, if
+/// anything. A partial trailing record — the torn-write case — is an
+/// error like any other corruption; callers decide whether to treat a
+/// clean EOF differently.
+pub struct RecordReader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+    good: usize,
+    last_seq: Option<u64>,
+    error: Option<String>,
+}
+
+impl<'a> RecordReader<'a> {
+    /// Start scanning `bytes` from offset 0.
+    pub fn new(bytes: &'a [u8]) -> RecordReader<'a> {
+        RecordReader {
+            bytes,
+            pos: 0,
+            good: 0,
+            last_seq: None,
+            error: None,
+        }
+    }
+
+    /// Byte length of the valid record prefix scanned so far.
+    pub fn good_len(&self) -> usize {
+        self.good
+    }
+
+    /// What stopped the scan (`None` while scanning or on a clean EOF).
+    pub fn error(&self) -> Option<&str> {
+        self.error.as_deref()
+    }
+
+    fn fail(&mut self, msg: String) -> Option<(u64, Record)> {
+        self.error = Some(msg);
+        None
+    }
+
+    /// Decode the next record, or `None` at EOF / first corruption.
+    #[allow(clippy::should_implement_trait)]
+    pub fn next(&mut self) -> Option<(u64, Record)> {
+        if self.error.is_some() || self.pos == self.bytes.len() {
+            return None;
+        }
+        let rest = &self.bytes[self.pos..];
+        if rest.len() < 4 {
+            return self.fail(format!("torn length prefix ({} bytes)", rest.len()));
+        }
+        let len = u32::from_le_bytes([rest[0], rest[1], rest[2], rest[3]]) as usize;
+        if len < 9 {
+            return self.fail(format!("record payload too short ({len} bytes)"));
+        }
+        if len > MAX_RECORD_LEN {
+            return self.fail(format!("record payload too long ({len} bytes)"));
+        }
+        if rest.len() < 4 + len + 4 {
+            return self.fail(format!(
+                "torn record: payload {len} + crc, only {} bytes left",
+                rest.len() - 4
+            ));
+        }
+        let payload = &rest[4..4 + len];
+        let want = u32::from_le_bytes([
+            rest[4 + len],
+            rest[4 + len + 1],
+            rest[4 + len + 2],
+            rest[4 + len + 3],
+        ]);
+        let got = crc32(payload);
+        if got != want {
+            return self.fail(format!("crc mismatch: stored {want:#010x}, computed {got:#010x}"));
+        }
+        let kind = payload[0];
+        let seq = u64::from_le_bytes([
+            payload[1], payload[2], payload[3], payload[4], payload[5], payload[6], payload[7],
+            payload[8],
+        ]);
+        if let Some(prev) = self.last_seq {
+            if seq < prev {
+                return self.fail(format!("sequence went backwards ({prev} → {seq})"));
+            }
+        }
+        match decode_body(kind, &payload[9..]) {
+            Ok(rec) => {
+                self.pos += 4 + len + 4;
+                self.good = self.pos;
+                self.last_seq = Some(seq);
+                Some((seq, rec))
+            }
+            Err(e) => self.fail(e),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_matches_zlib_vectors() {
+        // zlib.crc32(b"") == 0, zlib.crc32(b"123456789") == 0xCBF43926
+        // (the classic CHECK value), zlib.crc32(b"hello") == 0x3610A686.
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b"hello"), 0x3610_A686);
+    }
+
+    fn all_specs() -> Vec<WordSpec> {
+        vec![
+            WordSpec::Truncated { depth: 3 },
+            WordSpec::Lyndon { depth: 4 },
+            WordSpec::Anisotropic {
+                gamma: vec![1.0, 2.5],
+                cutoff: 3.75,
+            },
+            WordSpec::Dag {
+                depth: 2,
+                edges: vec![vec![1], vec![0, 1]],
+            },
+            WordSpec::ConcatGenerated {
+                depth: 4,
+                generators: vec![Word(vec![0, 1]), Word(vec![1])],
+            },
+            WordSpec::Custom {
+                words: vec![Word(vec![0]), Word(vec![1, 0, 1])],
+            },
+        ]
+    }
+
+    #[test]
+    fn records_roundtrip() {
+        let ck = StreamCheckpoint {
+            window: 3,
+            n_seen: 5,
+            back_len: 1,
+            front_len: 2,
+            last: vec![0.5, -1.0],
+            total: vec![1.0, 2.0, 3.0],
+            back_agg: vec![1.0, 0.0, 0.25],
+            back_dx: vec![0.125, -0.5],
+            front: vec![1.0, 1.5, 2.5, 1.0, 0.5, 0.75],
+        };
+        let mut buf = Vec::new();
+        for (i, spec) in all_specs().into_iter().enumerate() {
+            encode_open(&mut buf, 2 * i as u64, 10 + i as u64, 2, 8, &spec);
+            encode_snap(&mut buf, 2 * i as u64 + 1, 10 + i as u64, 2, &spec, &ck);
+        }
+        encode_push(&mut buf, 100, 7, &[0.5, 1.5, 2.5]);
+        encode_close(&mut buf, 101, 7);
+        encode_evict(&mut buf, 102, 8);
+        encode_ckpt_head(&mut buf, 103, 6);
+        let mut r = RecordReader::new(&buf);
+        let mut n = 0;
+        while let Some((seq, rec)) = r.next() {
+            match rec {
+                Record::Open { dim, window, .. } => {
+                    assert_eq!((dim, window), (2, 8));
+                }
+                Record::Snap { ck: got, .. } => assert_eq!(got, ck),
+                Record::Push { id, samples } => {
+                    assert_eq!((id, seq), (7, 100));
+                    assert_eq!(samples, vec![0.5, 1.5, 2.5]);
+                }
+                Record::Close { id } => assert_eq!(id, 7),
+                Record::Evict { id } => assert_eq!(id, 8),
+                Record::CkptHead { n_sessions } => assert_eq!(n_sessions, 6),
+            }
+            n += 1;
+        }
+        assert_eq!(n, 16);
+        assert_eq!(r.error(), None);
+        assert_eq!(r.good_len(), buf.len());
+    }
+
+    #[test]
+    fn torn_tail_keeps_clean_prefix() {
+        let mut buf = Vec::new();
+        encode_open(&mut buf, 1, 1, 1, 2, &WordSpec::Truncated { depth: 2 });
+        let clean = buf.len();
+        encode_push(&mut buf, 2, 1, &[0.5]);
+        // Tear the final record anywhere inside it: the reader must
+        // still yield the first record and truncate at its end.
+        for cut in clean + 1..buf.len() {
+            let torn = &buf[..cut];
+            let mut r = RecordReader::new(torn);
+            assert!(matches!(r.next(), Some((1, Record::Open { .. }))));
+            assert!(r.next().is_none());
+            assert_eq!(r.good_len(), clean, "cut at {cut}");
+            assert!(r.error().is_some(), "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn bit_flips_never_pass_the_crc() {
+        let mut buf = Vec::new();
+        encode_push(&mut buf, 9, 3, &[1.0, 2.0]);
+        for i in 0..buf.len() * 8 {
+            let mut bad = buf.clone();
+            bad[i / 8] ^= 1 << (i % 8);
+            let mut r = RecordReader::new(&bad);
+            // Either the length prefix now lies (torn) or the crc
+            // catches it; a flipped record must never decode.
+            assert!(r.next().is_none(), "bit {i} slipped through");
+            assert_eq!(r.good_len(), 0);
+        }
+    }
+
+    #[test]
+    fn sequence_regression_is_corruption() {
+        let mut buf = Vec::new();
+        encode_close(&mut buf, 5, 1);
+        let clean = buf.len();
+        encode_close(&mut buf, 4, 2);
+        let mut r = RecordReader::new(&buf);
+        assert!(r.next().is_some());
+        assert!(r.next().is_none());
+        assert_eq!(r.good_len(), clean);
+        assert!(r.error().unwrap().contains("backwards"));
+    }
+}

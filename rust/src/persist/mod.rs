@@ -1,0 +1,71 @@
+//! Durability subsystem: crash-safe session journals, checkpointed
+//! recovery, and a content-addressed signature cache.
+//!
+//! The coordinator's streaming sessions (see [`crate::coordinator`])
+//! are long-lived sliding windows whose state is expensive to rebuild
+//! from raw ticks. This module makes that state survive process death
+//! with zero new dependencies:
+//!
+//! * [`codec`] — length-prefixed binary records in the wire-v2 idiom,
+//!   each carrying a kind byte, a monotone sequence number and a
+//!   CRC-32 checksum (zlib-compatible, so the Python golden generator
+//!   mirrors it byte-for-byte);
+//! * [`journal`] — per-shard append-only journals plus atomically
+//!   renamed checkpoints of the two-stack
+//!   [`crate::sig::StreamEngine`] state, and the boot-time recovery
+//!   scan (checkpoint load + short tail replay, torn tails truncated,
+//!   tombstones honored);
+//! * [`cache`] — a bounded content-addressed cache of terminal
+//!   signatures keyed by (word-set manifest sha256, path-increments
+//!   hash), consulted by the batch `signature` verb;
+//! * [`sha256`] — the from-scratch SHA-256 backing those keys.
+//!
+//! Durability is **off by default**: without `--journal-dir` the
+//! coordinator touches no files and every existing code path is
+//! bitwise unchanged.
+
+pub mod cache;
+pub mod codec;
+pub mod journal;
+pub mod sha256;
+
+pub use cache::{cache_key, CacheStats, SigCache};
+pub use journal::{
+    ckpt_path, journal_path, recover_dir, write_checkpoint, JournalWriter, Recovery,
+    RecoveredSession, RecoveryStats,
+};
+
+use std::path::PathBuf;
+
+/// Coordinator durability knobs (CLI: `--journal-dir`,
+/// `--checkpoint-every`, `--fsync`). Carried inside
+/// [`crate::coordinator::ShardConfig`]; `None` there means durability
+/// is off and no persistence code runs.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DurabilityConfig {
+    /// Directory holding `shard-{i}.journal` / `shard-{i}.ckpt`.
+    pub dir: PathBuf,
+    /// Write a checkpoint (and truncate the journal) every this many
+    /// journaled ops per shard.
+    pub checkpoint_every: u64,
+    /// `fdatasync` after every journal append (slower, but a crash
+    /// loses at most the record being written).
+    pub fsync: bool,
+    /// Per-session float budget recovery must respect when
+    /// re-admitting sessions (mirrors the service's
+    /// `max_session_floats`; `usize::MAX` = unbounded).
+    pub max_session_floats: usize,
+}
+
+impl DurabilityConfig {
+    /// Defaults matching the CLI: checkpoint every 256 ops, no fsync,
+    /// unbounded per-session floats.
+    pub fn new(dir: PathBuf) -> DurabilityConfig {
+        DurabilityConfig {
+            dir,
+            checkpoint_every: 256,
+            fsync: false,
+            max_session_floats: usize::MAX,
+        }
+    }
+}

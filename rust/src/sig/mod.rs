@@ -41,7 +41,7 @@ pub use forward::{
 };
 pub use lanes::{backward_step_lanes, chen_update_lanes, ForwardWorkspace, DEFAULT_LANE_WIDTH};
 pub use schedule::{plan, ChunkPolicy, TimeMode, MIN_TIME_STEPS};
-pub use stream::{MultiStream, StreamEngine, StreamScratch, StreamTable};
+pub use stream::{MultiStream, StreamCheckpoint, StreamEngine, StreamScratch, StreamTable};
 pub use tree::{
     sig_backward_batch_tree_into, signature_and_backward_batch_tree_into,
     signature_batch_tree_into, windowed_signatures_batch_tree_into,

@@ -603,6 +603,127 @@ impl StreamEngine {
     pub fn into_scratch(self) -> StreamScratch {
         self.s
     }
+
+    /// Snapshot the full two-stack state into a portable value (the
+    /// durability layer's `SNAP` record, see [`crate::persist`]). The
+    /// snapshot carries everything needed to resume: counters plus the
+    /// `last`/`total`/`back_agg`/`back_dx`/`front` buffers. The
+    /// transient `dx`/`qstate` scratch is *not* captured — it holds no
+    /// state between pushes.
+    pub fn checkpoint(&self) -> StreamCheckpoint {
+        StreamCheckpoint {
+            window: self.window,
+            n_seen: self.n_seen,
+            back_len: self.back_len,
+            front_len: self.front_len,
+            last: self.s.last.clone(),
+            total: self.s.total.clone(),
+            back_agg: self.s.back_agg.clone(),
+            back_dx: self.s.back_dx[..self.back_len * self.tbl.dim()].to_vec(),
+            front: self.s.front[..self.front_len * self.tbl.state_len()].to_vec(),
+        }
+    }
+
+    /// Rebuild a stream from a [`StreamCheckpoint`] over `tbl`, reusing
+    /// a recycled buffer set. Every buffer length and counter is
+    /// validated against the table and the two-stack invariant
+    /// (`window_fill == min(n_seen − 1, window)`), so a forged or
+    /// table-mismatched snapshot errors instead of corrupting state.
+    /// A restored engine is observationally identical to the one that
+    /// was checkpointed: subsequent pushes and window/signature queries
+    /// produce bitwise-equal results.
+    pub fn from_checkpoint(
+        tbl: Arc<StreamTable>,
+        ck: &StreamCheckpoint,
+        mut s: StreamScratch,
+    ) -> Result<StreamEngine, String> {
+        let d = tbl.dim();
+        let sl = tbl.state_len();
+        if ck.window == 0 {
+            return Err("checkpoint window must hold at least one increment".into());
+        }
+        let fill = ck.front_len + ck.back_len;
+        if fill > ck.window {
+            return Err(format!(
+                "checkpoint fill {fill} exceeds window {}",
+                ck.window
+            ));
+        }
+        if fill != ck.n_seen.saturating_sub(1).min(ck.window) {
+            return Err(format!(
+                "checkpoint fill {fill} inconsistent with n_seen {} and window {}",
+                ck.n_seen, ck.window
+            ));
+        }
+        if ck.last.len() != d
+            || ck.total.len() != sl
+            || ck.back_agg.len() != sl
+            || ck.back_dx.len() != ck.back_len * d
+            || ck.front.len() != ck.front_len * sl
+        {
+            return Err(format!(
+                "checkpoint buffer lengths do not match the table \
+                 (d {d}, state_len {sl}): last {}, total {}, back_agg {}, \
+                 back_dx {}, front {}",
+                ck.last.len(),
+                ck.total.len(),
+                ck.back_agg.len(),
+                ck.back_dx.len(),
+                ck.front.len()
+            ));
+        }
+        s.last.clear();
+        s.last.extend_from_slice(&ck.last);
+        s.total.clear();
+        s.total.extend_from_slice(&ck.total);
+        s.back_agg.clear();
+        s.back_agg.extend_from_slice(&ck.back_agg);
+        s.back_dx.clear();
+        s.back_dx.reserve(ck.window * d);
+        s.back_dx.extend_from_slice(&ck.back_dx);
+        s.front.clear();
+        s.front.reserve(ck.window * sl);
+        s.front.extend_from_slice(&ck.front);
+        s.dx.clear();
+        s.dx.resize(d, 0.0);
+        s.qstate.clear();
+        s.qstate.resize(sl, 0.0);
+        Ok(StreamEngine {
+            tbl,
+            window: ck.window,
+            n_seen: ck.n_seen,
+            back_len: ck.back_len,
+            front_len: ck.front_len,
+            s,
+        })
+    }
+}
+
+/// Portable snapshot of a [`StreamEngine`]'s two-stack state — what the
+/// durability layer serializes into periodic `SNAP` records so boot-time
+/// recovery restores a session without replaying its whole history (see
+/// [`crate::persist`]). Produced by [`StreamEngine::checkpoint`],
+/// consumed by [`StreamEngine::from_checkpoint`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct StreamCheckpoint {
+    /// Sliding-window capacity in increments.
+    pub window: usize,
+    /// Samples pushed so far.
+    pub n_seen: usize,
+    /// Increments on the back stack.
+    pub back_len: usize,
+    /// Suffix products on the front stack.
+    pub front_len: usize,
+    /// Last sample seen (`d` entries).
+    pub last: Vec<f64>,
+    /// Running whole-stream signature state (`state_len` entries).
+    pub total: Vec<f64>,
+    /// Back stack's running prefix signature (`state_len` entries).
+    pub back_agg: Vec<f64>,
+    /// Raw back-stack increments (`back_len · d` entries).
+    pub back_dx: Vec<f64>,
+    /// Front-stack suffix products (`front_len · state_len` entries).
+    pub front: Vec<f64>,
 }
 
 /// `M` lockstep streams vectorized through the lane-major SoA kernels:
@@ -1111,6 +1232,69 @@ mod tests {
         s2.push(&[1.0, 0.0]);
         let got = s2.window_signature();
         assert!((got[0] - 1.0).abs() < 1e-15 && got[1].abs() < 1e-15);
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_is_bitwise_identical() {
+        // Checkpoint at every phase of the two-stack lifecycle (empty,
+        // filling, full, just-refolded) and drive the restored engine
+        // alongside the original: every subsequent window and running
+        // signature must match bitwise.
+        let tbl = stream_tbl(2, 3);
+        let mut rng = Rng::new(0x51AC);
+        let mut s = StreamEngine::new(Arc::clone(&tbl), 4);
+        let samples: Vec<[f64; 2]> = (0..16)
+            .map(|_| [rng.uniform_in(-1.0, 1.0), rng.uniform_in(-1.0, 1.0)])
+            .collect();
+        for (i, x) in samples.iter().enumerate() {
+            let ck = s.checkpoint();
+            let mut orig = s.clone();
+            let mut r =
+                StreamEngine::from_checkpoint(Arc::clone(&tbl), &ck, StreamScratch::default())
+                    .expect("engine-produced checkpoint restores");
+            assert_eq!(r.samples_seen(), orig.samples_seen(), "step {i}");
+            assert_eq!(r.window_fill(), orig.window_fill(), "step {i}");
+            for y in &samples[i..] {
+                orig.push(y);
+                r.push(y);
+                assert_eq!(orig.window_signature(), r.window_signature(), "step {i}");
+                assert_eq!(orig.signature(), r.signature(), "step {i}");
+            }
+            s.push(x);
+        }
+    }
+
+    #[test]
+    fn forged_checkpoints_are_rejected() {
+        let tbl = stream_tbl(2, 2);
+        let mut s = StreamEngine::new(Arc::clone(&tbl), 3);
+        for j in 0..6 {
+            s.push(&[j as f64, 0.5 * j as f64]);
+        }
+        let good = s.checkpoint();
+        let restore = |ck: &StreamCheckpoint| {
+            StreamEngine::from_checkpoint(Arc::clone(&tbl), ck, StreamScratch::default())
+        };
+        assert!(restore(&good).is_ok());
+        let mut bad = good.clone();
+        bad.window = 0;
+        assert!(restore(&bad).is_err(), "zero window must be rejected");
+        let mut bad = good.clone();
+        bad.front_len += 1;
+        assert!(restore(&bad).is_err(), "fill/n_seen mismatch must be rejected");
+        let mut bad = good.clone();
+        bad.total.pop();
+        assert!(restore(&bad).is_err(), "short total must be rejected");
+        let mut bad = good.clone();
+        bad.back_dx.push(1.0);
+        assert!(restore(&bad).is_err(), "odd back_dx must be rejected");
+        // A checkpoint taken over one table must not restore over a
+        // table with a different state length.
+        let other = stream_tbl(2, 3);
+        assert!(
+            StreamEngine::from_checkpoint(other, &good, StreamScratch::default()).is_err(),
+            "table mismatch must be rejected"
+        );
     }
 
     #[test]

@@ -1,0 +1,416 @@
+//! Recovery-semantics tests for the durable coordinator (ISSUE 7):
+//! restart a [`ShardSet`] on a journal directory and require the
+//! streaming sessions to come back exactly — checkpoint + tail replay
+//! matching an uninterrupted run to 1e-12, tombstones never
+//! resurrecting, admission budgets enforced on re-admission — and, on
+//! unix, the headline crash test: `kill -9` a live server mid-stream,
+//! restart it on the same journal dir, and read the same windows a
+//! never-killed server would serve.
+
+use pathsig::coordinator::{DurabilityConfig, Metrics, ShardConfig, ShardSet, StreamReply};
+use pathsig::persist::{journal_path, JournalWriter};
+use pathsig::sig::{StreamEngine, StreamTable};
+use pathsig::util::pool::Pool;
+use pathsig::words::WordSpec;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+static DIR_N: AtomicU64 = AtomicU64::new(0);
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "pathsig-recovery-{tag}-{}-{}",
+        std::process::id(),
+        DIR_N.fetch_add(1, Ordering::Relaxed)
+    ));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn engine(dim: usize, depth: usize, window: usize) -> StreamEngine {
+    let words = WordSpec::Truncated { depth }.words(dim);
+    StreamEngine::new(Arc::new(StreamTable::new(dim, &words)), window)
+}
+
+fn durable_set(
+    dir: &Path,
+    shards: usize,
+    checkpoint_every: u64,
+    max_sessions: usize,
+    max_session_floats: usize,
+    metrics: &Arc<Metrics>,
+) -> ShardSet {
+    let cfg = ShardConfig {
+        shards,
+        max_sessions,
+        durability: Some(DurabilityConfig {
+            dir: dir.to_path_buf(),
+            checkpoint_every,
+            fsync: false,
+            max_session_floats,
+        }),
+        ..ShardConfig::default()
+    };
+    ShardSet::new(cfg, Arc::clone(metrics), Arc::new(Pool::default()))
+}
+
+fn open_id(s: &ShardSet, dim: usize, depth: usize, window: usize) -> u64 {
+    match s
+        .open(engine(dim, depth, window), WordSpec::Truncated { depth })
+        .unwrap()
+    {
+        StreamReply::Opened { session, .. } => {
+            session.strip_prefix('s').unwrap().parse().unwrap()
+        }
+        other => panic!("open failed: {other:?}"),
+    }
+}
+
+fn window_of(s: &ShardSet, id: u64) -> Vec<f64> {
+    match s.window(id, false).unwrap() {
+        StreamReply::Values { result, .. } => result,
+        other => panic!("window failed: {other:?}"),
+    }
+}
+
+fn assert_close(got: &[f64], want: &[f64], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length mismatch");
+    for (i, (a, b)) in got.iter().zip(want).enumerate() {
+        assert!(
+            (a - b).abs() < 1e-12,
+            "{what}: coord {i} diverged: {a} vs {b}"
+        );
+    }
+}
+
+#[test]
+fn restart_resumes_sessions_exactly() {
+    // Three sessions with different shapes, push counts straddling the
+    // checkpoint interval (so recovery exercises checkpoint + tail),
+    // then a restart under a *different* shard count: every window must
+    // match an uninterrupted reference engine to 1e-12.
+    let dir = tmpdir("resume");
+    let shapes: [(usize, usize, usize, usize); 3] =
+        [(1, 2, 4, 9), (2, 2, 3, 6), (1, 3, 5, 11)];
+    let mut refs: Vec<(u64, StreamEngine)> = Vec::new();
+    {
+        let m = Arc::new(Metrics::new());
+        let set = durable_set(&dir, 2, 4, 64, usize::MAX, &m);
+        for (i, &(dim, depth, window, rows)) in shapes.iter().enumerate() {
+            let id = open_id(&set, dim, depth, window);
+            assert_eq!(id, i as u64 + 1);
+            let mut reference = engine(dim, depth, window);
+            let mut samples = Vec::new();
+            for r in 0..rows {
+                for d in 0..dim {
+                    samples.push((r * dim + d) as f64 * 0.5 - i as f64);
+                }
+            }
+            for row in samples.chunks_exact(dim) {
+                reference.push(row);
+            }
+            set.push(id, samples).unwrap();
+            refs.push((id, reference));
+        }
+        // Graceful drop: workers write a final checkpoint per shard.
+    }
+
+    let m2 = Arc::new(Metrics::new());
+    let set = durable_set(&dir, 3, 4, 64, usize::MAX, &m2);
+    assert_eq!(m2.sessions_recovered.load(Ordering::Relaxed), 3);
+    assert_eq!(m2.recovery_dropped.load(Ordering::Relaxed), 0);
+    assert_eq!(set.live_sessions(), 3);
+    for (id, reference) in &mut refs {
+        assert_close(
+            &window_of(&set, *id),
+            &reference.window_signature(),
+            &format!("recovered session {id}"),
+        );
+        // And the recovered engine keeps streaming correctly.
+        let dim = shapes[*id as usize - 1].0;
+        let extra: Vec<f64> = (0..2 * dim).map(|k| 10.0 + k as f64).collect();
+        for row in extra.chunks_exact(dim) {
+            reference.push(row);
+        }
+        set.push(*id, extra).unwrap();
+        assert_close(
+            &window_of(&set, *id),
+            &reference.window_signature(),
+            &format!("post-recovery push on session {id}"),
+        );
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn closed_sessions_never_resurrect() {
+    let dir = tmpdir("tombstone");
+    {
+        let m = Arc::new(Metrics::new());
+        let set = durable_set(&dir, 2, 256, 64, usize::MAX, &m);
+        let a = open_id(&set, 1, 2, 4);
+        let b = open_id(&set, 1, 2, 4);
+        set.push(a, vec![1.0, 2.0]).unwrap();
+        set.push(b, vec![5.0]).unwrap();
+        assert_eq!(set.close(b).unwrap(), StreamReply::Closed);
+    }
+    let m = Arc::new(Metrics::new());
+    let set = durable_set(&dir, 2, 256, 64, usize::MAX, &m);
+    assert_eq!(m.sessions_recovered.load(Ordering::Relaxed), 1);
+    assert_eq!(set.live_sessions(), 1);
+    // The survivor answers; the closed session is gone for good.
+    assert!(set.window(1, false).is_ok());
+    let err = set.push(2, vec![9.0]).unwrap_err();
+    assert!(err.to_string().contains("unknown session"), "{err}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn crashed_journal_recovers_through_shardset() {
+    // Simulate a crash: hand-write the journal a dead server would
+    // leave behind — live session, evicted session, torn final record —
+    // and boot a ShardSet on it.
+    let dir = tmpdir("crash");
+    let spec = WordSpec::Truncated { depth: 2 };
+    let mut w = JournalWriter::create(&journal_path(&dir, 0), false, 0).unwrap();
+    w.append_open(1, 1, 4, &spec).unwrap();
+    w.append_push(1, &[0.0, 1.0, 3.0]).unwrap();
+    w.append_open(2, 1, 2, &spec).unwrap();
+    w.append_evict(2).unwrap();
+    w.append_push(1, &[100.0]).unwrap(); // will be torn off below
+    drop(w);
+    let jp = journal_path(&dir, 0);
+    let len = std::fs::metadata(&jp).unwrap().len();
+    std::fs::OpenOptions::new()
+        .write(true)
+        .open(&jp)
+        .unwrap()
+        .set_len(len - 3)
+        .unwrap();
+
+    let m = Arc::new(Metrics::new());
+    let set = durable_set(&dir, 2, 256, 64, usize::MAX, &m);
+    assert_eq!(m.journal_torn_tails.load(Ordering::Relaxed), 1);
+    assert_eq!(m.sessions_recovered.load(Ordering::Relaxed), 1);
+    assert_eq!(set.live_sessions(), 1);
+
+    // The torn push never happened; the clean prefix did.
+    let mut reference = engine(1, 2, 4);
+    for x in [0.0, 1.0, 3.0] {
+        reference.push(&[x]);
+    }
+    assert_close(&window_of(&set, 1), &reference.window_signature(), "torn tail");
+    let err = set.push(2, vec![9.0]).unwrap_err();
+    assert!(err.to_string().contains("unknown session"), "{err}");
+    // Ids continue above everything the journal ever named.
+    assert_eq!(open_id(&set, 1, 2, 2), 3);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn recovery_respects_admission_budgets() {
+    // max_sessions: only the lowest-id sessions fit.
+    let dir = tmpdir("cap");
+    {
+        let m = Arc::new(Metrics::new());
+        let set = durable_set(&dir, 2, 256, 64, usize::MAX, &m);
+        for _ in 0..3 {
+            let id = open_id(&set, 1, 2, 4);
+            set.push(id, vec![1.0, 2.0]).unwrap();
+        }
+    }
+    let m = Arc::new(Metrics::new());
+    let set = durable_set(&dir, 2, 256, 2, usize::MAX, &m);
+    assert_eq!(m.sessions_recovered.load(Ordering::Relaxed), 2);
+    assert_eq!(m.recovery_dropped.load(Ordering::Relaxed), 1);
+    assert_eq!(set.live_sessions(), 2);
+    assert!(set.window(1, false).is_ok());
+    assert!(set.window(2, false).is_ok());
+    assert!(set.window(3, false).is_err());
+    drop(set);
+    std::fs::remove_dir_all(&dir).unwrap();
+
+    // max_session_floats: a budget too small for any session drops all.
+    let dir = tmpdir("floats");
+    {
+        let m = Arc::new(Metrics::new());
+        let set = durable_set(&dir, 1, 256, 64, usize::MAX, &m);
+        for _ in 0..2 {
+            open_id(&set, 1, 2, 4);
+        }
+    }
+    let m = Arc::new(Metrics::new());
+    let set = durable_set(&dir, 1, 256, 64, 1, &m);
+    assert_eq!(m.sessions_recovered.load(Ordering::Relaxed), 0);
+    assert_eq!(m.recovery_dropped.load(Ordering::Relaxed), 2);
+    assert_eq!(set.live_sessions(), 0);
+    drop(set);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+// ---------------------------------------------------------------------
+// The headline acceptance test: kill -9 a live server, restart, and
+// every session's next window matches an uninterrupted run.
+// ---------------------------------------------------------------------
+
+#[cfg(unix)]
+mod kill9 {
+    use super::*;
+    use pathsig::coordinator::server::Client;
+    use pathsig::coordinator::wire::{OkBody, RequestFrame, ResponseFrame, SpecFrame, WireClient};
+    use std::io::BufRead;
+    use std::process::{Child, Command, Stdio};
+
+    /// SIGKILLs the child on drop so a failed assertion never leaks a
+    /// server process.
+    struct Server(Child);
+
+    impl Drop for Server {
+        fn drop(&mut self) {
+            let _ = self.0.kill();
+            let _ = self.0.wait();
+        }
+    }
+
+    fn spawn_server(dir: &Path) -> (Server, String) {
+        let mut child = Command::new(env!("CARGO_BIN_EXE_pathsig"))
+            .args([
+                "serve",
+                "--addr",
+                "127.0.0.1:0",
+                "--journal-dir",
+                dir.to_str().unwrap(),
+                "--fsync",
+                "--checkpoint-every",
+                "3",
+                "--shards",
+                "2",
+            ])
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawn pathsig serve");
+        let stdout = child.stdout.take().unwrap();
+        let mut lines = std::io::BufReader::new(stdout).lines();
+        let addr = loop {
+            let line = lines
+                .next()
+                .expect("server exited before announcing its address")
+                .expect("read server stdout");
+            if let Some(rest) = line.strip_prefix("pathsig feature server listening on ") {
+                break rest.trim().to_string();
+            }
+        };
+        (Server(child), addr)
+    }
+
+    #[test]
+    fn kill_dash_nine_loses_nothing_acked() {
+        let dir = tmpdir("kill9");
+        let (server, addr) = spawn_server(&dir);
+
+        // Session A over v1 (dim 1), session B over v2 (dim 2), with
+        // uninterrupted reference engines fed the same samples.
+        let mut ref_a = engine(1, 2, 4);
+        let mut ref_b = engine(2, 2, 3);
+
+        let mut v1 = Client::connect(&addr).unwrap();
+        let opened = v1
+            .call(r#"{"op":"stream_open","dim":1,"depth":2,"window":4}"#)
+            .unwrap();
+        assert_eq!(opened.get("ok").as_bool(), Some(true), "{opened:?}");
+        let handle_a = opened.get("body").get("session").as_str().unwrap().to_string();
+        let pushed = v1
+            .call(&format!(
+                r#"{{"op":"stream_push","session":"{handle_a}","samples":[0,1,3]}}"#
+            ))
+            .unwrap();
+        assert_eq!(pushed.get("ok").as_bool(), Some(true), "{pushed:?}");
+        for x in [0.0, 1.0, 3.0] {
+            ref_a.push(&[x]);
+        }
+
+        let mut v2 = WireClient::connect(&addr).unwrap();
+        let sid_b = match v2
+            .call(&RequestFrame::StreamOpen {
+                dim: 2,
+                depth: 2,
+                window: 3,
+                spec: SpecFrame::Truncated,
+            })
+            .unwrap()
+        {
+            ResponseFrame::Ok {
+                body: OkBody::Opened { session, .. },
+                ..
+            } => session,
+            other => panic!("v2 open failed: {other:?}"),
+        };
+        let samples_b = [0.0, 0.5, 1.0, 0.25, 2.0, 1.0];
+        match v2
+            .call(&RequestFrame::StreamPush {
+                session: sid_b,
+                samples: samples_b.to_vec(),
+            })
+            .unwrap()
+        {
+            ResponseFrame::Ok { .. } => {}
+            other => panic!("v2 push failed: {other:?}"),
+        }
+        for row in samples_b.chunks_exact(2) {
+            ref_b.push(row);
+        }
+
+        // Every op above was acked with --fsync on: nothing may be
+        // lost. SIGKILL — no shutdown hooks, no final checkpoint.
+        drop(server);
+
+        let (server2, addr2) = spawn_server(&dir);
+        let mut v1 = Client::connect(&addr2).unwrap();
+        let win = v1
+            .call(&format!(r#"{{"op":"stream_window","session":"{handle_a}"}}"#))
+            .unwrap();
+        assert_eq!(win.get("ok").as_bool(), Some(true), "{win:?}");
+        assert_close(
+            &win.f64_vec("result"),
+            &ref_a.window_signature(),
+            "v1 session after kill -9",
+        );
+        // …and the session keeps streaming.
+        v1.call(&format!(
+            r#"{{"op":"stream_push","session":"{handle_a}","samples":[6]}}"#
+        ))
+        .unwrap();
+        ref_a.push(&[6.0]);
+        let win = v1
+            .call(&format!(r#"{{"op":"stream_window","session":"{handle_a}"}}"#))
+            .unwrap();
+        assert_close(
+            &win.f64_vec("result"),
+            &ref_a.window_signature(),
+            "v1 session streaming after recovery",
+        );
+
+        let mut v2 = WireClient::connect(&addr2).unwrap();
+        match v2
+            .call(&RequestFrame::StreamWindow {
+                session: sid_b,
+                full: false,
+            })
+            .unwrap()
+        {
+            ResponseFrame::Ok {
+                body: OkBody::Values { values, .. },
+                ..
+            } => assert_close(&values, &ref_b.window_signature(), "v2 session after kill -9"),
+            other => panic!("v2 window failed after restart: {other:?}"),
+        }
+        match v2.call(&RequestFrame::StreamClose { session: sid_b }).unwrap() {
+            ResponseFrame::Ok { .. } => {}
+            other => panic!("v2 close failed after restart: {other:?}"),
+        }
+        drop(server2);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

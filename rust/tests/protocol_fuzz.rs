@@ -12,6 +12,22 @@
 //! 3. a connection either gets answers or is closed cleanly;
 //! 4. after the barrage, a fresh client can still run a full
 //!    streaming-session lifecycle.
+//!
+//! The journal-corruption arm (ISSUE 7) extends the same discipline to
+//! the durability layer: seeded truncations, bit flips, splices and
+//! file swaps against valid journal/checkpoint bytes, with
+//! [`pathsig::persist::recover_dir`] required to return cleanly every
+//! time — no panic, no forged session, and a deterministic second pass
+//! over the physically truncated files.
+
+use pathsig::persist::{
+    ckpt_path, journal_path, recover_dir, write_checkpoint, JournalWriter,
+};
+use pathsig::sig::{StreamEngine, StreamTable};
+use pathsig::words::WordSpec;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use pathsig::coordinator::wire::{self, RequestFrame, ResponseFrame, SpecFrame, WireClient};
 use pathsig::coordinator::{serve, BatcherConfig, ServerConfig, SigService};
@@ -270,6 +286,196 @@ fn unmutated_corpus_gets_well_formed_answers() {
         assert_well_formed_responses(&answer);
     }
     handle.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// Journal-corruption arm (ISSUE 7)
+// ---------------------------------------------------------------------
+
+static FUZZ_DIR_N: AtomicU64 = AtomicU64::new(0);
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "pathsig-fuzz-{tag}-{}-{}",
+        std::process::id(),
+        FUZZ_DIR_N.fetch_add(1, Ordering::Relaxed)
+    ));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn table_resolver() -> impl FnMut(usize, &WordSpec) -> Arc<StreamTable> {
+    let mut memo: HashMap<String, Arc<StreamTable>> = HashMap::new();
+    move |dim, spec| {
+        memo.entry(format!("{dim}:{spec:?}"))
+            .or_insert_with(|| Arc::new(StreamTable::new(dim, &spec.words(dim))))
+            .clone()
+    }
+}
+
+/// Pristine (journal, checkpoint) byte pairs for two shards, built with
+/// the real writers: five sessions, pushes, a close, an evict, and one
+/// checkpoint with a live journal tail. Ids 1–5 are the only ids any
+/// recovery may ever report.
+fn journal_corpus() -> Vec<(Vec<u8>, Vec<u8>)> {
+    let dir = tmpdir("corpus");
+    let spec2 = WordSpec::Truncated { depth: 2 };
+    let spec3 = WordSpec::Truncated { depth: 3 };
+    let mut res = table_resolver();
+
+    // Shard 0: checkpointed session 1 + journal tail, session 2 closed.
+    let mut w = JournalWriter::create(&journal_path(&dir, 0), false, 0).unwrap();
+    let mut s1 = StreamEngine::new(res(2, &spec3), 4);
+    w.append_open(1, 2, 4, &spec3).unwrap();
+    for j in 0..5 {
+        let x = [j as f64, 0.5 * j as f64];
+        s1.push(&x);
+        w.append_push(1, &x).unwrap();
+    }
+    write_checkpoint(&dir, 0, w.seq(), &[(1, &spec3, &s1)]).unwrap();
+    w.truncate().unwrap();
+    w.append_push(1, &[7.0, 3.5]).unwrap();
+    w.append_open(2, 1, 2, &spec2).unwrap();
+    w.append_push(2, &[1.0, 2.0]).unwrap();
+    w.append_close(2).unwrap();
+    drop(w);
+
+    // Shard 1: sessions 3 (live), 4 (evicted), 5 (live), journal only.
+    let mut w = JournalWriter::create(&journal_path(&dir, 1), false, 0).unwrap();
+    w.append_open(3, 1, 4, &spec2).unwrap();
+    w.append_push(3, &[0.0, 1.0, 3.0]).unwrap();
+    w.append_open(4, 1, 2, &spec2).unwrap();
+    w.append_evict(4).unwrap();
+    w.append_open(5, 2, 2, &spec2).unwrap();
+    w.append_push(5, &[0.5, 0.25]).unwrap();
+    drop(w);
+
+    let out = vec![
+        (
+            std::fs::read(journal_path(&dir, 0)).unwrap(),
+            std::fs::read(ckpt_path(&dir, 0)).unwrap(),
+        ),
+        (std::fs::read(journal_path(&dir, 1)).unwrap(), Vec::new()),
+    ];
+    std::fs::remove_dir_all(&dir).unwrap();
+    out
+}
+
+/// Mutate on-disk bytes: truncation, bit flips, garbage splices,
+/// chunk duplication (seq-regression bait), or garbage prefix.
+fn mutate_disk(rng: &mut Rng, seed: &[u8]) -> Vec<u8> {
+    let mut b = seed.to_vec();
+    match rng.below(5) {
+        0 => {
+            let keep = rng.below(b.len().max(1));
+            b.truncate(keep);
+        }
+        1 => {
+            for _ in 0..rng.range(1, 9) {
+                if b.is_empty() {
+                    break;
+                }
+                let i = rng.below(b.len());
+                b[i] ^= 1 << rng.below(8);
+            }
+        }
+        2 => {
+            let cut = rng.below(b.len().max(1));
+            b.truncate(cut);
+            b.extend((0..rng.below(48)).map(|_| rng.below(256) as u8));
+        }
+        3 => {
+            if !b.is_empty() {
+                let lo = rng.below(b.len());
+                let hi = lo + rng.below(b.len() - lo) + 1;
+                let chunk = b[lo..hi.min(b.len())].to_vec();
+                b.extend_from_slice(&chunk);
+            }
+        }
+        _ => {
+            let mut g: Vec<u8> = (0..rng.range(1, 32)).map(|_| rng.below(256) as u8).collect();
+            g.extend_from_slice(&b);
+            b = g;
+        }
+    }
+    b
+}
+
+#[test]
+fn fuzzed_journal_corruption_recovers_cleanly() {
+    let corpus = journal_corpus();
+    let mut res = table_resolver();
+    let mut rng = Rng::new(0x70_1207);
+    for round in 0..160 {
+        let dir = tmpdir("mut");
+        // Lay down the pristine files, then corrupt one of them — or,
+        // one round in eight, swap a journal and a checkpoint wholesale.
+        for (k, (j, c)) in corpus.iter().enumerate() {
+            std::fs::write(journal_path(&dir, k), j).unwrap();
+            std::fs::write(ckpt_path(&dir, k), c).unwrap();
+        }
+        if rng.below(8) == 0 {
+            std::fs::write(journal_path(&dir, 0), &corpus[0].1).unwrap();
+            std::fs::write(ckpt_path(&dir, 0), &corpus[0].0).unwrap();
+        } else {
+            let k = rng.below(corpus.len());
+            let (j, c) = &corpus[k];
+            if rng.below(2) == 0 {
+                std::fs::write(journal_path(&dir, k), mutate_disk(&mut rng, j)).unwrap();
+            } else {
+                std::fs::write(ckpt_path(&dir, k), mutate_disk(&mut rng, c)).unwrap();
+            }
+        }
+
+        // The contract: recovery returns Ok, never panics, never
+        // invents a session id, and every rebuilt engine is usable.
+        let rec = recover_dir(&dir, &mut res)
+            .unwrap_or_else(|e| panic!("round {round}: recovery must not fail: {e}"));
+        for s in &rec.sessions {
+            assert!(
+                (1..=5).contains(&s.id),
+                "round {round}: forged session id {}",
+                s.id
+            );
+            assert!(
+                s.stream.window_signature().iter().all(|v| v.is_finite()),
+                "round {round}: non-finite signature from session {}",
+                s.id
+            );
+        }
+        // First pass truncated any torn tail in place: a second pass
+        // is deterministic and clean.
+        let rec2 = recover_dir(&dir, &mut res).unwrap();
+        assert_eq!(rec2.stats.torn_tails, 0, "round {round}: tail not truncated");
+        assert_eq!(
+            rec2.sessions.len(),
+            rec.sessions.len(),
+            "round {round}: recovery not idempotent"
+        );
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}
+
+#[test]
+fn pristine_journal_corpus_recovers_exactly() {
+    // Control arm: unmutated corpus yields exactly the live sessions
+    // (1 checkpointed+tailed, 3 and 5 journal-only; 2 closed, 4
+    // evicted) with no corruption counters tripped.
+    let corpus = journal_corpus();
+    let dir = tmpdir("ctl");
+    for (k, (j, c)) in corpus.iter().enumerate() {
+        std::fs::write(journal_path(&dir, k), j).unwrap();
+        std::fs::write(ckpt_path(&dir, k), c).unwrap();
+    }
+    let mut res = table_resolver();
+    let rec = recover_dir(&dir, &mut res).unwrap();
+    let ids: Vec<u64> = rec.sessions.iter().map(|s| s.id).collect();
+    assert_eq!(ids, vec![1, 3, 5]);
+    assert_eq!(rec.max_id, 5);
+    assert_eq!(rec.stats.torn_tails, 0);
+    assert_eq!(rec.stats.corrupt_checkpoints, 0);
+    assert_eq!(rec.stats.tombstone_hits, 0);
+    std::fs::remove_dir_all(&dir).unwrap();
 }
 
 #[test]

@@ -11,6 +11,9 @@
 #   BENCH_tree.json    tree_vs_sequential.speedup,
 #                      backward.speedup              (time-parallel tree)
 #   BENCH_coord.json   rows[*].p99_us                (coordinator latency)
+#   BENCH_durability.json
+#                      push.rows[journal].p99_us,
+#                      recovery.rows[*].recover_ms   (durability tax)
 #   + every steady_state_allocs_* counter must not increase.
 #
 # Usage:
@@ -46,7 +49,7 @@ baseline_dir=$(mktemp -d)
 trap 'rm -rf "$baseline_dir"' EXIT
 
 have_baseline=0
-for f in BENCH_fig1.json BENCH_table1.json BENCH_stream.json BENCH_tree.json BENCH_coord.json; do
+for f in BENCH_fig1.json BENCH_table1.json BENCH_stream.json BENCH_tree.json BENCH_coord.json BENCH_durability.json; do
     if git show "$ref:$f" > "$baseline_dir/$f" 2>/dev/null; then
         have_baseline=1
     else
@@ -95,11 +98,19 @@ def headline(doc, name):
         for row in doc["rows"]:
             out.append((f"coord.shards{row['shards']}.p99_us", row["p99_us"], "lo"))
             out.append((f"coord.shards{row['shards']}.lost_sessions", row["lost_sessions"], "alloc"))
+    elif name == "BENCH_durability.json":
+        for row in doc["push"]["rows"]:
+            if row["mode"] == "journal":
+                out.append(("durability.push_journal.p99_us", row["p99_us"], "lo"))
+        for row in doc["recovery"]["rows"]:
+            out.append((f"durability.recover{row['sessions']}.ms", row["recover_ms"], "lo"))
+        out.append(("durability.steady_state_allocs_per_append",
+                    doc["steady_state_allocs_per_append"], "alloc"))
     return out
 
 
 for name in ("BENCH_fig1.json", "BENCH_table1.json", "BENCH_stream.json",
-             "BENCH_tree.json", "BENCH_coord.json"):
+             "BENCH_tree.json", "BENCH_coord.json", "BENCH_durability.json"):
     cur_doc = load(name)
     base_doc = load(os.path.join(bdir, name))
     cur = dict((k, (v, kind)) for k, v, kind in headline(cur_doc, name))

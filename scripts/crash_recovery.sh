@@ -1,0 +1,127 @@
+#!/usr/bin/env bash
+# Crash-recovery acceptance drill against the real binary (ISSUE 7).
+#
+# Starts `pathsig serve --journal-dir ... --fsync`, drives live v1
+# streaming sessions over TCP, records every session's window
+# signature, then SIGKILLs the server mid-stream — no shutdown hooks,
+# no final checkpoint — restarts it on the same journal directory, and
+# requires:
+#
+#   * every session's next stream_window to match the pre-kill value
+#     to 1e-12 (nothing acked may be lost);
+#   * the per-session `seen` counter to keep counting from where it
+#     was (state resumed, not rebuilt from zero);
+#   * the sessions to keep streaming normally afterwards.
+#
+# The kill/restart cycle runs CYCLES times (default 3) with fresh
+# pushes in between, so recovery is exercised on recovered state too.
+# CI wires this into the crash-recovery job; run locally with:
+#
+#   ./scripts/crash_recovery.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+CYCLES="${CYCLES:-3}"
+SESSIONS="${SESSIONS:-6}"
+
+if [[ -z "${SKIP_BUILD:-}" ]]; then
+    cargo build --release --bin pathsig
+fi
+BIN=target/release/pathsig
+[[ -x "$BIN" ]] || { echo "missing $BIN (set SKIP_BUILD= to build)" >&2; exit 2; }
+
+JDIR=$(mktemp -d)
+trap 'rm -rf "$JDIR"' EXIT
+
+BIN="$BIN" JDIR="$JDIR" CYCLES="$CYCLES" SESSIONS="$SESSIONS" python3 - <<'EOF'
+import json
+import os
+import signal
+import socket
+import subprocess
+import sys
+
+BIN, JDIR = os.environ["BIN"], os.environ["JDIR"]
+CYCLES, SESSIONS = int(os.environ["CYCLES"]), int(os.environ["SESSIONS"])
+
+
+def start_server():
+    p = subprocess.Popen(
+        [BIN, "serve", "--addr", "127.0.0.1:0", "--journal-dir", JDIR,
+         "--fsync", "--checkpoint-every", "5", "--shards", "2"],
+        stdout=subprocess.PIPE, stderr=subprocess.DEVNULL, text=True)
+    for line in p.stdout:
+        if "listening on" in line:
+            return p, line.strip().rsplit(" ", 1)[1]
+    raise SystemExit("server exited before announcing its address")
+
+
+class V1Client:
+    """Minimal v1 JSON-lines client over a raw socket."""
+
+    def __init__(self, addr):
+        host, port = addr.rsplit(":", 1)
+        self.sock = socket.create_connection((host, int(port)), timeout=30)
+        self.buf = b""
+
+    def call(self, obj):
+        self.sock.sendall((json.dumps(obj) + "\n").encode())
+        while b"\n" not in self.buf:
+            chunk = self.sock.recv(65536)
+            if not chunk:
+                raise SystemExit("server closed the connection mid-call")
+            self.buf += chunk
+        line, self.buf = self.buf.split(b"\n", 1)
+        resp = json.loads(line)
+        if not resp.get("ok", False):
+            raise SystemExit(f"server error for {obj}: {resp}")
+        return resp
+
+
+def push(c, sid, samples):
+    return c.call({"op": "stream_push", "session": sid, "samples": samples})
+
+
+def window(c, sid):
+    return c.call({"op": "stream_window", "session": sid})["result"]
+
+
+server, addr = start_server()
+try:
+    c = V1Client(addr)
+    sids, seen = [], {}
+    for k in range(SESSIONS):
+        r = c.call({"op": "stream_open", "dim": 1, "depth": 2, "window": 4})
+        sid = r["body"]["session"]
+        sids.append(sid)
+        resp = push(c, sid, [0.5 * j + k for j in range(3 + k % 3)])
+        seen[sid] = resp["body"]["seen"]
+
+    for cycle in range(1, CYCLES + 1):
+        expect = {sid: window(c, sid) for sid in sids}
+        server.send_signal(signal.SIGKILL)
+        server.wait()
+        server, addr = start_server()
+        c = V1Client(addr)
+        for sid in sids:
+            got = window(c, sid)
+            if len(got) != len(expect[sid]) or any(
+                    abs(a - b) > 1e-12 for a, b in zip(got, expect[sid])):
+                raise SystemExit(
+                    f"cycle {cycle}: session {sid} diverged after kill -9:\n"
+                    f"  before {expect[sid]}\n  after  {got}")
+            resp = push(c, sid, [float(cycle), float(cycle) + 0.5])
+            if resp["body"]["seen"] != seen[sid] + 2:
+                raise SystemExit(
+                    f"cycle {cycle}: session {sid} seen counter reset: "
+                    f"{resp['body']['seen']} != {seen[sid] + 2}")
+            seen[sid] = resp["body"]["seen"]
+        print(f"cycle {cycle}/{CYCLES}: {len(sids)} sessions recovered bit-for-bit")
+
+    for sid in sids:
+        c.call({"op": "stream_close", "session": sid})
+    print(f"crash_recovery: OK ({CYCLES} kill -9 cycles, {len(sids)} sessions)")
+finally:
+    server.send_signal(signal.SIGKILL)
+    server.wait()
+EOF

@@ -1,24 +1,29 @@
 #!/usr/bin/env python3
 """Regenerate the wire-protocol golden files in rust/tests/golden/.
 
-This is an independent mirror of the two wire codecs:
+This is an independent mirror of three codecs:
 
 * v2 binary frames (rust/src/coordinator/wire.rs): 6-byte header
   (0x02, verb/status, u32 LE payload length) + little-endian payload;
 * v1 JSON-lines responses (rust/src/coordinator/protocol.rs): compact
   JSON with alphabetically sorted keys (the Rust Json::Obj is a
-  BTreeMap) and integers printed without a decimal point.
+  BTreeMap) and integers printed without a decimal point;
+* persist records (rust/src/persist/codec.rs): the on-disk journal /
+  checkpoint framing `[u32 LE len][u8 kind · u64 LE seq · body]
+  [u32 LE crc]` with a zlib CRC-32 over the payload.
 
-The Rust test rust/tests/wire_golden.rs builds the same frames with the
-real codec and compares byte-for-byte, so any drift between the two
-implementations — or any accidental change to the wire format — fails
-CI. Run from the repo root:
+The Rust tests rust/tests/wire_golden.rs and
+rust/tests/persist_golden.rs build the same frames with the real codecs
+and compare byte-for-byte, so any drift between the two implementations
+— or any accidental change to a wire or disk format — fails CI. Run
+from the repo root:
 
     python3 scripts/gen_goldens.py
 """
 import json
 import os
 import struct
+import zlib
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 GOLDEN = os.path.join(ROOT, "rust", "tests", "golden")
@@ -158,9 +163,13 @@ def v2_frames():
     rows.append(("resp_ok_ping", frame(STATUS["ok"], u8(VERB["ping"]))))
     rows.append((
         "resp_ok_stats",
+        # One shard row (shard, sessions, mailbox_depth, sheds, pushes,
+        # journal_lag) followed by the signature-cache counters
+        # (hits, misses, evictions).
         frame(STATUS["ok"],
               u8(VERB["stats"]) + u32(1)
-              + u32(0) + u64(3) + u64(1) + u64(0) + u64(42)),
+              + u32(0) + u64(3) + u64(1) + u64(0) + u64(42) + u64(5)
+              + u64(7) + u64(2) + u64(1)),
     ))
     rows.append((
         "resp_ok_values",
@@ -208,7 +217,7 @@ def v1_responses():
         jline({"error": "unknown session 's9' (already closed or evicted)",
                "id": "e1", "ok": False}),
         jline({"error": "overloaded; retry after 25 ms", "id": "sh1",
-               "ok": False, "retry_after_ms": 25}),
+               "ok": False, "retry_after_ms": 25, "status": "shed"}),
     ]
 
 
@@ -228,6 +237,82 @@ def v1_requests():
     ]
 
 
+# ---------------------------------------------------------------------
+# Persist records (rust/src/persist/codec.rs)
+# ---------------------------------------------------------------------
+
+K_OPEN, K_PUSH, K_CLOSE, K_EVICT, K_SNAP, K_CKPT_HEAD = 1, 2, 3, 4, 5, 6
+
+
+def record(kind, seq, body):
+    """[u32 LE len][payload = kind · seq · body][u32 LE crc]."""
+    payload = u8(kind) + u64(seq) + body
+    return u32(len(payload)) + payload + u32(zlib.crc32(payload))
+
+
+def pspec_truncated(depth):
+    return u8(0) + u32(depth)
+
+
+def pspec_lyndon(depth):
+    return u8(1) + u32(depth)
+
+
+def pspec_anisotropic(gamma, cutoff):
+    return u8(2) + f64s(gamma) + f64(cutoff)
+
+
+def pspec_dag(depth, edges):
+    return u8(3) + u32(depth) + u32(len(edges)) + b"".join(u16s(r) for r in edges)
+
+
+def pspec_concat(depth, gens):
+    return u8(4) + u32(depth) + u32(len(gens)) + b"".join(u16s(w) for w in gens)
+
+
+def pspec_custom(words):
+    return u8(5) + u32(len(words)) + b"".join(u16s(w) for w in words)
+
+
+def persist_records():
+    """(name, record bytes) covering every record kind and every
+    word-spec tag, with the exact values rust/tests/persist_golden.rs
+    rebuilds through the Rust codec."""
+    rows = []
+    rows.append(("open_truncated",
+                 record(K_OPEN, 1, u64(7) + u32(2) + u32(8) + pspec_truncated(3))))
+    rows.append(("open_lyndon",
+                 record(K_OPEN, 2, u64(8) + u32(3) + u32(16) + pspec_lyndon(4))))
+    rows.append(("open_anisotropic",
+                 record(K_OPEN, 3, u64(9) + u32(2) + u32(4)
+                        + pspec_anisotropic([1.0, 2.5], 3.75))))
+    rows.append(("open_dag",
+                 record(K_OPEN, 4, u64(10) + u32(2) + u32(4)
+                        + pspec_dag(2, [[1], [0, 1]]))))
+    rows.append(("open_concat",
+                 record(K_OPEN, 5, u64(11) + u32(2) + u32(4)
+                        + pspec_concat(4, [[0, 1], [1]]))))
+    rows.append(("open_custom",
+                 record(K_OPEN, 6, u64(12) + u32(2) + u32(4)
+                        + pspec_custom([[0], [1, 0, 1]]))))
+    rows.append(("push", record(K_PUSH, 7, u64(7) + f64s([0.5, 1.5, 2.5]))))
+    rows.append(("close", record(K_CLOSE, 8, u64(7))))
+    rows.append(("evict", record(K_EVICT, 9, u64(8))))
+    # SNAP: id, dim, spec, then the stream checkpoint — window u32,
+    # n_seen u64, back_len u32, front_len u32, and the five f64 buffers
+    # last/total/back_agg/back_dx/front.
+    rows.append(("snap",
+                 record(K_SNAP, 9, u64(7) + u32(2) + pspec_truncated(2)
+                        + u32(3) + u64(5) + u32(1) + u32(2)
+                        + f64s([0.5, -1.0])
+                        + f64s([1.0, 2.0, 3.0])
+                        + f64s([1.0, 0.0, 0.25])
+                        + f64s([0.125, -0.5])
+                        + f64s([1.0, 1.5, 2.5, 1.0, 0.5, 0.75]))))
+    rows.append(("ckpt_head", record(K_CKPT_HEAD, 9, u32(2))))
+    return rows
+
+
 def main():
     os.makedirs(GOLDEN, exist_ok=True)
     with open(os.path.join(GOLDEN, "v2_frames.hex"), "w") as f:
@@ -241,6 +326,11 @@ def main():
     with open(os.path.join(GOLDEN, "v1_requests.jsonl"), "w") as f:
         for line in v1_requests():
             f.write(line + "\n")
+    with open(os.path.join(GOLDEN, "persist_records.hex"), "w") as f:
+        f.write("# name hex — one golden persist record per line; regenerate with\n")
+        f.write("# python3 scripts/gen_goldens.py\n")
+        for name, b in persist_records():
+            f.write(f"{name} {b.hex()}\n")
     print(f"wrote goldens under {GOLDEN}")
 
 
