@@ -129,20 +129,26 @@ fn main() {
     println!("\ndynamic batching active (mean batch size {mean_batch:.2}) ✓");
 
     // --- wire protocol v2: per-shard stats over binary frames ----------------
+    // `stats2` carries everything `stats` does plus the durability columns
+    // (journal_lag, cache counters); the original `stats` layout is frozen.
     use pathsig::coordinator::wire::{OkBody, RequestFrame, ResponseFrame, WireClient};
     let mut v2 = WireClient::connect(&addr).unwrap();
     if let ResponseFrame::Ok {
-        body: OkBody::Stats(rows),
+        body: OkBody::Stats { shards: rows, cache },
         ..
-    } = v2.call(&RequestFrame::Stats).unwrap()
+    } = v2.call(&RequestFrame::Stats2).unwrap()
     {
-        println!("\nper-shard coordinator stats (v2 `stats` verb):");
+        println!("\nper-shard coordinator stats (v2 `stats2` verb):");
         for r in rows {
             println!(
-                "  shard {}: sessions {}  mailbox {}  sheds {}  pushes {}",
-                r.shard, r.sessions, r.mailbox_depth, r.sheds, r.pushes
+                "  shard {}: sessions {}  mailbox {}  sheds {}  pushes {}  journal_lag {}",
+                r.shard, r.sessions, r.mailbox_depth, r.sheds, r.pushes, r.journal_lag
             );
         }
+        println!(
+            "  sig-cache: hits {}  misses {}  evictions {}",
+            cache.hits, cache.misses, cache.evictions
+        );
     }
 
     // keep the metrics JSON for EXPERIMENTS.md

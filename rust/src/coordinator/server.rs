@@ -663,12 +663,22 @@ mod tests {
         // stats: one row per shard, at least one session live somewhere
         match c.call(&RequestFrame::Stats).unwrap() {
             ResponseFrame::Ok {
-                body: OkBody::Stats { shards: rows, cache },
+                body: OkBody::Stats { shards: rows, .. },
                 ..
             } => {
                 assert!(!rows.is_empty());
                 assert_eq!(rows.iter().map(|r| r.sessions).sum::<u64>(), 1);
-                // Durability off: nothing journaled, nothing cached.
+            }
+            other => panic!("{other:?}"),
+        }
+        // stats2 carries the durability fields the frozen stats verb
+        // omits; with durability off they must all read zero.
+        match c.call(&RequestFrame::Stats2).unwrap() {
+            ResponseFrame::Ok {
+                body: OkBody::Stats { shards: rows, cache },
+                ..
+            } => {
+                assert_eq!(rows.iter().map(|r| r.sessions).sum::<u64>(), 1);
                 assert!(rows.iter().all(|r| r.journal_lag == 0));
                 assert_eq!(cache, CacheStats::default());
             }

@@ -298,28 +298,22 @@ impl ShardSet {
             metrics.sessions_recovered.fetch_add(admitted as u64, Relaxed);
             metrics.recovery_dropped.fetch_add(dropped, Relaxed);
             // Re-persist under the current topology: the old files may
-            // describe a different shard count (or dropped sessions),
-            // so clear them all and write one fresh checkpoint + empty
-            // journal per current shard.
-            for entry in std::fs::read_dir(&dur.dir).expect("scan journal dir") {
-                let entry = entry.expect("scan journal dir");
-                let name = entry.file_name();
-                let name = name.to_string_lossy();
-                if name.starts_with("shard-")
-                    && (name.ends_with(".journal")
-                        || name.ends_with(".ckpt")
-                        || name.ends_with(".ckpt.tmp"))
-                {
-                    std::fs::remove_file(entry.path()).expect("clear stale journal file");
-                }
+            // describe a different shard count (or dropped sessions).
+            // `repartition` stages the whole new generation and flips
+            // to it with one atomic marker rename — a crash at any
+            // instant leaves either the complete old generation or the
+            // complete new one, never a gap (recover_dir above has
+            // already resumed any rewrite a previous boot left
+            // half-finished).
+            {
+                let staged: Vec<Vec<(u64, &WordSpec, &StreamEngine)>> = by_shard
+                    .iter()
+                    .map(|v| v.iter().map(|(id, spec, stream)| (*id, spec, stream)).collect())
+                    .collect();
+                persist::repartition(&dur.dir, &staged)
+                    .expect("re-persist recovered sessions");
             }
             for (i, durable) in durables.iter_mut().enumerate() {
-                let sessions: Vec<(u64, &WordSpec, &StreamEngine)> = by_shard[i]
-                    .iter()
-                    .map(|(id, spec, stream)| (*id, spec, stream))
-                    .collect();
-                persist::write_checkpoint(&dur.dir, i, 0, &sessions)
-                    .expect("write recovery checkpoint");
                 let writer = JournalWriter::create(&persist::journal_path(&dur.dir, i), dur.fsync, 0)
                     .expect("create shard journal");
                 *durable = Some(Durable {
@@ -573,6 +567,13 @@ impl ShardWorker {
                         last_sweep_ms = now;
                         self.sweep(ttl_ms);
                     }
+                    // Cadence checkpoints run only here, between
+                    // messages: a checkpoint snapshots `sessions` and
+                    // truncates the journal, so running one mid-handler
+                    // (e.g. after Open journaled but before it inserted)
+                    // would discard an acked record without capturing
+                    // the session it described.
+                    self.checkpoint_if_due();
                 }
                 Recv::Timeout => {
                     let now = self.now_ms();
@@ -580,6 +581,7 @@ impl ShardWorker {
                         last_sweep_ms = now;
                         self.sweep(ttl_ms);
                     }
+                    self.checkpoint_if_due();
                 }
                 Recv::Closed => break,
             }
@@ -729,33 +731,42 @@ impl ShardWorker {
         self.pool.put(cache);
     }
 
-    /// Run one journal append (no-op when durability is off), then
-    /// checkpoint if the cadence is due. Append failures are counted
-    /// and logged, never fatal — the coordinator keeps serving from
-    /// memory and the operator sees `journal_errors` climb.
+    /// Run one journal append (no-op when durability is off). Append
+    /// failures are counted and logged, never fatal — the coordinator
+    /// keeps serving from memory and the operator sees `journal_errors`
+    /// climb. Deliberately does NOT checkpoint: the cadence check runs
+    /// in [`ShardWorker::run`] once the current message handler has
+    /// fully applied its op, so a checkpoint always snapshots a state
+    /// that covers every journaled record it is about to truncate.
     fn journal<F>(&mut self, append: F)
     where
         F: FnOnce(&mut JournalWriter) -> io::Result<usize>,
     {
-        let due = {
-            let d = match self.durable.as_mut() {
-                Some(d) => d,
-                None => return,
-            };
-            match append(&mut d.writer) {
-                Ok(bytes) => {
-                    d.since_ckpt += 1;
-                    self.counters.journal_lag.store(d.since_ckpt, Relaxed);
-                    self.metrics.journal_appends.fetch_add(1, Relaxed);
-                    self.metrics.journal_bytes.fetch_add(bytes as u64, Relaxed);
-                }
-                Err(e) => {
-                    eprintln!("pathsig: journal append failed on shard {}: {e}", d.shard);
-                    self.metrics.journal_errors.fetch_add(1, Relaxed);
-                }
-            }
-            d.since_ckpt >= d.checkpoint_every
+        let d = match self.durable.as_mut() {
+            Some(d) => d,
+            None => return,
         };
+        match append(&mut d.writer) {
+            Ok(bytes) => {
+                d.since_ckpt += 1;
+                self.counters.journal_lag.store(d.since_ckpt, Relaxed);
+                self.metrics.journal_appends.fetch_add(1, Relaxed);
+                self.metrics.journal_bytes.fetch_add(bytes as u64, Relaxed);
+            }
+            Err(e) => {
+                eprintln!("pathsig: journal append failed on shard {}: {e}", d.shard);
+                self.metrics.journal_errors.fetch_add(1, Relaxed);
+            }
+        }
+    }
+
+    /// Write a cadence checkpoint if `checkpoint_every` appends have
+    /// accumulated. Only called between messages (see [`Self::run`]).
+    fn checkpoint_if_due(&mut self) {
+        let due = self
+            .durable
+            .as_ref()
+            .is_some_and(|d| d.since_ckpt >= d.checkpoint_every);
         if due {
             self.write_checkpoint();
         }

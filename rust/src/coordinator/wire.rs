@@ -24,14 +24,21 @@
 //! can no longer be trusted to be in sync).
 //!
 //! Request verbs: `ping` 0x01, `stats` 0x02, `signature` 0x03,
-//! `stream_open` 0x10, `stream_push` 0x11, `stream_window` 0x12,
-//! `stream_close` 0x13. Response status: `ok` 0, `err` 1, `shed` 2;
-//! every response payload leads with the request verb it answers.
+//! `stats2` 0x04, `stream_open` 0x10, `stream_push` 0x11,
+//! `stream_window` 0x12, `stream_close` 0x13. Response status: `ok` 0,
+//! `err` 1, `shed` 2; every response payload leads with the request
+//! verb it answers.
 //!
-//! The `stats` verb is v2's flagship: it returns per-shard counters
-//! (sessions, mailbox depth, sheds, pushes, journal lag) from the
-//! actor-sharded session table ([`super::shard`]) plus the
-//! content-addressed signature-cache counters ([`crate::persist`]).
+//! The stats verbs return per-shard counters from the actor-sharded
+//! session table ([`super::shard`]). `stats` keeps the layout it
+//! shipped with — `(shard, sessions, mailbox_depth, sheds, pushes)`
+//! rows, nothing else — **frozen**: clients deployed against that
+//! layout reject trailing bytes, so the durability counters could not
+//! be added in place without misdecoding across versions. `stats2`
+//! carries the extended body instead: the same rows each followed by
+//! `journal_lag`, then the content-addressed signature-cache counters
+//! (`hits`, `misses`, `evictions`; see [`crate::persist`]). New fields
+//! get a new verb, never a relayout.
 
 use super::protocol::{Backend, Request, RequestOp, MAX_STREAM_WINDOW};
 use super::shard::ShardStat;
@@ -51,10 +58,14 @@ pub const MAX_FRAME_LEN: usize = 1 << 24;
 pub mod verb {
     /// Health check.
     pub const PING: u8 = 0x01;
-    /// Per-shard coordinator stats.
+    /// Per-shard coordinator stats (frozen original layout).
     pub const STATS: u8 = 0x02;
     /// One-shot projected signature.
     pub const SIGNATURE: u8 = 0x03;
+    /// Extended stats: per-shard rows with `journal_lag` plus the
+    /// signature-cache counters. A separate verb so `stats` decoders
+    /// built before durability existed keep working unchanged.
+    pub const STATS2: u8 = 0x04;
     /// Open a streaming session.
     pub const STREAM_OPEN: u8 = 0x10;
     /// Push samples into a session.
@@ -140,8 +151,10 @@ pub enum SpecFrame {
 pub enum RequestFrame {
     /// Health check.
     Ping,
-    /// Per-shard stats.
+    /// Per-shard stats (frozen original layout).
     Stats,
+    /// Per-shard stats, extended with journal lag + cache counters.
+    Stats2,
     /// One-shot signature of a path.
     Signature {
         /// Path dimension.
@@ -328,6 +341,7 @@ impl RequestFrame {
         match self {
             RequestFrame::Ping => verb::PING,
             RequestFrame::Stats => verb::STATS,
+            RequestFrame::Stats2 => verb::STATS2,
             RequestFrame::Signature { .. } => verb::SIGNATURE,
             RequestFrame::StreamOpen { .. } => verb::STREAM_OPEN,
             RequestFrame::StreamPush { .. } => verb::STREAM_PUSH,
@@ -340,7 +354,7 @@ impl RequestFrame {
     pub fn encode(&self) -> Vec<u8> {
         let mut p = Vec::new();
         match self {
-            RequestFrame::Ping | RequestFrame::Stats => {}
+            RequestFrame::Ping | RequestFrame::Stats | RequestFrame::Stats2 => {}
             RequestFrame::Signature {
                 dim,
                 depth,
@@ -385,6 +399,7 @@ impl RequestFrame {
         let req = match verb_byte {
             verb::PING => RequestFrame::Ping,
             verb::STATS => RequestFrame::Stats,
+            verb::STATS2 => RequestFrame::Stats2,
             verb::SIGNATURE => {
                 let dim = c.u32()?;
                 let depth = c.u32()?;
@@ -453,7 +468,9 @@ impl RequestFrame {
         };
         match self {
             RequestFrame::Ping => Ok(blank(RequestOp::Ping)),
-            RequestFrame::Stats => Ok(blank(RequestOp::Stats)),
+            // Both stats verbs run the same service op; the reply's
+            // verb byte (mirroring the request) picks the body layout.
+            RequestFrame::Stats | RequestFrame::Stats2 => Ok(blank(RequestOp::Stats)),
             RequestFrame::Signature {
                 dim,
                 depth,
@@ -627,6 +644,11 @@ impl ResponseFrame {
                 match body {
                     OkBody::Empty => {}
                     OkBody::Stats { shards, cache } => {
+                        // The `stats` layout is frozen exactly as it
+                        // first shipped (deployed decoders reject
+                        // trailing bytes); only `stats2` carries the
+                        // durability fields.
+                        let extended = *v == verb::STATS2;
                         put_u32(&mut p, shards.len() as u32);
                         for r in shards {
                             put_u32(&mut p, r.shard as u32);
@@ -634,11 +656,15 @@ impl ResponseFrame {
                             put_u64(&mut p, r.mailbox_depth);
                             put_u64(&mut p, r.sheds);
                             put_u64(&mut p, r.pushes);
-                            put_u64(&mut p, r.journal_lag);
+                            if extended {
+                                put_u64(&mut p, r.journal_lag);
+                            }
                         }
-                        put_u64(&mut p, cache.hits);
-                        put_u64(&mut p, cache.misses);
-                        put_u64(&mut p, cache.evictions);
+                        if extended {
+                            put_u64(&mut p, cache.hits);
+                            put_u64(&mut p, cache.misses);
+                            put_u64(&mut p, cache.evictions);
+                        }
                     }
                     OkBody::Values { shape, values } => {
                         put_u32(&mut p, shape.len() as u32);
@@ -693,7 +719,8 @@ impl ResponseFrame {
                 let v = c.u8()?;
                 let body = match v {
                     verb::PING | verb::STREAM_CLOSE => OkBody::Empty,
-                    verb::STATS => {
+                    verb::STATS | verb::STATS2 => {
+                        let extended = v == verb::STATS2;
                         let n = c.u32()? as usize;
                         let mut rows = Vec::new();
                         for _ in 0..n {
@@ -703,13 +730,17 @@ impl ResponseFrame {
                                 mailbox_depth: c.u64()?,
                                 sheds: c.u64()?,
                                 pushes: c.u64()?,
-                                journal_lag: c.u64()?,
+                                journal_lag: if extended { c.u64()? } else { 0 },
                             });
                         }
-                        let cache = CacheStats {
-                            hits: c.u64()?,
-                            misses: c.u64()?,
-                            evictions: c.u64()?,
+                        let cache = if extended {
+                            CacheStats {
+                                hits: c.u64()?,
+                                misses: c.u64()?,
+                                evictions: c.u64()?,
+                            }
+                        } else {
+                            CacheStats::default()
                         };
                         OkBody::Stats { shards: rows, cache }
                     }
@@ -899,6 +930,7 @@ mod tests {
     fn request_frames_roundtrip() {
         roundtrip_req(RequestFrame::Ping);
         roundtrip_req(RequestFrame::Stats);
+        roundtrip_req(RequestFrame::Stats2);
         roundtrip_req(RequestFrame::Signature {
             dim: 2,
             depth: 3,
@@ -960,8 +992,26 @@ mod tests {
                 verb: verb::PING,
                 body: OkBody::Empty,
             },
+            // `stats` carries the frozen base layout only, so a
+            // roundtrip preserves exactly the base fields (journal_lag
+            // and cache decode as zero).
             ResponseFrame::Ok {
                 verb: verb::STATS,
+                body: OkBody::Stats {
+                    shards: vec![ShardStat {
+                        shard: 0,
+                        sessions: 3,
+                        mailbox_depth: 1,
+                        sheds: 0,
+                        pushes: 42,
+                        journal_lag: 0,
+                    }],
+                    cache: CacheStats::default(),
+                },
+            },
+            // `stats2` roundtrips the durability fields too.
+            ResponseFrame::Ok {
+                verb: verb::STATS2,
                 body: OkBody::Stats {
                     shards: vec![ShardStat {
                         shard: 0,

@@ -10,13 +10,23 @@
 //!   allocations (asserted in `benches/fig6_durability.rs`).
 //! * `shard-{i}.ckpt` — the latest checkpoint: a `CKPT_HEAD` carrying
 //!   the journal-sequence watermark it covers, then one `SNAP` per live
-//!   session. Checkpoints are written to a `.tmp` sibling, fsynced and
-//!   atomically renamed into place, and only then is the journal
-//!   truncated — so every instant of a crash leaves either the old
-//!   (checkpoint, long journal) pair or the new (checkpoint, short or
-//!   stale journal) pair, never a half state. Journal records with
-//!   `seq ≤ watermark` are skipped on replay, which makes the
-//!   rename-then-truncate crash window harmless.
+//!   session. Checkpoints are written to a `.tmp` sibling, fsynced,
+//!   atomically renamed into place, and the directory is fsynced (an
+//!   unsynced rename can be reordered after the journal truncate by a
+//!   power loss); only then is the journal truncated — so every
+//!   instant of a crash leaves either the old (checkpoint, long
+//!   journal) pair or the new (checkpoint, short or stale journal)
+//!   pair, never a half state. Journal records with `seq ≤ watermark`
+//!   are skipped on replay, which makes the rename-then-truncate crash
+//!   window harmless.
+//!
+//! Boot-time rewrites that move sessions *between* files (the shard
+//! count changed, or recovery dropped sessions) go through
+//! [`repartition`]: the whole new generation is staged under
+//! `shard-{i}.ckpt.new` names and committed with a single atomic
+//! rename of a `repartition.commit` marker, which [`recover_dir`]
+//! knows how to resume — so even multi-file rewrites are
+//! crash-anywhere safe.
 //!
 //! Recovery ([`recover_dir`]) loads the checkpoint (discarding it
 //! wholesale if corrupt), replays the journal tail on top, physically
@@ -43,6 +53,37 @@ pub fn ckpt_path(dir: &Path, shard: usize) -> PathBuf {
     dir.join(format!("shard-{shard}.ckpt"))
 }
 
+/// Staged (not yet committed) checkpoint path for shard `i`, used by
+/// the boot-time [`repartition`] protocol.
+fn staged_ckpt_path(dir: &Path, shard: usize) -> PathBuf {
+    dir.join(format!("shard-{shard}.ckpt.new"))
+}
+
+/// The repartition commit marker (see [`repartition`]). Its existence
+/// is the single atomic commit point for a boot-time rewrite; its body
+/// is the ASCII shard count of the new generation.
+fn repart_marker_path(dir: &Path) -> PathBuf {
+    dir.join("repartition.commit")
+}
+
+/// Durably sync the directory entry metadata (file creations, renames,
+/// and deletions) of `dir`. An atomic `rename` only survives power
+/// loss once the *parent directory* is fsynced — `sync_data` on the
+/// renamed file is not enough — and nothing else orders the rename
+/// against a later journal truncate. No-op on platforms where a
+/// directory cannot be opened as a file (e.g. Windows).
+fn sync_dir(dir: &Path) -> io::Result<()> {
+    #[cfg(unix)]
+    {
+        File::open(dir)?.sync_all()
+    }
+    #[cfg(not(unix))]
+    {
+        let _ = dir;
+        Ok(())
+    }
+}
+
 /// Append-only record writer over one shard's journal file.
 ///
 /// Holds a reusable encode buffer so warm appends allocate nothing;
@@ -66,6 +107,12 @@ impl JournalWriter {
             .write(true)
             .truncate(true)
             .open(path)?;
+        // Make the journal's directory entry durable before any record
+        // is acked against it — a file that vanishes with the page
+        // cache on power loss would silently void every appended op.
+        if let Some(dir) = path.parent() {
+            sync_dir(dir)?;
+        }
         Ok(JournalWriter {
             file,
             buf: Vec::with_capacity(256),
@@ -156,7 +203,117 @@ pub fn write_checkpoint(
     f.write_all(&buf)?;
     f.sync_data()?;
     drop(f);
-    fs::rename(&tmp, ckpt_path(dir, shard))
+    fs::rename(&tmp, ckpt_path(dir, shard))?;
+    // Order the rename against everything that follows (in particular
+    // the caller's journal truncate): without a directory fsync, power
+    // loss can persist the truncate while the rename is still only in
+    // the page cache — leaving the OLD checkpoint next to an EMPTY
+    // journal, i.e. silent loss of every op since that old checkpoint.
+    sync_dir(dir)
+}
+
+/// Re-persist a fully recovered generation of sessions under a
+/// (possibly changed) shard count, crash-safely.
+///
+/// A naive rewrite — delete the old files, then write the new ones —
+/// loses every session if the process dies in between, and even
+/// "write new, then delete old" is unsafe here because sessions move
+/// *between* files when the shard count changes: renaming a new
+/// checkpoint over `shard-0.ckpt` destroys the only durable copy of a
+/// session whose new home (`shard-1.ckpt`) has not been written yet.
+///
+/// So the rewrite is staged behind a single atomic commit point:
+///
+/// 1. **Stage** — every new checkpoint is written (and synced) to
+///    `shard-{i}.ckpt.new`. Old files are untouched; a crash leaves
+///    strays that the next [`recover_dir`] deletes.
+/// 2. **Commit** — `repartition.commit` (body: the ASCII shard count)
+///    is written to a tmp, synced, and renamed into place, then the
+///    directory is synced. This one rename flips which generation is
+///    authoritative.
+/// 3. **Finish** ([`finish_repartition`]) — staged checkpoints are
+///    renamed over the live ones, every journal (whose content the
+///    staged generation already folds in) and every file for a shard
+///    index `>= n` is deleted, and the marker is removed.
+///
+/// A crash before step 2 recovers the old generation; a crash after it
+/// makes [`recover_dir`] resume step 3 before scanning. At no instant
+/// does the directory's authoritative generation hold less than every
+/// recovered session.
+pub fn repartition(
+    dir: &Path,
+    shards: &[Vec<(u64, &WordSpec, &StreamEngine)>],
+) -> io::Result<()> {
+    let n = shards.len();
+    // Phase 1 — stage.
+    for (i, sessions) in shards.iter().enumerate() {
+        let mut buf = Vec::with_capacity(1024);
+        codec::encode_ckpt_head(&mut buf, 0, sessions.len());
+        for (id, spec, stream) in sessions {
+            let ck = stream.checkpoint();
+            codec::encode_snap(&mut buf, 0, *id, stream.dim(), spec, &ck);
+        }
+        let mut f = File::create(staged_ckpt_path(dir, i))?;
+        f.write_all(&buf)?;
+        f.sync_data()?;
+    }
+    sync_dir(dir)?;
+    // Phase 2 — commit.
+    let tmp = dir.join("repartition.commit.tmp");
+    {
+        let mut f = File::create(&tmp)?;
+        f.write_all(n.to_string().as_bytes())?;
+        f.sync_data()?;
+    }
+    fs::rename(&tmp, repart_marker_path(dir))?;
+    sync_dir(dir)?;
+    // Phase 3 — finish.
+    finish_repartition(dir, n)
+}
+
+/// Promote a committed repartition generation: rename each staged
+/// checkpoint over its live sibling, delete every journal plus every
+/// `shard-*` file for an index `>= n`, then drop the marker. Safe to
+/// re-run after a crash at any point (every step is idempotent).
+fn finish_repartition(dir: &Path, n: usize) -> io::Result<()> {
+    for i in 0..n {
+        match fs::rename(staged_ckpt_path(dir, i), ckpt_path(dir, i)) {
+            Ok(()) => {}
+            // Already promoted by the run that crashed mid-finish.
+            Err(e) if e.kind() == io::ErrorKind::NotFound => {}
+            Err(e) => return Err(e),
+        }
+    }
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        let Some(rest) = name.strip_prefix("shard-") else {
+            continue;
+        };
+        let stale = if rest.ends_with(".journal") || rest.ends_with(".ckpt.tmp") {
+            // Journals predate the committed generation (their records
+            // are folded into the staged checkpoints); tmps are debris.
+            true
+        } else if let Some(k) = rest
+            .strip_suffix(".ckpt")
+            .or_else(|| rest.strip_suffix(".ckpt.new"))
+            .and_then(|k| k.parse::<usize>().ok())
+        {
+            k >= n
+        } else {
+            false
+        };
+        if stale {
+            fs::remove_file(entry.path())?;
+        }
+    }
+    match fs::remove_file(repart_marker_path(dir)) {
+        Ok(()) => {}
+        Err(e) if e.kind() == io::ErrorKind::NotFound => {}
+        Err(e) => return Err(e),
+    }
+    sync_dir(dir)
 }
 
 /// One session rebuilt by recovery, ready to hand to a shard worker.
@@ -257,6 +414,37 @@ pub fn recover_dir(dir: &Path, resolve: &mut TableResolver) -> io::Result<Recove
     let mut out = Recovery::default();
     if !dir.exists() {
         return Ok(out);
+    }
+    // Settle any repartition interrupted by a crash before scanning: a
+    // committed marker means the staged `.ckpt.new` generation is
+    // authoritative (every staged file was written and synced before
+    // the marker's atomic rename), so finish promoting it; no marker
+    // means staged files are uncommitted phase-1 residue and the old
+    // generation still rules, so drop them.
+    match fs::read_to_string(repart_marker_path(dir)) {
+        Ok(body) => {
+            let n = body.trim().parse::<usize>().map_err(|_| {
+                io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    "corrupt repartition.commit marker",
+                )
+            })?;
+            finish_repartition(dir, n)?;
+        }
+        Err(e) if e.kind() == io::ErrorKind::NotFound => {
+            for entry in fs::read_dir(dir)? {
+                let entry = entry?;
+                let name = entry.file_name();
+                let name = name.to_string_lossy();
+                if name.starts_with("shard-")
+                    && (name.ends_with(".ckpt.new") || name.ends_with(".ckpt.tmp"))
+                {
+                    fs::remove_file(entry.path())?;
+                }
+            }
+            let _ = fs::remove_file(dir.join("repartition.commit.tmp"));
+        }
+        Err(e) => return Err(e),
     }
     let mut shards: Vec<usize> = Vec::new();
     for entry in fs::read_dir(dir)? {
@@ -572,6 +760,117 @@ mod tests {
         let rec = recover_dir(&dir, &mut res).unwrap();
         assert_eq!(rec.stats.corrupt_checkpoints, 1);
         assert_eq!(rec.sessions.len(), 1);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn repartition_rewrites_topology_atomically() {
+        let dir = tmpdir();
+        let spec = WordSpec::Truncated { depth: 2 };
+        // Old generation: one shard file holding two sessions.
+        let mut w = JournalWriter::create(&journal_path(&dir, 0), false, 0).unwrap();
+        w.append_open(1, 1, 4, &spec).unwrap();
+        w.append_push(1, &[0.5, 1.5]).unwrap();
+        w.append_open(2, 1, 4, &spec).unwrap();
+        w.append_push(2, &[2.0]).unwrap();
+        drop(w);
+        let mut res = resolver();
+        let rec = recover_dir(&dir, &mut res).unwrap();
+        assert_eq!(rec.sessions.len(), 2);
+        let golden: Vec<Vec<f64>> = rec
+            .sessions
+            .iter()
+            .map(|s| s.stream.window_signature())
+            .collect();
+        // Re-persist across two shards (one session each).
+        let groups: Vec<Vec<(u64, &WordSpec, &StreamEngine)>> = rec
+            .sessions
+            .iter()
+            .map(|s| vec![(s.id, &s.spec, &s.stream)])
+            .collect();
+        repartition(&dir, &groups).unwrap();
+        // Clean final state: two checkpoints, no journals, no marker,
+        // no staged files.
+        assert!(ckpt_path(&dir, 0).exists());
+        assert!(ckpt_path(&dir, 1).exists());
+        assert!(!journal_path(&dir, 0).exists());
+        assert!(!repart_marker_path(&dir).exists());
+        assert!(!staged_ckpt_path(&dir, 0).exists());
+        // A fresh recovery sees the same sessions with identical state.
+        let rec2 = recover_dir(&dir, &mut res).unwrap();
+        assert_eq!(rec2.sessions.len(), 2);
+        for (s, g) in rec2.sessions.iter().zip(&golden) {
+            assert_eq!(&s.stream.window_signature(), g);
+        }
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn uncommitted_stage_is_rolled_back() {
+        // Phase-1 crash: staged `.ckpt.new` files exist but the marker
+        // was never committed — the old generation must win and the
+        // strays must be deleted.
+        let dir = tmpdir();
+        let spec = WordSpec::Truncated { depth: 2 };
+        let mut w = JournalWriter::create(&journal_path(&dir, 0), false, 0).unwrap();
+        w.append_open(1, 1, 4, &spec).unwrap();
+        w.append_push(1, &[1.0]).unwrap();
+        drop(w);
+        fs::write(staged_ckpt_path(&dir, 0), b"half-written stage").unwrap();
+        fs::write(staged_ckpt_path(&dir, 5), b"more debris").unwrap();
+        fs::write(dir.join("repartition.commit.tmp"), b"2").unwrap();
+        let mut res = resolver();
+        let rec = recover_dir(&dir, &mut res).unwrap();
+        assert_eq!(rec.sessions.len(), 1);
+        assert_eq!(rec.sessions[0].id, 1);
+        assert!(!staged_ckpt_path(&dir, 0).exists());
+        assert!(!staged_ckpt_path(&dir, 5).exists());
+        assert!(!dir.join("repartition.commit.tmp").exists());
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn committed_marker_resumes_finish() {
+        // Post-commit crash: the marker exists, the staged generation
+        // is complete, the old journal was never deleted. Recovery
+        // must promote the staged checkpoints and ignore the old
+        // journal entirely (its records are already folded in).
+        let dir = tmpdir();
+        let spec = WordSpec::Truncated { depth: 2 };
+        let tbl = Arc::new(StreamTable::new(1, &truncated_words(1, 2)));
+        // Old generation: session 1 with ONE push.
+        let mut w = JournalWriter::create(&journal_path(&dir, 0), false, 0).unwrap();
+        w.append_open(1, 1, 4, &spec).unwrap();
+        w.append_push(1, &[1.0]).unwrap();
+        drop(w);
+        // Old-generation checkpoint beyond the new shard count.
+        fs::write(ckpt_path(&dir, 3), b"stale old-generation file").unwrap();
+        // Staged new generation: the same session with TWO pushes.
+        let mut staged = StreamEngine::new(Arc::clone(&tbl), 4);
+        staged.push(&[1.0]);
+        staged.push(&[2.0]);
+        let mut buf = Vec::new();
+        codec::encode_ckpt_head(&mut buf, 0, 1);
+        codec::encode_snap(&mut buf, 0, 1, 1, &spec, &staged.checkpoint());
+        fs::write(staged_ckpt_path(&dir, 0), &buf).unwrap();
+        fs::write(repart_marker_path(&dir), b"1").unwrap();
+        let mut res = resolver();
+        let rec = recover_dir(&dir, &mut res).unwrap();
+        assert_eq!(rec.sessions.len(), 1);
+        // The committed generation wins over the stale journal.
+        assert_eq!(
+            rec.sessions[0].stream.window_signature(),
+            staged.window_signature()
+        );
+        assert!(ckpt_path(&dir, 0).exists());
+        assert!(!staged_ckpt_path(&dir, 0).exists());
+        assert!(!journal_path(&dir, 0).exists());
+        assert!(!ckpt_path(&dir, 3).exists());
+        assert!(!repart_marker_path(&dir).exists());
+        // Idempotent: a second recovery is clean and identical.
+        let rec2 = recover_dir(&dir, &mut res).unwrap();
+        assert_eq!(rec2.sessions.len(), 1);
+        assert_eq!(rec2.stats.corrupt_checkpoints, 0);
         fs::remove_dir_all(&dir).unwrap();
     }
 

@@ -31,8 +31,8 @@ pub mod sha256;
 
 pub use cache::{cache_key, CacheStats, SigCache};
 pub use journal::{
-    ckpt_path, journal_path, recover_dir, write_checkpoint, JournalWriter, Recovery,
-    RecoveredSession, RecoveryStats,
+    ckpt_path, journal_path, recover_dir, repartition, write_checkpoint, JournalWriter,
+    Recovery, RecoveredSession, RecoveryStats,
 };
 
 use std::path::PathBuf;

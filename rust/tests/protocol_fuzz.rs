@@ -88,6 +88,7 @@ fn v2_corpus() -> Vec<Vec<u8>> {
     vec![
         RequestFrame::Ping.encode(),
         RequestFrame::Stats.encode(),
+        RequestFrame::Stats2.encode(),
         RequestFrame::Signature {
             dim: 2,
             depth: 2,
@@ -253,6 +254,10 @@ fn assert_serviceable(addr: &str) {
     match w.call(&RequestFrame::Stats).unwrap() {
         ResponseFrame::Ok { .. } => {}
         other => panic!("v2 stats failed after fuzzing: {other:?}"),
+    }
+    match w.call(&RequestFrame::Stats2).unwrap() {
+        ResponseFrame::Ok { .. } => {}
+        other => panic!("v2 stats2 failed after fuzzing: {other:?}"),
     }
 }
 

@@ -33,6 +33,7 @@ VERB = {
     "ping": 0x01,
     "stats": 0x02,
     "signature": 0x03,
+    "stats2": 0x04,
     "stream_open": 0x10,
     "stream_push": 0x11,
     "stream_window": 0x12,
@@ -109,6 +110,7 @@ def v2_frames():
     # Requests — all 7 verbs.
     rows.append(("req_ping", frame(VERB["ping"], b"")))
     rows.append(("req_stats", frame(VERB["stats"], b"")))
+    rows.append(("req_stats2", frame(VERB["stats2"], b"")))
     rows.append((
         "req_signature_truncated",
         frame(VERB["signature"],
@@ -163,11 +165,20 @@ def v2_frames():
     rows.append(("resp_ok_ping", frame(STATUS["ok"], u8(VERB["ping"]))))
     rows.append((
         "resp_ok_stats",
-        # One shard row (shard, sessions, mailbox_depth, sheds, pushes,
-        # journal_lag) followed by the signature-cache counters
-        # (hits, misses, evictions).
+        # The ORIGINAL stats layout, frozen: one shard row of exactly
+        # (shard, sessions, mailbox_depth, sheds, pushes) and nothing
+        # after the rows. Deployed decoders reject trailing bytes, so
+        # new fields go in stats2, never here.
         frame(STATUS["ok"],
               u8(VERB["stats"]) + u32(1)
+              + u32(0) + u64(3) + u64(1) + u64(0) + u64(42)),
+    ))
+    rows.append((
+        "resp_ok_stats2",
+        # Extended row (base + journal_lag) followed by the
+        # signature-cache counters (hits, misses, evictions).
+        frame(STATUS["ok"],
+              u8(VERB["stats2"]) + u32(1)
               + u32(0) + u64(3) + u64(1) + u64(0) + u64(42) + u64(5)
               + u64(7) + u64(2) + u64(1)),
     ))
