@@ -18,13 +18,15 @@ bench:
 
 # Emit the repo-root perf-trajectory artifacts (BENCH_fig1.json,
 # BENCH_table1.json, BENCH_table2.json, BENCH_stream.json,
-# BENCH_tree.json, BENCH_coord.json, BENCH_durability.json): mean/
-# median/min per case, peak bytes, the lane-major-vs-scalar forward AND
-# backward speedups, the streaming-vs-recompute sliding-window rows,
-# the long-path tree-vs-sequential rows, the zero-alloc steady-state
-# counts (batch forward, train step, stream push, tree fwd+bwd, journal
-# append), the sharded coordinator's p50/p99 latency under thousands of
-# live sessions, and the durability tax + recovery-time curve.
+# BENCH_tree.json, BENCH_coord.json, BENCH_durability.json,
+# BENCH_kernels.json): mean/median/min per case, peak bytes, the
+# lane-major-vs-scalar forward AND backward speedups, the
+# streaming-vs-recompute sliding-window rows, the long-path
+# tree-vs-sequential rows, the zero-alloc steady-state counts (batch
+# forward, train step, stream push, tree fwd+bwd, journal append, warm
+# Gram), the sharded coordinator's p50/p99 latency under thousands of
+# live sessions, the durability tax + recovery-time curve, and the
+# batched-Gram-vs-naive + random-feature error/time rows.
 bench-json:
 	cargo bench --bench fig1_truncated -- --json
 	cargo bench --bench table1_training -- --json
@@ -33,6 +35,7 @@ bench-json:
 	cargo bench --bench fig4_longpath -- --json
 	cargo bench --bench fig5_coordinator -- --json
 	cargo bench --bench fig6_durability -- --json
+	cargo bench --bench fig7_kernels -- --json
 
 # CI-sized variant of bench-json: tiny cases, 1 warmup / 2 runs —
 # exercises the artifact pipeline, not a measurement.
@@ -44,6 +47,7 @@ bench-smoke:
 	cargo bench --bench fig4_longpath -- --json --smoke
 	cargo bench --bench fig5_coordinator -- --json --smoke
 	cargo bench --bench fig6_durability -- --json --smoke
+	cargo bench --bench fig7_kernels -- --json --smoke
 
 # Run the JSON bench suite and stage the BENCH_*.json artifacts for
 # commit — the perf trajectory is tracked in-repo, one snapshot per

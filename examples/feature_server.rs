@@ -128,11 +128,64 @@ fn main() {
     );
     println!("\ndynamic batching active (mean batch size {mean_batch:.2}) ✓");
 
+    // --- batched Gram over both protocols ------------------------------------
+    // One `gram` request computes the whole B×B signature-kernel matrix
+    // server-side (one batched sweep + syrk) — the client never issues
+    // B signature calls and B² dots. v1 is the JSON op; v2 is the
+    // dedicated verb 0x05 (the `signature` frame layout is frozen, so
+    // the batched request gets its own verb — see DESIGN.md).
+    use pathsig::coordinator::wire::{OkBody, RequestFrame, ResponseFrame, SpecFrame, WireClient};
+    let mut rng = Rng::new(9);
+    let (gb, gd) = (4usize, 2usize);
+    let gpaths: Vec<Vec<f64>> = (0..gb).map(|_| rng.brownian_path(16, gd, 0.3)).collect();
+    let rows_json: Vec<String> = gpaths
+        .iter()
+        .map(|p| {
+            let xs: Vec<String> = p.iter().map(|x| format!("{x:.6}")).collect();
+            format!("[{}]", xs.join(","))
+        })
+        .collect();
+    let g1 = client
+        .call(&format!(
+            r#"{{"op":"gram","dim":{gd},"depth":3,"paths":[{}]}}"#,
+            rows_json.join(",")
+        ))
+        .unwrap();
+    assert_eq!(g1.get("ok").as_bool(), Some(true), "{g1:?}");
+    let v1_gram = g1.f64_vec("result");
+    assert_eq!(g1.usize_vec("shape"), vec![gb, gb]);
+
+    let mut v2 = WireClient::connect(&addr).unwrap();
+    let v2_gram = match v2
+        .call(&RequestFrame::Gram {
+            dim: gd as u32,
+            depth: 3,
+            spec: SpecFrame::Truncated,
+            paths: gpaths.clone(),
+        })
+        .unwrap()
+    {
+        ResponseFrame::Ok {
+            body: OkBody::Values { shape, values },
+            ..
+        } => {
+            assert_eq!(shape, vec![gb as u32, gb as u32]);
+            values
+        }
+        other => panic!("gram over v2 failed: {other:?}"),
+    };
+    assert_eq!(v1_gram, v2_gram, "gram must be bit-identical across protocols");
+    println!(
+        "\nbatched gram ({gb}×{gb}) identical over v1 JSON and v2 binary; diag [{}]",
+        (0..gb)
+            .map(|i| format!("{:.3}", v1_gram[i * gb + i]))
+            .collect::<Vec<_>>()
+            .join(", ")
+    );
+
     // --- wire protocol v2: per-shard stats over binary frames ----------------
     // `stats2` carries everything `stats` does plus the durability columns
     // (journal_lag, cache counters); the original `stats` layout is frozen.
-    use pathsig::coordinator::wire::{OkBody, RequestFrame, ResponseFrame, WireClient};
-    let mut v2 = WireClient::connect(&addr).unwrap();
     if let ResponseFrame::Ok {
         body: OkBody::Stats { shards: rows, cache },
         ..

@@ -1,0 +1,211 @@
+//! Signature-kernel bench (ISSUE 8): the batched Gram engine vs the
+//! naive per-pair baseline, and the random projected-word feature map's
+//! error/time tradeoff against the exact kernel. Emits the repo-root
+//! `BENCH_kernels.json` perf-trajectory artifact in `--json` mode;
+//! `--smoke` shrinks every case to CI size.
+//!
+//! Headlines: `gram_vs_naive.speedup` (largest B) must exceed 1 — one
+//! batched sweep plus a syrk beats B single-path sweeps plus B² dots —
+//! and `steady_state_allocs_per_call` must be 0 (warm [`gram_into`]
+//! calls on a sequential engine draw all scratch from engine pools;
+//! threaded engines spawn scoped workers, which allocate, so the
+//! contract is measured sequentially exactly like fig1/fig4).
+
+mod common;
+use common::{dump, dump_root, full, json_mode, smoke, timeit};
+use pathsig::bench::{alloc_count, CountingAllocator, Timing};
+use pathsig::sig::{gram, gram_into, signature, RandomWords, SigEngine};
+use pathsig::util::json::Json;
+use pathsig::util::rng::Rng;
+use pathsig::words::{truncated_words, WordTable};
+
+#[global_allocator]
+static ALLOC: CountingAllocator = CountingAllocator;
+
+fn rand_paths(rng: &mut Rng, b: usize, m: usize, d: usize) -> Vec<f64> {
+    let mut paths = Vec::new();
+    for _ in 0..b {
+        paths.extend(rng.brownian_path(m, d, 0.3));
+    }
+    paths
+}
+
+/// The baseline the Gram engine replaces: one scalar `signature()`
+/// sweep per path, then a dense pairwise dot (both triangles).
+fn naive_gram(eng: &SigEngine, paths: &[f64], b: usize, out: &mut [f64]) {
+    let per = paths.len() / b;
+    let sigs: Vec<Vec<f64>> = (0..b)
+        .map(|i| signature(eng, &paths[i * per..(i + 1) * per]))
+        .collect();
+    for i in 0..b {
+        for j in 0..b {
+            out[i * b + j] = sigs[i].iter().zip(&sigs[j]).map(|(x, y)| x * y).sum();
+        }
+    }
+}
+
+/// Heap allocations per warm `gram_into` call on a sequential engine.
+fn steady_state_allocs(smoke: bool) -> f64 {
+    let (d, n, b, m) = if smoke { (2, 2, 8, 16) } else { (2, 3, 32, 64) };
+    let eng = SigEngine::sequential(WordTable::build(d, &truncated_words(d, n)));
+    let mut rng = Rng::new(0xF701);
+    let paths = rand_paths(&mut rng, b, m, d);
+    let mut out = vec![0.0; b * b];
+    // Warm: fills the gram pool and the forward-workspace pool.
+    for _ in 0..3 {
+        gram_into(&eng, &paths, b, &mut out);
+    }
+    let calls = 8;
+    let before = alloc_count();
+    for _ in 0..calls {
+        gram_into(&eng, &paths, b, &mut out);
+        std::hint::black_box(&out);
+    }
+    let per_call = (alloc_count() - before) as f64 / calls as f64;
+    println!("# steady-state allocations per warm gram_into call: {per_call}");
+    per_call
+}
+
+/// Random-feature rows: time + max abs error vs the exact kernel, per
+/// feature count F.
+fn random_feature_rows(smoke: bool, budget: f64) -> Vec<Json> {
+    let (d, depth, b, m) = if smoke { (2, 3, 6, 12) } else { (2, 4, 24, 48) };
+    let fs: &[usize] = if smoke { &[4, 16] } else { &[8, 32, 128] };
+    let mut rng = Rng::new(0xF702);
+    let paths = rand_paths(&mut rng, b, m, d);
+    let exact_eng = SigEngine::new(WordTable::build(d, &truncated_words(d, depth)));
+    let exact = gram(&exact_eng, &paths, b);
+    let t_exact = timeit("exact-kernel", smoke, budget, || {
+        std::hint::black_box(gram(&exact_eng, &paths, b));
+    });
+    println!(
+        "# random features vs exact kernel (d={d}, N={depth}, B={b}, |W|={}, exact {}):",
+        exact_eng.out_dim(),
+        Timing::fmt_secs(t_exact.median_s)
+    );
+    let mut rows = Vec::new();
+    for &f in fs {
+        let rw = RandomWords::truncated(d, depth, f, 0xF703);
+        let feng = rw.engine();
+        let mut phi = vec![0.0; b * f];
+        let t = timeit("random-features", smoke, budget, || {
+            rw.features_into(&feng, &paths, b, &mut phi);
+            std::hint::black_box(&phi);
+        });
+        let mut err: f64 = 0.0;
+        for i in 0..b {
+            for j in 0..b {
+                let approx: f64 = phi[i * f..(i + 1) * f]
+                    .iter()
+                    .zip(&phi[j * f..(j + 1) * f])
+                    .map(|(x, y)| x * y)
+                    .sum();
+                err = err.max((approx - exact[i * b + j]).abs());
+            }
+        }
+        println!(
+            "#   F={f:>4}: {} per batch, max |err| {err:.3e}",
+            Timing::fmt_secs(t.median_s)
+        );
+        rows.push(Json::obj(vec![
+            ("features", Json::Num(f as f64)),
+            ("exact_dim", Json::Num(exact_eng.out_dim() as f64)),
+            ("features_s", Json::Num(t.median_s)),
+            ("exact_s", Json::Num(t_exact.median_s)),
+            ("max_abs_err", Json::Num(err)),
+        ]));
+    }
+    rows
+}
+
+fn main() {
+    let full = full();
+    let smoke = smoke();
+    let budget = if full { 0.8 } else { 0.3 };
+    let (d, depth) = if smoke { (2, 2) } else { (3, 3) };
+    let bs: &[usize] = if smoke {
+        &[8]
+    } else if full {
+        &[16, 64, 256]
+    } else {
+        &[16, 64]
+    };
+    let m = if smoke { 16 } else { 64 };
+    let eng = SigEngine::new(WordTable::build(d, &truncated_words(d, depth)));
+    println!(
+        "# Signature-kernel Gram (d={d}, N={depth}, |I|={}, M={m}, {} threads, L={}): \
+         batched syrk vs naive per-pair",
+        eng.out_dim(),
+        eng.threads,
+        eng.lanes()
+    );
+    println!(
+        "{:>5} | {:>11} {:>11} {:>8}",
+        "B", "naive", "gram", "speedup"
+    );
+
+    let mut rng = Rng::new(0xF700);
+    let mut rows = Vec::new();
+    let mut last_speedup = 1.0;
+    for &b in bs {
+        let paths = rand_paths(&mut rng, b, m, d);
+        let mut out = vec![0.0; b * b];
+        let t_naive = timeit("gram-naive", smoke, budget, || {
+            naive_gram(&eng, &paths, b, &mut out);
+            std::hint::black_box(&out);
+        });
+        let t_gram = timeit("gram-batched", smoke, budget, || {
+            gram_into(&eng, &paths, b, &mut out);
+            std::hint::black_box(&out);
+        });
+        last_speedup = t_naive.median_s / t_gram.median_s;
+        println!(
+            "{:>5} | {:>11} {:>11} {:>7.2}x",
+            b,
+            Timing::fmt_secs(t_naive.median_s),
+            Timing::fmt_secs(t_gram.median_s),
+            last_speedup
+        );
+        rows.push(Json::obj(vec![
+            ("batch", Json::Num(b as f64)),
+            ("m", Json::Num(m as f64)),
+            ("out_dim", Json::Num(eng.out_dim() as f64)),
+            ("naive_s", Json::Num(t_naive.median_s)),
+            ("gram_s", Json::Num(t_gram.median_s)),
+            ("speedup", Json::Num(last_speedup)),
+        ]));
+    }
+
+    let feature_rows = random_feature_rows(smoke, budget);
+    let allocs = steady_state_allocs(smoke);
+    let mode = if smoke {
+        "smoke"
+    } else if full {
+        "full"
+    } else {
+        "default"
+    };
+    let artifact = Json::obj(vec![
+        ("bench", Json::str("fig7_kernels")),
+        ("mode", Json::str(mode)),
+        ("threads", Json::Num(eng.threads as f64)),
+        (
+            "gram_vs_naive",
+            Json::obj(vec![
+                // Largest measured B — the acceptance headline.
+                ("speedup", Json::Num(last_speedup)),
+                ("rows", Json::Arr(rows)),
+            ]),
+        ),
+        (
+            "random_features",
+            Json::obj(vec![("rows", Json::Arr(feature_rows))]),
+        ),
+        ("steady_state_allocs_per_call", Json::Num(allocs)),
+    ]);
+    if json_mode() {
+        dump_root("BENCH_kernels.json", artifact);
+    } else {
+        dump("fig7_kernels", artifact);
+    }
+}

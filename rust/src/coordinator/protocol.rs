@@ -18,7 +18,9 @@
 //!   (alphabet must be 2·base_dim).
 //!
 //! Extra ops: `"logsig"`, `"windowed"` (+ `"windows": [[l, r], …]`),
-//! `"metrics"`, `"ping"`.
+//! `"gram"` (+ `"paths": [[…], …]` — a batch of equal-length paths;
+//! returns the `B×B` signature-kernel Gram matrix), `"metrics"`,
+//! `"ping"`.
 //!
 //! Stateful streaming sessions (amortized-O(1) sliding windows, see
 //! `sig::stream`):
@@ -45,6 +47,12 @@ use crate::words::{generate::sparse_leadlag_generators, Word, WordSpec};
 /// beyond this before any allocation happens.
 pub const MAX_STREAM_WINDOW: usize = 1 << 16;
 
+/// Upper bound on a `gram` request's batch size. The response carries
+/// `B²` floats, so the cap keeps the worst-case reply (8 MiB at
+/// `B = 1024`) inside protocol v2's 16 MiB frame limit with room to
+/// spare; it is validated before any engine work happens.
+pub const MAX_GRAM_BATCH: usize = 1024;
+
 /// Operation requested by the client.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum RequestOp {
@@ -54,6 +62,9 @@ pub enum RequestOp {
     LogSig,
     /// Windowed signatures (`windows` holds the index pairs).
     Windowed,
+    /// Signature-kernel Gram matrix of a batch of paths (`path` holds
+    /// the flattened batch, `batch` the path count; result is `B×B`).
+    Gram,
     /// Metrics snapshot (control op, handled by the server).
     Metrics,
     /// Health check (control op, handled by the server).
@@ -127,6 +138,9 @@ pub struct Request {
     /// For `StreamWindow`: query the running `S_{0,t}` instead of the
     /// sliding window (`"mode": "full"`).
     pub full: bool,
+    /// For `Gram`: number of equal-length paths flattened into `path`
+    /// (0 for every other op).
+    pub batch: usize,
 }
 
 /// Parse a JSON-line request.
@@ -137,6 +151,7 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
         "signature" => RequestOp::Signature,
         "logsig" => RequestOp::LogSig,
         "windowed" => RequestOp::Windowed,
+        "gram" => RequestOp::Gram,
         "metrics" => RequestOp::Metrics,
         "ping" => RequestOp::Ping,
         "stats" => RequestOp::Stats,
@@ -159,6 +174,7 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
         samples: Vec::new(),
         window_len: 0,
         full: false,
+        batch: 0,
     };
     if matches!(op, RequestOp::Metrics | RequestOp::Ping | RequestOp::Stats) {
         return Ok(blank(id, op));
@@ -223,6 +239,44 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
         req.spec = spec;
         req.backend = backend;
         req.window_len = window_len;
+        return Ok(req);
+    }
+    if op == RequestOp::Gram {
+        let rows = j.get("paths").as_arr().unwrap_or(&[]);
+        if rows.is_empty() {
+            return Err("gram needs a non-empty 'paths' array of paths".into());
+        }
+        if rows.len() > MAX_GRAM_BATCH {
+            return Err(format!(
+                "gram batch {} exceeds the server cap {MAX_GRAM_BATCH}",
+                rows.len()
+            ));
+        }
+        let mut flat = Vec::new();
+        let mut per_path = 0usize;
+        for (k, row) in rows.iter().enumerate() {
+            let vals = row.as_arr().unwrap_or(&[]);
+            if k == 0 {
+                per_path = vals.len();
+            } else if vals.len() != per_path {
+                return Err("gram paths must all have the same length".into());
+            }
+            for v in vals {
+                flat.push(v.as_f64().ok_or("non-numeric value in gram path")?);
+            }
+        }
+        if per_path == 0 || per_path % dim != 0 {
+            return Err(format!(
+                "each gram path must be a non-empty flat (M+1)·dim array (got {per_path} floats, dim {dim})"
+            ));
+        }
+        let mut req = blank(id, op);
+        req.dim = dim;
+        req.depth = depth;
+        req.spec = spec;
+        req.backend = backend;
+        req.batch = rows.len();
+        req.path = flat;
         return Ok(req);
     }
     let path = j.f64_vec("path");
@@ -513,6 +567,47 @@ mod tests {
                "projection":{"type":"words","words":[[7]]},"path":[0,0,1,1]}"#
         )
         .is_err());
+    }
+
+    #[test]
+    fn parse_gram() {
+        let r = parse_request(
+            r#"{"op":"gram","dim":2,"depth":3,"paths":[[0,0,1,1],[0,0,2,0]]}"#,
+        )
+        .unwrap();
+        assert_eq!(r.op, RequestOp::Gram);
+        assert_eq!((r.dim, r.depth, r.batch), (2, 3, 2));
+        assert_eq!(r.path, vec![0.0, 0.0, 1.0, 1.0, 0.0, 0.0, 2.0, 0.0]);
+        // Projections apply to gram like any compute op.
+        let r = parse_request(
+            r#"{"op":"gram","dim":2,"depth":3,
+                "projection":{"type":"anisotropic","gamma":[1.0,2.0],"cutoff":3.0},
+                "paths":[[0,0,1,1]]}"#,
+        )
+        .unwrap();
+        assert!(matches!(r.spec, WordSpec::Anisotropic { .. }));
+        assert_eq!(r.batch, 1);
+    }
+
+    #[test]
+    fn rejects_malformed_gram() {
+        // Missing / empty / ragged / non-divisible / oversized batches.
+        assert!(parse_request(r#"{"op":"gram","dim":2,"depth":2}"#).is_err());
+        assert!(parse_request(r#"{"op":"gram","dim":2,"depth":2,"paths":[]}"#).is_err());
+        assert!(
+            parse_request(r#"{"op":"gram","dim":2,"depth":2,"paths":[[0,0,1,1],[0,0]]}"#).is_err()
+        );
+        assert!(parse_request(r#"{"op":"gram","dim":2,"depth":2,"paths":[[0,0,1]]}"#).is_err());
+        assert!(parse_request(r#"{"op":"gram","dim":2,"depth":2,"paths":[[],[]]}"#).is_err());
+        let mut big = String::from(r#"{"op":"gram","dim":1,"depth":1,"paths":["#);
+        for k in 0..=MAX_GRAM_BATCH {
+            if k > 0 {
+                big.push(',');
+            }
+            big.push_str("[0,1]");
+        }
+        big.push_str("]}");
+        assert!(parse_request(&big).unwrap_err().contains("cap"));
     }
 
     #[test]

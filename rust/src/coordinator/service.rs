@@ -21,8 +21,8 @@ use super::shard::{ShardConfig, ShardSet, ShardStat, StreamError};
 use crate::logsig::LogSigEngine;
 use crate::persist::{cache_key, CacheStats, DurabilityConfig, SigCache};
 use crate::sig::{
-    signature_batch_into, windowed_signatures, SigEngine, StreamEngine, StreamScratch,
-    StreamTable, Window,
+    gram_into, signature_batch_into, windowed_signatures, SigEngine, StreamEngine,
+    StreamScratch, StreamTable, Window,
 };
 use crate::runtime::Runtime;
 use crate::util::json::Json;
@@ -71,6 +71,7 @@ impl ConfigKey {
             spec_id: spec_identity(&req.spec),
             op: match req.op {
                 RequestOp::Signature => "sig",
+                RequestOp::Gram => "gram",
                 RequestOp::LogSig => "logsig",
                 RequestOp::Windowed => "windowed",
                 RequestOp::Metrics => "metrics",
@@ -522,6 +523,21 @@ impl SigService {
                 }
                 let n = out.len();
                 Ok((out, vec![n], "native"))
+            }
+            RequestOp::Gram => {
+                // One forward sweep over the whole batch (lane-major /
+                // time-parallel routing inside `gram_into`), then the
+                // syrk-style reduction; the parser guaranteed equal
+                // per-path lengths and a batch within `MAX_GRAM_BATCH`,
+                // so the (B, B) reply fits a v2 frame.
+                let eng = self.engine(req.dim, &req.spec);
+                let b = req.batch;
+                let mut out = vec![0.0; b * b];
+                gram_into(&eng, &req.path, b, &mut out);
+                self.metrics
+                    .native_executions
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                Ok((out, vec![b, b], "native"))
             }
             RequestOp::LogSig => {
                 let eng = self.logsig_engine(req.dim, req.depth);

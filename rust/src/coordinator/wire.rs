@@ -24,7 +24,7 @@
 //! can no longer be trusted to be in sync).
 //!
 //! Request verbs: `ping` 0x01, `stats` 0x02, `signature` 0x03,
-//! `stats2` 0x04, `stream_open` 0x10, `stream_push` 0x11,
+//! `stats2` 0x04, `gram` 0x05, `stream_open` 0x10, `stream_push` 0x11,
 //! `stream_window` 0x12, `stream_close` 0x13. Response status: `ok` 0,
 //! `err` 1, `shed` 2; every response payload leads with the request
 //! verb it answers.
@@ -40,7 +40,7 @@
 //! (`hits`, `misses`, `evictions`; see [`crate::persist`]). New fields
 //! get a new verb, never a relayout.
 
-use super::protocol::{Backend, Request, RequestOp, MAX_STREAM_WINDOW};
+use super::protocol::{Backend, Request, RequestOp, MAX_GRAM_BATCH, MAX_STREAM_WINDOW};
 use super::shard::ShardStat;
 use crate::persist::CacheStats;
 use crate::words::{generate::sparse_leadlag_generators, Word, WordSpec};
@@ -66,6 +66,10 @@ pub mod verb {
     /// signature-cache counters. A separate verb so `stats` decoders
     /// built before durability existed keep working unchanged.
     pub const STATS2: u8 = 0x04;
+    /// Batched signature-kernel Gram matrix. Its own verb — not a
+    /// field grafted onto `signature` — because that frame's layout is
+    /// frozen (deployed decoders reject trailing bytes).
+    pub const GRAM: u8 = 0x05;
     /// Open a streaming session.
     pub const STREAM_OPEN: u8 = 0x10;
     /// Push samples into a session.
@@ -165,6 +169,20 @@ pub enum RequestFrame {
         spec: SpecFrame,
         /// Row-major `(M+1)·dim` samples.
         path: Vec<f64>,
+    },
+    /// Batched Gram matrix `G[i][j] = ⟨S(x_i), S(x_j)⟩` over the
+    /// projected word set.
+    Gram {
+        /// Path dimension.
+        dim: u32,
+        /// Truncation depth.
+        depth: u32,
+        /// Projection.
+        spec: SpecFrame,
+        /// The batch: each entry a flat `(M+1)·dim` path. All paths
+        /// must have the same length (one forward sweep services the
+        /// whole batch).
+        paths: Vec<Vec<f64>>,
     },
     /// Open a streaming session.
     StreamOpen {
@@ -343,6 +361,7 @@ impl RequestFrame {
             RequestFrame::Stats => verb::STATS,
             RequestFrame::Stats2 => verb::STATS2,
             RequestFrame::Signature { .. } => verb::SIGNATURE,
+            RequestFrame::Gram { .. } => verb::GRAM,
             RequestFrame::StreamOpen { .. } => verb::STREAM_OPEN,
             RequestFrame::StreamPush { .. } => verb::STREAM_PUSH,
             RequestFrame::StreamWindow { .. } => verb::STREAM_WINDOW,
@@ -365,6 +384,20 @@ impl RequestFrame {
                 put_u32(&mut p, *depth);
                 spec.encode_into(&mut p);
                 put_f64s(&mut p, path);
+            }
+            RequestFrame::Gram {
+                dim,
+                depth,
+                spec,
+                paths,
+            } => {
+                put_u32(&mut p, *dim);
+                put_u32(&mut p, *depth);
+                spec.encode_into(&mut p);
+                put_u32(&mut p, paths.len() as u32);
+                for path in paths {
+                    put_f64s(&mut p, path);
+                }
             }
             RequestFrame::StreamOpen {
                 dim,
@@ -410,6 +443,27 @@ impl RequestFrame {
                     depth,
                     spec,
                     path,
+                }
+            }
+            verb::GRAM => {
+                let dim = c.u32()?;
+                let depth = c.u32()?;
+                let spec = decode_spec(&mut c)?;
+                let count = c.u32()? as usize;
+                if count > MAX_GRAM_BATCH {
+                    return Err(format!(
+                        "gram batch {count} exceeds the server cap {MAX_GRAM_BATCH}"
+                    ));
+                }
+                let mut paths = Vec::with_capacity(count);
+                for _ in 0..count {
+                    paths.push(c.f64s()?);
+                }
+                RequestFrame::Gram {
+                    dim,
+                    depth,
+                    spec,
+                    paths,
                 }
             }
             verb::STREAM_OPEN => {
@@ -460,6 +514,7 @@ impl RequestFrame {
             spec: WordSpec::Truncated { depth: 0 },
             backend: Backend::Auto,
             path: Vec::new(),
+            batch: 0,
             windows: Vec::new(),
             session: String::new(),
             samples: Vec::new(),
@@ -493,6 +548,43 @@ impl RequestFrame {
                 req.depth = depth;
                 req.spec = spec.into_word_spec(depth, dim)?;
                 req.path = path;
+                Ok(req)
+            }
+            RequestFrame::Gram {
+                dim,
+                depth,
+                spec,
+                paths,
+            } => {
+                let (dim, depth) = (dim as usize, depth as usize);
+                if dim == 0 {
+                    return Err("dim must be ≥ 1".into());
+                }
+                if paths.is_empty() {
+                    return Err("gram needs a non-empty 'paths' array of paths".into());
+                }
+                if paths.len() > MAX_GRAM_BATCH {
+                    return Err(format!(
+                        "gram batch {} exceeds the server cap {MAX_GRAM_BATCH}",
+                        paths.len()
+                    ));
+                }
+                let per_path = paths[0].len();
+                if paths.iter().any(|p| p.len() != per_path) {
+                    return Err("gram paths must all have the same length".into());
+                }
+                if per_path == 0 || per_path % dim != 0 {
+                    return Err(format!(
+                        "each gram path must be a non-empty flat (M+1)·dim array \
+                         (got {per_path} floats, dim {dim})"
+                    ));
+                }
+                let mut req = blank(RequestOp::Gram);
+                req.dim = dim;
+                req.depth = depth;
+                req.spec = spec.into_word_spec(depth, dim)?;
+                req.batch = paths.len();
+                req.path = paths.into_iter().flatten().collect();
                 Ok(req)
             }
             RequestFrame::StreamOpen {
@@ -744,7 +836,7 @@ impl ResponseFrame {
                         };
                         OkBody::Stats { shards: rows, cache }
                     }
-                    verb::SIGNATURE | verb::STREAM_WINDOW => {
+                    verb::SIGNATURE | verb::GRAM | verb::STREAM_WINDOW => {
                         let n = c.u32()? as usize;
                         let mut shape = Vec::new();
                         for _ in 0..n {
@@ -968,6 +1060,21 @@ mod tests {
             spec: SpecFrame::SparseLeadLag { base_dim: 2 },
             path: vec![0.0; 8],
         });
+        roundtrip_req(RequestFrame::Gram {
+            dim: 2,
+            depth: 2,
+            spec: SpecFrame::Truncated,
+            paths: vec![vec![0.0, 0.0, 1.0, 0.5], vec![0.0, 0.0, -1.0, 2.0]],
+        });
+        roundtrip_req(RequestFrame::Gram {
+            dim: 2,
+            depth: 3,
+            spec: SpecFrame::Anisotropic {
+                gamma: vec![1.0, 2.0],
+                cutoff: 2.5,
+            },
+            paths: vec![vec![0.0, 0.0, 1.0, 1.0]],
+        });
         roundtrip_req(RequestFrame::StreamOpen {
             dim: 1,
             depth: 2,
@@ -1033,6 +1140,15 @@ mod tests {
                 body: OkBody::Values {
                     shape: vec![2],
                     values: vec![5.0, 12.5],
+                },
+            },
+            // A gram response is a shaped (B, B) matrix — same Values
+            // body as `signature`, selected by the verb byte.
+            ResponseFrame::Ok {
+                verb: verb::GRAM,
+                body: OkBody::Values {
+                    shape: vec![2, 2],
+                    values: vec![1.25, 0.0, 0.0, 8.0],
                 },
             },
             ResponseFrame::Ok {
@@ -1139,6 +1255,42 @@ mod tests {
         let req = RequestFrame::StreamClose { session: 7 }.into_request().unwrap();
         assert_eq!(req.session, "s7");
         assert_eq!(req.op, RequestOp::StreamClose);
+    }
+
+    #[test]
+    fn gram_into_request_validates_like_v1() {
+        let gram = |paths: Vec<Vec<f64>>| RequestFrame::Gram {
+            dim: 2,
+            depth: 2,
+            spec: SpecFrame::Truncated,
+            paths,
+        };
+        // Happy path: batch count recorded, rows flattened in order.
+        let req = gram(vec![vec![0.0, 0.0, 1.0, 0.5], vec![0.0, 0.0, -1.0, 2.0]])
+            .into_request()
+            .unwrap();
+        assert_eq!(req.op, RequestOp::Gram);
+        assert_eq!(req.batch, 2);
+        assert_eq!(req.path, vec![0.0, 0.0, 1.0, 0.5, 0.0, 0.0, -1.0, 2.0]);
+        // Empty batch.
+        assert!(gram(vec![]).into_request().is_err());
+        // Ragged rows.
+        assert!(gram(vec![vec![0.0, 0.0, 1.0, 0.5], vec![0.0, 0.0]])
+            .into_request()
+            .is_err());
+        // Row length not divisible by dim.
+        assert!(gram(vec![vec![0.0, 0.0, 1.0]]).into_request().is_err());
+        // Over the batch cap.
+        assert!(gram(vec![vec![0.0, 0.0]; MAX_GRAM_BATCH + 1])
+            .into_request()
+            .is_err());
+        // The decoder rejects an over-cap count before allocating rows.
+        let mut p = Vec::new();
+        p.extend_from_slice(&2u32.to_le_bytes());
+        p.extend_from_slice(&2u32.to_le_bytes());
+        p.push(0); // truncated spec
+        p.extend_from_slice(&((MAX_GRAM_BATCH + 1) as u32).to_le_bytes());
+        assert!(RequestFrame::decode(verb::GRAM, &p).is_err());
     }
 
     #[test]

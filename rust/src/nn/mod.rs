@@ -15,8 +15,10 @@
 //! powers `benches/fig4_hurst.rs` and server-side inference.)
 
 pub mod deepsig;
+pub mod ridge;
 
 pub use deepsig::{DeepSigModel, DeepSigSpec};
+pub use ridge::{fit_kernel_ridge, fit_ridge, kernel_predict, Ridge};
 
 use crate::util::rng::Rng;
 

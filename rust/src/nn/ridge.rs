@@ -1,0 +1,245 @@
+//! Ridge regression on (signature) feature matrices — the closed-form
+//! head that turns [`crate::sig::gram`] / [`crate::sig::RandomWords`]
+//! into an end-to-end kernel-methods pipeline.
+//!
+//! Two variants, both solved with an in-place Cholesky factorisation
+//! (the systems are symmetric positive definite once `λ > 0` is added
+//! to the diagonal):
+//!
+//! * **Primal** ([`fit_ridge`]): solve `(XᵀX + λI) w = Xᵀ y` over an
+//!   `(n, p)` feature matrix — the right shape for random
+//!   projected-word features, where `p = F ≪ n` is the sampled feature
+//!   count. The bias column is appended internally and left
+//!   unpenalised.
+//! * **Dual / kernel** ([`fit_kernel_ridge`]): solve `(G + λI) α = y`
+//!   over an `(n, n)` Gram matrix; predict with the train×test
+//!   cross-kernel ([`kernel_predict`]). Exact, but `O(n³)` — the
+//!   random-feature primal is its low-rank approximation, and
+//!   `benches/fig7_kernels.rs` measures exactly that tradeoff.
+
+/// A fitted linear ridge model `ŷ = X w + b`.
+#[derive(Clone, Debug)]
+pub struct Ridge {
+    /// Weights, length `p`.
+    pub w: Vec<f64>,
+    /// Intercept.
+    pub b: f64,
+}
+
+impl Ridge {
+    /// Predict targets for an `(n, p)` feature matrix.
+    pub fn predict(&self, feats: &[f64], n: usize) -> Vec<f64> {
+        let mut out = vec![0.0; n];
+        self.predict_into(feats, n, &mut out);
+        out
+    }
+
+    /// [`Ridge::predict`] writing into a caller-provided length-`n`
+    /// buffer.
+    pub fn predict_into(&self, feats: &[f64], n: usize, out: &mut [f64]) {
+        let p = self.w.len();
+        assert_eq!(feats.len(), n * p, "feature matrix has wrong size");
+        assert_eq!(out.len(), n, "output buffer has wrong size");
+        for (i, slot) in out.iter_mut().enumerate() {
+            let row = &feats[i * p..(i + 1) * p];
+            let mut acc = self.b;
+            for (w, x) in self.w.iter().zip(row) {
+                acc += w * x;
+            }
+            *slot = acc;
+        }
+    }
+}
+
+/// Fit ridge regression on an `(n, p)` row-major feature matrix
+/// against `n` targets: minimise `‖Xw + b − y‖² + λ‖w‖²` (the
+/// intercept is not penalised). `λ > 0` keeps the normal equations
+/// positive definite.
+pub fn fit_ridge(feats: &[f64], targets: &[f64], n: usize, p: usize, lambda: f64) -> Ridge {
+    assert_eq!(feats.len(), n * p, "feature matrix has wrong size");
+    assert_eq!(targets.len(), n, "target vector has wrong size");
+    assert!(lambda > 0.0, "ridge penalty must be positive");
+    // Normal equations over the bias-augmented design Z = [X, 1]:
+    // (ZᵀZ + λ diag(1…1,0)) θ = Zᵀ y, θ = (w, b).
+    let q = p + 1;
+    let mut a = vec![0.0; q * q];
+    let mut rhs = vec![0.0; q];
+    for i in 0..n {
+        let row = &feats[i * p..(i + 1) * p];
+        for r in 0..p {
+            for c in r..p {
+                a[r * q + c] += row[r] * row[c];
+            }
+            a[r * q + p] += row[r];
+            rhs[r] += row[r] * targets[i];
+        }
+        rhs[p] += targets[i];
+    }
+    a[p * q + p] = n as f64;
+    for r in 0..p {
+        a[r * q + r] += lambda;
+    }
+    // Mirror the strict lower triangle (accumulation filled the upper).
+    for r in 1..q {
+        for c in 0..r {
+            a[r * q + c] = a[c * q + r];
+        }
+    }
+    cholesky_solve(&mut a, &mut rhs, q);
+    let b = rhs[p];
+    rhs.truncate(p);
+    Ridge { w: rhs, b }
+}
+
+/// Fit **kernel** ridge: `α = (G + λI)⁻¹ y` for an `(n, n)` row-major
+/// Gram matrix `G` (e.g. from [`crate::sig::gram`]). `gram` is taken
+/// by value and consumed as factorisation scratch.
+pub fn fit_kernel_ridge(mut gram: Vec<f64>, targets: &[f64], n: usize, lambda: f64) -> Vec<f64> {
+    assert_eq!(gram.len(), n * n, "gram matrix has wrong size");
+    assert_eq!(targets.len(), n, "target vector has wrong size");
+    assert!(lambda > 0.0, "ridge penalty must be positive");
+    for i in 0..n {
+        gram[i * n + i] += lambda;
+    }
+    let mut alpha = targets.to_vec();
+    cholesky_solve(&mut gram, &mut alpha, n);
+    alpha
+}
+
+/// Kernel-ridge prediction: `ŷ_j = Σ_i α_i · k(x_i, t_j)` given the
+/// `(n_train, n_test)` cross-kernel (from
+/// [`crate::sig::gram_cross`]).
+pub fn kernel_predict(cross: &[f64], alpha: &[f64], n_train: usize, n_test: usize) -> Vec<f64> {
+    assert_eq!(cross.len(), n_train * n_test, "cross kernel has wrong size");
+    assert_eq!(alpha.len(), n_train, "alpha has wrong size");
+    let mut out = vec![0.0; n_test];
+    for i in 0..n_train {
+        let row = &cross[i * n_test..(i + 1) * n_test];
+        let a = alpha[i];
+        for (slot, k) in out.iter_mut().zip(row) {
+            *slot += a * k;
+        }
+    }
+    out
+}
+
+/// Solve the SPD system `A x = b` in place: `a` (row-major `n×n`) is
+/// overwritten with its Cholesky factor, `b` with the solution.
+/// Panics if `A` is not positive definite (a non-positive pivot) —
+/// callers guarantee PD by adding `λ > 0` to the diagonal.
+fn cholesky_solve(a: &mut [f64], b: &mut [f64], n: usize) {
+    // Factor A = L Lᵀ (lower triangle of `a`).
+    for j in 0..n {
+        let mut diag = a[j * n + j];
+        for k in 0..j {
+            diag -= a[j * n + k] * a[j * n + k];
+        }
+        assert!(diag > 0.0, "matrix not positive definite (pivot {j})");
+        let ljj = diag.sqrt();
+        a[j * n + j] = ljj;
+        for i in (j + 1)..n {
+            let mut v = a[i * n + j];
+            for k in 0..j {
+                v -= a[i * n + k] * a[j * n + k];
+            }
+            a[i * n + j] = v / ljj;
+        }
+    }
+    // Forward substitution L z = b.
+    for i in 0..n {
+        let mut v = b[i];
+        for k in 0..i {
+            v -= a[i * n + k] * b[k];
+        }
+        b[i] = v / a[i * n + i];
+    }
+    // Back substitution Lᵀ x = z.
+    for i in (0..n).rev() {
+        let mut v = b[i];
+        for k in (i + 1)..n {
+            v -= a[k * n + i] * b[k];
+        }
+        b[i] = v / a[i * n + i];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn cholesky_solves_known_system() {
+        // A = [[4,2],[2,3]], b = [10, 9] → x = [1.5, 2].
+        let mut a = vec![4.0, 2.0, 2.0, 3.0];
+        let mut b = vec![10.0, 9.0];
+        cholesky_solve(&mut a, &mut b, 2);
+        assert!((b[0] - 1.5).abs() < 1e-12);
+        assert!((b[1] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ridge_recovers_linear_map_with_small_lambda() {
+        let mut rng = Rng::new(300);
+        let (n, p) = (60usize, 3usize);
+        let mut x = vec![0.0; n * p];
+        rng.fill_gaussian(&mut x);
+        let truth = [2.0, -1.0, 0.5];
+        let y: Vec<f64> = (0..n)
+            .map(|i| {
+                let row = &x[i * p..(i + 1) * p];
+                7.0 + row.iter().zip(&truth).map(|(a, b)| a * b).sum::<f64>()
+            })
+            .collect();
+        let model = fit_ridge(&x, &y, n, p, 1e-9);
+        for (w, t) in model.w.iter().zip(&truth) {
+            assert!((w - t).abs() < 1e-5, "weight {w} vs {t}");
+        }
+        assert!((model.b - 7.0).abs() < 1e-5, "intercept {}", model.b);
+        let pred = model.predict(&x, n);
+        for (p, t) in pred.iter().zip(&y) {
+            assert!((p - t).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn larger_lambda_shrinks_weights() {
+        let mut rng = Rng::new(301);
+        let (n, p) = (40usize, 4usize);
+        let mut x = vec![0.0; n * p];
+        rng.fill_gaussian(&mut x);
+        let y: Vec<f64> = (0..n).map(|i| x[i * p] * 3.0 + rng.gaussian() * 0.1).collect();
+        let small = fit_ridge(&x, &y, n, p, 1e-6);
+        let large = fit_ridge(&x, &y, n, p, 1e3);
+        let norm = |w: &[f64]| w.iter().map(|v| v * v).sum::<f64>();
+        assert!(norm(&large.w) < norm(&small.w));
+    }
+
+    #[test]
+    fn kernel_ridge_interpolates_at_tiny_lambda() {
+        // With G from an explicit feature map, dual and primal agree:
+        // predictions on the training set approach the targets.
+        let mut rng = Rng::new(302);
+        let (n, p) = (12usize, 12usize);
+        let mut x = vec![0.0; n * p];
+        rng.fill_gaussian(&mut x);
+        let y: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        // G = X Xᵀ (full rank almost surely at p = n).
+        let mut g = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                g[i * n + j] = x[i * p..(i + 1) * p]
+                    .iter()
+                    .zip(&x[j * p..(j + 1) * p])
+                    .map(|(a, b)| a * b)
+                    .sum();
+            }
+        }
+        let alpha = fit_kernel_ridge(g.clone(), &y, n, 1e-10);
+        // Train-set prediction: cross = G itself (train × train).
+        let pred = kernel_predict(&g, &alpha, n, n);
+        for (p, t) in pred.iter().zip(&y) {
+            assert!((p - t).abs() < 1e-5, "{p} vs {t}");
+        }
+    }
+}

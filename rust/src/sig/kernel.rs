@@ -1,0 +1,500 @@
+//! Signature kernels and random projected-word features (Tóth's
+//! kernel-methods workload class; ROADMAP item 4).
+//!
+//! The signature kernel of two paths under a projection `π_I` is the
+//! inner product of their projected signatures:
+//!
+//! ```text
+//! k(x, y) = ⟨π_I(S(x)), π_I(S(y))⟩ = Σ_{w ∈ I} S_w(x) · S_w(y)
+//! ```
+//!
+//! Crucially this needs only the **terminal** signature of each path —
+//! no intermediate states, no pairwise path alignment — so a B×B Gram
+//! matrix costs `B` forward sweeps plus one dense syrk-style reduction,
+//! not `B²` signature computations. The forward sweeps go through the
+//! standard batch entry point, which means they inherit the whole
+//! engine stack for free: the lane-major SIMD kernel packs lanes of
+//! paths, long paths route through the time-parallel tree
+//! ([`crate::sig::schedule`]), and per-worker scratch comes from the
+//! engine pools so a warm [`gram_into`] performs **zero heap
+//! allocations** (asserted by `benches/fig7_kernels.rs`).
+//!
+//! The reduction itself exploits symmetry: only the upper triangle
+//! `j ≥ i` is computed (rows in parallel across the thread pool), then
+//! mirrored — half the FLOPs of the rectangular product, and the
+//! mirror pass is a pure copy.
+//!
+//! [`RandomWords`] is the low-rank half of the story: sampling `F`
+//! words from a (possibly anisotropic) truncated word set gives an
+//! unbiased random feature map `φ(x)` with
+//! `E⟨φ(x), φ(y)⟩ = k(x, y)` — the paper's projection machinery used
+//! as a Monte-Carlo sampler, so a kernel-ridge fit runs on `(n, F)`
+//! features instead of an `(n, n)` Gram matrix. Sampling is
+//! deterministic per seed (a `splitmix64`-seeded [`Rng`] stream, the
+//! same construction the coordinator uses for shard hashing) and
+//! independent of thread count.
+
+use super::forward::signature_batch_into;
+use super::SigEngine;
+use crate::util::rng::Rng;
+use crate::util::threadpool::parallel_fill_rows;
+use crate::words::{anisotropic_words, sig_dim, Word, WordTable};
+
+/// Pooled scratch for Gram computations: the `(B, |I|)` feature matrix
+/// (and a second one for rectangular cross-kernels). Engine-owned via
+/// `SigEngine::gram_pool`, so warm calls reuse capacity.
+#[derive(Default)]
+pub(crate) struct GramScratch {
+    feats: Vec<f64>,
+    feats_rhs: Vec<f64>,
+}
+
+/// The `B×B` signature-kernel Gram matrix `G[i·B+j] = k(x_i, x_j)` of a
+/// batch of paths, row-major. `paths` is `(B, M+1, d)` row-major, all
+/// paths the same length.
+///
+/// # Examples
+///
+/// Two single-segment paths at depth 2 over `d = 2`: one linear segment
+/// has `S = exp(ΔX)`, so `S_i = ΔX_i` and `S_{ij} = ΔX_i ΔX_j / 2`.
+/// For `x` with `ΔX = (1, 0)` and `y` with `ΔY = (0, 2)`:
+/// `k(x,x) = 1 + 1/4`, `k(y,y) = 4 + 4`, and `k(x,y) = 0` (no
+/// coordinate is active in both).
+///
+/// ```
+/// use pathsig::sig::{gram, SigEngine};
+/// use pathsig::words::{truncated_words, WordTable};
+///
+/// let eng = SigEngine::new(WordTable::build(2, &truncated_words(2, 2)));
+/// let paths = [
+///     0.0, 0.0, 1.0, 0.0, // x: (0,0) → (1,0)
+///     0.0, 0.0, 0.0, 2.0, // y: (0,0) → (0,2)
+/// ];
+/// let g = gram(&eng, &paths, 2);
+/// assert!((g[0] - 1.25).abs() < 1e-12); // k(x,x)
+/// assert!(g[1].abs() < 1e-12);          // k(x,y)
+/// assert!((g[2] - g[1]).abs() < 1e-12); // symmetry
+/// assert!((g[3] - 8.0).abs() < 1e-12);  // k(y,y)
+/// ```
+pub fn gram(eng: &SigEngine, paths: &[f64], batch: usize) -> Vec<f64> {
+    let mut out = vec![0.0; batch * batch];
+    gram_into(eng, paths, batch, &mut out);
+    out
+}
+
+/// [`gram`] writing into a caller-provided `B×B` buffer. This is the
+/// zero-allocation hot path: the feature matrix lives in pooled
+/// scratch, the forward sweeps draw engine-pool workspaces, and the
+/// syrk reduction writes `out` rows in place.
+pub fn gram_into(eng: &SigEngine, paths: &[f64], batch: usize, out: &mut [f64]) {
+    assert!(batch > 0, "empty batch");
+    assert_eq!(paths.len() % batch, 0, "paths not divisible by batch");
+    assert_eq!(out.len(), batch * batch, "output buffer has wrong size");
+    let odim = eng.out_dim();
+    let mut scratch = eng.gram_pool.take_at_least(1);
+    let ws = &mut scratch[0];
+    ws.feats.clear();
+    ws.feats.resize(batch * odim, 0.0);
+    signature_batch_into(eng, paths, batch, &mut ws.feats);
+    syrk_mirror(&ws.feats, batch, odim, eng.threads, out);
+    eng.gram_pool.put(scratch);
+}
+
+/// The rectangular cross-kernel `K[i·By+j] = k(x_i, y_j)` between two
+/// batches (e.g. train × test for kernel-ridge prediction). `xs` is
+/// `(Bx, Mx+1, d)`, `ys` is `(By, My+1, d)`; the two batches may have
+/// different path lengths.
+pub fn gram_cross(
+    eng: &SigEngine,
+    xs: &[f64],
+    bx: usize,
+    ys: &[f64],
+    by: usize,
+) -> Vec<f64> {
+    let mut out = vec![0.0; bx * by];
+    gram_cross_into(eng, xs, bx, ys, by, &mut out);
+    out
+}
+
+/// [`gram_cross`] writing into a caller-provided `(Bx, By)` buffer,
+/// with both feature matrices in pooled scratch.
+pub fn gram_cross_into(
+    eng: &SigEngine,
+    xs: &[f64],
+    bx: usize,
+    ys: &[f64],
+    by: usize,
+    out: &mut [f64],
+) {
+    assert!(bx > 0 && by > 0, "empty batch");
+    assert_eq!(xs.len() % bx, 0, "xs not divisible by bx");
+    assert_eq!(ys.len() % by, 0, "ys not divisible by by");
+    assert_eq!(out.len(), bx * by, "output buffer has wrong size");
+    let odim = eng.out_dim();
+    let mut scratch = eng.gram_pool.take_at_least(1);
+    let ws = &mut scratch[0];
+    ws.feats.clear();
+    ws.feats.resize(bx * odim, 0.0);
+    signature_batch_into(eng, xs, bx, &mut ws.feats);
+    ws.feats_rhs.clear();
+    ws.feats_rhs.resize(by * odim, 0.0);
+    signature_batch_into(eng, ys, by, &mut ws.feats_rhs);
+    let (fx, fy) = (&ws.feats, &ws.feats_rhs);
+    parallel_fill_rows(out, by, eng.threads, |i, row| {
+        let xi = &fx[i * odim..(i + 1) * odim];
+        for (j, slot) in row.iter_mut().enumerate() {
+            *slot = dot(xi, &fy[j * odim..(j + 1) * odim]);
+        }
+    });
+    eng.gram_pool.put(scratch);
+}
+
+/// Upper-triangle syrk + mirror: `out[i][j] = ⟨feats_i, feats_j⟩` for
+/// `j ≥ i` computed row-parallel, then the strict lower triangle is
+/// copied from the upper. Exactly symmetric by construction (the `j<i`
+/// entries are the same floats, not re-derived sums).
+fn syrk_mirror(feats: &[f64], b: usize, k: usize, threads: usize, out: &mut [f64]) {
+    parallel_fill_rows(out, b, threads, |i, row| {
+        let fi = &feats[i * k..(i + 1) * k];
+        for j in i..b {
+            row[j] = dot(fi, &feats[j * k..(j + 1) * k]);
+        }
+    });
+    for i in 1..b {
+        for j in 0..i {
+            out[i * b + j] = out[j * b + i];
+        }
+    }
+}
+
+/// Dense dot product; fixed-stride slices so rustc autovectorizes.
+#[inline]
+fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0;
+    for (x, y) in a.iter().zip(b) {
+        acc += x * y;
+    }
+    acc
+}
+
+/// A seeded random projected-word feature map: `F` words sampled
+/// uniformly **with replacement** from a truncated (or anisotropic)
+/// word set `W`, scaled by `√(|W|/F)` so the feature inner product is
+/// an unbiased Monte-Carlo estimate of the exact signature kernel over
+/// `W`:
+///
+/// ```text
+/// φ(x) = √(|W|/F) · (S_{w_1}(x), …, S_{w_F}(x)),   w_i ~ U(W)
+/// E⟨φ(x), φ(y)⟩ = Σ_{w ∈ W} S_w(x) S_w(y) = k(x, y)
+/// ```
+///
+/// Duplicates are kept (that is what makes the estimator unbiased);
+/// the engine computes only the prefix closure of the sampled set, so
+/// `F ≪ |W|` features cost a fraction of the exact kernel's sweep.
+/// Sampling is a pure function of the seed — same seed, same words,
+/// regardless of thread count or platform.
+///
+/// # Examples
+///
+/// ```
+/// use pathsig::sig::RandomWords;
+///
+/// let a = RandomWords::truncated(3, 4, 16, 42);
+/// let b = RandomWords::truncated(3, 4, 16, 42);
+/// assert_eq!(a.words, b.words); // seeded: deterministic
+/// assert_eq!(a.words.len(), 16);
+/// let c = RandomWords::truncated(3, 4, 16, 43);
+/// assert_ne!(a.words, c.words); // different stream
+/// ```
+#[derive(Clone, Debug)]
+pub struct RandomWords {
+    /// Alphabet size `d`.
+    pub d: usize,
+    /// The sampled words, in draw order (duplicates kept).
+    pub words: Vec<Word>,
+    /// `√(|W|/F)` — multiply raw signature coordinates by this to make
+    /// `⟨φ(x), φ(y)⟩` unbiased for the exact kernel over `W`.
+    pub scale: f64,
+}
+
+impl RandomWords {
+    /// Sample `features` words uniformly from the full truncated set
+    /// `W_{≤depth}` over alphabet size `d`, seeded.
+    ///
+    /// Words are drawn by index into the canonical (level, lex) order
+    /// and decoded arithmetically — the set (size `Σ d^n`, the paper's
+    /// `D_sig`) is never materialised.
+    pub fn truncated(d: usize, depth: usize, features: usize, seed: u64) -> RandomWords {
+        assert!(d >= 1 && depth >= 1 && features >= 1);
+        let total = sig_dim(d, depth);
+        let mut rng = Rng::new(seed);
+        let words = (0..features)
+            .map(|_| decode_truncated_index(d, depth, rng.below(total)))
+            .collect();
+        RandomWords {
+            d,
+            words,
+            scale: (total as f64 / features as f64).sqrt(),
+        }
+    }
+
+    /// Sample `features` words uniformly from the anisotropic set
+    /// `W^γ_{≤cutoff}` (Definition 7.1), seeded. The set is
+    /// materialised once to index into it.
+    pub fn anisotropic(
+        d: usize,
+        gamma: &[f64],
+        cutoff: f64,
+        features: usize,
+        seed: u64,
+    ) -> RandomWords {
+        assert!(features >= 1);
+        let pool = anisotropic_words(d, gamma, cutoff);
+        assert!(!pool.is_empty(), "anisotropic cutoff admits no words");
+        let mut rng = Rng::new(seed);
+        let words = (0..features)
+            .map(|_| pool[rng.below(pool.len())].clone())
+            .collect();
+        RandomWords {
+            d,
+            words,
+            scale: (pool.len() as f64 / features as f64).sqrt(),
+        }
+    }
+
+    /// Number of features `F`.
+    pub fn len(&self) -> usize {
+        self.words.len()
+    }
+
+    /// Build the projected engine computing exactly the sampled
+    /// coordinates (their prefix closure, per the paper's §7.1
+    /// projection machinery).
+    pub fn engine(&self) -> SigEngine {
+        SigEngine::new(WordTable::build(self.d, &self.words))
+    }
+
+    /// The scaled feature matrix `φ` of a batch: `(B, F)` row-major.
+    /// `eng` must come from [`RandomWords::engine`] (or share its word
+    /// order).
+    pub fn features(&self, eng: &SigEngine, paths: &[f64], batch: usize) -> Vec<f64> {
+        let mut out = vec![0.0; batch * self.words.len()];
+        self.features_into(eng, paths, batch, &mut out);
+        out
+    }
+
+    /// [`RandomWords::features`] writing into a caller-provided buffer
+    /// — one batched forward sweep plus an in-place scale.
+    pub fn features_into(&self, eng: &SigEngine, paths: &[f64], batch: usize, out: &mut [f64]) {
+        assert_eq!(
+            eng.out_dim(),
+            self.words.len(),
+            "engine word set does not match the sampled features"
+        );
+        signature_batch_into(eng, paths, batch, out);
+        for v in out.iter_mut() {
+            *v *= self.scale;
+        }
+    }
+}
+
+/// Decode index `idx` (0-based over the (level, lex) order of
+/// `W_{≤depth} \ {ε}`) into its word: peel level sizes `d^n` off, then
+/// read the remainder as `n` base-`d` digits, most significant first.
+fn decode_truncated_index(d: usize, depth: usize, mut idx: usize) -> Word {
+    for n in 1..=depth {
+        let level = d.pow(n as u32);
+        if idx < level {
+            let mut letters = vec![0u16; n];
+            for slot in letters.iter_mut().rev() {
+                *slot = (idx % d) as u16;
+                idx /= d;
+            }
+            return Word(letters);
+        }
+        idx -= level;
+    }
+    unreachable!("index out of range for W_{{<={depth}}}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sig::signature;
+    use crate::util::proptest::assert_allclose;
+    use crate::words::truncated_words;
+
+    fn trunc_engine(d: usize, n: usize) -> SigEngine {
+        SigEngine::new(WordTable::build(d, &truncated_words(d, n)))
+    }
+
+    fn rand_paths(rng: &mut Rng, b: usize, m: usize, d: usize) -> Vec<f64> {
+        let mut paths = Vec::new();
+        for _ in 0..b {
+            paths.extend(rng.brownian_path(m, d, 0.4));
+        }
+        paths
+    }
+
+    /// Naive pairwise baseline: one `signature()` per path, dot per pair.
+    fn naive_gram(eng: &SigEngine, paths: &[f64], b: usize) -> Vec<f64> {
+        let per = paths.len() / b;
+        let sigs: Vec<Vec<f64>> = (0..b)
+            .map(|i| signature(eng, &paths[i * per..(i + 1) * per]))
+            .collect();
+        let mut g = vec![0.0; b * b];
+        for i in 0..b {
+            for j in 0..b {
+                g[i * b + j] = dot(&sigs[i], &sigs[j]);
+            }
+        }
+        g
+    }
+
+    #[test]
+    fn gram_matches_naive_pairwise() {
+        let mut rng = Rng::new(800);
+        let eng = trunc_engine(3, 3);
+        for &b in &[1usize, 2, 7, 19] {
+            let paths = rand_paths(&mut rng, b, 12, 3);
+            let got = gram(&eng, &paths, b);
+            let want = naive_gram(&eng, &paths, b);
+            assert_allclose(&got, &want, 1e-12, 1e-12, &format!("gram b={b}"));
+        }
+    }
+
+    #[test]
+    fn gram_is_symmetric_bitwise() {
+        let mut rng = Rng::new(801);
+        let eng = trunc_engine(2, 4);
+        let b = 11;
+        let paths = rand_paths(&mut rng, b, 20, 2);
+        let g = gram(&eng, &paths, b);
+        for i in 0..b {
+            for j in 0..b {
+                assert_eq!(g[i * b + j].to_bits(), g[j * b + i].to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn gram_into_reuses_buffer() {
+        let mut rng = Rng::new(802);
+        let eng = trunc_engine(2, 3);
+        let b = 5;
+        let paths = rand_paths(&mut rng, b, 9, 2);
+        let mut out = vec![f64::NAN; b * b];
+        gram_into(&eng, &paths, b, &mut out);
+        let want = gram(&eng, &paths, b);
+        assert_allclose(&out, &want, 0.0, 0.0, "into == owning");
+        gram_into(&eng, &paths, b, &mut out);
+        assert_allclose(&out, &want, 0.0, 0.0, "second call");
+    }
+
+    #[test]
+    fn cross_kernel_matches_square_blocks() {
+        // gram_cross(xs, ys) must equal the off-diagonal block of the
+        // big Gram over the concatenated batch (same path length).
+        let mut rng = Rng::new(803);
+        let eng = trunc_engine(2, 3);
+        let (bx, by, m) = (4usize, 6usize, 10usize);
+        let xs = rand_paths(&mut rng, bx, m, 2);
+        let ys = rand_paths(&mut rng, by, m, 2);
+        let cross = gram_cross(&eng, &xs, bx, &ys, by);
+        let mut all = xs.clone();
+        all.extend_from_slice(&ys);
+        let big = gram(&eng, &all, bx + by);
+        for i in 0..bx {
+            for j in 0..by {
+                let want = big[i * (bx + by) + (bx + j)];
+                assert!((cross[i * by + j] - want).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn cross_kernel_allows_different_lengths() {
+        let mut rng = Rng::new(804);
+        let eng = trunc_engine(2, 2);
+        let xs = rand_paths(&mut rng, 3, 8, 2);
+        let ys = rand_paths(&mut rng, 2, 15, 2);
+        let cross = gram_cross(&eng, &xs, 3, &ys, 2);
+        // Spot check one entry against single-path signatures.
+        let sx = signature(&eng, &xs[0..9 * 2]);
+        let sy = signature(&eng, &ys[16 * 2..]);
+        assert!((cross[1] - dot(&sx, &sy)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn random_words_land_in_the_truncated_set() {
+        let (d, depth) = (3usize, 4usize);
+        let rw = RandomWords::truncated(d, depth, 64, 7);
+        let all = truncated_words(d, depth);
+        for w in &rw.words {
+            assert!(w.len() >= 1 && w.len() <= depth);
+            assert!(w.0.iter().all(|&l| (l as usize) < d));
+            assert!(all.contains(w));
+        }
+        let expect = (sig_dim(d, depth) as f64 / 64.0).sqrt();
+        assert!((rw.scale - expect).abs() < 1e-15);
+    }
+
+    #[test]
+    fn decode_covers_the_canonical_order() {
+        // Index k must decode to truncated_words[k] for every k.
+        let (d, depth) = (2usize, 3usize);
+        let all = truncated_words(d, depth);
+        for (k, w) in all.iter().enumerate() {
+            assert_eq!(&decode_truncated_index(d, depth, k), w, "index {k}");
+        }
+    }
+
+    #[test]
+    fn anisotropic_sampler_respects_cutoff() {
+        let gamma = [1.0, 2.0];
+        let rw = RandomWords::anisotropic(2, &gamma, 3.0, 32, 5);
+        for w in &rw.words {
+            assert!(w.weighted_degree(&gamma) <= 3.0 + 1e-12);
+        }
+        // Deterministic across calls.
+        let again = RandomWords::anisotropic(2, &gamma, 3.0, 32, 5);
+        assert_eq!(rw.words, again.words);
+    }
+
+    #[test]
+    fn feature_inner_products_approach_the_exact_kernel() {
+        // Monte-Carlo error must shrink as F grows (averaged over seeds).
+        let mut rng = Rng::new(806);
+        let (d, depth) = (2usize, 3usize);
+        let exact_eng = trunc_engine(d, depth);
+        let paths = rand_paths(&mut rng, 6, 10, d);
+        let exact = gram(&exact_eng, &paths, 6);
+        let err_at = |features: usize| -> f64 {
+            let mut total = 0.0;
+            for seed in 0..8u64 {
+                let rw = RandomWords::truncated(d, depth, features, 900 + seed);
+                let feng = rw.engine();
+                let phi = rw.features(&feng, &paths, 6);
+                let mut err: f64 = 0.0;
+                for i in 0..6 {
+                    for j in 0..6 {
+                        let approx = dot(
+                            &phi[i * features..(i + 1) * features],
+                            &phi[j * features..(j + 1) * features],
+                        );
+                        err = err.max((approx - exact[i * 6 + j]).abs());
+                    }
+                }
+                total += err;
+            }
+            total / 8.0
+        };
+        let coarse = err_at(4);
+        let fine = err_at(64);
+        assert!(
+            fine < coarse,
+            "random-feature error must decrease in F: F=4 → {coarse}, F=64 → {fine}"
+        );
+    }
+}

@@ -22,6 +22,7 @@
 
 mod backward;
 mod forward;
+mod kernel;
 pub mod lanes;
 pub mod schedule;
 mod stream;
@@ -35,6 +36,7 @@ pub use backward::{
     signature_batch_states_into, BackwardWorkspace,
 };
 pub(crate) use forward::forward_sweep_range;
+pub use kernel::{gram, gram_cross, gram_cross_into, gram_into, RandomWords};
 pub use forward::{
     chen_update, sig_forward_state, signature, signature_batch, signature_batch_into,
     signature_batch_scalar, signature_stream, signature_stream_into,
@@ -92,6 +94,8 @@ pub struct SigEngine {
     pub(crate) tree_pool: Pool<tree::TreeBuffers>,
     /// Pooled per-worker scratch of the time-parallel engine.
     pub(crate) tree_ctx_pool: Pool<tree::TreeScratch>,
+    /// Pooled feature-matrix scratch of the Gram kernel ([`gram_into`]).
+    pub(crate) gram_pool: Pool<kernel::GramScratch>,
 }
 
 impl SigEngine {
@@ -124,6 +128,7 @@ impl SigEngine {
             tree_tbl: OnceLock::new(),
             tree_pool: Pool::default(),
             tree_ctx_pool: Pool::default(),
+            gram_pool: Pool::default(),
         }
     }
 

@@ -73,6 +73,7 @@ fn v1_corpus() -> Vec<Vec<u8>> {
         r#"{"op":"stream_window","session":"s1"}"#,
         r#"{"op":"stream_window","session":"s1","mode":"full"}"#,
         r#"{"op":"stream_close","session":"s1"}"#,
+        r#"{"op":"gram","dim":2,"depth":2,"paths":[[0,0,1,0],[0,0,1,1]]}"#,
     ]
     .iter()
     .map(|s| {
@@ -104,6 +105,13 @@ fn v2_corpus() -> Vec<Vec<u8>> {
                 cutoff: 2.0,
             },
             path: vec![0.0, 0.0, 1.0, 1.0],
+        }
+        .encode(),
+        RequestFrame::Gram {
+            dim: 2,
+            depth: 2,
+            spec: SpecFrame::Truncated,
+            paths: vec![vec![0.0, 0.0, 1.0, 0.0], vec![0.0, 0.0, 1.0, 1.0]],
         }
         .encode(),
         RequestFrame::StreamOpen {

@@ -14,7 +14,9 @@
 #   BENCH_durability.json
 #                      push.rows[journal].p99_us,
 #                      recovery.rows[*].recover_ms   (durability tax)
-#   + every steady_state_allocs_* counter must not increase.
+#   BENCH_kernels.json gram_vs_naive.speedup         (batched Gram)
+#   + every steady_state_allocs_* counter must not increase (and the
+#     warm-Gram counter must be exactly 0).
 #
 # Usage:
 #   scripts/bench_compare.sh [--smoke] [--ref REF] [--run]
@@ -49,7 +51,7 @@ baseline_dir=$(mktemp -d)
 trap 'rm -rf "$baseline_dir"' EXIT
 
 have_baseline=0
-for f in BENCH_fig1.json BENCH_table1.json BENCH_stream.json BENCH_tree.json BENCH_coord.json BENCH_durability.json; do
+for f in BENCH_fig1.json BENCH_table1.json BENCH_stream.json BENCH_tree.json BENCH_coord.json BENCH_durability.json BENCH_kernels.json; do
     if git show "$ref:$f" > "$baseline_dir/$f" 2>/dev/null; then
         have_baseline=1
     else
@@ -106,11 +108,19 @@ def headline(doc, name):
             out.append((f"durability.recover{row['sessions']}.ms", row["recover_ms"], "lo"))
         out.append(("durability.steady_state_allocs_per_append",
                     doc["steady_state_allocs_per_append"], "alloc"))
+    elif name == "BENCH_kernels.json":
+        out.append(("kernels.gram_vs_naive.speedup", doc["gram_vs_naive"]["speedup"], "hi"))
+        out.append(("kernels.gram_rows", len(doc["gram_vs_naive"]["rows"]), "hi"))
+        out.append(("kernels.random_feature_rows", len(doc["random_features"]["rows"]), "hi"))
+        # Warm Gram calls must be allocation-free, not just non-increasing.
+        out.append(("kernels.steady_state_allocs_per_call",
+                    doc["steady_state_allocs_per_call"], "zero"))
     return out
 
 
 for name in ("BENCH_fig1.json", "BENCH_table1.json", "BENCH_stream.json",
-             "BENCH_tree.json", "BENCH_coord.json", "BENCH_durability.json"):
+             "BENCH_tree.json", "BENCH_coord.json", "BENCH_durability.json",
+             "BENCH_kernels.json"):
     cur_doc = load(name)
     base_doc = load(os.path.join(bdir, name))
     cur = dict((k, (v, kind)) for k, v, kind in headline(cur_doc, name))
@@ -129,6 +139,8 @@ for name in ("BENCH_fig1.json", "BENCH_table1.json", "BENCH_stream.json",
             failures.append(f"{k}: latency {v} is not positive")
         if kind == "alloc" and v < 0:
             failures.append(f"{k}: negative counter {v}")
+        if kind == "zero" and v != 0:
+            failures.append(f"{k}: expected exactly 0, got {v}")
     if smoke or base_doc is None:
         continue
     for k, (v, kind) in cur.items():

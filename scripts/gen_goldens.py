@@ -34,6 +34,7 @@ VERB = {
     "stats": 0x02,
     "signature": 0x03,
     "stats2": 0x04,
+    "gram": 0x05,
     "stream_open": 0x10,
     "stream_push": 0x11,
     "stream_window": 0x12,
@@ -145,6 +146,21 @@ def v2_frames():
         frame(VERB["signature"],
               u32(4) + u32(2) + spec_sparse_leadlag(2) + f64s([0.0] * 8)),
     ))
+    # Gram is its OWN verb (0x05) with its own layout — the signature
+    # frame body is frozen, so the batched request never extends it:
+    # dim · depth · spec · path count · per-path f64 runs.
+    rows.append((
+        "req_gram_truncated",
+        frame(VERB["gram"],
+              u32(2) + u32(2) + spec_truncated() + u32(2)
+              + f64s([0.0, 0.0, 1.0, 0.0]) + f64s([0.0, 0.0, 1.0, 1.0])),
+    ))
+    rows.append((
+        "req_gram_anisotropic",
+        frame(VERB["gram"],
+              u32(2) + u32(3) + spec_anisotropic([1.0, 1.5], 3.0) + u32(1)
+              + f64s([0.0, 0.0, 1.0, 1.0])),
+    ))
     rows.append((
         "req_stream_open",
         frame(VERB["stream_open"], u32(1) + u32(2) + u32(4) + spec_truncated()),
@@ -188,6 +204,14 @@ def v2_frames():
               u8(VERB["stream_window"]) + u32(1) + u32(2) + f64s([5.0, 12.5])),
     ))
     rows.append((
+        # A Gram reply is the standard Values body under the new verb:
+        # the 2×2 matrix from the kernel doctest case.
+        "resp_ok_gram_values",
+        frame(STATUS["ok"],
+              u8(VERB["gram"]) + u32(2) + u32(2) + u32(2)
+              + f64s([1.25, 0.0, 0.0, 8.0])),
+    ))
+    rows.append((
         "resp_ok_opened",
         frame(STATUS["ok"], u8(VERB["stream_open"]) + u64(9) + u32(6)),
     ))
@@ -222,6 +246,8 @@ def v1_responses():
     return [
         jline({"backend": "native", "id": "r1", "latency_us": 42, "ok": True,
                "result": [1, 2.5], "shape": [2]}),
+        jline({"backend": "native", "id": "gr1", "latency_us": 7, "ok": True,
+               "result": [1.25, 0, 0, 8], "shape": [2, 2]}),
         jline({"body": {"out_dim": 6, "session": "s1"}, "id": "o1", "ok": True}),
         jline({"body": {"pushed": 4, "seen": 8}, "id": "p1", "ok": True}),
         jline({"body": {"closed": True}, "id": "c1", "ok": True}),
@@ -245,6 +271,7 @@ def v1_requests():
         '{"op":"stream_push","id":"g8","session":"s1","samples":[0.5,1.5]}',
         '{"op":"stream_window","id":"g9","session":"s1","mode":"full"}',
         '{"op":"stream_close","id":"g10","session":"s1"}',
+        '{"op":"gram","id":"g11","dim":2,"depth":2,"paths":[[0,0,1,0],[0,0,1,1]]}',
     ]
 
 
