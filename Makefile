@@ -16,38 +16,33 @@ doc:
 bench:
 	cargo bench
 
-# Emit the repo-root perf-trajectory artifacts (BENCH_fig1.json,
-# BENCH_table1.json, BENCH_table2.json, BENCH_stream.json,
-# BENCH_tree.json, BENCH_coord.json, BENCH_durability.json,
-# BENCH_kernels.json): mean/median/min per case, peak bytes, the
-# lane-major-vs-scalar forward AND backward speedups, the
+# Emit the repo-root perf-trajectory artifacts: mean/median/min per
+# case, peak bytes, the lane-major-vs-scalar forward AND backward
+# speedups, the per-ISA/per-precision SIMD kernel rows, the
 # streaming-vs-recompute sliding-window rows, the long-path
 # tree-vs-sequential rows, the zero-alloc steady-state counts (batch
 # forward, train step, stream push, tree fwd+bwd, journal append, warm
-# Gram), the sharded coordinator's p50/p99 latency under thousands of
-# live sessions, the durability tax + recovery-time curve, and the
-# batched-Gram-vs-naive + random-feature error/time rows.
+# Gram, per-SIMD-row), the sharded coordinator's p50/p99 latency under
+# thousands of live sessions, the durability tax + recovery-time
+# curve, and the batched-Gram-vs-naive + random-feature error/time
+# rows. The bench → artifact table lives in scripts/bench_manifest.txt
+# (the canonical manifest — CI and bench_compare consume the same
+# file).
 bench-json:
-	cargo bench --bench fig1_truncated -- --json
-	cargo bench --bench table1_training -- --json
-	cargo bench --bench table2_memory -- --json
-	cargo bench --bench fig3_windows -- --json
-	cargo bench --bench fig4_longpath -- --json
-	cargo bench --bench fig5_coordinator -- --json
-	cargo bench --bench fig6_durability -- --json
-	cargo bench --bench fig7_kernels -- --json
+	@set -eu; grep -Ev '^[[:space:]]*([#]|$$)' scripts/bench_manifest.txt | \
+	while read -r bench artifact; do \
+		echo "== $$bench -> $$artifact"; \
+		cargo bench --bench "$$bench" -- --json || exit 1; \
+	done
 
 # CI-sized variant of bench-json: tiny cases, 1 warmup / 2 runs —
 # exercises the artifact pipeline, not a measurement.
 bench-smoke:
-	cargo bench --bench fig1_truncated -- --json --smoke
-	cargo bench --bench table1_training -- --json --smoke
-	cargo bench --bench table2_memory -- --json --smoke
-	cargo bench --bench fig3_windows -- --json --smoke
-	cargo bench --bench fig4_longpath -- --json --smoke
-	cargo bench --bench fig5_coordinator -- --json --smoke
-	cargo bench --bench fig6_durability -- --json --smoke
-	cargo bench --bench fig7_kernels -- --json --smoke
+	@set -eu; grep -Ev '^[[:space:]]*([#]|$$)' scripts/bench_manifest.txt | \
+	while read -r bench artifact; do \
+		echo "== $$bench -> $$artifact"; \
+		cargo bench --bench "$$bench" -- --json --smoke || exit 1; \
+	done
 
 # Run the JSON bench suite and stage the BENCH_*.json artifacts for
 # commit — the perf trajectory is tracked in-repo, one snapshot per

@@ -20,7 +20,9 @@ mod common;
 use common::{dump, dump_root, full, geomean, json_mode, median, smoke, timeit};
 use pathsig::baselines::{chen_full_signature_batch, matmul_style_signature_batch};
 use pathsig::bench::{alloc_count, CountingAllocator, Timing};
-use pathsig::sig::{signature_batch, signature_batch_into, signature_batch_scalar, SigEngine};
+use pathsig::sig::{
+    signature_batch, signature_batch_into, signature_batch_scalar, Isa, Precision, SigEngine,
+};
 use pathsig::util::json::Json;
 use pathsig::util::rng::Rng;
 use pathsig::words::{truncated_words, WordTable};
@@ -68,6 +70,84 @@ fn lane_vs_scalar(smoke: bool, budget: f64) -> Json {
         ("scalar_min_s", Json::Num(scalar.min_s)),
         ("speedup", Json::Num(speedup)),
     ])
+}
+
+/// Per-ISA / per-precision forward-kernel rows (ISSUE-9): the batch
+/// forward timed under the scalar chunk loop and the best runnable ISA
+/// on this CPU, each at f64 and f32, with the scalar-f64 row as the
+/// speedup denominator. Every row also counts heap allocations per
+/// warm call on a sequential clone — the zero-alloc contract holds on
+/// every ISA and at both precisions, not just the default pair.
+fn simd_rows(smoke: bool, budget: f64) -> (Vec<Json>, Isa) {
+    let (d, n, b, m) = if smoke { (2, 2, 16, 10) } else { (4, 5, 64, 100) };
+    let mut rng = Rng::new(0x51D0);
+    let mut paths = Vec::with_capacity(b * (m + 1) * d);
+    for _ in 0..b {
+        paths.extend(rng.brownian_path(m, d, 0.3));
+    }
+    let base = SigEngine::new(WordTable::build(d, &truncated_words(d, n)));
+    let active = Isa::supported()[0]; // best-first; last entry is Scalar
+    let mut isas = vec![Isa::Scalar];
+    if active != Isa::Scalar {
+        isas.push(active);
+    }
+    println!(
+        "\n# per-ISA / per-precision forward rows (d={d} N={n} B={b} M={m}, active ISA {}):",
+        active.name()
+    );
+    let mut rows = Vec::new();
+    let mut scalar_f64_s = 0.0;
+    for &isa in &isas {
+        for prec in [Precision::F64, Precision::F32] {
+            let mut eng = base.clone();
+            eng.simd = isa;
+            eng.precision = prec;
+            let lanes = match prec {
+                Precision::F64 => eng.lanes(),
+                Precision::F32 => eng.lanes_f32(),
+            };
+            let mut out = vec![0.0; b * eng.out_dim()];
+            let label = format!("fwd {}/{}", isa.name(), prec.name());
+            let t = timeit(&label, smoke, budget, || {
+                signature_batch_into(&eng, &paths, b, &mut out);
+                std::hint::black_box(&out);
+            });
+            if isa == Isa::Scalar && prec == Precision::F64 {
+                scalar_f64_s = t.median_s;
+            }
+            // Warm-call allocation count on a sequential clone (scoped
+            // thread spawns would count as allocations otherwise).
+            let mut seq = eng.clone();
+            seq.threads = 1;
+            signature_batch_into(&seq, &paths, b, &mut out);
+            signature_batch_into(&seq, &paths, b, &mut out);
+            let calls = 5;
+            let before = alloc_count();
+            for _ in 0..calls {
+                signature_batch_into(&seq, &paths, b, &mut out);
+                std::hint::black_box(&out);
+            }
+            let per_call = (alloc_count() - before) as f64 / calls as f64;
+            let speedup = scalar_f64_s / t.median_s;
+            println!(
+                "  {:>6}/{:<3} L={:<2} median {} ({speedup:.2}x vs scalar/f64, {per_call} allocs/call)",
+                isa.name(),
+                prec.name(),
+                lanes,
+                Timing::fmt_secs(t.median_s)
+            );
+            rows.push(Json::obj(vec![
+                ("kernel", Json::str("forward")),
+                ("isa", Json::str(isa.name())),
+                ("precision", Json::str(prec.name())),
+                ("lane_width", Json::Num(lanes as f64)),
+                ("median_s", Json::Num(t.median_s)),
+                ("speedup_vs_scalar_f64", Json::Num(speedup)),
+                ("allocs_per_call", Json::Num(per_call)),
+            ]));
+        }
+    }
+    (rows, active)
 }
 
 /// Count heap allocations per steady-state `signature_batch_into` call
@@ -213,6 +293,7 @@ fn main() {
     );
 
     let lane = lane_vs_scalar(smoke, budget);
+    let (simd, active_isa) = simd_rows(smoke, budget);
     let allocs = steady_state_allocs(smoke);
 
     let mode = if smoke {
@@ -229,6 +310,8 @@ fn main() {
         ("median_speedup_vs_keras_style", Json::Num(med_k)),
         ("median_speedup_vs_pysig_style", Json::Num(med_p)),
         ("lane_vs_scalar", lane),
+        ("active_isa", Json::str(active_isa.name())),
+        ("simd_rows", Json::Arr(simd)),
         ("steady_state_allocs_per_call", Json::Num(allocs)),
     ]);
     dump("fig1_truncated", artifact.clone());

@@ -1,4 +1,6 @@
-//! Long-path regime bench (ISSUE 5): the time-parallel chunked tree vs
+//! Figure 8 — long-path regime bench (ISSUE 5; renumbered from the
+//! duplicate "fig4" slot in ISSUE 9, `fig4_hurst` keeps figure 4): the
+//! time-parallel chunked tree vs
 //! the sequential-time kernels, forward and checkpointed backward, at
 //! `B = 1` — the regime the paper's batch-parallel mapping leaves on
 //! one core. Emits the repo-root `BENCH_tree.json` perf-trajectory
@@ -185,7 +187,7 @@ fn main() {
         "default"
     };
     let artifact = Json::obj(vec![
-        ("bench", Json::str("fig4_longpath")),
+        ("bench", Json::str("fig8_longpath")),
         ("mode", Json::str(mode)),
         ("threads", Json::Num(threads as f64)),
         (
@@ -209,6 +211,6 @@ fn main() {
     if json_mode() {
         dump_root("BENCH_tree.json", artifact);
     } else {
-        dump("fig4_longpath", artifact);
+        dump("fig8_longpath", artifact);
     }
 }

@@ -26,8 +26,8 @@ use pathsig::baselines::matmul_style_train_step;
 use pathsig::bench::{alloc_count, CountingAllocator, Timing};
 use pathsig::nn::{DeepSigModel, DeepSigSpec};
 use pathsig::sig::{
-    sig_backward_batch, sig_backward_batch_scalar, signature_and_backward_batch_into,
-    signature_batch, SigEngine,
+    sig_backward_batch, sig_backward_batch_into, sig_backward_batch_scalar,
+    signature_and_backward_batch_into, signature_batch, Isa, SigEngine,
 };
 use pathsig::tensor::{mul_adjoint, TruncTensor};
 use pathsig::util::json::Json;
@@ -122,6 +122,79 @@ fn lane_vs_scalar(smoke: bool, budget: f64) -> Json {
         ("scalar_min_s", Json::Num(scalar.min_s)),
         ("speedup", Json::Num(speedup)),
     ])
+}
+
+/// Per-ISA backward-kernel rows (ISSUE-9): the batched backward timed
+/// under the scalar chunk loop and the best runnable ISA on this CPU,
+/// with the scalar row as the speedup denominator and a warm-call
+/// allocation count per row (must be 0 on every ISA). The backward
+/// sweep is f64-only by design — `Precision::F32` is a forward-path
+/// inference mode — so every row carries `precision: "f64"`; the
+/// precision axis is covered by fig1's forward rows.
+fn simd_rows(smoke: bool, budget: f64) -> (Vec<Json>, Isa) {
+    let (d, n, b, m) = if smoke { (2, 2, 16, 10) } else { (4, 5, 64, 100) };
+    let mut rng = Rng::new(0x51D1);
+    let dim = sig_dim(d, n);
+    let mut paths = Vec::with_capacity(b * (m + 1) * d);
+    for _ in 0..b {
+        paths.extend(rng.brownian_path(m, d, 0.3));
+    }
+    let grads: Vec<f64> = (0..b * dim).map(|_| rng.gaussian()).collect();
+    let base = SigEngine::new(WordTable::build(d, &truncated_words(d, n)));
+    let active = Isa::supported()[0]; // best-first; last entry is Scalar
+    let mut isas = vec![Isa::Scalar];
+    if active != Isa::Scalar {
+        isas.push(active);
+    }
+    println!(
+        "\n# per-ISA backward rows (d={d} N={n} B={b} M={m}, active ISA {}):",
+        active.name()
+    );
+    let mut rows = Vec::new();
+    let mut scalar_s = 0.0;
+    for &isa in &isas {
+        let mut eng = base.clone();
+        eng.simd = isa;
+        let mut grad = vec![0.0; paths.len()];
+        let label = format!("bwd {}", isa.name());
+        let t = timeit(&label, smoke, budget, || {
+            sig_backward_batch_into(&eng, &paths, &grads, b, &mut grad);
+            std::hint::black_box(&grad);
+        });
+        if isa == Isa::Scalar {
+            scalar_s = t.median_s;
+        }
+        // Warm-call allocation count on a sequential clone (scoped
+        // thread spawns would count as allocations otherwise).
+        let mut seq = eng.clone();
+        seq.threads = 1;
+        sig_backward_batch_into(&seq, &paths, &grads, b, &mut grad);
+        sig_backward_batch_into(&seq, &paths, &grads, b, &mut grad);
+        let calls = 5;
+        let before = alloc_count();
+        for _ in 0..calls {
+            sig_backward_batch_into(&seq, &paths, &grads, b, &mut grad);
+            std::hint::black_box(&grad);
+        }
+        let per_call = (alloc_count() - before) as f64 / calls as f64;
+        let speedup = scalar_s / t.median_s;
+        println!(
+            "  {:>6} L={:<2} median {} ({speedup:.2}x vs scalar, {per_call} allocs/call)",
+            isa.name(),
+            eng.lanes(),
+            Timing::fmt_secs(t.median_s)
+        );
+        rows.push(Json::obj(vec![
+            ("kernel", Json::str("backward")),
+            ("isa", Json::str(isa.name())),
+            ("precision", Json::str("f64")),
+            ("lane_width", Json::Num(eng.lanes() as f64)),
+            ("median_s", Json::Num(t.median_s)),
+            ("speedup_vs_scalar_f64", Json::Num(speedup)),
+            ("allocs_per_call", Json::Num(per_call)),
+        ]));
+    }
+    (rows, active)
 }
 
 /// Count heap allocations per steady-state `DeepSigModel::train_step`
@@ -274,6 +347,7 @@ fn main() {
     println!("\npaper medians: 7.9x vs keras_sig, 24.9x vs pySigLib (H200; shapes not absolutes expected to transfer)");
 
     let lane = lane_vs_scalar(smoke, budget);
+    let (simd, active_isa) = simd_rows(smoke, budget);
     let allocs = steady_state_allocs(smoke);
 
     let mode = if smoke {
@@ -288,6 +362,8 @@ fn main() {
         ("mode", Json::Str(mode.into())),
         ("rows", Json::Arr(out_rows)),
         ("lane_vs_scalar", lane),
+        ("active_isa", Json::str(active_isa.name())),
+        ("simd_rows", Json::Arr(simd)),
         ("steady_state_allocs_per_call", Json::Num(allocs)),
     ]);
     dump("table1_training", artifact.clone());

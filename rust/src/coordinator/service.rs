@@ -21,7 +21,7 @@ use super::shard::{ShardConfig, ShardSet, ShardStat, StreamError};
 use crate::logsig::LogSigEngine;
 use crate::persist::{cache_key, CacheStats, DurabilityConfig, SigCache};
 use crate::sig::{
-    gram_into, signature_batch_into, windowed_signatures, SigEngine, StreamEngine,
+    gram_into, signature_batch_into, windowed_signatures, Precision, SigEngine, StreamEngine,
     StreamScratch, StreamTable, Window,
 };
 use crate::runtime::Runtime;
@@ -188,6 +188,14 @@ pub struct SigService {
     /// by the batch `signature` verb, in entries; `0` (the default)
     /// disables it — not even a key is hashed (`--sig-cache-cap`).
     pub sig_cache_cap: usize,
+    /// Forward-path element precision applied to every engine this
+    /// service builds (`--precision`): `None` (the default) keeps each
+    /// engine's own default (the `PATHSIG_PRECISION` env knob, else
+    /// f64); `Some(Precision::F32)` serves inference at double SIMD
+    /// lane width. Streaming and training paths stay f64 either way.
+    /// Set before the first request — engines are cached per word
+    /// spec at the precision current when first built.
+    pub precision: Option<Precision>,
     /// The content-addressed cache itself, spun up lazily with
     /// `sig_cache_cap` on first use.
     sig_cache: OnceLock<Mutex<SigCache>>,
@@ -217,6 +225,7 @@ impl SigService {
             checkpoint_every: 256,
             fsync: false,
             sig_cache_cap: 0,
+            precision: None,
             sig_cache: OnceLock::new(),
             runtime,
             metrics: Arc::new(super::Metrics::new()),
@@ -272,7 +281,11 @@ impl SigService {
             return e.clone();
         }
         let words = spec.words(dim);
-        let engine = Arc::new(SigEngine::new(WordTable::build(dim, &words)));
+        let mut engine = SigEngine::new(WordTable::build(dim, &words));
+        if let Some(p) = self.precision {
+            engine.precision = p;
+        }
+        let engine = Arc::new(engine);
         self.engines
             .write()
             .unwrap()

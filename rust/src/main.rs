@@ -5,7 +5,7 @@
 //!                      [--max-batch 32] [--max-wait-ms 2]
 //!                      [--shards 0] [--mailbox-cap 256] [--session-ttl-s 300]
 //!                      [--journal-dir DIR] [--checkpoint-every 256] [--fsync]
-//!                      [--sig-cache-cap 0]
+//!                      [--sig-cache-cap 0] [--precision f64|f32]
 //! pathsig compute      --dim D --depth N [--steps M] [--seed S]
 //!                      [--projection trunc|lyndon] [--json]
 //! pathsig logsig       --dim D --depth N [--steps M] [--seed S]
@@ -19,7 +19,7 @@ use pathsig::coordinator::{serve, BatcherConfig, ServerConfig, SigService};
 use pathsig::fbm::{fbm_dataset, FbmMethod};
 use pathsig::logsig::LogSigEngine;
 use pathsig::runtime::Runtime;
-use pathsig::sig::{signature, sliding_windows, SigEngine};
+use pathsig::sig::{signature, sliding_windows, Precision, SigEngine};
 use pathsig::util::cli::Args;
 use pathsig::util::json::Json;
 use pathsig::util::rng::Rng;
@@ -90,6 +90,17 @@ fn cmd_serve(args: &Args) -> i32 {
     // Content-addressed cache of terminal signatures for the batch
     // `signature` verb (entries; 0 = disabled).
     service.sig_cache_cap = args.usize("sig-cache-cap", 0);
+    // Inference precision of the batch forward path (overrides the
+    // PATHSIG_PRECISION env default; training/streaming stay f64).
+    service.precision = match args.get("precision") {
+        None => None,
+        Some(p) if p.eq_ignore_ascii_case("f64") => Some(Precision::F64),
+        Some(p) if p.eq_ignore_ascii_case("f32") => Some(Precision::F32),
+        Some(other) => {
+            eprintln!("pathsig serve: invalid --precision {other:?} (expected f64 or f32)");
+            return 2;
+        }
+    };
     let service = Arc::new(service);
     let config = ServerConfig {
         addr: args.str_or("addr", "127.0.0.1:7717").to_string(),

@@ -16,9 +16,12 @@
 //! block wide; the scalar per-path kernel below remains the `B < L`
 //! fallback and the differential-testing oracle.
 
-use super::lanes::{lane_forward_dispatch, project_block, ForwardWorkspace};
+use super::lanes::{
+    lane_forward_dispatch, lane_forward_f32_dispatch, project_block, project_block_f32,
+    ForwardWorkspace,
+};
 use super::schedule::{self, TimeMode};
-use super::SigEngine;
+use super::{Precision, SigEngine};
 use crate::util::threadpool::{parallel_for_into, parallel_map};
 
 /// Apply one Chen/Horner update `S ← S ⊗ exp(dx)` in place.
@@ -154,6 +157,13 @@ pub fn signature_batch_into(eng: &SigEngine, paths: &[f64], batch: usize, out: &
     let d = eng.table.d;
     assert!(per_path % d == 0 && per_path / d >= 1, "bad path shape");
     let m1 = per_path / d;
+    // The f32 inference mode takes the lane-major driver end to end
+    // (2L lanes per block; even B < 2L rides the lane kernel with
+    // inert padded lanes) so one engine mode means one numeric
+    // profile — it never mixes with the f64 tree or scalar paths.
+    if eng.precision == Precision::F32 {
+        return signature_batch_f32_into(eng, paths, batch, per_path, m1, out);
+    }
     // Long paths with small batches route to the time-parallel tree
     // (chunked Chen sweeps + log-depth combine reduction, ~1e-12 vs the
     // sequential kernels) — see `schedule` for the policy and the
@@ -190,6 +200,38 @@ pub fn signature_batch_into(eng: &SigEngine, paths: &[f64], batch: usize, out: &
         let block = &paths[b0 * per_path..(b0 + nb) * per_path];
         lane_forward_dispatch(eng, block, nb, per_path, 0, m1 - 1, ws);
         project_block(eng, &ws.lane_state, lanes, nb, out_rows);
+    });
+    eng.fwd_pool.put(workers);
+}
+
+/// The [`Precision::F32`] batch driver: identical block structure to
+/// the f64 lane path above, at `2L` lanes per block over f32 state.
+/// Increments are rounded to f32 once at the transpose and results
+/// widened to f64 once at the projection, so the public API stays
+/// `&[f64]` end to end. Allocation-free in steady state (the f32
+/// workspace buffers live in the same pooled [`ForwardWorkspace`]s).
+fn signature_batch_f32_into(
+    eng: &SigEngine,
+    paths: &[f64],
+    batch: usize,
+    per_path: usize,
+    m1: usize,
+    out: &mut [f64],
+) {
+    let odim = eng.out_dim();
+    let lanes = eng.lanes_f32();
+    let n_blocks = batch.div_ceil(lanes);
+    let nw = eng.threads.min(n_blocks).max(1);
+    let mut workers = eng.fwd_pool.take_at_least(nw);
+    for w in workers.iter_mut().take(nw) {
+        w.ensure_lanes_f32(eng);
+    }
+    parallel_for_into(out, lanes * odim, &mut workers[..nw], |blk, out_rows, ws| {
+        let b0 = blk * lanes;
+        let nb = (batch - b0).min(lanes);
+        let block = &paths[b0 * per_path..(b0 + nb) * per_path];
+        lane_forward_f32_dispatch(eng, block, nb, per_path, 0, m1 - 1, ws);
+        project_block_f32(eng, &ws.lane_state_f32, lanes, nb, out_rows);
     });
     eng.fwd_pool.put(workers);
 }

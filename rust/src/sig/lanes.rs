@@ -1,24 +1,33 @@
 //! Lane-major batched Chen kernel — the CPU analogue of the paper's
-//! one-CUDA-thread-per-word mapping (§3.2).
+//! one-CUDA-thread-per-word mapping (§3.2), with **explicit SIMD**.
 //!
-//! A block of `L` paths ("lanes", `L ∈ {4, 8, 16, 32}`) is transposed
-//! into a state matrix `lane_state[word][lane]` with the **lane axis
-//! contiguous** (structure-of-arrays). The Chen/Horner recursion then
-//! runs once over the word table per step, and its innermost loop is a
-//! straight-line multiply–add sweep over the `L` lanes of each word —
-//! a fixed-trip-count loop over a contiguous `[f64; L]` that rustc
-//! auto-vectorizes. Two wins over the scalar per-path kernel:
+//! A block of `L` paths ("lanes", `L ∈ {4, 8, 16, 32}` at f64) is
+//! transposed into a state matrix `lane_state[word][lane]` with the
+//! **lane axis contiguous** (structure-of-arrays). The Chen/Horner
+//! recursion then runs once over the word table per step, and its
+//! innermost loop sweeps the `L` lanes of each word in register-width
+//! chunks of explicit `core::arch` vectors — AVX2, AVX-512 (feature
+//! `avx512`) or NEON, chosen at runtime per engine (the `sig::simd`
+//! module, `PATHSIG_SIMD`), with the original portable `[f64; L]` loop as the
+//! scalar fallback *and* the bitwise oracle. Three wins over the
+//! scalar per-path kernel:
 //!
 //! * the word-table metadata (CSR letters/prefix rows, loop control)
 //!   is read once per `L` paths instead of once per path;
 //! * every load/store in the inner loop is a full contiguous vector,
-//!   so the FLOPs actually issue as SIMD.
+//!   and with explicit intrinsics the FLOPs issue as SIMD regardless
+//!   of what the autovectorizer decides;
+//! * [`Precision::F32`](super::Precision) runs the same kernel bodies
+//!   over `f32` at double the lane count (`2L` paths per block) for
+//!   inference-grade workloads.
 //!
 //! Arithmetic is performed in exactly the same order per lane as the
-//! scalar kernel, so results are bitwise identical to
-//! [`crate::sig::signature`] — the scalar kernel stays as the `B < L`
-//! fallback and as the differential-testing oracle
-//! (`signature_batch_scalar`).
+//! scalar kernel on **every** ISA path — the vector chunks regroup
+//! lanes, never reassociate within one, and the internal `Vector`
+//! trait deliberately has no FMA — so results are bitwise identical to
+//! [`crate::sig::signature`] under any `PATHSIG_SIMD` setting. The
+//! scalar kernel stays as the `B < L` fallback and as the
+//! differential-testing oracle (`signature_batch_scalar`).
 //!
 //! The **backward pass** (§4) is vectorized the same way: the cotangent
 //! state `λ[word][lane]` and the reconstructed signature share the SoA
@@ -27,9 +36,18 @@
 //! increments, and [`backward_step_lanes`] runs the transposed
 //! Chen/Horner cotangent sweep plus the ΔX-gradient Horner sweep with
 //! the lane axis innermost — the CSR word walk is again read once per
-//! `L` paths. See `sig::backward` for the block driver.
+//! `L` paths. See `sig::backward` for the block driver. The backward
+//! pass is f64-only: training keeps full precision (see DESIGN.md
+//! "Explicit SIMD & precision modes").
 
+use super::simd::{Elem, Isa, Scalar1, Vector};
 use super::SigEngine;
+#[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+use super::simd::{F32x16, F64x8};
+#[cfg(target_arch = "x86_64")]
+use super::simd::{F32x8, F64x4};
+#[cfg(target_arch = "aarch64")]
+use super::simd::{F32x4, F64x2};
 
 /// Default lane width: 8 f64 lanes = one AVX-512 register or two
 /// AVX2/NEON registers — wide enough to amortize the table walk,
@@ -50,6 +68,11 @@ pub struct ForwardWorkspace {
     pub(crate) lane_state: Vec<f64>,
     /// Lane-major step increments, `d × L` with lanes contiguous.
     pub(crate) dx_lanes: Vec<f64>,
+    /// f32 lane-major state matrix, `state_len × 2L` — only sized when
+    /// the engine runs [`Precision::F32`](super::Precision).
+    pub(crate) lane_state_f32: Vec<f32>,
+    /// f32 lane-major step increments, `d × 2L`.
+    pub(crate) dx_lanes_f32: Vec<f32>,
 }
 
 impl ForwardWorkspace {
@@ -64,6 +87,264 @@ impl ForwardWorkspace {
         self.lane_state.resize(eng.table.state_len * l, 0.0);
         self.dx_lanes.resize(eng.table.d * l, 0.0);
     }
+
+    /// [`ForwardWorkspace::ensure_lanes`] for the f32 inference path
+    /// (`2L` lanes per block); the f64 buffers stay untouched so a
+    /// workspace can serve either precision.
+    pub(crate) fn ensure_lanes_f32(&mut self, eng: &SigEngine) {
+        let l = eng.lanes_f32();
+        self.lane_state_f32.resize(eng.table.state_len * l, 0.0);
+        self.dx_lanes_f32.resize(eng.table.d * l, 0.0);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Generic kernel bodies.
+//
+// One body per kernel, generic over the register type `V` and the lane
+// width `L` (`L % V::WIDTH == 0`). The lane loop of the original
+// portable kernel becomes a chunk loop of `L / V::WIDTH` register
+// sweeps; **within** a lane the operation order is exactly the
+// original's, which is the whole bitwise ISA ≡ scalar contract. Bodies
+// are `#[inline(always)]` so that, called from a `#[target_feature]`
+// wrapper below, they compile *inside* the enabled-feature region.
+// ---------------------------------------------------------------------
+
+/// One lane-major Chen/Horner update over raw SoA buffers.
+///
+/// # Safety
+/// `lane_state` must point at `state_len × L` elements, `dx_lanes` at
+/// `d × L`, and when `V` is a `core::arch` type the caller must be a
+/// region where that ISA is enabled and runtime-available.
+#[inline(always)]
+unsafe fn chen_body<V: Vector, const L: usize>(
+    eng: &SigEngine,
+    lane_state: *mut V::E,
+    dx_lanes: *const V::E,
+) {
+    debug_assert_eq!(L % V::WIDTH, 0);
+    let t = &eng.table;
+    for n in (1..=t.max_level).rev() {
+        let range = t.level_range(n);
+        let level_base = t.level_csr_base(n);
+        for (off, i) in range.enumerate() {
+            let base = level_base + off * n;
+            // Indices come from the validated WordTable (letters < d,
+            // prefix indices < state_len, CSR rows in bounds; see
+            // `WordTable::check_invariants`), and every vector chunk
+            // starts at `row · L + c` with `c + WIDTH ≤ L`, so loads
+            // and stores stay inside the caller-asserted buffers. A
+            // prefix row (level < n) never aliases the written row `i`
+            // (level n).
+            let letters = t.csr_letters.get_unchecked(base..base + n);
+            let prefixes = t.csr_prefix.get_unchecked(base..base + n);
+            let mut c = 0;
+            while c < L {
+                let mut acc = V::splat(<V::E as Elem>::ONE); // S(ε).
+                for k in 1..n {
+                    let letter = *letters.get_unchecked(k - 1) as usize;
+                    let r = V::splat(<V::E as Elem>::from_f64(
+                        *eng.recip.get_unchecked(n - k + 1),
+                    ));
+                    let dxl = V::load(dx_lanes.add(letter * L + c));
+                    let pref = *prefixes.get_unchecked(k) as usize;
+                    let s = V::load(lane_state.add(pref * L + c));
+                    // acc = acc·dx·r + s, left-associated as in the
+                    // scalar kernel.
+                    acc = acc.mul(dxl).mul(r).add(s);
+                }
+                let last = *letters.get_unchecked(n - 1) as usize;
+                let dxl = V::load(dx_lanes.add(last * L + c));
+                let st = lane_state.add(i * L + c);
+                V::load(st).add(acc.mul(dxl)).store(st);
+                c += V::WIDTH;
+            }
+        }
+    }
+}
+
+/// One lane-major backward step over raw SoA buffers (see
+/// [`backward_step_lanes`] for the contract).
+///
+/// # Safety
+/// As [`chen_body`], plus `lane_lambda` at `state_len × L`,
+/// `right_prod` at `(max_level+1) × L` and `gdx_lanes` at `d × L`.
+#[inline(always)]
+unsafe fn backward_body<V: Vector, const L: usize>(
+    eng: &SigEngine,
+    lane_state: *const V::E,
+    lane_lambda: *mut V::E,
+    dx_lanes: *const V::E,
+    right_prod: *mut V::E,
+    gdx_lanes: *mut V::E,
+) {
+    debug_assert_eq!(L % V::WIDTH, 0);
+    let t = &eng.table;
+    for n in 1..=t.max_level {
+        let inv_fact_n = eng.inv_fact[n];
+        let level_base = t.level_csr_base(n);
+        for (off, w) in t.level_range(n).enumerate() {
+            // The whole-word skip must look at all L lanes regardless
+            // of chunking, or chunked and unchunked sweeps could
+            // disagree on which exact-zero contributions are added.
+            let lam_row = std::slice::from_raw_parts(lane_lambda.add(w * L), L);
+            if lam_row.iter().all(|&x| x == <V::E as Elem>::ZERO) {
+                continue;
+            }
+            let base = level_base + off * n;
+            let letters = t.csr_letters.get_unchecked(base..base + n);
+            let prefixes = t.csr_prefix.get_unchecked(base..base + n);
+            let mut c = 0;
+            while c < L {
+                // λ is read once into registers before any prefix-row
+                // write — prefix rows are strictly shorter words, never
+                // row `w`, so this copy matches the scalar kernel.
+                let lam_v = V::load(lane_lambda.add(w * L + c));
+                // Right suffix products R_p = Π_{q=p+1..n} dx_{i_q}.
+                V::splat(<V::E as Elem>::ONE).store(right_prod.add(n * L + c));
+                for p in (1..n).rev() {
+                    let letter = *letters.get_unchecked(p) as usize; // i_{p+1}
+                    let dxl = V::load(dx_lanes.add(letter * L + c));
+                    let hi = V::load(right_prod.add((p + 1) * L + c));
+                    hi.mul(dxl).store(right_prod.add(p * L + c));
+                }
+                // Fused sweep over positions p = 1..=n (per lane, the
+                // exact scalar recurrence — see `sig_backward_into`):
+                //   gdx[i_p]    += λ·A_p·R_p       (A_1 = 1/n!)
+                //   λ(w_[p-1])  += λ·dx_{i_p}·R_p/(n-p+1)!
+                //   A_{p+1}      = A_p·dx_{i_p} + S(w_[p])/(n-p)!
+                let mut a = V::splat(<V::E as Elem>::from_f64(inv_fact_n));
+                for p in 1..=n {
+                    let letter = *letters.get_unchecked(p - 1) as usize; // i_p
+                    let dxl = V::load(dx_lanes.add(letter * L + c));
+                    let rp = V::load(right_prod.add(p * L + c));
+                    let inv1 = V::splat(<V::E as Elem>::from_f64(
+                        *eng.inv_fact.get_unchecked(n - p + 1),
+                    ));
+                    let g = gdx_lanes.add(letter * L + c);
+                    V::load(g).add(lam_v.mul(a).mul(rp)).store(g);
+                    let pref_lam =
+                        lane_lambda.add(*prefixes.get_unchecked(p - 1) as usize * L + c);
+                    V::load(pref_lam)
+                        .add(lam_v.mul(dxl.mul(rp).mul(inv1)))
+                        .store(pref_lam);
+                    if p < n {
+                        let s = V::load(
+                            lane_state.add(*prefixes.get_unchecked(p) as usize * L + c),
+                        );
+                        let inv2 = V::splat(<V::E as Elem>::from_f64(
+                            *eng.inv_fact.get_unchecked(n - p),
+                        ));
+                        a = a.mul(dxl).add(s.mul(inv2));
+                    }
+                }
+                c += V::WIDTH;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Monomorphic per-ISA wrappers.
+//
+// `#[target_feature]` requires non-generic functions on the crate's
+// MSRV, so each ISA gets one wrapper per kernel that matches the
+// runtime lane width onto the `const L` instantiations — the only
+// place the supported width sets are spelled out per element type
+// (f64: {4, 8, 16, 32}; f32: {8, 16, 32, 64}). Dispatch guarantees
+// the width is in the set *and* divisible by the register width
+// (`Isa::effective`), so the `unreachable!` arms are the same loud
+// contract as `lane_dispatch!`.
+// ---------------------------------------------------------------------
+
+macro_rules! chen_wrapper {
+    ($(#[$attr:meta])* $name:ident, $vec:ty, $e:ty, [$($l:literal),+]) => {
+        $(#[$attr])*
+        unsafe fn $name(eng: &SigEngine, l: usize, lane_state: *mut $e, dx_lanes: *const $e) {
+            match l {
+                $( $l => chen_body::<$vec, $l>(eng, lane_state, dx_lanes), )+
+                other => unreachable!("unsupported lane width {other}"),
+            }
+        }
+    };
+}
+
+macro_rules! backward_wrapper {
+    ($(#[$attr:meta])* $name:ident, $vec:ty, [$($l:literal),+]) => {
+        $(#[$attr])*
+        #[allow(clippy::too_many_arguments)]
+        unsafe fn $name(
+            eng: &SigEngine,
+            l: usize,
+            lane_state: *const f64,
+            lane_lambda: *mut f64,
+            dx_lanes: *const f64,
+            right_prod: *mut f64,
+            gdx_lanes: *mut f64,
+        ) {
+            match l {
+                $( $l => backward_body::<$vec, $l>(
+                    eng, lane_state, lane_lambda, dx_lanes, right_prod, gdx_lanes), )+
+                other => unreachable!("unsupported lane width {other}"),
+            }
+        }
+    };
+}
+
+chen_wrapper!(
+    #[cfg(target_arch = "x86_64")]
+    #[target_feature(enable = "avx2")]
+    chen_avx2, F64x4, f64, [4, 8, 16, 32]
+);
+chen_wrapper!(
+    #[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+    #[target_feature(enable = "avx512f")]
+    chen_avx512, F64x8, f64, [8, 16, 32]
+);
+chen_wrapper!(
+    #[cfg(target_arch = "aarch64")]
+    chen_neon, F64x2, f64, [4, 8, 16, 32]
+);
+chen_wrapper!(
+    #[cfg(target_arch = "x86_64")]
+    #[target_feature(enable = "avx2")]
+    chen_avx2_f32, F32x8, f32, [8, 16, 32, 64]
+);
+chen_wrapper!(
+    #[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+    #[target_feature(enable = "avx512f")]
+    chen_avx512_f32, F32x16, f32, [16, 32, 64]
+);
+chen_wrapper!(
+    #[cfg(target_arch = "aarch64")]
+    chen_neon_f32, F32x4, f32, [8, 16, 32, 64]
+);
+backward_wrapper!(
+    #[cfg(target_arch = "x86_64")]
+    #[target_feature(enable = "avx2")]
+    backward_avx2, F64x4, [4, 8, 16, 32]
+);
+backward_wrapper!(
+    #[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+    #[target_feature(enable = "avx512f")]
+    backward_avx512, F64x8, [8, 16, 32]
+);
+backward_wrapper!(
+    #[cfg(target_arch = "aarch64")]
+    backward_neon, F64x2, [4, 8, 16, 32]
+);
+
+/// The dispatch target for a kernel call at lane width `l`: the
+/// engine's configured ISA, re-validated against this CPU and the
+/// width (`Isa::effective`), with widths outside the wrapper sets
+/// pinned to the scalar body (which handles any `L`).
+#[inline]
+fn dispatch_isa(eng: &SigEngine, l: usize, f32_elems: bool, supported: bool) -> Isa {
+    if supported {
+        eng.simd.effective(l, f32_elems)
+    } else {
+        Isa::Scalar
+    }
 }
 
 /// One lane-major Chen/Horner update `S_l ← S_l ⊗ exp(dx_l)` for all
@@ -71,52 +352,63 @@ impl ForwardWorkspace {
 /// contiguous, `lane_state[0..L] == 1`), `dx_lanes` is `d × L`.
 /// Levels are processed top-down so the update is in place, exactly as
 /// in the scalar [`crate::sig::chen_update`].
+///
+/// The inner loop runs on the engine's configured ISA
+/// ([`SigEngine::simd`], `PATHSIG_SIMD`) — bitwise-equal to the scalar
+/// path at any width, see the module docs.
 pub fn chen_update_lanes<const L: usize>(
     eng: &SigEngine,
     lane_state: &mut [f64],
     dx_lanes: &[f64],
 ) {
     let t = &eng.table;
-    // Hard asserts, not debug: the kernel below does unchecked reads
+    // Hard asserts, not debug: the kernels below do unchecked reads
     // and writes at multiples of L, so these size contracts are what
-    // keeps it a *safe* public function in release builds.
+    // keeps this a *safe* public function in release builds.
     assert_eq!(lane_state.len(), t.state_len * L, "lane_state must be state_len × L");
     assert_eq!(dx_lanes.len(), t.d * L, "dx_lanes must be d × L");
-    let dx_ptr = dx_lanes.as_ptr();
-    for n in (1..=t.max_level).rev() {
-        let range = t.level_range(n);
-        let level_base = t.level_csr_base(n);
-        for (off, i) in range.enumerate() {
-            let base = level_base + off * n;
-            // SAFETY: indices come from the validated WordTable
-            // (letters < d, prefix indices < state_len, CSR rows in
-            // bounds; see `WordTable::check_invariants`), and every
-            // `[f64; L]` view starts at a multiple-of-L offset inside
-            // a buffer of length (state_len|d)·L, so it is in bounds.
-            // The shared view of a prefix row and the mutable view of
-            // row `i` never alias: prefixes are strictly shorter words
-            // (level < n), while `i` is a level-`n` word.
-            unsafe {
-                let letters = t.csr_letters.get_unchecked(base..base + n);
-                let prefixes = t.csr_prefix.get_unchecked(base..base + n);
-                let mut acc = [1.0f64; L]; // S(ε) broadcast across lanes.
-                for k in 1..n {
-                    let letter = *letters.get_unchecked(k - 1) as usize;
-                    let r = *eng.recip.get_unchecked(n - k + 1);
-                    let dxl = &*(dx_ptr.add(letter * L) as *const [f64; L]);
-                    let pref = *prefixes.get_unchecked(k) as usize;
-                    let s = &*(lane_state.as_ptr().add(pref * L) as *const [f64; L]);
-                    for l in 0..L {
-                        acc[l] = acc[l] * dxl[l] * r + s[l];
-                    }
-                }
-                let last = *letters.get_unchecked(n - 1) as usize;
-                let dxl = &*(dx_ptr.add(last * L) as *const [f64; L]);
-                let st = &mut *(lane_state.as_mut_ptr().add(i * L) as *mut [f64; L]);
-                for l in 0..L {
-                    st[l] += acc[l] * dxl[l];
-                }
-            }
+    let isa = dispatch_isa(eng, L, false, matches!(L, 4 | 8 | 16 | 32));
+    // SAFETY: sizes asserted above; a non-scalar `isa` passed
+    // `Isa::available()` inside `effective`, so its `#[target_feature]`
+    // wrapper may run, and L is in the wrapper's width set (effective
+    // checked divisibility; the sets contain every multiple of the
+    // register width in {4,8,16,32}/{8,16,32,64}).
+    unsafe {
+        let (st, dx) = (lane_state.as_mut_ptr(), dx_lanes.as_ptr());
+        match isa {
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx2 => chen_avx2(eng, L, st, dx),
+            #[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+            Isa::Avx512 => chen_avx512(eng, L, st, dx),
+            #[cfg(target_arch = "aarch64")]
+            Isa::Neon => chen_neon(eng, L, st, dx),
+            _ => chen_body::<Scalar1<f64>, L>(eng, st, dx),
+        }
+    }
+}
+
+/// [`chen_update_lanes`] over f32 elements — the inference-mode kernel
+/// (`L` here is the f32 lane count, `2 ×` the engine's f64 width).
+pub(crate) fn chen_update_lanes_f32<const L: usize>(
+    eng: &SigEngine,
+    lane_state: &mut [f32],
+    dx_lanes: &[f32],
+) {
+    let t = &eng.table;
+    assert_eq!(lane_state.len(), t.state_len * L, "lane_state must be state_len × L");
+    assert_eq!(dx_lanes.len(), t.d * L, "dx_lanes must be d × L");
+    let isa = dispatch_isa(eng, L, true, matches!(L, 8 | 16 | 32 | 64));
+    // SAFETY: as in `chen_update_lanes`, with the f32 width sets.
+    unsafe {
+        let (st, dx) = (lane_state.as_mut_ptr(), dx_lanes.as_ptr());
+        match isa {
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx2 => chen_avx2_f32(eng, L, st, dx),
+            #[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+            Isa::Avx512 => chen_avx512_f32(eng, L, st, dx),
+            #[cfg(target_arch = "aarch64")]
+            Isa::Neon => chen_neon_f32(eng, L, st, dx),
+            _ => chen_body::<Scalar1<f32>, L>(eng, st, dx),
         }
     }
 }
@@ -131,12 +423,12 @@ pub fn chen_update_lanes<const L: usize>(
 ///
 /// Per lane this performs exactly the scalar fused sweep of
 /// `sig_backward_into` (same word order, same operation order per
-/// accumulator), so results match the scalar kernel bitwise; lanes
-/// whose `λ` is identically zero contribute exact zeros. Levels are
-/// processed in ASCENDING order: the transpose sends contributions
-/// strictly from a word to its shorter prefixes, so every `λ(w)` is
-/// read before anything lands on it — the in-place mirror of the
-/// forward's descending trick.
+/// accumulator) on the engine's configured ISA, so results match the
+/// scalar kernel bitwise; lanes whose `λ` is identically zero
+/// contribute exact zeros. Levels are processed in ASCENDING order:
+/// the transpose sends contributions strictly from a word to its
+/// shorter prefixes, so every `λ(w)` is read before anything lands on
+/// it — the in-place mirror of the forward's descending trick.
 pub fn backward_step_lanes<const L: usize>(
     eng: &SigEngine,
     lane_state: &[f64],
@@ -146,76 +438,31 @@ pub fn backward_step_lanes<const L: usize>(
     gdx_lanes: &mut [f64],
 ) {
     let t = &eng.table;
-    // Hard asserts, not debug: the kernel below does unchecked reads
+    // Hard asserts, not debug: the kernels below do unchecked reads
     // and writes at multiples of L (see `chen_update_lanes`).
     assert_eq!(lane_state.len(), t.state_len * L, "lane_state must be state_len × L");
     assert_eq!(lane_lambda.len(), t.state_len * L, "lane_lambda must be state_len × L");
     assert_eq!(dx_lanes.len(), t.d * L, "dx_lanes must be d × L");
     assert!(right_prod.len() >= (t.max_level + 1) * L, "right_prod too small");
     assert_eq!(gdx_lanes.len(), t.d * L, "gdx_lanes must be d × L");
-    let dx_ptr = dx_lanes.as_ptr();
-    let st_ptr = lane_state.as_ptr();
-    let lam_ptr = lane_lambda.as_mut_ptr();
-    let rp_ptr = right_prod.as_mut_ptr();
-    for n in 1..=t.max_level {
-        let inv_fact_n = eng.inv_fact[n];
-        let level_base = t.level_csr_base(n);
-        for (off, w) in t.level_range(n).enumerate() {
-            // SAFETY: indices come from the validated WordTable
-            // (letters < d, prefix indices < state_len, CSR rows in
-            // bounds), and every `[f64; L]` view starts at a
-            // multiple-of-L offset inside a buffer of length
-            // (state_len|d|max_level+1)·L asserted above. `lam_v` is a
-            // copy, and the `&mut` prefix-row views into `lane_lambda`
-            // target strictly shorter words (level < n), never row `w`.
-            unsafe {
-                let lam_v = *(lam_ptr.add(w * L) as *const [f64; L]);
-                if lam_v.iter().all(|&x| x == 0.0) {
-                    continue;
-                }
-                let base = level_base + off * n;
-                let letters = t.csr_letters.get_unchecked(base..base + n);
-                let prefixes = t.csr_prefix.get_unchecked(base..base + n);
-                // Right suffix products R_p = Π_{q=p+1..n} dx_{i_q}.
-                *(rp_ptr.add(n * L) as *mut [f64; L]) = [1.0; L];
-                for p in (1..n).rev() {
-                    let letter = *letters.get_unchecked(p) as usize; // i_{p+1}
-                    let dxl = &*(dx_ptr.add(letter * L) as *const [f64; L]);
-                    let hi = *(rp_ptr.add((p + 1) * L) as *const [f64; L]);
-                    let lo = &mut *(rp_ptr.add(p * L) as *mut [f64; L]);
-                    for l in 0..L {
-                        lo[l] = hi[l] * dxl[l];
-                    }
-                }
-                // Fused sweep over positions p = 1..=n (per lane, the
-                // exact scalar recurrence — see `sig_backward_into`):
-                //   gdx[i_p]    += λ·A_p·R_p       (A_1 = 1/n!)
-                //   λ(w_[p-1])  += λ·dx_{i_p}·R_p/(n-p+1)!
-                //   A_{p+1}      = A_p·dx_{i_p} + S(w_[p])/(n-p)!
-                let mut a = [inv_fact_n; L];
-                for p in 1..=n {
-                    let letter = *letters.get_unchecked(p - 1) as usize; // i_p
-                    let dxl = &*(dx_ptr.add(letter * L) as *const [f64; L]);
-                    let rp = &*(rp_ptr.add(p * L) as *const [f64; L]);
-                    let inv1 = *eng.inv_fact.get_unchecked(n - p + 1);
-                    let g = &mut *(gdx_lanes.as_mut_ptr().add(letter * L) as *mut [f64; L]);
-                    let pref_lam = &mut *(lam_ptr
-                        .add(*prefixes.get_unchecked(p - 1) as usize * L)
-                        as *mut [f64; L]);
-                    for l in 0..L {
-                        g[l] += lam_v[l] * a[l] * rp[l];
-                        pref_lam[l] += lam_v[l] * (dxl[l] * rp[l] * inv1);
-                    }
-                    if p < n {
-                        let s = &*(st_ptr.add(*prefixes.get_unchecked(p) as usize * L)
-                            as *const [f64; L]);
-                        let inv2 = *eng.inv_fact.get_unchecked(n - p);
-                        for l in 0..L {
-                            a[l] = a[l] * dxl[l] + s[l] * inv2;
-                        }
-                    }
-                }
-            }
+    let isa = dispatch_isa(eng, L, false, matches!(L, 4 | 8 | 16 | 32));
+    // SAFETY: sizes asserted above; ISA availability and width
+    // divisibility guaranteed by `Isa::effective` (see
+    // `chen_update_lanes`).
+    unsafe {
+        let st = lane_state.as_ptr();
+        let lam = lane_lambda.as_mut_ptr();
+        let dx = dx_lanes.as_ptr();
+        let rp = right_prod.as_mut_ptr();
+        let g = gdx_lanes.as_mut_ptr();
+        match isa {
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx2 => backward_avx2(eng, L, st, lam, dx, rp, g),
+            #[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+            Isa::Avx512 => backward_avx512(eng, L, st, lam, dx, rp, g),
+            #[cfg(target_arch = "aarch64")]
+            Isa::Neon => backward_neon(eng, L, st, lam, dx, rp, g),
+            _ => backward_body::<Scalar1<f64>, L>(eng, st, lam, dx, rp, g),
         }
     }
 }
@@ -256,9 +503,41 @@ pub(crate) fn lane_forward<const L: usize>(
     }
 }
 
+/// [`lane_forward`] over f32 state: increments are computed in f64
+/// (exact for typical path data) and rounded once at the transpose, so
+/// the f32 path's only precision loss is the in-kernel arithmetic.
+pub(crate) fn lane_forward_f32<const L: usize>(
+    eng: &SigEngine,
+    block: &[f64],
+    nb: usize,
+    per_path: usize,
+    jl: usize,
+    jr: usize,
+    ws: &mut ForwardWorkspace,
+) {
+    let d = eng.table.d;
+    let sl = eng.table.state_len;
+    debug_assert!(nb >= 1 && nb <= L);
+    debug_assert_eq!(block.len(), nb * per_path);
+    debug_assert!(ws.lane_state_f32.len() >= sl * L && ws.dx_lanes_f32.len() >= d * L);
+    let lane_state = &mut ws.lane_state_f32[..sl * L];
+    let dx_lanes = &mut ws.dx_lanes_f32[..d * L];
+    lane_state.fill(0.0);
+    lane_state[..L].fill(1.0); // ε row.
+    dx_lanes.fill(0.0);
+    for j in (jl + 1)..=jr {
+        for (l, p) in block.chunks_exact(per_path).enumerate() {
+            for i in 0..d {
+                dx_lanes[i * L + l] = (p[j * d + i] - p[(j - 1) * d + i]) as f32;
+            }
+        }
+        chen_update_lanes_f32::<L>(eng, lane_state, dx_lanes);
+    }
+}
+
 /// Dispatch a generic-over-`L` kernel on the runtime lane width —
-/// the ONE place the supported width set `{4, 8, 16, 32}` is spelled
-/// out for monomorphization. These are the only values
+/// the ONE place the supported f64 width set `{4, 8, 16, 32}` is
+/// spelled out for monomorphization. These are the only values
 /// [`SigEngine::lanes`] can return; workspace buffers are strided by
 /// the lane width, so running a kernel at any other width would
 /// corrupt silently — fail loudly if the lane domain ever grows
@@ -276,6 +555,21 @@ macro_rules! lane_dispatch {
 }
 pub(crate) use lane_dispatch;
 
+/// [`lane_dispatch!`] for the f32 lane widths `{8, 16, 32, 64}` — the
+/// only values [`SigEngine::lanes_f32`] can return.
+macro_rules! lane_dispatch_f32 {
+    ($lanes:expr, $func:ident($($args:expr),* $(,)?)) => {
+        match $lanes {
+            8 => $func::<8>($($args),*),
+            16 => $func::<16>($($args),*),
+            32 => $func::<32>($($args),*),
+            64 => $func::<64>($($args),*),
+            other => unreachable!("unsupported f32 lane width {other}"),
+        }
+    };
+}
+pub(crate) use lane_dispatch_f32;
+
 /// Monomorphization dispatch for [`lane_forward`] on the engine's lane
 /// width.
 pub(crate) fn lane_forward_dispatch(
@@ -288,6 +582,20 @@ pub(crate) fn lane_forward_dispatch(
     ws: &mut ForwardWorkspace,
 ) {
     lane_dispatch!(eng.lanes(), lane_forward(eng, block, nb, per_path, jl, jr, ws));
+}
+
+/// Monomorphization dispatch for [`lane_forward_f32`] on the engine's
+/// f32 lane width.
+pub(crate) fn lane_forward_f32_dispatch(
+    eng: &SigEngine,
+    block: &[f64],
+    nb: usize,
+    per_path: usize,
+    jl: usize,
+    jr: usize,
+    ws: &mut ForwardWorkspace,
+) {
+    lane_dispatch_f32!(eng.lanes_f32(), lane_forward_f32(eng, block, nb, per_path, jl, jr, ws));
 }
 
 /// Project lane `l` of a lane-major state matrix onto the requested
@@ -322,6 +630,24 @@ pub(crate) fn project_block(
     }
 }
 
+/// [`project_block`] from an f32 state matrix: the public API stays
+/// f64, so inference results are widened exactly once on the way out.
+pub(crate) fn project_block_f32(
+    eng: &SigEngine,
+    lane_state: &[f32],
+    lw: usize,
+    nb: usize,
+    out: &mut [f64],
+) {
+    let odim = eng.out_dim();
+    debug_assert_eq!(out.len(), nb * odim);
+    for (l, row) in out.chunks_exact_mut(odim).enumerate() {
+        for (o, &idx) in row.iter_mut().zip(&eng.table.output_map) {
+            *o = lane_state[idx as usize * lw + l] as f64;
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -337,6 +663,16 @@ mod tests {
         lane_forward_dispatch(eng, paths, nb, per_path, 0, m1 - 1, &mut ws);
         let mut out = vec![0.0; nb * eng.out_dim()];
         project_block(eng, &ws.lane_state, eng.lanes(), nb, &mut out);
+        out
+    }
+
+    fn lane_rows_f32(eng: &SigEngine, paths: &[f64], nb: usize, per_path: usize) -> Vec<f64> {
+        let mut ws = ForwardWorkspace::default();
+        ws.ensure_lanes_f32(eng);
+        let m1 = per_path / eng.table.d;
+        lane_forward_f32_dispatch(eng, paths, nb, per_path, 0, m1 - 1, &mut ws);
+        let mut out = vec![0.0; nb * eng.out_dim()];
+        project_block_f32(eng, &ws.lane_state_f32, eng.lanes_f32(), nb, &mut out);
         out
     }
 
@@ -357,6 +693,62 @@ mod tests {
             // Same arithmetic order per lane ⇒ bitwise identical.
             assert_eq!(&rows[l * eng.out_dim()..(l + 1) * eng.out_dim()], &single[..]);
         }
+    }
+
+    #[test]
+    fn every_supported_isa_is_bitwise_equal_to_scalar() {
+        // The kernel-level dispatch contract: at a fixed lane width,
+        // each ISA this machine can run reproduces the scalar path
+        // bit for bit, forward and backward state included. (The
+        // engine-level sweep across entry points lives in
+        // tests/engine_properties.rs.)
+        let mut rng = Rng::new(903);
+        let mut eng = SigEngine::sequential(WordTable::build(3, &truncated_words(3, 4)));
+        let lw = eng.lanes();
+        let m = 9;
+        let per = (m + 1) * 3;
+        let mut paths = Vec::new();
+        for _ in 0..lw {
+            paths.extend(rng.brownian_path(m, 3, 0.8));
+        }
+        eng.simd = crate::sig::Isa::Scalar;
+        let want = lane_rows(&eng, &paths, lw, per);
+        let want32 = lane_rows_f32(&eng, &paths, lw, per);
+        for isa in crate::sig::Isa::supported() {
+            eng.simd = isa;
+            let got = lane_rows(&eng, &paths, lw, per);
+            assert!(
+                got.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "forward f64 mismatch on {isa:?}"
+            );
+            let got32 = lane_rows_f32(&eng, &paths, lw, per);
+            assert!(
+                got32.iter().zip(&want32).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "forward f32 mismatch on {isa:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn f32_block_tracks_f64_to_single_precision() {
+        let mut rng = Rng::new(904);
+        let eng = SigEngine::sequential(WordTable::build(2, &truncated_words(2, 4)));
+        let lw = eng.lanes_f32();
+        let m = 11;
+        let per = (m + 1) * 2;
+        let mut paths = Vec::new();
+        for _ in 0..lw {
+            paths.extend(rng.brownian_path(m, 2, 0.5));
+        }
+        let rows64 = lane_rows(&eng, &paths[..eng.lanes() * per], eng.lanes(), per);
+        let rows32 = lane_rows_f32(&eng, &paths, lw, per);
+        assert_allclose(
+            &rows32[..eng.lanes() * eng.out_dim()],
+            &rows64,
+            1e-5,
+            1e-5,
+            "f32 lane block vs f64",
+        );
     }
 
     #[test]

@@ -25,6 +25,7 @@ mod forward;
 mod kernel;
 pub mod lanes;
 pub mod schedule;
+mod simd;
 mod stream;
 mod tree;
 mod windows;
@@ -43,6 +44,7 @@ pub use forward::{
 };
 pub use lanes::{backward_step_lanes, chen_update_lanes, ForwardWorkspace, DEFAULT_LANE_WIDTH};
 pub use schedule::{plan, ChunkPolicy, TimeMode, MIN_TIME_STEPS};
+pub use simd::{Isa, Precision};
 pub use stream::{MultiStream, StreamCheckpoint, StreamEngine, StreamScratch, StreamTable};
 pub use tree::{
     sig_backward_batch_tree_into, signature_and_backward_batch_tree_into,
@@ -53,10 +55,32 @@ pub use windows::{
     windowed_signatures_batch, windowed_signatures_batch_into, windowed_signatures_into, Window,
 };
 
+use crate::util::envknob::warn_knob_once;
 use crate::util::pool::Pool;
 use crate::util::threadpool::default_threads;
 use crate::words::WordTable;
 use std::sync::{Arc, OnceLock};
+
+/// Parse a raw `PATHSIG_LANES` value: a valid lane width (4/8/16/32)
+/// passes through, everything else comes back as
+/// [`DEFAULT_LANE_WIDTH`] plus the warning message [`SigEngine::new`]
+/// prints (once). Pure — unit-testable per rejection path without
+/// touching the process environment.
+fn lane_width_from(env: Option<&str>) -> (usize, Option<String>) {
+    let Some(raw) = env else {
+        return (DEFAULT_LANE_WIDTH, None);
+    };
+    match raw.trim().parse::<usize>() {
+        Ok(l @ (4 | 8 | 16 | 32)) => (l, None),
+        _ => (
+            DEFAULT_LANE_WIDTH,
+            Some(format!(
+                "ignoring invalid PATHSIG_LANES={raw:?} \
+                 (supported: 4, 8, 16, 32); using {DEFAULT_LANE_WIDTH}"
+            )),
+        ),
+    }
+}
 
 /// A word table bundled with the small precomputed constant tables the
 /// kernels need (`1/k` and `1/k!`), the parallelism configuration, and
@@ -76,9 +100,23 @@ pub struct SigEngine {
     /// Lane width `L` of the lane-major batch kernel — how many paths
     /// one SIMD block carries. Valid values are 4, 8, 16 or 32 (other
     /// values fall back to [`DEFAULT_LANE_WIDTH`]); settable via the
-    /// `PATHSIG_LANES` environment variable. Batches with `B < L` use
-    /// the scalar per-path kernel.
+    /// `PATHSIG_LANES` environment variable (a rejected value warns
+    /// once on stderr). Batches with `B < L` use the scalar per-path
+    /// kernel. The f32 inference path runs `2L` lanes per block
+    /// ([`SigEngine::lanes_f32`]).
     pub lane_width: usize,
+    /// Instruction set the lane kernels dispatch to (`PATHSIG_SIMD`):
+    /// resolved to the best available ISA at construction, re-validated
+    /// per kernel call, bitwise-equal to [`Isa::Scalar`] at any
+    /// setting. Hand-set values that this CPU cannot run silently
+    /// downgrade (AVX-512 → AVX2 → scalar, NEON → scalar).
+    pub simd: Isa,
+    /// Element precision of the *forward inference* path
+    /// (`PATHSIG_PRECISION`): [`Precision::F32`] doubles effective
+    /// SIMD lanes at single-precision accuracy (within 1e-5 of f64 on
+    /// the conformance matrix). The backward pass, streaming and the
+    /// time-parallel tree always run f64.
+    pub precision: Precision,
     /// Time-axis chunking policy (`PATHSIG_TIME_CHUNK`): whether and
     /// how batch entry points may split long paths into concurrently
     /// swept chunks — see [`schedule`].
@@ -109,20 +147,35 @@ impl SigEngine {
         for k in 1..inv_fact.len() {
             inv_fact[k] = inv_fact[k - 1] / k as f64;
         }
-        let lanes_env = std::env::var("PATHSIG_LANES").ok().and_then(|v| v.parse::<usize>().ok());
-        let lane_width = match lanes_env {
-            Some(l @ (4 | 8 | 16 | 32)) => l,
-            _ => DEFAULT_LANE_WIDTH,
-        };
+        let (lane_width, lanes_warn) =
+            lane_width_from(std::env::var("PATHSIG_LANES").ok().as_deref());
+        if let Some(msg) = lanes_warn {
+            warn_knob_once("PATHSIG_LANES", &msg);
+        }
+        let (time_chunk, chunk_warn) = schedule::chunk_policy_from_checked(
+            std::env::var("PATHSIG_TIME_CHUNK").ok().as_deref(),
+        );
+        if let Some(msg) = chunk_warn {
+            warn_knob_once("PATHSIG_TIME_CHUNK", &msg);
+        }
+        let (simd, simd_warn) = Isa::pick(std::env::var("PATHSIG_SIMD").ok().as_deref());
+        if let Some(msg) = simd_warn {
+            warn_knob_once("PATHSIG_SIMD", &msg);
+        }
+        let (precision, prec_warn) =
+            simd::precision_from(std::env::var("PATHSIG_PRECISION").ok().as_deref());
+        if let Some(msg) = prec_warn {
+            warn_knob_once("PATHSIG_PRECISION", &msg);
+        }
         SigEngine {
             table,
             recip,
             inv_fact,
             threads: default_threads(),
             lane_width,
-            time_chunk: schedule::chunk_policy_from(
-                std::env::var("PATHSIG_TIME_CHUNK").ok().as_deref(),
-            ),
+            simd,
+            precision,
+            time_chunk,
             fwd_pool: Pool::default(),
             bwd_pool: Pool::default(),
             tree_tbl: OnceLock::new(),
@@ -156,6 +209,14 @@ impl SigEngine {
         }
     }
 
+    /// Effective f32 lane width: twice [`SigEngine::lanes`] — a
+    /// [`Precision::F32`] block packs `2L` paths into the same
+    /// register budget.
+    #[inline]
+    pub fn lanes_f32(&self) -> usize {
+        2 * self.lanes()
+    }
+
     /// The factor-closed combine table the time-parallel tree runs on,
     /// built lazily from the engine's requested words on first use and
     /// cached for the engine's lifetime (clones share it). Free — an
@@ -169,6 +230,8 @@ impl SigEngine {
                 let mut st = StreamTable::new(self.table.d, &self.table.requested);
                 st.eng.threads = self.threads;
                 st.eng.lane_width = self.lane_width;
+                st.eng.simd = self.simd;
+                st.eng.precision = self.precision;
                 Arc::new(st)
             })
             .clone()
@@ -218,9 +281,53 @@ mod tests {
         for valid in [4usize, 8, 16, 32] {
             e.lane_width = valid;
             assert_eq!(e.lanes(), valid);
+            assert_eq!(e.lanes_f32(), 2 * valid);
         }
         e.lane_width = 7; // invalid → default
         assert_eq!(e.lanes(), DEFAULT_LANE_WIDTH);
+        assert_eq!(e.lanes_f32(), 2 * DEFAULT_LANE_WIDTH);
+    }
+
+    #[test]
+    fn lane_width_env_parsing() {
+        // Valid widths and unset are warning-free (`lanes()` can then
+        // only ever see 4/8/16/32 — the `lane_dispatch!` contract)…
+        assert_eq!(lane_width_from(None), (DEFAULT_LANE_WIDTH, None));
+        for valid in [4usize, 8, 16, 32] {
+            assert_eq!(lane_width_from(Some(&valid.to_string())), (valid, None));
+        }
+        assert_eq!(lane_width_from(Some(" 16 ")), (16, None));
+        // …every rejection path — wrong width, zero, negative, garbage,
+        // empty — names the rejected value and the default used.
+        for bad in ["5", "abc", "0", "-8", "", "8.0", "33"] {
+            let (l, warn) = lane_width_from(Some(bad));
+            assert_eq!(l, DEFAULT_LANE_WIDTH, "{bad}");
+            let msg = warn.expect("rejected PATHSIG_LANES must warn");
+            assert!(
+                msg.contains("PATHSIG_LANES")
+                    && msg.contains(bad)
+                    && msg.contains(&DEFAULT_LANE_WIDTH.to_string()),
+                "{msg}"
+            );
+        }
+    }
+
+    #[test]
+    fn engine_simd_and_precision_defaults() {
+        // Without env overrides the engine resolves to an ISA this
+        // machine can actually run, at f64 (the training default) —
+        // and clones/tree tables inherit both.
+        let mut e = SigEngine::new(WordTable::build(2, &truncated_words(2, 3)));
+        assert!(e.simd.available());
+        if std::env::var("PATHSIG_PRECISION").is_err() {
+            assert_eq!(e.precision, Precision::F64);
+        }
+        e.simd = Isa::Scalar;
+        e.precision = Precision::F32;
+        assert_eq!(e.clone().simd, Isa::Scalar);
+        let tt = e.tree_table();
+        assert_eq!(tt.eng.simd, Isa::Scalar);
+        assert_eq!(tt.eng.precision, Precision::F32);
     }
 
     #[test]

@@ -64,23 +64,37 @@ pub enum ChunkPolicy {
 }
 
 /// Parse a raw `PATHSIG_TIME_CHUNK` value (unset ⇒ [`ChunkPolicy::Auto`];
-/// unparsable values fall back to `Auto` rather than erroring, matching
-/// the other env knobs).
-pub(crate) fn chunk_policy_from(env: Option<&str>) -> ChunkPolicy {
-    let Some(s) = env.map(str::trim) else {
-        return ChunkPolicy::Auto;
+/// unparsable values fall back to `Auto` — with a warning message for
+/// the engine to surface, matching the other env knobs). Pure —
+/// unit-testable per rejection path without touching the environment.
+pub(crate) fn chunk_policy_from_checked(env: Option<&str>) -> (ChunkPolicy, Option<String>) {
+    let Some(raw) = env else {
+        return (ChunkPolicy::Auto, None);
     };
+    let s = raw.trim();
     if s.is_empty() || s.eq_ignore_ascii_case("auto") {
-        return ChunkPolicy::Auto;
+        return (ChunkPolicy::Auto, None);
     }
     if s.eq_ignore_ascii_case("off") {
-        return ChunkPolicy::Off;
+        return (ChunkPolicy::Off, None);
     }
     match s.parse::<usize>() {
-        Ok(0) => ChunkPolicy::Off,
-        Ok(c) => ChunkPolicy::Fixed(c),
-        Err(_) => ChunkPolicy::Auto,
+        Ok(0) => (ChunkPolicy::Off, None),
+        Ok(c) => (ChunkPolicy::Fixed(c), None),
+        Err(_) => (
+            ChunkPolicy::Auto,
+            Some(format!(
+                "ignoring invalid PATHSIG_TIME_CHUNK={raw:?} \
+                 (expected auto, off, or a chunk length); using auto"
+            )),
+        ),
     }
+}
+
+/// [`chunk_policy_from_checked`] without the warning channel.
+#[cfg(test)]
+pub(crate) fn chunk_policy_from(env: Option<&str>) -> ChunkPolicy {
+    chunk_policy_from_checked(env).0
 }
 
 /// The execution mode the scheduler chose for one batch call.
@@ -206,6 +220,25 @@ mod tests {
         assert_eq!(chunk_policy_from(Some("64")), ChunkPolicy::Fixed(64));
         assert_eq!(chunk_policy_from(Some(" 4 ")), ChunkPolicy::Fixed(4));
         assert_eq!(chunk_policy_from(Some("garbage")), ChunkPolicy::Auto);
+    }
+
+    #[test]
+    fn policy_rejections_warn_with_value_and_default() {
+        // Valid spellings stay warning-free…
+        for ok in [None, Some("auto"), Some("off"), Some("0"), Some("64"), Some("")] {
+            assert!(chunk_policy_from_checked(ok).1.is_none(), "{ok:?}");
+        }
+        // …every rejection path names the rejected value and the
+        // default (`auto`) actually used.
+        for bad in ["garbage", "-3", "4x", "1.5", "off please"] {
+            let (p, warn) = chunk_policy_from_checked(Some(bad));
+            assert_eq!(p, ChunkPolicy::Auto, "{bad}");
+            let msg = warn.expect("rejected PATHSIG_TIME_CHUNK must warn");
+            assert!(
+                msg.contains("PATHSIG_TIME_CHUNK") && msg.contains(bad) && msg.contains("auto"),
+                "{msg}"
+            );
+        }
     }
 
     #[test]

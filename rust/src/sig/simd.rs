@@ -1,0 +1,619 @@
+//! Runtime ISA dispatch and element-precision plumbing for the
+//! lane-major kernels.
+//!
+//! PR 2's lane kernels lean on rustc autovectorizing a `[f64; L]`
+//! loop; this module makes the vectorization *explicit* (ROADMAP open
+//! item 2, mirroring pySigLib's hand-vectorized CPU kernels): a tiny
+//! [`Vector`] trait abstracts one register's worth of lanes
+//! (load/store/splat/mul/add — deliberately **no FMA**, see below),
+//! implemented for
+//!
+//! * plain scalars (`f64`/`f32`, width 1 — the portable fallback and
+//!   the bitwise oracle),
+//! * AVX2 `__m256d`/`__m256` (width 4/8) on x86-64,
+//! * AVX-512 `__m512d`/`__m512` (width 8/16) behind the off-by-default
+//!   `avx512` cargo feature (the intrinsics need a newer rustc than the
+//!   crate's MSRV),
+//! * NEON `float64x2_t`/`float32x4_t` (width 2/4) on aarch64.
+//!
+//! [`Isa`] names the dispatch targets. Which one actually runs is
+//! decided per engine at construction ([`Isa::pick`]: the
+//! `PATHSIG_SIMD` override, else best detected via
+//! `is_x86_feature_detected!`) and re-validated per kernel call
+//! ([`Isa::effective`]) so a hand-set `eng.simd` can never execute an
+//! instruction the CPU lacks — it silently downgrades along
+//! AVX-512 → AVX2 → scalar (NEON → scalar) instead.
+//!
+//! **Bitwise contract.** Every ISA path must produce bit-identical
+//! results to the scalar kernel at the same lane width (the repo's
+//! lane ≡ scalar differential-testing story extends to ISA ≡ scalar,
+//! see `tests/engine_properties.rs`). That is why the trait exposes
+//! only elementwise IEEE-754 mul/add — a fused multiply-add would
+//! change roundings — and why the kernel bodies in [`super::lanes`]
+//! keep the exact per-lane operation order of the original `[f64; L]`
+//! loops, merely regrouping lanes into width-`W` register chunks.
+//!
+//! [`Precision`] selects the element type of the *forward inference*
+//! path: `F32` halves state bytes and doubles effective SIMD lanes per
+//! register. Training (the backward pass), streaming and the tree
+//! reduction stay f64 — see DESIGN.md "Explicit SIMD & precision
+//! modes" for when f32 is safe.
+
+/// A SIMD instruction-set target for the lane kernels.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Isa {
+    /// Portable `[f64; L]` loop (autovectorized at best). Always
+    /// available; the bitwise oracle for every other path.
+    Scalar,
+    /// x86-64 AVX2: 256-bit registers, 4 × f64 / 8 × f32.
+    Avx2,
+    /// x86-64 AVX-512F: 512-bit registers, 8 × f64 / 16 × f32. Only
+    /// dispatchable when the crate is built with the `avx512` feature
+    /// (intrinsics post-date the MSRV) *and* the CPU reports avx512f.
+    Avx512,
+    /// aarch64 NEON: 128-bit registers, 2 × f64 / 4 × f32 (baseline on
+    /// every aarch64 target, so no runtime probe is needed).
+    Neon,
+}
+
+/// Element precision of the forward inference path. `F64` is the
+/// training default; `F32` doubles effective lane width (the f32 lane
+/// block is `2L` wide) at ~1e-7 relative element error — the engine's
+/// conformance bar is 1e-5 against f64 on the property matrix.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, Default)]
+pub enum Precision {
+    /// IEEE-754 binary64 everywhere (training default).
+    #[default]
+    F64,
+    /// binary32 forward/inference path; backward, streaming and the
+    /// time-parallel tree still run f64.
+    F32,
+}
+
+impl Precision {
+    /// Artifact/CLI token: `"f64"` / `"f32"`.
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::F64 => "f64",
+            Precision::F32 => "f32",
+        }
+    }
+}
+
+impl Isa {
+    /// Artifact/env token: `"scalar"`, `"avx2"`, `"avx512"`, `"neon"`.
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Avx2 => "avx2",
+            Isa::Avx512 => "avx512",
+            Isa::Neon => "neon",
+        }
+    }
+
+    /// f64 lanes per register on this ISA.
+    pub fn width_f64(self) -> usize {
+        match self {
+            Isa::Scalar => 1,
+            Isa::Avx2 => 4,
+            Isa::Avx512 => 8,
+            Isa::Neon => 2,
+        }
+    }
+
+    /// f32 lanes per register on this ISA.
+    pub fn width_f32(self) -> usize {
+        2 * self.width_f64()
+    }
+
+    /// Can this ISA actually execute here — right architecture, CPU
+    /// reports the feature, and (for AVX-512) the intrinsics were
+    /// compiled in? `Scalar` is always available.
+    pub fn available(self) -> bool {
+        match self {
+            Isa::Scalar => true,
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx2 => std::is_x86_feature_detected!("avx2"),
+            #[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+            Isa::Avx512 => std::is_x86_feature_detected!("avx512f"),
+            #[cfg(target_arch = "aarch64")]
+            Isa::Neon => true, // NEON is baseline on aarch64.
+            #[allow(unreachable_patterns)]
+            _ => false,
+        }
+    }
+
+    /// One step down the fallback chain (AVX-512 → AVX2 → scalar,
+    /// NEON → scalar).
+    fn downgrade(self) -> Isa {
+        match self {
+            Isa::Avx512 => Isa::Avx2,
+            _ => Isa::Scalar,
+        }
+    }
+
+    /// The ISA a kernel call will actually run: downgrade until the
+    /// target is available **and** its register width divides the lane
+    /// width (e.g. AVX-512 f64 needs `L % 8 == 0`, so `L = 4` runs the
+    /// AVX2 path). Kernels call this on every dispatch, so an
+    /// `eng.simd` set by hand — tests do — is safe on any CPU.
+    pub fn effective(self, lane_width: usize, f32_elems: bool) -> Isa {
+        let mut isa = self;
+        loop {
+            let w = if f32_elems { isa.width_f32() } else { isa.width_f64() };
+            if isa.available() && lane_width % w == 0 {
+                return isa;
+            }
+            isa = isa.downgrade();
+        }
+    }
+
+    /// Every ISA that can run here, best first (always ends with
+    /// `Scalar`). `supported[0]` is what `auto` resolves to; tests
+    /// iterate the whole list to pin ISA ≡ scalar per target.
+    pub fn supported() -> Vec<Isa> {
+        let mut v = Vec::with_capacity(4);
+        for isa in [Isa::Avx512, Isa::Avx2, Isa::Neon] {
+            if isa.available() {
+                v.push(isa);
+            }
+        }
+        v.push(Isa::Scalar);
+        v
+    }
+
+    /// Resolve the engine's dispatch target from a raw `PATHSIG_SIMD`
+    /// value: the best available ISA for unset/`auto`, the named ISA
+    /// when it is available, and the best available — plus a warning —
+    /// for unknown tokens or ISAs this machine/build cannot run.
+    pub(crate) fn pick(env: Option<&str>) -> (Isa, Option<String>) {
+        Isa::pick_from(env, &Isa::supported())
+    }
+
+    /// Pure core of [`Isa::pick`]: `available` is the best-first
+    /// candidate list (unit-testable with a fake list; `Scalar` must be
+    /// present).
+    pub(crate) fn pick_from(env: Option<&str>, available: &[Isa]) -> (Isa, Option<String>) {
+        debug_assert!(available.contains(&Isa::Scalar));
+        let best = available[0];
+        let Some(raw) = env else { return (best, None) };
+        let s = raw.trim();
+        if s.is_empty() || s.eq_ignore_ascii_case("auto") {
+            return (best, None);
+        }
+        let named = [Isa::Scalar, Isa::Avx2, Isa::Avx512, Isa::Neon]
+            .into_iter()
+            .find(|isa| s.eq_ignore_ascii_case(isa.name()));
+        match named {
+            Some(isa) if available.contains(&isa) => (isa, None),
+            Some(isa) => (
+                best,
+                Some(format!(
+                    "PATHSIG_SIMD={} is not available on this CPU/build; using {}",
+                    isa.name(),
+                    best.name()
+                )),
+            ),
+            None => (
+                best,
+                Some(format!(
+                    "ignoring invalid PATHSIG_SIMD={raw:?} \
+                     (supported: auto, scalar, avx2, avx512, neon); using {}",
+                    best.name()
+                )),
+            ),
+        }
+    }
+}
+
+/// Parse a raw `PATHSIG_PRECISION` value: `f64` (default) or `f32`,
+/// anything else warns and keeps the default. Pure — unit-testable
+/// without touching the process environment.
+pub(crate) fn precision_from(env: Option<&str>) -> (Precision, Option<String>) {
+    let Some(raw) = env else { return (Precision::F64, None) };
+    let s = raw.trim();
+    if s.is_empty() || s.eq_ignore_ascii_case("f64") || s == "64" {
+        (Precision::F64, None)
+    } else if s.eq_ignore_ascii_case("f32") || s == "32" {
+        (Precision::F32, None)
+    } else {
+        (
+            Precision::F64,
+            Some(format!(
+                "ignoring invalid PATHSIG_PRECISION={raw:?} (supported: f64, f32); using f64"
+            )),
+        )
+    }
+}
+
+/// Kernel element scalar: the two IEEE-754 precisions the engine
+/// computes in. `from_f64` is how the f32 path ingests the engine's
+/// f64 constant tables (`1/k`, `1/k!`) and path data.
+pub(crate) trait Elem: Copy + PartialEq + Send + Sync + 'static {
+    const ZERO: Self;
+    const ONE: Self;
+    fn from_f64(x: f64) -> Self;
+}
+
+impl Elem for f64 {
+    const ZERO: f64 = 0.0;
+    const ONE: f64 = 1.0;
+    #[inline(always)]
+    fn from_f64(x: f64) -> f64 {
+        x
+    }
+}
+
+impl Elem for f32 {
+    const ZERO: f32 = 0.0;
+    const ONE: f32 = 1.0;
+    #[inline(always)]
+    fn from_f64(x: f64) -> f32 {
+        x as f32
+    }
+}
+
+/// One register's worth of kernel lanes. Methods are `unsafe` because
+/// the x86 implementations are `core::arch` intrinsics that may only
+/// execute inside a matching `#[target_feature]` region (the
+/// monomorphic wrappers in [`super::lanes`]); `load`/`store`
+/// additionally require `WIDTH` elements readable/writable at `p`.
+/// No alignment requirement — all loads/stores are unaligned.
+///
+/// Only `mul` and `add` exist on purpose: the bitwise ISA ≡ scalar
+/// contract rules out FMA (different rounding) and any horizontal op.
+pub(crate) trait Vector: Copy {
+    type E: Elem;
+    const WIDTH: usize;
+    unsafe fn load(p: *const Self::E) -> Self;
+    unsafe fn store(self, p: *mut Self::E);
+    unsafe fn splat(x: Self::E) -> Self;
+    unsafe fn mul(self, o: Self) -> Self;
+    unsafe fn add(self, o: Self) -> Self;
+}
+
+/// Width-1 "vector": the scalar fallback, and the reference semantics
+/// every wider implementation must reproduce bit-for-bit.
+#[derive(Clone, Copy)]
+pub(crate) struct Scalar1<E>(E);
+
+macro_rules! impl_scalar1 {
+    ($e:ty) => {
+        impl Vector for Scalar1<$e> {
+            type E = $e;
+            const WIDTH: usize = 1;
+            #[inline(always)]
+            unsafe fn load(p: *const $e) -> Self {
+                Scalar1(*p)
+            }
+            #[inline(always)]
+            unsafe fn store(self, p: *mut $e) {
+                *p = self.0;
+            }
+            #[inline(always)]
+            unsafe fn splat(x: $e) -> Self {
+                Scalar1(x)
+            }
+            #[inline(always)]
+            unsafe fn mul(self, o: Self) -> Self {
+                Scalar1(self.0 * o.0)
+            }
+            #[inline(always)]
+            unsafe fn add(self, o: Self) -> Self {
+                Scalar1(self.0 + o.0)
+            }
+        }
+    };
+}
+impl_scalar1!(f64);
+impl_scalar1!(f32);
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::Vector;
+    use core::arch::x86_64::*;
+
+    /// AVX2 4 × f64 (the mul/add used are AVX ops; detection keys on
+    /// avx2, which implies avx).
+    #[derive(Clone, Copy)]
+    pub(crate) struct F64x4(__m256d);
+
+    impl Vector for F64x4 {
+        type E = f64;
+        const WIDTH: usize = 4;
+        #[inline(always)]
+        unsafe fn load(p: *const f64) -> Self {
+            F64x4(_mm256_loadu_pd(p))
+        }
+        #[inline(always)]
+        unsafe fn store(self, p: *mut f64) {
+            _mm256_storeu_pd(p, self.0)
+        }
+        #[inline(always)]
+        unsafe fn splat(x: f64) -> Self {
+            F64x4(_mm256_set1_pd(x))
+        }
+        #[inline(always)]
+        unsafe fn mul(self, o: Self) -> Self {
+            F64x4(_mm256_mul_pd(self.0, o.0))
+        }
+        #[inline(always)]
+        unsafe fn add(self, o: Self) -> Self {
+            F64x4(_mm256_add_pd(self.0, o.0))
+        }
+    }
+
+    /// AVX2 8 × f32.
+    #[derive(Clone, Copy)]
+    pub(crate) struct F32x8(__m256);
+
+    impl Vector for F32x8 {
+        type E = f32;
+        const WIDTH: usize = 8;
+        #[inline(always)]
+        unsafe fn load(p: *const f32) -> Self {
+            F32x8(_mm256_loadu_ps(p))
+        }
+        #[inline(always)]
+        unsafe fn store(self, p: *mut f32) {
+            _mm256_storeu_ps(p, self.0)
+        }
+        #[inline(always)]
+        unsafe fn splat(x: f32) -> Self {
+            F32x8(_mm256_set1_ps(x))
+        }
+        #[inline(always)]
+        unsafe fn mul(self, o: Self) -> Self {
+            F32x8(_mm256_mul_ps(self.0, o.0))
+        }
+        #[inline(always)]
+        unsafe fn add(self, o: Self) -> Self {
+            F32x8(_mm256_add_ps(self.0, o.0))
+        }
+    }
+
+    /// AVX-512F 8 × f64 — gated: the 512-bit intrinsics stabilized
+    /// after the crate's MSRV, so they are compiled only under
+    /// `--features avx512`.
+    #[cfg(feature = "avx512")]
+    #[derive(Clone, Copy)]
+    pub(crate) struct F64x8(__m512d);
+
+    #[cfg(feature = "avx512")]
+    impl Vector for F64x8 {
+        type E = f64;
+        const WIDTH: usize = 8;
+        #[inline(always)]
+        unsafe fn load(p: *const f64) -> Self {
+            F64x8(_mm512_loadu_pd(p))
+        }
+        #[inline(always)]
+        unsafe fn store(self, p: *mut f64) {
+            _mm512_storeu_pd(p, self.0)
+        }
+        #[inline(always)]
+        unsafe fn splat(x: f64) -> Self {
+            F64x8(_mm512_set1_pd(x))
+        }
+        #[inline(always)]
+        unsafe fn mul(self, o: Self) -> Self {
+            F64x8(_mm512_mul_pd(self.0, o.0))
+        }
+        #[inline(always)]
+        unsafe fn add(self, o: Self) -> Self {
+            F64x8(_mm512_add_pd(self.0, o.0))
+        }
+    }
+
+    /// AVX-512F 16 × f32 (same gate as [`F64x8`]).
+    #[cfg(feature = "avx512")]
+    #[derive(Clone, Copy)]
+    pub(crate) struct F32x16(__m512);
+
+    #[cfg(feature = "avx512")]
+    impl Vector for F32x16 {
+        type E = f32;
+        const WIDTH: usize = 16;
+        #[inline(always)]
+        unsafe fn load(p: *const f32) -> Self {
+            F32x16(_mm512_loadu_ps(p))
+        }
+        #[inline(always)]
+        unsafe fn store(self, p: *mut f32) {
+            _mm512_storeu_ps(p, self.0)
+        }
+        #[inline(always)]
+        unsafe fn splat(x: f32) -> Self {
+            F32x16(_mm512_set1_ps(x))
+        }
+        #[inline(always)]
+        unsafe fn mul(self, o: Self) -> Self {
+            F32x16(_mm512_mul_ps(self.0, o.0))
+        }
+        #[inline(always)]
+        unsafe fn add(self, o: Self) -> Self {
+            F32x16(_mm512_add_ps(self.0, o.0))
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+pub(crate) use x86::{F32x8, F64x4};
+#[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+pub(crate) use x86::{F32x16, F64x8};
+
+#[cfg(target_arch = "aarch64")]
+mod arm {
+    use super::Vector;
+    use core::arch::aarch64::*;
+
+    /// NEON 2 × f64 (baseline on aarch64 — no feature gate needed).
+    #[derive(Clone, Copy)]
+    pub(crate) struct F64x2(float64x2_t);
+
+    impl Vector for F64x2 {
+        type E = f64;
+        const WIDTH: usize = 2;
+        #[inline(always)]
+        unsafe fn load(p: *const f64) -> Self {
+            F64x2(vld1q_f64(p))
+        }
+        #[inline(always)]
+        unsafe fn store(self, p: *mut f64) {
+            vst1q_f64(p, self.0)
+        }
+        #[inline(always)]
+        unsafe fn splat(x: f64) -> Self {
+            F64x2(vdupq_n_f64(x))
+        }
+        #[inline(always)]
+        unsafe fn mul(self, o: Self) -> Self {
+            F64x2(vmulq_f64(self.0, o.0))
+        }
+        #[inline(always)]
+        unsafe fn add(self, o: Self) -> Self {
+            F64x2(vaddq_f64(self.0, o.0))
+        }
+    }
+
+    /// NEON 4 × f32.
+    #[derive(Clone, Copy)]
+    pub(crate) struct F32x4(float32x4_t);
+
+    impl Vector for F32x4 {
+        type E = f32;
+        const WIDTH: usize = 4;
+        #[inline(always)]
+        unsafe fn load(p: *const f32) -> Self {
+            F32x4(vld1q_f32(p))
+        }
+        #[inline(always)]
+        unsafe fn store(self, p: *mut f32) {
+            vst1q_f32(p, self.0)
+        }
+        #[inline(always)]
+        unsafe fn splat(x: f32) -> Self {
+            F32x4(vdupq_n_f32(x))
+        }
+        #[inline(always)]
+        unsafe fn mul(self, o: Self) -> Self {
+            F32x4(vmulq_f32(self.0, o.0))
+        }
+        #[inline(always)]
+        unsafe fn add(self, o: Self) -> Self {
+            F32x4(vaddq_f32(self.0, o.0))
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+pub(crate) use arm::{F32x4, F64x2};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn supported_is_best_first_and_ends_scalar() {
+        let sup = Isa::supported();
+        assert_eq!(*sup.last().unwrap(), Isa::Scalar);
+        assert!(sup.iter().all(|isa| isa.available()));
+        // Strictly decreasing register width ⇒ no duplicates, best first.
+        for pair in sup.windows(2) {
+            assert!(pair[0].width_f64() > pair[1].width_f64(), "{sup:?}");
+        }
+    }
+
+    #[test]
+    fn pick_auto_and_named() {
+        let avail = [Isa::Avx2, Isa::Scalar];
+        for auto in [None, Some("auto"), Some(" AUTO "), Some("")] {
+            assert_eq!(Isa::pick_from(auto, &avail), (Isa::Avx2, None));
+        }
+        assert_eq!(Isa::pick_from(Some("scalar"), &avail), (Isa::Scalar, None));
+        assert_eq!(Isa::pick_from(Some("AVX2"), &avail), (Isa::Avx2, None));
+    }
+
+    #[test]
+    fn pick_unavailable_isa_warns_and_falls_back() {
+        let avail = [Isa::Avx2, Isa::Scalar];
+        let (isa, warn) = Isa::pick_from(Some("avx512"), &avail);
+        assert_eq!(isa, Isa::Avx2);
+        let msg = warn.expect("unavailable ISA must warn");
+        assert!(msg.contains("avx512") && msg.contains("avx2"), "{msg}");
+        let (isa, warn) = Isa::pick_from(Some("neon"), &[Isa::Scalar]);
+        assert_eq!(isa, Isa::Scalar);
+        assert!(warn.unwrap().contains("neon"));
+    }
+
+    #[test]
+    fn pick_invalid_token_warns_and_falls_back() {
+        let avail = [Isa::Scalar];
+        for bad in ["sse9", "42", "avx2 fast", "scalar,avx2"] {
+            let (isa, warn) = Isa::pick_from(Some(bad), &avail);
+            assert_eq!(isa, Isa::Scalar, "{bad}");
+            let msg = warn.expect("invalid token must warn");
+            assert!(msg.contains("invalid PATHSIG_SIMD") && msg.contains(bad), "{msg}");
+        }
+    }
+
+    #[test]
+    fn pick_resolves_against_this_machine() {
+        // Whatever the hardware, `auto` resolves to something available
+        // and warning-free, and `scalar` is always honoured.
+        let (isa, warn) = Isa::pick(None);
+        assert!(isa.available() && warn.is_none());
+        assert_eq!(Isa::pick(Some("scalar")), (Isa::Scalar, None));
+    }
+
+    #[test]
+    fn effective_downgrades_to_runnable() {
+        // Scalar is a fixed point at every width/precision.
+        for lw in [1usize, 4, 8, 16, 32] {
+            assert_eq!(Isa::Scalar.effective(lw, false), Isa::Scalar);
+            assert_eq!(Isa::Scalar.effective(lw, true), Isa::Scalar);
+        }
+        // Whatever is requested, the result is available and divides.
+        for req in [Isa::Scalar, Isa::Avx2, Isa::Avx512, Isa::Neon] {
+            for lw in [4usize, 8, 16, 32] {
+                for f32e in [false, true] {
+                    let e = req.effective(lw, f32e);
+                    let w = if f32e { e.width_f32() } else { e.width_f64() };
+                    assert!(e.available(), "{req:?}@{lw} → {e:?} unavailable");
+                    assert_eq!(lw % w, 0, "{req:?}@{lw} → {e:?} width {w}");
+                }
+            }
+        }
+        // A supported vector ISA is a fixed point when its width divides.
+        for &isa in &Isa::supported() {
+            assert_eq!(isa.effective(32, false), isa);
+        }
+    }
+
+    #[test]
+    fn widths_and_names() {
+        assert_eq!(Isa::Scalar.width_f64(), 1);
+        assert_eq!(Isa::Avx2.width_f64(), 4);
+        assert_eq!(Isa::Avx512.width_f64(), 8);
+        assert_eq!(Isa::Neon.width_f64(), 2);
+        for isa in [Isa::Scalar, Isa::Avx2, Isa::Avx512, Isa::Neon] {
+            assert_eq!(isa.width_f32(), 2 * isa.width_f64());
+        }
+        assert_eq!(Isa::Avx512.name(), "avx512");
+        assert_eq!(Precision::F32.name(), "f32");
+    }
+
+    #[test]
+    fn precision_parsing() {
+        assert_eq!(precision_from(None), (Precision::F64, None));
+        for ok64 in ["f64", "F64", " 64 ", ""] {
+            assert_eq!(precision_from(Some(ok64)), (Precision::F64, None));
+        }
+        for ok32 in ["f32", "F32", " 32 "] {
+            assert_eq!(precision_from(Some(ok32)), (Precision::F32, None));
+        }
+        let (p, warn) = precision_from(Some("half"));
+        assert_eq!(p, Precision::F64);
+        assert!(warn.unwrap().contains("PATHSIG_PRECISION"));
+    }
+}

@@ -55,7 +55,7 @@
 //! sequential kernels to ~1e-12 relative, **not bitwise** — asserted by
 //! the conformance matrix in `tests/tree_properties.rs`. All scratch is
 //! pooled on the engine, so warm calls perform zero heap allocations
-//! (counted in `benches/fig4_longpath.rs`).
+//! (counted in `benches/fig8_longpath.rs`).
 
 use super::forward::forward_sweep_range;
 use super::lanes::{backward_step_lanes, chen_update_lanes, lane_dispatch};

@@ -1,0 +1,47 @@
+//! One-time stderr warnings for rejected environment-knob values.
+//!
+//! Every `PATHSIG_*` knob is parsed by a *pure* checked function
+//! (`lane_width_from`, `threads_from_checked`, `chunk_policy_from_checked`,
+//! `Isa::pick_from`, `precision_from` — each unit-tested per rejection
+//! path without touching the process environment, since `set_var` races
+//! parallel tests). A rejected value used to fall back to the default
+//! silently; now the parser returns a message naming the rejected value
+//! and the default used, and the engine funnels it here. Warnings are
+//! deduplicated **per knob**, not per message: engines are constructed
+//! on hot serving paths (one per word-table cache miss), and a
+//! misconfigured environment should say so once, not once per engine.
+
+use std::collections::BTreeSet;
+use std::sync::Mutex;
+
+/// Knobs that have already warned (process-wide).
+static WARNED: Mutex<BTreeSet<&'static str>> = Mutex::new(BTreeSet::new());
+
+/// Emit `msg` on stderr the first time `knob` warns in this process;
+/// subsequent warnings for the same knob are dropped. Returns whether
+/// the message was printed (the unit tests' observation point).
+pub fn warn_knob_once(knob: &'static str, msg: &str) -> bool {
+    let mut warned = WARNED.lock().unwrap_or_else(|e| e.into_inner());
+    if warned.insert(knob) {
+        eprintln!("pathsig: {msg}");
+        true
+    } else {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warns_once_per_knob() {
+        // Use test-local knob names: the set is process-global and
+        // other tests may legitimately construct engines under a
+        // misconfigured environment.
+        assert!(warn_knob_once("TEST_KNOB_A", "first"));
+        assert!(!warn_knob_once("TEST_KNOB_A", "second"));
+        assert!(warn_knob_once("TEST_KNOB_B", "other knob still warns"));
+        assert!(!warn_knob_once("TEST_KNOB_B", "but only once"));
+    }
+}

@@ -8,6 +8,7 @@
 //! (serde/rayon/rand/criterion/proptest/clap/rustfft) is implemented
 //! here.
 
+pub mod envknob;
 pub mod rng;
 pub mod json;
 pub mod fft;

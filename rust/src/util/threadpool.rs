@@ -147,21 +147,53 @@ impl Drop for ThreadPool {
 
 /// Default worker count: the `PATHSIG_THREADS` environment variable if
 /// set to a positive integer, else `available_parallelism` capped at 16
-/// (the paper's CPU workloads saturate well before that).
+/// (the paper's CPU workloads saturate well before that). A set-but-
+/// rejected value warns once on stderr instead of silently defaulting.
 pub fn default_threads() -> usize {
-    threads_from(std::env::var("PATHSIG_THREADS").ok().as_deref())
+    let (n, warn) = threads_from_checked(std::env::var("PATHSIG_THREADS").ok().as_deref());
+    if let Some(msg) = warn {
+        crate::util::envknob::warn_knob_once("PATHSIG_THREADS", &msg);
+    }
+    n
+}
+
+/// The machine fallback `PATHSIG_THREADS` resolves to when unset or
+/// rejected: `available_parallelism` capped at 16.
+fn machine_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(16)
 }
 
 /// Pure core of [`default_threads`] (unit-testable without touching the
-/// process environment): `env` is the raw `PATHSIG_THREADS` value.
-fn threads_from(env: Option<&str>) -> usize {
-    match env.and_then(|v| v.trim().parse::<usize>().ok()) {
-        Some(n) if n >= 1 => n,
-        _ => std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(4)
-            .min(16),
+/// process environment): `env` is the raw `PATHSIG_THREADS` value; a
+/// rejected value (zero, unparsable) comes back with the warning
+/// message [`default_threads`] prints.
+fn threads_from_checked(env: Option<&str>) -> (usize, Option<String>) {
+    let Some(raw) = env else {
+        return (machine_threads(), None);
+    };
+    match raw.trim().parse::<usize>() {
+        Ok(n) if n >= 1 => (n, None),
+        _ => {
+            let fallback = machine_threads();
+            (
+                fallback,
+                Some(format!(
+                    "ignoring invalid PATHSIG_THREADS={raw:?} \
+                     (expected a positive integer); using {fallback}"
+                )),
+            )
+        }
     }
+}
+
+/// [`threads_from_checked`] without the warning channel (legacy shim
+/// for the parsing tests).
+#[cfg(test)]
+fn threads_from(env: Option<&str>) -> usize {
+    threads_from_checked(env).0
 }
 
 /// Run `f(i, ctx)` for `i in 0..n` with one scoped worker thread per
@@ -481,5 +513,23 @@ mod tests {
         // Zero and garbage fall back to the machine default.
         assert_eq!(threads_from(Some("0")), fallback);
         assert_eq!(threads_from(Some("many")), fallback);
+    }
+
+    #[test]
+    fn threads_rejections_warn_with_value_and_default() {
+        // Valid values and unset are warning-free…
+        assert_eq!(threads_from_checked(Some("3")), (3, None));
+        assert!(threads_from_checked(None).1.is_none());
+        // …every rejection path names the rejected value and the
+        // default actually used.
+        for bad in ["0", "many", "-2", "1.5", ""] {
+            let (n, warn) = threads_from_checked(Some(bad));
+            assert_eq!(n, threads_from(None), "{bad}");
+            let msg = warn.expect("rejected PATHSIG_THREADS must warn");
+            assert!(
+                msg.contains("PATHSIG_THREADS") && msg.contains(bad) && msg.contains(&n.to_string()),
+                "{msg}"
+            );
+        }
     }
 }

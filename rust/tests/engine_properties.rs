@@ -3,11 +3,13 @@
 //! randomized inputs via the crate's property-testing mini-framework
 //! (seeded, replayable with `PATHSIG_PROPTEST_SEED`).
 
+use std::sync::Arc;
+
 use pathsig::logsig::LogSigEngine;
 use pathsig::sig::{
     sig_backward, sig_backward_batch, sig_backward_batch_scalar, sig_forward_state, signature,
     signature_and_backward_batch, signature_batch, signature_batch_scalar, signature_stream,
-    window_signature, SigEngine, Window,
+    window_signature, ChunkPolicy, Isa, MultiStream, Precision, SigEngine, StreamTable, Window,
 };
 use pathsig::tensor::{tensor_log_series, TruncTensor};
 use pathsig::util::proptest::{assert_allclose, property, Gen};
@@ -468,6 +470,209 @@ fn fused_forward_backward_equals_separate() {
         let grad_want = sig_backward_batch(&eng, &paths, &grads, b);
         assert_allclose(&sig, &sig_want, 0.0, 0.0, "fused signature rows");
         assert_allclose(&grad, &grad_want, 0.0, 0.0, "fused gradient rows");
+    });
+}
+
+/// Bitwise equality between two f64 result buffers — the ISA-dispatch
+/// contract (ISSUE-9) is exact, not approximate, so `to_bits` rather
+/// than a tolerance.
+fn assert_bits_eq(got: &[f64], want: &[f64], ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: length mismatch");
+    for (k, (a, b)) in got.iter().zip(want).enumerate() {
+        assert!(
+            a.to_bits() == b.to_bits(),
+            "{ctx}: bitwise mismatch at {k}: {a:e} vs {b:e}"
+        );
+    }
+}
+
+#[test]
+fn f32_forward_tracks_f64_to_single_precision() {
+    // ISSUE-9 satellite: `Precision::F32` must stay within 1e-5 of the
+    // f64 engine across truncated, projected AND anisotropic word sets
+    // and EVERY `B mod L` residue of the doubled f32 lane width
+    // (padded-tail blocks included), plus a sub-lane batch.
+    property("f32 ≡ f64 @1e-5", 10, |g| {
+        let d = g.usize_in(2, 4);
+        let depth = g.usize_in(1, 4);
+        let flavor = g.usize_in(0, 2);
+        let words = random_word_set(g, d, depth, flavor);
+        let mut eng = SigEngine::with_threads(WordTable::build(d, &words), g.usize_in(1, 3));
+        eng.lane_width = *g.choose(&[4usize, 8, 16]);
+        let mut eng32 = eng.clone();
+        eng32.precision = Precision::F32;
+        let lw32 = eng32.lanes_f32();
+        let m = g.usize_in(1, 6);
+        let ctx = |b: usize| format!("f32≡f64 d={d} depth={depth} B={b} M={m} flavor={flavor}");
+        for r in 0..lw32 {
+            // B = L32 + r: full block plus a tail of exactly r lanes.
+            let b = lw32 + r;
+            let mut paths = Vec::new();
+            for _ in 0..b {
+                paths.extend(g.path(m, d, 0.5));
+            }
+            let got = signature_batch(&eng32, &paths, b);
+            let want = signature_batch(&eng, &paths, b);
+            assert_allclose(&got, &want, 1e-5, 1e-5, &ctx(b));
+        }
+        // Sub-lane batch: padded lanes stay inert, same driver.
+        let b = g.usize_in(1, lw32 - 1);
+        let mut paths = Vec::new();
+        for _ in 0..b {
+            paths.extend(g.path(m, d, 0.5));
+        }
+        let got = signature_batch(&eng32, &paths, b);
+        let want = signature_batch(&eng, &paths, b);
+        assert_allclose(&got, &want, 1e-5, 1e-5, &ctx(b));
+    });
+}
+
+#[test]
+fn every_isa_is_bitwise_equal_to_scalar_forward_and_backward() {
+    // ISSUE-9 tentpole contract: at a fixed lane width, every runnable
+    // ISA path (AVX2/AVX-512/NEON) must be BITWISE equal to the scalar
+    // chunk loop — same IEEE ops in the same order, no FMA — on the
+    // batch forward (f64 and f32) and the batch backward.
+    property("ISA ≡ scalar (bitwise)", 12, |g| {
+        let d = g.usize_in(2, 4);
+        let depth = g.usize_in(1, 4);
+        let flavor = g.usize_in(0, 2);
+        let words = random_word_set(g, d, depth, flavor);
+        let mut base = SigEngine::with_threads(WordTable::build(d, &words), g.usize_in(1, 3));
+        base.lane_width = *g.choose(&[4usize, 8, 16, 32]);
+        base.simd = Isa::Scalar;
+        let odim = base.out_dim();
+        let b = g.usize_in(1, 2 * base.lanes() + 3);
+        let m = g.usize_in(1, 8);
+        let mut paths = Vec::new();
+        let mut grads = Vec::new();
+        for _ in 0..b {
+            paths.extend(g.path(m, d, 0.5));
+            grads.extend(g.gaussian_vec(odim));
+        }
+        let sig_scalar = signature_batch(&base, &paths, b);
+        let grad_scalar = sig_backward_batch(&base, &paths, &grads, b);
+        let mut base32 = base.clone();
+        base32.precision = Precision::F32;
+        let sig32_scalar = signature_batch(&base32, &paths, b);
+        for isa in Isa::supported() {
+            let mut eng = base.clone();
+            eng.simd = isa;
+            let ctx = |what: &str| {
+                format!(
+                    "{what} {} d={d} depth={depth} B={b} M={m} L={} flavor={flavor}",
+                    isa.name(),
+                    eng.lanes()
+                )
+            };
+            assert_bits_eq(&signature_batch(&eng, &paths, b), &sig_scalar, &ctx("fwd"));
+            assert_bits_eq(
+                &sig_backward_batch(&eng, &paths, &grads, b),
+                &grad_scalar,
+                &ctx("bwd"),
+            );
+            let mut eng32 = eng.clone();
+            eng32.precision = Precision::F32;
+            assert_bits_eq(
+                &signature_batch(&eng32, &paths, b),
+                &sig32_scalar,
+                &ctx("fwd-f32"),
+            );
+        }
+    });
+}
+
+#[test]
+fn every_isa_is_bitwise_equal_to_scalar_on_the_tree_path() {
+    // Same bitwise contract on the time-parallel tree driver: a fixed
+    // chunk policy plus ≥ MIN_TIME_STEPS increments and a sub-lane
+    // batch forces `TimeMode::TimeParallel` identically on both
+    // engines, so only the ISA differs between the two runs.
+    property("ISA ≡ scalar (tree, bitwise)", 6, |g| {
+        let d = g.usize_in(2, 3);
+        let depth = g.usize_in(1, 3);
+        let flavor = g.usize_in(0, 2);
+        let words = random_word_set(g, d, depth, flavor);
+        let mut base = SigEngine::with_threads(WordTable::build(d, &words), g.usize_in(1, 3));
+        base.lane_width = *g.choose(&[8usize, 16]);
+        base.time_chunk = ChunkPolicy::Fixed(g.usize_in(8, 24));
+        base.simd = Isa::Scalar;
+        let odim = base.out_dim();
+        let b = g.usize_in(1, 3); // B < L so the tree path engages
+        let m = g.usize_in(64, 96); // ≥ MIN_TIME_STEPS increments
+        let mut paths = Vec::new();
+        let mut grads = Vec::new();
+        for _ in 0..b {
+            paths.extend(g.path(m, d, 0.5));
+            grads.extend(g.gaussian_vec(odim));
+        }
+        let sig_scalar = signature_batch(&base, &paths, b);
+        let grad_scalar = sig_backward_batch(&base, &paths, &grads, b);
+        for isa in Isa::supported() {
+            let mut eng = base.clone();
+            eng.simd = isa;
+            let ctx = format!(
+                "tree {} d={d} depth={depth} B={b} M={m} chunk={:?}",
+                isa.name(),
+                eng.time_chunk
+            );
+            assert_bits_eq(
+                &signature_batch(&eng, &paths, b),
+                &sig_scalar,
+                &format!("fwd {ctx}"),
+            );
+            assert_bits_eq(
+                &sig_backward_batch(&eng, &paths, &grads, b),
+                &grad_scalar,
+                &format!("bwd {ctx}"),
+            );
+        }
+    });
+}
+
+#[test]
+fn every_isa_is_bitwise_equal_to_scalar_on_the_stream_path() {
+    // Bitwise contract on the streaming engine: `MultiStream` drives
+    // `chen_update_lanes` / `lmul_update_lanes` / `combine_lanes`
+    // through the table's embedded engine, so setting `eng.simd` on
+    // the `StreamTable` before construction flips its ISA.
+    property("ISA ≡ scalar (stream, bitwise)", 8, |g| {
+        let d = g.usize_in(2, 3);
+        let depth = g.usize_in(1, 3);
+        let flavor = g.usize_in(0, 2);
+        let words = random_word_set(g, d, depth, flavor);
+        let lane_width = *g.choose(&[4usize, 8, 16]);
+        let window = g.usize_in(2, 5);
+        let n_streams = g.usize_in(1, 2 * lane_width + 3);
+        let steps = window + g.usize_in(2, 8); // past the window: refold runs
+        let samples: Vec<Vec<f64>> = (0..steps)
+            .map(|_| g.gaussian_vec(n_streams * d))
+            .collect();
+        let run = |isa: Isa| -> (Vec<f64>, Vec<f64>) {
+            let mut tbl = StreamTable::new(d, &words);
+            tbl.eng.lane_width = lane_width;
+            tbl.eng.simd = isa;
+            let mut ms = MultiStream::new(Arc::new(tbl), n_streams, window);
+            for s in &samples {
+                ms.push_all(s);
+            }
+            let odim = ms.out_dim();
+            let mut win = vec![0.0; n_streams * odim];
+            let mut sig = vec![0.0; n_streams * odim];
+            ms.window_into(&mut win);
+            ms.signature_into(&mut sig);
+            (win, sig)
+        };
+        let (win_scalar, sig_scalar) = run(Isa::Scalar);
+        for isa in Isa::supported() {
+            let (win, sig) = run(isa);
+            let ctx = format!(
+                "stream {} d={d} depth={depth} m={n_streams} W={window} T={steps}",
+                isa.name()
+            );
+            assert_bits_eq(&win, &win_scalar, &format!("window {ctx}"));
+            assert_bits_eq(&sig, &sig_scalar, &format!("running {ctx}"));
+        }
     });
 }
 

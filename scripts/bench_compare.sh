@@ -6,7 +6,13 @@
 # fails on a >15% regression in any headline metric:
 #
 #   BENCH_fig1.json    lane_vs_scalar.speedup        (forward kernel)
+#                      simd_rows[*]                  (per-ISA / per-precision:
+#                      speedup gated like-for-like — keys embed (kernel,
+#                      isa, precision), so a row measured on different
+#                      hardware simply has no baseline key to compare
+#                      against — and warm allocs must be exactly 0)
 #   BENCH_table1.json  lane_vs_scalar.speedup        (backward kernel)
+#                      simd_rows[*]                  (per-ISA backward rows)
 #   BENCH_stream.json  stream_vs_recompute.speedup   (O(1) window push)
 #   BENCH_tree.json    tree_vs_sequential.speedup,
 #                      backward.speedup              (time-parallel tree)
@@ -50,8 +56,17 @@ fi
 baseline_dir=$(mktemp -d)
 trap 'rm -rf "$baseline_dir"' EXIT
 
+# The artifact list comes from the canonical bench manifest — the same
+# file `make bench-json` / `make bench-smoke` and CI iterate over.
+manifest="scripts/bench_manifest.txt"
+artifacts=$(grep -Ev '^[[:space:]]*([#]|$)' "$manifest" | awk '{print $2}')
+if [[ -z "$artifacts" ]]; then
+    echo "error: no artifacts listed in $manifest" >&2
+    exit 2
+fi
+
 have_baseline=0
-for f in BENCH_fig1.json BENCH_table1.json BENCH_stream.json BENCH_tree.json BENCH_coord.json BENCH_durability.json BENCH_kernels.json; do
+for f in $artifacts; do
     if git show "$ref:$f" > "$baseline_dir/$f" 2>/dev/null; then
         have_baseline=1
     else
@@ -60,11 +75,13 @@ for f in BENCH_fig1.json BENCH_table1.json BENCH_stream.json BENCH_tree.json BEN
     fi
 done
 
-SMOKE="$smoke" BASELINE_DIR="$baseline_dir" HAVE_BASELINE="$have_baseline" python3 - <<'EOF'
+SMOKE="$smoke" BASELINE_DIR="$baseline_dir" HAVE_BASELINE="$have_baseline" \
+ARTIFACTS="$artifacts" python3 - <<'EOF'
 import json, os, sys
 
 smoke = os.environ["SMOKE"] == "1"
 bdir = os.environ["BASELINE_DIR"]
+artifacts = os.environ["ARTIFACTS"].split()
 TOL = 0.15  # >15% regression fails
 failures, checked = [], 0
 
@@ -83,12 +100,27 @@ def headline(doc, name):
     if doc is None:
         return []
     out = []
+
+    def simd_rows(prefix):
+        # Per-ISA / per-precision kernel rows. The key embeds
+        # (kernel, isa, precision), so the 15% gate only ever compares
+        # like ISA against like ISA: a row whose ISA the baseline
+        # machine lacked is simply a new key (`k not in base`) and is
+        # skipped. Warm allocs per row must be exactly 0, on every ISA
+        # and at both precisions.
+        for row in doc.get("simd_rows", []):
+            key = f"{prefix}.simd.{row['kernel']}.{row['isa']}.{row['precision']}"
+            out.append((f"{key}.speedup_vs_scalar_f64", row["speedup_vs_scalar_f64"], "hi"))
+            out.append((f"{key}.allocs_per_call", row["allocs_per_call"], "zero"))
+
     if name == "BENCH_fig1.json":
         out.append(("fig1.lane_vs_scalar.speedup", doc["lane_vs_scalar"]["speedup"], "hi"))
         out.append(("fig1.steady_state_allocs_per_call", doc["steady_state_allocs_per_call"], "alloc"))
+        simd_rows("fig1")
     elif name == "BENCH_table1.json":
         out.append(("table1.lane_vs_scalar.speedup", doc["lane_vs_scalar"]["speedup"], "hi"))
         out.append(("table1.steady_state_allocs_per_call", doc["steady_state_allocs_per_call"], "alloc"))
+        simd_rows("table1")
     elif name == "BENCH_stream.json":
         out.append(("stream.stream_vs_recompute.speedup", doc["stream_vs_recompute"]["speedup"], "hi"))
         out.append(("stream.steady_state_allocs_per_push", doc["steady_state_allocs_per_push"], "alloc"))
@@ -118,9 +150,7 @@ def headline(doc, name):
     return out
 
 
-for name in ("BENCH_fig1.json", "BENCH_table1.json", "BENCH_stream.json",
-             "BENCH_tree.json", "BENCH_coord.json", "BENCH_durability.json",
-             "BENCH_kernels.json"):
+for name in artifacts:
     cur_doc = load(name)
     base_doc = load(os.path.join(bdir, name))
     cur = dict((k, (v, kind)) for k, v, kind in headline(cur_doc, name))
