@@ -44,6 +44,7 @@ fn main() {
                 max_wait: std::time::Duration::from_millis(2),
                 ..BatcherConfig::default()
             },
+            ..ServerConfig::default()
         },
     )
     .expect("bind");

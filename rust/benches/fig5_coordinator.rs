@@ -134,6 +134,7 @@ fn run_case(shards: usize, sessions: usize, rounds: usize, workers: usize) -> Js
                 max_wait: Duration::from_millis(1),
                 ..BatcherConfig::default()
             },
+            ..ServerConfig::default()
         },
     )
     .expect("bind bench server");

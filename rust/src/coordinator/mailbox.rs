@@ -88,6 +88,14 @@ impl<T> Mailbox<T> {
     /// Enqueue without blocking. `Err(Full)` when at capacity (the
     /// caller load-sheds), `Err(Closed)` after [`Mailbox::close`].
     pub fn try_send(&self, msg: T) -> Result<(), SendError<T>> {
+        // Chaos hook (no-op without the `failpoints` feature):
+        // `mailbox.send=delayNms@…` stalls the producer before the
+        // queue lock (modelling a descheduled connection thread), and
+        // `=err@…` maps to a load-shed `Full` — the only failure this
+        // API can express, exercising the caller's retry-after path.
+        if crate::util::failpoint::check("mailbox.send").is_some() {
+            return Err(SendError::Full(msg));
+        }
         let mut q = self.inner.queue.lock().unwrap();
         if q.closed {
             return Err(SendError::Closed(msg));

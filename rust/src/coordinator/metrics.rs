@@ -53,6 +53,22 @@ pub struct Metrics {
     /// Recovered sessions dropped at re-admission because they
     /// exceeded the session-count or per-session float budget.
     pub recovery_dropped: AtomicU64,
+    /// Ops rejected (or evictions deferred) by strict durability
+    /// because their journal record could not be made durable.
+    pub journal_strict_rejects: AtomicU64,
+    /// Sticky health bit (0/1): set when a journal append failed in
+    /// degraded mode — acks are being served from memory without a
+    /// durable record. Surfaced in v1 `stats` and the v2 `health`
+    /// verb; never clears while the process lives.
+    pub degraded: AtomicU64,
+    /// Connections rejected at accept because `--max-conns` live
+    /// connections already existed.
+    pub conns_rejected: AtomicU64,
+    /// Connections closed because a read/write hit the per-connection
+    /// timeout or a frame overran its slow-frame budget.
+    pub conn_timeouts: AtomicU64,
+    /// Connections currently being served (gauge, not a counter).
+    pub conns_active: AtomicU64,
     /// End-to-end per-request latency.
     pub request_latency: LatencyHistogram,
     /// Per-batch execution latency.
@@ -170,6 +186,26 @@ impl Metrics {
             (
                 "recovery_dropped",
                 Json::Num(self.recovery_dropped.load(Relaxed) as f64),
+            ),
+            (
+                "journal_strict_rejects",
+                Json::Num(self.journal_strict_rejects.load(Relaxed) as f64),
+            ),
+            (
+                "degraded",
+                Json::Bool(self.degraded.load(Relaxed) != 0),
+            ),
+            (
+                "conns_rejected",
+                Json::Num(self.conns_rejected.load(Relaxed) as f64),
+            ),
+            (
+                "conn_timeouts",
+                Json::Num(self.conn_timeouts.load(Relaxed) as f64),
+            ),
+            (
+                "conns_active",
+                Json::Num(self.conns_active.load(Relaxed) as f64),
             ),
             (
                 "request_latency_p50_us",

@@ -53,4 +53,4 @@ pub use service::{ConfigKey, SigService, StreamReply};
 pub use shard::{ShardConfig, ShardSet, ShardStat, StreamError};
 pub use wire::WireClient;
 
-pub use crate::persist::DurabilityConfig;
+pub use crate::persist::{DurabilityConfig, DurabilityMode};

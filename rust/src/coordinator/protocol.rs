@@ -53,6 +53,21 @@ pub const MAX_STREAM_WINDOW: usize = 1 << 16;
 /// spare; it is validated before any engine work happens.
 pub const MAX_GRAM_BATCH: usize = 1024;
 
+/// Reject non-finite path coordinates at the protocol boundary. A NaN
+/// poisons every signature coordinate it touches (and a NaN key would
+/// also defeat the content-addressed cache, since NaN ≠ NaN), so both
+/// protocols refuse the request up front — v1 here, v2 in
+/// [`super::wire`] — with **byte-identical** error strings, which the
+/// golden suite pins.
+pub fn check_finite(field: &str, vals: &[f64]) -> Result<(), String> {
+    if let Some(i) = vals.iter().position(|v| !v.is_finite()) {
+        return Err(format!(
+            "non-finite value (NaN or Inf) at index {i} of '{field}'"
+        ));
+    }
+    Ok(())
+}
+
 /// Operation requested by the client.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum RequestOp {
@@ -193,6 +208,7 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
             if req.samples.is_empty() {
                 return Err("stream_push needs a non-empty 'samples' array".into());
             }
+            check_finite("samples", &req.samples)?;
         }
         if op == RequestOp::StreamWindow {
             req.full = match j.get("mode").as_str().unwrap_or("window") {
@@ -270,6 +286,7 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
                 "each gram path must be a non-empty flat (M+1)·dim array (got {per_path} floats, dim {dim})"
             ));
         }
+        check_finite("paths", &flat)?;
         let mut req = blank(id, op);
         req.dim = dim;
         req.depth = depth;
@@ -287,6 +304,7 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
             dim
         ));
     }
+    check_finite("path", &path)?;
     let mut windows = Vec::new();
     if op == RequestOp::Windowed {
         for wj in j.get("windows").as_arr().unwrap_or(&[]) {
@@ -567,6 +585,34 @@ mod tests {
                "projection":{"type":"words","words":[[7]]},"path":[0,0,1,1]}"#
         )
         .is_err());
+    }
+
+    #[test]
+    fn rejects_non_finite_coordinates() {
+        // JSON has no NaN literal, but an overflowing exponent parses
+        // to ±Inf — the boundary check must catch it for every
+        // path-carrying op, with the error string the goldens pin.
+        let err = parse_request(
+            r#"{"op":"signature","dim":2,"depth":2,"path":[0,0,1e999,1]}"#,
+        )
+        .unwrap_err();
+        assert_eq!(err, "non-finite value (NaN or Inf) at index 2 of 'path'");
+        let err = parse_request(
+            r#"{"op":"gram","dim":2,"depth":2,"paths":[[0,0,1,1],[0,-1e999,2,0]]}"#,
+        )
+        .unwrap_err();
+        // Index 5 in the *flattened* batch — same indexing as v2.
+        assert_eq!(err, "non-finite value (NaN or Inf) at index 5 of 'paths'");
+        let err = parse_request(
+            r#"{"op":"stream_push","session":"s1","samples":[0.5,1e999]}"#,
+        )
+        .unwrap_err();
+        assert_eq!(err, "non-finite value (NaN or Inf) at index 1 of 'samples'");
+        // The helper itself sees NaN too (reachable from v2 frames,
+        // where IEEE bits come in raw).
+        let err = check_finite("path", &[0.0, f64::NAN]).unwrap_err();
+        assert_eq!(err, "non-finite value (NaN or Inf) at index 1 of 'path'");
+        assert!(check_finite("path", &[0.0, 1.5, -2.0]).is_ok());
     }
 
     #[test]

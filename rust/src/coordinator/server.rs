@@ -24,7 +24,7 @@ use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Server configuration.
 #[derive(Clone, Debug)]
@@ -33,6 +33,23 @@ pub struct ServerConfig {
     pub addr: String,
     /// Dynamic-batching policy.
     pub batcher: BatcherConfig,
+    /// Admission cap on concurrently served connections
+    /// (`--max-conns`); `0` (the default) = unlimited. A connection
+    /// over the cap is answered with a single v1 shed line and closed
+    /// — it never gets a thread, so a connect flood cannot exhaust
+    /// server threads/fds. (The reject line is v1 JSON because no byte
+    /// has been read yet to know the client's protocol; the v2
+    /// `WireClient` surfaces it as an IO error and its retry path
+    /// reconnects.)
+    pub max_conns: usize,
+    /// Per-connection IO deadline (`--conn-timeout-s`); `None` (the
+    /// default) keeps today's fully blocking behavior. When set, it
+    /// bounds **three** things at once: each socket read/write, how
+    /// long an idle connection may sit between requests, and — as a
+    /// per-frame budget — how long a v2 frame may take *end to end*,
+    /// so a client dripping one byte per tick cannot pin a connection
+    /// thread (slow-loris).
+    pub conn_timeout: Option<Duration>,
 }
 
 impl Default for ServerConfig {
@@ -40,6 +57,8 @@ impl Default for ServerConfig {
         ServerConfig {
             addr: "127.0.0.1:7717".to_string(),
             batcher: BatcherConfig::default(),
+            max_conns: 0,
+            conn_timeout: None,
         }
     }
 }
@@ -74,12 +93,38 @@ impl Drop for ServerHandle {
     }
 }
 
+/// Decrements the live-connection gauge when a connection thread ends
+/// — by clean EOF, timeout, IO error, *or panic* (the drop runs during
+/// unwind), so an admission slot can never leak.
+struct ConnSlot(Arc<super::Metrics>);
+
+impl Drop for ConnSlot {
+    fn drop(&mut self) {
+        self.0.conns_active.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// Answer an over-cap connection with one v1 shed line and hang up,
+/// without ever blocking the acceptor on a slow peer.
+fn reject_connection(mut stream: TcpStream, retry_after_ms: u64) {
+    let _ = stream.set_write_timeout(Some(Duration::from_millis(250)));
+    let mut line = Response::Shed {
+        id: String::new(),
+        error: format!("server at connection capacity; retry after {retry_after_ms} ms"),
+        retry_after_ms,
+    }
+    .to_line();
+    line.push('\n');
+    let _ = stream.write_all(line.as_bytes());
+}
+
 /// Start the feature server; returns once the listener is bound.
 pub fn serve(service: Arc<SigService>, config: ServerConfig) -> std::io::Result<ServerHandle> {
     let listener = TcpListener::bind(&config.addr)?;
     let addr = listener.local_addr()?;
     let stop = Arc::new(AtomicBool::new(false));
     let batcher = Arc::new(Batcher::new(Arc::clone(&service), config.batcher));
+    let (max_conns, conn_timeout) = (config.max_conns, config.conn_timeout);
     let accept_thread = {
         let stop = Arc::clone(&stop);
         std::thread::spawn(move || {
@@ -87,14 +132,37 @@ pub fn serve(service: Arc<SigService>, config: ServerConfig) -> std::io::Result<
                 if stop.load(Ordering::SeqCst) {
                     break;
                 }
-                match conn {
-                    Ok(stream) => {
-                        let svc = Arc::clone(&service);
-                        let bat = Arc::clone(&batcher);
-                        std::thread::spawn(move || handle_connection(stream, svc, bat));
+                let Ok(stream) = conn else { continue };
+                // Admission control: reserve the slot *here* (a
+                // compare-and-swap against the gauge) so a burst of
+                // accepts cannot overshoot the cap before the
+                // connection threads start.
+                let metrics = Arc::clone(&service.metrics);
+                if max_conns > 0 {
+                    let admitted = metrics
+                        .conns_active
+                        .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |n| {
+                            if (n as usize) < max_conns {
+                                Some(n + 1)
+                            } else {
+                                None
+                            }
+                        })
+                        .is_ok();
+                    if !admitted {
+                        metrics.conns_rejected.fetch_add(1, Ordering::Relaxed);
+                        reject_connection(stream, service.shed_retry_ms);
+                        continue;
                     }
-                    Err(_) => continue,
+                } else {
+                    metrics.conns_active.fetch_add(1, Ordering::Relaxed);
                 }
+                let svc = Arc::clone(&service);
+                let bat = Arc::clone(&batcher);
+                std::thread::spawn(move || {
+                    let _slot = ConnSlot(metrics);
+                    handle_connection(stream, svc, bat, conn_timeout);
+                });
             }
         })
     };
@@ -114,26 +182,112 @@ enum V2Outcome {
     ReplyAndClose(Vec<u8>),
 }
 
-fn handle_connection(stream: TcpStream, service: Arc<SigService>, batcher: Arc<Batcher>) {
+/// Whether an IO error is a socket-timeout expiry (Unix reports
+/// `WouldBlock`, Windows `TimedOut` — and the slow-frame budget raises
+/// `TimedOut` directly).
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+    )
+}
+
+/// `read_exact` against an absolute deadline: each chunk read gets a
+/// socket timeout of exactly the time remaining, so a peer dripping
+/// one byte per tick exhausts the *frame* budget instead of resetting
+/// a per-read one. `None` = no deadline, plain blocking `read_exact`.
+fn read_exact_deadline(
+    reader: &mut BufReader<TcpStream>,
+    buf: &mut [u8],
+    deadline: Option<Instant>,
+) -> std::io::Result<()> {
+    let Some(deadline) = deadline else {
+        return reader.read_exact(buf);
+    };
+    let mut filled = 0usize;
+    while filled < buf.len() {
+        let now = Instant::now();
+        if now >= deadline {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::TimedOut,
+                "frame overran its slow-frame budget",
+            ));
+        }
+        let _ = reader.get_ref().set_read_timeout(Some(deadline - now));
+        match reader.read(&mut buf[filled..]) {
+            Ok(0) => return Err(std::io::ErrorKind::UnexpectedEof.into()),
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
+}
+
+fn handle_connection(
+    stream: TcpStream,
+    service: Arc<SigService>,
+    batcher: Arc<Batcher>,
+    timeout: Option<Duration>,
+) {
+    // The base socket timeouts double as the idle deadline: a
+    // connection that sends nothing for `timeout` is closed, freeing
+    // its thread. (Reader and writer share one fd, so the settings
+    // cover both clones.)
+    if let Some(t) = timeout {
+        let _ = stream.set_read_timeout(Some(t));
+        let _ = stream.set_write_timeout(Some(t));
+    }
     let mut reader = BufReader::new(match stream.try_clone() {
         Ok(s) => s,
         Err(_) => return,
     });
     let mut writer = stream;
     loop {
+        // Chaos hook (no-op without the `failpoints` feature): a
+        // `server.read` fault models a peer whose socket died.
+        if crate::util::failpoint::check("server.read").is_some() {
+            break;
+        }
         // Peek the first byte of the next message to pick the protocol.
         let first = match reader.fill_buf() {
             Ok([]) => break, // clean EOF
             Ok(buf) => buf[0],
-            Err(_) => break,
+            Err(e) => {
+                if is_timeout(&e) {
+                    // Idle past the deadline.
+                    service
+                        .metrics
+                        .conn_timeouts
+                        .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                }
+                break;
+            }
         };
         if first == wire::WIRE_V2 {
+            // The whole frame — header, payload, however many reads —
+            // shares one absolute deadline (the slow-frame budget).
+            let deadline = timeout.map(|t| Instant::now() + t);
             let t0 = Instant::now();
-            let (outcome, ok) = handle_v2_frame(&mut reader, &service, &batcher);
+            let (outcome, ok) = handle_v2_frame(&mut reader, &service, &batcher, deadline);
+            // Restore the base per-read timeout the deadline reads
+            // shrank, so the next message's idle clock starts fresh.
+            if let Some(t) = timeout {
+                let _ = reader.get_ref().set_read_timeout(Some(t));
+            }
             service.metrics.record_request(t0.elapsed(), ok);
+            if crate::util::failpoint::check("server.write").is_some() {
+                break;
+            }
             match outcome {
                 Some(V2Outcome::Reply(bytes)) => {
-                    if writer.write_all(&bytes).is_err() {
+                    if let Err(e) = writer.write_all(&bytes) {
+                        if is_timeout(&e) {
+                            service
+                                .metrics
+                                .conn_timeouts
+                                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        }
                         break;
                     }
                 }
@@ -146,7 +300,16 @@ fn handle_connection(stream: TcpStream, service: Arc<SigService>, batcher: Arc<B
         } else {
             let mut line = String::new();
             match reader.read_line(&mut line) {
-                Ok(0) | Err(_) => break,
+                Ok(0) => break,
+                Err(e) => {
+                    if is_timeout(&e) {
+                        service
+                            .metrics
+                            .conn_timeouts
+                            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    }
+                    break;
+                }
                 Ok(_) => {}
             }
             if line.trim().is_empty() {
@@ -158,7 +321,16 @@ fn handle_connection(stream: TcpStream, service: Arc<SigService>, batcher: Arc<B
             service.metrics.record_request(t0.elapsed(), ok);
             let mut out = resp.to_line();
             out.push('\n');
-            if writer.write_all(out.as_bytes()).is_err() {
+            if crate::util::failpoint::check("server.write").is_some() {
+                break;
+            }
+            if let Err(e) = writer.write_all(out.as_bytes()) {
+                if is_timeout(&e) {
+                    service
+                        .metrics
+                        .conn_timeouts
+                        .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                }
                 break;
             }
         }
@@ -172,10 +344,20 @@ fn handle_v2_frame(
     reader: &mut BufReader<TcpStream>,
     service: &Arc<SigService>,
     batcher: &Arc<Batcher>,
+    deadline: Option<Instant>,
 ) -> (Option<V2Outcome>, bool) {
     use wire::{errcode, OkBody, RequestFrame, ResponseFrame};
+    let timed_out = |e: &std::io::Error| {
+        if is_timeout(e) {
+            service
+                .metrics
+                .conn_timeouts
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        }
+    };
     let mut header = [0u8; 6];
-    if reader.read_exact(&mut header).is_err() {
+    if let Err(e) = read_exact_deadline(reader, &mut header, deadline) {
+        timed_out(&e);
         return (None, false);
     }
     let verb = header[1];
@@ -192,7 +374,8 @@ fn handle_v2_frame(
         return (Some(V2Outcome::ReplyAndClose(resp.encode())), false);
     }
     let mut payload = vec![0u8; len];
-    if reader.read_exact(&mut payload).is_err() {
+    if let Err(e) = read_exact_deadline(reader, &mut payload, deadline) {
+        timed_out(&e);
         return (None, false);
     }
     // From here the stream is frame-aligned again regardless of what
@@ -213,6 +396,27 @@ fn handle_v2_frame(
             return (Some(V2Outcome::Reply(resp.encode())), false);
         }
     };
+    // `health` is answered straight from the metrics registry — it
+    // never lowers into a service request (its body is v2-only; the v1
+    // surface for the same facts is the `stats` verb's `degraded` /
+    // `journal_strict_rejects` fields).
+    if frame == RequestFrame::Health {
+        let relaxed = std::sync::atomic::Ordering::Relaxed;
+        let m = &service.metrics;
+        let resp = ResponseFrame::Ok {
+            verb,
+            body: OkBody::Health {
+                mode: match service.durability {
+                    crate::persist::DurabilityMode::Strict => 1,
+                    crate::persist::DurabilityMode::Degraded => 0,
+                },
+                degraded: m.degraded.load(relaxed) != 0,
+                journal_errors: m.journal_errors.load(relaxed),
+                strict_rejects: m.journal_strict_rejects.load(relaxed),
+            },
+        };
+        return (Some(V2Outcome::Reply(resp.encode())), true);
+    }
     let req = match frame.into_request() {
         Ok(r) => r,
         Err(e) => {
@@ -447,6 +651,7 @@ mod tests {
                     max_wait: std::time::Duration::from_millis(1),
                     ..BatcherConfig::default()
                 },
+                ..ServerConfig::default()
             },
         )
         .unwrap();
@@ -556,6 +761,7 @@ mod tests {
                     max_wait: std::time::Duration::from_millis(1),
                     ..BatcherConfig::default()
                 },
+                ..ServerConfig::default()
             },
         )
         .unwrap();
@@ -699,6 +905,40 @@ mod tests {
             }
             other => panic!("{other:?}"),
         }
+        handle.shutdown();
+    }
+
+    #[test]
+    fn v2_health_verb_reports_policy_and_counters() {
+        let (handle, addr) = start_test_server();
+        let mut c = WireClient::connect(&addr).unwrap();
+        match c.call(&RequestFrame::Health).unwrap() {
+            ResponseFrame::Ok {
+                verb: v,
+                body:
+                    OkBody::Health {
+                        mode,
+                        degraded,
+                        journal_errors,
+                        strict_rejects,
+                    },
+            } => {
+                assert_eq!(v, verb::HEALTH);
+                // Defaults: degraded policy, healthy, no failures yet.
+                assert_eq!(mode, 0);
+                assert!(!degraded);
+                assert_eq!((journal_errors, strict_rejects), (0, 0));
+            }
+            other => panic!("{other:?}"),
+        }
+        // The v1 surface of the same facts lives in `stats`.
+        let mut v1 = Client::connect(&addr).unwrap();
+        let stats = v1.call(r#"{"op":"stats"}"#).unwrap();
+        assert_eq!(stats.get("body").get("degraded").as_bool(), Some(false));
+        assert_eq!(
+            stats.get("body").get("journal_strict_rejects").as_usize(),
+            Some(0)
+        );
         handle.shutdown();
     }
 

@@ -19,7 +19,7 @@
 use super::protocol::{Backend, Request, RequestOp};
 use super::shard::{ShardConfig, ShardSet, ShardStat, StreamError};
 use crate::logsig::LogSigEngine;
-use crate::persist::{cache_key, CacheStats, DurabilityConfig, SigCache};
+use crate::persist::{cache_key, CacheStats, DurabilityConfig, DurabilityMode, SigCache};
 use crate::sig::{
     gram_into, signature_batch_into, windowed_signatures, Precision, SigEngine, StreamEngine,
     StreamScratch, StreamTable, Window,
@@ -184,6 +184,12 @@ pub struct SigService {
     /// `fdatasync` after every journal append (`--fsync`): a crash
     /// loses at most the record being written.
     pub fsync: bool,
+    /// Journal-failure policy (`--durability`): strict rejects any op
+    /// whose journal record cannot be made durable; degraded (the
+    /// default) keeps acking from memory but flips the sticky
+    /// `degraded` health bit. Irrelevant while `journal_dir` is
+    /// `None`. Set before the first stream op.
+    pub durability: DurabilityMode,
     /// Bounded content-addressed cache of terminal signatures consulted
     /// by the batch `signature` verb, in entries; `0` (the default)
     /// disables it — not even a key is hashed (`--sig-cache-cap`).
@@ -224,6 +230,7 @@ impl SigService {
             journal_dir: None,
             checkpoint_every: 256,
             fsync: false,
+            durability: DurabilityMode::Degraded,
             sig_cache_cap: 0,
             precision: None,
             sig_cache: OnceLock::new(),
@@ -266,6 +273,7 @@ impl SigService {
                         checkpoint_every: self.checkpoint_every,
                         fsync: self.fsync,
                         max_session_floats: self.max_session_floats,
+                        mode: self.durability,
                     }),
                 },
                 Arc::clone(&self.metrics),
@@ -373,9 +381,19 @@ impl SigService {
             })
             .collect();
         let cache = self.cache_stats();
+        let relaxed = std::sync::atomic::Ordering::Relaxed;
         Json::obj(vec![
             ("shards", Json::Num(set.shard_count() as f64)),
             ("live_sessions", Json::Num(set.live_sessions() as f64)),
+            // Sticky durability-health bit: true once any journal
+            // append failed in degraded mode (acks without a durable
+            // record). Strict mode never sets it — those ops were
+            // rejected, counted below instead.
+            ("degraded", Json::Bool(self.metrics.degraded.load(relaxed) != 0)),
+            (
+                "journal_strict_rejects",
+                Json::Num(self.metrics.journal_strict_rejects.load(relaxed) as f64),
+            ),
             ("per_shard", Json::Arr(rows)),
             (
                 "sig_cache",

@@ -31,7 +31,7 @@
 use super::mailbox::{Mailbox, Recv, SendError};
 use super::service::StreamReply;
 use super::Metrics;
-use crate::persist::{self, DurabilityConfig, JournalWriter};
+use crate::persist::{self, DurabilityConfig, DurabilityMode, JournalWriter};
 use crate::sig::{StreamEngine, StreamScratch, StreamTable};
 use crate::util::pool::Pool;
 use crate::util::rng::splitmix64;
@@ -322,6 +322,7 @@ impl ShardSet {
                     shard: i,
                     checkpoint_every: dur.checkpoint_every.max(1),
                     since_ckpt: 0,
+                    mode: dur.mode,
                 });
             }
         }
@@ -533,6 +534,9 @@ struct Durable {
     shard: usize,
     checkpoint_every: u64,
     since_ckpt: u64,
+    /// Journal-failure policy: strict (reject the op) or degraded
+    /// (ack from memory, flip the sticky health bit).
+    mode: DurabilityMode,
 }
 
 struct ShardWorker {
@@ -612,34 +616,58 @@ impl ShardWorker {
             } => {
                 let out_dim = stream.out_dim();
                 let now = self.now_ms();
-                self.journal(|w| w.append_open(id, stream.dim(), stream.window_len(), &spec));
-                self.sessions.insert(
-                    id,
-                    Slot {
-                        stream: *stream,
-                        spec,
-                        last_used_ms: now,
-                    },
-                );
-                self.counters.sessions.store(self.sessions.len() as u64, Relaxed);
-                self.metrics.sessions_opened.fetch_add(1, Relaxed);
-                let _ = reply.send(Ok(StreamReply::Opened {
-                    session: format!("s{id}"),
-                    out_dim,
-                }));
+                // Journal before filing *or* acknowledging: under
+                // strict durability a failed OPEN record means the
+                // session must not exist — release the admission slot
+                // the caller reserved and recycle the engine.
+                match self.journal(|w| w.append_open(id, stream.dim(), stream.window_len(), &spec))
+                {
+                    Err(e) => {
+                        self.recycle(*stream);
+                        self.live.fetch_sub(1, Relaxed);
+                        let _ = reply.send(Err(e));
+                    }
+                    Ok(()) => {
+                        self.sessions.insert(
+                            id,
+                            Slot {
+                                stream: *stream,
+                                spec,
+                                last_used_ms: now,
+                            },
+                        );
+                        self.counters.sessions.store(self.sessions.len() as u64, Relaxed);
+                        self.metrics.sessions_opened.fetch_add(1, Relaxed);
+                        let _ = reply.send(Ok(StreamReply::Opened {
+                            session: format!("s{id}"),
+                            out_dim,
+                        }));
+                    }
+                }
             }
             ShardMsg::Push { id, samples, reply } => {
                 let now = self.now_ms();
-                let res = match self.sessions.get_mut(&id) {
-                    Some(slot) => {
-                        slot.last_used_ms = now;
-                        let d = slot.stream.dim();
-                        if samples.len() % d != 0 {
-                            Err(format!(
-                                "samples length {} not divisible by session dim {d}",
-                                samples.len()
-                            ))
-                        } else {
+                // Validate → journal → apply, in that order. The
+                // record is written before the engine advances, so a
+                // strict-mode append failure rejects the op with
+                // memory exactly matching disk (no rollback needed),
+                // and the reply is only ever sent for replayable work.
+                // (A crash between journal and reply replays an op the
+                // client never saw acked — at-least-once is fine; the
+                // invariant is acked ⇒ durable.)
+                let res = match self.sessions.get(&id) {
+                    None => Err(unknown_session(id)),
+                    Some(slot) if samples.len() % slot.stream.dim() != 0 => Err(format!(
+                        "samples length {} not divisible by session dim {}",
+                        samples.len(),
+                        slot.stream.dim()
+                    )),
+                    Some(_) => match self.journal(|w| w.append_push(id, &samples)) {
+                        Err(e) => Err(e),
+                        Ok(()) => {
+                            let slot = self.sessions.get_mut(&id).expect("validated above");
+                            slot.last_used_ms = now;
+                            let d = slot.stream.dim();
                             for sample in samples.chunks_exact(d) {
                                 slot.stream.push(sample);
                             }
@@ -651,14 +679,8 @@ impl ShardWorker {
                                 seen: slot.stream.samples_seen(),
                             })
                         }
-                    }
-                    None => Err(unknown_session(id)),
+                    },
                 };
-                if res.is_ok() {
-                    // Journal before acknowledging: once the client
-                    // sees the reply, the samples are replayable.
-                    self.journal(|w| w.append_push(id, &samples));
-                }
                 let _ = reply.send(res);
             }
             ShardMsg::Window { id, full, reply } => {
@@ -680,19 +702,25 @@ impl ShardWorker {
                 let _ = reply.send(res);
             }
             ShardMsg::Close { id, reply } => {
-                let res = match self.sessions.remove(&id) {
-                    Some(slot) => {
-                        self.recycle(slot.stream);
-                        self.live.fetch_sub(1, Relaxed);
-                        self.counters.sessions.store(self.sessions.len() as u64, Relaxed);
-                        self.metrics.sessions_closed.fetch_add(1, Relaxed);
-                        Ok(StreamReply::Closed)
+                // Tombstone before removing: a close acked without a
+                // durable CLOSE record would resurrect after a crash.
+                // Strict mode keeps the session live on append failure
+                // (the client can retry the close); degraded proceeds.
+                let res = if !self.sessions.contains_key(&id) {
+                    Err(unknown_session(id))
+                } else {
+                    match self.journal(|w| w.append_close(id)) {
+                        Err(e) => Err(e),
+                        Ok(()) => {
+                            let slot = self.sessions.remove(&id).expect("checked above");
+                            self.recycle(slot.stream);
+                            self.live.fetch_sub(1, Relaxed);
+                            self.counters.sessions.store(self.sessions.len() as u64, Relaxed);
+                            self.metrics.sessions_closed.fetch_add(1, Relaxed);
+                            Ok(StreamReply::Closed)
+                        }
                     }
-                    None => Err(unknown_session(id)),
                 };
-                if res.is_ok() {
-                    self.journal(|w| w.append_close(id));
-                }
                 let _ = reply.send(res);
             }
             ShardMsg::Sweep => {} // sweep runs in the loop after handling
@@ -712,14 +740,18 @@ impl ShardWorker {
             return;
         }
         for id in expired {
+            // Tombstone first: an eviction must survive a crash, or
+            // the evicted session would resurrect from its OPEN/PUSH
+            // history on replay. Under strict durability a failed
+            // tombstone keeps the session live — it stays expired, so
+            // the next sweep retries once the disk recovers.
+            if self.journal(|w| w.append_evict(id)).is_err() {
+                continue;
+            }
             if let Some(slot) = self.sessions.remove(&id) {
                 self.recycle(slot.stream);
                 self.live.fetch_sub(1, Relaxed);
                 self.metrics.sessions_evicted.fetch_add(1, Relaxed);
-                // Tombstone: an eviction must survive a crash, or the
-                // evicted session would resurrect from its OPEN/PUSH
-                // history on replay.
-                self.journal(|w| w.append_evict(id));
             }
         }
         self.counters.sessions.store(self.sessions.len() as u64, Relaxed);
@@ -731,20 +763,28 @@ impl ShardWorker {
         self.pool.put(cache);
     }
 
-    /// Run one journal append (no-op when durability is off). Append
-    /// failures are counted and logged, never fatal — the coordinator
-    /// keeps serving from memory and the operator sees `journal_errors`
-    /// climb. Deliberately does NOT checkpoint: the cadence check runs
-    /// in [`ShardWorker::run`] once the current message handler has
-    /// fully applied its op, so a checkpoint always snapshots a state
-    /// that covers every journaled record it is about to truncate.
-    fn journal<F>(&mut self, append: F)
+    /// Run one journal append (no-op → `Ok` when durability is off).
+    ///
+    /// On append failure the configured [`DurabilityMode`] decides:
+    /// **strict** returns `Err` with a client-facing message — the
+    /// caller must reject the op *without applying it*, so nothing is
+    /// ever acked that disk cannot replay; **degraded** absorbs the
+    /// failure (today's pre-ISSUE-10 behavior), but flips the sticky
+    /// `degraded` health bit so v1 `stats` / the v2 `health` verb
+    /// announce that acks are no longer crash-safe. Either way the
+    /// failure is logged and counted in `journal_errors`.
+    ///
+    /// Deliberately does NOT checkpoint: the cadence check runs in
+    /// [`ShardWorker::run`] once the current message handler has fully
+    /// applied its op, so a checkpoint always snapshots a state that
+    /// covers every journaled record it is about to truncate.
+    fn journal<F>(&mut self, append: F) -> Result<(), String>
     where
         F: FnOnce(&mut JournalWriter) -> io::Result<usize>,
     {
         let d = match self.durable.as_mut() {
             Some(d) => d,
-            None => return,
+            None => return Ok(()),
         };
         match append(&mut d.writer) {
             Ok(bytes) => {
@@ -752,10 +792,23 @@ impl ShardWorker {
                 self.counters.journal_lag.store(d.since_ckpt, Relaxed);
                 self.metrics.journal_appends.fetch_add(1, Relaxed);
                 self.metrics.journal_bytes.fetch_add(bytes as u64, Relaxed);
+                Ok(())
             }
             Err(e) => {
                 eprintln!("pathsig: journal append failed on shard {}: {e}", d.shard);
                 self.metrics.journal_errors.fetch_add(1, Relaxed);
+                match d.mode {
+                    DurabilityMode::Strict => {
+                        self.metrics.journal_strict_rejects.fetch_add(1, Relaxed);
+                        Err(format!(
+                            "journal append failed ({e}); op rejected under strict durability"
+                        ))
+                    }
+                    DurabilityMode::Degraded => {
+                        self.metrics.degraded.store(1, Relaxed);
+                        Ok(())
+                    }
+                }
             }
         }
     }
@@ -787,15 +840,27 @@ impl ShardWorker {
             .collect();
         match persist::write_checkpoint(&d.dir, d.shard, d.writer.seq(), &sessions) {
             Ok(()) => {
-                if let Err(e) = d.writer.truncate() {
-                    eprintln!(
-                        "pathsig: journal truncate failed on shard {}: {e}",
-                        d.shard
-                    );
-                    self.metrics.journal_errors.fetch_add(1, Relaxed);
+                match d.writer.truncate() {
+                    Ok(()) => {
+                        d.since_ckpt = 0;
+                        self.counters.journal_lag.store(0, Relaxed);
+                    }
+                    Err(e) => {
+                        // Keep the counters honest: the checkpoint
+                        // landed, but every record it covers is still
+                        // physically in the journal. Leaving
+                        // `since_ckpt`/`journal_lag` untouched keeps
+                        // the lag visible to operators and makes the
+                        // next cadence tick retry the truncate
+                        // (replay is safe either way — records with
+                        // seq ≤ watermark are skipped).
+                        eprintln!(
+                            "pathsig: journal truncate failed on shard {}: {e}",
+                            d.shard
+                        );
+                        self.metrics.journal_errors.fetch_add(1, Relaxed);
+                    }
                 }
-                d.since_ckpt = 0;
-                self.counters.journal_lag.store(0, Relaxed);
                 self.metrics.checkpoints_written.fetch_add(1, Relaxed);
             }
             Err(e) => {

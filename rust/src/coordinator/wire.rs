@@ -24,10 +24,10 @@
 //! can no longer be trusted to be in sync).
 //!
 //! Request verbs: `ping` 0x01, `stats` 0x02, `signature` 0x03,
-//! `stats2` 0x04, `gram` 0x05, `stream_open` 0x10, `stream_push` 0x11,
-//! `stream_window` 0x12, `stream_close` 0x13. Response status: `ok` 0,
-//! `err` 1, `shed` 2; every response payload leads with the request
-//! verb it answers.
+//! `stats2` 0x04, `gram` 0x05, `health` 0x06, `stream_open` 0x10,
+//! `stream_push` 0x11, `stream_window` 0x12, `stream_close` 0x13.
+//! Response status: `ok` 0, `err` 1, `shed` 2; every response payload
+//! leads with the request verb it answers.
 //!
 //! The stats verbs return per-shard counters from the actor-sharded
 //! session table ([`super::shard`]). `stats` keeps the layout it
@@ -43,9 +43,11 @@
 use super::protocol::{Backend, Request, RequestOp, MAX_GRAM_BATCH, MAX_STREAM_WINDOW};
 use super::shard::ShardStat;
 use crate::persist::CacheStats;
+use crate::util::rng::Rng;
 use crate::words::{generate::sparse_leadlag_generators, Word, WordSpec};
 use std::io::{Read, Write};
 use std::net::TcpStream;
+use std::time::Duration;
 
 /// The protocol version byte leading every v2 frame.
 pub const WIRE_V2: u8 = 0x02;
@@ -70,6 +72,10 @@ pub mod verb {
     /// field grafted onto `signature` — because that frame's layout is
     /// frozen (deployed decoders reject trailing bytes).
     pub const GRAM: u8 = 0x05;
+    /// Durability health: failure policy, the sticky degraded bit, and
+    /// journal-failure counters. Its own verb for the same frozen-
+    /// layout reason as `stats2` — existing frames never grow fields.
+    pub const HEALTH: u8 = 0x06;
     /// Open a streaming session.
     pub const STREAM_OPEN: u8 = 0x10;
     /// Push samples into a session.
@@ -159,6 +165,8 @@ pub enum RequestFrame {
     Stats,
     /// Per-shard stats, extended with journal lag + cache counters.
     Stats2,
+    /// Durability health: failure policy, degraded bit, counters.
+    Health,
     /// One-shot signature of a path.
     Signature {
         /// Path dimension.
@@ -251,6 +259,20 @@ pub enum ResponseFrame {
 pub enum OkBody {
     /// `ping` / `stream_close`: no body.
     Empty,
+    /// `health`: the durability failure policy and its consequences.
+    Health {
+        /// Failure-policy byte: 0 = degraded, 1 = strict
+        /// (`--durability`).
+        mode: u8,
+        /// Sticky degraded bit — set the first time a journal append
+        /// failed in degraded mode (some acked ops have no durable
+        /// record); never clears while the process lives.
+        degraded: bool,
+        /// Journal/checkpoint IO failures so far (all shards).
+        journal_errors: u64,
+        /// Ops rejected (or evictions deferred) by strict durability.
+        strict_rejects: u64,
+    },
     /// `stats`: per-shard counters + signature-cache counters.
     Stats {
         /// One row per shard.
@@ -360,6 +382,7 @@ impl RequestFrame {
             RequestFrame::Ping => verb::PING,
             RequestFrame::Stats => verb::STATS,
             RequestFrame::Stats2 => verb::STATS2,
+            RequestFrame::Health => verb::HEALTH,
             RequestFrame::Signature { .. } => verb::SIGNATURE,
             RequestFrame::Gram { .. } => verb::GRAM,
             RequestFrame::StreamOpen { .. } => verb::STREAM_OPEN,
@@ -373,7 +396,10 @@ impl RequestFrame {
     pub fn encode(&self) -> Vec<u8> {
         let mut p = Vec::new();
         match self {
-            RequestFrame::Ping | RequestFrame::Stats | RequestFrame::Stats2 => {}
+            RequestFrame::Ping
+            | RequestFrame::Stats
+            | RequestFrame::Stats2
+            | RequestFrame::Health => {}
             RequestFrame::Signature {
                 dim,
                 depth,
@@ -433,6 +459,7 @@ impl RequestFrame {
             verb::PING => RequestFrame::Ping,
             verb::STATS => RequestFrame::Stats,
             verb::STATS2 => RequestFrame::Stats2,
+            verb::HEALTH => RequestFrame::Health,
             verb::SIGNATURE => {
                 let dim = c.u32()?;
                 let depth = c.u32()?;
@@ -526,6 +553,12 @@ impl RequestFrame {
             // Both stats verbs run the same service op; the reply's
             // verb byte (mirroring the request) picks the body layout.
             RequestFrame::Stats | RequestFrame::Stats2 => Ok(blank(RequestOp::Stats)),
+            // Health is answered straight from the metrics registry in
+            // the server's frame handler — it never becomes a service
+            // request, so lowering it is a (server) programming error.
+            RequestFrame::Health => {
+                Err("health is a control verb answered by the server".into())
+            }
             RequestFrame::Signature {
                 dim,
                 depth,
@@ -543,6 +576,10 @@ impl RequestFrame {
                         dim
                     ));
                 }
+                // Unlike v1's JSON (where only an overflowing literal
+                // can smuggle an Inf in), raw IEEE bits arrive here —
+                // same check, byte-identical error string.
+                super::protocol::check_finite("path", &path)?;
                 let mut req = blank(RequestOp::Signature);
                 req.dim = dim;
                 req.depth = depth;
@@ -585,6 +622,9 @@ impl RequestFrame {
                 req.spec = spec.into_word_spec(depth, dim)?;
                 req.batch = paths.len();
                 req.path = paths.into_iter().flatten().collect();
+                // Checked on the flattened batch so the reported index
+                // matches v1's (which flattens rows the same way).
+                super::protocol::check_finite("paths", &req.path)?;
                 Ok(req)
             }
             RequestFrame::StreamOpen {
@@ -616,6 +656,7 @@ impl RequestFrame {
                 if samples.is_empty() {
                     return Err("stream_push needs a non-empty 'samples' array".into());
                 }
+                super::protocol::check_finite("samples", &samples)?;
                 let mut req = blank(RequestOp::StreamPush);
                 req.session = format!("s{session}");
                 req.samples = samples;
@@ -735,6 +776,17 @@ impl ResponseFrame {
                 p.push(*v);
                 match body {
                     OkBody::Empty => {}
+                    OkBody::Health {
+                        mode,
+                        degraded,
+                        journal_errors,
+                        strict_rejects,
+                    } => {
+                        p.push(*mode);
+                        p.push(u8::from(*degraded));
+                        put_u64(&mut p, *journal_errors);
+                        put_u64(&mut p, *strict_rejects);
+                    }
                     OkBody::Stats { shards, cache } => {
                         // The `stats` layout is frozen exactly as it
                         // first shipped (deployed decoders reject
@@ -811,6 +863,20 @@ impl ResponseFrame {
                 let v = c.u8()?;
                 let body = match v {
                     verb::PING | verb::STREAM_CLOSE => OkBody::Empty,
+                    verb::HEALTH => {
+                        let mode = c.u8()?;
+                        let degraded = match c.u8()? {
+                            0 => false,
+                            1 => true,
+                            b => return Err(format!("bad health degraded byte {b}")),
+                        };
+                        OkBody::Health {
+                            mode,
+                            degraded,
+                            journal_errors: c.u64()?,
+                            strict_rejects: c.u64()?,
+                        }
+                    }
                     verb::STATS | verb::STATS2 => {
                         let extended = v == verb::STATS2;
                         let n = c.u32()? as usize;
@@ -966,10 +1032,58 @@ impl<'a> Cur<'a> {
 // Binary client
 // ---------------------------------------------------------------------
 
+/// Client-side retry policy: capped exponential backoff with full
+/// jitter, driven by a **seeded** RNG so a test (or a reproduced
+/// incident) replays the exact same sleep schedule.
+///
+/// Attempt `k` (0-based) sleeps a uniform draw from
+/// `[0, min(base · 2^k, max))` before retrying; when the server
+/// answered with a shed frame, its `retry_after_ms` hint becomes the
+/// *floor* of that draw — the client never retries earlier than the
+/// server asked, and the jitter on top de-synchronizes a thundering
+/// herd of shed clients.
+#[derive(Clone, Debug)]
+pub struct RetryPolicy {
+    /// Total attempts (first try included); `1` disables retrying.
+    pub max_attempts: u32,
+    /// Backoff before the first retry.
+    pub base_delay: Duration,
+    /// Ceiling the exponential curve saturates at.
+    pub max_delay: Duration,
+    /// Seed for the jitter stream.
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: 5,
+            base_delay: Duration::from_millis(10),
+            max_delay: Duration::from_secs(1),
+            seed: 0x7265_7472_79,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// The sleep before retry `attempt` (0-based), jittered by `rng`,
+    /// never below `floor_ms` (a server's `retry_after_ms` hint; 0
+    /// when there is none).
+    pub fn backoff(&self, attempt: u32, floor_ms: u64, rng: &mut Rng) -> Duration {
+        let cap = self
+            .base_delay
+            .saturating_mul(1u32.checked_shl(attempt).unwrap_or(u32::MAX))
+            .min(self.max_delay);
+        let jittered = cap.mul_f64(rng.uniform());
+        jittered.max(Duration::from_millis(floor_ms))
+    }
+}
+
 /// Minimal blocking v2 client (tests, benches, and the CLI). The v1
 /// JSON client is [`super::server::Client`].
 pub struct WireClient {
     stream: TcpStream,
+    addr: String,
 }
 
 impl WireClient {
@@ -977,13 +1091,68 @@ impl WireClient {
     pub fn connect(addr: &str) -> std::io::Result<WireClient> {
         Ok(WireClient {
             stream: TcpStream::connect(addr)?,
+            addr: addr.to_string(),
         })
+    }
+
+    /// Open a connection, retrying transient connect failures
+    /// (refused/reset while a server restarts) under `policy`.
+    pub fn connect_retry(addr: &str, policy: &RetryPolicy) -> std::io::Result<WireClient> {
+        let mut rng = Rng::new(policy.seed);
+        let mut last = None;
+        for attempt in 0..policy.max_attempts.max(1) {
+            if attempt > 0 {
+                std::thread::sleep(policy.backoff(attempt - 1, 0, &mut rng));
+            }
+            match WireClient::connect(addr) {
+                Ok(c) => return Ok(c),
+                Err(e) => last = Some(e),
+            }
+        }
+        Err(last.unwrap_or_else(|| std::io::Error::other("no connect attempts made")))
     }
 
     /// Send one request frame, read one response frame back.
     pub fn call(&mut self, req: &RequestFrame) -> std::io::Result<ResponseFrame> {
         self.stream.write_all(&req.encode())?;
         read_response(&mut self.stream)
+    }
+
+    /// [`WireClient::call`] with bounded retries: a shed response is
+    /// retried after at least its `retry_after_ms` hint, and an IO
+    /// error (server restarting, connection dropped mid-flight) is
+    /// retried on a **fresh** connection. The last shed frame (or IO
+    /// error) is returned once attempts are exhausted. Only safe for
+    /// requests that are idempotent or rejected-before-effect (sheds
+    /// are, by construction — the op was dropped before any work).
+    pub fn call_retry(
+        &mut self,
+        req: &RequestFrame,
+        policy: &RetryPolicy,
+    ) -> std::io::Result<ResponseFrame> {
+        let mut rng = Rng::new(policy.seed);
+        let mut attempt = 0u32;
+        loop {
+            let outcome = self.call(req);
+            attempt += 1;
+            let floor_ms = match &outcome {
+                Ok(ResponseFrame::Shed { retry_after_ms, .. }) => u64::from(*retry_after_ms),
+                Ok(resp) => return Ok(resp.clone()),
+                Err(_) => 0,
+            };
+            if attempt >= policy.max_attempts.max(1) {
+                return outcome;
+            }
+            std::thread::sleep(policy.backoff(attempt - 1, floor_ms, &mut rng));
+            if outcome.is_err() {
+                // The stream may be half-dead; reconnect before the
+                // next attempt (a connect failure keeps the old stream
+                // and lets the next call surface the error).
+                if let Ok(fresh) = WireClient::connect(&self.addr) {
+                    *self = fresh;
+                }
+            }
+        }
     }
 }
 
@@ -1023,6 +1192,7 @@ mod tests {
         roundtrip_req(RequestFrame::Ping);
         roundtrip_req(RequestFrame::Stats);
         roundtrip_req(RequestFrame::Stats2);
+        roundtrip_req(RequestFrame::Health);
         roundtrip_req(RequestFrame::Signature {
             dim: 2,
             depth: 3,
@@ -1133,6 +1303,27 @@ mod tests {
                         misses: 2,
                         evictions: 1,
                     },
+                },
+            },
+            // `health` is its own verb so the frozen frames above
+            // never grow fields; both mode bytes and the sticky bit
+            // roundtrip.
+            ResponseFrame::Ok {
+                verb: verb::HEALTH,
+                body: OkBody::Health {
+                    mode: 1,
+                    degraded: false,
+                    journal_errors: 0,
+                    strict_rejects: 3,
+                },
+            },
+            ResponseFrame::Ok {
+                verb: verb::HEALTH,
+                body: OkBody::Health {
+                    mode: 0,
+                    degraded: true,
+                    journal_errors: 7,
+                    strict_rejects: 0,
                 },
             },
             ResponseFrame::Ok {
@@ -1294,11 +1485,178 @@ mod tests {
     }
 
     #[test]
+    fn non_finite_coordinates_rejected_like_v1() {
+        // The error string must match v1's byte-for-byte (the goldens
+        // pin both); the index is into the flattened batch for gram.
+        let err = RequestFrame::Signature {
+            dim: 2,
+            depth: 2,
+            spec: SpecFrame::Truncated,
+            path: vec![0.0, 0.0, f64::NAN, 1.0],
+        }
+        .into_request()
+        .unwrap_err();
+        assert_eq!(err, "non-finite value (NaN or Inf) at index 2 of 'path'");
+        let err = RequestFrame::Gram {
+            dim: 2,
+            depth: 2,
+            spec: SpecFrame::Truncated,
+            paths: vec![vec![0.0, 0.0, 1.0, 1.0], vec![0.0, f64::NEG_INFINITY, 2.0, 0.0]],
+        }
+        .into_request()
+        .unwrap_err();
+        assert_eq!(err, "non-finite value (NaN or Inf) at index 5 of 'paths'");
+        let err = RequestFrame::StreamPush {
+            session: 1,
+            samples: vec![0.5, f64::INFINITY],
+        }
+        .into_request()
+        .unwrap_err();
+        assert_eq!(err, "non-finite value (NaN or Inf) at index 1 of 'samples'");
+    }
+
+    #[test]
+    fn health_is_server_answered_and_validates() {
+        // `health` never lowers into a service request…
+        assert!(RequestFrame::Health.into_request().is_err());
+        // …its empty request payload rejects trailing bytes…
+        assert!(RequestFrame::decode(verb::HEALTH, &[0]).is_err());
+        // …and a response with a junk degraded byte does not decode.
+        let mut p = vec![verb::HEALTH, 1u8, 2u8];
+        p.extend_from_slice(&0u64.to_le_bytes());
+        p.extend_from_slice(&0u64.to_le_bytes());
+        assert!(ResponseFrame::decode(status::OK, &p).is_err());
+    }
+
+    #[test]
+    fn backoff_is_seeded_capped_and_honors_hints() {
+        let policy = RetryPolicy {
+            max_attempts: 6,
+            base_delay: Duration::from_millis(10),
+            max_delay: Duration::from_millis(80),
+            seed: 42,
+        };
+        // Deterministic: the same seed replays the same schedule.
+        let sched = |seed: u64| -> Vec<Duration> {
+            let mut rng = Rng::new(seed);
+            (0..6).map(|k| policy.backoff(k, 0, &mut rng)).collect()
+        };
+        assert_eq!(sched(42), sched(42));
+        assert_ne!(sched(42), sched(43));
+        // Jitter stays under the exponential cap, which saturates.
+        let mut rng = Rng::new(7);
+        for k in 0..40 {
+            let d = policy.backoff(k, 0, &mut rng);
+            let cap = policy
+                .base_delay
+                .saturating_mul(1u32.checked_shl(k).unwrap_or(u32::MAX))
+                .min(policy.max_delay);
+            assert!(d <= cap, "attempt {k}: {d:?} > {cap:?}");
+        }
+        // A server shed hint floors the draw — never retry earlier
+        // than asked.
+        let mut rng = Rng::new(7);
+        for k in 0..8 {
+            assert!(policy.backoff(k, 500, &mut rng) >= Duration::from_millis(500));
+        }
+    }
+
+    #[test]
     fn error_code_mapping() {
         assert_eq!(
             code_for("unknown session 's1' (already closed or evicted)"),
             errcode::UNKNOWN_SESSION
         );
         assert_eq!(code_for("dim must be ≥ 1"), errcode::BAD_REQUEST);
+    }
+
+    /// Stub server answering each ping with a scripted response; counts
+    /// frames seen. `sheds_before_ok = u32::MAX` sheds forever.
+    fn shed_server(sheds_before_ok: u32) -> (String, std::thread::JoinHandle<u32>) {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let h = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let mut served = 0u32;
+            let mut hdr = [0u8; 6];
+            while s.read_exact(&mut hdr).is_ok() {
+                let resp = if served < sheds_before_ok {
+                    ResponseFrame::Shed {
+                        verb: verb::PING,
+                        retry_after_ms: 1,
+                        message: "overloaded; retry after 1 ms".into(),
+                    }
+                } else {
+                    ResponseFrame::Ok {
+                        verb: verb::PING,
+                        body: OkBody::Empty,
+                    }
+                };
+                served += 1;
+                if s.write_all(&resp.encode()).is_err() {
+                    break;
+                }
+            }
+            served
+        });
+        (addr, h)
+    }
+
+    fn fast_policy(max_attempts: u32) -> RetryPolicy {
+        RetryPolicy {
+            max_attempts,
+            base_delay: Duration::from_millis(1),
+            max_delay: Duration::from_millis(4),
+            seed: 11,
+        }
+    }
+
+    #[test]
+    fn call_retry_rides_out_sheds() {
+        let (addr, h) = shed_server(2);
+        let mut c = WireClient::connect(&addr).unwrap();
+        match c.call_retry(&RequestFrame::Ping, &fast_policy(5)).unwrap() {
+            ResponseFrame::Ok {
+                body: OkBody::Empty,
+                ..
+            } => {}
+            other => panic!("expected Ok after 2 sheds, got {other:?}"),
+        }
+        drop(c);
+        assert_eq!(h.join().unwrap(), 3, "2 sheds + 1 ok");
+    }
+
+    #[test]
+    fn call_retry_attempts_are_bounded() {
+        let (addr, h) = shed_server(u32::MAX);
+        let mut c = WireClient::connect(&addr).unwrap();
+        match c.call_retry(&RequestFrame::Ping, &fast_policy(3)).unwrap() {
+            ResponseFrame::Shed { retry_after_ms, .. } => assert_eq!(retry_after_ms, 1),
+            other => panic!("expected the last shed back, got {other:?}"),
+        }
+        drop(c);
+        assert_eq!(h.join().unwrap(), 3, "exactly max_attempts frames sent");
+    }
+
+    #[test]
+    fn connect_retry_gives_up_after_bounded_attempts() {
+        // Grab a free port, then close the listener: connects are
+        // refused fast, so three 1–4 ms backoffs finish well under the
+        // deadline that would indicate unbounded retrying.
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap().to_string();
+        drop(l);
+        let t0 = std::time::Instant::now();
+        assert!(WireClient::connect_retry(&addr, &fast_policy(3)).is_err());
+        assert!(t0.elapsed() < Duration::from_secs(5));
+        // And against a live server it succeeds on the first try.
+        let (addr, h) = shed_server(0);
+        let mut c = WireClient::connect_retry(&addr, &fast_policy(3)).unwrap();
+        assert!(matches!(
+            c.call(&RequestFrame::Ping).unwrap(),
+            ResponseFrame::Ok { .. }
+        ));
+        drop(c);
+        h.join().unwrap();
     }
 }

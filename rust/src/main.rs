@@ -6,6 +6,8 @@
 //!                      [--shards 0] [--mailbox-cap 256] [--session-ttl-s 300]
 //!                      [--journal-dir DIR] [--checkpoint-every 256] [--fsync]
 //!                      [--sig-cache-cap 0] [--precision f64|f32]
+//!                      [--durability strict|degraded] [--max-conns 0]
+//!                      [--conn-timeout-s 0]
 //! pathsig compute      --dim D --depth N [--steps M] [--seed S]
 //!                      [--projection trunc|lyndon] [--json]
 //! pathsig logsig       --dim D --depth N [--steps M] [--seed S]
@@ -101,7 +103,24 @@ fn cmd_serve(args: &Args) -> i32 {
             return 2;
         }
     };
+    // Durability policy: strict refuses to ack a session op whose
+    // journal append failed; degraded (default) keeps serving from
+    // memory and flips the sticky `degraded` health bit.
+    service.durability = match args.get("durability") {
+        None => pathsig::coordinator::DurabilityMode::Degraded,
+        Some(m) if m.eq_ignore_ascii_case("strict") => pathsig::coordinator::DurabilityMode::Strict,
+        Some(m) if m.eq_ignore_ascii_case("degraded") => {
+            pathsig::coordinator::DurabilityMode::Degraded
+        }
+        Some(other) => {
+            eprintln!("pathsig serve: invalid --durability {other:?} (expected strict or degraded)");
+            return 2;
+        }
+    };
     let service = Arc::new(service);
+    // Connection lifecycle: admission cap (0 = unlimited) and per-
+    // connection read/write/idle deadline (0 = none).
+    let conn_timeout_s = args.u64("conn-timeout-s", 0);
     let config = ServerConfig {
         addr: args.str_or("addr", "127.0.0.1:7717").to_string(),
         batcher: BatcherConfig {
@@ -109,6 +128,9 @@ fn cmd_serve(args: &Args) -> i32 {
             max_wait: std::time::Duration::from_millis(args.u64("max-wait-ms", 2)),
             long_path_points: args.usize("long-path-points", 2048),
         },
+        max_conns: args.usize("max-conns", 0),
+        conn_timeout: (conn_timeout_s > 0)
+            .then(|| std::time::Duration::from_secs(conn_timeout_s)),
     };
     match serve(service, config) {
         Ok(handle) => {

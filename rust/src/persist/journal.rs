@@ -127,8 +127,15 @@ impl JournalWriter {
     }
 
     fn commit(&mut self) -> io::Result<usize> {
+        // Chaos hooks (no-ops unless the `failpoints` feature is on):
+        // `journal.append` models the write itself failing (ENOSPC,
+        // EIO); `journal.fsync` models a write that reached the page
+        // cache but could not be made durable. Either way the record
+        // is not acked — the caller decides shed-vs-degrade.
+        crate::failpoint!("journal.append");
         self.file.write_all(&self.buf)?;
         if self.fsync {
+            crate::failpoint!("journal.fsync");
             self.file.sync_data()?;
         }
         Ok(self.buf.len())
@@ -176,6 +183,7 @@ impl JournalWriter {
     /// zero and rewind the write position (sequence numbering continues
     /// upward, so replay ordering stays monotone).
     pub fn truncate(&mut self) -> io::Result<()> {
+        crate::failpoint!("journal.truncate");
         self.file.set_len(0)?;
         self.file.seek(SeekFrom::Start(0))?;
         Ok(())
@@ -199,10 +207,15 @@ pub fn write_checkpoint(
         codec::encode_snap(&mut buf, watermark, *id, stream.dim(), spec, &ck);
     }
     let tmp = dir.join(format!("shard-{shard}.ckpt.tmp"));
+    // `ckpt.write` = disk full while staging the tmp (the live
+    // checkpoint must survive untouched); `ckpt.rename` = crash window
+    // between a complete tmp and its promotion.
+    crate::failpoint!("ckpt.write");
     let mut f = File::create(&tmp)?;
     f.write_all(&buf)?;
     f.sync_data()?;
     drop(f);
+    crate::failpoint!("ckpt.rename");
     fs::rename(&tmp, ckpt_path(dir, shard))?;
     // Order the rename against everything that follows (in particular
     // the caller's journal truncate): without a directory fsync, power
@@ -480,6 +493,11 @@ fn recover_shard(
     seen: &mut HashSet<u64>,
     out: &mut Recovery,
 ) -> io::Result<()> {
+    // `recover.read` models an unreadable shard file at boot; the
+    // error surfaces through recover_dir instead of silently starting
+    // empty (which would ack new work against a directory that still
+    // holds the old sessions).
+    crate::failpoint!("recover.read");
     let mut live: HashMap<u64, ReplaySession> = HashMap::new();
     let mut tombstones: HashSet<u64> = HashSet::new();
     let mut note_id = |out: &mut Recovery, id: u64| {

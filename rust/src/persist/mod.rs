@@ -37,8 +37,36 @@ pub use journal::{
 
 use std::path::PathBuf;
 
+/// What a shard worker does when a journal append (or its fsync)
+/// fails while durability is on (CLI: `--durability=strict|degraded`).
+///
+/// This is *policy made explicit*: before ISSUE 10, an append failure
+/// was counted in `journal_errors` and the op was acked anyway — the
+/// "durable" coordinator silently became non-durable. Now the operator
+/// chooses:
+///
+/// * [`Strict`](DurabilityMode::Strict) — never ack non-durable work.
+///   The op is rejected with an error reply (the engine state is not
+///   advanced), so everything a client ever saw acked has a journal
+///   record and survives a crash.
+/// * [`Degraded`](DurabilityMode::Degraded) — keep serving from
+///   memory (today's behavior), but flip a sticky, *visible* degraded
+///   bit surfaced in v1 `stats` and the v2 `health` verb so monitoring
+///   can page a human instead of discovering the gap after the crash.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum DurabilityMode {
+    /// Reject (never ack) any op whose journal record cannot be made
+    /// durable.
+    Strict,
+    /// Ack from memory on journal failure, but announce the loss of
+    /// durability via the degraded health bit. The default — matches
+    /// the pre-ISSUE-10 behavior, now visible.
+    #[default]
+    Degraded,
+}
+
 /// Coordinator durability knobs (CLI: `--journal-dir`,
-/// `--checkpoint-every`, `--fsync`). Carried inside
+/// `--checkpoint-every`, `--fsync`, `--durability`). Carried inside
 /// [`crate::coordinator::ShardConfig`]; `None` there means durability
 /// is off and no persistence code runs.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -55,17 +83,21 @@ pub struct DurabilityConfig {
     /// re-admitting sessions (mirrors the service's
     /// `max_session_floats`; `usize::MAX` = unbounded).
     pub max_session_floats: usize,
+    /// Journal-failure policy: strict (shed non-durable work) or
+    /// degraded (ack + flip the health bit).
+    pub mode: DurabilityMode,
 }
 
 impl DurabilityConfig {
     /// Defaults matching the CLI: checkpoint every 256 ops, no fsync,
-    /// unbounded per-session floats.
+    /// unbounded per-session floats, degraded-mode failure policy.
     pub fn new(dir: PathBuf) -> DurabilityConfig {
         DurabilityConfig {
             dir,
             checkpoint_every: 256,
             fsync: false,
             max_session_floats: usize::MAX,
+            mode: DurabilityMode::Degraded,
         }
     }
 }

@@ -1,0 +1,390 @@
+//! Deterministic, seeded failpoints — a zero-dependency fault-injection
+//! layer in the spirit of tikv's `fail-rs`, but schedule-driven so a
+//! chaos run replays bit-identically from its seed.
+//!
+//! A *failpoint* is a named site in the code (journal append, fsync,
+//! checkpoint rename, mailbox send, socket read …) that consults this
+//! registry and, when armed, injects a fault: an `io::Error` or a
+//! deterministic delay. Sites are compiled in **only** under the
+//! `failpoints` cargo feature — without it, [`check`] is an
+//! `#[inline(always)]` constant `None` and every site folds away, so
+//! release hot paths carry zero overhead (the `BENCH_durability.json`
+//! warm-append alloc counter stays exactly 0).
+//!
+//! ## Schedule grammar
+//!
+//! Schedules come from the `PATHSIG_FAILPOINTS` environment variable
+//! (read lazily on the first armed hit) or programmatically via
+//! [`configure`]:
+//!
+//! ```text
+//! PATHSIG_FAILPOINTS="journal.append=err@3;journal.fsync=err@p0.01/seed42;mailbox.send=delay50ms@5"
+//! ```
+//!
+//! Semicolon-separated `name=ACTION[@TRIGGER]` clauses:
+//!
+//! * `ACTION` — `err` (inject an `io::Error`) or `delay<N>ms` (sleep
+//!   `N` milliseconds, then continue normally).
+//! * `@N` — fire on exactly the `N`-th hit of the site (1-based).
+//! * `@N..` — fire on the `N`-th hit and every hit after it.
+//! * `@p<P>/seed<S>` — fire each hit independently with probability
+//!   `P`, drawn from a per-point `splitmix64` stream seeded with `S`
+//!   (deterministic: same seed, same hit sequence, same faults).
+//! * no trigger — fire on every hit.
+//!
+//! The parser is compiled unconditionally (and unit-tested in tier-1
+//! builds); only the *sites* are feature-gated.
+
+use std::collections::BTreeMap;
+use std::io;
+use std::sync::Mutex;
+use std::time::Duration;
+
+use super::rng::splitmix64;
+
+/// What an armed failpoint does when its trigger fires.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Action {
+    /// Inject an `io::Error` (the site propagates it as the real
+    /// failure would — disk full, EIO, connection reset …).
+    Err,
+    /// Sleep for the given duration, then continue normally (models
+    /// slow disks, stalled peers, scheduler hiccups).
+    Delay(Duration),
+}
+
+/// When an armed failpoint fires.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Trigger {
+    /// Every hit.
+    Always,
+    /// Exactly the `n`-th hit (1-based).
+    Nth(u64),
+    /// The `n`-th hit and every later one.
+    From(u64),
+    /// Each hit independently with probability `p`, from a seeded
+    /// `splitmix64` stream.
+    Prob {
+        /// Fire probability per hit, in `[0, 1]`.
+        p: f64,
+        /// Seed of the per-point deterministic stream.
+        seed: u64,
+    },
+}
+
+/// One armed failpoint: parsed clause + hit bookkeeping.
+#[derive(Clone, Debug)]
+pub struct Point {
+    /// Fault to inject when the trigger fires.
+    pub action: Action,
+    /// Firing schedule.
+    pub trigger: Trigger,
+    /// Times the site has been reached.
+    pub hits: u64,
+    /// Times the fault actually fired.
+    pub fired: u64,
+    /// Current state of the `Prob` stream (advances per hit).
+    prob_state: u64,
+}
+
+struct Registry {
+    points: BTreeMap<String, Point>,
+}
+
+/// `None` until the first armed hit or explicit [`configure`] /
+/// [`clear`]; the env schedule is loaded exactly once.
+static REGISTRY: Mutex<Option<Registry>> = Mutex::new(None);
+
+/// Parse a full schedule string into named points. Pure (no process
+/// state), so every rejection path is unit-testable.
+pub fn parse_schedule(spec: &str) -> Result<BTreeMap<String, Point>, String> {
+    let mut points = BTreeMap::new();
+    for clause in spec.split(';') {
+        let clause = clause.trim();
+        if clause.is_empty() {
+            continue;
+        }
+        let (name, rest) = clause
+            .split_once('=')
+            .ok_or_else(|| format!("failpoint clause {clause:?}: missing '='"))?;
+        let (action_s, trigger_s) = match rest.split_once('@') {
+            Some((a, t)) => (a, Some(t)),
+            None => (rest, None),
+        };
+        let action = parse_action(action_s)
+            .ok_or_else(|| format!("failpoint {name:?}: bad action {action_s:?}"))?;
+        let trigger = match trigger_s {
+            None => Trigger::Always,
+            Some(t) => parse_trigger(t)
+                .ok_or_else(|| format!("failpoint {name:?}: bad trigger {t:?}"))?,
+        };
+        let prob_state = match trigger {
+            Trigger::Prob { seed, .. } => seed,
+            _ => 0,
+        };
+        points.insert(
+            name.trim().to_string(),
+            Point { action, trigger, hits: 0, fired: 0, prob_state },
+        );
+    }
+    Ok(points)
+}
+
+fn parse_action(s: &str) -> Option<Action> {
+    let s = s.trim();
+    if s == "err" {
+        return Some(Action::Err);
+    }
+    if let Some(ms) = s.strip_prefix("delay").and_then(|r| r.strip_suffix("ms")) {
+        return ms.parse::<u64>().ok().map(|n| Action::Delay(Duration::from_millis(n)));
+    }
+    None
+}
+
+fn parse_trigger(s: &str) -> Option<Trigger> {
+    let s = s.trim();
+    if let Some(rest) = s.strip_prefix('p') {
+        // p<float>/seed<u64> — probabilistic, explicitly seeded so the
+        // schedule is reproducible (an unseeded random fault would
+        // defeat the whole point of the layer).
+        let (p_s, seed_s) = rest.split_once("/seed")?;
+        let p: f64 = p_s.parse().ok()?;
+        if !(0.0..=1.0).contains(&p) {
+            return None;
+        }
+        let seed: u64 = seed_s.parse().ok()?;
+        return Some(Trigger::Prob { p, seed });
+    }
+    if let Some(n_s) = s.strip_suffix("..") {
+        let n: u64 = n_s.parse().ok()?;
+        return if n >= 1 { Some(Trigger::From(n)) } else { None };
+    }
+    let n: u64 = s.parse().ok()?;
+    if n >= 1 {
+        Some(Trigger::Nth(n))
+    } else {
+        None
+    }
+}
+
+fn load_env() -> Registry {
+    let points = match std::env::var("PATHSIG_FAILPOINTS") {
+        Ok(spec) => match parse_schedule(&spec) {
+            Ok(p) => p,
+            Err(e) => {
+                super::envknob::warn_knob_once(
+                    "PATHSIG_FAILPOINTS",
+                    &format!("PATHSIG_FAILPOINTS rejected ({e}); no failpoints armed"),
+                );
+                BTreeMap::new()
+            }
+        },
+        Err(_) => BTreeMap::new(),
+    };
+    Registry { points }
+}
+
+/// Install a schedule programmatically (replaces any env/previous
+/// schedule and resets all hit counters). Tests serialize access to
+/// the process-global registry around this.
+pub fn configure(spec: &str) -> Result<(), String> {
+    let points = parse_schedule(spec)?;
+    *REGISTRY.lock().unwrap_or_else(|e| e.into_inner()) = Some(Registry { points });
+    Ok(())
+}
+
+/// Disarm every failpoint (and stop the env schedule from reloading).
+pub fn clear() {
+    *REGISTRY.lock().unwrap_or_else(|e| e.into_inner()) =
+        Some(Registry { points: BTreeMap::new() });
+}
+
+/// `(hits, fired)` counters for a named point — the chaos suite's
+/// observation hook. `(0, 0)` when the point is not armed.
+pub fn counters(name: &str) -> (u64, u64) {
+    let mut guard = REGISTRY.lock().unwrap_or_else(|e| e.into_inner());
+    let reg = guard.get_or_insert_with(load_env);
+    reg.points.get(name).map(|p| (p.hits, p.fired)).unwrap_or((0, 0))
+}
+
+/// Record a hit on `name` and return the fault to inject, if the
+/// point is armed and its trigger fires. `Delay` actions sleep here
+/// (outside the registry lock) and return `None` — the site proceeds
+/// normally after the stall.
+pub fn hit(name: &str) -> Option<io::Error> {
+    let delay;
+    {
+        let mut guard = REGISTRY.lock().unwrap_or_else(|e| e.into_inner());
+        let reg = guard.get_or_insert_with(load_env);
+        let point = reg.points.get_mut(name)?;
+        point.hits += 1;
+        let fires = match point.trigger {
+            Trigger::Always => true,
+            Trigger::Nth(n) => point.hits == n,
+            Trigger::From(n) => point.hits >= n,
+            Trigger::Prob { p, .. } => {
+                let draw = splitmix64(&mut point.prob_state);
+                ((draw >> 11) as f64) * (1.0 / (1u64 << 53) as f64) < p
+            }
+        };
+        if !fires {
+            return None;
+        }
+        point.fired += 1;
+        match point.action {
+            Action::Err => {
+                return Some(io::Error::other(format!("failpoint {name}: injected fault")))
+            }
+            Action::Delay(d) => delay = d,
+        }
+    }
+    std::thread::sleep(delay);
+    None
+}
+
+/// Consult the failpoint `name`. With the `failpoints` feature off
+/// this is a constant `None` that the optimizer removes entirely —
+/// the only form sites are allowed to call.
+#[cfg(feature = "failpoints")]
+#[inline]
+pub fn check(name: &str) -> Option<io::Error> {
+    hit(name)
+}
+
+/// Consult the failpoint `name` (no-op build: always `None`).
+#[cfg(not(feature = "failpoints"))]
+#[inline(always)]
+pub fn check(_name: &str) -> Option<io::Error> {
+    None
+}
+
+/// Inject at an `io::Result` site: `failpoint!("journal.append");`
+/// early-returns the injected error (via `.into()`, so sites whose
+/// error type is `From<io::Error>` work too). Expands to nothing
+/// observable when the `failpoints` feature is off.
+#[macro_export]
+macro_rules! failpoint {
+    ($name:expr) => {
+        if let Some(e) = $crate::util::failpoint::check($name) {
+            return Err(e.into());
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_issue_example() {
+        let pts = parse_schedule(
+            "journal.append=err@3;journal.fsync=err@p0.01/seed42;mailbox.send=delay50ms@5",
+        )
+        .unwrap();
+        assert_eq!(pts.len(), 3);
+        assert_eq!(pts["journal.append"].action, Action::Err);
+        assert_eq!(pts["journal.append"].trigger, Trigger::Nth(3));
+        assert_eq!(
+            pts["journal.fsync"].trigger,
+            Trigger::Prob { p: 0.01, seed: 42 }
+        );
+        assert_eq!(
+            pts["mailbox.send"].action,
+            Action::Delay(Duration::from_millis(50))
+        );
+        assert_eq!(pts["mailbox.send"].trigger, Trigger::Nth(5));
+    }
+
+    #[test]
+    fn parses_open_ranges_and_always() {
+        let pts = parse_schedule("a=err;b=err@2..;c=delay5ms").unwrap();
+        assert_eq!(pts["a"].trigger, Trigger::Always);
+        assert_eq!(pts["b"].trigger, Trigger::From(2));
+        assert_eq!(pts["c"].action, Action::Delay(Duration::from_millis(5)));
+    }
+
+    #[test]
+    fn rejects_malformed_clauses() {
+        for bad in [
+            "noequals",
+            "x=panic",
+            "x=err@0",
+            "x=err@p1.5/seed1",
+            "x=err@pnope/seed1",
+            "x=err@p0.5",
+            "x=delayms",
+            "x=delay5s",
+            "x=err@0..",
+        ] {
+            assert!(parse_schedule(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn empty_and_whitespace_ok() {
+        assert!(parse_schedule("").unwrap().is_empty());
+        assert!(parse_schedule(" ; ;").unwrap().is_empty());
+        let pts = parse_schedule(" a = err @ 2 ").unwrap();
+        assert_eq!(pts["a"].trigger, Trigger::Nth(2));
+    }
+
+    #[test]
+    fn prob_stream_is_deterministic() {
+        // Two points with the same seed fire on exactly the same hits.
+        let fire_pattern = |seed: u64| -> Vec<bool> {
+            let mut state = seed;
+            (0..256)
+                .map(|_| {
+                    let draw = splitmix64(&mut state);
+                    ((draw >> 11) as f64) * (1.0 / (1u64 << 53) as f64) < 0.25
+                })
+                .collect()
+        };
+        assert_eq!(fire_pattern(42), fire_pattern(42));
+        assert_ne!(fire_pattern(42), fire_pattern(43));
+        let fired = fire_pattern(42).iter().filter(|f| **f).count();
+        assert!((32..96).contains(&fired), "p=0.25 over 256 hits fired {fired}");
+    }
+
+    // The registry tests below replace process-global state
+    // (configure() swaps the whole schedule), so they serialize on a
+    // module lock instead of relying on distinct point names.
+    static REG_LOCK: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn nth_trigger_fires_exactly_once() {
+        let _g = REG_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        configure("test.reg.nth=err@3").unwrap();
+        assert!(hit("test.reg.nth").is_none());
+        assert!(hit("test.reg.nth").is_none());
+        let e = hit("test.reg.nth").expect("3rd hit fires");
+        assert!(e.to_string().contains("test.reg.nth"));
+        assert!(hit("test.reg.nth").is_none());
+        assert_eq!(counters("test.reg.nth"), (4, 1));
+        clear();
+    }
+
+    #[test]
+    fn unarmed_points_are_free() {
+        let _g = REG_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        configure("test.reg.other=err").unwrap();
+        assert!(hit("test.reg.unarmed").is_none());
+        assert_eq!(counters("test.reg.unarmed"), (0, 0));
+        clear();
+    }
+
+    #[test]
+    fn check_matches_feature_state() {
+        // In no-op builds check() must be None even when armed; with
+        // the feature on it must behave exactly like hit().
+        let _g = REG_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        configure("test.reg.check=err").unwrap();
+        let got = check("test.reg.check");
+        if cfg!(feature = "failpoints") {
+            assert!(got.is_some());
+        } else {
+            assert!(got.is_none());
+        }
+        clear();
+    }
+}

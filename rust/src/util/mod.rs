@@ -9,6 +9,7 @@
 //! here.
 
 pub mod envknob;
+pub mod failpoint;
 pub mod rng;
 pub mod json;
 pub mod fft;

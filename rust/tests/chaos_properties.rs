@@ -1,0 +1,671 @@
+//! Seeded chaos suite (ISSUE 10): deterministic fault injection
+//! against the durable coordinator and a hardened connection
+//! lifecycle.
+//!
+//! Two halves:
+//!
+//! * **Failpoint matrix** (compiled only with `--features failpoints`):
+//!   journal-append / fsync / checkpoint-rename faults × strict /
+//!   degraded durability × 1 / 4 shards. Invariants: no worker ever
+//!   panics, strict mode never acks work that a post-crash recovery
+//!   cannot replay ("acked ⇒ durable"), degraded mode flips the sticky
+//!   health bit instead of failing, recovery is idempotent, and the
+//!   truncate-failure bookkeeping regression stays fixed.
+//! * **Connection lifecycle** (always compiled): a slow-loris client
+//!   dripping half a v2 frame cannot pin a connection thread, the
+//!   `--max-conns` admission cap sheds with a retry hint and frees
+//!   slots on disconnect, and v1/v2 clients interleave under the cap.
+//!
+//! Every test serializes on one gate: the failpoint registry is
+//! process-global, so an armed schedule must never leak into a
+//! neighboring test's server.
+
+use pathsig::coordinator::server::{Client, ServerHandle};
+use pathsig::coordinator::wire::{OkBody, RequestFrame, ResponseFrame, SpecFrame, WireClient};
+use pathsig::coordinator::{serve, BatcherConfig, ServerConfig, SigService};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+static GATE: Mutex<()> = Mutex::new(());
+
+fn gate() -> MutexGuard<'static, ()> {
+    GATE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn start_server_with(
+    service: SigService,
+    max_conns: usize,
+    conn_timeout: Option<Duration>,
+) -> (ServerHandle, String) {
+    let handle = serve(
+        Arc::new(service),
+        ServerConfig {
+            addr: "127.0.0.1:0".to_string(),
+            batcher: BatcherConfig {
+                max_batch: 8,
+                max_wait: Duration::from_millis(1),
+                ..BatcherConfig::default()
+            },
+            max_conns,
+            conn_timeout,
+        },
+    )
+    .unwrap();
+    let addr = handle.addr.to_string();
+    (handle, addr)
+}
+
+// ---------------------------------------------------------------------
+// Failpoint-driven chaos matrix (only with `--features failpoints`:
+// without the feature every site is a compile-time no-op, so these
+// schedules would arm points that can never fire).
+// ---------------------------------------------------------------------
+
+#[cfg(feature = "failpoints")]
+mod failpoint_chaos {
+    use super::*;
+    use pathsig::coordinator::{
+        DurabilityConfig, DurabilityMode, Metrics, ShardConfig, ShardSet, StreamError, StreamReply,
+    };
+    use pathsig::sig::{StreamEngine, StreamTable};
+    use pathsig::util::failpoint;
+    use pathsig::util::pool::Pool;
+    use pathsig::words::WordSpec;
+    use std::path::{Path, PathBuf};
+    use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+
+    static DIR_N: AtomicU64 = AtomicU64::new(0);
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "pathsig-chaos-{tag}-{}-{}",
+            std::process::id(),
+            DIR_N.fetch_add(1, Relaxed)
+        ));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn engine() -> StreamEngine {
+        let words = WordSpec::Truncated { depth: 2 }.words(1);
+        StreamEngine::new(Arc::new(StreamTable::new(1, &words)), 4)
+    }
+
+    fn durable_set(
+        dir: &Path,
+        shards: usize,
+        checkpoint_every: u64,
+        fsync: bool,
+        mode: DurabilityMode,
+        metrics: &Arc<Metrics>,
+    ) -> ShardSet {
+        ShardSet::new(
+            ShardConfig {
+                shards,
+                durability: Some(DurabilityConfig {
+                    checkpoint_every,
+                    fsync,
+                    mode,
+                    ..DurabilityConfig::new(dir.to_path_buf())
+                }),
+                ..ShardConfig::default()
+            },
+            Arc::clone(metrics),
+            Arc::new(Pool::default()),
+        )
+    }
+
+    fn open_id(set: &ShardSet) -> Result<u64, StreamError> {
+        match set.open(engine(), WordSpec::Truncated { depth: 2 })? {
+            StreamReply::Opened { session, .. } => {
+                Ok(session.strip_prefix('s').unwrap().parse().unwrap())
+            }
+            other => panic!("unexpected open reply: {other:?}"),
+        }
+    }
+
+    /// Probe a session's total samples without mutating it: an empty
+    /// push is valid (0 is divisible by any dim) and echoes `seen`.
+    fn seen_of(set: &ShardSet, id: u64) -> Option<usize> {
+        match set.push(id, Vec::new()) {
+            Ok(StreamReply::Pushed { seen, .. }) => Some(seen),
+            _ => None,
+        }
+    }
+
+    /// One cell of the acceptance matrix: inject `fault` with
+    /// probability 0.35 from a fixed seed while a scripted workload
+    /// runs, "crash" (the shutdown checkpoint is made to fail, so only
+    /// journaled state survives), then recover twice.
+    fn run_matrix_cell(fault: &str, mode: DurabilityMode, shards: usize) {
+        let ctx = format!("fault={fault} mode={mode:?} shards={shards}");
+        let dir = tmpdir("matrix");
+        let metrics = Arc::new(Metrics::new());
+        let fsync = fault == "journal.fsync";
+        failpoint::clear();
+        let set = durable_set(&dir, shards, 4, fsync, mode, &metrics);
+
+        // Open fault-free so every cell starts from the same three
+        // sessions; then arm the schedule for the push phase.
+        let ids: Vec<u64> = (0..3).map(|_| open_id(&set).unwrap()).collect();
+        failpoint::configure(&format!("{fault}=err@p0.35/seed7")).unwrap();
+
+        // (session, samples acked to the client so far)
+        let mut acked: Vec<(u64, usize)> = ids.iter().map(|&id| (id, 0)).collect();
+        for k in 0..24usize {
+            let i = k % acked.len();
+            let (id, n) = acked[i];
+            match set.push(id, vec![(k as f64) / 8.0]) {
+                Ok(StreamReply::Pushed { pushed, seen }) => {
+                    // In-memory state must track acks exactly: strict
+                    // rejections are never applied, degraded failures
+                    // are always applied.
+                    assert_eq!(seen, n + pushed, "{ctx}: seen drifted from acks");
+                    acked[i].1 = n + pushed;
+                }
+                Ok(other) => panic!("{ctx}: unexpected push reply {other:?}"),
+                Err(StreamError::Msg(m)) => {
+                    assert!(
+                        !m.contains("worker exited"),
+                        "{ctx}: shard worker died: {m}"
+                    );
+                    assert_eq!(
+                        mode,
+                        DurabilityMode::Strict,
+                        "{ctx}: degraded mode must absorb journal faults, got: {m}"
+                    );
+                }
+                Err(StreamError::Shed { .. }) => panic!("{ctx}: unexpected shed"),
+            }
+        }
+
+        let fired = failpoint::counters(fault).1;
+        let strict_rejects = metrics.journal_strict_rejects.load(Relaxed);
+        match (mode, fault) {
+            (DurabilityMode::Strict, "journal.append" | "journal.fsync") => {
+                assert_eq!(
+                    strict_rejects, fired,
+                    "{ctx}: every fired fault must be a counted rejection"
+                );
+            }
+            (DurabilityMode::Degraded, "journal.append" | "journal.fsync") => {
+                assert_eq!(strict_rejects, 0, "{ctx}");
+                if fired > 0 {
+                    assert_eq!(
+                        metrics.degraded.load(Relaxed),
+                        1,
+                        "{ctx}: degraded bit must go sticky on the first absorbed fault"
+                    );
+                }
+            }
+            // Checkpoint-rename failures never reject ops (the journal
+            // still holds every record) and never degrade acks.
+            _ => assert_eq!(strict_rejects, 0, "{ctx}"),
+        }
+        if fired > 0 {
+            assert!(metrics.journal_errors.load(Relaxed) > 0, "{ctx}");
+        }
+
+        // Crash: the graceful-drop checkpoint is forced to fail, so
+        // disk holds exactly what the journal + cadence checkpoints
+        // captured while faults were firing.
+        failpoint::configure("ckpt.write=err").unwrap();
+        drop(set);
+        failpoint::clear();
+
+        // Recovery 1: the headline invariant.
+        let m2 = Arc::new(Metrics::new());
+        let set2 = durable_set(&dir, shards, 999, false, DurabilityMode::Degraded, &m2);
+        if mode == DurabilityMode::Strict {
+            for &(id, n) in &acked {
+                let seen = seen_of(&set2, id)
+                    .unwrap_or_else(|| panic!("{ctx}: acked session s{id} lost after crash"));
+                assert!(
+                    seen >= n,
+                    "{ctx}: acked-then-lost — s{id} acked {n} samples, recovered {seen}"
+                );
+                if fault != "journal.fsync" {
+                    // append/rename faults fire before any byte lands,
+                    // so replay reproduces the acked state exactly. A
+                    // failed fsync may leave the (rejected) record in
+                    // the page cache — at-least-once, never lossy.
+                    assert_eq!(seen, n, "{ctx}: strict replay diverged for s{id}");
+                }
+            }
+        } else {
+            // Degraded mode is allowed to lose unjournaled acks — the
+            // contract is that recovery still works and said so via
+            // the health bit (asserted above).
+            assert!(set2.live_sessions() <= acked.len(), "{ctx}");
+        }
+
+        // Recovery 2: recovering the recovered directory changes
+        // nothing (idempotence).
+        let snapshot: Vec<(u64, Vec<f64>)> = acked
+            .iter()
+            .filter_map(|&(id, _)| match set2.window(id, true) {
+                Ok(StreamReply::Values { result, .. }) => Some((id, result)),
+                _ => None,
+            })
+            .collect();
+        drop(set2);
+        let m3 = Arc::new(Metrics::new());
+        let set3 = durable_set(&dir, shards, 999, false, DurabilityMode::Degraded, &m3);
+        for (id, want) in &snapshot {
+            match set3.window(*id, true) {
+                Ok(StreamReply::Values { result, .. }) => {
+                    assert_eq!(result.len(), want.len(), "{ctx}: s{id} shape changed");
+                    for (a, b) in result.iter().zip(want) {
+                        assert!(
+                            (a - b).abs() < 1e-12,
+                            "{ctx}: recovery not idempotent for s{id}"
+                        );
+                    }
+                }
+                other => panic!("{ctx}: s{id} vanished on second recovery: {other:?}"),
+            }
+        }
+        drop(set3);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn chaos_matrix_never_panics_and_strict_never_loses_acked_work() {
+        let _g = gate();
+        for fault in ["journal.append", "journal.fsync", "ckpt.rename"] {
+            for mode in [DurabilityMode::Strict, DurabilityMode::Degraded] {
+                for shards in [1usize, 4] {
+                    run_matrix_cell(fault, mode, shards);
+                }
+            }
+        }
+        failpoint::clear();
+    }
+
+    #[test]
+    fn health_verb_reports_strict_and_degraded_over_the_wire() {
+        let _g = gate();
+        for mode in [DurabilityMode::Degraded, DurabilityMode::Strict] {
+            let dir = tmpdir("health");
+            failpoint::clear();
+            let mut svc = SigService::new(None);
+            svc.shard_count = 1;
+            svc.journal_dir = Some(dir.clone());
+            svc.durability = mode;
+            let (handle, addr) = start_server_with(svc, 0, None);
+            // Spin the shard set up fault-free, then arm every append.
+            let mut v1 = Client::connect(&addr).unwrap();
+            let opened = v1
+                .call(r#"{"op":"stream_open","dim":1,"depth":2,"window":2}"#)
+                .unwrap();
+            assert_eq!(opened.get("ok").as_bool(), Some(true));
+            let session = opened.get("body").get("session").as_str().unwrap().to_string();
+            failpoint::configure("journal.append=err").unwrap();
+            let push = v1
+                .call(&format!(
+                    r#"{{"op":"stream_push","session":"{session}","samples":[1.5]}}"#
+                ))
+                .unwrap();
+            match mode {
+                DurabilityMode::Degraded => {
+                    assert_eq!(push.get("ok").as_bool(), Some(true), "degraded acks from memory");
+                }
+                DurabilityMode::Strict => {
+                    assert_eq!(push.get("ok").as_bool(), Some(false), "strict must not ack");
+                    assert!(
+                        push.get("error").as_str().unwrap().contains("strict durability"),
+                        "{push:?}"
+                    );
+                }
+            }
+            failpoint::clear();
+            // v2 `health` and v1 `stats` surface the same facts.
+            let mut v2 = WireClient::connect(&addr).unwrap();
+            match v2.call(&RequestFrame::Health).unwrap() {
+                ResponseFrame::Ok {
+                    body:
+                        OkBody::Health {
+                            mode: mode_byte,
+                            degraded,
+                            journal_errors,
+                            strict_rejects,
+                        },
+                    ..
+                } => {
+                    assert_eq!(journal_errors, 1);
+                    match mode {
+                        DurabilityMode::Degraded => {
+                            assert_eq!((mode_byte, degraded, strict_rejects), (0, true, 0));
+                        }
+                        DurabilityMode::Strict => {
+                            assert_eq!((mode_byte, degraded, strict_rejects), (1, false, 1));
+                        }
+                    }
+                }
+                other => panic!("{other:?}"),
+            }
+            let stats = v1.call(r#"{"op":"stats"}"#).unwrap();
+            assert_eq!(
+                stats.get("body").get("degraded").as_bool(),
+                Some(mode == DurabilityMode::Degraded)
+            );
+            handle.shutdown();
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+
+    #[test]
+    fn failed_truncate_keeps_journal_lag_visible_until_retry_succeeds() {
+        let _g = gate();
+        let dir = tmpdir("trunc");
+        let metrics = Arc::new(Metrics::new());
+        // Every truncate fails: the cadence checkpoint lands but the
+        // journal it covers stays on disk — the fixed bookkeeping must
+        // keep that lag visible instead of resetting it to zero.
+        failpoint::configure("journal.truncate=err").unwrap();
+        let set = durable_set(&dir, 1, 3, false, DurabilityMode::Degraded, &metrics);
+        let id = open_id(&set).unwrap();
+        for k in 0..3 {
+            set.push(id, vec![k as f64]).unwrap();
+        }
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while metrics.checkpoints_written.load(Relaxed) == 0 {
+            assert!(Instant::now() < deadline, "cadence checkpoint never ran");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert!(
+            set.stats()[0].journal_lag >= 3,
+            "regression: journal_lag reset although the truncate failed (got {})",
+            set.stats()[0].journal_lag
+        );
+        assert!(metrics.journal_errors.load(Relaxed) >= 1);
+        // Disk "recovers": the still-due checkpoint retries on an idle
+        // tick and the truncate now succeeds, clearing the lag.
+        failpoint::clear();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while set.stats()[0].journal_lag != 0 {
+            assert!(
+                Instant::now() < deadline,
+                "journal_lag never cleared after the fault lifted"
+            );
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        drop(set);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn mailbox_faults_shed_and_delay_deterministically() {
+        let _g = gate();
+        failpoint::clear();
+        let set = ShardSet::new(
+            ShardConfig {
+                shards: 1,
+                shed_retry_ms: 9,
+                ..ShardConfig::default()
+            },
+            Arc::new(Metrics::new()),
+            Arc::new(Pool::default()),
+        );
+        // An err-armed mailbox.send is a forced full-mailbox: the open
+        // sheds with the configured hint and releases its admission
+        // slot.
+        failpoint::configure("mailbox.send=err@1").unwrap();
+        match set.open(engine(), WordSpec::Truncated { depth: 2 }) {
+            Err(StreamError::Shed { retry_after_ms }) => assert_eq!(retry_after_ms, 9),
+            other => panic!("expected shed, got {other:?}"),
+        }
+        assert_eq!(set.live_sessions(), 0, "shed open leaked its admission slot");
+        assert_eq!(set.stats()[0].sheds, 1);
+        // Hit 2 is past the trigger: service resumes untouched.
+        let id = open_id(&set).unwrap();
+        // A delay-armed send stalls the producer, then proceeds.
+        failpoint::configure("mailbox.send=delay120ms@1").unwrap();
+        let t0 = Instant::now();
+        match set.push(id, vec![1.0]) {
+            Ok(StreamReply::Pushed { seen, .. }) => assert_eq!(seen, 1),
+            other => panic!("{other:?}"),
+        }
+        assert!(
+            t0.elapsed() >= Duration::from_millis(120),
+            "delay failpoint did not stall the send"
+        );
+        failpoint::clear();
+        match set.push(id, vec![2.0]) {
+            Ok(StreamReply::Pushed { seen, .. }) => assert_eq!(seen, 2),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn socket_faults_kill_one_connection_never_the_server() {
+        let _g = gate();
+        failpoint::clear();
+        let (handle, addr) = start_server_with(SigService::new(None), 0, None);
+        {
+            let mut c = Client::connect(&addr).unwrap();
+            assert_eq!(c.call(r#"{"op":"ping"}"#).unwrap().get("ok").as_bool(), Some(true));
+        }
+        // Dead-socket reads: every connection drops at the loop top,
+        // but the acceptor is untouched.
+        failpoint::configure("server.read=err").unwrap();
+        {
+            let mut c = Client::connect(&addr).unwrap();
+            assert!(c.call(r#"{"op":"ping"}"#).is_err(), "read fault must drop the conn");
+        }
+        // Dead-socket writes: the request executes, the reply write is
+        // where the connection dies.
+        failpoint::configure("server.write=err").unwrap();
+        {
+            let mut c = Client::connect(&addr).unwrap();
+            assert!(c.call(r#"{"op":"ping"}"#).is_err(), "write fault must drop the conn");
+        }
+        failpoint::clear();
+        let mut c = Client::connect(&addr).unwrap();
+        assert_eq!(c.call(r#"{"op":"ping"}"#).unwrap().get("ok").as_bool(), Some(true));
+        handle.shutdown();
+    }
+
+    #[test]
+    fn recovery_read_fault_surfaces_as_error_and_retry_succeeds() {
+        let _g = gate();
+        let dir = tmpdir("recread");
+        failpoint::clear();
+        let metrics = Arc::new(Metrics::new());
+        let set = durable_set(&dir, 1, 999, false, DurabilityMode::Strict, &metrics);
+        let id = open_id(&set).unwrap();
+        set.push(id, vec![0.5, 1.5]).unwrap();
+        // Crash-style shutdown: keep the journal, lose the final
+        // checkpoint.
+        failpoint::configure("ckpt.write=err").unwrap();
+        drop(set);
+        // An unreadable shard file at boot must surface as an error
+        // from the scan (so the server refuses to start empty), and
+        // the very next attempt — disk healed — recovers everything.
+        failpoint::configure("recover.read=err@1").unwrap();
+        let mut resolve = |dim: usize, spec: &WordSpec| {
+            Arc::new(StreamTable::new(dim, &spec.words(dim)))
+        };
+        assert!(pathsig::persist::recover_dir(&dir, &mut resolve).is_err());
+        failpoint::clear();
+        let rec = pathsig::persist::recover_dir(&dir, &mut resolve).unwrap();
+        assert_eq!(rec.sessions.len(), 1);
+        assert_eq!(rec.sessions[0].id, id);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Hardened connection lifecycle (no failpoints needed — these run in
+// every build).
+// ---------------------------------------------------------------------
+
+/// Read until EOF or our own 5 s safety timeout; panics if the server
+/// never hung up.
+fn assert_closed_by_server(sock: &mut TcpStream, what: &str) {
+    sock.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    let mut buf = [0u8; 64];
+    loop {
+        match sock.read(&mut buf) {
+            Ok(0) => return,
+            Ok(_) => continue, // drain whatever the server said first
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                panic!("{what}: server never closed the connection")
+            }
+            Err(_) => return, // reset counts as closed
+        }
+    }
+}
+
+fn metrics_counter(addr: &str, key: &str) -> usize {
+    let mut c = Client::connect(addr).unwrap();
+    let m = c.call(r#"{"op":"metrics"}"#).unwrap();
+    m.get("body").get(key).as_usize().unwrap_or_else(|| panic!("metrics lack {key}"))
+}
+
+#[test]
+fn slow_loris_half_frame_cannot_pin_a_connection() {
+    let _g = gate();
+    let (handle, addr) =
+        start_server_with(SigService::new(None), 0, Some(Duration::from_millis(300)));
+    // Dribble 10 bytes of a frame that declares a much larger payload,
+    // then stall: the slow-frame budget (not a per-read timeout that a
+    // dripping client could keep resetting) must evict us.
+    let full = RequestFrame::StreamPush {
+        session: 1,
+        samples: vec![0.0; 32],
+    }
+    .encode();
+    let mut sock = TcpStream::connect(&addr).unwrap();
+    sock.write_all(&full[..10]).unwrap();
+    let t0 = Instant::now();
+    assert_closed_by_server(&mut sock, "slow loris");
+    assert!(
+        t0.elapsed() >= Duration::from_millis(200),
+        "closed before the frame budget could have expired"
+    );
+    assert!(metrics_counter(&addr, "conn_timeouts") >= 1);
+    // The freed thread serves real traffic.
+    let mut c = Client::connect(&addr).unwrap();
+    assert_eq!(c.call(r#"{"op":"ping"}"#).unwrap().get("ok").as_bool(), Some(true));
+    handle.shutdown();
+}
+
+#[test]
+fn idle_connection_is_closed_after_deadline() {
+    let _g = gate();
+    let (handle, addr) =
+        start_server_with(SigService::new(None), 0, Some(Duration::from_millis(250)));
+    let mut sock = TcpStream::connect(&addr).unwrap();
+    // Send nothing at all: the idle deadline reaps the connection.
+    assert_closed_by_server(&mut sock, "idle conn");
+    assert!(metrics_counter(&addr, "conn_timeouts") >= 1);
+    handle.shutdown();
+}
+
+#[test]
+fn admission_cap_sheds_with_retry_hint_and_frees_slots() {
+    let _g = gate();
+    let (handle, addr) = start_server_with(SigService::new(None), 1, None);
+    let mut a = Client::connect(&addr).unwrap();
+    assert_eq!(a.call(r#"{"op":"ping"}"#).unwrap().get("ok").as_bool(), Some(true));
+    // Second connection: one shed line, then hangup — it never gets a
+    // thread.
+    {
+        let mut sock = TcpStream::connect(&addr).unwrap();
+        let mut reader = BufReader::new(sock.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let shed = pathsig::util::json::Json::parse(&line).unwrap();
+        assert_eq!(shed.get("ok").as_bool(), Some(false));
+        assert_eq!(shed.get("status").as_str(), Some("shed"));
+        assert!(shed.get("retry_after_ms").as_usize().is_some());
+        assert!(
+            shed.get("error").as_str().unwrap().contains("connection capacity"),
+            "{line}"
+        );
+        assert_closed_by_server(&mut sock, "over-cap conn");
+    }
+    // The reject is counted, and the held slot reads 1 on the gauge.
+    let stats = a.call(r#"{"op":"metrics"}"#).unwrap();
+    assert!(stats.get("body").get("conns_rejected").as_usize().unwrap() >= 1);
+    assert_eq!(stats.get("body").get("conns_active").as_usize(), Some(1));
+    // Disconnecting A frees the slot for a fresh client.
+    drop(a);
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        if let Ok(mut c) = Client::connect(&addr) {
+            if let Ok(resp) = c.call(r#"{"op":"ping"}"#) {
+                if resp.get("ok").as_bool() == Some(true) {
+                    break;
+                }
+            }
+        }
+        assert!(
+            Instant::now() < deadline,
+            "admission slot never freed after client disconnect"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    handle.shutdown();
+}
+
+#[test]
+fn v1_and_v2_interleave_under_admission_cap() {
+    let _g = gate();
+    let (handle, addr) = start_server_with(SigService::new(None), 2, None);
+    let mut a = Client::connect(&addr).unwrap();
+    assert_eq!(a.call(r#"{"op":"ping"}"#).unwrap().get("ok").as_bool(), Some(true));
+    let mut b = WireClient::connect(&addr).unwrap();
+    assert!(matches!(b.call(&RequestFrame::Ping).unwrap(), ResponseFrame::Ok { .. }));
+    // Third connection is over the cap.
+    {
+        let mut sock = TcpStream::connect(&addr).unwrap();
+        assert_closed_by_server(&mut sock, "third conn");
+    }
+    assert!(a.call(r#"{"op":"metrics"}"#).unwrap()
+        .get("body").get("conns_rejected").as_usize().unwrap() >= 1);
+    // Both admitted protocols keep doing real work under the cap.
+    let sig_v1 = a
+        .call(r#"{"op":"signature","dim":1,"depth":2,"path":[0,2]}"#)
+        .unwrap();
+    assert_eq!(sig_v1.get("ok").as_bool(), Some(true));
+    match b
+        .call(&RequestFrame::Signature {
+            dim: 1,
+            depth: 2,
+            spec: SpecFrame::Truncated,
+            path: vec![0.0, 2.0],
+        })
+        .unwrap()
+    {
+        ResponseFrame::Ok {
+            body: OkBody::Values { values, .. },
+            ..
+        } => assert!((values[0] - 2.0).abs() < 1e-12),
+        other => panic!("{other:?}"),
+    }
+    // Closing the v2 client frees a slot for a new v2 client.
+    drop(b);
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        if let Ok(mut c) = WireClient::connect(&addr) {
+            if matches!(c.call(&RequestFrame::Ping), Ok(ResponseFrame::Ok { .. })) {
+                break;
+            }
+        }
+        assert!(
+            Instant::now() < deadline,
+            "v2 admission slot never freed after client disconnect"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    handle.shutdown();
+}

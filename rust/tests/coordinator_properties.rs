@@ -173,6 +173,7 @@ fn start_server(service: Arc<SigService>) -> (pathsig::coordinator::server::Serv
                 max_wait: Duration::from_millis(1),
                 ..BatcherConfig::default()
             },
+            ..ServerConfig::default()
         },
     )
     .unwrap();

@@ -336,6 +336,7 @@ fn gram_serves_identically_over_both_wire_protocols() {
         ServerConfig {
             addr: "127.0.0.1:0".to_string(),
             batcher: BatcherConfig::default(),
+            ..ServerConfig::default()
         },
     )
     .unwrap();

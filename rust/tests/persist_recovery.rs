@@ -45,10 +45,9 @@ fn durable_set(
         shards,
         max_sessions,
         durability: Some(DurabilityConfig {
-            dir: dir.to_path_buf(),
             checkpoint_every,
-            fsync: false,
             max_session_floats,
+            ..DurabilityConfig::new(dir.to_path_buf())
         }),
         ..ShardConfig::default()
     };

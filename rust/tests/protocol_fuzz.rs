@@ -51,6 +51,7 @@ fn start_server() -> (pathsig::coordinator::server::ServerHandle, String) {
                 max_wait: Duration::from_millis(1),
                 ..BatcherConfig::default()
             },
+            ..ServerConfig::default()
         },
     )
     .unwrap();
@@ -74,6 +75,12 @@ fn v1_corpus() -> Vec<Vec<u8>> {
         r#"{"op":"stream_window","session":"s1","mode":"full"}"#,
         r#"{"op":"stream_close","session":"s1"}"#,
         r#"{"op":"gram","dim":2,"depth":2,"paths":[[0,0,1,0],[0,0,1,1]]}"#,
+        // Non-finite poison: JSON can't spell Inf, but `1e999`
+        // overflows to it. These must be *answered* (with the pinned
+        // non-finite error), never crash the batcher.
+        r#"{"op":"signature","dim":2,"depth":2,"path":[0,0,1e999,1]}"#,
+        r#"{"op":"stream_push","session":"s1","samples":[0.5,-1e999]}"#,
+        r#"{"op":"gram","dim":2,"depth":2,"paths":[[0,0,1,0],[0,0,1e999,1]]}"#,
     ]
     .iter()
     .map(|s| {
@@ -132,6 +139,20 @@ fn v2_corpus() -> Vec<Vec<u8>> {
         }
         .encode(),
         RequestFrame::StreamClose { session: 1 }.encode(),
+        // Raw IEEE NaN/Inf bits — expressible on the binary protocol
+        // directly; the boundary must reject, not compute.
+        RequestFrame::Signature {
+            dim: 2,
+            depth: 2,
+            spec: SpecFrame::Truncated,
+            path: vec![0.0, f64::NAN, 1.0, f64::INFINITY],
+        }
+        .encode(),
+        RequestFrame::StreamPush {
+            session: 1,
+            samples: vec![f64::NEG_INFINITY],
+        }
+        .encode(),
     ]
 }
 
@@ -489,6 +510,91 @@ fn pristine_journal_corpus_recovers_exactly() {
     assert_eq!(rec.stats.corrupt_checkpoints, 0);
     assert_eq!(rec.stats.tombstone_hits, 0);
     std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn non_finite_coordinates_rejected_identically_at_both_boundaries() {
+    // Seeded sweep over poison kind × index × field: both protocol
+    // boundaries must answer with the byte-identical pinned error
+    // string, and the server must stay fully serviceable after.
+    let (handle, addr) = start_server();
+    let nf = |i: usize, field: &str| {
+        format!("non-finite value (NaN or Inf) at index {i} of '{field}'")
+    };
+
+    // v1: 1e999 overflows JSON number parsing to ±Inf.
+    let mut c = Client::connect(&addr).unwrap();
+    let cases = [
+        (
+            r#"{"op":"signature","dim":2,"depth":2,"path":[0,0,1e999,1]}"#.to_string(),
+            nf(2, "path"),
+        ),
+        (
+            r#"{"op":"stream_push","session":"s1","samples":[0.5,-1e999]}"#.to_string(),
+            nf(1, "samples"),
+        ),
+        (
+            // Gram flattens before validating: [[4 floats],[poison at 2]]
+            // puts the poison at flat index 6.
+            r#"{"op":"gram","dim":2,"depth":2,"paths":[[0,0,1,0],[0,0,1e999,1]]}"#.to_string(),
+            nf(6, "paths"),
+        ),
+    ];
+    for (line, want) in &cases {
+        let resp = c.call(line).unwrap();
+        assert_eq!(resp.get("ok").as_bool(), Some(false), "{line}");
+        assert_eq!(resp.get("error").as_str(), Some(want.as_str()), "{line}");
+    }
+
+    // v2: raw IEEE bit patterns at seeded positions.
+    let mut w = WireClient::connect(&addr).unwrap();
+    let mut rng = Rng::new(0x4EA7);
+    let poisons = [f64::NAN, f64::INFINITY, f64::NEG_INFINITY];
+    for _ in 0..24 {
+        let mut path = vec![0.25; 8];
+        let i = rng.below(path.len());
+        path[i] = poisons[rng.below(poisons.len())];
+        let resp = w
+            .call(&RequestFrame::Signature {
+                dim: 2,
+                depth: 2,
+                spec: SpecFrame::Truncated,
+                path,
+            })
+            .unwrap();
+        match resp {
+            ResponseFrame::Err { code, message, .. } => {
+                assert_eq!(code, wire::errcode::BAD_REQUEST);
+                assert_eq!(message, nf(i, "path"));
+            }
+            other => panic!("poison at {i} not rejected: {other:?}"),
+        }
+    }
+    match w
+        .call(&RequestFrame::StreamPush {
+            session: 1,
+            samples: vec![0.5, f64::NAN],
+        })
+        .unwrap()
+    {
+        ResponseFrame::Err { message, .. } => assert_eq!(message, nf(1, "samples")),
+        other => panic!("{other:?}"),
+    }
+    match w
+        .call(&RequestFrame::Gram {
+            dim: 2,
+            depth: 2,
+            spec: SpecFrame::Truncated,
+            paths: vec![vec![0.0, 0.0, 1.0, 0.0], vec![0.0, 0.0, f64::INFINITY, 1.0]],
+        })
+        .unwrap()
+    {
+        ResponseFrame::Err { message, .. } => assert_eq!(message, nf(6, "paths")),
+        other => panic!("{other:?}"),
+    }
+
+    assert_serviceable(&addr);
+    handle.shutdown();
 }
 
 #[test]

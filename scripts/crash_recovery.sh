@@ -18,6 +18,13 @@
 # CI wires this into the crash-recovery job; run locally with:
 #
 #   ./scripts/crash_recovery.sh
+#
+# CHAOS=1 adds the failpoint arm (ISSUE 10): a rebuild with
+# --features failpoints, then a strict-durability server run under
+# PATHSIG_FAILPOINTS probabilistic journal-append faults — the same
+# write failure a full disk produces. Ops the server *acked* under
+# fault must all survive a kill -9 and a clean restart exactly; ops it
+# rejected must leave no trace.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -125,3 +132,123 @@ finally:
     server.send_signal(signal.SIGKILL)
     server.wait()
 EOF
+
+# ---------------------------------------------------------------------
+# Chaos arm (ISSUE 10): strict durability under injected journal
+# faults. Only meaningful with the failpoints feature compiled in.
+# ---------------------------------------------------------------------
+if [[ -n "${CHAOS:-}" ]]; then
+    if [[ -z "${SKIP_BUILD:-}" ]]; then
+        cargo build --release --bin pathsig --features failpoints
+    fi
+    CJDIR=$(mktemp -d)
+    trap 'rm -rf "$JDIR" "$CJDIR"' EXIT
+
+    BIN="$BIN" JDIR="$CJDIR" python3 - <<'EOF'
+import json
+import os
+import signal
+import socket
+import subprocess
+
+BIN, JDIR = os.environ["BIN"], os.environ["JDIR"]
+# Journal appends fail ~20% of the time — a seeded stand-in for a disk
+# that intermittently returns ENOSPC. Strict mode must reject those
+# ops instead of acking them.
+FAULTS = "journal.append=err@p0.2/seed11"
+
+
+def start_server(faults):
+    env = dict(os.environ)
+    if faults:
+        env["PATHSIG_FAILPOINTS"] = faults
+    else:
+        env.pop("PATHSIG_FAILPOINTS", None)
+    p = subprocess.Popen(
+        [BIN, "serve", "--addr", "127.0.0.1:0", "--journal-dir", JDIR,
+         "--fsync", "--checkpoint-every", "5", "--shards", "2",
+         "--durability", "strict"],
+        stdout=subprocess.PIPE, stderr=subprocess.DEVNULL, text=True, env=env)
+    for line in p.stdout:
+        if "listening on" in line:
+            return p, line.strip().rsplit(" ", 1)[1]
+    raise SystemExit("server exited before announcing its address")
+
+
+class V1Client:
+    """Raw v1 client that hands back error responses instead of dying —
+    strict-mode rejections are expected here."""
+
+    def __init__(self, addr):
+        host, port = addr.rsplit(":", 1)
+        self.sock = socket.create_connection((host, int(port)), timeout=30)
+        self.buf = b""
+
+    def call(self, obj):
+        self.sock.sendall((json.dumps(obj) + "\n").encode())
+        while b"\n" not in self.buf:
+            chunk = self.sock.recv(65536)
+            if not chunk:
+                raise SystemExit("server closed the connection mid-call")
+            self.buf += chunk
+        line, self.buf = self.buf.split(b"\n", 1)
+        return json.loads(line)
+
+
+server, addr = start_server(FAULTS)
+try:
+    c = V1Client(addr)
+    # Opens journal too and may be strict-rejected; retry until 4 live.
+    sids, acked = [], {}
+    attempts = 0
+    while len(sids) < 4:
+        attempts += 1
+        if attempts > 200:
+            raise SystemExit("could not open 4 sessions under 20% faults")
+        r = c.call({"op": "stream_open", "dim": 1, "depth": 2, "window": 4})
+        if r.get("ok"):
+            sid = r["body"]["session"]
+            sids.append(sid)
+            acked[sid] = 0
+    rejected = 0
+    for i in range(48):
+        sid = sids[i % len(sids)]
+        r = c.call({"op": "stream_push", "session": sid,
+                    "samples": [0.25 * i]})
+        if r.get("ok"):
+            acked[sid] += 1
+            if r["body"]["seen"] != acked[sid]:
+                raise SystemExit(
+                    f"{sid}: acked seen drifted mid-run: {r}")
+        else:
+            rejected += 1
+            if "strict durability" not in r.get("error", ""):
+                raise SystemExit(f"unexpected rejection for {sid}: {r}")
+    if rejected == 0:
+        raise SystemExit("fault schedule never fired; chaos arm is vacuous")
+
+    # kill -9 under fault, restart CLEAN: every ack must have survived,
+    # every rejection must have left no trace.
+    server.send_signal(signal.SIGKILL)
+    server.wait()
+    server, addr = start_server(None)
+    c = V1Client(addr)
+    for sid in sids:
+        r = c.call({"op": "stream_push", "session": sid, "samples": [9.5]})
+        if not r.get("ok"):
+            raise SystemExit(f"{sid} lost after crash: {r}")
+        if r["body"]["seen"] != acked[sid] + 1:
+            raise SystemExit(
+                f"{sid}: acked {acked[sid]} pushes but recovered "
+                f"seen {r['body']['seen'] - 1}")
+        w = c.call({"op": "stream_window", "session": sid})
+        if not w.get("ok"):
+            raise SystemExit(f"{sid}: window failed after recovery: {w}")
+    print(f"crash_recovery chaos arm: OK (4 sessions, "
+          f"{sum(acked.values())} acked, {rejected} strict-rejected, "
+          f"0 lost)")
+finally:
+    server.send_signal(signal.SIGKILL)
+    server.wait()
+EOF
+fi

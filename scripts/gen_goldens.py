@@ -35,6 +35,7 @@ VERB = {
     "signature": 0x03,
     "stats2": 0x04,
     "gram": 0x05,
+    "health": 0x06,
     "stream_open": 0x10,
     "stream_push": 0x11,
     "stream_window": 0x12,
@@ -112,6 +113,7 @@ def v2_frames():
     rows.append(("req_ping", frame(VERB["ping"], b"")))
     rows.append(("req_stats", frame(VERB["stats"], b"")))
     rows.append(("req_stats2", frame(VERB["stats2"], b"")))
+    rows.append(("req_health", frame(VERB["health"], b"")))
     rows.append((
         "req_signature_truncated",
         frame(VERB["signature"],
@@ -199,6 +201,14 @@ def v2_frames():
               + u64(7) + u64(2) + u64(1)),
     ))
     rows.append((
+        # Durability health body: policy byte (0 = degraded, 1 =
+        # strict), sticky degraded bit, then the journal-error and
+        # strict-reject counters.
+        "resp_ok_health",
+        frame(STATUS["ok"],
+              u8(VERB["health"]) + u8(1) + u8(0) + u64(3) + u64(2)),
+    ))
+    rows.append((
         "resp_ok_values",
         frame(STATUS["ok"],
               u8(VERB["stream_window"]) + u32(1) + u32(2) + f64s([5.0, 12.5])),
@@ -225,6 +235,14 @@ def v2_frames():
         frame(STATUS["err"],
               u8(VERB["stream_push"]) + u8(3)
               + string("unknown session 's9' (already closed or evicted)")),
+    ))
+    rows.append((
+        # The non-finite rejection both protocol boundaries must emit
+        # byte-identically (code 2 = bad_request).
+        "resp_err_non_finite",
+        frame(STATUS["err"],
+              u8(VERB["signature"]) + u8(2)
+              + string("non-finite value (NaN or Inf) at index 2 of 'path'")),
     ))
     rows.append((
         "resp_shed",
@@ -255,6 +273,8 @@ def v1_responses():
                "id": "e1", "ok": False}),
         jline({"error": "overloaded; retry after 25 ms", "id": "sh1",
                "ok": False, "retry_after_ms": 25, "status": "shed"}),
+        jline({"error": "non-finite value (NaN or Inf) at index 2 of 'path'",
+               "id": "nf1", "ok": False}),
     ]
 
 
